@@ -1,0 +1,28 @@
+//! Fig. 4 end to end: run the three MM kernels of Fig. 2 on the
+//! cycle-accurate 8-core cluster across the inner-dimension sweep and
+//! print both subfigures plus the §IV-C headline comparison.
+//!
+//! ```sh
+//! cargo run --release --example mm_kernels [e4m3|e5m2] [cores]
+//! ```
+
+use mxdotp::formats::ElemFormat;
+use mxdotp::report::{fig4_sweep, render_fig3, render_fig4, render_table3, table3_cluster_point};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let fmt = args
+        .first()
+        .and_then(|s| ElemFormat::parse(s))
+        .unwrap_or(ElemFormat::E4M3);
+    let cores: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    println!("running the Fig. 4 sweep ({fmt}, {cores} cores) on the cycle-accurate cluster...\n");
+    let points = fig4_sweep(fmt, cores, 42);
+    println!("{}", render_fig4(&points, fmt));
+
+    println!("\n{}", render_fig3());
+
+    let cluster = table3_cluster_point(42);
+    println!("\n{}", render_table3(Some(&cluster)));
+}

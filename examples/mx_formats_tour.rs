@@ -1,0 +1,77 @@
+//! A tour of the OCP Microscaling formats: every element format of the
+//! v1.0 spec, its range/precision trade-off, quantization error by
+//! distribution, and what the shared exponent buys over plain FP8.
+//!
+//! ```sh
+//! cargo run --release --example mx_formats_tour
+//! ```
+
+use mxdotp::formats::{ElemFormat, MxVector};
+use mxdotp::rng::XorShift;
+
+fn quant_snr_db(data: &[f32], fmt: ElemFormat, block: usize) -> f64 {
+    let q = MxVector::quantize(data, fmt, block).dequantize();
+    let sig: f64 = data.iter().map(|&v| (v as f64).powi(2)).sum();
+    let err: f64 = data.iter().zip(&q).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+    10.0 * (sig / err.max(1e-300)).log10()
+}
+
+fn main() {
+    println!("== the OCP MX v1.0 element formats ==\n");
+    println!("  format  bits  emax  max value   min subnormal  values/binade");
+    for fmt in ElemFormat::ALL {
+        let (minsub, per_binade) = match fmt.float_spec() {
+            Some(s) => (format!("{:.2e}", s.min_subnormal()), (1u32 << s.mbits).to_string()),
+            None => ("2^-6 grid".to_string(), "—".to_string()),
+        };
+        println!(
+            "  {:<7} {:<5} {:<5} {:<11.5} {:<14} {}",
+            fmt.name(),
+            fmt.bits(),
+            fmt.emax(),
+            fmt.max_value(),
+            minsub,
+            per_binade
+        );
+    }
+
+    println!("\n== quantization SNR by data distribution (block 32) ==\n");
+    let mut rng = XorShift::new(7);
+    let n = 4096;
+    let normal = rng.normal_vec(n, 1.0);
+    let wide: Vec<f32> = (0..n)
+        .map(|_| rng.normal_f32() * (2.0f32).powi(rng.range_i64(-12, 12) as i32))
+        .collect();
+    let activations: Vec<f32> = normal.iter().map(|v| v.max(0.0) * 3.0).collect(); // relu-like
+    println!("  distribution      e5m2     e4m3     e3m2     e2m3     e2m1     int8");
+    for (name, data) in [("normal(0,1)", &normal), ("wide dynamic", &wide), ("relu acts", &activations)] {
+        print!("  {name:<16}");
+        for fmt in ElemFormat::ALL {
+            print!(" {:7.1}", quant_snr_db(data, fmt, 32));
+        }
+        println!(" dB");
+    }
+
+    println!("\n== what the block scale buys: MX vs per-tensor scaling ==\n");
+    // Two regions with very different magnitude in one tensor.
+    let mut mixed = rng.normal_vec(2048, 100.0);
+    mixed.extend(rng.normal_vec(2048, 0.01));
+    // per-tensor: one scale for everything == block size 4096
+    let snr_tensor = quant_snr_db(&mixed, ElemFormat::E4M3, 4096);
+    let snr_mx = quant_snr_db(&mixed, ElemFormat::E4M3, 32);
+    println!("  e4m3, mixed-magnitude tensor:");
+    println!("    per-tensor scale (block 4096): {snr_tensor:6.1} dB");
+    println!("    MX block-32 scales:            {snr_mx:6.1} dB");
+    println!("    -> fine-grained scales preserve the small-magnitude half");
+
+    println!("\n== block size ablation (e4m3, wide dynamic range data) ==\n");
+    print!("  block size:");
+    for bs in [8usize, 16, 32, 64, 128] {
+        print!("  {bs:>5}");
+    }
+    print!("\n  SNR (dB):  ");
+    for bs in [8usize, 16, 32, 64, 128] {
+        print!("  {:5.1}", quant_snr_db(&wide, ElemFormat::E4M3, bs));
+    }
+    println!("\n  (the spec's 32 balances scale overhead vs range tracking)");
+}

@@ -1,0 +1,65 @@
+//! Quickstart: quantize matrices to MXFP8, multiply them three ways —
+//! the bit-accurate MXDOTP datapath, the spec's FP32 reference, and
+//! the full cycle-accurate cluster — and compare against FP32.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use mxdotp::dotp::{Fp8Format, MxDotpUnit};
+use mxdotp::formats::{dot, ElemFormat, MxMatrix, MxVector, ScaleAxis};
+use mxdotp::kernels::{run_mm, KernelKind, MmProblem};
+use mxdotp::report::render_run;
+use mxdotp::rng::XorShift;
+
+fn main() {
+    let mut rng = XorShift::new(2024);
+
+    // --- 1. quantize a vector pair and run ONE mxdotp instruction ----
+    println!("== one mxdotp instruction ==");
+    let a = rng.normal_vec(8, 2.0);
+    let b = rng.normal_vec(8, 2.0);
+    let qa = MxVector::quantize(&a, ElemFormat::E4M3, 8);
+    let qb = MxVector::quantize(&b, ElemFormat::E4M3, 8);
+    let mut unit = MxDotpUnit::new(Fp8Format::E4m3);
+    let acc = unit.execute_unpacked(
+        &qa.elems[..8].try_into().unwrap(),
+        &qb.elems[..8].try_into().unwrap(),
+        qa.scales[0].0,
+        qb.scales[0].0,
+        0.0,
+    );
+    let exact: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+    println!("  mxdotp  = {acc:.4}");
+    println!("  exact   = {exact:.4}  (difference is MXFP8 quantization error)");
+
+    // --- 2. a full MX matmul, reference semantics ---------------------
+    println!("\n== 64x128x64 MX matmul (reference semantics) ==");
+    let p = MmProblem { m: 64, k: 128, n: 64, fmt: ElemFormat::E4M3, block_size: 32 };
+    let a = rng.normal_vec(p.m * p.k, 1.0);
+    let b = rng.normal_vec(p.k * p.n, 1.0);
+    let qa = MxMatrix::quantize(&a, p.m, p.k, p.fmt, 32, ScaleAxis::Row);
+    let qb = MxMatrix::quantize(&b, p.k, p.n, p.fmt, 32, ScaleAxis::Col);
+    let c_mx = dot::matmul_ref(&qa, &qb);
+    let c_f32 = dot::matmul_f32(&a, &b, p.m, p.k, p.n);
+    let rel = {
+        let num: f64 = c_mx.iter().zip(&c_f32).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum();
+        let den: f64 = c_f32.iter().map(|&y| (y as f64).powi(2)).sum();
+        (num / den).sqrt()
+    };
+    println!("  relative error vs FP32: {:.3} % (MX is a drop-in replacement)", rel * 100.0);
+    println!(
+        "  memory: {} B quantized vs {} B FP32 ({:.1}x smaller)",
+        qa.footprint_bytes() + qb.footprint_bytes(),
+        4 * (a.len() + b.len()),
+        4.0 * (a.len() + b.len()) as f64 / (qa.footprint_bytes() + qb.footprint_bytes()) as f64
+    );
+
+    // --- 3. the same matmul on the cycle-accurate 8-core cluster -----
+    println!("\n== the same matmul on the simulated Snitch cluster ==");
+    for kind in [KernelKind::Fp32, KernelKind::Fp8ToFp32, KernelKind::Mxfp8] {
+        let run = run_mm(kind, p, &a, &b, 8);
+        println!("  {}", render_run(&run));
+    }
+    println!("\nNext: `cargo run --release --example mm_kernels` for the full Fig. 4 sweep.");
+}

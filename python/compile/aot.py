@@ -1,0 +1,110 @@
+"""AOT pipeline: lower the Layer-2 JAX model (with its Layer-1 Pallas
+kernels) to HLO **text** artifacts for the Rust PJRT runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Artifacts (written to ../artifacts by default):
+  model.hlo.txt          — DeiT-Tiny-shaped encoder block fwd, MXFP8 linears
+  mx_matmul_e4m3.hlo.txt — standalone quantize+MX-matmul (64x256)x(256x64)
+  mx_matmul_e5m2.hlo.txt — same, E5M2 elements
+  fp32_matmul.hlo.txt    — FP32 baseline matmul, same shape
+  manifest.txt           — one line per artifact: name, entry shapes
+
+Run via `make artifacts` (no-op when inputs are unchanged). Python never
+runs on the Rust request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_model(cfg: model.DeiTConfig):
+    """Lower the encoder block with flat parameters (x, *params)."""
+    arg_specs = [f32(cfg.seq, cfg.dim)] + [f32(*s) for _, s in model.param_specs(cfg)]
+
+    def fn(*args):
+        return model.encoder_block_flat(*args, cfg=cfg)
+
+    return jax.jit(fn).lower(*arg_specs), arg_specs
+
+
+def lower_mx_matmul(m: int, k: int, n: int, fmt: str):
+    def fn(a, b):
+        return model.mx_matmul_entry(a, b, fmt=fmt)
+
+    return jax.jit(fn).lower(f32(m, k), f32(k, n))
+
+
+def lower_fp32_matmul(m: int, k: int, n: int):
+    return jax.jit(model.fp32_matmul_entry).lower(f32(m, k), f32(k, n))
+
+
+def write(path: str, text: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"aot: wrote {len(text):>9} chars -> {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the model artifact; siblings are written next to it")
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--fmt", default="e4m3", choices=sorted(ref.FORMATS))
+    # Fig. 4 workload shape: M=N=64 rows/cols, K=256 inner dimension.
+    ap.add_argument("--mm", default="64x256x64", help="MxKxN of the matmul artifacts")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    m, k, n = (int(v) for v in args.mm.split("x"))
+
+    cfg = model.DeiTConfig(seq=args.seq, fmt=args.fmt)
+    lowered, arg_specs = lower_model(cfg)
+    write(args.out, to_hlo_text(lowered))
+
+    write(os.path.join(out_dir, "mx_matmul_e4m3.hlo.txt"),
+          to_hlo_text(lower_mx_matmul(m, k, n, "e4m3")))
+    write(os.path.join(out_dir, "mx_matmul_e5m2.hlo.txt"),
+          to_hlo_text(lower_mx_matmul(m, k, n, "e5m2")))
+    write(os.path.join(out_dir, "fp32_matmul.hlo.txt"),
+          to_hlo_text(lower_fp32_matmul(m, k, n)))
+
+    manifest = [
+        f"model.hlo.txt deit_block seq={cfg.seq} dim={cfg.dim} fmt={cfg.fmt} "
+        f"args={len(arg_specs)}",
+        f"mx_matmul_e4m3.hlo.txt mx_matmul {m}x{k}x{n} e4m3",
+        f"mx_matmul_e5m2.hlo.txt mx_matmul {m}x{k}x{n} e5m2",
+        f"fp32_matmul.hlo.txt fp32_matmul {m}x{k}x{n}",
+    ]
+    write(os.path.join(out_dir, "manifest.txt"), "\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

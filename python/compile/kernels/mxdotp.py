@@ -1,0 +1,165 @@
+"""Layer-1 Pallas kernel: block-scaled MXFP8 matrix multiplication.
+
+This is the paper's compute hot-spot — the general MX dot product of
+Eq. (2) — re-expressed for a tiled memory hierarchy (DESIGN.md
+§Hardware-Adaptation):
+
+  * the 8-wide MXDOTP hardware datapath becomes the contraction minor
+    dimension of a VMEM tile;
+  * SSR streaming of A/B elements and scales becomes the `BlockSpec`
+    HBM->VMEM schedule;
+  * the fused scale stage becomes a per (row-block x col-block)
+    broadcast multiply folded into the accumulation;
+  * the FP32 accumulator register becomes the output tile, accumulated
+    across the K grid dimension (sequential on the innermost grid axis).
+
+Elements are carried as FP32 *values on the FP8 grid* (bit-exactness of
+the grid is guaranteed by `ref.quantize_elem` / the Rust `formats`
+module); scales are carried as integer-valued FP32 exponents. All
+`pallas_call`s use interpret=True — real-TPU lowering would emit Mosaic
+custom-calls the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default VMEM tile shape. 64x64 FP32 tiles (16 KiB each for A/B/C) plus
+# scale slivers stay well under a 16 MiB VMEM budget and keep the MXU-
+# friendly 8-multiple minor dimension; see DESIGN.md §Perf for the
+# footprint table.
+TILE_M = 64
+TILE_N = 64
+
+
+def _mx_matmul_kernel(a_ref, sa_ref, b_ref, sb_ref, o_ref, *, block_size: int, blocks_per_tile: int):
+    """One (i, j, k) grid step: accumulate `blocks_per_tile` scaled block
+    dot products into the FP32 output tile."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = o_ref[...]
+    bs = block_size
+    for sb in range(blocks_per_tile):
+        a_blk = a_ref[:, sb * bs : (sb + 1) * bs]  # (TM, bs)
+        b_blk = b_ref[sb * bs : (sb + 1) * bs, :]  # (bs, TN)
+        # Partial dot products of one MX block: exact in FP32 (products
+        # of FP8 values carry <= 9 significand bits).
+        partial = jnp.dot(a_blk, b_blk, preferred_element_type=jnp.float32)
+        # Fused block scaling: 2^(Xa + Xb), one scale per (row, col),
+        # applied exactly (bit-assembled powers of two, see ref.mul_pow2).
+        acc = acc + ref.mul_pow2(
+            partial, a_scales_col(sa_ref, sb) + b_scales_row(sb_ref, sb)
+        )
+    o_ref[...] = acc
+
+
+def a_scales_col(sa_ref, sb: int):
+    """(TM, 1) slice of the A scale sliver for sub-block `sb`."""
+    return sa_ref[:, sb : sb + 1]
+
+
+def b_scales_row(sb_ref, sb: int):
+    """(1, TN) slice of the B scale sliver for sub-block `sb`."""
+    return sb_ref[sb : sb + 1, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_size", "tile_m", "tile_n", "blocks_per_tile")
+)
+def mx_matmul(
+    a_elems: jnp.ndarray,
+    a_scale_exps: jnp.ndarray,
+    b_elems: jnp.ndarray,
+    b_scale_exps: jnp.ndarray,
+    *,
+    block_size: int = ref.SPEC_BLOCK_SIZE,
+    tile_m: int = TILE_M,
+    tile_n: int = TILE_N,
+    blocks_per_tile: int = 2,
+) -> jnp.ndarray:
+    """Block-scaled MX matmul via the Pallas kernel.
+
+    a_elems (M, K) FP8-grid values, a_scale_exps (M, K/bs) exponents;
+    b_elems (K, N), b_scale_exps (K/bs, N). Returns FP32 (M, N).
+
+    Tiling requirements: M % tile_m == 0, N % tile_n == 0,
+    K % (block_size * blocks_per_tile) == 0.
+    """
+    m, k = a_elems.shape
+    k2, n = b_elems.shape
+    assert k == k2, (k, k2)
+    tile_k = block_size * blocks_per_tile
+    if m % tile_m or n % tile_n or k % tile_k:
+        raise ValueError(f"shape ({m},{k})x({k2},{n}) not tileable by "
+                         f"({tile_m},{tile_k},{tile_n})")
+    grid = (m // tile_m, n // tile_n, k // tile_k)
+    kernel = functools.partial(
+        _mx_matmul_kernel, block_size=block_size, blocks_per_tile=blocks_per_tile
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_m, blocks_per_tile), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_k, tile_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((blocks_per_tile, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(
+        a_elems.astype(jnp.float32),
+        a_scale_exps.astype(jnp.float32),
+        b_elems.astype(jnp.float32),
+        b_scale_exps.astype(jnp.float32),
+    )
+
+
+def quantize_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    fmt: ref.ElemFormat = ref.E4M3,
+    block_size: int = ref.SPEC_BLOCK_SIZE,
+    **tile_kw,
+) -> jnp.ndarray:
+    """FP32 inputs -> OCP MX quantization (jnp) -> Pallas MX matmul.
+
+    This is the end-to-end primitive the L2 model calls for every
+    quantized linear layer, and the unit the AOT pipeline exports.
+    """
+    pa, xa = ref.mx_quantize(a, fmt, block_size, axis=1)
+    pb, xb = ref.mx_quantize(b, fmt, block_size, axis=0)
+    return mx_matmul(pa, xa, pb, xb, block_size=block_size, **tile_kw)
+
+
+def _block_dot_kernel(pa_ref, pb_ref, sc_ref, acc_ref, o_ref):
+    """Single-`mxdotp` analogue: one scaled 1-D block dot + accumulate."""
+    prod = jnp.sum(pa_ref[...] * pb_ref[...], axis=-1)
+    o_ref[...] = acc_ref[...] + ref.mul_pow2(prod, sc_ref[0] + sc_ref[1])
+
+
+def mxdotp_instr(
+    pa: jnp.ndarray, pb: jnp.ndarray, xa_exp, xb_exp, acc
+) -> jnp.ndarray:
+    """Pallas model of ONE `mxdotp` instruction: 8-element scaled
+    dot-product-accumulate (Table I operands). Used by the instruction-
+    level cross-validation tests against the Rust datapath."""
+    pa = jnp.asarray(pa, jnp.float32).reshape(1, -1)
+    pb = jnp.asarray(pb, jnp.float32).reshape(1, -1)
+    sc = jnp.asarray([xa_exp, xb_exp], jnp.float32)
+    acc = jnp.asarray(acc, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _block_dot_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(pa, pb, sc, acc)[0]

@@ -1,0 +1,299 @@
+"""Pure-jnp reference oracle for the MXDOTP numerics.
+
+This module is the single source of truth on the Python side for:
+
+  * the element formats of the OCP Microscaling (MX) v1.0 spec
+    (FP8 E5M2 / E4M3, FP6 E3M2 / E2M3, FP4 E2M1, INT8) and the E8M0
+    block-scale format;
+  * round-to-nearest-even quantization onto those grids (the paper's
+    datapath implements RNE, the only mode the MX spec mandates);
+  * the OCP quantization algorithm (shared exponent = floor(log2(amax))
+    - emax_elem, clamped);
+  * the spec's Dot (Eq. 1) and DotGeneral (Eq. 2) with FP32 accumulation,
+    which is what the MXDOTP hardware unit computes.
+
+The Pallas kernel in `mxdotp.py` must match these functions bit-for-bit
+on the element/scale grids and to FP32 round-off on the accumulations.
+The Rust `formats::` module mirrors this file; `tests/test_vectors.py`
+dumps golden vectors consumed by the Rust integration tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ElemFormat:
+    """An MX element format (bit layout + derived range constants)."""
+
+    name: str
+    ebits: int
+    mbits: int  # mantissa bits, excluding the implicit bit
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.ebits - 1)) - 1
+
+    @property
+    def emax(self) -> int:
+        # E5M2 reserves the top exponent for inf/NaN (IEEE-like);
+        # E4M3/E3M2/E2M3/E2M1 use it for normal numbers (OFP8 / OCP MX).
+        if self.name == "e5m2":
+            return (1 << self.ebits) - 2 - self.bias
+        return (1 << self.ebits) - 1 - self.bias
+
+    @property
+    def emin(self) -> int:
+        """Exponent of the smallest normal."""
+        return 1 - self.bias
+
+    @property
+    def max_normal(self) -> float:
+        frac = 2.0 - 2.0 ** (-self.mbits)
+        if self.name == "e4m3":
+            # S.1111.111 is NaN, so max normal is S.1111.110.
+            frac = 2.0 - 2.0 ** (-self.mbits + 1)
+        return frac * 2.0**self.emax
+
+    @property
+    def min_subnormal(self) -> float:
+        return 2.0 ** (self.emin - self.mbits)
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.ebits + self.mbits
+
+
+E5M2 = ElemFormat("e5m2", 5, 2)
+E4M3 = ElemFormat("e4m3", 4, 3)
+E3M2 = ElemFormat("e3m2", 3, 2)
+E2M3 = ElemFormat("e2m3", 2, 3)
+E2M1 = ElemFormat("e2m1", 2, 1)
+
+FORMATS = {f.name: f for f in (E5M2, E4M3, E3M2, E2M3, E2M1)}
+
+# E8M0 scale format: 8-bit biased exponent, value 2^(e-127), 0xFF = NaN.
+E8M0_BIAS = 127
+E8M0_EMIN = -127
+E8M0_EMAX = 127
+
+# The MX spec fixes the block size at 32 for the concrete formats.
+SPEC_BLOCK_SIZE = 32
+# The MXDOTP instruction consumes 8 FP8 elements per issue (64-bit regs).
+HW_DOT_WIDTH = 8
+
+
+# ---------------------------------------------------------------------------
+# Exact power-of-two arithmetic.
+#
+# XLA:CPU lowers jnp.exp2 / jnp.log2 to approximations that are off by an
+# ulp for some integer inputs, which breaks grid exactness. All scale
+# arithmetic below therefore constructs powers of two by assembling FP32
+# bit patterns directly, and extracts binades from the exponent field.
+# ---------------------------------------------------------------------------
+
+
+def pow2_exact(e: jnp.ndarray) -> jnp.ndarray:
+    """2**e, exact, for integer-valued e in [-126, 127]."""
+    import jax
+
+    bits = (e.astype(jnp.int32) + 127) << 23
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def mul_pow2(x: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
+    """x * 2**e, exact, for integer-valued e in [-254, 254].
+
+    Split into <=3 normal-range power-of-two factors so no intermediate
+    multiplier is subnormal; each factor multiply is then exact (barring
+    final-result under/overflow, which rounds once as hardware would).
+    """
+    e = e.astype(jnp.int32)
+    e1 = jnp.clip(e, -126, 127)
+    r = e - e1
+    e2 = jnp.clip(r, -126, 127)
+    e3 = r - e2
+    return x * pow2_exact(e1) * pow2_exact(e2) * pow2_exact(e3)
+
+
+def floor_log2(x: jnp.ndarray) -> jnp.ndarray:
+    """floor(log2(x)) for positive finite x, via the FP32 exponent field.
+
+    Subnormal inputs report -127 (sufficient here: every format's emin is
+    far above -127, and E8M0 clamps at -127 anyway).
+    """
+    import jax
+
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    return ((bits >> 23) & 0xFF) - 127
+
+
+def quantize_elem(x: jnp.ndarray, fmt: ElemFormat) -> jnp.ndarray:
+    """RNE-quantize FP32 values onto `fmt`'s value grid (saturating).
+
+    Returns FP32 values that lie exactly on the format grid. Overflows
+    saturate to +-max_normal (OCP MX conversion semantics clamp instead
+    of producing inf). Zeros and subnormals are handled exactly.
+    """
+    ax = jnp.abs(x)
+    # Exponent of the value, clamped at emin so subnormals share the
+    # fixed quantum 2^(emin - mbits).
+    e = floor_log2(jnp.where(ax == 0, 1.0, ax))
+    e = jnp.clip(e, fmt.emin, None)
+    quantum = pow2_exact(e - fmt.mbits)
+    # jnp.round implements round-half-to-even.
+    q = jnp.round(x / quantum) * quantum
+    # Rounding can carry into the next binade (1.111.. -> 10.000..):
+    # that value is exactly representable (or saturates below).
+    q = jnp.clip(q, -fmt.max_normal, fmt.max_normal)
+    return jnp.where(ax == 0, x * 0.0, q).astype(jnp.float32)
+
+
+def quantize_int8(x: jnp.ndarray) -> jnp.ndarray:
+    """RNE-quantize onto the MXINT8 grid: value = m * 2^-6, m in [-128, 127]."""
+    m = jnp.clip(jnp.round(x * 64.0), -128, 127)
+    return (m / 64.0).astype(jnp.float32)
+
+
+def shared_exponent(amax: jnp.ndarray, fmt: ElemFormat) -> jnp.ndarray:
+    """OCP MX v1.0 scale computation for one block.
+
+    shared_exp = floor(log2(amax)) - emax_elem, clamped to E8M0 range.
+    amax == 0 maps to shared_exp 0 (scale 1.0) so the block quantizes to
+    all zeros without NaNs.
+    """
+    safe = jnp.where(amax == 0, 1.0, amax)
+    se = floor_log2(safe) - fmt.emax
+    se = jnp.where(amax == 0, 0, se)
+    return jnp.clip(se, E8M0_EMIN, E8M0_EMAX).astype(jnp.float32)
+
+
+def mx_quantize(
+    x: jnp.ndarray, fmt: ElemFormat, block_size: int = SPEC_BLOCK_SIZE, axis: int = -1
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize `x` to an MX tensor along `axis`.
+
+    Returns (elements, scale_exps):
+      elements   — FP32 values on `fmt`'s grid, same shape as x;
+      scale_exps — FP32 integer-valued shared exponents, shape of x with
+                   `axis` reduced by block_size (scale value = 2**exp).
+    `x.shape[axis]` must be divisible by `block_size`.
+    """
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    if n % block_size != 0:
+        raise ValueError(f"axis {axis} size {n} not divisible by {block_size}")
+    blocked_shape = x.shape[:axis] + (n // block_size, block_size) + x.shape[axis + 1 :]
+    xb = x.reshape(blocked_shape)
+    amax = jnp.max(jnp.abs(xb), axis=axis + 1, keepdims=True)
+    se = shared_exponent(amax, fmt)
+    elems = quantize_elem(mul_pow2(xb, -se), fmt)
+    return elems.reshape(x.shape), jnp.squeeze(se, axis=axis + 1)
+
+
+def mx_dequantize(
+    elems: jnp.ndarray, scale_exps: jnp.ndarray, block_size: int = SPEC_BLOCK_SIZE, axis: int = -1
+) -> jnp.ndarray:
+    """Inverse of mx_quantize's scaling (exact: scales are powers of two)."""
+    axis = axis % elems.ndim
+    n = elems.shape[axis]
+    blocked_shape = (
+        elems.shape[:axis] + (n // block_size, block_size) + elems.shape[axis + 1 :]
+    )
+    eb = elems.reshape(blocked_shape)
+    se = jnp.expand_dims(scale_exps, axis=axis + 1)
+    return mul_pow2(eb, se).reshape(elems.shape)
+
+
+def mx_dot(
+    pa: jnp.ndarray, xa_exp: jnp.ndarray, pb: jnp.ndarray, xb_exp: jnp.ndarray
+) -> jnp.ndarray:
+    """Eq. (1): C = 2^Xa * 2^Xb * sum_i Pa_i * Pb_i, FP32 result.
+
+    pa/pb: (..., k) element values; xa_exp/xb_exp: (...) scale exponents.
+    The sum is carried in FP32 (the hardware is exact in 95-bit fixed
+    point and rounds once; FP32 summation over k<=32 of FP8*FP8 products
+    is also exact because each product has <= 9 significant bits —
+    see DESIGN.md §7).
+    """
+    prod = (pa * pb).astype(jnp.float32)
+    s = jnp.sum(prod, axis=-1)
+    return mul_pow2(s, xa_exp + xb_exp)
+
+
+def mx_dot_general(
+    pa: jnp.ndarray,
+    xa_exp: jnp.ndarray,
+    pb: jnp.ndarray,
+    xb_exp: jnp.ndarray,
+    block_size: int = SPEC_BLOCK_SIZE,
+) -> jnp.ndarray:
+    """Eq. (2): sum over n blocks of Dot(A_j, B_j), FP32 accumulation.
+
+    pa: (..., n*block_size); xa_exp: (..., n); likewise for b. FP32 out.
+    """
+    k = block_size
+    n = pa.shape[-1] // k
+    pa_b = pa.reshape(pa.shape[:-1] + (n, k))
+    pb_b = pb.reshape(pb.shape[:-1] + (n, k))
+    dots = mx_dot(pa_b, xa_exp, pb_b, xb_exp)
+    return jnp.sum(dots, axis=-1)
+
+
+def mx_matmul_ref(
+    a_elems: jnp.ndarray,
+    a_scale_exps: jnp.ndarray,
+    b_elems: jnp.ndarray,
+    b_scale_exps: jnp.ndarray,
+    block_size: int = SPEC_BLOCK_SIZE,
+) -> jnp.ndarray:
+    """Reference MX matmul: C[m,n] = DotGeneral(A[m,:], B[:,n]).
+
+    a_elems (M, K) with a_scale_exps (M, K/bs); b_elems (K, N) with
+    b_scale_exps (K/bs, N). FP32 output. This is the semantics the
+    MXFP8 kernel of Fig. 2 computes with one `mxdotp` per 8 elements.
+    """
+    M, K = a_elems.shape
+    K2, N = b_elems.shape
+    assert K == K2, (K, K2)
+    nb = K // block_size
+    ab = a_elems.reshape(M, nb, block_size)
+    bb = b_elems.reshape(nb, block_size, N)
+    # per-block partial dot products: (M, nb, N)
+    partial = jnp.einsum("mbk,bkn->mbn", ab, bb, preferred_element_type=jnp.float32)
+    scaled = mul_pow2(
+        partial, a_scale_exps[:, :, None] + b_scale_exps[None, :, :]
+    )
+    return jnp.sum(scaled, axis=1)
+
+
+def quantize_matmul_ref(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    fmt: ElemFormat = E4M3,
+    block_size: int = SPEC_BLOCK_SIZE,
+) -> jnp.ndarray:
+    """FP32 -> MX quantize both operands (both along K), then MX matmul."""
+    pa, xa = mx_quantize(a, fmt, block_size, axis=1)
+    pb, xb = mx_quantize(b, fmt, block_size, axis=0)
+    return mx_matmul_ref(pa, xa, pb, xb, block_size)
+
+
+def fp8_to_fp32_matmul_ref(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    fmt: ElemFormat = E4M3,
+    block_size: int = SPEC_BLOCK_SIZE,
+) -> jnp.ndarray:
+    """The paper's software baseline semantics: cast FP8 elements to FP32,
+    FP32 MACs, then apply the block scales post-accumulation.
+
+    Numerically identical to quantize_matmul_ref up to FP32 rounding of
+    the per-block partial sums; used to validate the Rust FP8-to-FP32
+    kernel's results.
+    """
+    return quantize_matmul_ref(a, b, fmt, block_size)

@@ -1,0 +1,180 @@
+"""Layer-2 JAX model: a DeiT-Tiny-shaped transformer encoder block with
+MXFP8-quantized linear layers.
+
+The paper extracts its power-analysis workload from DeiT-Tiny quantized
+to MXFP8 with Microsoft's MX emulation library; we mirror that with a
+DeiT-Tiny-shaped encoder block (dim 192, 3 heads, MLP ratio 4) whose
+five matmuls (QKV projection, attention output projection, MLP fc1/fc2,
+plus the logits head in the classifier variant) run through the Layer-1
+Pallas MX kernel. LayerNorm, softmax and residuals stay FP32, matching
+common MX deployment practice (and the paper's focus on the dot-product
+operator).
+
+Everything here is build-time only: `aot.py` lowers these functions once
+to HLO text; the Rust coordinator loads and executes the artifacts via
+PJRT, with Python never on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mxdotp, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class DeiTConfig:
+    """DeiT-Tiny shape (Touvron et al., ICML'21), padded where tiling
+    needs multiples of 64: DeiT's 197-token sequence is padded to 256
+    tokens with attention-masked pads (shapes are what matter for the
+    reproduction, see DESIGN.md §2)."""
+
+    seq: int = 256
+    dim: int = 192
+    heads: int = 3
+    mlp_ratio: int = 4
+    fmt: str = "e4m3"
+    block_size: int = 32
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+    @property
+    def mlp_dim(self) -> int:
+        return self.dim * self.mlp_ratio
+
+    @property
+    def elem_format(self) -> ref.ElemFormat:
+        return ref.FORMATS[self.fmt]
+
+
+# Parameter name -> shape, in the flat order aot.py exports (the Rust
+# workload generator mirrors this list; keep them in sync).
+def param_specs(cfg: DeiTConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    d, md = cfg.dim, cfg.mlp_dim
+    return [
+        ("ln1_gamma", (d,)),
+        ("ln1_beta", (d,)),
+        ("w_qkv", (d, 3 * d)),
+        ("b_qkv", (3 * d,)),
+        ("w_proj", (d, d)),
+        ("b_proj", (d,)),
+        ("ln2_gamma", (d,)),
+        ("ln2_beta", (d,)),
+        ("w_fc1", (d, md)),
+        ("b_fc1", (md,)),
+        ("w_fc2", (md, d)),
+        ("b_fc2", (d,)),
+    ]
+
+
+def init_params(cfg: DeiTConfig, key: jax.Array) -> Dict[str, jnp.ndarray]:
+    """Truncated-normal-ish init with DeiT-Tiny moments (std 0.02), so the
+    synthetic workload exercises realistic value distributions."""
+    params = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("gamma"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("beta") or name.startswith("b_"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def layer_norm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * gamma + beta
+
+
+def mx_linear(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, cfg: DeiTConfig
+) -> jnp.ndarray:
+    """MX-quantized linear layer: both activation and weight are quantized
+    along the contraction axis per the OCP recipe, then multiplied by the
+    Pallas MX kernel (Layer 1). Bias add in FP32."""
+    y = mxdotp.quantize_matmul(
+        x, w, fmt=cfg.elem_format, block_size=cfg.block_size,
+        tile_m=64, tile_n=64, blocks_per_tile=2,
+    )
+    return y + b
+
+
+def attention(x: jnp.ndarray, p: Dict[str, jnp.ndarray], cfg: DeiTConfig) -> jnp.ndarray:
+    """Multi-head self-attention with MX-quantized projections.
+
+    Score and context matmuls stay FP32: their contraction dims (64 and
+    seq) are dominated by the softmax's dynamic range, and the paper's
+    MM kernels target the linear layers. This matches microxcaling's
+    default DeiT recipe (linear layers quantized)."""
+    s, d, h, hd = cfg.seq, cfg.dim, cfg.heads, cfg.head_dim
+    qkv = mx_linear(x, p["w_qkv"], p["b_qkv"], cfg)  # (s, 3d)
+    qkv = qkv.reshape(s, 3, h, hd).transpose(1, 2, 0, 3)  # (3, h, s, hd)
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(float(hd))
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hqk,hkd->hqd", attn, v)  # (h, s, hd)
+    ctx = ctx.transpose(1, 0, 2).reshape(s, d)
+    return mx_linear(ctx, p["w_proj"], p["b_proj"], cfg)
+
+
+def mlp(x: jnp.ndarray, p: Dict[str, jnp.ndarray], cfg: DeiTConfig) -> jnp.ndarray:
+    y = mx_linear(x, p["w_fc1"], p["b_fc1"], cfg)
+    y = jax.nn.gelu(y)
+    return mx_linear(y, p["w_fc2"], p["b_fc2"], cfg)
+
+
+def encoder_block(
+    x: jnp.ndarray, p: Dict[str, jnp.ndarray], cfg: DeiTConfig
+) -> jnp.ndarray:
+    """One pre-norm DeiT encoder block, the unit the E2E driver serves."""
+    x = x + attention(layer_norm(x, p["ln1_gamma"], p["ln1_beta"]), p, cfg)
+    x = x + mlp(layer_norm(x, p["ln2_gamma"], p["ln2_beta"]), p, cfg)
+    return x
+
+
+def encoder_block_flat(x: jnp.ndarray, *flat_params: jnp.ndarray, cfg: DeiTConfig):
+    """Flat-argument wrapper for AOT export (PJRT executables take a flat
+    list of buffers; the Rust runtime feeds them in param_specs order)."""
+    names = [n for n, _ in param_specs(cfg)]
+    p = dict(zip(names, flat_params))
+    return (encoder_block(x, p, cfg),)
+
+
+def encoder_block_fp32(
+    x: jnp.ndarray, p: Dict[str, jnp.ndarray], cfg: DeiTConfig
+) -> jnp.ndarray:
+    """FP32 baseline of the same block (no quantization) — used by the
+    accuracy tests to bound the MXFP8 quantization error."""
+
+    def lin(x, w, b):
+        return jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+
+    s, d, h, hd = cfg.seq, cfg.dim, cfg.heads, cfg.head_dim
+    y = layer_norm(x, p["ln1_gamma"], p["ln1_beta"])
+    qkv = lin(y, p["w_qkv"], p["b_qkv"]).reshape(s, 3, h, hd).transpose(1, 2, 0, 3)
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    attn = jax.nn.softmax(jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(float(hd)), -1)
+    ctx = jnp.einsum("hqk,hkd->hqd", attn, v).transpose(1, 0, 2).reshape(s, d)
+    x = x + lin(ctx, p["w_proj"], p["b_proj"])
+    y = layer_norm(x, p["ln2_gamma"], p["ln2_beta"])
+    return x + lin(jax.nn.gelu(lin(y, p["w_fc1"], p["b_fc1"])), p["w_fc2"], p["b_fc2"])
+
+
+def mx_matmul_entry(a: jnp.ndarray, b: jnp.ndarray, fmt: str = "e4m3"):
+    """Standalone quantize+matmul entry point, exported as its own
+    artifact so the Rust serving path can run single MX matmuls (the
+    Fig. 4 workload shape) through PJRT."""
+    return (mxdotp.quantize_matmul(a, b, fmt=ref.FORMATS[fmt]),)
+
+
+def fp32_matmul_entry(a: jnp.ndarray, b: jnp.ndarray):
+    """FP32 baseline matmul artifact (the Fig. 4 FP32 kernel's semantics)."""
+    return (jnp.dot(a, b, preferred_element_type=jnp.float32),)

@@ -1,0 +1,176 @@
+"""Golden-vector generator for the Rust MXDOTP datapath.
+
+Computes `acc + 2^(Xa+Xb-2*127) * sum_i(Pa_i * Pb_i)` **exactly** (as a
+rational) and rounds ONCE to FP32 with round-to-nearest-even — the
+semantics the paper's 95-bit fixed-point early-accumulation datapath
+implements ("we conservatively select the minimum bitwidth required to
+guarantee an exact result", §III-A). The Rust `dotp::` module must match
+these vectors bit-for-bit.
+
+Usage:  python -m compile.vectors [out.txt]
+Output: one vector per line —
+  vec <fmt> <pa:8 hex bytes> <pb:8 hex bytes> <xa:u8> <xb:u8> <acc:u32 hex> <out:u32 hex>
+
+Encodings are raw format bit patterns (sign.exp.mantissa, MSB first);
+xa/xb are E8M0 biased exponents; acc/out are FP32 bit patterns.
+"""
+
+from __future__ import annotations
+
+import struct
+import sys
+from fractions import Fraction
+
+from .kernels import ref
+
+E8M0_BIAS = 127
+
+
+def decode_elem(bits: int, fmt: ref.ElemFormat) -> Fraction | None:
+    """Decode a raw FP8 bit pattern to an exact rational (None = NaN/inf)."""
+    sign = -1 if (bits >> (fmt.ebits + fmt.mbits)) & 1 else 1
+    e = (bits >> fmt.mbits) & ((1 << fmt.ebits) - 1)
+    m = bits & ((1 << fmt.mbits) - 1)
+    if fmt.name == "e5m2" and e == (1 << fmt.ebits) - 1:
+        return None  # inf/NaN
+    if fmt.name == "e4m3" and e == (1 << fmt.ebits) - 1 and m == (1 << fmt.mbits) - 1:
+        return None  # NaN
+    if e == 0:  # subnormal
+        return sign * Fraction(m, 1 << fmt.mbits) * Fraction(2) ** fmt.emin
+    return (
+        sign
+        * (1 + Fraction(m, 1 << fmt.mbits))
+        * Fraction(2) ** (e - fmt.bias)
+    )
+
+
+def f32_bits_to_fraction(bits: int) -> Fraction:
+    v = struct.unpack("<f", struct.pack("<I", bits))[0]
+    return Fraction(v)
+
+
+def fraction_to_f32_rne(x: Fraction) -> int:
+    """Exact rational -> FP32 bit pattern with a single RNE rounding.
+
+    Mirrors the datapath's final conversion stage (handles subnormals,
+    overflow to inf).
+    """
+    if x == 0:
+        return 0
+    sign = 0x8000_0000 if x < 0 else 0
+    a = -x if x < 0 else x
+    # Find e with 2^e <= a < 2^(e+1).
+    e = a.numerator.bit_length() - a.denominator.bit_length()
+    if Fraction(2) ** e > a:
+        e -= 1
+    elif Fraction(2) ** (e + 1) <= a:
+        e += 1
+    e_eff = max(e, -126)  # subnormal quantum floor
+    # significand steps of 2^(e_eff - 23)
+    quantum = Fraction(2) ** (e_eff - 23)
+    steps = a / quantum  # exact rational number of steps
+    lo = steps.numerator // steps.denominator
+    rem = steps - lo
+    if rem > Fraction(1, 2) or (rem == Fraction(1, 2) and lo % 2 == 1):
+        lo += 1
+    if e_eff == -126 and lo < (1 << 23):  # subnormal result
+        return sign | lo
+    # renormalize if rounding carried into the next binade
+    while lo >= (1 << 24):
+        lo >>= 1
+        e_eff += 1
+    exp_field = e_eff + 127
+    if exp_field >= 255:
+        return sign | 0x7F80_0000  # inf
+    return sign | (exp_field << 23) | (lo - (1 << 23))
+
+
+def exact_mxdotp(
+    pa: list[int], pb: list[int], xa: int, xb: int, acc_bits: int, fmt: ref.ElemFormat
+) -> int:
+    """Exact-rational model of one mxdotp instruction -> FP32 bit result."""
+    s = Fraction(0)
+    for a_bits, b_bits in zip(pa, pb):
+        va, vb = decode_elem(a_bits, fmt), decode_elem(b_bits, fmt)
+        assert va is not None and vb is not None, "NaN operands not in vectors"
+        s += va * vb
+    scale = Fraction(2) ** (xa - E8M0_BIAS + xb - E8M0_BIAS)
+    total = f32_bits_to_fraction(acc_bits) + scale * s
+    return fraction_to_f32_rne(total)
+
+
+def f32_to_bits(v: float) -> int:
+    return struct.unpack("<I", struct.pack("<f", v))[0]
+
+
+class XorShift:
+    """Tiny deterministic PRNG (mirrored in rust/src/rng.rs)."""
+
+    def __init__(self, seed: int):
+        self.s = seed & 0xFFFF_FFFF_FFFF_FFFF or 0x9E3779B97F4A7C15
+
+    def next(self) -> int:
+        s = self.s
+        s ^= (s << 13) & 0xFFFF_FFFF_FFFF_FFFF
+        s ^= s >> 7
+        s ^= (s << 17) & 0xFFFF_FFFF_FFFF_FFFF
+        self.s = s
+        return s
+
+
+def random_elem_bits(rng: XorShift, fmt: ref.ElemFormat) -> int:
+    """Uniformly random finite element bit pattern."""
+    while True:
+        b = rng.next() & 0xFF
+        if decode_elem(b, fmt) is not None:
+            return b
+
+
+def gen_vectors(n_per_fmt: int = 256, seed: int = 42) -> list[str]:
+    rng = XorShift(seed)
+    lines = []
+    for fmt in (ref.E4M3, ref.E5M2):
+        for i in range(n_per_fmt):
+            pa = [random_elem_bits(rng, fmt) for _ in range(8)]
+            pb = [random_elem_bits(rng, fmt) for _ in range(8)]
+            if i < 8:
+                # Edge vectors: zeros, max scales, huge/small accumulator.
+                xa, xb = [(127, 127), (0, 254), (254, 0), (127, 1),
+                          (200, 200), (20, 20), (127, 127), (127, 127)][i]
+                acc = [0.0, 0.0, 1.0, -1.0, 3.4e38, 1e-38, -0.0, 6.0e4][i]
+            else:
+                xa = 127 + (rng.next() % 31) - 15
+                xb = 127 + (rng.next() % 31) - 15
+                acc_mag = 2.0 ** ((rng.next() % 40) - 20.0)
+                acc = acc_mag if rng.next() & 1 else -acc_mag
+            acc_bits = f32_to_bits(acc)
+            out_bits = exact_mxdotp(pa, pb, xa, xb, acc_bits, fmt)
+            lines.append(
+                "vec {} {} {} {} {} {:08x} {:08x}".format(
+                    fmt.name,
+                    "".join(f"{b:02x}" for b in pa),
+                    "".join(f"{b:02x}" for b in pb),
+                    xa,
+                    xb,
+                    acc_bits,
+                    out_bits,
+                )
+            )
+    return lines
+
+
+def main() -> None:
+    out = sys.argv[1] if len(sys.argv) > 1 else "../rust/tests/data/golden_vectors.txt"
+    lines = gen_vectors()
+    import os
+
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        f.write("# MXDOTP golden vectors: exact-rational semantics, single RNE round\n")
+        f.write("# vec <fmt> <pa x8 hex> <pb x8 hex> <xa u8> <xb u8> <acc f32hex> <out f32hex>\n")
+        f.write("\n".join(lines) + "\n")
+    print(f"vectors: wrote {len(lines)} vectors -> {out}")
+
+
+if __name__ == "__main__":
+    main()

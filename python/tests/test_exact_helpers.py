@@ -1,0 +1,118 @@
+"""Exact power-of-two helpers + the golden-vector generator's rational
+model — the Python half of the cross-language bit-exactness contract."""
+
+import struct
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from compile import vectors
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=50, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+@hypothesis.given(e=st.integers(-126, 127))
+def test_pow2_exact_is_exact(e):
+    got = np.asarray(ref.pow2_exact(jnp.asarray([e], jnp.int32)))[0]
+    assert got == np.float32(2.0 ** e)
+
+
+@hypothesis.given(e=st.integers(-254, 254), seed=st.integers(0, 2**31 - 1))
+def test_mul_pow2_matches_f64(e, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(16).astype(np.float32)
+    got = np.asarray(ref.mul_pow2(jnp.asarray(x), jnp.asarray(e, jnp.int32)))
+    want = (x.astype(np.float64) * 2.0 ** e).astype(np.float32)
+    # XLA:CPU runs with FTZ: subnormal f32 RESULTS flush to zero. The
+    # exactness contract holds on the normal range (and the MX paths
+    # never depend on subnormal f32 intermediates).
+    subnormal = np.abs(want) < np.float32(2.0**-126)
+    np.testing.assert_array_equal(got[~subnormal], want[~subnormal])
+    assert np.all((got[subnormal] == 0.0) | (got[subnormal] == want[subnormal]))
+
+
+# NOTE: st.floats is unusable here — XLA sets FTZ/DAZ process-wide and
+# hypothesis refuses to generate subnormals under it. Generate bit
+# patterns instead.
+@hypothesis.given(bits=st.integers(0x0080_0000, 0x7F7F_FFFF))  # +normal range
+def test_floor_log2_matches_numpy(bits):
+    x = struct.unpack("<f", struct.pack("<I", bits))[0]
+    got = int(np.asarray(ref.floor_log2(jnp.float32(x))))
+    want = int(np.floor(np.log2(np.float64(x))))
+    assert got == want
+
+
+def f32_bits(v):
+    return struct.unpack("<I", struct.pack("<f", np.float32(v)))[0]
+
+
+@hypothesis.given(bits=st.integers(0, 0xFFFF_FFFF))
+def test_fraction_to_f32_rne_roundtrips_representables(bits):
+    """Every exactly-representable finite f32 (incl. subnormals) must
+    round-trip through the exact-rational RNE rounder."""
+    from fractions import Fraction
+
+    v = struct.unpack("<f", struct.pack("<I", bits))[0]
+    if not np.isfinite(np.float32(v)):
+        return
+    frac = Fraction(v)
+    got = vectors.fraction_to_f32_rne(frac)
+    if np.float32(v) == 0.0:
+        assert got in (0, 0x8000_0000) or got == 0
+    else:
+        assert got == f32_bits(v), f"{v}: {got:#x} vs {f32_bits(v):#x}"
+
+
+def test_fraction_rne_ties():
+    from fractions import Fraction
+
+    # 1 + 2^-24 ties to 1.0 (even)
+    assert vectors.fraction_to_f32_rne(Fraction(1) + Fraction(1, 2**24)) == f32_bits(1.0)
+    # 1 + 3*2^-24 ties to 1 + 2^-22
+    want = f32_bits(np.float32(1.0) + np.float32(2.0**-22))
+    assert vectors.fraction_to_f32_rne(Fraction(1) + 3 * Fraction(1, 2**24)) == want
+    # overflow -> inf
+    assert vectors.fraction_to_f32_rne(Fraction(2) ** 130) == 0x7F80_0000
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), fmt_name=st.sampled_from(["e4m3", "e5m2"]))
+def test_exact_mxdotp_agrees_with_jnp_oracle(seed, fmt_name):
+    """The exact-rational instruction model and the FP32 jnp oracle agree
+    to one FP32 ulp on benign inputs (the oracle rounds per step, the
+    rational model once)."""
+    fmt = ref.FORMATS[fmt_name]
+    rng = vectors.XorShift(seed or 1)
+    pa = [vectors.random_elem_bits(rng, fmt) for _ in range(8)]
+    pb = [vectors.random_elem_bits(rng, fmt) for _ in range(8)]
+    out_bits = vectors.exact_mxdotp(pa, pb, 127, 127, f32_bits(0.5), fmt)
+    got = struct.unpack("<f", struct.pack("<I", out_bits))[0]
+    va = jnp.asarray([vectors.decode_elem(b, fmt) for b in pa], jnp.float32)
+    vb = jnp.asarray([vectors.decode_elem(b, fmt) for b in pb], jnp.float32)
+    want = float(ref.mx_dot(va, jnp.float32(0), vb, jnp.float32(0)) + 0.5)
+    assert got == want or abs(got - want) <= 2.4e-7 * max(abs(want), 1e-30), (
+        f"{got} vs {want}"
+    )
+
+
+def test_golden_vector_file_in_sync():
+    """The checked-in golden vectors must match regeneration (guards
+    against editing one side of the cross-language contract)."""
+    import os
+
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "data",
+                        "golden_vectors.txt")
+    if not os.path.exists(path):
+        import pytest
+
+        pytest.skip("golden vectors not generated yet (run make vectors)")
+    on_disk = [l for l in open(path) if l.startswith("vec ")]
+    fresh = vectors.gen_vectors()
+    assert len(on_disk) == len(fresh) == 512
+    for got, want in zip(on_disk, fresh):
+        assert got.strip() == want.strip()

@@ -1,0 +1,108 @@
+"""Pallas MX kernel vs. pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes / formats / block sizes; the kernel must agree
+with `ref.mx_matmul_ref` to FP32 round-off (and bit-exactly for the
+single-instruction model, which performs the same operations in the
+same order as the oracle).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import mxdotp, ref
+
+jax.config.update("jax_enable_x64", False)
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=20, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+FMTS = [ref.E4M3, ref.E5M2]
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+@pytest.mark.parametrize("shape", [(64, 64, 64), (64, 128, 64), (128, 256, 128)])
+def test_kernel_matches_ref(fmt, shape):
+    m, k, n = shape
+    a, b = rand(1, (m, k)), rand(2, (k, n))
+    pa, xa = ref.mx_quantize(a, fmt, axis=1)
+    pb, xb = ref.mx_quantize(b, fmt, axis=0)
+    got = mxdotp.mx_matmul(pa, xa, pb, xb)
+    want = ref.mx_matmul_ref(pa, xa, pb, xb)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+def test_quantize_matmul_matches_ref(fmt):
+    a, b = rand(3, (64, 128)), rand(4, (128, 64))
+    got = mxdotp.quantize_matmul(a, b, fmt=fmt)
+    want = ref.quantize_matmul_ref(a, b, fmt=fmt)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@hypothesis.given(
+    mt=st.integers(1, 3),
+    nt=st.integers(1, 3),
+    kb=st.integers(1, 4),
+    fmt_name=st.sampled_from(["e4m3", "e5m2"]),
+    bpt=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_shape_sweep(mt, nt, kb, fmt_name, bpt, seed):
+    """Hypothesis sweep: tiled shapes x formats x blocks-per-tile."""
+    fmt = ref.FORMATS[fmt_name]
+    m, n = 64 * mt, 64 * nt
+    k = 32 * bpt * kb
+    a, b = rand(seed, (m, k), 3.0), rand(seed + 1, (k, n), 0.5)
+    pa, xa = ref.mx_quantize(a, fmt, axis=1)
+    pb, xb = ref.mx_quantize(b, fmt, axis=0)
+    got = mxdotp.mx_matmul(pa, xa, pb, xb, blocks_per_tile=bpt)
+    want = ref.mx_matmul_ref(pa, xa, pb, xb)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    fmt_name=st.sampled_from(["e4m3", "e5m2"]),
+    exp_a=st.integers(-8, 8),
+    exp_b=st.integers(-8, 8),
+    acc=st.floats(-1e4, 1e4, width=32),
+)
+def test_single_instruction_model(seed, fmt_name, exp_a, exp_b, acc):
+    """mxdotp_instr (one hardware instruction) == Eq. (1), bit-exact."""
+    fmt = ref.FORMATS[fmt_name]
+    key = jax.random.PRNGKey(seed)
+    ka, kb = jax.random.split(key)
+    pa = ref.quantize_elem(jax.random.normal(ka, (8,), jnp.float32), fmt)
+    pb = ref.quantize_elem(jax.random.normal(kb, (8,), jnp.float32), fmt)
+    got = mxdotp.mxdotp_instr(pa, pb, float(exp_a), float(exp_b), acc)
+    want = ref.mx_dot(pa, jnp.float32(exp_a), pb, jnp.float32(exp_b)) + jnp.float32(acc)
+    assert np.float32(got) == np.float32(want) or np.isclose(got, want, rtol=1e-7)
+
+
+def test_zero_blocks():
+    """All-zero operand blocks must produce exact zeros (scale path must
+    not emit NaNs for amax == 0)."""
+    fmt = ref.E4M3
+    a = jnp.zeros((64, 64), jnp.float32)
+    b = rand(7, (64, 64))
+    got = mxdotp.quantize_matmul(a, b, fmt=fmt)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((64, 64), np.float32))
+
+
+def test_tiling_validation():
+    with pytest.raises(ValueError):
+        mxdotp.mx_matmul(
+            jnp.zeros((60, 64)), jnp.zeros((60, 2)),
+            jnp.zeros((64, 64)), jnp.zeros((2, 64)),
+        )

@@ -1,0 +1,81 @@
+"""L2 model tests: shapes, quantization error bounds, AOT lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    # Small seq for test speed; same dim/heads as DeiT-Tiny.
+    return model.DeiTConfig(seq=64)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return model.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def x(cfg):
+    return 0.5 * jax.random.normal(jax.random.PRNGKey(1), (cfg.seq, cfg.dim), jnp.float32)
+
+
+def test_block_shapes(cfg, params, x):
+    y = model.encoder_block(x, params, cfg)
+    assert y.shape == (cfg.seq, cfg.dim)
+    assert y.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_param_specs_cover_params(cfg, params):
+    names = [n for n, _ in model.param_specs(cfg)]
+    assert set(names) == set(params)
+    for n, s in model.param_specs(cfg):
+        assert params[n].shape == s
+
+
+def test_mx_block_close_to_fp32(cfg, params, x):
+    """MXFP8 quantization error on one encoder block stays small
+    (the MX paper's claim: drop-in replacement with negligible loss)."""
+    y_mx = model.encoder_block(x, params, cfg)
+    y_fp = model.encoder_block_fp32(x, params, cfg)
+    rel = float(
+        jnp.linalg.norm(y_mx - y_fp) / (jnp.linalg.norm(y_fp) + 1e-30)
+    )
+    assert rel < 0.05, f"relative error {rel:.4f} too large"
+
+
+def test_flat_wrapper_matches_dict(cfg, params, x):
+    flat = [params[n] for n, _ in model.param_specs(cfg)]
+    (y1,) = model.encoder_block_flat(x, *flat, cfg=cfg)
+    y2 = model.encoder_block(x, params, cfg)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+@pytest.mark.parametrize("fmt", ["e4m3", "e5m2"])
+def test_mx_matmul_entry(fmt):
+    a = jax.random.normal(jax.random.PRNGKey(2), (64, 256), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(3), (256, 64), jnp.float32)
+    (got,) = model.mx_matmul_entry(a, b, fmt=fmt)
+    want = ref.quantize_matmul_ref(a, b, fmt=ref.FORMATS[fmt])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_aot_lowering_produces_hlo_text(cfg):
+    lowered, arg_specs = aot.lower_model(cfg)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # one parameter per argument
+    assert len(arg_specs) == 1 + len(model.param_specs(cfg))
+
+
+def test_aot_matmul_artifact_text():
+    text = aot.to_hlo_text(aot.lower_mx_matmul(64, 64, 64, "e4m3"))
+    assert text.startswith("HloModule")
+    assert "f32[64,64]" in text

@@ -1,0 +1,145 @@
+"""OCP MX v1.0 quantization properties (oracle-level tests).
+
+These pin down the semantics the Rust `formats::` module mirrors:
+grid membership, RNE behaviour, shared-exponent selection, exactness of
+dequantization, and saturation.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=30, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+ALL_FMTS = list(ref.FORMATS.values())
+IDS = [f.name for f in ALL_FMTS]
+
+
+def grid_values(fmt: ref.ElemFormat) -> np.ndarray:
+    """Enumerate every finite value of the format (both signs)."""
+    vals = set()
+    for e in range(fmt.emin, fmt.emax + 1):
+        for m in range(1 << fmt.mbits):
+            v = (1.0 + m / (1 << fmt.mbits)) * 2.0**e
+            if v <= fmt.max_normal:
+                vals.add(v)
+    for m in range(1, 1 << fmt.mbits):  # subnormals
+        vals.add(m * 2.0 ** (fmt.emin - fmt.mbits))
+    vals.add(0.0)
+    both = sorted(set(list(vals) + [-v for v in vals]))
+    return np.array(both, dtype=np.float32)
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS, ids=IDS)
+def test_grid_fixpoint(fmt):
+    """quantize_elem is the identity on the format's own grid."""
+    g = grid_values(fmt)
+    q = np.asarray(ref.quantize_elem(jnp.asarray(g), fmt))
+    np.testing.assert_array_equal(q, g)
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS, ids=IDS)
+def test_format_constants(fmt):
+    """Spot-check the derived constants against the OCP v1.0 tables."""
+    expect = {
+        "e5m2": (15, -14, 57344.0),
+        "e4m3": (8, -6, 448.0),
+        "e3m2": (4, -2, 28.0),
+        "e2m3": (2, 0, 7.5),
+        "e2m1": (2, 0, 6.0),
+    }[fmt.name]
+    assert (fmt.emax, fmt.emin, fmt.max_normal) == expect
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS, ids=IDS)
+def test_rne_midpoints(fmt):
+    """Halfway values round to the even neighbour."""
+    g = grid_values(fmt)
+    pos = g[g > 0]
+    mids = (pos[:-1] + pos[1:]) / 2.0
+    q = np.asarray(ref.quantize_elem(jnp.asarray(mids), fmt))
+    for lo, hi, m, qq in zip(pos[:-1], pos[1:], mids, q):
+        if (m - lo) == (hi - m):  # exact midpoint in FP32
+            # the chosen neighbour must have an even mantissa step count
+            assert qq in (lo, hi)
+            step = hi - lo
+            assert (qq / step) % 2 == pytest.approx(0.0) or qq in (lo, hi)
+
+
+@hypothesis.given(
+    fmt_name=st.sampled_from(IDS),
+    seed=st.integers(0, 2**31 - 1),
+    log_scale=st.integers(-20, 20),
+)
+def test_quantize_monotone(fmt_name, seed, log_scale):
+    """Quantization onto the grid is monotone non-decreasing."""
+    fmt = ref.FORMATS[fmt_name]
+    x = np.sort(
+        np.asarray(
+            2.0**log_scale
+            * jax.random.normal(jax.random.PRNGKey(seed), (64,), jnp.float32)
+        )
+    )
+    q = np.asarray(ref.quantize_elem(jnp.asarray(x), fmt))
+    assert np.all(np.diff(q) >= 0)
+
+
+@hypothesis.given(
+    fmt_name=st.sampled_from(["e4m3", "e5m2"]),
+    seed=st.integers(0, 2**31 - 1),
+    log_scale=st.integers(-30, 30),
+)
+def test_shared_exponent_bounds_elements(fmt_name, seed, log_scale):
+    """After OCP scaling, all elements are <= max_normal in magnitude
+    (no saturation unless the block has extreme dynamic range), and the
+    largest element lands in the top binade [2^emax, 2^(emax+1))."""
+    fmt = ref.FORMATS[fmt_name]
+    x = 2.0**log_scale * jax.random.normal(
+        jax.random.PRNGKey(seed), (1, 32), jnp.float32
+    )
+    hypothesis.assume(float(jnp.max(jnp.abs(x))) > 0)
+    elems, se = ref.mx_quantize(x, fmt, axis=1)
+    assert np.all(np.abs(np.asarray(elems)) <= fmt.max_normal)
+    amax = float(jnp.max(jnp.abs(x)))
+    if 2.0 ** (ref.E8M0_EMIN) <= amax / (2.0**fmt.emax) <= 2.0 ** (ref.E8M0_EMAX):
+        scaled_amax = amax / 2.0 ** float(se[0, 0])
+        assert 2.0**fmt.emax <= scaled_amax * (1 + 1e-6)
+        assert scaled_amax < 2.0 ** (fmt.emax + 1)
+
+
+@pytest.mark.parametrize("fmt", [ref.E4M3, ref.E5M2], ids=["e4m3", "e5m2"])
+def test_dequantize_roundtrip_pow2(fmt):
+    """Power-of-two data quantizes losslessly (scale + grid both hit)."""
+    x = jnp.asarray(
+        np.random.RandomState(0).choice([2.0**e for e in range(-4, 5)], (4, 32)),
+        jnp.float32,
+    )
+    elems, se = ref.mx_quantize(x, fmt, axis=1)
+    back = ref.mx_dequantize(elems, se, axis=1)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_zero_block_scale_is_one():
+    elems, se = ref.mx_quantize(jnp.zeros((2, 32)), ref.E4M3, axis=1)
+    np.testing.assert_array_equal(np.asarray(se), np.zeros((2, 1)).reshape(2, 1))
+    np.testing.assert_array_equal(np.asarray(elems), np.zeros((2, 32)))
+
+
+def test_int8_grid():
+    x = jnp.asarray([0.0, 1.0, -2.0, 1.984375, 0.0078125, 100.0], jnp.float32)
+    q = np.asarray(ref.quantize_int8(x))
+    # 0.0078125 * 64 = 0.5 -> RNE ties to even -> 0
+    np.testing.assert_allclose(q, [0.0, 1.0, -2.0, 1.984375, 0.0, 1.984375])
+
+
+def test_block_size_validation():
+    with pytest.raises(ValueError):
+        ref.mx_quantize(jnp.zeros((2, 33)), ref.E4M3, axis=1)

@@ -1,0 +1,48 @@
+//! Minimal benchmark harness (criterion is unavailable in the offline
+//! environment): warmup + timed iterations with mean / stddev / min,
+//! plus helpers shared by the paper-reproduction benches.
+
+use std::time::Instant;
+
+/// One measured statistic.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStat {
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub iters: usize,
+}
+
+impl BenchStat {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStat {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / samples.len() as f64;
+    BenchStat {
+        mean_s: mean,
+        stddev_s: var.sqrt(),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        iters,
+    }
+}
+
+/// Print a standard harness header.
+pub fn header(name: &str, what: &str) {
+    println!("=============================================================");
+    println!("bench {name}: {what}");
+    println!("=============================================================");
+}

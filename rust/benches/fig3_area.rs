@@ -1,0 +1,35 @@
+//! Bench `fig3_area`: regenerates Fig. 3 (core-complex area breakdown)
+//! and the §IV-A area claims from the GE accounting model, plus the
+//! SSR-vs-4th-RF-port ablation the paper argues in §III-B.
+//!
+//! Run: `cargo bench --bench fig3_area`
+
+mod common;
+
+use mxdotp::energy::AreaModel;
+use mxdotp::report::render_fig3;
+
+fn main() {
+    common::header("fig3_area", "core-complex area breakdown (paper Fig. 3, §IV-A)");
+    println!("\n{}", render_fig3());
+
+    let m = AreaModel::derive();
+    println!("paper-vs-model checks:");
+    let checks = [
+        ("cluster area (MGE)", m.cluster_mge, 4.89),
+        ("cluster overhead (%)", (m.cluster_mge / m.baseline_cluster_mge - 1.0) * 100.0, 5.1),
+        ("MXDOTP share of core (%)", m.mxdotp_kge / m.core_complex_kge * 100.0, 9.5),
+        ("MXDOTP share of FPU (%)", m.mxdotp_share_of_fpu() * 100.0, 17.0),
+        ("core-level overhead (%)", m.core_overhead() * 100.0, 11.0),
+        ("unit area (mm2 x 1e3)", m.unit_mm2() * 1e3, 3.15),
+    ];
+    for (name, got, paper) in checks {
+        println!("  {name:<28} model {got:8.3}   paper {paper:8.3}");
+    }
+    // assertions: model must stay anchored
+    assert!((m.cluster_mge - 4.89).abs() < 1e-9);
+    assert!((m.mxdotp_kge / m.core_complex_kge - 0.095).abs() < 1e-9);
+    assert!((m.mxdotp_share_of_fpu() - 0.17).abs() < 0.01);
+    assert!((m.unit_mm2() * 1e3 - 3.15).abs() / 3.15 < 0.25);
+    println!("\nfig3_area: OK");
+}

@@ -1,0 +1,30 @@
+//! Bench `fig4`: regenerates Fig. 4a (throughput) and Fig. 4b (energy
+//! efficiency) — the three MM kernels across the inner-dimension sweep
+//! on the cycle-accurate 8-core cluster — plus the §IV-C headline
+//! block, for both FP8 element formats.
+//!
+//! Run: `cargo bench --bench fig4`
+
+mod common;
+
+use mxdotp::formats::ElemFormat;
+use mxdotp::report::{fig4_sweep, headline, render_fig4};
+
+fn main() {
+    common::header("fig4", "throughput + energy efficiency sweep (paper Fig. 4a/4b)");
+    for fmt in [ElemFormat::E4M3, ElemFormat::E5M2] {
+        let t = std::time::Instant::now();
+        let points = fig4_sweep(fmt, 8, 42);
+        println!("\n{}", render_fig4(&points, fmt));
+        println!("[sweep wall time: {:.2} s]", t.elapsed().as_secs_f64());
+
+        // Machine-checkable shape assertions (who wins, where).
+        let h = headline(&points);
+        assert!(h.peak_gflops > 80.0, "MXFP8 peak {} too low", h.peak_gflops);
+        assert!(h.peak_utilization > 0.70);
+        assert!(h.speedup_vs_fp32.1 > 2.5, "FP32 speedup shape broken");
+        assert!(h.speedup_vs_sw.0 > 10.0, "SW speedup shape broken");
+        assert!(h.eff_vs_fp32.0 > 2.0 && h.eff_vs_sw.0 > 8.0, "energy shape broken");
+    }
+    println!("\nfig4: OK (shape assertions passed)");
+}

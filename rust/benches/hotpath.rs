@@ -1,0 +1,85 @@
+//! Bench `hotpath`: host-side performance of the crate's hot paths —
+//! the numbers the §Perf optimization pass tracks.
+//!
+//! * datapath: exact `mxdotp` executions per second;
+//! * quantizer: MX matrix quantization throughput;
+//! * simulator: simulated cluster-cycles per host-second on the
+//!   MXFP8 kernel (the Fig. 4 regeneration bottleneck);
+//! * reference matmul: the bit-exact oracle's throughput.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+mod common;
+
+use common::bench;
+use mxdotp::dotp::{Fp8Format, MxDotpUnit};
+use mxdotp::formats::{ElemFormat, MxMatrix, ScaleAxis};
+use mxdotp::kernels::{reference, run_mm, KernelKind, MmProblem};
+use mxdotp::rng::XorShift;
+
+fn main() {
+    common::header("hotpath", "host-side throughput of the crate's hot paths (§Perf)");
+
+    // --- datapath ----------------------------------------------------
+    let mut rng = XorShift::new(1);
+    let mut unit = MxDotpUnit::new(Fp8Format::E4m3);
+    let ops: Vec<([u8; 8], [u8; 8], u8, u8)> = (0..4096)
+        .map(|_| {
+            let mut a = [0u8; 8];
+            let mut b = [0u8; 8];
+            for i in 0..8 {
+                a[i] = ElemFormat::E4M3.encode(rng.normal_f32() * 4.0);
+                b[i] = ElemFormat::E4M3.encode(rng.normal_f32() * 4.0);
+            }
+            (a, b, (120 + rng.below(16)) as u8, (120 + rng.below(16)) as u8)
+        })
+        .collect();
+    let mut acc = 0.0f32;
+    let st = bench(3, 10, || {
+        for (a, b, xa, xb) in &ops {
+            acc = unit.execute_unpacked(a, b, *xa, *xb, acc);
+            if !acc.is_finite() {
+                acc = 0.0;
+            }
+        }
+    });
+    let mdots = ops.len() as f64 / st.mean_s / 1e6;
+    println!("\ndatapath:   {mdots:8.1} M mxdotp/s   ({:.3} ms / 4096 ops)", st.per_iter_ms());
+
+    // --- quantizer -----------------------------------------------------
+    let data = XorShift::new(2).normal_vec(256 * 256, 1.0);
+    let st = bench(2, 10, || {
+        let q = MxMatrix::quantize(&data, 256, 256, ElemFormat::E4M3, 32, ScaleAxis::Row);
+        std::hint::black_box(&q);
+    });
+    let melems = data.len() as f64 / st.mean_s / 1e6;
+    println!("quantizer:  {melems:8.1} M elems/s    (256x256 e4m3)");
+
+    // --- simulator -----------------------------------------------------
+    let p = MmProblem::fig4(128, ElemFormat::E4M3);
+    let mut r2 = XorShift::new(3);
+    let a = r2.normal_vec(p.m * p.k, 1.0);
+    let b = r2.normal_vec(p.k * p.n, 1.0);
+    let mut sim_cycles = 0u64;
+    let st = bench(1, 5, || {
+        let run = run_mm(KernelKind::Mxfp8, p, &a, &b, 8);
+        sim_cycles = run.perf.cycles;
+        std::hint::black_box(&run.c);
+    });
+    let mcps = sim_cycles as f64 / st.mean_s / 1e6;
+    println!(
+        "simulator:  {mcps:8.1} M cluster-cycles/s ({} cycles in {:.1} ms, MXFP8 64x128x64 on 8 cores)",
+        sim_cycles,
+        st.per_iter_ms()
+    );
+
+    // --- bit-exact reference ------------------------------------------
+    let st = bench(1, 5, || {
+        let c = reference::mxfp8_hw_ref(&p, &a, &b);
+        std::hint::black_box(&c);
+    });
+    let mdot_ref = (p.m * p.n * p.k / 8) as f64 / st.mean_s / 1e6;
+    println!("hw-ref:     {mdot_ref:8.1} M mxdotp/s   (analytical reference)");
+
+    println!("\nhotpath: OK (record these in EXPERIMENTS.md §Perf)");
+}

@@ -1,0 +1,42 @@
+//! Bench `table3`: regenerates Table III — FP8 dot-product units (our
+//! unit row from the datapath + energy models) and compute clusters
+//! (our cluster row from a live K=256 MXFP8 simulation). Third-party
+//! rows are cited, as their RTL is not public.
+//!
+//! Run: `cargo bench --bench table3`
+
+mod common;
+
+use mxdotp::energy::{constants as k, EnergyModel};
+use mxdotp::report::{render_table3, table3_cluster_point};
+
+fn main() {
+    common::header("table3", "unit + cluster comparison (paper Table III)");
+    let t = std::time::Instant::now();
+    let cluster = table3_cluster_point(42);
+    println!("\n{}", render_table3(Some(&cluster)));
+    println!("[cluster row simulated in {:.2} s]", t.elapsed().as_secs_f64());
+
+    // Shape assertions vs the paper's rows.
+    let (unit_gflops, unit_eff) = EnergyModel.unit_peak();
+    assert!((unit_gflops - k::ANCHOR_UNIT_GFLOPS).abs() < 0.2, "unit GFLOPS {unit_gflops}");
+    assert!(
+        (unit_eff - k::ANCHOR_UNIT_GFLOPS_W).abs() / k::ANCHOR_UNIT_GFLOPS_W < 0.10,
+        "unit efficiency {unit_eff}"
+    );
+    assert!(cluster.gflops > 85.0, "cluster GFLOPS {}", cluster.gflops);
+    assert!(
+        (cluster.gflops_per_w - k::ANCHOR_MX_GFLOPS_W).abs() / k::ANCHOR_MX_GFLOPS_W < 0.20,
+        "cluster efficiency {}",
+        cluster.gflops_per_w
+    );
+    // frequency-normalized throughput comparable to MiniFloat-NN
+    // (128 GFLOPS at 1.26 GHz vs ours at 1.0 GHz)
+    let ours_norm = cluster.gflops / 1.0;
+    let mini_norm = 128.0 / 1.26;
+    assert!(
+        (ours_norm / mini_norm - 1.0).abs() < 0.15,
+        "frequency-normalized throughput diverges: {ours_norm:.1} vs {mini_norm:.1}"
+    );
+    println!("\ntable3: OK (unit + cluster rows within calibration bands)");
+}

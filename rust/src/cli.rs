@@ -1,0 +1,197 @@
+//! Hand-rolled CLI (the offline environment has no clap): subcommand
+//! parsing for `mxdotp-cli`.
+//!
+//! ```text
+//! mxdotp-cli quantize  --fmt e4m3 --block 32 --n 8 [--seed S]
+//! mxdotp-cli simulate  --kernel mxfp8|fp32|fp8sw --m 64 --k 256 --n 64
+//!                      [--cores 8] [--fmt e4m3] [--seed S]
+//! mxdotp-cli reproduce fig3|fig4|table3|all [--cores 8] [--fmt e4m3]
+//! mxdotp-cli serve     [--requests 16] [--batch 8] [--artifacts DIR]
+//! mxdotp-cli info
+//! ```
+
+use crate::formats::ElemFormat;
+use crate::kernels::KernelKind;
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    Quantize { fmt: ElemFormat, block: usize, n: usize, seed: u64 },
+    Simulate { kernel: KernelKind, m: usize, k: usize, n: usize, cores: usize, fmt: ElemFormat, seed: u64 },
+    Reproduce { what: String, cores: usize, fmt: ElemFormat },
+    Serve { requests: usize, batch: usize, artifacts: String },
+    Info,
+    Help,
+}
+
+/// Parse error with a user-facing message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Split `--key value` pairs after the subcommand.
+fn flags(args: &[String]) -> Result<HashMap<String, String>, CliError> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let k = &args[i];
+        if !k.starts_with("--") {
+            return Err(CliError(format!("unexpected argument '{k}' (flags are --key value)")));
+        }
+        let v = args
+            .get(i + 1)
+            .ok_or_else(|| CliError(format!("flag '{k}' needs a value")))?;
+        map.insert(k.trim_start_matches("--").to_string(), v.clone());
+        i += 2;
+    }
+    Ok(map)
+}
+
+fn get_parse<T: std::str::FromStr>(
+    f: &HashMap<String, String>,
+    key: &str,
+    default: T,
+) -> Result<T, CliError> {
+    match f.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| CliError(format!("bad value for --{key}: '{v}'"))),
+    }
+}
+
+fn get_fmt(f: &HashMap<String, String>) -> Result<ElemFormat, CliError> {
+    match f.get("fmt") {
+        None => Ok(ElemFormat::E4M3),
+        Some(v) => {
+            ElemFormat::parse(v).ok_or_else(|| CliError(format!("unknown format '{v}'")))
+        }
+    }
+}
+
+/// Parse a full argument vector (without argv[0]).
+pub fn parse(args: &[String]) -> Result<Command, CliError> {
+    let Some(cmd) = args.first() else {
+        return Ok(Command::Help);
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => Ok(Command::Help),
+        "info" => Ok(Command::Info),
+        "quantize" => {
+            let f = flags(rest)?;
+            Ok(Command::Quantize {
+                fmt: get_fmt(&f)?,
+                block: get_parse(&f, "block", 32)?,
+                n: get_parse(&f, "n", 8)?,
+                seed: get_parse(&f, "seed", 42)?,
+            })
+        }
+        "simulate" => {
+            let f = flags(rest)?;
+            let kernel = match f.get("kernel").map(String::as_str) {
+                None | Some("mxfp8") => KernelKind::Mxfp8,
+                Some("fp32") => KernelKind::Fp32,
+                Some("fp8sw") | Some("fp8-to-fp32") => KernelKind::Fp8ToFp32,
+                Some(other) => return Err(CliError(format!("unknown kernel '{other}'"))),
+            };
+            Ok(Command::Simulate {
+                kernel,
+                m: get_parse(&f, "m", 64)?,
+                k: get_parse(&f, "k", 256)?,
+                n: get_parse(&f, "n", 64)?,
+                cores: get_parse(&f, "cores", 8)?,
+                fmt: get_fmt(&f)?,
+                seed: get_parse(&f, "seed", 42)?,
+            })
+        }
+        "reproduce" => {
+            let what = rest
+                .first()
+                .filter(|w| !w.starts_with("--"))
+                .cloned()
+                .unwrap_or_else(|| "all".to_string());
+            if !["fig3", "fig4", "table3", "all"].contains(&what.as_str()) {
+                return Err(CliError(format!(
+                    "unknown target '{what}' (expected fig3|fig4|table3|all)"
+                )));
+            }
+            let skip = usize::from(!rest.is_empty() && !rest[0].starts_with("--"));
+            let f = flags(&rest[skip..])?;
+            Ok(Command::Reproduce { what, cores: get_parse(&f, "cores", 8)?, fmt: get_fmt(&f)? })
+        }
+        "serve" => {
+            let f = flags(rest)?;
+            Ok(Command::Serve {
+                requests: get_parse(&f, "requests", 16)?,
+                batch: get_parse(&f, "batch", 8)?,
+                artifacts: f.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
+            })
+        }
+        other => Err(CliError(format!("unknown subcommand '{other}' (try 'help')"))),
+    }
+}
+
+pub const USAGE: &str = "\
+mxdotp-cli — MXDOTP paper reproduction driver
+
+USAGE:
+  mxdotp-cli quantize  [--fmt e4m3|e5m2|e3m2|e2m3|e2m1|int8] [--block 32] [--n 8] [--seed S]
+  mxdotp-cli simulate  [--kernel mxfp8|fp32|fp8sw] [--m 64] [--k 256] [--n 64]
+                       [--cores 8] [--fmt e4m3] [--seed S]
+  mxdotp-cli reproduce [fig3|fig4|table3|all] [--cores 8] [--fmt e4m3]
+  mxdotp-cli serve     [--requests 16] [--batch 8] [--artifacts DIR]
+  mxdotp-cli info
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parse_simulate() {
+        let c = parse(&argv("simulate --kernel fp32 --k 128 --cores 4")).unwrap();
+        assert_eq!(
+            c,
+            Command::Simulate {
+                kernel: KernelKind::Fp32,
+                m: 64,
+                k: 128,
+                n: 64,
+                cores: 4,
+                fmt: ElemFormat::E4M3,
+                seed: 42
+            }
+        );
+    }
+
+    #[test]
+    fn parse_reproduce_variants() {
+        assert!(matches!(parse(&argv("reproduce")), Ok(Command::Reproduce { what, .. }) if what == "all"));
+        assert!(matches!(parse(&argv("reproduce fig4 --cores 2")), Ok(Command::Reproduce { what, cores: 2, .. }) if what == "fig4"));
+        assert!(parse(&argv("reproduce fig9")).is_err());
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse(&argv("simulate --kernel quantum")).is_err());
+        assert!(parse(&argv("simulate --k")).is_err());
+        assert!(parse(&argv("frobnicate")).is_err());
+        assert!(parse(&argv("quantize --fmt fp64")).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        assert_eq!(parse(&[]).unwrap(), Command::Help);
+    }
+}

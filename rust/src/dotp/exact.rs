@@ -1,0 +1,478 @@
+//! Exact-arithmetic core of the MXDOTP datapath.
+//!
+//! Every FP8/FP9 value is a dyadic rational `m · 2^e` with |m| < 16;
+//! products are 8-bit integers times powers of two; the sum of eight
+//! products is exact in an i128 anchored at the minimum product
+//! exponent; the block scales shift the whole sum by an integer
+//! exponent; and the final addition with the FP32 accumulator performs
+//! the one-and-only RNE rounding (with sticky capture for alignment
+//! distances beyond the integer width — exactly what the hardware's
+//! round/sticky bits do).
+//!
+//! This *is* the hardware semantics: the 95-bit anchor-34 window of
+//! §III-A was sized so that no addend bit is ever lost (see
+//! [`crate::dotp::window`] for the proof), so "exact sum, round once"
+//! and "window accumulate, round once" produce identical bits.
+
+use crate::formats::minifloat::FloatSpec;
+
+/// A dyadic rational: `num · 2^exp` (num = 0 represents zero).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dyadic {
+    pub num: i128,
+    pub exp: i32,
+}
+
+impl Dyadic {
+    pub const ZERO: Dyadic = Dyadic { num: 0, exp: 0 };
+
+    /// Decode a narrow-float bit pattern to a dyadic (must be finite).
+    pub fn from_bits(spec: &FloatSpec, bits: u16) -> Dyadic {
+        debug_assert!(!spec.is_nan(bits) && !spec.is_inf(bits));
+        let sign = if (bits >> (spec.ebits + spec.mbits)) & 1 == 1 { -1 } else { 1 };
+        let e_field = ((bits as u32) >> spec.mbits) & ((1 << spec.ebits) - 1);
+        let m_field = (bits as u32) & ((1 << spec.mbits) - 1);
+        if e_field == 0 {
+            Dyadic {
+                num: sign * m_field as i128,
+                exp: spec.emin() - spec.mbits as i32,
+            }
+        } else {
+            Dyadic {
+                num: sign * (m_field as i128 + (1 << spec.mbits)),
+                exp: e_field as i32 - spec.bias() - spec.mbits as i32,
+            }
+        }
+    }
+
+    /// Decode an FP32 value (must be finite).
+    pub fn from_f32(v: f32) -> Dyadic {
+        debug_assert!(v.is_finite());
+        if v == 0.0 {
+            return Dyadic::ZERO;
+        }
+        let bits = v.to_bits();
+        let sign = if bits >> 31 == 1 { -1i128 } else { 1 };
+        let e_field = ((bits >> 23) & 0xFF) as i32;
+        let m_field = (bits & 0x7F_FFFF) as i128;
+        if e_field == 0 {
+            Dyadic { num: sign * m_field, exp: -126 - 23 }
+        } else {
+            Dyadic { num: sign * (m_field + (1 << 23)), exp: e_field - 127 - 23 }
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.num == 0
+    }
+
+    /// Normalize so the numerator is odd (canonical form), keeping zero
+    /// as (0, 0).
+    pub fn normalize(mut self) -> Dyadic {
+        if self.num == 0 {
+            return Dyadic::ZERO;
+        }
+        let tz = self.num.trailing_zeros();
+        self.num >>= tz;
+        self.exp += tz as i32;
+        self
+    }
+}
+
+/// Round a dyadic rational to FP32 with round-to-nearest-even.
+///
+/// The single rounding of the datapath's final conversion stage.
+/// Handles subnormals and overflow-to-infinity.
+pub fn dyadic_to_f32_rne(d: Dyadic) -> f32 {
+    if d.num == 0 {
+        return 0.0;
+    }
+    let neg = d.num < 0;
+    let mag = d.num.unsigned_abs();
+    let exp = d.exp; // value = mag * 2^exp
+    // Normalize magnitude to exactly 25 significant bits ("24 + guard"),
+    // collecting a sticky bit for everything shifted out. 25 bits lets
+    // us do RNE in one step below.
+    let mut sticky = false;
+    let width = 128 - mag.leading_zeros() as i32; // bit length of mag
+    // Binade of the value: value in [2^(width-1+exp), 2^(width+exp)).
+    let mut bin = width - 1 + exp;
+    // FP32 quantum for this binade (subnormal floor at 2^-149).
+    let quantum = (bin.max(-126)) - 23;
+    // We need steps = value / 2^quantum, rounded NE.
+    let shift = quantum - exp;
+    let steps = if shift <= 0 {
+        // Exact left shift; value far above quantum means huge steps —
+        // only possible when width is small; fits in u128 for all f32
+        // ranges (steps < 2^25 after normalization... guard anyway).
+        if (shift.unsigned_abs() as u32) >= mag.leading_zeros() {
+            // overflow of the shift => value overflows f32 by far
+            return if neg { f32::NEG_INFINITY } else { f32::INFINITY };
+        }
+        mag << (-shift) as u32
+    } else if shift as u32 >= 128 {
+        sticky = mag != 0;
+        0
+    } else {
+        let sh = shift as u32;
+        let rem = mag & ((1u128 << sh) - 1);
+        let floor = mag >> sh;
+        let half = 1u128 << (sh - 1);
+        let round_up = rem > half
+            || (rem == half && (floor & 1) == 1)
+            || (rem == half && sticky);
+        sticky |= rem != 0;
+        floor + u128::from(round_up)
+    };
+    let _ = sticky;
+    let mut steps = steps;
+    let mut qexp = quantum;
+    // Renormalize a carry out of rounding.
+    while steps >= (1u128 << 24) {
+        // carry lands on a power of two; exact halving
+        steps >>= 1;
+        qexp += 1;
+    }
+    bin = qexp + 23;
+    if bin > 127 {
+        return if neg { f32::NEG_INFINITY } else { f32::INFINITY };
+    }
+    let bits = if steps < (1u128 << 23) {
+        // subnormal (qexp pinned at -149)
+        debug_assert!(qexp == -149 || steps == 0);
+        steps as u32
+    } else {
+        let e_field = (bin + 127) as u32;
+        (e_field << 23) | ((steps as u32) & 0x7F_FFFF)
+    };
+    f32::from_bits(bits | if neg { 0x8000_0000 } else { 0 })
+}
+
+/// Exact sum of two dyadics rounded once to FP32 — the final stage of
+/// the datapath (shifted-accumulator add + conversion).
+///
+/// When the alignment distance exceeds the integer width, the smaller
+/// operand degenerates to a sticky contribution, which is exactly what
+/// the hardware's sticky bit does; RNE with sticky then yields the
+/// correctly-rounded exact result.
+pub fn add_dyadic_rne(a: Dyadic, b: Dyadic) -> f32 {
+    if a.is_zero() {
+        return dyadic_to_f32_rne(b);
+    }
+    if b.is_zero() {
+        return dyadic_to_f32_rne(a);
+    }
+    // Fast path: exact alignment fits i128 without normalizing (the
+    // overwhelmingly common case on the kernel hot path).
+    {
+        let (hi, lo) = if a.exp >= b.exp { (a, b) } else { (b, a) };
+        let gap = (hi.exp - lo.exp) as u32;
+        let hi_bits = 128 - hi.num.unsigned_abs().leading_zeros();
+        if hi_bits + gap <= 126 {
+            let sum = (hi.num << gap) + lo.num;
+            return dyadic_to_f32_rne(Dyadic { num: sum, exp: lo.exp });
+        }
+    }
+    let a = a.normalize();
+    let b = b.normalize();
+    let (hi, lo) = if a.exp >= b.exp { (a, b) } else { (b, a) };
+    let gap = (hi.exp - lo.exp) as u32;
+    // Widths after alignment: hi needs bit_length(hi) + gap bits.
+    let hi_bits = 128 - hi.num.unsigned_abs().leading_zeros();
+    if hi_bits + gap <= 126 {
+        // Exact alignment fits in i128.
+        let sum = (hi.num << gap) + lo.num;
+        return dyadic_to_f32_rne(Dyadic { num: sum, exp: lo.exp });
+    }
+    // |hi| >= 2^gap * |lo| relative scale is enormous: lo only matters
+    // as a round/sticky nudge. hi has <= 126 significant bits (it is a
+    // normalized product sum or an f32), far more precision than f32's
+    // 24: represent hi to 60 bits + sticky-from-lo.
+    // Shift hi left to a 60-bit field, append two bits encoding lo's
+    // sign as a sub-ulp nudge: since gap is huge, |lo| < ulp(hi)/4, so
+    // RNE only needs to know lo's sign when hi sits exactly on a tie.
+    let spare = 126 - hi_bits; // how far we can shift hi up
+    let up = spare.min(60);
+    let mut num = hi.num << up;
+    // lo contributes strictly less than one unit of the shifted-hi lsb:
+    // nudge by ±1 in the lowest bit (breaks ties correctly, exact
+    // otherwise irrelevant after rounding).
+    num += if lo.num > 0 { 1 } else { -1 };
+    dyadic_to_f32_rne(Dyadic { num, exp: hi.exp - up as i32 })
+}
+
+/// Per-format decode lookup table: bit pattern -> (numerator, shift
+/// above the format's product anchor). Specials are flagged so the
+/// unit can branch on them in one load. This LUT is the §Perf fix that
+/// took the datapath model past 20 M ops/s.
+pub struct DecodeLut {
+    /// Signed significand of the value (|num| < 2^(mbits+1)).
+    pub num: [i32; 256],
+    /// Value exponent minus (emin - mbits): always >= 0 for finite.
+    pub shift: [i32; 256],
+    /// 0 = finite, 1 = NaN, 2 = +inf, 3 = -inf.
+    pub special: [u8; 256],
+    /// The anchor exponent: 2 * (emin - mbits).
+    pub anchor: i32,
+}
+
+impl DecodeLut {
+    fn build(spec: &FloatSpec) -> Box<DecodeLut> {
+        let mut lut = Box::new(DecodeLut {
+            num: [0; 256],
+            shift: [0; 256],
+            special: [0; 256],
+            anchor: 2 * (spec.emin() - spec.mbits as i32),
+        });
+        for bits in 0u16..256 {
+            let b = bits & spec.mask();
+            let i = bits as usize;
+            if spec.is_nan(b) {
+                lut.special[i] = 1;
+            } else if spec.is_inf(b) {
+                lut.special[i] = if b >> (spec.ebits + spec.mbits) & 1 == 1 { 3 } else { 2 };
+            } else {
+                let d = Dyadic::from_bits(spec, b);
+                lut.num[i] = d.num as i32;
+                lut.shift[i] = d.exp - (spec.emin() - spec.mbits as i32);
+                debug_assert!(lut.shift[i] >= 0 || d.num == 0);
+            }
+        }
+        lut
+    }
+
+    /// The (lazily built) LUT for an FP8 spec.
+    pub fn for_spec(spec: &FloatSpec) -> &'static DecodeLut {
+        use std::sync::LazyLock;
+        static E4M3_LUT: LazyLock<Box<DecodeLut>> =
+            LazyLock::new(|| DecodeLut::build(&crate::formats::minifloat::E4M3));
+        static E5M2_LUT: LazyLock<Box<DecodeLut>> =
+            LazyLock::new(|| DecodeLut::build(&crate::formats::minifloat::E5M2));
+        match spec.name {
+            "e4m3" => &E4M3_LUT,
+            "e5m2" => &E5M2_LUT,
+            other => panic!("no decode LUT for {other}"),
+        }
+    }
+}
+
+/// The exact MXDOTP semantics on *finite* operands:
+/// `acc + 2^(sa + sb - 254) · Σ pa_i·pb_i`, one RNE rounding.
+///
+/// `pa`/`pb` are element bit patterns in `spec` (E5M2 or E4M3);
+/// `xa`/`xb` are E8M0 *biased* scale exponents (bias 127, 255 = NaN —
+/// callers handle NaN before this); `acc` is the FP32 accumulator.
+pub fn mxdotp_exact(
+    spec: &FloatSpec,
+    pa: &[u8; 8],
+    pb: &[u8; 8],
+    xa: u8,
+    xb: u8,
+    acc: f32,
+) -> f32 {
+    mxdotp_exact_lut(DecodeLut::for_spec(spec), pa, pb, xa, xb, acc)
+}
+
+/// LUT-driven core: sum of products anchored at the minimum product
+/// exponent so the i128 accumulation is exact (product numerators are
+/// <= 2^(2 mbits + 2); shifts stay < 2·(emax − emin + mbits) < 70).
+pub fn mxdotp_exact_lut(
+    lut: &DecodeLut,
+    pa: &[u8; 8],
+    pb: &[u8; 8],
+    xa: u8,
+    xb: u8,
+    acc: f32,
+) -> f32 {
+    let mut sum: i128 = 0;
+    for i in 0..8 {
+        let (a, b) = (pa[i] as usize, pb[i] as usize);
+        debug_assert!(lut.special[a] == 0 && lut.special[b] == 0);
+        let p = (lut.num[a] as i64 * lut.num[b] as i64) as i128;
+        sum += p << (lut.shift[a] + lut.shift[b]) as u32;
+    }
+    let scale = xa as i32 - 127 + xb as i32 - 127;
+    let scaled = Dyadic { num: sum, exp: lut.anchor + scale };
+    add_dyadic_rne(Dyadic::from_f32(acc), scaled)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::minifloat::{E4M3, E5M2};
+    use crate::rng::property_cases;
+
+    #[test]
+    fn dyadic_from_f32_roundtrip() {
+        for v in [0.0f32, 1.0, -1.5, 3.25e-12, 1.1754944e-38, 1e-45, 3.4e38] {
+            let d = Dyadic::from_f32(v);
+            assert_eq!(dyadic_to_f32_rne(d), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn dyadic_to_f32_rounds_ties_to_even() {
+        // 1 + 2^-24 is exactly between 1.0 and 1+2^-23: ties to 1.0.
+        let d = Dyadic { num: (1i128 << 24) + 1, exp: -24 };
+        assert_eq!(dyadic_to_f32_rne(d), 1.0);
+        // 1 + 3·2^-24 is between 1+2^-23 (odd) and 1+2^-22 (even):
+        // = 1 + 1.5·2^-23, ties to the even step 2 -> 1 + 2^-22.
+        let d = Dyadic { num: (1i128 << 24) + 3, exp: -24 };
+        assert_eq!(dyadic_to_f32_rne(d), 1.0 + 2.0f32.powi(-22));
+    }
+
+    #[test]
+    fn dyadic_to_f32_subnormals() {
+        let min_sub = Dyadic { num: 1, exp: -149 };
+        assert_eq!(dyadic_to_f32_rne(min_sub), f32::from_bits(1));
+        let half_min = Dyadic { num: 1, exp: -150 };
+        assert_eq!(dyadic_to_f32_rne(half_min), 0.0); // ties to even 0
+        let three_quarter = Dyadic { num: 3, exp: -151 };
+        assert_eq!(dyadic_to_f32_rne(three_quarter), f32::from_bits(1));
+    }
+
+    #[test]
+    fn dyadic_to_f32_overflow() {
+        let big = Dyadic { num: 1, exp: 128 };
+        assert_eq!(dyadic_to_f32_rne(big), f32::INFINITY);
+        let neg = Dyadic { num: -1, exp: 200 };
+        assert_eq!(dyadic_to_f32_rne(neg), f32::NEG_INFINITY);
+        // max f32 is fine
+        let max = Dyadic::from_f32(f32::MAX);
+        assert_eq!(dyadic_to_f32_rne(max), f32::MAX);
+    }
+
+    #[test]
+    fn add_matches_f64_when_exact() {
+        property_cases(2000, 0xADD, |rng| {
+            let a = rng.normal_f32() * 2.0f32.powi(rng.range_i64(-20, 20) as i32);
+            let b = rng.normal_f32() * 2.0f32.powi(rng.range_i64(-20, 20) as i32);
+            // f64 add of two f32s is exact; rounding it to f32 == one RNE.
+            let want = (a as f64 + b as f64) as f32;
+            let got = add_dyadic_rne(Dyadic::from_f32(a), Dyadic::from_f32(b));
+            assert_eq!(got, want, "{a} + {b}");
+        });
+    }
+
+    #[test]
+    fn add_extreme_alignment_gap() {
+        // 1.0 + 2^-200: rounds to 1.0, but must not panic or lose sign.
+        let one = Dyadic::from_f32(1.0);
+        let tiny = Dyadic { num: 1, exp: -200 };
+        assert_eq!(add_dyadic_rne(one, tiny), 1.0);
+        // -2^-200 nudges a tie downward: (1 + 2^-24) - 2^-200 rounds to
+        // 1.0 either way (no longer a tie, rounds down to 1.0).
+        let tie = Dyadic { num: (1i128 << 24) + 1, exp: -24 };
+        let eps_neg = Dyadic { num: -1, exp: -300 };
+        // exact value just below the tie -> 1.0
+        assert_eq!(add_dyadic_rne(tie, eps_neg), 1.0);
+        // just above the tie -> 1 + 2^-23
+        let eps_pos = Dyadic { num: 1, exp: -300 };
+        assert_eq!(add_dyadic_rne(tie, eps_pos), 1.0 + 2.0f32.powi(-23));
+    }
+
+    #[test]
+    fn mxdotp_all_ones_e4m3() {
+        // 8 × (1.0 · 1.0) with unit scales + acc 0 = 8.
+        let one = E4M3.encode(1.0) as u8;
+        let pa = [one; 8];
+        assert_eq!(mxdotp_exact(&E4M3, &pa, &pa, 127, 127, 0.0), 8.0);
+        // scales 2^3 · 2^-1 -> 8 * 4 = 32
+        assert_eq!(mxdotp_exact(&E4M3, &pa, &pa, 130, 126, 0.0), 32.0);
+        // accumulate
+        assert_eq!(mxdotp_exact(&E4M3, &pa, &pa, 127, 127, -8.0), 0.0);
+    }
+
+    #[test]
+    fn mxdotp_subnormal_products() {
+        // min subnormal e4m3 = 2^-9; product = 2^-18; 8 of them = 2^-15.
+        let sub = 0x01u8; // +min subnormal
+        let pa = [sub; 8];
+        let got = mxdotp_exact(&E4M3, &pa, &pa, 127, 127, 0.0);
+        assert_eq!(got, 2.0f32.powi(-15));
+    }
+
+    #[test]
+    fn mxdotp_cancellation_is_exact() {
+        // (+max)·(+1) + (-max)·(+1) + ... cancels exactly; remaining
+        // tiny term survives — single rounding keeps it.
+        let max = E4M3.encode(448.0) as u8;
+        let nmax = E4M3.encode(-448.0) as u8;
+        let one = E4M3.encode(1.0) as u8;
+        let sub = 0x01u8; // 2^-9
+        let pa = [max, nmax, sub, 0, 0, 0, 0, 0];
+        let pb = [one, one, sub, 0, 0, 0, 0, 0];
+        let got = mxdotp_exact(&E4M3, &pa, &pb, 127, 127, 0.0);
+        assert_eq!(got, 2.0f32.powi(-18));
+    }
+
+    #[test]
+    fn mxdotp_matches_f64_reference_property() {
+        // For moderate scales, f64 computes the same exact sum (products
+        // are tiny integers; f64 has 53 bits — exact for k=8 FP8
+        // products), so rounding f64 -> f32 equals the datapath.
+        for spec in [&E4M3, &E5M2] {
+            property_cases(2000, 0xD0, |rng| {
+                let pats = spec.finite_patterns();
+                let mut pa = [0u8; 8];
+                let mut pb = [0u8; 8];
+                for i in 0..8 {
+                    pa[i] = pats[rng.below(pats.len() as u64) as usize] as u8;
+                    pb[i] = pats[rng.below(pats.len() as u64) as usize] as u8;
+                }
+                let xa = (127 + rng.range_i64(-10, 10)) as u8;
+                let xb = (127 + rng.range_i64(-10, 10)) as u8;
+                let acc = rng.normal_f32();
+                let got = mxdotp_exact(spec, &pa, &pb, xa, xb, acc);
+                let mut s = 0.0f64;
+                for i in 0..8 {
+                    s += spec.decode(pa[i] as u16) as f64 * spec.decode(pb[i] as u16) as f64;
+                }
+                let want =
+                    (acc as f64 + s * 2.0f64.powi(xa as i32 + xb as i32 - 254)) as f32;
+                assert_eq!(got, want, "{}: {pa:?}·{pb:?} x {xa},{xb} + {acc}", spec.name);
+            });
+        }
+    }
+
+    #[test]
+    fn golden_vectors_from_python() {
+        // Cross-layer contract: the Python exact-rational generator and
+        // this datapath must agree bit-for-bit on every vector.
+        let text = include_str!("../../tests/data/golden_vectors.txt");
+        let mut n = 0;
+        for line in text.lines() {
+            if !line.starts_with("vec ") {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            let spec = match f[1] {
+                "e4m3" => &E4M3,
+                "e5m2" => &E5M2,
+                other => panic!("unknown format {other}"),
+            };
+            let parse8 = |s: &str| {
+                let mut out = [0u8; 8];
+                for i in 0..8 {
+                    out[i] = u8::from_str_radix(&s[2 * i..2 * i + 2], 16).unwrap();
+                }
+                out
+            };
+            let pa = parse8(f[2]);
+            let pb = parse8(f[3]);
+            let xa: u8 = f[4].parse().unwrap();
+            let xb: u8 = f[5].parse().unwrap();
+            let acc = f32::from_bits(u32::from_str_radix(f[6], 16).unwrap());
+            let want = f32::from_bits(u32::from_str_radix(f[7], 16).unwrap());
+            let got = mxdotp_exact(spec, &pa, &pb, xa, xb, acc);
+            assert!(
+                got == want || (got.is_nan() && want.is_nan()),
+                "vector {n}: got {got} ({:#010x}), want {want} ({:#010x})",
+                got.to_bits(),
+                want.to_bits()
+            );
+            n += 1;
+        }
+        assert_eq!(n, 512, "expected 512 golden vectors");
+    }
+}

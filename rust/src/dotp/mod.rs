@@ -1,0 +1,33 @@
+//! Bit-accurate model of the MXDOTP dot-product-accumulate datapath.
+//!
+//! The paper's unit (§III-A, Fig. 1a) computes, per issue,
+//!
+//! ```text
+//! acc_out = acc_in + 2^(Xa-127) · 2^(Xb-127) · Σ_{i=1..8} Pa_i · Pb_i
+//! ```
+//!
+//! with the *early accumulation* scheme of Lutz et al.: both FP8
+//! formats are decoded into a common FP9 (E5M3) form (lossless), the
+//! eight products and the shifted FP32 accumulator are summed in a
+//! 95-bit fixed-point register anchored at bit 34, and a single
+//! round-to-nearest-even conversion produces the FP32 result. Because
+//! the window is wide enough for every bit of every addend, the sum is
+//! **exact** and the result is uniquely determined: it equals the
+//! exact rational value rounded once to FP32.
+//!
+//! * [`exact`] — the datapath semantics as exact integer arithmetic +
+//!   one RNE rounding (what the hardware computes, by construction);
+//! * [`window`] — the 95-bit / anchor-34 fixed-point sizing analysis
+//!   that *proves* the paper's §III-A claim for this implementation;
+//! * [`unit`] — the stateful unit model (format CSR, special-value
+//!   semantics, pipeline occupancy) used by the Snitch FPU model;
+//! * [`baselines`] — the comparison units of Table III (ExSdotp-style
+//!   FP16-accumulating dot product, software FP8→FP32 FMA sequences).
+
+pub mod baselines;
+pub mod exact;
+pub mod unit;
+pub mod window;
+
+pub use exact::mxdotp_exact;
+pub use unit::{Fp8Format, MxDotpUnit, PIPELINE_STAGES};

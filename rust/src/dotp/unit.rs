@@ -1,0 +1,291 @@
+//! The MXDOTP functional unit: format CSR, special values, pipeline.
+//!
+//! Wraps the exact datapath ([`super::exact`]) with the architectural
+//! behaviour of the unit integrated into the Snitch FPU (§III-B):
+//!
+//! * the FP8 element format (E5M2 vs E4M3) is selected by a dedicated
+//!   CSR written before the compute loop;
+//! * IEEE special handling: NaN anywhere (elements, scales, the
+//!   accumulator) produces NaN; E5M2 infinities propagate with sign,
+//!   and opposite infinities (or inf · 0) produce NaN;
+//! * the unit is pipelined with [`PIPELINE_STAGES`] register levels
+//!   (three, §IV-A: chosen to sustain ~1 GHz in 12 nm) and accepts one
+//!   issue per cycle — the latency/throughput contract the Snitch FPU
+//!   timing model enforces.
+
+use crate::formats::minifloat::{FloatSpec, E4M3, E5M2};
+
+/// Pipeline register levels of the implemented unit (§IV-A).
+pub const PIPELINE_STAGES: u32 = 3;
+
+/// The FP8 format CSR value (Table II discussion: "a dedicated CSR
+/// [...] allows configuring the format prior to computation").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Fp8Format {
+    #[default]
+    E4m3,
+    E5m2,
+}
+
+impl Fp8Format {
+    pub fn spec(self) -> &'static FloatSpec {
+        match self {
+            Fp8Format::E4m3 => &E4M3,
+            Fp8Format::E5m2 => &E5M2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Fp8Format::E4m3 => "e4m3",
+            Fp8Format::E5m2 => "e5m2",
+        }
+    }
+}
+
+/// The MXDOTP dot-product-accumulate unit.
+///
+/// Stateless apart from the format CSR; `execute` computes one
+/// instruction's result. Cycle-level behaviour (issue/stall/writeback)
+/// is modeled by the Snitch FPU around this functional core.
+#[derive(Clone, Debug, Default)]
+pub struct MxDotpUnit {
+    pub fmt: Fp8Format,
+    /// Instructions executed (perf counter mirrored in the core's CSRs).
+    pub issued: u64,
+}
+
+impl MxDotpUnit {
+    pub fn new(fmt: Fp8Format) -> Self {
+        Self { fmt, issued: 0 }
+    }
+
+    /// Write the format CSR.
+    pub fn set_format(&mut self, fmt: Fp8Format) {
+        self.fmt = fmt;
+    }
+
+    /// Execute one `mxdotp`: 8-element scaled dot product + accumulate.
+    ///
+    /// `pa`/`pb`: packed element bit patterns (one 64-bit register
+    /// each); `xa`/`xb`: E8M0 biased scale exponents; `acc`: FP32
+    /// accumulator in. Returns the FP32 accumulator out.
+    pub fn execute(&mut self, pa: u64, pb: u64, xa: u8, xb: u8, acc: f32) -> f32 {
+        self.issued += 1;
+        let a = unpack8(pa);
+        let b = unpack8(pb);
+        self.execute_unpacked(&a, &b, xa, xb, acc)
+    }
+
+    /// Execute on already-unpacked element bytes.
+    pub fn execute_unpacked(
+        &mut self,
+        pa: &[u8; 8],
+        pb: &[u8; 8],
+        xa: u8,
+        xb: u8,
+        acc: f32,
+    ) -> f32 {
+        let spec = self.fmt.spec();
+        let lut = crate::dotp::exact::DecodeLut::for_spec(spec);
+        // Scale NaN (E8M0 0xFF) or accumulator NaN poisons the result.
+        if xa == 0xFF || xb == 0xFF || acc.is_nan() {
+            return f32::NAN;
+        }
+        // Fast path: one OR over the special flags (always 0 for E4M3
+        // except NaN patterns).
+        let mut any_special = 0u8;
+        for i in 0..8 {
+            any_special |= lut.special[pa[i] as usize] | lut.special[pb[i] as usize];
+        }
+        if any_special != 0 {
+            // Slow path: full IEEE special semantics.
+            let mut pos_inf = false;
+            let mut neg_inf = false;
+            for i in 0..8 {
+                for (x, y) in [(pa[i], pb[i]), (pb[i], pa[i])] {
+                    if spec.is_nan(x as u16) {
+                        return f32::NAN;
+                    }
+                    if spec.is_inf(x as u16) {
+                        let vy = spec.decode(y as u16);
+                        if vy == 0.0 || vy.is_nan() {
+                            return f32::NAN; // inf · 0 (or inf · NaN)
+                        }
+                        let sign_x = (x >> 7) & 1 == 1;
+                        let neg = sign_x ^ vy.is_sign_negative();
+                        if neg {
+                            neg_inf = true;
+                        } else {
+                            pos_inf = true;
+                        }
+                    }
+                }
+            }
+            match (pos_inf, neg_inf) {
+                (true, true) => return f32::NAN,
+                (true, false) => {
+                    return if acc == f32::NEG_INFINITY { f32::NAN } else { f32::INFINITY }
+                }
+                (false, true) => {
+                    return if acc == f32::INFINITY { f32::NAN } else { f32::NEG_INFINITY }
+                }
+                _ => {}
+            }
+        }
+        if acc.is_infinite() {
+            return acc;
+        }
+        crate::dotp::exact::mxdotp_exact_lut(lut, pa, pb, xa, xb, acc)
+    }
+}
+
+/// Unpack a 64-bit register into 8 element bytes (little-endian lane
+/// order: lane 0 in bits 7:0, matching Snitch's packed-SIMD layout).
+pub fn unpack8(reg: u64) -> [u8; 8] {
+    reg.to_le_bytes()
+}
+
+/// Pack 8 element bytes into a 64-bit register (lane 0 in bits 7:0).
+pub fn pack8(bytes: &[u8; 8]) -> u64 {
+    u64::from_le_bytes(*bytes)
+}
+
+/// Pack four (xa, xb) scale pairs into one 64-bit register; the
+/// instruction's 2-bit `sl` field (Table II, bits 26-25) selects one
+/// pair. Pair `i` occupies bytes (2i, 2i+1) = (xa, xb).
+pub fn pack_scales(pairs: &[(u8, u8); 4]) -> u64 {
+    let mut b = [0u8; 8];
+    for (i, &(xa, xb)) in pairs.iter().enumerate() {
+        b[2 * i] = xa;
+        b[2 * i + 1] = xb;
+    }
+    u64::from_le_bytes(b)
+}
+
+/// Extract the (xa, xb) pair selected by `sl` from a scale register.
+pub fn select_scales(reg: u64, sl: u8) -> (u8, u8) {
+    debug_assert!(sl < 4);
+    let b = reg.to_le_bytes();
+    (b[2 * sl as usize], b[2 * sl as usize + 1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::dot::dot_block;
+    use crate::formats::{E8m0, ElemFormat};
+    use crate::rng::property_cases;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let bytes = [1u8, 2, 3, 4, 5, 6, 7, 8];
+        assert_eq!(unpack8(pack8(&bytes)), bytes);
+        assert_eq!(pack8(&bytes), 0x0807060504030201);
+    }
+
+    #[test]
+    fn scale_packing_and_selection() {
+        let pairs = [(10u8, 20u8), (30, 40), (50, 60), (70, 80)];
+        let reg = pack_scales(&pairs);
+        for (i, &(xa, xb)) in pairs.iter().enumerate() {
+            assert_eq!(select_scales(reg, i as u8), (xa, xb));
+        }
+    }
+
+    #[test]
+    fn format_csr_switches_interpretation() {
+        // The same bit pattern decodes differently: 0x40 is 2.0 in E4M3
+        // (e=8,m=0 -> 2^1) and 0.125 in E5M2 (e=16... check: e=0b10000=16,
+        // bias 15 -> 2^1 = 2.0 too). Use 0x08: E4M3 e=1,m=0 -> 2^-6;
+        // E5M2 e=2,m=0 -> 2^-13.
+        let mut u = MxDotpUnit::new(Fp8Format::E4m3);
+        let pa = pack8(&[0x08, 0, 0, 0, 0, 0, 0, 0]);
+        let one_e4m3 = pack8(&[ElemFormat::E4M3.encode(1.0), 0, 0, 0, 0, 0, 0, 0]);
+        let r1 = u.execute(pa, one_e4m3, 127, 127, 0.0);
+        assert_eq!(r1, 2.0f32.powi(-6));
+        u.set_format(Fp8Format::E5m2);
+        let one_e5m2 = pack8(&[ElemFormat::E5M2.encode(1.0), 0, 0, 0, 0, 0, 0, 0]);
+        let r2 = u.execute(pa, one_e5m2, 127, 127, 0.0);
+        assert_eq!(r2, 2.0f32.powi(-13));
+    }
+
+    #[test]
+    fn nan_propagation() {
+        let mut u = MxDotpUnit::new(Fp8Format::E4m3);
+        let nan = 0x7Fu8; // E4M3 NaN
+        let pa = pack8(&[nan, 0, 0, 0, 0, 0, 0, 0]);
+        assert!(u.execute(pa, 0, 127, 127, 0.0).is_nan());
+        // scale NaN
+        assert!(u.execute(0, 0, 0xFF, 127, 0.0).is_nan());
+        assert!(u.execute(0, 0, 127, 0xFF, 0.0).is_nan());
+        // acc NaN
+        assert!(u.execute(0, 0, 127, 127, f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn e5m2_infinity_semantics() {
+        let mut u = MxDotpUnit::new(Fp8Format::E5m2);
+        let inf = 0b0_11111_00u8;
+        let ninf = 0b1_11111_00u8;
+        let one = ElemFormat::E5M2.encode(1.0);
+        // inf · 1 = inf
+        let pa = pack8(&[inf, 0, 0, 0, 0, 0, 0, 0]);
+        let pb = pack8(&[one, 0, 0, 0, 0, 0, 0, 0]);
+        assert_eq!(u.execute(pa, pb, 127, 127, 0.0), f32::INFINITY);
+        // inf · 0 = NaN
+        assert!(u.execute(pa, 0, 127, 127, 0.0).is_nan());
+        // inf - inf across lanes = NaN
+        let pa2 = pack8(&[inf, ninf, 0, 0, 0, 0, 0, 0]);
+        let pb2 = pack8(&[one, one, 0, 0, 0, 0, 0, 0]);
+        assert!(u.execute(pa2, pb2, 127, 127, 0.0).is_nan());
+        // inf + acc(-inf) = NaN
+        assert!(u.execute(pa, pb, 127, 127, f32::NEG_INFINITY).is_nan());
+        // -inf propagates
+        let pa3 = pack8(&[ninf, 0, 0, 0, 0, 0, 0, 0]);
+        assert_eq!(u.execute(pa3, pb, 127, 127, 0.0), f32::NEG_INFINITY);
+        // infinite accumulator dominates finite products
+        let fin = pack8(&[one; 8]);
+        assert_eq!(u.execute(fin, fin, 127, 127, f32::INFINITY), f32::INFINITY);
+    }
+
+    #[test]
+    fn matches_spec_dot_for_finite_inputs() {
+        // Against the formats:: FP32 reference the results agree to one
+        // rounding (here products are exact in f32 for small k, so they
+        // agree exactly when the f32 sum happens to be exact; use f64
+        // bound instead): |unit - f64_ref| <= ulp.
+        property_cases(500, 0x17, |rng| {
+            let fmt = if rng.bool() { Fp8Format::E4m3 } else { Fp8Format::E5m2 };
+            let ef = if fmt == Fp8Format::E4m3 { ElemFormat::E4M3 } else { ElemFormat::E5M2 };
+            let mut u = MxDotpUnit::new(fmt);
+            let mut pa = [0u8; 8];
+            let mut pb = [0u8; 8];
+            for i in 0..8 {
+                pa[i] = ef.encode(rng.normal_f32() * 8.0);
+                pb[i] = ef.encode(rng.normal_f32() * 8.0);
+            }
+            let xa = (127 + rng.range_i64(-6, 6)) as u8;
+            let xb = (127 + rng.range_i64(-6, 6)) as u8;
+            let got = u.execute_unpacked(&pa, &pb, xa, xb, 0.5);
+            let want = dot_block(
+                ef,
+                &pa,
+                E8m0(xa),
+                &pb,
+                E8m0(xb),
+            ) + 0.5;
+            let tol = want.abs().max(1e-20) * 1e-5;
+            assert!((got - want).abs() <= tol, "{got} vs {want}");
+        });
+    }
+
+    #[test]
+    fn issue_counter() {
+        let mut u = MxDotpUnit::new(Fp8Format::E4m3);
+        for _ in 0..5 {
+            u.execute(0, 0, 127, 127, 0.0);
+        }
+        assert_eq!(u.issued, 5);
+    }
+}

@@ -1,0 +1,121 @@
+//! Calibration constants, each anchored to a quantity the paper
+//! publishes. Changing an anchor here changes every downstream report;
+//! nothing else in the crate hard-codes a silicon number.
+//!
+//! Technology point: GLOBALFOUNDRIES 12 nm FinFET, TT corner,
+//! 0.8 V / 25 °C, 1 GHz cluster clock (§IV-A).
+
+// ---------------------------------------------------------------------
+// Area anchors (§IV-A + Table III).
+// ---------------------------------------------------------------------
+
+/// Total cluster area with MXDOTP-extended cores, in MGE (§IV-A).
+pub const CLUSTER_MGE: f64 = 4.89;
+/// Cluster-level area increase over the baseline cluster (§IV-A: 5.1 %).
+pub const CLUSTER_OVERHEAD: f64 = 0.051;
+/// MXDOTP's share of the *extended* core complex (§IV-A: 9.5 %).
+pub const MXDOTP_SHARE_OF_CORE: f64 = 0.095;
+/// MXDOTP's share of the *extended* FPU (§IV-A: 17 %).
+pub const MXDOTP_SHARE_OF_FPU: f64 = 0.17;
+/// The cluster's die area in mm² (Table III, this work, cluster row).
+pub const CLUSTER_MM2: f64 = 0.59;
+/// The standalone unit's area in mm² (Table III, this work, unit row).
+pub const UNIT_MM2: f64 = 3.15e-3;
+
+/// Fig. 3 core-complex composition (fractions of the *extended* core
+/// complex; MXDOTP_SHARE_OF_CORE is carved out of the FPU slice).
+/// Shares follow the Snitch publications' breakdowns: the FP subsystem
+/// dominates, the scalar core is tiny.
+pub const CORE_SNITCH: f64 = 0.10;
+pub const CORE_ICACHE: f64 = 0.15;
+pub const CORE_SSRS: f64 = 0.06;
+pub const CORE_FPU: f64 = 0.56; // includes the MXDOTP unit (0.095)
+pub const CORE_FP_RF: f64 = 0.08;
+pub const CORE_FREP: f64 = 0.02;
+pub const CORE_OTHER: f64 = 0.03;
+
+/// Adding a 4th FP RF read port would have cost ~12 % of the FP RF
+/// (§III-B) — the alternative MXDOTP avoids by streaming scales on an
+/// SSR. Kept for the ablation report.
+pub const RF_4TH_PORT_OVERHEAD: f64 = 0.12;
+
+// ---------------------------------------------------------------------
+// Frequency / voltage anchors.
+// ---------------------------------------------------------------------
+
+/// Cluster clock at the TT corner used for all power numbers (GHz).
+pub const FREQ_GHZ: f64 = 1.0;
+/// Standalone-unit clock reached under TT (§IV-A: 1.09 GHz).
+pub const UNIT_FREQ_GHZ: f64 = 1.09;
+/// Supply voltage of the reported corner.
+pub const VDD: f64 = 0.8;
+
+// ---------------------------------------------------------------------
+// Power anchors (§IV-A, §IV-C, Table III).
+// ---------------------------------------------------------------------
+
+/// Idle (clock running, no issue) power of the MXDOTP-extended cluster
+/// in mW. Chosen so that the three kernels' absolute powers land on the
+/// paper's efficiency anchors (302 / 356 GFLOPS/W etc.); the MXDOTP
+/// unit contributes IDLE_OVERHEAD of it.
+pub const IDLE_MW: f64 = 92.0;
+/// Idle-power overhead of the MXDOTP unit (§IV-A: 1.9 %).
+pub const IDLE_OVERHEAD: f64 = 0.019;
+
+/// Per-instruction-class dynamic energies in pJ (TT, 0.8 V). These are
+/// the calibration knobs: they were fit so the simulated kernels hit
+/// the paper's efficiency anchors — 356 GFLOPS/W MXFP8, 3.0–3.2× over
+/// FP32, 10.4–12.5× over FP8-to-FP32 — and they stay within published
+/// CVFPU/Snitch energy-per-op ballparks.
+pub mod pj {
+    /// One `mxdotp`: 8 FP8 products + 95-bit accumulate + RNE + RF write,
+    /// *system level* — includes operand delivery, issue and writeback.
+    pub const MXDOTP: f64 = 24.0;
+    /// The standalone datapath's energy per issue (Table III unit row:
+    /// 17.4 GFLOPS / 2035 GFLOPS/W at 1.09 GHz implies ~7.6 pJ). The
+    /// difference to MXDOTP is the core-integration overhead (register
+    /// reads, SSR muxing, writeback) that unit-level papers exclude.
+    pub const MXDOTP_UNIT: f64 = 7.6;
+    /// One 2-way SIMD FP32 `vfmac.s` (2 FMAs).
+    pub const VFMAC: f64 = 18.0;
+    /// One scalar FP32 FMA.
+    pub const FMA_S: f64 = 9.0;
+    /// Scalar FP32 add/mul/vfsum.
+    pub const ADDMUL: f64 = 5.0;
+    /// FP8->FP32 / E8M0->FP32 convert.
+    pub const CVT: f64 = 4.0;
+    /// Register move / pack.
+    pub const MOVE: f64 = 2.0;
+    /// FP load/store (SPM access + LSU).
+    pub const FP_MEM: f64 = 4.0;
+    /// One 64-bit word through an SSR streamer (SPM read + AGU + FIFO).
+    pub const SSR_WORD: f64 = 3.0;
+    /// Scalar integer instruction.
+    pub const INT: f64 = 0.5;
+    /// Scalar load/store.
+    pub const INT_MEM: f64 = 2.0;
+    /// DMA, per 64-byte beat.
+    pub const DMA_BEAT: f64 = 12.0;
+}
+
+// ---------------------------------------------------------------------
+// Published efficiency anchors used by the calibration tests.
+// ---------------------------------------------------------------------
+
+/// MXFP8 kernel peak efficiency (GFLOPS/W, §IV-C).
+pub const ANCHOR_MX_GFLOPS_W: f64 = 356.0;
+/// MXFP8 peak throughput (GFLOPS, §IV-C).
+pub const ANCHOR_MX_GFLOPS: f64 = 102.0;
+/// Energy-efficiency ratio over FP32 (§IV-C: 3.0–3.2×).
+pub const ANCHOR_EFF_VS_FP32: (f64, f64) = (3.0, 3.2);
+/// Energy-efficiency ratio over FP8-to-FP32 (§IV-C: 10.4–12.5×).
+pub const ANCHOR_EFF_VS_SW: (f64, f64) = (10.4, 12.5);
+/// Speedup over FP32 (§IV-C: 3.1–3.4×).
+pub const ANCHOR_SPEEDUP_FP32: (f64, f64) = (3.1, 3.4);
+/// Speedup over FP8-to-FP32 (§IV-C: 20.9–25.0×).
+pub const ANCHOR_SPEEDUP_SW: (f64, f64) = (20.9, 25.0);
+/// Fraction of ideal throughput reached (§IV-C: 79.7 %).
+pub const ANCHOR_UTILIZATION: f64 = 0.797;
+/// Unit-level efficiency (Table III: 2035 GFLOPS/W at 17.4 GFLOPS).
+pub const ANCHOR_UNIT_GFLOPS_W: f64 = 2035.0;
+pub const ANCHOR_UNIT_GFLOPS: f64 = 17.4;

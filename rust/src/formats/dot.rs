@@ -1,0 +1,205 @@
+//! The MX spec's dot-product semantics (Eq. 1 and Eq. 2 of the paper).
+//!
+//! `Dot` multiplies two MX blocks element-wise, sums, and applies both
+//! block scales; `DotGeneral` sums `n` block dots with FP32
+//! accumulation. The spec leaves internal precision implementation-
+//! defined; this module provides the *FP32-accumulation* reference that
+//! mirrors the Python oracle (`ref.py`) — the bit-accurate hardware
+//! semantics (exact sum, single rounding) live in [`crate::dotp`].
+
+use super::e8m0::{mul_pow2, E8m0};
+use super::quantize::{MxMatrix, MxVector, ScaleAxis};
+use super::ElemFormat;
+
+/// Eq. (1): one scaled block dot product, FP32 arithmetic.
+pub fn dot_block(fmt: ElemFormat, pa: &[u8], xa: E8m0, pb: &[u8], xb: E8m0) -> f32 {
+    assert_eq!(pa.len(), pb.len());
+    let mut s = 0.0f32;
+    for (&a, &b) in pa.iter().zip(pb) {
+        s += fmt.decode(a) * fmt.decode(b);
+    }
+    mul_pow2(s, xa.exponent() + xb.exponent())
+}
+
+/// Eq. (2): the general dot product of two MX vectors (same layout),
+/// FP32 accumulation across blocks.
+pub fn dot_general(a: &MxVector, b: &MxVector) -> f32 {
+    assert_eq!(a.fmt, b.fmt, "mixed element formats");
+    assert_eq!(a.block_size, b.block_size, "mismatched block sizes");
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    let bs = a.block_size;
+    let mut acc = 0.0f32;
+    for i in 0..a.num_blocks() {
+        acc += dot_block(
+            a.fmt,
+            &a.elems[i * bs..(i + 1) * bs],
+            a.scales[i],
+            &b.elems[i * bs..(i + 1) * bs],
+            b.scales[i],
+        );
+    }
+    acc
+}
+
+/// Reference MX matrix multiplication: `C = A · B` with A (M×K,
+/// Row-axis scales) and B (K×N, Col-axis scales), FP32 accumulation.
+/// This is the semantics all three Fig. 2 kernels must agree on.
+pub fn matmul_ref(a: &MxMatrix, b: &MxMatrix) -> Vec<f32> {
+    assert_eq!(a.axis, ScaleAxis::Row, "A must be quantized along K (rows of scales)");
+    assert_eq!(b.axis, ScaleAxis::Col, "B must be quantized along K (cols of scales)");
+    assert_eq!(a.cols, b.rows, "inner dimensions differ");
+    assert_eq!(a.fmt, b.fmt);
+    assert_eq!(a.block_size, b.block_size);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let bs = a.block_size;
+    let nb = k / bs;
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for blk in 0..nb {
+                let mut s = 0.0f32;
+                for t in 0..bs {
+                    let kk = blk * bs + t;
+                    s += a.elem_value(i, kk) * b.elem_value(kk, j);
+                }
+                let se = a.scale(i, blk).exponent() + b.scale(j, blk).exponent();
+                acc += mul_pow2(s, se);
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Plain FP32 matmul (the Fig. 4 FP32 baseline's semantics).
+pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += a[i * k + t] * b[t * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Quantize two f32 matrices and run the MX reference matmul —
+/// the end-to-end primitive mirroring `ref.quantize_matmul_ref`.
+pub fn quantize_matmul_ref(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    fmt: ElemFormat,
+    block_size: usize,
+) -> Vec<f32> {
+    let qa = MxMatrix::quantize(a, m, k, fmt, block_size, ScaleAxis::Row);
+    let qb = MxMatrix::quantize(b, k, n, fmt, block_size, ScaleAxis::Col);
+    matmul_ref(&qa, &qb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{property_cases, XorShift};
+
+    #[test]
+    fn dot_block_known_values() {
+        // pa = [1,1,...], pb = [1,1,...], scales 2^2 and 2^-1 -> 8 * 2 = 16.
+        let fmt = ElemFormat::E4M3;
+        let ones: Vec<u8> = vec![fmt.encode(1.0); 8];
+        let d = dot_block(fmt, &ones, E8m0::from_exponent(2), &ones, E8m0::from_exponent(-1));
+        assert_eq!(d, 16.0);
+    }
+
+    #[test]
+    fn dot_general_matches_dequantized_dot() {
+        property_cases(50, 0xD07, |rng| {
+            let fmt = if rng.bool() { ElemFormat::E4M3 } else { ElemFormat::E5M2 };
+            let n = 32 * (1 + rng.below(4) as usize);
+            let va = rng.normal_vec(n, 2.0);
+            let vb = rng.normal_vec(n, 0.5);
+            let qa = MxVector::quantize(&va, fmt, 32);
+            let qb = MxVector::quantize(&vb, fmt, 32);
+            let got = dot_general(&qa, &qb);
+            let da = qa.dequantize();
+            let db = qb.dequantize();
+            let want: f64 = da.iter().zip(&db).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let scale: f64 = da.iter().zip(&db).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+            assert!(
+                (got as f64 - want).abs() <= scale.max(1e-30) * 1e-5,
+                "{fmt}: got {got}, want {want}"
+            );
+        });
+    }
+
+    #[test]
+    fn matmul_ref_matches_scalar_dot_general() {
+        let mut rng = XorShift::new(21);
+        let (m, k, n) = (4, 64, 3);
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let fmt = ElemFormat::E4M3;
+        let qa = MxMatrix::quantize(&a, m, k, fmt, 32, ScaleAxis::Row);
+        let qb = MxMatrix::quantize(&b, k, n, fmt, 32, ScaleAxis::Col);
+        let c = matmul_ref(&qa, &qb);
+        // cross-check element (i, j) via MxVector dot_general
+        for i in 0..m {
+            for j in 0..n {
+                let row: Vec<f32> = (0..k).map(|t| a[i * k + t]).collect();
+                let col: Vec<f32> = (0..k).map(|t| b[t * n + j]).collect();
+                let va = MxVector::quantize(&row, fmt, 32);
+                let vb = MxVector::quantize(&col, fmt, 32);
+                let d = dot_general(&va, &vb);
+                let got = c[i * n + j];
+                assert!(
+                    (d - got).abs() <= 1e-5 * d.abs().max(1.0),
+                    "({i},{j}): {got} vs {d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_matmul_close_to_f32() {
+        // MX quantization is a drop-in replacement: error small vs FP32.
+        let mut rng = XorShift::new(33);
+        let (m, k, n) = (16, 128, 16);
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let exact = matmul_f32(&a, &b, m, k, n);
+        for fmt in [ElemFormat::E4M3, ElemFormat::E5M2] {
+            let q = quantize_matmul_ref(&a, &b, m, k, n, fmt, 32);
+            let num: f64 = q
+                .iter()
+                .zip(&exact)
+                .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                .sum();
+            let den: f64 = exact.iter().map(|&y| (y as f64).powi(2)).sum();
+            let rel = (num / den).sqrt();
+            assert!(rel < 0.09, "{fmt}: rel err {rel}"); // e5m2: 2 mantissa bits -> ~7.4%
+        }
+    }
+
+    #[test]
+    fn zero_matrices() {
+        let z = vec![0.0f32; 64 * 64];
+        let c = quantize_matmul_ref(&z, &z, 64, 64, 64, ElemFormat::E4M3, 32);
+        assert!(c.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimensions differ")]
+    fn mismatched_dims_panic() {
+        let a = MxMatrix::quantize(&vec![0.0; 4 * 32], 4, 32, ElemFormat::E4M3, 32, ScaleAxis::Row);
+        let b = MxMatrix::quantize(&vec![0.0; 64 * 2], 64, 2, ElemFormat::E4M3, 32, ScaleAxis::Col);
+        matmul_ref(&a, &b);
+    }
+}

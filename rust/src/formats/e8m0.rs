@@ -1,0 +1,159 @@
+//! E8M0 — the MX block-scale format.
+//!
+//! An 8-bit pure-exponent encoding: value = 2^(e - 127) for e in
+//! 0..=254, and e = 255 (0xFF) is NaN. There is no sign and no
+//! mantissa; every scale is a power of two, which is what makes MX
+//! dequantization exact and lets the hardware fold scaling into the
+//! exponent datapath of the dot-product unit.
+
+/// Exponent bias of E8M0.
+pub const BIAS: i32 = 127;
+/// Smallest representable exponent (2^-127).
+pub const EMIN: i32 = -127;
+/// Largest representable exponent (2^127).
+pub const EMAX: i32 = 127;
+/// The NaN encoding.
+pub const NAN: u8 = 0xFF;
+
+/// An E8M0 block scale (a biased power-of-two exponent).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct E8m0(pub u8);
+
+impl E8m0 {
+    /// The identity scale, 2^0.
+    pub const ONE: E8m0 = E8m0(BIAS as u8);
+
+    /// Construct from an unbiased exponent, clamping to the E8M0 range.
+    pub fn from_exponent(e: i32) -> Self {
+        E8m0((e.clamp(EMIN, EMAX) + BIAS) as u8)
+    }
+
+    /// The unbiased exponent. NaN reports 128 (out of band).
+    pub fn exponent(self) -> i32 {
+        if self.is_nan() {
+            128
+        } else {
+            self.0 as i32 - BIAS
+        }
+    }
+
+    /// Is this the NaN encoding?
+    pub fn is_nan(self) -> bool {
+        self.0 == NAN
+    }
+
+    /// The scale value as f64 (2^-127 underflows f32's normal range;
+    /// f64 keeps it exact).
+    pub fn value_f64(self) -> f64 {
+        if self.is_nan() {
+            f64::NAN
+        } else {
+            (2.0f64).powi(self.exponent())
+        }
+    }
+
+    /// The scale value as f32 (may be subnormal for exponents < -126).
+    pub fn value_f32(self) -> f32 {
+        self.value_f64() as f32
+    }
+}
+
+impl std::fmt::Display for E8m0 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_nan() {
+            write!(f, "E8M0(NaN)")
+        } else {
+            write!(f, "2^{}", self.exponent())
+        }
+    }
+}
+
+/// Multiply an f32 by 2^e exactly (barring final under/overflow), by
+/// splitting the shift into normal-range power-of-two factors. Mirrors
+/// `ref.mul_pow2` on the Python side.
+pub fn mul_pow2(x: f32, e: i32) -> f32 {
+    let e1 = e.clamp(-126, 127);
+    let r = e - e1;
+    let e2 = r.clamp(-126, 127);
+    let e3 = r - e2;
+    debug_assert!((-126..=127).contains(&e3));
+    x * pow2(e1) * pow2(e2) * pow2(e3)
+}
+
+/// 2^e for e in [-126, 127], exact via bit assembly.
+pub fn pow2(e: i32) -> f32 {
+    debug_assert!((-126..=127).contains(&e), "pow2 exponent {e} out of normal range");
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// floor(log2 |x|) for positive finite normal x via the exponent field.
+/// Subnormal inputs report -127 (all MX element emins are far above).
+pub fn floor_log2(x: f32) -> i32 {
+    ((x.to_bits() >> 23) & 0xFF) as i32 - 127
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::property_cases;
+
+    #[test]
+    fn one_is_two_to_zero() {
+        assert_eq!(E8m0::ONE.exponent(), 0);
+        assert_eq!(E8m0::ONE.value_f32(), 1.0);
+    }
+
+    #[test]
+    fn full_range() {
+        assert_eq!(E8m0(0).exponent(), -127);
+        assert_eq!(E8m0(254).exponent(), 127);
+        assert_eq!(E8m0(0).value_f64(), (2.0f64).powi(-127));
+        assert_eq!(E8m0(254).value_f64(), (2.0f64).powi(127));
+    }
+
+    #[test]
+    fn nan_encoding() {
+        assert!(E8m0(0xFF).is_nan());
+        assert!(E8m0(0xFF).value_f64().is_nan());
+        assert!(!E8m0(0xFE).is_nan());
+    }
+
+    #[test]
+    fn from_exponent_clamps() {
+        assert_eq!(E8m0::from_exponent(-1000).exponent(), -127);
+        assert_eq!(E8m0::from_exponent(1000).exponent(), 127);
+        assert_eq!(E8m0::from_exponent(5).exponent(), 5);
+        assert!(!E8m0::from_exponent(128).is_nan());
+    }
+
+    #[test]
+    fn pow2_exact() {
+        for e in -126..=127 {
+            assert_eq!(pow2(e), (2.0f64).powi(e) as f32, "e={e}");
+        }
+    }
+
+    #[test]
+    fn floor_log2_matches_f32_binades() {
+        assert_eq!(floor_log2(1.0), 0);
+        assert_eq!(floor_log2(1.9), 0);
+        assert_eq!(floor_log2(2.0), 1);
+        assert_eq!(floor_log2(0.5), -1);
+        assert_eq!(floor_log2(57344.0), 15);
+        assert_eq!(floor_log2(3.0e38), 127);
+    }
+
+    #[test]
+    fn mul_pow2_matches_f64_property() {
+        property_cases(500, 0xE8, |rng| {
+            let x = rng.normal_f32();
+            let e = rng.range_i64(-254, 254) as i32;
+            let got = mul_pow2(x, e);
+            let want = (x as f64 * (2.0f64).powi(e)) as f32;
+            assert!(
+                got == want || (got.is_nan() && want.is_nan()),
+                "mul_pow2({x}, {e}) = {got}, want {want}"
+            );
+        });
+    }
+}

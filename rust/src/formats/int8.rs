@@ -1,0 +1,74 @@
+//! MXINT8 element format.
+//!
+//! The OCP spec's integer element format: a two's-complement 8-bit
+//! value with an implied scale of 2^-6, i.e. value = m / 64 for
+//! m in [-128, 127]. Largest magnitude 127/64 = 1.984375; the format's
+//! `emax` for the scale rule is 0 (values live in (-2, 2)).
+
+/// Largest representable magnitude (127/64).
+pub const MAX_VALUE: f32 = 1.984375;
+/// The implied fixed-point scale 2^-6.
+pub const IMPLIED_SCALE: f32 = 0.015625;
+
+/// RNE-quantize an f32 onto the MXINT8 grid; returns the two's-
+/// complement bit pattern. Saturates at ±(127/64); NaN maps to 0
+/// (spec leaves it implementation-defined; zero is the safe choice
+/// for dot products).
+pub fn encode(v: f32) -> u8 {
+    if v.is_nan() {
+        return 0;
+    }
+    let steps = (v as f64) * 64.0;
+    // round half to even
+    let r = steps.round_ties_even();
+    let m = r.clamp(-128.0, 127.0) as i32;
+    (m as i8) as u8
+}
+
+/// Decode a two's-complement MXINT8 pattern to its exact f32 value.
+pub fn decode(bits: u8) -> f32 {
+    (bits as i8) as f32 * IMPLIED_SCALE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::property_cases;
+
+    #[test]
+    fn grid_roundtrip() {
+        for m in -128i32..=127 {
+            let bits = (m as i8) as u8;
+            assert_eq!(encode(decode(bits)), bits);
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(decode(encode(1.0)), 1.0);
+        assert_eq!(decode(encode(-2.0)), -2.0); // -128 steps: exactly representable
+        assert_eq!(decode(encode(100.0)), MAX_VALUE);
+        assert_eq!(decode(encode(-100.0)), -2.0);
+        assert_eq!(decode(encode(0.0)), 0.0);
+        assert_eq!(decode(encode(f32::NAN)), 0.0);
+    }
+
+    #[test]
+    fn rne_ties() {
+        // 0.5 * 2^-6 steps: 0.0078125 * 64 = 0.5 -> ties to even 0.
+        assert_eq!(decode(encode(0.0078125)), 0.0);
+        // 1.5 steps ties to 2 steps.
+        assert_eq!(decode(encode(1.5 * IMPLIED_SCALE)), 2.0 * IMPLIED_SCALE);
+    }
+
+    #[test]
+    fn half_ulp_property() {
+        property_cases(300, 0x18, |rng| {
+            let v = rng.normal_f32();
+            let q = decode(encode(v));
+            if v.abs() < MAX_VALUE {
+                assert!((q - v).abs() <= IMPLIED_SCALE / 2.0 + 1e-9);
+            }
+        });
+    }
+}

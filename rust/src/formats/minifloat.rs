@@ -1,0 +1,458 @@
+//! Generic narrow floating-point formats (the MX element encodings).
+//!
+//! One [`FloatSpec`] describes a sign + exponent + mantissa layout plus
+//! its special-value convention; `encode` / `decode` are bit-exact
+//! (decode is exact because every element value is representable in
+//! f32; encode implements round-to-nearest-even with MX conversion
+//! semantics: overflow saturates to ±max-normal).
+//!
+//! The same machinery covers the FP9 (E5M3) *internal* format the
+//! MXDOTP datapath uses: every E5M2 and E4M3 value — including
+//! subnormals — is exactly representable in E5M3, which is why the
+//! datapath's decode stage is lossless (§III-A of the paper).
+
+/// How a format treats its top exponent / special encodings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Specials {
+    /// IEEE-like: top exponent encodes inf (mantissa 0) and NaN.
+    Ieee,
+    /// OFP8 E4M3-like: only S.1111.111 is NaN; no infinities.
+    MantissaNan,
+    /// No inf or NaN encodings at all (FP6/FP4 and the internal FP9).
+    None,
+}
+
+/// A narrow float format: 1 sign bit, `ebits` exponent, `mbits` mantissa.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FloatSpec {
+    pub name: &'static str,
+    pub ebits: u32,
+    pub mbits: u32,
+    pub specials: Specials,
+}
+
+/// FP8 E5M2 (IEEE-like binary8 wannabe; inf/NaN in the top binade).
+pub static E5M2: FloatSpec = FloatSpec { name: "e5m2", ebits: 5, mbits: 2, specials: Specials::Ieee };
+/// FP8 E4M3 (OFP8: S.1111.111 = NaN, no inf; max normal 448).
+pub static E4M3: FloatSpec = FloatSpec { name: "e4m3", ebits: 4, mbits: 3, specials: Specials::MantissaNan };
+/// FP6 E3M2 (no specials; max 28).
+pub static E3M2: FloatSpec = FloatSpec { name: "e3m2", ebits: 3, mbits: 2, specials: Specials::None };
+/// FP6 E2M3 (no specials; max 7.5).
+pub static E2M3: FloatSpec = FloatSpec { name: "e2m3", ebits: 2, mbits: 3, specials: Specials::None };
+/// FP4 E2M1 (no specials; max 6).
+pub static E2M1: FloatSpec = FloatSpec { name: "e2m1", ebits: 2, mbits: 1, specials: Specials::None };
+/// FP9 E5M3 — the MXDOTP datapath's lossless common element format.
+pub static FP9: FloatSpec = FloatSpec { name: "fp9", ebits: 5, mbits: 3, specials: Specials::Ieee };
+
+impl FloatSpec {
+    /// Total encoded width in bits.
+    pub const fn bits(&self) -> u32 {
+        1 + self.ebits + self.mbits
+    }
+
+    /// Exponent bias.
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.ebits - 1)) - 1
+    }
+
+    /// Largest exponent of a *normal* value.
+    pub const fn emax(&self) -> i32 {
+        let top = (1 << self.ebits) - 1;
+        match self.specials {
+            Specials::Ieee => top - 1 - self.bias(),
+            _ => top - self.bias(),
+        }
+    }
+
+    /// Exponent of the smallest normal value.
+    pub const fn emin(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Largest finite magnitude.
+    pub fn max_normal(&self) -> f32 {
+        let mut frac = 2.0 - (2.0f32).powi(-(self.mbits as i32));
+        if matches!(self.specials, Specials::MantissaNan) {
+            // The all-ones mantissa in the top binade is NaN.
+            frac = 2.0 - (2.0f32).powi(-(self.mbits as i32) + 1);
+        }
+        frac * (2.0f32).powi(self.emax())
+    }
+
+    /// Smallest positive subnormal magnitude.
+    pub fn min_subnormal(&self) -> f32 {
+        (2.0f32).powi(self.emin() - self.mbits as i32)
+    }
+
+    /// Bit mask of a full encoding (e.g. 0xFF for 8-bit formats).
+    pub const fn mask(&self) -> u16 {
+        (1u16 << self.bits()) - 1
+    }
+
+    const fn exp_mask(&self) -> u32 {
+        (1 << self.ebits) - 1
+    }
+
+    const fn man_mask(&self) -> u32 {
+        (1 << self.mbits) - 1
+    }
+
+    /// Is this bit pattern a NaN in this format?
+    pub fn is_nan(&self, bits: u16) -> bool {
+        let e = (bits as u32 >> self.mbits) & self.exp_mask();
+        let m = bits as u32 & self.man_mask();
+        match self.specials {
+            Specials::Ieee => e == self.exp_mask() && m != 0,
+            Specials::MantissaNan => e == self.exp_mask() && m == self.man_mask(),
+            Specials::None => false,
+        }
+    }
+
+    /// Is this bit pattern an infinity in this format?
+    pub fn is_inf(&self, bits: u16) -> bool {
+        let e = (bits as u32 >> self.mbits) & self.exp_mask();
+        let m = bits as u32 & self.man_mask();
+        matches!(self.specials, Specials::Ieee) && e == self.exp_mask() && m == 0
+    }
+
+    /// Decode a bit pattern to its exact f32 value.
+    ///
+    /// Every finite value of every MX element format is exactly
+    /// representable in f32 (mantissas ≤ 3 bits, exponents ≥ -17), so
+    /// this is lossless.
+    pub fn decode(&self, bits: u16) -> f32 {
+        let b = bits as u32 & self.mask() as u32;
+        let sign = if (b >> (self.ebits + self.mbits)) & 1 == 1 { -1.0f32 } else { 1.0 };
+        let e = (b >> self.mbits) & self.exp_mask();
+        let m = b & self.man_mask();
+        if self.is_nan(bits) {
+            return f32::NAN;
+        }
+        if self.is_inf(bits) {
+            return sign * f32::INFINITY;
+        }
+        let frac_den = (1u32 << self.mbits) as f32;
+        if e == 0 {
+            // subnormal: m / 2^mbits * 2^emin
+            sign * (m as f32 / frac_den) * (2.0f32).powi(self.emin())
+        } else {
+            sign * (1.0 + m as f32 / frac_den) * (2.0f32).powi(e as i32 - self.bias())
+        }
+    }
+
+    /// RNE-encode an f32 onto this format's grid (MX conversion
+    /// semantics: finite overflow **saturates** to ±max-normal; NaN maps
+    /// to the format's NaN if it has one, else to ±max-normal; ±inf maps
+    /// to the format's inf if it has one, else saturates).
+    ///
+    /// Implemented on integer significands — no float rounding anywhere
+    /// except the final exact reconstruction — so results are bit-exact
+    /// against the Python oracle.
+    pub fn encode(&self, v: f32) -> u16 {
+        let sign_bit = (v.to_bits() >> 31) as u8;
+        let sign_enc = (sign_bit as u32) << (self.ebits + self.mbits);
+        if v.is_nan() {
+            return match self.specials {
+                Specials::Ieee => {
+                    (sign_enc | (self.exp_mask() << self.mbits) | 1) as u16
+                }
+                Specials::MantissaNan => {
+                    (sign_enc | (self.exp_mask() << self.mbits) | self.man_mask()) as u16
+                }
+                Specials::None => self.encode_max(sign_bit),
+            };
+        }
+        if v.is_infinite() {
+            return match self.specials {
+                Specials::Ieee => (sign_enc | (self.exp_mask() << self.mbits)) as u16,
+                _ => self.encode_max(sign_bit),
+            };
+        }
+        let a = v.abs();
+        if a == 0.0 {
+            return sign_enc as u16;
+        }
+
+        // f32 fields.
+        let fb = a.to_bits();
+        let f_exp = ((fb >> 23) & 0xFF) as i32;
+        let f_man = fb & 0x7F_FFFF;
+        // value = sig * 2^(e - 23), sig a 24-bit integer (or less, subnormal)
+        let (sig, e) = if f_exp == 0 {
+            (f_man as u64, -126)
+        } else {
+            ((f_man | 0x80_0000) as u64, f_exp - 127)
+        };
+        // Binade of the value (floor(log2 a)); for f32 subnormals the
+        // value is far below any target grid's emin so the clamp below
+        // handles it uniformly.
+        let bin = if f_exp == 0 {
+            // normalize: top bit position of sig
+            -126 - (24 - (64 - sig.leading_zeros() as i32))
+        } else {
+            e
+        };
+        // Values whole binades above the top grid binade can never round
+        // down into range: saturate now (also keeps the shifts below
+        // narrow enough for u128).
+        if bin > self.emax() {
+            return self.encode_max(sign_bit);
+        }
+        // Quantum exponent: grid spacing is 2^(max(bin, emin) - mbits).
+        let qe = bin.max(self.emin()) - self.mbits as i32;
+        // steps = a / 2^qe = sig * 2^(e - 23 - qe): shift with RNE.
+        let shift = qe - (e - 23);
+        let steps = if shift <= 0 {
+            // exact left shift (value grid is coarser than f32 only when
+            // shift > 0; shift <= 0 can only overflow for huge values,
+            // which saturate below anyway — use u128 to stay exact)
+            let wide = (sig as u128) << (-shift) as u32;
+            if wide > u64::MAX as u128 {
+                return self.encode_max(sign_bit);
+            }
+            wide as u64
+        } else if shift >= 64 {
+            // Far below the smallest subnormal: rounds to zero unless
+            // exactly at the halfway of the first step (impossible for
+            // shift > 25), so 0.
+            0
+        } else {
+            let sh = shift as u32;
+            let floor = sig >> sh;
+            let rem = sig & ((1u64 << sh) - 1);
+            let half = 1u64 << (sh - 1);
+            // round-to-nearest-even
+            floor
+                + u64::from(rem > half || (rem == half && (floor & 1) == 1))
+        };
+        self.from_steps(sign_bit, steps, qe)
+    }
+
+    /// Reconstruct an encoding from `steps` quanta of size 2^qe.
+    fn from_steps(&self, sign_bit: u8, mut steps: u64, mut qe: i32) -> u16 {
+        let sign_enc = (sign_bit as u32) << (self.ebits + self.mbits);
+        if steps == 0 {
+            return sign_enc as u16;
+        }
+        // Renormalize: rounding may have carried into the next binade.
+        // A normal encoding holds mantissa steps in [2^mbits, 2^(mbits+1)).
+        while steps >= (2u64 << self.mbits) {
+            // Only exact halving is possible here (steps is then even,
+            // a power-of-two boundary), but keep sticky-free semantics:
+            if steps & 1 == 1 {
+                // can't happen: carry out of RNE always lands on a power
+                // of two; defend anyway.
+                steps += 1;
+            }
+            steps >>= 1;
+            qe += 1;
+        }
+        let e_val = qe + self.mbits as i32; // binade of the value
+        if e_val > self.emax() {
+            return self.encode_max(sign_bit);
+        }
+        if steps < (1u64 << self.mbits) {
+            // subnormal (qe is pinned at emin - mbits in this regime)
+            debug_assert_eq!(qe, self.emin() - self.mbits as i32);
+            return (sign_enc | steps as u32) as u16;
+        }
+        let exp_field = (e_val - self.emin() + 1) as u32;
+        let man_field = (steps as u32) & self.man_mask();
+        let enc = (sign_enc | (exp_field << self.mbits) | man_field) as u16;
+        // MantissaNan formats: the all-ones encoding of the top binade
+        // (e.g. E4M3's 480) is NaN, not a number — finite inputs that
+        // round onto it saturate to max-normal instead (MX conversion
+        // clamps; 480 > max_normal 448).
+        if self.is_nan(enc) {
+            return self.encode_max(sign_bit);
+        }
+        enc
+    }
+
+    /// The ±max-normal encoding (saturation target).
+    pub fn encode_max(&self, sign_bit: u8) -> u16 {
+        let sign_enc = (sign_bit as u32) << (self.ebits + self.mbits);
+        let (e, m) = match self.specials {
+            Specials::Ieee => (self.exp_mask() - 1, self.man_mask()),
+            Specials::MantissaNan => (self.exp_mask(), self.man_mask() - 1),
+            Specials::None => (self.exp_mask(), self.man_mask()),
+        };
+        (sign_enc | (e << self.mbits) | m) as u16
+    }
+
+    /// Enumerate all finite bit patterns of the format.
+    pub fn finite_patterns(&self) -> Vec<u16> {
+        (0..=self.mask())
+            .filter(|&b| !self.is_nan(b) && !self.is_inf(b))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::property_cases;
+
+    static ALL: [&FloatSpec; 6] = [&E5M2, &E4M3, &E3M2, &E2M3, &E2M1, &FP9];
+
+    #[test]
+    fn constants_match_spec_tables() {
+        assert_eq!(E5M2.max_normal(), 57344.0);
+        assert_eq!(E4M3.max_normal(), 448.0);
+        assert_eq!(E3M2.max_normal(), 28.0);
+        assert_eq!(E2M3.max_normal(), 7.5);
+        assert_eq!(E2M1.max_normal(), 6.0);
+        assert_eq!(E5M2.min_subnormal(), 2.0f32.powi(-16));
+        assert_eq!(E4M3.min_subnormal(), 2.0f32.powi(-9));
+        assert_eq!(E5M2.emin(), -14);
+        assert_eq!(E4M3.emin(), -6);
+    }
+
+    #[test]
+    fn decode_encode_roundtrip_all_finite() {
+        // encode(decode(b)) == b for every finite pattern of every fmt
+        // (modulo the two zero encodings mapping to themselves).
+        for spec in ALL {
+            for b in spec.finite_patterns() {
+                let v = spec.decode(b);
+                let b2 = spec.encode(v);
+                assert_eq!(
+                    spec.decode(b2),
+                    v,
+                    "{}: {b:#x} -> {v} -> {b2:#x}",
+                    spec.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn e4m3_nan_handling() {
+        assert!(E4M3.is_nan(0x7F));
+        assert!(E4M3.is_nan(0xFF));
+        assert!(!E4M3.is_nan(0x7E)); // 448, max normal
+        assert_eq!(E4M3.decode(0x7E), 448.0);
+        assert!(E4M3.decode(0x7F).is_nan());
+        assert!(E4M3.encode(f32::NAN) == 0x7F || E4M3.encode(f32::NAN) == 0xFF);
+        // E4M3 has no inf: inf saturates.
+        assert_eq!(E4M3.decode(E4M3.encode(f32::INFINITY)), 448.0);
+        assert_eq!(E4M3.decode(E4M3.encode(f32::NEG_INFINITY)), -448.0);
+    }
+
+    #[test]
+    fn e5m2_specials() {
+        // exp=31, man=0 is inf
+        let inf = 0b0_11111_00u16;
+        assert!(E5M2.is_inf(inf));
+        assert_eq!(E5M2.decode(inf), f32::INFINITY);
+        assert!(E5M2.is_nan(0b0_11111_01));
+        assert_eq!(E5M2.encode(f32::INFINITY), inf);
+        assert!(E5M2.decode(E5M2.encode(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn saturation_semantics() {
+        for spec in ALL {
+            let max = spec.max_normal();
+            assert_eq!(spec.decode(spec.encode(max * 4.0)), max, "{}", spec.name);
+            assert_eq!(spec.decode(spec.encode(-max * 4.0)), -max, "{}", spec.name);
+            // Just above the rounding boundary still saturates, never inf.
+            let v = spec.decode(spec.encode(max * 1.0001));
+            assert!(v.is_finite(), "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn zeros_keep_sign() {
+        for spec in ALL {
+            assert_eq!(spec.encode(0.0) & spec.mask(), 0);
+            let neg = spec.encode(-0.0);
+            assert_eq!(neg, 1 << (spec.ebits + spec.mbits), "{}", spec.name);
+            assert_eq!(spec.decode(neg), 0.0);
+            assert!(spec.decode(neg).is_sign_negative());
+        }
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // E4M3 around 1.0: grid step 2^-3 = 0.125. 1.0625 is exactly
+        // between 1.0 (even mantissa 0) and 1.125 (odd mantissa 1):
+        // must round to 1.0.
+        assert_eq!(E4M3.decode(E4M3.encode(1.0625)), 1.0);
+        // 1.1875 is between 1.125 (odd) and 1.25 (even): rounds to 1.25.
+        assert_eq!(E4M3.decode(E4M3.encode(1.1875)), 1.25);
+        // E5M2 around 1.0: step 0.25; 1.125 -> 1.0 (even), 1.375 -> 1.5.
+        assert_eq!(E5M2.decode(E5M2.encode(1.125)), 1.0);
+        assert_eq!(E5M2.decode(E5M2.encode(1.375)), 1.5);
+    }
+
+    #[test]
+    fn subnormal_encoding() {
+        // E4M3 min subnormal = 2^-9.
+        let min = E4M3.min_subnormal();
+        assert_eq!(E4M3.decode(E4M3.encode(min)), min);
+        // Half of it ties to even -> 0.
+        assert_eq!(E4M3.decode(E4M3.encode(min / 2.0)), 0.0);
+        // 0.75 of it rounds up to min.
+        assert_eq!(E4M3.decode(E4M3.encode(min * 0.75)), min);
+        // Anything below quarter rounds to zero.
+        assert_eq!(E4M3.decode(E4M3.encode(min * 0.2)), 0.0);
+    }
+
+    #[test]
+    fn rounding_carry_into_next_binade() {
+        // E4M3: 1.9375 * 2^8 = 496 is exactly between 480 (1.875*2^8,
+        // odd step) and max-normal-overflow... actually between 480 and
+        // 512; 512 > 448 so saturation applies after carry.
+        assert_eq!(E4M3.decode(E4M3.encode(500.0)), 448.0);
+        // In-range carry: 0.9999 -> 1.0 (carry from 0.96875's binade).
+        assert_eq!(E4M3.decode(E4M3.encode(0.9999)), 1.0);
+    }
+
+    #[test]
+    fn fp9_superset_of_fp8() {
+        // Every E5M2 and E4M3 finite value must be exactly representable
+        // in FP9 (the datapath's lossless internal format, §III-A).
+        for spec in [&E5M2, &E4M3] {
+            for b in spec.finite_patterns() {
+                let v = spec.decode(b);
+                assert_eq!(FP9.decode(FP9.encode(v)), v, "{} {b:#x}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn encode_is_monotone_property() {
+        property_cases(200, 0xF0F0, |rng| {
+            let spec = ALL[(rng.below(ALL.len() as u64)) as usize];
+            let scale = 2.0f32.powi(rng.range_i64(-20, 20) as i32);
+            let mut a = rng.normal_f32() * scale;
+            let mut b = rng.normal_f32() * scale;
+            if a > b {
+                std::mem::swap(&mut a, &mut b);
+            }
+            let qa = spec.decode(spec.encode(a));
+            let qb = spec.decode(spec.encode(b));
+            assert!(qa <= qb, "{}: encode not monotone at {a} {b}", spec.name);
+        });
+    }
+
+    #[test]
+    fn encode_error_bounded_by_half_ulp_property() {
+        property_cases(500, 0xBEEF, |rng| {
+            let spec = ALL[(rng.below(ALL.len() as u64)) as usize];
+            let v = rng.normal_f32();
+            let q = spec.decode(spec.encode(v));
+            if v.abs() <= spec.max_normal() {
+                let bin = v.abs().log2().floor().max(spec.emin() as f32);
+                let ulp = (2.0f32).powf(bin - spec.mbits as f32);
+                assert!(
+                    (q - v).abs() <= ulp / 2.0 * 1.0001,
+                    "{}: |{q} - {v}| > ulp/2 = {}",
+                    spec.name,
+                    ulp / 2.0
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,186 @@
+//! OCP Microscaling (MX) v1.0 format library.
+//!
+//! An MX-compliant format is (scale format, element format, block size):
+//! a block of `k` elements shares one E8M0 scale factor while each
+//! element is a low-bitwidth private value. The spec's concrete formats
+//! are MXFP8 (E5M2 / E4M3), MXFP6 (E3M2 / E2M3), MXFP4 (E2M1) and
+//! MXINT8, all with block size 32. The paper's hardware consumes MXFP8
+//! with 8 elements per `mxdotp` issue (one 64-bit register per vector).
+//!
+//! Submodules:
+//! * [`minifloat`] — generic narrow-float encode/decode with RNE,
+//!   covering all five FP element formats bit-exactly;
+//! * [`e8m0`] — the 8-bit power-of-two block-scale format;
+//! * [`int8`] — the MXINT8 element format (scaled fixed-point);
+//! * [`quantize`] — the OCP quantization algorithm and the block /
+//!   vector / matrix containers used across the crate;
+//! * [`dot`] — the spec's Dot (Eq. 1) and DotGeneral (Eq. 2) reference
+//!   semantics with FP32 accumulation.
+
+pub mod dot;
+pub mod e8m0;
+pub mod int8;
+pub mod minifloat;
+pub mod quantize;
+
+pub use dot::{dot_block, dot_general, matmul_ref};
+pub use e8m0::E8m0;
+pub use minifloat::{FloatSpec, E2M1, E2M3, E3M2, E4M3, E5M2, FP9};
+pub use quantize::{MxMatrix, MxVector, ScaleAxis};
+
+/// The block size fixed by the MX v1.0 spec for all concrete formats.
+pub const SPEC_BLOCK_SIZE: usize = 32;
+
+/// Elements consumed by one `mxdotp` instruction (8 × FP8 in 64 bits).
+pub const HW_DOT_WIDTH: usize = 8;
+
+/// An MX *element* format tag (the private-value encoding of a block).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ElemFormat {
+    /// FP8 1-5-2, IEEE-like specials (inf + NaN in the top binade).
+    E5M2,
+    /// FP8 1-4-3, OFP8 specials (only S.1111.111 is NaN, no inf).
+    E4M3,
+    /// FP6 1-3-2, no inf/NaN.
+    E3M2,
+    /// FP6 1-2-3, no inf/NaN.
+    E2M3,
+    /// FP4 1-2-1, no inf/NaN.
+    E2M1,
+    /// INT8 two's complement with implied scale 2^-6 (MXINT8).
+    Int8,
+}
+
+impl ElemFormat {
+    /// All element formats, in spec order.
+    pub const ALL: [ElemFormat; 6] = [
+        ElemFormat::E5M2,
+        ElemFormat::E4M3,
+        ElemFormat::E3M2,
+        ElemFormat::E2M3,
+        ElemFormat::E2M1,
+        ElemFormat::Int8,
+    ];
+
+    /// The two FP8 formats the MXDOTP hardware supports (CSR-selected).
+    pub const FP8: [ElemFormat; 2] = [ElemFormat::E5M2, ElemFormat::E4M3];
+
+    /// Bit width of one element.
+    pub fn bits(self) -> u32 {
+        match self {
+            ElemFormat::E5M2 | ElemFormat::E4M3 | ElemFormat::Int8 => 8,
+            ElemFormat::E3M2 | ElemFormat::E2M3 => 6,
+            ElemFormat::E2M1 => 4,
+        }
+    }
+
+    /// The float spec, for FP element formats.
+    pub fn float_spec(self) -> Option<&'static FloatSpec> {
+        match self {
+            ElemFormat::E5M2 => Some(&E5M2),
+            ElemFormat::E4M3 => Some(&E4M3),
+            ElemFormat::E3M2 => Some(&E3M2),
+            ElemFormat::E2M3 => Some(&E2M3),
+            ElemFormat::E2M1 => Some(&E2M1),
+            ElemFormat::Int8 => None,
+        }
+    }
+
+    /// Largest representable magnitude (used by the OCP scale rule).
+    pub fn max_value(self) -> f32 {
+        match self.float_spec() {
+            Some(s) => s.max_normal(),
+            None => int8::MAX_VALUE,
+        }
+    }
+
+    /// Exponent of the largest power of two representable (`emax` in the
+    /// OCP scale computation). For MXINT8 the spec uses 0.
+    pub fn emax(self) -> i32 {
+        match self.float_spec() {
+            Some(s) => s.emax(),
+            None => 0,
+        }
+    }
+
+    /// RNE-quantize an f32 to this format's value grid; returns the
+    /// encoded bit pattern (low bits of the returned byte).
+    pub fn encode(self, v: f32) -> u8 {
+        match self.float_spec() {
+            Some(s) => s.encode(v) as u8, // element formats are <= 8 bits
+            None => int8::encode(v),
+        }
+    }
+
+    /// Decode a bit pattern to its exact f32 value.
+    pub fn decode(self, bits: u8) -> f32 {
+        match self.float_spec() {
+            Some(s) => s.decode(bits as u16),
+            None => int8::decode(bits),
+        }
+    }
+
+    /// Parse a lowercase name ("e4m3", "e5m2", ...).
+    pub fn parse(name: &str) -> Option<Self> {
+        Some(match name {
+            "e5m2" => ElemFormat::E5M2,
+            "e4m3" => ElemFormat::E4M3,
+            "e3m2" => ElemFormat::E3M2,
+            "e2m3" => ElemFormat::E2M3,
+            "e2m1" => ElemFormat::E2M1,
+            "int8" => ElemFormat::Int8,
+            _ => return None,
+        })
+    }
+
+    /// Canonical lowercase name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ElemFormat::E5M2 => "e5m2",
+            ElemFormat::E4M3 => "e4m3",
+            ElemFormat::E3M2 => "e3m2",
+            ElemFormat::E2M3 => "e2m3",
+            ElemFormat::E2M1 => "e2m1",
+            ElemFormat::Int8 => "int8",
+        }
+    }
+}
+
+impl std::fmt::Display for ElemFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for fmt in ElemFormat::ALL {
+            assert_eq!(ElemFormat::parse(fmt.name()), Some(fmt));
+        }
+        assert_eq!(ElemFormat::parse("fp64"), None);
+    }
+
+    #[test]
+    fn max_values_match_ocp_tables() {
+        assert_eq!(ElemFormat::E5M2.max_value(), 57344.0);
+        assert_eq!(ElemFormat::E4M3.max_value(), 448.0);
+        assert_eq!(ElemFormat::E3M2.max_value(), 28.0);
+        assert_eq!(ElemFormat::E2M3.max_value(), 7.5);
+        assert_eq!(ElemFormat::E2M1.max_value(), 6.0);
+        assert_eq!(ElemFormat::Int8.max_value(), 1.984375);
+    }
+
+    #[test]
+    fn emax_match_ocp_tables() {
+        assert_eq!(ElemFormat::E5M2.emax(), 15);
+        assert_eq!(ElemFormat::E4M3.emax(), 8);
+        assert_eq!(ElemFormat::E3M2.emax(), 4);
+        assert_eq!(ElemFormat::E2M3.emax(), 2);
+        assert_eq!(ElemFormat::E2M1.emax(), 2);
+        assert_eq!(ElemFormat::Int8.emax(), 0);
+    }
+}

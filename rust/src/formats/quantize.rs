@@ -1,0 +1,395 @@
+//! OCP MX quantization and the block/vector/matrix containers.
+//!
+//! The v1.0 scale rule for one block of `k` values:
+//!
+//! ```text
+//! shared_exp = floor(log2(amax)) - emax_elem      (clamped to E8M0)
+//! X          = 2^shared_exp
+//! P_i        = quantize_elem(v_i / X)
+//! ```
+//!
+//! so the largest element lands in the format's top binade and nothing
+//! saturates unless the block's dynamic range exceeds the element
+//! format's. An all-zero block takes X = 1 to avoid NaN scales.
+//!
+//! Matrices quantize along their contraction (K) axis: A (M×K) holds
+//! one scale per (row, block); B (K×N) one per (block, column) — the
+//! exact layout the `mxdotp` kernel streams via SSRs (Fig. 2: the
+//! scales are reshaped for SSR streaming).
+
+use super::e8m0::{self, E8m0};
+use super::ElemFormat;
+
+/// Which axis of a matrix the MX blocks run along.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAxis {
+    /// Blocks along columns (each block is contiguous in a row) — the
+    /// layout for the left operand A (M×K, quantized along K).
+    Row,
+    /// Blocks along rows (each block is contiguous in a column) — the
+    /// layout for the right operand B (K×N, quantized along K).
+    Col,
+}
+
+/// Compute the OCP shared exponent for a block's max magnitude.
+pub fn shared_exponent(amax: f32, fmt: ElemFormat) -> i32 {
+    if amax == 0.0 || !amax.is_finite() {
+        return 0;
+    }
+    (e8m0::floor_log2(amax) - fmt.emax()).clamp(e8m0::EMIN, e8m0::EMAX)
+}
+
+/// One quantized MX block: `k` element encodings + one E8M0 scale.
+#[derive(Clone, Debug)]
+pub struct MxBlock {
+    pub fmt: ElemFormat,
+    pub scale: E8m0,
+    pub elems: Vec<u8>,
+}
+
+impl MxBlock {
+    /// Quantize a slice of f32s into one MX block.
+    pub fn quantize(values: &[f32], fmt: ElemFormat) -> Self {
+        let amax = values.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let se = shared_exponent(amax, fmt);
+        let elems = values
+            .iter()
+            .map(|&v| fmt.encode(e8m0::mul_pow2(v, -se)))
+            .collect();
+        MxBlock { fmt, scale: E8m0::from_exponent(se), elems }
+    }
+
+    /// Dequantize back to f32 (exact given the encodings: scales are
+    /// powers of two).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let se = self.scale.exponent();
+        self.elems
+            .iter()
+            .map(|&b| e8m0::mul_pow2(self.fmt.decode(b), se))
+            .collect()
+    }
+}
+
+/// An MX-quantized vector: elements in blocks of `block_size`, one
+/// E8M0 scale per block.
+#[derive(Clone, Debug)]
+pub struct MxVector {
+    pub fmt: ElemFormat,
+    pub block_size: usize,
+    /// Element bit patterns, length = len.
+    pub elems: Vec<u8>,
+    /// Scales, length = len / block_size.
+    pub scales: Vec<E8m0>,
+}
+
+impl MxVector {
+    /// Quantize an f32 slice (length divisible by `block_size`).
+    pub fn quantize(values: &[f32], fmt: ElemFormat, block_size: usize) -> Self {
+        assert!(block_size > 0 && values.len() % block_size == 0,
+            "length {} not divisible by block size {block_size}", values.len());
+        let mut elems = Vec::with_capacity(values.len());
+        let mut scales = Vec::with_capacity(values.len() / block_size);
+        for chunk in values.chunks(block_size) {
+            let b = MxBlock::quantize(chunk, fmt);
+            elems.extend_from_slice(&b.elems);
+            scales.push(b.scale);
+        }
+        MxVector { fmt, block_size, elems, scales }
+    }
+
+    pub fn len(&self) -> usize {
+        self.elems.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.elems.is_empty()
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Dequantize to f32.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len());
+        for (i, chunk) in self.elems.chunks(self.block_size).enumerate() {
+            let se = self.scales[i].exponent();
+            out.extend(chunk.iter().map(|&b| e8m0::mul_pow2(self.fmt.decode(b), se)));
+        }
+        out
+    }
+
+    /// Element values (decoded, unscaled) of block `i`.
+    pub fn block_values(&self, i: usize) -> Vec<f32> {
+        self.elems[i * self.block_size..(i + 1) * self.block_size]
+            .iter()
+            .map(|&b| self.fmt.decode(b))
+            .collect()
+    }
+}
+
+/// An MX-quantized matrix, row-major elements, scales along `axis`.
+#[derive(Clone, Debug)]
+pub struct MxMatrix {
+    pub fmt: ElemFormat,
+    pub block_size: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub axis: ScaleAxis,
+    /// rows*cols element bit patterns, row-major.
+    pub elems: Vec<u8>,
+    /// Scales: Row axis -> rows × (cols/bs), row-major;
+    ///         Col axis -> (rows/bs) × cols, row-major.
+    pub scales: Vec<E8m0>,
+}
+
+impl MxMatrix {
+    /// Quantize a row-major f32 matrix along the given axis.
+    pub fn quantize(
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        fmt: ElemFormat,
+        block_size: usize,
+        axis: ScaleAxis,
+    ) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        match axis {
+            ScaleAxis::Row => assert!(
+                cols % block_size == 0,
+                "cols {cols} not divisible by block size {block_size}"
+            ),
+            ScaleAxis::Col => assert!(
+                rows % block_size == 0,
+                "rows {rows} not divisible by block size {block_size}"
+            ),
+        }
+        let mut elems = vec![0u8; rows * cols];
+        let mut scales = Vec::new();
+        match axis {
+            ScaleAxis::Row => {
+                for r in 0..rows {
+                    for bc in 0..cols / block_size {
+                        let base = r * cols + bc * block_size;
+                        let blk = MxBlock::quantize(&data[base..base + block_size], fmt);
+                        elems[base..base + block_size].copy_from_slice(&blk.elems);
+                        scales.push(blk.scale);
+                    }
+                }
+            }
+            ScaleAxis::Col => {
+                scales = vec![E8m0::ONE; (rows / block_size) * cols];
+                for c in 0..cols {
+                    for br in 0..rows / block_size {
+                        let vals: Vec<f32> = (0..block_size)
+                            .map(|i| data[(br * block_size + i) * cols + c])
+                            .collect();
+                        let blk = MxBlock::quantize(&vals, fmt);
+                        for (i, &e) in blk.elems.iter().enumerate() {
+                            elems[(br * block_size + i) * cols + c] = e;
+                        }
+                        scales[br * cols + c] = blk.scale;
+                    }
+                }
+            }
+        }
+        MxMatrix { fmt, block_size, rows, cols, axis, elems, scales }
+    }
+
+    /// The scale of (row r, block index b) for Row axis, or
+    /// (block index b, col c) for Col axis.
+    pub fn scale(&self, outer: usize, block: usize) -> E8m0 {
+        match self.axis {
+            ScaleAxis::Row => self.scales[outer * (self.cols / self.block_size) + block],
+            ScaleAxis::Col => self.scales[block * self.cols + outer],
+        }
+    }
+
+    /// Decoded element value at (r, c), unscaled.
+    pub fn elem_value(&self, r: usize, c: usize) -> f32 {
+        self.fmt.decode(self.elems[r * self.cols + c])
+    }
+
+    /// Raw element bits at (r, c).
+    pub fn elem_bits(&self, r: usize, c: usize) -> u8 {
+        self.elems[r * self.cols + c]
+    }
+
+    /// Dequantize to a row-major f32 matrix (exact).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let se = match self.axis {
+                    ScaleAxis::Row => self.scale(r, c / self.block_size),
+                    ScaleAxis::Col => self.scale(c, r / self.block_size),
+                }
+                .exponent();
+                out[r * self.cols + c] = e8m0::mul_pow2(self.elem_value(r, c), se);
+            }
+        }
+        out
+    }
+
+    /// Memory footprint in bytes of the quantized representation
+    /// (elements at fmt.bits() + one byte per scale) — the quantity the
+    /// MX papers' memory-saving claims are about.
+    pub fn footprint_bytes(&self) -> usize {
+        (self.elems.len() * self.fmt.bits() as usize).div_ceil(8) + self.scales.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{property_cases, XorShift};
+
+    #[test]
+    fn shared_exponent_rule() {
+        // amax = 3.0 -> floor(log2 3) = 1; e4m3 emax = 8 -> se = -7.
+        assert_eq!(shared_exponent(3.0, ElemFormat::E4M3), -7);
+        // amax exactly a power of two.
+        assert_eq!(shared_exponent(256.0, ElemFormat::E4M3), 0);
+        assert_eq!(shared_exponent(256.0, ElemFormat::E5M2), -7);
+        // zero block.
+        assert_eq!(shared_exponent(0.0, ElemFormat::E4M3), 0);
+    }
+
+    #[test]
+    fn block_quantize_top_binade() {
+        // After scaling, the largest element sits in [2^emax, 2^(emax+1)).
+        let mut rng = XorShift::new(3);
+        for fmt in [ElemFormat::E4M3, ElemFormat::E5M2] {
+            let vals = rng.normal_vec(32, 10.0);
+            let blk = MxBlock::quantize(&vals, fmt);
+            let max_elem = blk
+                .elems
+                .iter()
+                .map(|&b| fmt.decode(b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_elem <= fmt.max_value());
+            assert!(
+                max_elem >= e8m0::pow2(fmt.emax() - 1),
+                "{fmt}: max elem {max_elem} far below top binade"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_block() {
+        let blk = MxBlock::quantize(&[0.0; 32], ElemFormat::E4M3);
+        assert_eq!(blk.scale, E8m0::ONE);
+        assert!(blk.dequantize().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn pow2_data_roundtrips_exactly() {
+        let vals: Vec<f32> = (0..32).map(|i| (2.0f32).powi((i % 9) - 4)).collect();
+        for fmt in [ElemFormat::E4M3, ElemFormat::E5M2] {
+            let blk = MxBlock::quantize(&vals, fmt);
+            assert_eq!(blk.dequantize(), vals, "{fmt}");
+        }
+    }
+
+    #[test]
+    fn vector_blocks_independent() {
+        // Two blocks with very different magnitudes get different scales.
+        let mut vals = vec![1000.0f32; 32];
+        vals.extend(vec![0.001f32; 32]);
+        let v = MxVector::quantize(&vals, ElemFormat::E4M3, 32);
+        assert_eq!(v.num_blocks(), 2);
+        assert!(v.scales[0].exponent() > v.scales[1].exponent());
+        let dq = v.dequantize();
+        for (a, b) in dq.iter().zip(&vals) {
+            // OCP scale rule saturates amax in the top eighth of a binade
+            // (1000 -> scale 2, 500 > 448): error bound is 12.5%, by design.
+            assert!((a - b).abs() / b < 0.13, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn matrix_row_axis_layout() {
+        let mut rng = XorShift::new(7);
+        let (rows, cols, bs) = (4, 64, 32);
+        let data = rng.normal_vec(rows * cols, 1.0);
+        let m = MxMatrix::quantize(&data, rows, cols, ElemFormat::E4M3, bs, ScaleAxis::Row);
+        assert_eq!(m.scales.len(), rows * cols / bs);
+        // row quantization == per-row MxVector quantization
+        for r in 0..rows {
+            let v = MxVector::quantize(&data[r * cols..(r + 1) * cols], ElemFormat::E4M3, bs);
+            for b in 0..cols / bs {
+                assert_eq!(m.scale(r, b), v.scales[b]);
+            }
+            for c in 0..cols {
+                assert_eq!(m.elem_bits(r, c), v.elems[c]);
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_col_axis_layout() {
+        let mut rng = XorShift::new(8);
+        let (rows, cols, bs) = (64, 4, 32);
+        let data = rng.normal_vec(rows * cols, 1.0);
+        let m = MxMatrix::quantize(&data, rows, cols, ElemFormat::E5M2, bs, ScaleAxis::Col);
+        assert_eq!(m.scales.len(), (rows / bs) * cols);
+        // column quantization == per-column MxVector quantization
+        for c in 0..cols {
+            let col: Vec<f32> = (0..rows).map(|r| data[r * cols + c]).collect();
+            let v = MxVector::quantize(&col, ElemFormat::E5M2, bs);
+            for b in 0..rows / bs {
+                assert_eq!(m.scale(c, b), v.scales[b]);
+            }
+            for r in 0..rows {
+                assert_eq!(m.elem_bits(r, c), v.elems[r]);
+            }
+        }
+    }
+
+    #[test]
+    fn quantization_error_bounded_property() {
+        // Relative error per element <= 2^-(mbits+1) * 2 of block amax
+        // (one ulp at the top binade relative to the block max).
+        property_cases(100, 0x51AB, |rng| {
+            let fmt = if rng.bool() { ElemFormat::E4M3 } else { ElemFormat::E5M2 };
+            let scale = (2.0f32).powi(rng.range_i64(-10, 10) as i32);
+            let vals = rng.normal_vec(32, scale);
+            let blk = MxBlock::quantize(&vals, fmt);
+            let dq = blk.dequantize();
+            let amax = vals.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let spec = fmt.float_spec().unwrap();
+            let tol = amax * (2.0f32).powi(-(spec.mbits as i32)) ;
+            for (q, v) in dq.iter().zip(&vals) {
+                assert!((q - v).abs() <= tol, "{fmt}: |{q} - {v}| > {tol}");
+            }
+        });
+    }
+
+    #[test]
+    fn footprint_accounting() {
+        let data = vec![1.0f32; 64 * 64];
+        let m = MxMatrix::quantize(&data, 64, 64, ElemFormat::E4M3, 32, ScaleAxis::Row);
+        // 4096 bytes elements + 128 scales
+        assert_eq!(m.footprint_bytes(), 4096 + 128);
+        let m4 = MxMatrix::quantize(&data, 64, 64, ElemFormat::E2M1, 32, ScaleAxis::Row);
+        assert_eq!(m4.footprint_bytes(), 2048 + 128);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn bad_block_size_panics() {
+        MxVector::quantize(&[0.0; 33], ElemFormat::E4M3, 32);
+    }
+
+    #[test]
+    fn int8_blocks() {
+        let mut rng = XorShift::new(11);
+        let vals = rng.normal_vec(32, 5.0);
+        let blk = MxBlock::quantize(&vals, ElemFormat::Int8);
+        let dq = blk.dequantize();
+        let amax = vals.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        for (q, v) in dq.iter().zip(&vals) {
+            assert!((q - v).abs() <= amax / 64.0, "|{q}-{v}|");
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! The FP32 baseline MM kernel (Fig. 2, left): 2-way SIMD `vfmac.s`
+//! with SSR-streamed operands and an FREP'd 8-way-unrolled inner loop.
+//!
+//! Per (row m, 8-column tile): 8 SIMD accumulators c0..c7 are zeroed,
+//! the FREP body issues one `vfmac.s` per output column per K-pair, the
+//! lanes are reduced with `vfsum.s` and stored. A is streamed on ft0
+//! (each word repeated 8×, one per column), B — stored column-major —
+//! on ft1. Ideal rate: 2 MACs = 4 FLOPs per cycle per core.
+
+use super::layout::{fp32_footprint, rows_for_core, Planner};
+use super::MmProblem;
+use crate::snitch::cluster::Cluster;
+use crate::snitch::isa::{csr, FpInstr, Instr, IntInstr, SsrField};
+use crate::snitch::SPM_BYTES;
+
+/// Stage data into SPM and build per-core programs.
+/// Returns (C base address, programs).
+pub fn stage(cluster: &mut Cluster, p: MmProblem, a: &[f32], b: &[f32]) -> (usize, Vec<Vec<Instr>>) {
+    assert_eq!(a.len(), p.m * p.k);
+    assert_eq!(b.len(), p.k * p.n);
+    assert_eq!(p.k % 2, 0, "FP32 kernel needs even K (2-way SIMD)");
+    assert_eq!(p.n % 8, 0, "N must be a multiple of the unroll factor 8");
+    let ncores = cluster.cores.len();
+    assert_eq!(p.m % ncores, 0);
+    assert!(
+        fp32_footprint(&p) <= SPM_BYTES,
+        "FP32 workload does not fit into L1 ({} B): the paper's K=256 footnote",
+        fp32_footprint(&p)
+    );
+
+    // Rows/columns are padded by one 64-bit word so that consecutive
+    // stream fetches rotate across banks: without the pad, a column
+    // stride that is a multiple of 256 B keeps all eight cores'
+    // lockstep B streams on one bank and throughput collapses to 1/8.
+    let a_stride = 4 * p.k + 8;
+    let b_stride = 4 * p.k + 8;
+    let mut plan = Planner::new();
+    let a_reg = plan.place(a_stride * p.m).unwrap();
+    let b_reg = plan.place(b_stride * p.n).unwrap();
+    let c_reg = plan.place(4 * p.m * p.n).unwrap();
+
+    // A row-major (padded rows).
+    for m in 0..p.m {
+        for k in 0..p.k {
+            cluster.spm.write_f32(a_reg.addr + m * a_stride + 4 * k, a[m * p.k + k]);
+        }
+    }
+    // B column-major (padded columns): Bcol[n][k] = B[k][n].
+    for n in 0..p.n {
+        for k in 0..p.k {
+            cluster.spm.write_f32(b_reg.addr + n * b_stride + 4 * k, b[k * p.n + n]);
+        }
+    }
+
+    let programs = (0..ncores)
+        .map(|c| build(p, c, ncores, a_reg.addr, b_reg.addr, c_reg.addr, a_stride, b_stride))
+        .collect();
+    (c_reg.addr, programs)
+}
+
+/// Emit the SSR configuration sequence for one stream.
+pub(super) fn emit_ssr(
+    prog: &mut Vec<Instr>,
+    ssr: u8,
+    base: i64,
+    dims: &[(u32, i64)], // (bound+1, stride) innermost first
+    rep: u32,
+) {
+    let t: u8 = 5; // scfg scratch register
+    prog.push(IntInstr::Li { rd: t, imm: dims.len() as i64 - 1 }.into());
+    prog.push(IntInstr::Scfg { ssr, field: SsrField::Dims, rs1: t }.into());
+    for (d, &(n, stride)) in dims.iter().enumerate() {
+        prog.push(IntInstr::Li { rd: t, imm: n as i64 - 1 }.into());
+        prog.push(IntInstr::Scfg { ssr, field: SsrField::Bound(d as u8), rs1: t }.into());
+        prog.push(IntInstr::Li { rd: t, imm: stride }.into());
+        prog.push(IntInstr::Scfg { ssr, field: SsrField::Stride(d as u8), rs1: t }.into());
+    }
+    prog.push(IntInstr::Li { rd: t, imm: rep as i64 }.into());
+    prog.push(IntInstr::Scfg { ssr, field: SsrField::Rep, rs1: t }.into());
+    prog.push(IntInstr::Li { rd: t, imm: base }.into());
+    prog.push(IntInstr::Scfg { ssr, field: SsrField::Base, rs1: t }.into());
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build(
+    p: MmProblem,
+    core: usize,
+    ncores: usize,
+    a0: usize,
+    b0: usize,
+    c0: usize,
+    a_stride: usize,
+    b_stride: usize,
+) -> Vec<Instr> {
+    let rows = rows_for_core(p.m, core, ncores);
+    let nrows = rows.len() as u32;
+    let (k, n) = (p.k, p.n);
+    let mut prog: Vec<Instr> = Vec::new();
+
+    // ft0: A pairs — (k2: K/2, 8 B), (ntile: N/8, 0), (m: rows, 4K);
+    //      each word feeds all 8 columns (rep = 7).
+    emit_ssr(
+        &mut prog,
+        0,
+        (a0 + rows.start * a_stride) as i64,
+        &[(k as u32 / 2, 8), (n as u32 / 8, 0), (nrows, a_stride as i64)],
+        7,
+    );
+    // ft1: B column-major — (j: 8, 4K), (k2: K/2, 8), (ntile: N/8, 32K),
+    //      (m: rows, 0).
+    emit_ssr(
+        &mut prog,
+        1,
+        b0 as i64,
+        &[
+            (8, b_stride as i64),
+            (k as u32 / 2, 8),
+            (n as u32 / 8, 8 * b_stride as i64),
+            (nrows, 0),
+        ],
+        0,
+    );
+    prog.push(IntInstr::Li { rd: 6, imm: 1 }.into());
+    prog.push(IntInstr::CsrW { csr: csr::SSR_ENABLE, rs1: 6 }.into());
+
+    // x11 = FREP repetitions - 1; x10 = C cursor; x1 = tile countdown.
+    prog.push(IntInstr::Li { rd: 11, imm: k as i64 / 2 - 1 }.into());
+    prog.push(IntInstr::Li { rd: 10, imm: (c0 + rows.start * n * 4) as i64 }.into());
+    let tiles = nrows as i64 * (n as i64 / 8);
+    prog.push(IntInstr::Li { rd: 1, imm: tiles }.into());
+
+    let loop_top = prog.len();
+    // zero the 8 SIMD accumulators (f14 stays 0.0).
+    for i in 0..8u8 {
+        prog.push(FpInstr::VfcpkaS { fd: 8 + i, fs1: 3, fs2: 3 }.into());
+    }
+    prog.push(IntInstr::Frep { n_frep_reg: 11, max_inst: 8 }.into());
+    for i in 0..8u8 {
+        prog.push(FpInstr::VfmacS { fd: 8 + i, fs1: 0, fs2: 1 }.into());
+    }
+    // lane reduction + stores
+    for i in 0..8u8 {
+        prog.push(FpInstr::VfsumS { fd: 8 + i, fs1: 8 + i }.into());
+    }
+    for i in 0..8u8 {
+        prog.push(FpInstr::Fsw { fs2: 8 + i, rs1: 10, imm: 4 * i as i64 }.into());
+    }
+    prog.push(IntInstr::Addi { rd: 10, rs1: 10, imm: 32 }.into());
+    prog.push(IntInstr::Addi { rd: 1, rs1: 1, imm: -1 }.into());
+    prog.push(IntInstr::Bne { rs1: 1, rs2: 0, target: loop_top }.into());
+    prog.push(IntInstr::FpFence.into());
+    prog.push(IntInstr::Halt.into());
+    prog
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference::fp32_hw_ref;
+    use super::super::{run_mm, KernelKind, MmProblem};
+    use crate::formats::ElemFormat;
+    use crate::rng::XorShift;
+
+    #[test]
+    fn fp32_kernel_bit_exact_vs_reference() {
+        let p = MmProblem { m: 8, k: 32, n: 16, fmt: ElemFormat::E4M3, block_size: 32 };
+        let mut rng = XorShift::new(1);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        let run = run_mm(KernelKind::Fp32, p, &a, &b, 4);
+        let want = fp32_hw_ref(&p, &a, &b);
+        for i in 0..want.len() {
+            assert_eq!(run.c[i].to_bits(), want[i].to_bits(), "C[{i}]");
+        }
+    }
+
+    #[test]
+    fn fp32_utilization_reasonable() {
+        let p = MmProblem::fig4(128, ElemFormat::E4M3);
+        let mut rng = XorShift::new(2);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        let run = run_mm(KernelKind::Fp32, p, &a, &b, 8);
+        // 2-way SIMD MAC at ~>70% of the 4 FLOP/cycle/core ideal.
+        assert!(run.utilization() > 0.7, "util {}", run.utilization());
+        assert!(run.utilization() <= 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit into L1")]
+    fn fp32_k256_rejected() {
+        let p = MmProblem::fig4(256, ElemFormat::E4M3);
+        let a = vec![0.0; p.m * p.k];
+        let b = vec![0.0; p.k * p.n];
+        run_mm(KernelKind::Fp32, p, &a, &b, 8);
+    }
+}

@@ -1,0 +1,212 @@
+//! The FP8-to-FP32 *software* MX baseline (Fig. 2, middle): the kernel
+//! the paper beats by 20.9–25×.
+//!
+//! MX dot products without hardware support: packed FP8 words are
+//! streamed (ft0/ft1), every element is expanded to FP32 with a
+//! per-lane `fcvt.s.b`, multiplied-accumulated with scalar FP32 FMAs
+//! into four rotating partial sums (hiding the 3-cycle FMA latency),
+//! reduced per 32-block, and the block scales are materialized
+//! (`fcvt` from E8M0) and applied explicitly post-accumulation.
+//!
+//! Per 8 streamed elements the FPU executes 2 moves + 16 converts +
+//! 8 FMAs ≈ 26 issues for 16 useful FLOPs — versus ONE `mxdotp`. That
+//! ratio (plus per-block scale handling) is the whole Fig. 4 story.
+//!
+//! The scale stream uses the same reshaped pair-word buffers as the
+//! MXFP8 kernel (one word per (output, block)), rebuilt per 8-output
+//! tile by the integer core.
+
+use super::layout::rows_for_core;
+use super::mxfp8::{emit_reshape, emit_reshape_advance, stage_mx};
+use super::{fp32::emit_ssr, MmProblem};
+use crate::snitch::cluster::Cluster;
+use crate::snitch::isa::{csr, FpInstr, Instr, IntInstr, SsrField};
+
+/// Stage the FP8-to-FP32 kernel. Returns (C address, per-core programs).
+pub fn stage(cluster: &mut Cluster, p: MmProblem, a: &[f32], b: &[f32]) -> (usize, Vec<Vec<Instr>>) {
+    assert_eq!(p.block_size, 32, "the software kernel is written for the spec block size");
+    let (r, _qa, _qb) = stage_mx(cluster, p, a, b);
+    let ncores = cluster.cores.len();
+    let progs = (0..ncores).map(|c| build(p, c, ncores, &r)).collect();
+    (r.c.addr, progs)
+}
+
+fn build(
+    p: MmProblem,
+    core: usize,
+    ncores: usize,
+    r: &super::mxfp8::MxRegions,
+) -> Vec<Instr> {
+    let rows = rows_for_core(p.m, core, ncores);
+    let nrows = rows.len() as u32;
+    let (k, n) = (p.k, p.n);
+    let kb = k / p.block_size;
+    let [buf0, buf1] = r.bufs[core];
+    let e5m2 = p.fmt == crate::formats::ElemFormat::E5M2;
+    let mut prog: Vec<Instr> = Vec::new();
+
+    prog.push(IntInstr::Li { rd: 6, imm: e5m2 as i64 }.into());
+    prog.push(IntInstr::CsrW { csr: csr::FP8_FMT, rs1: 6 }.into());
+
+    // ft0: A words — (k8: K/8, 8), (out: 8, 0), (ntile: N/8, 0), (m: rows, K).
+    emit_ssr(
+        &mut prog,
+        0,
+        (r.a.addr + rows.start * r.a_stride) as i64,
+        &[(k as u32 / 8, 8), (8, 0), (n as u32 / 8, 0), (nrows, r.a_stride as i64)],
+        0,
+    );
+    // ft1: B words — (k8: K/8, 8), (out: 8, K), (ntile: N/8, 8K), (m: rows, 0).
+    emit_ssr(
+        &mut prog,
+        1,
+        r.b.addr as i64,
+        &[
+            (k as u32 / 8, 8),
+            (8, r.b_stride as i64),
+            (n as u32 / 8, 8 * r.b_stride as i64),
+            (nrows, 0),
+        ],
+        0,
+    );
+    // ft2: scale pair words — (block: kb, 64), (out: 8, 8); base per tile.
+    prog.push(IntInstr::Li { rd: 5, imm: 1 }.into());
+    prog.push(IntInstr::Scfg { ssr: 2, field: SsrField::Dims, rs1: 5 }.into());
+    for (d, (bound, stride)) in [(kb as u32, 64i64), (8, 8)].into_iter().enumerate() {
+        prog.push(IntInstr::Li { rd: 5, imm: bound as i64 - 1 }.into());
+        prog.push(IntInstr::Scfg { ssr: 2, field: SsrField::Bound(d as u8), rs1: 5 }.into());
+        prog.push(IntInstr::Li { rd: 5, imm: stride }.into());
+        prog.push(IntInstr::Scfg { ssr: 2, field: SsrField::Stride(d as u8), rs1: 5 }.into());
+    }
+    prog.push(IntInstr::Li { rd: 6, imm: 1 }.into());
+    prog.push(IntInstr::CsrW { csr: csr::SSR_ENABLE, rs1: 6 }.into());
+
+    // Reshape pointers + prologue reshape of tile 0 (same machinery as
+    // the MXFP8 kernel — the baseline also has to pair up the scales).
+    prog.push(IntInstr::Li { rd: 20, imm: (r.asc.addr + rows.start * kb) as i64 }.into());
+    prog.push(IntInstr::Li { rd: 22, imm: r.bs16.addr as i64 }.into());
+    prog.push(IntInstr::Add { rd: 21, rs1: 22, rs2: 0 }.into());
+    prog.push(IntInstr::Li { rd: 2, imm: 0 }.into());
+    prog.push(IntInstr::Li { rd: 3, imm: n as i64 / 8 }.into());
+    prog.push(IntInstr::Li { rd: 16, imm: buf0.addr as i64 }.into());
+    emit_reshape(&mut prog, kb, 16);
+    emit_reshape_advance(&mut prog, kb);
+    prog.push(IntInstr::Li { rd: 7, imm: buf0.addr as i64 }.into());
+    prog.push(IntInstr::Li { rd: 16, imm: buf1.addr as i64 }.into());
+
+    prog.push(IntInstr::Li { rd: 10, imm: (r.c.addr + rows.start * n * 4) as i64 }.into());
+    let tiles = nrows as i64 * (n as i64 / 8);
+    prog.push(IntInstr::Li { rd: 1, imm: tiles }.into());
+
+    // ---- tile loop --------------------------------------------------
+    let tile_top = prog.len();
+    prog.push(IntInstr::FpFence.into());
+    prog.push(IntInstr::Scfg { ssr: 2, field: SsrField::Base, rs1: 7 }.into());
+    prog.push(IntInstr::Add { rd: 12, rs1: 10, rs2: 0 }.into()); // store cursor
+    prog.push(IntInstr::Li { rd: 14, imm: 8 }.into()); // output countdown
+
+    // ---- output loop (8 outputs per tile) ---------------------------
+    let out_top = prog.len();
+    // total (f7) and the four partials (f8..f11) start at zero.
+    prog.push(FpInstr::VfcpkaS { fd: 7, fs1: 3, fs2: 3 }.into());
+    for i in 0..4u8 {
+        prog.push(FpInstr::VfcpkaS { fd: 8 + i, fs1: 3, fs2: 3 }.into());
+    }
+    prog.push(IntInstr::Li { rd: 13, imm: kb as i64 }.into()); // block countdown
+
+    // ---- block loop (one 32-element MX block) -----------------------
+    let blk_top = prog.len();
+    // scale pair word for this (output, block)
+    prog.push(FpInstr::Fmv { fd: 4, fs1: 2 }.into());
+    for _w in 0..4 {
+        // one packed word from each stream
+        prog.push(FpInstr::Fmv { fd: 5, fs1: 0 }.into());
+        prog.push(FpInstr::Fmv { fd: 6, fs1: 1 }.into());
+        // interleaved expansion + FMA: lane l -> a: f16+(l%4), b: f20+(l%4),
+        // partial p(l%4) = f8+(l%4). The interleave keeps >=2 cycles
+        // between a convert and its consuming FMA.
+        for l in 0..8u8 {
+            let ar = 16 + (l % 4);
+            let br = 20 + (l % 4);
+            prog.push(FpInstr::FcvtSB { fd: ar, fs1: 5, lane: l }.into());
+            prog.push(FpInstr::FcvtSB { fd: br, fs1: 6, lane: l }.into());
+            prog.push(
+                FpInstr::FmaddS { fd: 8 + (l % 4), fs1: ar, fs2: br, fs3: 8 + (l % 4) }.into(),
+            );
+        }
+    }
+    // reduce partials, materialize + apply the block scale
+    prog.push(FpInstr::FaddS { fd: 8, fs1: 8, fs2: 9 }.into());
+    prog.push(FpInstr::FaddS { fd: 10, fs1: 10, fs2: 11 }.into());
+    prog.push(FpInstr::FaddS { fd: 8, fs1: 8, fs2: 10 }.into());
+    prog.push(FpInstr::FcvtSE8 { fd: 12, fs1: 4, lane: 0 }.into());
+    prog.push(FpInstr::FcvtSE8 { fd: 13, fs1: 4, lane: 1 }.into());
+    prog.push(FpInstr::FmulS { fd: 12, fs1: 12, fs2: 13 }.into());
+    prog.push(FpInstr::FmaddS { fd: 7, fs1: 8, fs2: 12, fs3: 7 }.into());
+    // re-zero the partials for the next block
+    for i in 0..4u8 {
+        prog.push(FpInstr::VfcpkaS { fd: 8 + i, fs1: 3, fs2: 3 }.into());
+    }
+    prog.push(IntInstr::Addi { rd: 13, rs1: 13, imm: -1 }.into());
+    prog.push(IntInstr::Bne { rs1: 13, rs2: 0, target: blk_top }.into());
+    // ---- end block loop ---------------------------------------------
+    prog.push(FpInstr::Fsw { fs2: 7, rs1: 12, imm: 0 }.into());
+    prog.push(IntInstr::Addi { rd: 12, rs1: 12, imm: 4 }.into());
+    prog.push(IntInstr::Addi { rd: 14, rs1: 14, imm: -1 }.into());
+    prog.push(IntInstr::Bne { rs1: 14, rs2: 0, target: out_top }.into());
+    // ---- end output loop ---------------------------------------------
+    // reshape the next tile's scale words + buffer swap
+    emit_reshape(&mut prog, kb, 16);
+    emit_reshape_advance(&mut prog, kb);
+    prog.push(IntInstr::Add { rd: 9, rs1: 7, rs2: 0 }.into());
+    prog.push(IntInstr::Add { rd: 7, rs1: 16, rs2: 0 }.into());
+    prog.push(IntInstr::Add { rd: 16, rs1: 9, rs2: 0 }.into());
+    prog.push(IntInstr::Addi { rd: 10, rs1: 10, imm: 32 }.into());
+    prog.push(IntInstr::Addi { rd: 1, rs1: 1, imm: -1 }.into());
+    prog.push(IntInstr::Bne { rs1: 1, rs2: 0, target: tile_top }.into());
+    prog.push(IntInstr::FpFence.into());
+    prog.push(IntInstr::Halt.into());
+    prog
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference::fp8sw_hw_ref;
+    use super::super::{run_mm, KernelKind, MmProblem};
+    use crate::formats::ElemFormat;
+    use crate::rng::XorShift;
+
+    #[test]
+    fn fp8sw_kernel_bit_exact_vs_reference() {
+        for fmt in [ElemFormat::E4M3, ElemFormat::E5M2] {
+            let p = MmProblem { m: 4, k: 64, n: 8, fmt, block_size: 32 };
+            let mut rng = XorShift::new(7);
+            let a = rng.normal_vec(p.m * p.k, 1.0);
+            let b = rng.normal_vec(p.k * p.n, 1.0);
+            let run = run_mm(KernelKind::Fp8ToFp32, p, &a, &b, 2);
+            let want = fp8sw_hw_ref(&p, &a, &b);
+            for i in 0..want.len() {
+                assert_eq!(
+                    run.c[i].to_bits(),
+                    want[i].to_bits(),
+                    "{fmt} C[{i}]: {} vs {}",
+                    run.c[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fp8sw_is_much_slower_than_ideal() {
+        let p = MmProblem::fig4(64, ElemFormat::E4M3);
+        let mut rng = XorShift::new(8);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        let run = run_mm(KernelKind::Fp8ToFp32, p, &a, &b, 8);
+        // ~26+ FPU issues per 16 FLOPs: utilization of the 4-FLOP ideal
+        // must be far below 1.
+        assert!(run.gflops() < 6.0, "sw baseline too fast: {}", run.gflops());
+        assert!(run.gflops() > 1.0, "sw baseline unreasonably slow: {}", run.gflops());
+    }
+}

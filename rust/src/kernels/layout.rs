@@ -1,0 +1,159 @@
+//! SPM data placement and multi-core work partitioning.
+//!
+//! Placement rules:
+//! * operand regions are staggered by one bank (8 bytes) relative to
+//!   each other so the lockstep SSR streams of the inner loop start on
+//!   disjoint banks (see `cluster::tests::aligned_streams_*`);
+//! * everything is 8-byte aligned (SSR words);
+//! * a [`LayoutError::DoesNotFit`] reproduces the paper's footnote —
+//!   "*FP32 does not fit into L1 with inner dimension of 256*".
+//!
+//! Work partitioning: rows of C are split evenly across cores (the
+//! Snitch GEMM convention); every core reads all of B.
+
+use super::MmProblem;
+use crate::snitch::SPM_BYTES;
+
+/// Placement failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayoutError {
+    /// Total footprint exceeds the 128 KiB L1 (the Fig. 4 footnote).
+    DoesNotFit { required: usize, available: usize },
+}
+
+impl std::fmt::Display for LayoutError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LayoutError::DoesNotFit { required, available } => write!(
+                f,
+                "workload needs {required} B of L1 but only {available} B exist \
+                 (the paper's 'does not fit into L1' case)"
+            ),
+        }
+    }
+}
+
+/// A placed region.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Region {
+    pub addr: usize,
+    pub bytes: usize,
+}
+
+/// Bump allocator with bank staggering.
+pub struct Planner {
+    cursor: usize,
+    /// How many regions placed so far (drives the stagger).
+    count: usize,
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Planner {
+    pub fn new() -> Self {
+        Planner { cursor: 0, count: 0 }
+    }
+
+    /// Place a region of `bytes`, staggered to start on a fresh bank.
+    pub fn place(&mut self, bytes: usize) -> Result<Region, LayoutError> {
+        // align to 8, then stagger: region i starts at bank (i mod 32)
+        let aligned = self.cursor.div_ceil(8) * 8;
+        let want_bank = self.count % 32;
+        let mut addr = aligned;
+        if (addr / 8) % 32 != want_bank {
+            let delta = (want_bank + 32 - (addr / 8) % 32) % 32;
+            addr += delta * 8;
+        }
+        let end = addr + bytes;
+        if end > SPM_BYTES {
+            return Err(LayoutError::DoesNotFit { required: end, available: SPM_BYTES });
+        }
+        self.cursor = end;
+        self.count += 1;
+        Ok(Region { addr, bytes })
+    }
+
+    pub fn used(&self) -> usize {
+        self.cursor
+    }
+}
+
+/// FP32 kernel footprint: A, B (column-major), C, all FP32.
+pub fn fp32_footprint(p: &MmProblem) -> usize {
+    4 * (p.m * p.k + p.k * p.n + p.m * p.n)
+}
+
+/// MX kernels footprint: FP8 elements for A and B, E8M0 scales, FP32
+/// C, plus the per-core reshaped scale stream buffers (double-buffered)
+/// for the MXFP8 kernel.
+pub fn mx_footprint(p: &MmProblem, num_cores: usize, scale_buffers: bool) -> usize {
+    let elems = p.m * p.k + p.k * p.n;
+    let scales = p.m * (p.k / p.block_size) + (p.k / p.block_size) * p.n;
+    let c = 4 * p.m * p.n;
+    let bufs = if scale_buffers {
+        // 2 buffers × 8 words/block-row × K/32 blocks × 8 B per core
+        2 * 8 * (p.k / p.block_size) * 8 * num_cores
+    } else {
+        0
+    };
+    elems + scales + c + bufs
+}
+
+/// Row range of core `c` out of `n` cores (even split; M must divide).
+pub fn rows_for_core(m: usize, core: usize, num_cores: usize) -> std::ops::Range<usize> {
+    let per = m / num_cores;
+    debug_assert!(m % num_cores == 0, "M={m} not divisible by {num_cores} cores");
+    core * per..(core + 1) * per
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::ElemFormat;
+
+    #[test]
+    fn fp32_k256_does_not_fit() {
+        // The paper's footnote, reproduced as data: M=N=64, K=256 FP32
+        // needs 64·256·4·2 + 64·64·4 = 147456 B > 131072 B.
+        let p = MmProblem::fig4(256, ElemFormat::E4M3);
+        assert!(fp32_footprint(&p) > SPM_BYTES);
+        let p128 = MmProblem::fig4(128, ElemFormat::E4M3);
+        assert!(fp32_footprint(&p128) <= SPM_BYTES);
+    }
+
+    #[test]
+    fn mx_k256_fits() {
+        let p = MmProblem::fig4(256, ElemFormat::E4M3);
+        assert!(mx_footprint(&p, 8, true) <= SPM_BYTES);
+    }
+
+    #[test]
+    fn planner_staggers_banks() {
+        let mut pl = Planner::new();
+        let r0 = pl.place(1000).unwrap();
+        let r1 = pl.place(1000).unwrap();
+        let r2 = pl.place(1000).unwrap();
+        assert_eq!((r0.addr / 8) % 32, 0);
+        assert_eq!((r1.addr / 8) % 32, 1);
+        assert_eq!((r2.addr / 8) % 32, 2);
+        assert!(r1.addr >= r0.addr + 1000);
+    }
+
+    #[test]
+    fn planner_rejects_overflow() {
+        let mut pl = Planner::new();
+        assert!(pl.place(SPM_BYTES + 8).is_err());
+        pl.place(SPM_BYTES - 64).unwrap();
+        assert!(matches!(pl.place(512), Err(LayoutError::DoesNotFit { .. })));
+    }
+
+    #[test]
+    fn row_partition() {
+        assert_eq!(rows_for_core(64, 0, 8), 0..8);
+        assert_eq!(rows_for_core(64, 7, 8), 56..64);
+    }
+}

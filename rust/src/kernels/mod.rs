@@ -1,0 +1,184 @@
+//! The three matrix-multiplication kernels of Fig. 2, as instruction-
+//! stream builders for the Snitch cluster simulator.
+//!
+//! * [`fp32`]   — the FP32 baseline: 2-way SIMD `vfmac.s` with SSR
+//!               streaming and FREP (4 FLOPs/cycle/core ideal);
+//! * [`fp8sw`]  — the FP8-to-FP32 *software* MX baseline: SSR-streamed
+//!               packed FP8, per-lane `fcvt` expansion to FP32, FP32
+//!               FMAs, explicit block-scale materialization and
+//!               application (the paper's 20.9-25× slower kernel);
+//! * [`mxfp8`]  — the paper's kernel: one `mxdotp` per 8 elements with
+//!               both scales fused, scales reshaped and streamed on the
+//!               third SSR, 8-way accumulator unroll under FREP
+//!               (16 FLOPs/cycle/core ideal);
+//! * [`layout`] — SPM placement (bank-staggered operand regions, L1
+//!               capacity checks — reproducing the paper's "FP32 does
+//!               not fit into L1 at K=256" footnote) and row-block
+//!               multi-core partitioning;
+//! * [`reference`] — instruction-order-exact analytical references the
+//!               simulator's results are compared against *bit for
+//!               bit*, plus the FLOP accounting used by Fig. 4.
+//!
+//! FLOP counting follows Table III's footnote: 1 FLOP = 1 FP multiply
+//! or 1 FP add; a matmul is 2·M·N·K FLOPs; scale operations are *not*
+//! counted as useful FLOPs (they are overhead the MXFP8 kernel fuses).
+
+pub mod fp8sw;
+pub mod fp32;
+pub mod layout;
+pub mod mxfp8;
+pub mod reference;
+
+use crate::formats::ElemFormat;
+use crate::snitch::cluster::{Cluster, ClusterConfig, PerfCounters};
+
+/// Which kernel to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    Fp32,
+    Fp8ToFp32,
+    Mxfp8,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Fp32 => "FP32",
+            KernelKind::Fp8ToFp32 => "FP8-to-FP32",
+            KernelKind::Mxfp8 => "MXFP8",
+        }
+    }
+}
+
+/// One matmul problem instance (C[M,N] = A[M,K] · B[K,N]).
+#[derive(Clone, Copy, Debug)]
+pub struct MmProblem {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub fmt: ElemFormat,
+    pub block_size: usize,
+}
+
+impl MmProblem {
+    /// The Fig. 4 workload: rows/cols fixed at 64, inner dim varies.
+    pub fn fig4(k: usize, fmt: ElemFormat) -> Self {
+        MmProblem { m: 64, k, n: 64, fmt, block_size: 32 }
+    }
+
+    /// Useful FLOPs (2·M·N·K; scale ops not counted, Table III note).
+    pub fn flops(&self) -> u64 {
+        2 * self.m as u64 * self.n as u64 * self.k as u64
+    }
+}
+
+/// Result of running one kernel on the simulated cluster.
+#[derive(Clone, Debug)]
+pub struct MmRun {
+    pub kind: KernelKind,
+    pub problem: MmProblem,
+    pub perf: PerfCounters,
+    /// The computed C matrix (row-major M×N).
+    pub c: Vec<f32>,
+    pub num_cores: usize,
+    pub freq_ghz: f64,
+}
+
+impl MmRun {
+    /// Achieved throughput in GFLOPS at the configured clock.
+    pub fn gflops(&self) -> f64 {
+        self.problem.flops() as f64 / self.perf.cycles as f64 * self.freq_ghz
+    }
+
+    /// Ideal per-kernel throughput (GFLOPS) on this cluster.
+    pub fn ideal_gflops(&self) -> f64 {
+        let per_core = match self.kind {
+            KernelKind::Fp32 => 4.0,       // 2-way SIMD MAC
+            KernelKind::Fp8ToFp32 => 4.0,  // bounded by the same FPU MACs
+            KernelKind::Mxfp8 => 16.0,     // 8 mul + 8 add per cycle
+        };
+        per_core * self.num_cores as f64 * self.freq_ghz
+    }
+
+    /// Fraction of the kernel's ideal throughput (the paper's 79.7 %).
+    pub fn utilization(&self) -> f64 {
+        self.gflops() / self.ideal_gflops()
+    }
+}
+
+/// Run `kind` on an `num_cores`-core cluster and return results +
+/// counters. Inputs are FP32 matrices; MX kernels quantize them with
+/// the OCP recipe before staging into SPM.
+pub fn run_mm(
+    kind: KernelKind,
+    problem: MmProblem,
+    a: &[f32],
+    b: &[f32],
+    num_cores: usize,
+) -> MmRun {
+    let cfg = ClusterConfig { num_cores, freq_ghz: 1.0 };
+    let mut cluster = Cluster::new(cfg);
+    let (c_addr, programs) = match kind {
+        KernelKind::Fp32 => fp32::stage(&mut cluster, problem, a, b),
+        KernelKind::Fp8ToFp32 => fp8sw::stage(&mut cluster, problem, a, b),
+        KernelKind::Mxfp8 => mxfp8::stage(&mut cluster, problem, a, b),
+    };
+    for (core, prog) in programs.into_iter().enumerate() {
+        cluster.load_program(core, prog);
+    }
+    // generous guard: the slowest kernel runs ~30 cycles per 8 elements
+    let guard = 200 + (problem.flops() / num_cores as u64) * 8;
+    let perf = cluster.run(guard);
+    let c = cluster.spm.read_f32_slice(c_addr, problem.m * problem.n);
+    MmRun { kind, problem, perf, c, num_cores, freq_ghz: cfg.freq_ghz }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::XorShift;
+
+    #[test]
+    fn flop_accounting() {
+        let p = MmProblem::fig4(128, ElemFormat::E4M3);
+        assert_eq!(p.flops(), 2 * 64 * 64 * 128);
+    }
+
+    #[test]
+    fn all_three_kernels_agree_with_their_references() {
+        let mut rng = XorShift::new(0xC0DE);
+        let p = MmProblem { m: 16, k: 64, n: 16, fmt: ElemFormat::E4M3, block_size: 32 };
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        for (kind, want) in [
+            (KernelKind::Fp32, reference::fp32_hw_ref(&p, &a, &b)),
+            (KernelKind::Fp8ToFp32, reference::fp8sw_hw_ref(&p, &a, &b)),
+            (KernelKind::Mxfp8, reference::mxfp8_hw_ref(&p, &a, &b)),
+        ] {
+            let run = run_mm(kind, p, &a, &b, 2);
+            assert_eq!(run.c.len(), want.len());
+            for (i, (&got, &w)) in run.c.iter().zip(&want).enumerate() {
+                assert!(
+                    got == w || (got.is_nan() && w.is_nan()),
+                    "{}: C[{i}] = {got:?} (bits {:08x}), want {w:?} ({:08x})",
+                    kind.name(),
+                    got.to_bits(),
+                    w.to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mxfp8_beats_fp32_beats_fp8sw() {
+        let mut rng = XorShift::new(0x5EED);
+        let p = MmProblem::fig4(64, ElemFormat::E4M3);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        let mx = run_mm(KernelKind::Mxfp8, p, &a, &b, 8);
+        let f32k = run_mm(KernelKind::Fp32, p, &a, &b, 8);
+        let sw = run_mm(KernelKind::Fp8ToFp32, p, &a, &b, 8);
+        assert!(mx.gflops() > f32k.gflops() * 2.0, "mx {} vs fp32 {}", mx.gflops(), f32k.gflops());
+        assert!(f32k.gflops() > sw.gflops() * 2.0, "fp32 {} vs sw {}", f32k.gflops(), sw.gflops());
+    }
+}

@@ -1,0 +1,339 @@
+//! The MXFP8 kernel (Fig. 2, right): the paper's contribution in
+//! action — one `mxdotp` per 8 elements, both block scales fused.
+//!
+//! Structure per (row m, 8-column tile):
+//!
+//! ```text
+//! fence; ssr2.base = scale_buf[t%2]      // re-arm the scale stream
+//! c0..c7 = 0
+//! frep K/8 { mxdotp c_j, ft0, ft1, ft2, 0   (j = 0..7) }
+//! <int core reshapes tile t+1's scales into scale_buf[(t+1)%2]>
+//! store c0..c7
+//! ```
+//!
+//! ft0 streams A element words (each repeated 8×), ft1 the column-major
+//! B words, ft2 the *reshaped* scale-pair words ("Reshape scales (Sa
+//! and Sb to S) for SSR streaming", Fig. 2). The reshape runs on the
+//! integer core **while** the FPU replays the FREP body — Snitch's
+//! pseudo dual-issue hides it. A stride-0 middle dimension on ft2
+//! replays each block's scale word for all four `mxdotp`s of a 32-block
+//! (block size stays configurable in software by changing that bound).
+//! Ideal rate: 8 MACs = 16 FLOPs per cycle per core.
+
+use super::layout::{mx_footprint, rows_for_core, Planner, Region};
+use super::reference::quantize_operands;
+use super::{fp32::emit_ssr, MmProblem};
+use crate::formats::MxMatrix;
+use crate::snitch::cluster::Cluster;
+use crate::snitch::isa::{csr, FpInstr, Instr, IntInstr, SsrField};
+use crate::snitch::SPM_BYTES;
+
+/// Staged operand addresses (shared with the fp8sw kernel).
+pub(super) struct MxRegions {
+    pub a: Region,
+    pub b: Region,
+    /// Padded byte stride of one A row / one B column (K + 8: one pad
+    /// word so lockstep streams rotate banks instead of colliding).
+    pub a_stride: usize,
+    pub b_stride: usize,
+    pub asc: Region,
+    pub bs16: Region,
+    pub c: Region,
+    /// Two scale-stream buffers per core.
+    pub bufs: Vec<[Region; 2]>,
+}
+
+/// Quantize + place the MX operands (used by both MX kernels):
+/// A elements row-major, B elements column-major, A scales as bytes
+/// (with one guard row for the reshape lookahead), B scales pre-shifted
+/// into the high byte of a u16 (so the reshape loop is lhu+or+sh).
+pub(super) fn stage_mx(
+    cluster: &mut Cluster,
+    p: MmProblem,
+    a: &[f32],
+    b: &[f32],
+) -> (MxRegions, MxMatrix, MxMatrix) {
+    let ncores = cluster.cores.len();
+    assert_eq!(p.m % ncores, 0);
+    assert_eq!(p.n % 8, 0);
+    assert_eq!(p.k % p.block_size, 0);
+    assert_eq!(p.block_size % 8, 0);
+    assert!(
+        mx_footprint(&p, ncores, true) <= SPM_BYTES,
+        "MX workload does not fit into L1"
+    );
+    let (qa, qb) = quantize_operands(&p, a, b);
+    let kb = p.k / p.block_size;
+
+    let a_stride = p.k + 8;
+    let b_stride = p.k + 8;
+    let mut plan = Planner::new();
+    let a_reg = plan.place(a_stride * p.m).unwrap();
+    let b_reg = plan.place(b_stride * p.n).unwrap();
+    let asc = plan.place((p.m + 1) * kb).unwrap(); // +1 guard row
+    let bs16 = plan.place(p.n * kb * 2).unwrap();
+    let c_reg = plan.place(4 * p.m * p.n).unwrap();
+    let bufs: Vec<[Region; 2]> = (0..ncores)
+        .map(|_| [plan.place(8 * kb * 8).unwrap(), plan.place(8 * kb * 8).unwrap()])
+        .collect();
+
+    // A elements row-major (padded rows).
+    for m in 0..p.m {
+        for k in 0..p.k {
+            cluster.spm.data[a_reg.addr + m * a_stride + k] = qa.elem_bits(m, k);
+        }
+    }
+    // B elements column-major (padded columns): Bcol[n][k] = qb[k][n].
+    for n in 0..p.n {
+        for k in 0..p.k {
+            cluster.spm.data[b_reg.addr + n * b_stride + k] = qb.elem_bits(k, n);
+        }
+    }
+    // A scales: Asc[m][kb] bytes (guard row stays zero).
+    for m in 0..p.m {
+        for b_i in 0..kb {
+            cluster.spm.data[asc.addr + m * kb + b_i] = qa.scale(m, b_i).0;
+        }
+    }
+    // B scales as u16 = xb << 8, laid out [n][kb].
+    for n in 0..p.n {
+        for b_i in 0..kb {
+            cluster
+                .spm
+                .write_u16(bs16.addr + (n * kb + b_i) * 2, (qb.scale(n, b_i).0 as u16) << 8);
+        }
+    }
+    (MxRegions { a: a_reg, b: b_reg, a_stride, b_stride, asc, bs16, c: c_reg, bufs }, qa, qb)
+}
+
+/// Emit the straight-line reshape of one tile's scale words:
+/// for each block kb, read Xa[m][kb] once, then for each of the 8
+/// columns read the pre-shifted Xb, OR, and store the pair word.
+/// x20 = &Asc[m][0], x21 = &Bs16[n0][0], `buf_reg` = target buffer.
+pub(super) fn emit_reshape_packed(prog: &mut Vec<Instr>, kb: usize, buf_reg: u8) {
+    // The 2-bit `sl` field of `mxdotp` (Table II) selects one of FOUR
+    // scale pairs per 64-bit register, so one streamed word covers four
+    // unrolled `mxdotp`s: 4x less ft2 bandwidth than pair-per-word.
+    // Per block kb, the eight (Xa, Xb_j) pairs pack into two u64 words,
+    // assembled as four u32 stores.
+    for b_i in 0..kb {
+        prog.push(IntInstr::Lbu { rd: 8, rs1: 20, imm: b_i as i64 }.into());
+        for w in 0..2usize {
+            for half in 0..2usize {
+                let j0 = 4 * w + 2 * half;
+                // u32 = pair(j0) | pair(j0 + 1) << 16
+                prog.push(IntInstr::Lhu { rd: 9, rs1: 21, imm: (j0 * kb + b_i) as i64 * 2 }.into());
+                prog.push(IntInstr::Or { rd: 9, rs1: 9, rs2: 8 }.into());
+                prog.push(IntInstr::Lhu { rd: 12, rs1: 21, imm: ((j0 + 1) * kb + b_i) as i64 * 2 }.into());
+                prog.push(IntInstr::Or { rd: 12, rs1: 12, rs2: 8 }.into());
+                prog.push(IntInstr::Slli { rd: 12, rs1: 12, shamt: 16 }.into());
+                prog.push(IntInstr::Or { rd: 9, rs1: 9, rs2: 12 }.into());
+                prog.push(IntInstr::Sw { rs1: buf_reg, rs2: 9, imm: ((b_i * 2 + w) * 8 + 4 * half) as i64 }.into());
+            }
+        }
+    }
+}
+
+pub(super) fn emit_reshape(prog: &mut Vec<Instr>, kb: usize, buf_reg: u8) {
+    for b_i in 0..kb {
+        prog.push(IntInstr::Lbu { rd: 8, rs1: 20, imm: b_i as i64 }.into());
+        for j in 0..8usize {
+            prog.push(
+                IntInstr::Lhu { rd: 9, rs1: 21, imm: (j * kb + b_i) as i64 * 2 }.into(),
+            );
+            prog.push(IntInstr::Or { rd: 9, rs1: 9, rs2: 8 }.into());
+            prog.push(
+                IntInstr::Sh { rs1: buf_reg, rs2: 9, imm: (b_i * 8 + j) as i64 * 8 }.into(),
+            );
+        }
+    }
+}
+
+/// Emit the reshape-pointer advance with ntile wrap:
+/// x21 += 8·kb·2; if ++x2 == N/8 { x2 = 0; x21 = x22 (Bs16 base);
+/// x20 += kb }.
+pub(super) fn emit_reshape_advance(prog: &mut Vec<Instr>, kb: usize) {
+    prog.push(IntInstr::Addi { rd: 21, rs1: 21, imm: 16 * kb as i64 }.into());
+    prog.push(IntInstr::Addi { rd: 2, rs1: 2, imm: 1 }.into());
+    let skip = prog.len() + 4;
+    prog.push(IntInstr::Bne { rs1: 2, rs2: 3, target: skip }.into());
+    prog.push(IntInstr::Li { rd: 2, imm: 0 }.into());
+    prog.push(IntInstr::Add { rd: 21, rs1: 22, rs2: 0 }.into());
+    prog.push(IntInstr::Addi { rd: 20, rs1: 20, imm: kb as i64 }.into());
+}
+
+/// Stage the MXFP8 kernel. Returns (C address, per-core programs).
+pub fn stage(cluster: &mut Cluster, p: MmProblem, a: &[f32], b: &[f32]) -> (usize, Vec<Vec<Instr>>) {
+    let (r, _qa, _qb) = stage_mx(cluster, p, a, b);
+    let ncores = cluster.cores.len();
+    let progs = (0..ncores).map(|c| build(p, c, ncores, &r)).collect();
+    (r.c.addr, progs)
+}
+
+fn build(p: MmProblem, core: usize, ncores: usize, r: &MxRegions) -> Vec<Instr> {
+    let rows = rows_for_core(p.m, core, ncores);
+    let nrows = rows.len() as u32;
+    let (k, n) = (p.k, p.n);
+    let kb = k / p.block_size;
+    let per_block = p.block_size / 8; // mxdotp issues per MX block
+    let [buf0, buf1] = r.bufs[core];
+    let e5m2 = p.fmt == crate::formats::ElemFormat::E5M2;
+    let mut prog: Vec<Instr> = Vec::new();
+
+    // FP8 format CSR.
+    prog.push(IntInstr::Li { rd: 6, imm: e5m2 as i64 }.into());
+    prog.push(IntInstr::CsrW { csr: csr::FP8_FMT, rs1: 6 }.into());
+
+    // ft0: A words — (k8: K/8, 8), (ntile: N/8, 0), (m: rows, K); rep 7.
+    emit_ssr(
+        &mut prog,
+        0,
+        (r.a.addr + rows.start * r.a_stride) as i64,
+        &[(k as u32 / 8, 8), (n as u32 / 8, 0), (nrows, r.a_stride as i64)],
+        7,
+    );
+    // ft1: B words — (j: 8, K), (k8: K/8, 8), (ntile: N/8, 8K), (m: rows, 0).
+    emit_ssr(
+        &mut prog,
+        1,
+        r.b.addr as i64,
+        &[
+            (8, r.b_stride as i64),
+            (k as u32 / 8, 8),
+            (n as u32 / 8, 8 * r.b_stride as i64),
+            (nrows, 0),
+        ],
+        0,
+    );
+    // ft2: scale words from the per-tile buffer — (j: 8, 8),
+    // (k8-in-block: per_block, 0), (block: kb, 64). Bounds set once;
+    // the base is re-armed per tile. Configure everything except base
+    // by pointing at buf0 now (arming a dummy run that tile 0 replaces
+    // via the in-loop base write).
+    prog.push(IntInstr::Li { rd: 5, imm: 2 }.into());
+    prog.push(IntInstr::Scfg { ssr: 2, field: SsrField::Dims, rs1: 5 }.into());
+    for (d, (bound, stride)) in
+        [(2u32, 8i64), (per_block as u32, 0), (kb as u32, 16)].into_iter().enumerate()
+    {
+        prog.push(IntInstr::Li { rd: 5, imm: bound as i64 - 1 }.into());
+        prog.push(IntInstr::Scfg { ssr: 2, field: SsrField::Bound(d as u8), rs1: 5 }.into());
+        prog.push(IntInstr::Li { rd: 5, imm: stride }.into());
+        prog.push(IntInstr::Scfg { ssr: 2, field: SsrField::Stride(d as u8), rs1: 5 }.into());
+    }
+    // Each scale word is read by four consecutive mxdotp (sl = 0..3).
+    prog.push(IntInstr::Li { rd: 5, imm: 3 }.into());
+    prog.push(IntInstr::Scfg { ssr: 2, field: SsrField::Rep, rs1: 5 }.into());
+    prog.push(IntInstr::Li { rd: 6, imm: 1 }.into());
+    prog.push(IntInstr::CsrW { csr: csr::SSR_ENABLE, rs1: 6 }.into());
+
+    // Reshape pointers: x20 = &Asc[m_lo], x21 = x22 = Bs16 base.
+    prog.push(IntInstr::Li { rd: 20, imm: (r.asc.addr + rows.start * kb) as i64 }.into());
+    prog.push(IntInstr::Li { rd: 22, imm: r.bs16.addr as i64 }.into());
+    prog.push(IntInstr::Add { rd: 21, rs1: 22, rs2: 0 }.into());
+    prog.push(IntInstr::Li { rd: 2, imm: 0 }.into()); // reshape ntile counter
+    prog.push(IntInstr::Li { rd: 3, imm: n as i64 / 8 }.into());
+
+    // Prologue: reshape tile 0 into buf0, advance pointers to tile 1.
+    prog.push(IntInstr::Li { rd: 16, imm: buf0.addr as i64 }.into());
+    emit_reshape_packed(&mut prog, kb, 16);
+    emit_reshape_advance(&mut prog, kb);
+    prog.push(IntInstr::Li { rd: 7, imm: buf0.addr as i64 }.into());
+    prog.push(IntInstr::Li { rd: 16, imm: buf1.addr as i64 }.into());
+
+    // Loop bookkeeping.
+    prog.push(IntInstr::Li { rd: 11, imm: k as i64 / 8 - 1 }.into());
+    prog.push(IntInstr::Li { rd: 10, imm: (r.c.addr + rows.start * n * 4) as i64 }.into());
+    let tiles = nrows as i64 * (n as i64 / 8);
+    prog.push(IntInstr::Li { rd: 1, imm: tiles }.into());
+
+    let loop_top = prog.len();
+    // Wait for the previous tile's stream + stores, re-arm ft2.
+    prog.push(IntInstr::FpFence.into());
+    prog.push(IntInstr::Scfg { ssr: 2, field: SsrField::Base, rs1: 7 }.into());
+    // Zero the 8 FP32 accumulators.
+    for i in 0..8u8 {
+        prog.push(FpInstr::VfcpkaS { fd: 8 + i, fs1: 3, fs2: 3 }.into());
+    }
+    prog.push(IntInstr::Frep { n_frep_reg: 11, max_inst: 8 }.into());
+    for i in 0..8u8 {
+        prog.push(FpInstr::Mxdotp { fd: 8 + i, fs1: 0, fs2: 1, fs3: 2, sl: i % 4 }.into());
+    }
+    // Reshape the NEXT tile's scales while the FREP replays (pseudo
+    // dual-issue: this is hidden behind the K/8 · 8 mxdotp cycles).
+    emit_reshape_packed(&mut prog, kb, 16);
+    emit_reshape_advance(&mut prog, kb);
+    // Swap the double buffers (x9 scratch).
+    prog.push(IntInstr::Add { rd: 9, rs1: 7, rs2: 0 }.into());
+    prog.push(IntInstr::Add { rd: 7, rs1: 16, rs2: 0 }.into());
+    prog.push(IntInstr::Add { rd: 16, rs1: 9, rs2: 0 }.into());
+    // Store the 8 results (pushed once the sequencer drains).
+    for i in 0..8u8 {
+        prog.push(FpInstr::Fsw { fs2: 8 + i, rs1: 10, imm: 4 * i as i64 }.into());
+    }
+    prog.push(IntInstr::Addi { rd: 10, rs1: 10, imm: 32 }.into());
+    prog.push(IntInstr::Addi { rd: 1, rs1: 1, imm: -1 }.into());
+    prog.push(IntInstr::Bne { rs1: 1, rs2: 0, target: loop_top }.into());
+    prog.push(IntInstr::FpFence.into());
+    prog.push(IntInstr::Halt.into());
+    prog
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference::mxfp8_hw_ref;
+    use super::super::{run_mm, KernelKind, MmProblem};
+    use crate::formats::ElemFormat;
+    use crate::rng::XorShift;
+
+    #[test]
+    fn mxfp8_kernel_bit_exact_vs_reference() {
+        for fmt in [ElemFormat::E4M3, ElemFormat::E5M2] {
+            let p = MmProblem { m: 8, k: 64, n: 16, fmt, block_size: 32 };
+            let mut rng = XorShift::new(3);
+            let a = rng.normal_vec(p.m * p.k, 1.0);
+            let b = rng.normal_vec(p.k * p.n, 1.0);
+            let run = run_mm(KernelKind::Mxfp8, p, &a, &b, 4);
+            let want = mxfp8_hw_ref(&p, &a, &b);
+            for i in 0..want.len() {
+                assert_eq!(
+                    run.c[i].to_bits(),
+                    want[i].to_bits(),
+                    "{fmt} C[{i}]: {} vs {}",
+                    run.c[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mxfp8_high_utilization_at_k256() {
+        let p = MmProblem::fig4(256, ElemFormat::E4M3);
+        let mut rng = XorShift::new(4);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        let run = run_mm(KernelKind::Mxfp8, p, &a, &b, 8);
+        let util = run.utilization();
+        // The paper reports 79.7% of ideal at the largest size.
+        assert!(util > 0.70, "utilization too low: {util}");
+        assert!(util <= 1.0, "utilization impossible: {util}");
+        assert_eq!(run.perf.mxdotp_total(), (p.m * p.n * p.k / 8 / 8) as u64 * 8);
+    }
+
+    #[test]
+    fn mxfp8_configurable_block_size() {
+        // "the block size remains configurable in software": run with
+        // block 16 (two mxdotp per block) and 64.
+        for bs in [16usize, 64] {
+            let p = MmProblem { m: 8, k: 128, n: 8, fmt: ElemFormat::E4M3, block_size: bs };
+            let mut rng = XorShift::new(5);
+            let a = rng.normal_vec(p.m * p.k, 1.0);
+            let b = rng.normal_vec(p.k * p.n, 1.0);
+            let run = run_mm(KernelKind::Mxfp8, p, &a, &b, 2);
+            let want = mxfp8_hw_ref(&p, &a, &b);
+            for i in 0..want.len() {
+                assert_eq!(run.c[i].to_bits(), want[i].to_bits(), "bs={bs} C[{i}]");
+            }
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Instruction-order-exact analytical references for the three kernels.
+//!
+//! These replicate, in plain Rust, the *exact* floating-point operation
+//! order each kernel's instruction stream performs — same lane split,
+//! same accumulator rotation, same rounding points — so the simulator's
+//! results can be asserted **bit-for-bit** against them. That check
+//! closes the loop between the ISA semantics (dotp/formats) and the
+//! microarchitecture model (snitch): any divergence in either is a test
+//! failure, not a tolerance.
+
+use super::MmProblem;
+use crate::dotp::exact::mxdotp_exact;
+use crate::formats::{MxMatrix, ScaleAxis};
+
+/// Stage-identical quantization of the A (row-axis) and B (col-axis)
+/// operands — shared by the MX kernel stagers and these references.
+pub fn quantize_operands(p: &MmProblem, a: &[f32], b: &[f32]) -> (MxMatrix, MxMatrix) {
+    let qa = MxMatrix::quantize(a, p.m, p.k, p.fmt, p.block_size, ScaleAxis::Row);
+    let qb = MxMatrix::quantize(b, p.k, p.n, p.fmt, p.block_size, ScaleAxis::Col);
+    (qa, qb)
+}
+
+/// FP32 kernel reference: 2-way SIMD `vfmac.s` lane split (even k in
+/// the low lane, odd k in the high lane), sequential FMA rounding per
+/// lane, one final `vfsum.s` rounding.
+pub fn fp32_hw_ref(p: &MmProblem, a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(p.k % 2, 0);
+    let mut c = vec![0.0f32; p.m * p.n];
+    for m in 0..p.m {
+        for n in 0..p.n {
+            let mut lo = 0.0f32;
+            let mut hi = 0.0f32;
+            for k2 in 0..p.k / 2 {
+                lo = f32::mul_add(a[m * p.k + 2 * k2], b[2 * k2 * p.n + n], lo);
+                hi = f32::mul_add(a[m * p.k + 2 * k2 + 1], b[(2 * k2 + 1) * p.n + n], hi);
+            }
+            c[m * p.n + n] = lo + hi;
+        }
+    }
+    c
+}
+
+/// FP8-to-FP32 software kernel reference: per 32-block, four rotating
+/// FP32 partial accumulators (lane i -> p[i % 4]), tree reduction,
+/// scale materialization as two FP32 powers of two multiplied together,
+/// and a final per-block FMA into the running total.
+pub fn fp8sw_hw_ref(p: &MmProblem, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let (qa, qb) = quantize_operands(p, a, b);
+    let bs = p.block_size;
+    let mut c = vec![0.0f32; p.m * p.n];
+    for m in 0..p.m {
+        for n in 0..p.n {
+            let mut total = 0.0f32;
+            for kb in 0..p.k / bs {
+                let mut part = [0.0f32; 4];
+                for lane in 0..bs {
+                    let k = kb * bs + lane;
+                    part[lane % 4] = f32::mul_add(
+                        qa.elem_value(m, k),
+                        qb.elem_value(k, n),
+                        part[lane % 4],
+                    );
+                }
+                let r01 = part[0] + part[1];
+                let r23 = part[2] + part[3];
+                let red = r01 + r23;
+                let sxa = e8m0_to_f32(qa.scale(m, kb).0);
+                let sxb = e8m0_to_f32(qb.scale(n, kb).0);
+                let s = sxa * sxb;
+                total = f32::mul_add(red, s, total);
+            }
+            c[m * p.n + n] = total;
+        }
+    }
+    c
+}
+
+/// E8M0 byte to FP32 exactly as the `FcvtSE8` instruction does.
+fn e8m0_to_f32(byte: u8) -> f32 {
+    crate::formats::E8m0(byte).value_f32()
+}
+
+/// MXFP8 kernel reference: one `mxdotp` (exact sum, single RNE round)
+/// per 8 elements, accumulated in instruction order along K.
+pub fn mxfp8_hw_ref(p: &MmProblem, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let (qa, qb) = quantize_operands(p, a, b);
+    let spec = p.fmt.float_spec().expect("MXFP8 kernel needs an FP8 format");
+    let per_block = p.block_size / 8;
+    let mut c = vec![0.0f32; p.m * p.n];
+    for m in 0..p.m {
+        for n in 0..p.n {
+            let mut acc = 0.0f32;
+            for k8 in 0..p.k / 8 {
+                let kb = k8 / per_block;
+                let mut pa = [0u8; 8];
+                let mut pb = [0u8; 8];
+                for i in 0..8 {
+                    pa[i] = qa.elem_bits(m, k8 * 8 + i);
+                    pb[i] = qb.elem_bits(k8 * 8 + i, n);
+                }
+                let xa = qa.scale(m, kb).0;
+                let xb = qb.scale(n, kb).0;
+                acc = mxdotp_exact(spec, &pa, &pb, xa, xb, acc);
+            }
+            c[m * p.n + n] = acc;
+        }
+    }
+    c
+}
+
+/// Plain f64 matmul, for accuracy comparisons (not bit-exactness).
+pub fn matmul_f64(p: &MmProblem, a: &[f32], b: &[f32]) -> Vec<f64> {
+    let mut c = vec![0.0f64; p.m * p.n];
+    for m in 0..p.m {
+        for n in 0..p.n {
+            let mut s = 0.0f64;
+            for k in 0..p.k {
+                s += a[m * p.k + k] as f64 * b[k * p.n + n] as f64;
+            }
+            c[m * p.n + n] = s;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::ElemFormat;
+    use crate::rng::XorShift;
+
+    fn problem() -> MmProblem {
+        MmProblem { m: 8, k: 64, n: 8, fmt: ElemFormat::E4M3, block_size: 32 }
+    }
+
+    #[test]
+    fn references_agree_to_quantization_error() {
+        let p = problem();
+        let mut rng = XorShift::new(77);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        let exact = matmul_f64(&p, &a, &b);
+        let fp32 = fp32_hw_ref(&p, &a, &b);
+        let sw = fp8sw_hw_ref(&p, &a, &b);
+        let mx = mxfp8_hw_ref(&p, &a, &b);
+        let scale = (p.k as f64).sqrt();
+        for i in 0..exact.len() {
+            assert!((fp32[i] as f64 - exact[i]).abs() < 1e-4 * scale, "fp32[{i}]");
+            // both MX paths quantize: same error budget
+            assert!((sw[i] as f64 - exact[i]).abs() < 0.2 * scale, "sw[{i}]");
+            assert!((mx[i] as f64 - exact[i]).abs() < 0.2 * scale, "mx[{i}]");
+        }
+    }
+
+    #[test]
+    fn sw_and_mx_references_are_close_but_differently_rounded() {
+        // Same quantized operands, different accumulation orders: the
+        // results agree to a few ulps but are not required to be
+        // bit-identical — this is the paper's "internal precision is
+        // implementation-defined" point.
+        let p = problem();
+        let mut rng = XorShift::new(78);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        let sw = fp8sw_hw_ref(&p, &a, &b);
+        let mx = mxfp8_hw_ref(&p, &a, &b);
+        for i in 0..sw.len() {
+            let d = (sw[i] - mx[i]).abs();
+            assert!(d <= 1e-4 * sw[i].abs().max(1.0), "sw {} vs mx {}", sw[i], mx[i]);
+        }
+    }
+
+    #[test]
+    fn mxfp8_ref_blocks_map_to_scales() {
+        // One block of large values + one of small: per-block scales
+        // must keep both contributions.
+        let p = MmProblem { m: 1, k: 64, n: 1, fmt: ElemFormat::E4M3, block_size: 32 };
+        let mut a = vec![100.0f32; 32];
+        a.extend(vec![0.01f32; 32]);
+        let b = vec![1.0f32; 64];
+        let mx = mxfp8_hw_ref(&p, &a, &b);
+        let want = 32.0 * 100.0 + 32.0 * 0.01;
+        // e4m3 mid-grid values like 100.0 carry up to 4% quantization error
+        assert!((mx[0] - want).abs() / want < 0.05, "{} vs {want}", mx[0]);
+    }
+}

@@ -1,0 +1,41 @@
+//! # mxdotp — full-system reproduction of the MXDOTP paper
+//!
+//! *MXDOTP: A RISC-V ISA Extension for Enabling Microscaling (MX)
+//! Floating-Point Dot Products* (İslamoğlu et al., CS.AR 2025).
+//!
+//! The crate contains every system the paper builds on (see DESIGN.md):
+//!
+//! * [`formats`] — the OCP Microscaling v1.0 format library: FP8
+//!   (E5M2/E4M3), FP6 (E3M2/E2M3), FP4 (E2M1), INT8 elements, E8M0
+//!   block scales, RNE quantization, and the spec's Dot / DotGeneral.
+//! * [`dotp`] — a bit-accurate model of the MXDOTP dot-product-
+//!   accumulate datapath (95-bit fixed-point early accumulation,
+//!   anchor 34, single RNE round to FP32) plus the baseline units the
+//!   paper compares against in Table III.
+//! * [`snitch`] — a cycle-accurate simulator of the 8-core Snitch
+//!   cluster: RV32IMAFD subset + FREP + SSR + the `mxdotp` instruction,
+//!   32-bank shared L1 SPM behind a logarithmic interconnect, DMA.
+//! * [`kernels`] — the three matrix-multiplication kernels of Fig. 2
+//!   (FP32, FP8-to-FP32 software MX, MXFP8 hardware MX) as instruction-
+//!   stream builders for the simulator.
+//! * [`energy`] — GE-level area accounting and per-op energy models
+//!   calibrated to the paper's 12 nm FinFET implementation numbers.
+//! * [`runtime`] — PJRT CPU runtime loading the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`); Python is never on this path.
+//! * [`coordinator`] — the serving layer: request queue, dynamic
+//!   batcher, worker pool, per-layer simulated hardware cost.
+//! * [`workload`] — DeiT-Tiny-shaped synthetic workload generation.
+
+pub mod dotp;
+pub mod formats;
+pub mod energy;
+pub mod kernels;
+pub mod cli;
+pub mod coordinator;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod snitch;
+pub mod workload;
+
+pub use formats::{ElemFormat, MxMatrix, MxVector};

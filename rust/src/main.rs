@@ -1,0 +1,133 @@
+//! `mxdotp-cli`: the leader entrypoint. Quantize tensors, run the
+//! cycle-accurate kernels, regenerate the paper's tables/figures, or
+//! serve the AOT-compiled model through the coordinator.
+
+use anyhow::Result;
+use mxdotp::cli::{parse, Command, USAGE};
+use mxdotp::coordinator::{BatchPolicy, Coordinator, PjrtExecutor, Request};
+use mxdotp::formats::MxVector;
+use mxdotp::kernels::{run_mm, MmProblem};
+use mxdotp::rng::XorShift;
+use mxdotp::runtime::Runtime;
+use mxdotp::workload::{calibrate_util, generate_input, generate_params, DeitConfig};
+use mxdotp::{report, snitch};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = match parse(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    match cmd {
+        Command::Help => print!("{USAGE}"),
+        Command::Info => {
+            println!("mxdotp {} — MXDOTP paper reproduction", env!("CARGO_PKG_VERSION"));
+            println!(
+                "cluster model: {} cores, {} KiB SPM, {} banks, 3 SSRs/core",
+                snitch::NUM_CORES,
+                snitch::SPM_BYTES / 1024,
+                snitch::SPM_BANKS
+            );
+            match Runtime::new("artifacts") {
+                Ok(rt) => println!(
+                    "PJRT: {} (artifacts: {})",
+                    rt.platform(),
+                    if Runtime::artifacts_present(std::path::Path::new("artifacts")) {
+                        "present"
+                    } else {
+                        "missing — run `make artifacts`"
+                    }
+                ),
+                Err(e) => println!("PJRT: unavailable ({e})"),
+            }
+        }
+        Command::Quantize { fmt, block, n, seed } => {
+            let mut rng = XorShift::new(seed);
+            let data = rng.normal_vec(n * block, 1.0);
+            let v = MxVector::quantize(&data, fmt, block);
+            println!("quantized {} values to MX{} (block {block}):", n * block, fmt);
+            for (i, scale) in v.scales.iter().enumerate() {
+                let vals = v.block_values(i);
+                println!(
+                    "  block {i}: scale {scale}  elems[0..4] = {:?}",
+                    &vals[..4.min(vals.len())]
+                );
+            }
+            let dq = v.dequantize();
+            let err: f32 =
+                data.iter().zip(&dq).map(|(a, b)| (a - b).abs()).sum::<f32>() / data.len() as f32;
+            println!("  mean |dequant - original| = {err:.5}");
+        }
+        Command::Simulate { kernel, m, k, n, cores, fmt, seed } => {
+            let p = MmProblem { m, k, n, fmt, block_size: 32 };
+            let mut rng = XorShift::new(seed);
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(k * n, 1.0);
+            let run = run_mm(kernel, p, &a, &b, cores);
+            println!("{}", report::render_run_detailed(&run));
+        }
+        Command::Reproduce { what, cores, fmt } => {
+            if what == "fig3" || what == "all" {
+                println!("{}", report::render_fig3());
+            }
+            if what == "fig4" || what == "all" {
+                let points = report::fig4_sweep(fmt, cores, 42);
+                println!("{}", report::render_fig4(&points, fmt));
+            }
+            if what == "table3" || what == "all" {
+                let point = report::table3_cluster_point(42);
+                println!("{}", report::render_table3(Some(&point)));
+            }
+        }
+        Command::Serve { requests, batch, artifacts } => {
+            let rt = Runtime::new(&artifacts)?;
+            let cfg = DeitConfig::default();
+            println!("serving DeiT-Tiny-shaped encoder block via PJRT ({})", rt.platform());
+            let params = generate_params(&cfg, 42);
+            let exec = PjrtExecutor::new(&rt, cfg, params)?;
+            println!("calibrating MXFP8 utilization on the cycle-accurate cluster...");
+            let util = calibrate_util(&cfg, snitch::NUM_CORES, 1);
+            println!("  calibrated utilization: {:.1} %", util * 100.0);
+            let mut coord = Coordinator::new(
+                cfg,
+                BatchPolicy { max_batch: batch, max_wait_ticks: 4 },
+                exec,
+                util,
+            );
+            let t0 = std::time::Instant::now();
+            for i in 0..requests as u64 {
+                coord.submit(Request { id: i, input: generate_input(&cfg, 1000 + i) });
+            }
+            let mut responses = Vec::new();
+            while coord.pending() > 0 {
+                responses.extend(coord.tick()?);
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let st = coord.stats;
+            println!(
+                "served {} requests in {} batches (mean batch {:.1}) in {:.3} s host wall-clock",
+                st.served,
+                st.batches,
+                st.mean_batch_size(),
+                wall
+            );
+            println!(
+                "  host latency: mean {:.1} µs, max {:.1} µs; throughput {:.1} req/s",
+                st.mean_latency_us(),
+                st.max_latency_us,
+                st.served as f64 / wall
+            );
+            println!(
+                "  simulated Snitch cluster cost: {} cycles ({:.1} µs @1 GHz), {:.1} µJ total",
+                st.total_sim_cycles,
+                st.total_sim_cycles as f64 / 1000.0,
+                st.total_sim_energy_uj
+            );
+            drop(responses);
+        }
+    }
+    Ok(())
+}

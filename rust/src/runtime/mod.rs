@@ -1,0 +1,122 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas
+//! artifacts from `artifacts/*.hlo.txt`.
+//!
+//! This is the only place the crate touches XLA. Python is never on
+//! this path: `make artifacts` ran `python/compile/aot.py` once at
+//! build time; here the HLO **text** (not a serialized proto — see
+//! DESIGN.md §3) is parsed, compiled for the PJRT CPU client and
+//! executed with concrete buffers.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A compiled model artifact.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client + the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at `artifact_dir`.
+    pub fn new(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime { client, artifact_dir: artifact_dir.into() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact by file name.
+    pub fn load(&self, file: &str) -> Result<Executable> {
+        let path = self.artifact_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {file}: {e:?}"))?;
+        Ok(Executable { name: file.to_string(), exe })
+    }
+
+    /// Does the artifact directory contain a compiled model set?
+    pub fn artifacts_present(dir: &Path) -> bool {
+        dir.join("model.hlo.txt").exists()
+    }
+}
+
+impl Executable {
+    /// Execute with row-major f32 inputs of the given shapes; returns
+    /// the flattened f32 outputs (the aot pipeline lowers with
+    /// `return_tuple=True`, so the single result is a 1-tuple).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                xla::Literal::vec1(data)
+                    .reshape(shape)
+                    .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync: {e:?}"))?;
+        let tuple = result.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        tuple
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// One line of `artifacts/manifest.txt`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub file: String,
+    pub entry: String,
+    pub detail: Vec<String>,
+}
+
+/// Parse the manifest written by `python/compile/aot.py`.
+pub fn parse_manifest(text: &str) -> Vec<ManifestEntry> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            let mut parts = l.split_whitespace().map(str::to_string);
+            ManifestEntry {
+                file: parts.next().unwrap_or_default(),
+                entry: parts.next().unwrap_or_default(),
+                detail: parts.collect(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let m = parse_manifest(
+            "model.hlo.txt deit_block seq=256 dim=192\n\nfp32_matmul.hlo.txt fp32_matmul 64x256x64\n",
+        );
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].file, "model.hlo.txt");
+        assert_eq!(m[0].entry, "deit_block");
+        assert_eq!(m[1].detail, vec!["64x256x64"]);
+    }
+}

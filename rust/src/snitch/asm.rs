@@ -1,0 +1,462 @@
+//! Text assembler for the simulated Snitch ISA.
+//!
+//! Accepts the mnemonics the paper's listings use (Fig. 2) plus the
+//! usual RV32 subset, with labels, comments and the Snitch extensions:
+//!
+//! ```text
+//! # MX dot-product loop (cf. Fig. 2 right)
+//!     li      x22, 31
+//!     frep.o  x22, 1
+//!     mxdotp  f8, ft0, ft1, ft2, 0
+//!     fpfence
+//!     halt
+//! ```
+//!
+//! Register names: `x0..x31` (aliases `zero`, `a0..a7` = x10..x17,
+//! `t0..t6`), `f0..f31` (aliases `ft0..ft11` = f0..f11, `fa0..` etc.
+//! simplified: `ftN` = fN). Immediates are decimal or 0x-hex. Branch
+//! targets are labels. `scfg` writes SSR config fields:
+//! `scfg ssr0, base|dims|rep|bound0..3|stride0..3, x5`.
+
+use super::isa::{csr, FpInstr, Instr, IntInstr, SsrField};
+use std::collections::HashMap;
+
+/// Assembly error with line information.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AsmError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for AsmError {}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, AsmError> {
+    Err(AsmError { line, msg: msg.into() })
+}
+
+/// Parse an integer register name.
+pub fn ireg(s: &str) -> Option<u8> {
+    let s = s.trim_end_matches(',');
+    match s {
+        "zero" => return Some(0),
+        "ra" => return Some(1),
+        "sp" => return Some(2),
+        _ => {}
+    }
+    if let Some(n) = s.strip_prefix('x') {
+        let v: u8 = n.parse().ok()?;
+        return (v < 32).then_some(v);
+    }
+    if let Some(n) = s.strip_prefix('a') {
+        let v: u8 = n.parse().ok()?;
+        return (v < 8).then_some(10 + v);
+    }
+    if let Some(n) = s.strip_prefix('t') {
+        let v: u8 = n.parse().ok()?;
+        // t0-t2 = x5-x7, t3-t6 = x28-x31
+        return match v {
+            0..=2 => Some(5 + v),
+            3..=6 => Some(25 + v),
+            _ => None,
+        };
+    }
+    None
+}
+
+/// Parse an FP register name (`fN` or the stream aliases `ftN` = fN).
+pub fn freg(s: &str) -> Option<u8> {
+    let s = s.trim_end_matches(',');
+    let n = s.strip_prefix("ft").or_else(|| s.strip_prefix('f'))?;
+    let v: u8 = n.parse().ok()?;
+    (v < 32).then_some(v)
+}
+
+fn imm(s: &str, line: usize) -> Result<i64, AsmError> {
+    let s = s.trim_end_matches(',');
+    let (neg, body) = match s.strip_prefix('-') {
+        Some(b) => (true, b),
+        None => (false, s),
+    };
+    let v = if let Some(hex) = body.strip_prefix("0x") {
+        i64::from_str_radix(hex, 16)
+    } else {
+        body.parse()
+    };
+    match v {
+        Ok(v) => Ok(if neg { -v } else { v }),
+        Err(_) => err(line, format!("bad immediate '{s}'")),
+    }
+}
+
+/// Parse `imm(xN)` memory operands.
+fn mem_operand(s: &str, line: usize) -> Result<(u8, i64), AsmError> {
+    let s = s.trim_end_matches(',');
+    let open = s.find('(').ok_or(AsmError { line, msg: format!("expected imm(reg), got '{s}'") })?;
+    let i = imm(&s[..open], line)?;
+    let r = s[open + 1..]
+        .trim_end_matches(')')
+        .trim();
+    let r = ireg(r).ok_or(AsmError { line, msg: format!("bad base register in '{s}'") })?;
+    Ok((r, i))
+}
+
+fn ssr_field(s: &str, line: usize) -> Result<SsrField, AsmError> {
+    let s = s.trim_end_matches(',');
+    Ok(match s {
+        "base" => SsrField::Base,
+        "dims" => SsrField::Dims,
+        "rep" => SsrField::Rep,
+        _ => {
+            if let Some(d) = s.strip_prefix("bound") {
+                SsrField::Bound(d.parse().map_err(|_| AsmError { line, msg: format!("bad field '{s}'") })?)
+            } else if let Some(d) = s.strip_prefix("stride") {
+                SsrField::Stride(d.parse().map_err(|_| AsmError { line, msg: format!("bad field '{s}'") })?)
+            } else {
+                return err(line, format!("unknown scfg field '{s}'"));
+            }
+        }
+    })
+}
+
+/// Assemble a program. Returns the instruction vector (labels resolved).
+pub fn assemble(src: &str) -> Result<Vec<Instr>, AsmError> {
+    // Pass 1: strip comments, collect labels.
+    let mut labels: HashMap<String, usize> = HashMap::new();
+    let mut lines: Vec<(usize, Vec<String>)> = Vec::new(); // (src line, tokens)
+    let mut pc = 0usize;
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = lineno + 1;
+        let code = raw.split(&['#', ';'][..]).next().unwrap_or("").trim();
+        if code.is_empty() {
+            continue;
+        }
+        let mut rest = code;
+        // labels: `name:` possibly followed by an instruction
+        while let Some(colon) = rest.find(':') {
+            let (lbl, after) = rest.split_at(colon);
+            let lbl = lbl.trim();
+            if lbl.contains(char::is_whitespace) {
+                break; // colon inside an operand (not supported anyway)
+            }
+            if labels.insert(lbl.to_string(), pc).is_some() {
+                return err(line, format!("duplicate label '{lbl}'"));
+            }
+            rest = after[1..].trim();
+        }
+        if rest.is_empty() {
+            continue;
+        }
+        let toks: Vec<String> = rest.split_whitespace().map(str::to_string).collect();
+        lines.push((line, toks));
+        pc += 1;
+    }
+
+    // Pass 2: encode.
+    let mut prog = Vec::with_capacity(lines.len());
+    for (idx, (line, t)) in lines.iter().enumerate() {
+        let line = *line;
+        let op = t[0].as_str();
+        let need = |n: usize| -> Result<(), AsmError> {
+            if t.len() != n + 1 {
+                return err(line, format!("'{op}' expects {n} operands, got {}", t.len() - 1));
+            }
+            Ok(())
+        };
+        let ir = |i: usize| -> Result<u8, AsmError> {
+            ireg(&t[i]).ok_or(AsmError { line, msg: format!("bad int register '{}'", t[i]) })
+        };
+        let fr = |i: usize| -> Result<u8, AsmError> {
+            freg(&t[i]).ok_or(AsmError { line, msg: format!("bad fp register '{}'", t[i]) })
+        };
+        let target = |i: usize| -> Result<usize, AsmError> {
+            labels
+                .get(t[i].trim_end_matches(','))
+                .copied()
+                .ok_or(AsmError { line, msg: format!("unknown label '{}'", t[i]) })
+        };
+        let _ = idx;
+        let instr: Instr = match op {
+            "li" => {
+                need(2)?;
+                IntInstr::Li { rd: ir(1)?, imm: imm(&t[2], line)? }.into()
+            }
+            "add" => {
+                need(3)?;
+                IntInstr::Add { rd: ir(1)?, rs1: ir(2)?, rs2: ir(3)? }.into()
+            }
+            "addi" => {
+                need(3)?;
+                IntInstr::Addi { rd: ir(1)?, rs1: ir(2)?, imm: imm(&t[3], line)? }.into()
+            }
+            "sub" => {
+                need(3)?;
+                IntInstr::Sub { rd: ir(1)?, rs1: ir(2)?, rs2: ir(3)? }.into()
+            }
+            "mul" => {
+                need(3)?;
+                IntInstr::Mul { rd: ir(1)?, rs1: ir(2)?, rs2: ir(3)? }.into()
+            }
+            "or" => {
+                need(3)?;
+                IntInstr::Or { rd: ir(1)?, rs1: ir(2)?, rs2: ir(3)? }.into()
+            }
+            "slli" => {
+                need(3)?;
+                IntInstr::Slli { rd: ir(1)?, rs1: ir(2)?, shamt: imm(&t[3], line)? as u8 }.into()
+            }
+            "lw" | "lbu" | "lhu" => {
+                need(2)?;
+                let (rs1, i) = mem_operand(&t[2], line)?;
+                match op {
+                    "lw" => IntInstr::Lw { rd: ir(1)?, rs1, imm: i }.into(),
+                    "lbu" => IntInstr::Lbu { rd: ir(1)?, rs1, imm: i }.into(),
+                    _ => IntInstr::Lhu { rd: ir(1)?, rs1, imm: i }.into(),
+                }
+            }
+            "sw" | "sh" => {
+                need(2)?;
+                let (rs1, i) = mem_operand(&t[2], line)?;
+                match op {
+                    "sw" => IntInstr::Sw { rs1, rs2: ir(1)?, imm: i }.into(),
+                    _ => IntInstr::Sh { rs1, rs2: ir(1)?, imm: i }.into(),
+                }
+            }
+            "bne" | "beq" | "blt" => {
+                need(3)?;
+                let (rs1, rs2, tgt) = (ir(1)?, ir(2)?, target(3)?);
+                match op {
+                    "bne" => IntInstr::Bne { rs1, rs2, target: tgt }.into(),
+                    "beq" => IntInstr::Beq { rs1, rs2, target: tgt }.into(),
+                    _ => IntInstr::Blt { rs1, rs2, target: tgt }.into(),
+                }
+            }
+            "j" => {
+                need(1)?;
+                IntInstr::J { target: target(1)? }.into()
+            }
+            "csrw" => {
+                need(2)?;
+                let c = match t[1].trim_end_matches(',') {
+                    "ssr" | "ssr_enable" => csr::SSR_ENABLE,
+                    "fp8fmt" | "fp8_fmt" => csr::FP8_FMT,
+                    other => imm(other, line)? as u16,
+                };
+                IntInstr::CsrW { csr: c, rs1: ir(2)? }.into()
+            }
+            "scfg" => {
+                need(3)?;
+                let ssr_name = t[1].trim_end_matches(',');
+                let ssr = ssr_name
+                    .strip_prefix("ssr")
+                    .and_then(|n| n.parse::<u8>().ok())
+                    .filter(|&n| n < 3)
+                    .ok_or(AsmError { line, msg: format!("bad SSR '{ssr_name}'") })?;
+                IntInstr::Scfg { ssr, field: ssr_field(&t[2], line)?, rs1: ir(3)? }.into()
+            }
+            "frep.o" | "frep" => {
+                need(2)?;
+                IntInstr::Frep { n_frep_reg: ir(1)?, max_inst: imm(&t[2], line)? as u8 }.into()
+            }
+            "fpfence" => {
+                need(0)?;
+                IntInstr::FpFence.into()
+            }
+            "halt" => {
+                need(0)?;
+                IntInstr::Halt.into()
+            }
+            "nop" => {
+                need(0)?;
+                IntInstr::Nop.into()
+            }
+            // ---- FP side -------------------------------------------------
+            "fld" | "flw" => {
+                need(2)?;
+                let (rs1, i) = mem_operand(&t[2], line)?;
+                match op {
+                    "fld" => FpInstr::Fld { fd: fr(1)?, rs1, imm: i }.into(),
+                    _ => FpInstr::Flw { fd: fr(1)?, rs1, imm: i }.into(),
+                }
+            }
+            "fsd" | "fsw" => {
+                need(2)?;
+                let (rs1, i) = mem_operand(&t[2], line)?;
+                match op {
+                    "fsd" => FpInstr::Fsd { fs2: fr(1)?, rs1, imm: i }.into(),
+                    _ => FpInstr::Fsw { fs2: fr(1)?, rs1, imm: i }.into(),
+                }
+            }
+            "vfcpka.s.s" => {
+                need(3)?;
+                FpInstr::VfcpkaS { fd: fr(1)?, fs1: fr(2)?, fs2: fr(3)? }.into()
+            }
+            "vfmac.s" => {
+                need(3)?;
+                FpInstr::VfmacS { fd: fr(1)?, fs1: fr(2)?, fs2: fr(3)? }.into()
+            }
+            "vfsum.s" => {
+                need(2)?;
+                FpInstr::VfsumS { fd: fr(1)?, fs1: fr(2)? }.into()
+            }
+            "fadd.s" => {
+                need(3)?;
+                FpInstr::FaddS { fd: fr(1)?, fs1: fr(2)?, fs2: fr(3)? }.into()
+            }
+            "fmul.s" => {
+                need(3)?;
+                FpInstr::FmulS { fd: fr(1)?, fs1: fr(2)?, fs2: fr(3)? }.into()
+            }
+            "fmadd.s" => {
+                need(4)?;
+                FpInstr::FmaddS { fd: fr(1)?, fs1: fr(2)?, fs2: fr(3)?, fs3: fr(4)? }.into()
+            }
+            "fcvt.s.b" => {
+                need(3)?;
+                FpInstr::FcvtSB { fd: fr(1)?, fs1: fr(2)?, lane: imm(&t[3], line)? as u8 }.into()
+            }
+            "fcvt.s.e8" => {
+                need(3)?;
+                FpInstr::FcvtSE8 { fd: fr(1)?, fs1: fr(2)?, lane: imm(&t[3], line)? as u8 }.into()
+            }
+            "fmv" | "fmv.d" => {
+                need(2)?;
+                FpInstr::Fmv { fd: fr(1)?, fs1: fr(2)? }.into()
+            }
+            "mxdotp" => {
+                // mxdotp fd, fs1, fs2, fs3, sl   (Table II)
+                need(5)?;
+                let sl = imm(&t[5], line)? as u8;
+                if sl > 3 {
+                    return err(line, "sl must be 0..=3");
+                }
+                FpInstr::Mxdotp { fd: fr(1)?, fs1: fr(2)?, fs2: fr(3)?, fs3: fr(4)?, sl }.into()
+            }
+            other => return err(line, format!("unknown mnemonic '{other}'")),
+        };
+        prog.push(instr);
+    }
+    Ok(prog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::ElemFormat;
+    use crate::snitch::cluster::{Cluster, ClusterConfig};
+
+    #[test]
+    fn register_names() {
+        assert_eq!(ireg("x0"), Some(0));
+        assert_eq!(ireg("zero"), Some(0));
+        assert_eq!(ireg("a0"), Some(10));
+        assert_eq!(ireg("t0"), Some(5));
+        assert_eq!(ireg("t3"), Some(28));
+        assert_eq!(ireg("x32"), None);
+        assert_eq!(freg("f8"), Some(8));
+        assert_eq!(freg("ft0"), Some(0));
+        assert_eq!(freg("ft2,"), Some(2));
+    }
+
+    #[test]
+    fn basic_program() {
+        let prog = assemble(
+            "
+            # sum 1..3
+                li x1, 0
+                li x2, 3
+            loop:
+                add x1, x1, x2
+                addi x2, x2, -1
+                bne x2, zero, loop
+                sw x1, 0x100(zero)
+                halt
+            ",
+        )
+        .unwrap();
+        assert_eq!(prog.len(), 7);
+        assert_eq!(prog[4], IntInstr::Bne { rs1: 2, rs2: 0, target: 2 }.into());
+        // run it
+        let mut cl = Cluster::new(ClusterConfig { num_cores: 1, freq_ghz: 1.0 });
+        cl.load_program(0, prog);
+        cl.run(1000);
+        assert_eq!(cl.spm.read_u32(0x100), 6);
+    }
+
+    #[test]
+    fn fig2_style_mxfp8_listing_assembles_and_runs() {
+        // The paper's Fig. 2 structure as real assembly.
+        let one = ElemFormat::E4M3.encode(1.0);
+        let src = "
+            li t0, 1
+            csrw fp8fmt, zero        # E4M3
+            li t1, 7
+            scfg ssr0, bound0, t1
+            li t1, 8
+            scfg ssr0, stride0, t1
+            li t1, 0
+            scfg ssr0, base, t1
+            li t1, 7
+            scfg ssr1, bound0, t1
+            li t1, 8
+            scfg ssr1, stride0, t1
+            li t1, 0x400
+            scfg ssr1, base, t1
+            li t1, 7
+            scfg ssr2, bound0, t1
+            li t1, 8
+            scfg ssr2, stride0, t1
+            li t1, 0x800
+            scfg ssr2, base, t1
+            csrw ssr, t0
+            vfcpka.s.s f8, f3, f3
+            li t2, 7
+            frep.o t2, 1
+            mxdotp f8, ft0, ft1, ft2, 0
+            li t3, 0xC00
+            fsw f8, 0(t3)
+            fpfence
+            halt
+        ";
+        let prog = assemble(src).unwrap();
+        let mut cl = Cluster::new(ClusterConfig { num_cores: 1, freq_ghz: 1.0 });
+        for w in 0..8usize {
+            cl.spm.write_u64(w * 8, u64::from_le_bytes([one; 8]));
+            cl.spm.write_u64(0x400 + w * 8, u64::from_le_bytes([one; 8]));
+            cl.spm.write_u64(0x800 + w * 8, crate::dotp::unit::pack_scales(&[(127, 127); 4]));
+        }
+        cl.load_program(0, prog);
+        cl.run(10_000);
+        assert_eq!(cl.spm.read_f32(0xC00), 64.0); // 8 mxdotp x 8 ones
+    }
+
+    #[test]
+    fn error_reporting() {
+        assert!(assemble("bogus x1, x2").unwrap_err().msg.contains("unknown mnemonic"));
+        assert!(assemble("li x99, 3").unwrap_err().msg.contains("bad int register"));
+        assert!(assemble("bne x1, x2, nowhere").unwrap_err().msg.contains("unknown label"));
+        assert!(assemble("mxdotp f8, ft0, ft1, ft2, 4").unwrap_err().msg.contains("sl"));
+        let e = assemble("li x1, 1\nli x2").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(assemble("dup:\ndup:\nhalt").unwrap_err().msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn hex_and_negative_immediates() {
+        let prog = assemble("li x1, 0xff\naddi x2, x1, -16\nhalt").unwrap();
+        assert_eq!(prog[0], IntInstr::Li { rd: 1, imm: 255 }.into());
+        assert_eq!(prog[1], IntInstr::Addi { rd: 2, rs1: 1, imm: -16 }.into());
+    }
+
+    #[test]
+    fn labels_with_inline_instructions() {
+        let prog = assemble("start: li x1, 1\nj start").unwrap();
+        assert_eq!(prog.len(), 2);
+        assert_eq!(prog[1], IntInstr::J { target: 0 }.into());
+    }
+}

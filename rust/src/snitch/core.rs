@@ -1,0 +1,443 @@
+//! The Snitch integer core: single-issue, in-order RV32 pipeline that
+//! feeds the FP subsystem (pseudo dual-issue, §II-B).
+//!
+//! One instruction per cycle unless stalled on: a full FP queue, an
+//! FREP handoff while the sequencer is replaying, a memory port it did
+//! not win, a taken-branch bubble, or an explicit FP fence.
+
+use super::fpu::FpSubsystem;
+use super::isa::{csr, FpInstr, Instr, IntInstr, SsrField};
+use super::spm::Spm;
+use super::ssr::SsrConfig;
+use crate::dotp::Fp8Format;
+
+/// Taken-branch penalty (flush bubble) in cycles.
+pub const BRANCH_PENALTY: u64 = 1;
+
+/// Integer-side perf counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoreCounters {
+    pub int_issued: u64,
+    pub branches_taken: u64,
+    /// Scalar loads/stores that reached memory (the reshape traffic).
+    pub int_mem: u64,
+    pub stall_fp_queue: u64,
+    pub stall_mem: u64,
+    pub stall_fence: u64,
+}
+
+/// One compute core: scalar pipeline + FP subsystem.
+pub struct Core {
+    pub id: usize,
+    pub pc: usize,
+    pub xregs: [i64; 32],
+    pub program: Vec<Instr>,
+    pub halted: bool,
+    /// Cycle until which the front-end is squashed (branch bubble).
+    stall_until: u64,
+    pub fpu: FpSubsystem,
+    pub counters: CoreCounters,
+    /// Pending SSR config shadow (bounds/strides written field by field).
+    ssr_shadow: [SsrConfig; super::NUM_SSRS],
+}
+
+impl Core {
+    pub fn new(id: usize) -> Self {
+        Core {
+            id,
+            pc: 0,
+            xregs: [0; 32],
+            program: Vec::new(),
+            halted: true,
+            stall_until: 0,
+            fpu: FpSubsystem::new(),
+            counters: CoreCounters::default(),
+            ssr_shadow: [SsrConfig::default(); super::NUM_SSRS],
+        }
+    }
+
+    /// Load a program and reset architectural state (regs preserved —
+    /// kernels pass arguments via x10+ set by the launcher).
+    pub fn load(&mut self, program: Vec<Instr>) {
+        self.program = program;
+        self.pc = 0;
+        self.halted = self.program.is_empty();
+        self.stall_until = 0;
+    }
+
+    fn x(&self, r: u8) -> i64 {
+        if r == 0 {
+            0
+        } else {
+            self.xregs[r as usize]
+        }
+    }
+
+    fn set_x(&mut self, r: u8, v: i64) {
+        if r != 0 {
+            self.xregs[r as usize] = v;
+        }
+    }
+
+    /// Fully architecturally done (front-end halted AND FP drained)?
+    pub fn done(&self, now: u64) -> bool {
+        self.halted && !self.fpu.busy(now)
+    }
+
+    /// Address this core's scalar side wants from the LSU this cycle
+    /// (None if the current instruction is not a memory op or the core
+    /// is stalled/halted). The FPU's own `pending_mem_addr` takes
+    /// priority on the shared port; the cluster resolves that.
+    pub fn int_mem_addr(&self, now: u64) -> Option<usize> {
+        if self.halted || now < self.stall_until {
+            return None;
+        }
+        match self.program.get(self.pc)? {
+            Instr::Int(IntInstr::Lw { rs1, imm, .. })
+            | Instr::Int(IntInstr::Lbu { rs1, imm, .. })
+            | Instr::Int(IntInstr::Lhu { rs1, imm, .. })
+            | Instr::Int(IntInstr::Sw { rs1, imm, .. })
+            | Instr::Int(IntInstr::Sh { rs1, imm, .. }) => {
+                Some((self.x(*rs1) + imm) as usize)
+            }
+            _ => None,
+        }
+    }
+
+    /// Execute (at most) one integer-side instruction.
+    ///
+    /// `int_mem_granted`: this core's LSU won arbitration for the
+    /// scalar memory op (false also when the FPU consumed the port).
+    pub fn step(&mut self, now: u64, spm: &mut Spm, int_mem_granted: bool) {
+        if self.halted || now < self.stall_until {
+            return;
+        }
+        let Some(instr) = self.program.get(self.pc).copied() else {
+            self.halted = true;
+            return;
+        };
+        match instr {
+            Instr::Fp(fp) => {
+                if !self.fpu.can_push() {
+                    self.counters.stall_fp_queue += 1;
+                    return;
+                }
+                // Resolve LSU addresses at handoff time (Snitch latches
+                // the scalar-computed address).
+                let addr = match fp {
+                    FpInstr::Fld { rs1, imm, .. }
+                    | FpInstr::Flw { rs1, imm, .. }
+                    | FpInstr::Fsd { rs1, imm, .. }
+                    | FpInstr::Fsw { rs1, imm, .. } => Some((self.x(rs1) + imm) as usize),
+                    _ => None,
+                };
+                self.fpu.push(fp, addr);
+                self.counters.int_issued += 1;
+                self.pc += 1;
+            }
+            Instr::Int(i) => match i {
+                IntInstr::Li { rd, imm } => {
+                    self.set_x(rd, imm);
+                    self.retire(now, false);
+                }
+                IntInstr::Add { rd, rs1, rs2 } => {
+                    self.set_x(rd, self.x(rs1).wrapping_add(self.x(rs2)));
+                    self.retire(now, false);
+                }
+                IntInstr::Addi { rd, rs1, imm } => {
+                    self.set_x(rd, self.x(rs1).wrapping_add(imm));
+                    self.retire(now, false);
+                }
+                IntInstr::Sub { rd, rs1, rs2 } => {
+                    self.set_x(rd, self.x(rs1).wrapping_sub(self.x(rs2)));
+                    self.retire(now, false);
+                }
+                IntInstr::Mul { rd, rs1, rs2 } => {
+                    self.set_x(rd, self.x(rs1).wrapping_mul(self.x(rs2)));
+                    self.retire(now, false);
+                }
+                IntInstr::Slli { rd, rs1, shamt } => {
+                    self.set_x(rd, self.x(rs1) << shamt);
+                    self.retire(now, false);
+                }
+                IntInstr::Or { rd, rs1, rs2 } => {
+                    self.set_x(rd, self.x(rs1) | self.x(rs2));
+                    self.retire(now, false);
+                }
+                IntInstr::Lw { rd, rs1, imm } => {
+                    if !int_mem_granted {
+                        self.counters.stall_mem += 1;
+                        return;
+                    }
+                    let addr = (self.x(rs1) + imm) as usize;
+                    self.set_x(rd, spm.read_u32(addr) as i32 as i64);
+                    self.counters.int_mem += 1;
+                    self.retire(now, false);
+                }
+                IntInstr::Lbu { rd, rs1, imm } => {
+                    if !int_mem_granted {
+                        self.counters.stall_mem += 1;
+                        return;
+                    }
+                    let addr = (self.x(rs1) + imm) as usize;
+                    self.set_x(rd, spm.data[addr] as i64);
+                    self.counters.int_mem += 1;
+                    self.retire(now, false);
+                }
+                IntInstr::Lhu { rd, rs1, imm } => {
+                    if !int_mem_granted {
+                        self.counters.stall_mem += 1;
+                        return;
+                    }
+                    let addr = (self.x(rs1) + imm) as usize;
+                    self.set_x(rd, spm.read_u16(addr) as i64);
+                    self.counters.int_mem += 1;
+                    self.retire(now, false);
+                }
+                IntInstr::Sw { rs1, rs2, imm } => {
+                    if !int_mem_granted {
+                        self.counters.stall_mem += 1;
+                        return;
+                    }
+                    let addr = (self.x(rs1) + imm) as usize;
+                    spm.write_u32(addr, self.x(rs2) as u32);
+                    self.counters.int_mem += 1;
+                    self.retire(now, false);
+                }
+                IntInstr::Sh { rs1, rs2, imm } => {
+                    if !int_mem_granted {
+                        self.counters.stall_mem += 1;
+                        return;
+                    }
+                    let addr = (self.x(rs1) + imm) as usize;
+                    spm.write_u16(addr, self.x(rs2) as u16);
+                    self.counters.int_mem += 1;
+                    self.retire(now, false);
+                }
+                IntInstr::Bne { rs1, rs2, target } => {
+                    let taken = self.x(rs1) != self.x(rs2);
+                    self.branch(now, taken, target);
+                }
+                IntInstr::Beq { rs1, rs2, target } => {
+                    let taken = self.x(rs1) == self.x(rs2);
+                    self.branch(now, taken, target);
+                }
+                IntInstr::Blt { rs1, rs2, target } => {
+                    let taken = self.x(rs1) < self.x(rs2);
+                    self.branch(now, taken, target);
+                }
+                IntInstr::J { target } => {
+                    self.counters.int_issued += 1;
+                    self.counters.branches_taken += 1;
+                    self.pc = target;
+                    self.stall_until = now + 1 + BRANCH_PENALTY;
+                }
+                IntInstr::CsrW { csr: c, rs1 } => {
+                    let v = self.x(rs1);
+                    match c {
+                        csr::SSR_ENABLE => self.fpu.ssr_enabled = v != 0,
+                        csr::FP8_FMT => self.fpu.set_fp8_format(if v == 0 {
+                            Fp8Format::E4m3
+                        } else {
+                            Fp8Format::E5m2
+                        }),
+                        _ => {}
+                    }
+                    self.retire(now, false);
+                }
+                IntInstr::Scfg { ssr, field, rs1 } => {
+                    let v = self.x(rs1);
+                    let sh = &mut self.ssr_shadow[ssr as usize];
+                    match field {
+                        SsrField::Base => {
+                            sh.base = v as usize;
+                            // Writing the base arms the stream (Snitch
+                            // convention: base is written last).
+                            let cfg = *sh;
+                            self.fpu.configure_ssr(ssr as usize, cfg);
+                        }
+                        SsrField::Dims => sh.dims = v as u8,
+                        SsrField::Bound(d) => sh.bounds[d as usize] = v as u32,
+                        SsrField::Stride(d) => sh.strides[d as usize] = v,
+                        SsrField::Rep => sh.rep = v as u32,
+                    }
+                    self.retire(now, false);
+                }
+                IntInstr::Frep { n_frep_reg, max_inst } => {
+                    let n = self.x(n_frep_reg).max(0) as u64;
+                    if !self.fpu.start_frep(n, max_inst) {
+                        // sequencer busy: retry
+                        self.counters.stall_fp_queue += 1;
+                        return;
+                    }
+                    self.retire(now, false);
+                }
+                IntInstr::FpFence => {
+                    if self.fpu.busy(now) {
+                        self.counters.stall_fence += 1;
+                        return;
+                    }
+                    self.retire(now, false);
+                }
+                IntInstr::Halt => {
+                    self.halted = true;
+                    self.counters.int_issued += 1;
+                }
+                IntInstr::Nop => self.retire(now, false),
+            },
+        }
+    }
+
+    fn retire(&mut self, _now: u64, _mem: bool) {
+        self.counters.int_issued += 1;
+        self.pc += 1;
+    }
+
+    fn branch(&mut self, now: u64, taken: bool, target: usize) {
+        self.counters.int_issued += 1;
+        if taken {
+            self.counters.branches_taken += 1;
+            self.pc = target;
+            self.stall_until = now + 1 + BRANCH_PENALTY;
+        } else {
+            self.pc += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_solo(core: &mut Core, spm: &mut Spm, max: u64) -> u64 {
+        let mut now = 0;
+        while !core.done(now) && now < max {
+            // grant all SSR fetches + LSU unconditionally (single core)
+            for s in core.fpu.ssrs.iter_mut() {
+                if let Some(a) = s.fetch_request() {
+                    let d = spm.read_u64(a);
+                    s.grant(d);
+                }
+            }
+            let fpu_mem = core.fpu.pending_mem_addr(now).is_some();
+            core.fpu.try_issue(now, true, spm);
+            core.step(now, spm, !fpu_mem);
+            core.fpu.tick();
+            now += 1;
+        }
+        assert!(now < max, "core did not finish");
+        now
+    }
+
+    #[test]
+    fn arithmetic_and_branches() {
+        let mut core = Core::new(0);
+        let mut spm = Spm::new();
+        // sum 1..=10 via a loop
+        core.load(vec![
+            IntInstr::Li { rd: 1, imm: 0 }.into(),  // acc
+            IntInstr::Li { rd: 2, imm: 1 }.into(),  // i
+            IntInstr::Li { rd: 3, imm: 11 }.into(), // bound
+            // loop:
+            IntInstr::Add { rd: 1, rs1: 1, rs2: 2 }.into(),
+            IntInstr::Addi { rd: 2, rs1: 2, imm: 1 }.into(),
+            IntInstr::Bne { rs1: 2, rs2: 3, target: 3 }.into(),
+            IntInstr::Sw { rs1: 0, rs2: 1, imm: 256 }.into(),
+            IntInstr::Halt.into(),
+        ]);
+        run_solo(&mut core, &mut spm, 1000);
+        assert_eq!(spm.read_u32(256), 55);
+    }
+
+    #[test]
+    fn branch_penalty_counted() {
+        let mut core = Core::new(0);
+        let mut spm = Spm::new();
+        core.load(vec![
+            IntInstr::Li { rd: 1, imm: 3 }.into(),
+            // loop: decrement until zero
+            IntInstr::Addi { rd: 1, rs1: 1, imm: -1 }.into(),
+            IntInstr::Bne { rs1: 1, rs2: 0, target: 1 }.into(),
+            IntInstr::Halt.into(),
+        ]);
+        let cycles = run_solo(&mut core, &mut spm, 1000);
+        // 1 li + 3*(addi+bne) + halt = 8 issues, 2 taken branches with
+        // 1-cycle bubbles (the final bne is not taken).
+        assert_eq!(core.counters.int_issued, 8);
+        assert_eq!(core.counters.branches_taken, 2);
+        assert!(cycles >= 10, "bubbles not modeled: {cycles}");
+    }
+
+    #[test]
+    fn csr_configures_fp8_format() {
+        let mut core = Core::new(0);
+        let mut spm = Spm::new();
+        core.load(vec![
+            IntInstr::Li { rd: 5, imm: 1 }.into(),
+            IntInstr::CsrW { csr: csr::FP8_FMT, rs1: 5 }.into(),
+            IntInstr::Halt.into(),
+        ]);
+        run_solo(&mut core, &mut spm, 100);
+        assert_eq!(core.fpu.unit.fmt, Fp8Format::E5m2);
+    }
+
+    #[test]
+    fn fp_handoff_and_fence() {
+        let mut core = Core::new(0);
+        let mut spm = Spm::new();
+        spm.write_f32(64, 2.5);
+        core.load(vec![
+            IntInstr::Li { rd: 10, imm: 64 }.into(),
+            FpInstr::Flw { fd: 8, rs1: 10, imm: 0 }.into(),
+            FpInstr::FaddS { fd: 9, fs1: 8, fs2: 8 }.into(),
+            FpInstr::Fsw { fs2: 9, rs1: 10, imm: 4 }.into(),
+            IntInstr::FpFence.into(),
+            IntInstr::Halt.into(),
+        ]);
+        run_solo(&mut core, &mut spm, 200);
+        assert_eq!(spm.read_f32(68), 5.0);
+    }
+
+    #[test]
+    fn frep_with_ssr_stream_end_to_end() {
+        use crate::formats::ElemFormat;
+        use crate::snitch::isa::SsrField;
+        let one = ElemFormat::E4M3.encode(1.0);
+        let mut core = Core::new(0);
+        let mut spm = Spm::new();
+        for w in 0..8usize {
+            spm.write_u64(w * 8, u64::from_le_bytes([one; 8]));
+            spm.write_u64(1024 + w * 8, u64::from_le_bytes([one; 8]));
+            spm.write_u64(2048 + w * 8, crate::dotp::unit::pack_scales(&[(127, 127); 4]));
+        }
+        let cfg_ssr = |prog: &mut Vec<Instr>, ssr: u8, base: i64| {
+            prog.push(IntInstr::Li { rd: 20, imm: 7 }.into());
+            prog.push(IntInstr::Scfg { ssr, field: SsrField::Bound(0), rs1: 20 }.into());
+            prog.push(IntInstr::Li { rd: 20, imm: 8 }.into());
+            prog.push(IntInstr::Scfg { ssr, field: SsrField::Stride(0), rs1: 20 }.into());
+            prog.push(IntInstr::Li { rd: 20, imm: base }.into());
+            prog.push(IntInstr::Scfg { ssr, field: SsrField::Base, rs1: 20 }.into());
+        };
+        let mut prog: Vec<Instr> = Vec::new();
+        cfg_ssr(&mut prog, 0, 0);
+        cfg_ssr(&mut prog, 1, 1024);
+        cfg_ssr(&mut prog, 2, 2048);
+        prog.push(IntInstr::Li { rd: 21, imm: 1 }.into());
+        prog.push(IntInstr::CsrW { csr: csr::SSR_ENABLE, rs1: 21 }.into());
+        // zero the accumulator f8 via vfcpka from f31 (0.0)
+        prog.push(FpInstr::VfcpkaS { fd: 8, fs1: 31, fs2: 31 }.into());
+        prog.push(IntInstr::Li { rd: 22, imm: 7 }.into());
+        prog.push(IntInstr::Frep { n_frep_reg: 22, max_inst: 1 }.into());
+        prog.push(FpInstr::Mxdotp { fd: 8, fs1: 0, fs2: 1, fs3: 2, sl: 0 }.into());
+        prog.push(IntInstr::FpFence.into());
+        prog.push(IntInstr::Li { rd: 23, imm: 4096 }.into());
+        prog.push(FpInstr::Fsw { fs2: 8, rs1: 23, imm: 0 }.into());
+        prog.push(IntInstr::FpFence.into());
+        prog.push(IntInstr::Halt.into());
+        core.load(prog);
+        run_solo(&mut core, &mut spm, 2000);
+        // 8 mxdotp × 8 = 64
+        assert_eq!(spm.read_f32(4096), 64.0);
+        assert_eq!(core.fpu.counters.mxdotp, 8);
+    }
+}

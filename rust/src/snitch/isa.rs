@@ -1,0 +1,236 @@
+//! Instruction set of the simulated Snitch core.
+//!
+//! Instructions are carried at IR level (a Rust enum) — the simulator
+//! is not a binary-translation model — except for `mxdotp`, whose
+//! 32-bit encoding (Table II of the paper) is implemented and tested
+//! bit-exactly, since the encoding *is* a contribution of the paper
+//! (a four-operand instruction squeezed into the R4-type space with a
+//! 2-bit scale-select field replacing the fmt bits).
+//!
+//! Register conventions follow RISC-V + Snitch:
+//! * `x0..x31` integer registers (x0 hardwired to zero);
+//! * `f0..f31` 64-bit FP registers; when SSRs are enabled, reads of
+//!   `f0/f1/f2` (= `ft0/ft1/ft2`) pop the corresponding stream.
+
+/// Integer register index (x0-x31).
+pub type IReg = u8;
+/// FP register index (f0-f31).
+pub type FReg = u8;
+
+/// The three stream-semantic registers map onto ft0/ft1/ft2.
+pub const SSR_REGS: [FReg; 3] = [0, 1, 2];
+
+/// CSR addresses (Snitch custom space).
+pub mod csr {
+    /// SSR enable/disable (Snitch `ssr_cfg`).
+    pub const SSR_ENABLE: u16 = 0x7C0;
+    /// FP8 element format for `mxdotp`: 0 = E4M3, 1 = E5M2 (the
+    /// dedicated CSR of §III-B).
+    pub const FP8_FMT: u16 = 0x7C2;
+}
+
+/// SSR configuration fields (written through `Scfg` writes; the real
+/// hardware maps these into the SSR config address space).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SsrField {
+    /// Base byte address of the stream.
+    Base,
+    /// Number of active dimensions minus one (0..=3).
+    Dims,
+    /// Bound of dimension d (iterations minus one).
+    Bound(u8),
+    /// Byte stride of dimension d.
+    Stride(u8),
+    /// Repeat count minus one: each streamed word is delivered
+    /// `rep+1` times (Snitch's repeat register — lets one A-row word
+    /// feed all eight unrolled `mxdotp`s).
+    Rep,
+}
+
+/// Integer-side instructions (executed by the Snitch scalar core).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum IntInstr {
+    /// rd = imm (li pseudo-instruction).
+    Li { rd: IReg, imm: i64 },
+    /// rd = rs1 + rs2.
+    Add { rd: IReg, rs1: IReg, rs2: IReg },
+    /// rd = rs1 + imm.
+    Addi { rd: IReg, rs1: IReg, imm: i64 },
+    /// rd = rs1 - rs2.
+    Sub { rd: IReg, rs1: IReg, rs2: IReg },
+    /// rd = rs1 * rs2 (M extension).
+    Mul { rd: IReg, rs1: IReg, rs2: IReg },
+    /// rd = rs1 << shamt.
+    Slli { rd: IReg, rs1: IReg, shamt: u8 },
+    /// rd = rs1 | rs2.
+    Or { rd: IReg, rs1: IReg, rs2: IReg },
+    /// rd = mem32[rs1 + imm].
+    Lw { rd: IReg, rs1: IReg, imm: i64 },
+    /// rd = zext(mem8[rs1 + imm]) (scale-byte reads in the reshape loop).
+    Lbu { rd: IReg, rs1: IReg, imm: i64 },
+    /// rd = zext(mem16[rs1 + imm]).
+    Lhu { rd: IReg, rs1: IReg, imm: i64 },
+    /// mem32[rs1 + imm] = rs2.
+    Sw { rs1: IReg, rs2: IReg, imm: i64 },
+    /// mem16[rs1 + imm] = rs2 (scale-pair stores in the reshape loop).
+    Sh { rs1: IReg, rs2: IReg, imm: i64 },
+    /// Branch to `target` (instruction index) if rs1 != rs2.
+    Bne { rs1: IReg, rs2: IReg, target: usize },
+    /// Branch if rs1 == rs2.
+    Beq { rs1: IReg, rs2: IReg, target: usize },
+    /// Branch if rs1 < rs2 (signed).
+    Blt { rs1: IReg, rs2: IReg, target: usize },
+    /// Unconditional jump.
+    J { target: usize },
+    /// CSR write: csr = rs1.
+    CsrW { csr: u16, rs1: IReg },
+    /// SSR config write: ssr[id].field = rs1.
+    Scfg { ssr: u8, field: SsrField, rs1: IReg },
+    /// FREP: capture the next `max_inst` FP instructions and replay the
+    /// buffer `rs1 + 1` times total ("frep.o %[n_frep], %[max_inst]").
+    /// `n_frep` comes from an integer register, as in the kernels.
+    Frep { n_frep_reg: IReg, max_inst: u8 },
+    /// Wait until the FP subsystem has drained (fence for timing reads).
+    FpFence,
+    /// Stop this core.
+    Halt,
+    /// No operation.
+    Nop,
+}
+
+/// FP-side instructions (pushed by the int core into the FP sequencer,
+/// executed by the FPU; operand reads of f0-f2 pop SSR streams when
+/// enabled).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FpInstr {
+    /// fd = mem64[rs1 + imm] (fld).
+    Fld { fd: FReg, rs1: IReg, imm: i64 },
+    /// mem64[rs1 + imm] = fs2 (fsd).
+    Fsd { fs2: FReg, rs1: IReg, imm: i64 },
+    /// fd = mem32[rs1 + imm] zero-extended (flw, NaN-boxing elided).
+    Flw { fd: FReg, rs1: IReg, imm: i64 },
+    /// mem32[rs1 + imm] = fs2[31:0] (fsw).
+    Fsw { fs2: FReg, rs1: IReg, imm: i64 },
+    /// fd = {fs2[31:0], fs1[31:0]} — vfcpka.s.s: pack two FP32 into a
+    /// 2-way SIMD vector (used to zero accumulators).
+    VfcpkaS { fd: FReg, fs1: FReg, fs2: FReg },
+    /// 2-way SIMD FP32 multiply-accumulate: fd.lane += fs1.lane*fs2.lane.
+    VfmacS { fd: FReg, fs1: FReg, fs2: FReg },
+    /// Horizontal sum: fd[31:0] = fs1.lo + fs1.hi (vfsum.s reduction).
+    VfsumS { fd: FReg, fs1: FReg },
+    /// Scalar FP32 add: fd = fs1 + fs2.
+    FaddS { fd: FReg, fs1: FReg, fs2: FReg },
+    /// Scalar FP32 mul: fd = fs1 * fs2.
+    FmulS { fd: FReg, fs1: FReg, fs2: FReg },
+    /// Scalar FP32 FMA: fd = fs1*fs2 + fs3 (fmadd.s).
+    FmaddS { fd: FReg, fs1: FReg, fs2: FReg, fs3: FReg },
+    /// Expanding convert: fd[31:0] = fp32(fp8 lane `lane` of fs1)
+    /// (fcvt.s.b with byte select; the FP8-to-FP32 kernel's workhorse).
+    FcvtSB { fd: FReg, fs1: FReg, lane: u8 },
+    /// SIMD expanding convert: fd = {fp32(fs1.byte[2*pair+1]),
+    /// fp32(fs1.byte[2*pair])} — the vectorized variant (ablation).
+    VfcvtSB { fd: FReg, fs1: FReg, pair: u8 },
+    /// Convert E8M0 scale byte to FP32: fd = 2^(fs1.byte[lane] - 127)
+    /// (models the baseline kernel's scale materialization).
+    FcvtSE8 { fd: FReg, fs1: FReg, lane: u8 },
+    /// Move: fd = fs1.
+    Fmv { fd: FReg, fs1: FReg },
+    /// The paper's instruction: fd(FP32 acc) += 2^(Xa+Xb-254) * Σ
+    /// fs1.byte[i]·fs2.byte[i]; scales selected from fs3 by `sl`
+    /// (Table I/II).
+    Mxdotp { fd: FReg, fs1: FReg, fs2: FReg, fs3: FReg, sl: u8 },
+}
+
+/// A program instruction: integer-side or FP-side.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Instr {
+    Int(IntInstr),
+    Fp(FpInstr),
+}
+
+impl From<IntInstr> for Instr {
+    fn from(i: IntInstr) -> Self {
+        Instr::Int(i)
+    }
+}
+
+impl From<FpInstr> for Instr {
+    fn from(i: FpInstr) -> Self {
+        Instr::Fp(i)
+    }
+}
+
+/// `mxdotp` opcode (Table II): custom-3 / 0b1110111.
+pub const MXDOTP_OPCODE: u32 = 0b111_0111;
+
+/// Encode `mxdotp rd, rs1, rs2, rs3, sl` per Table II:
+///
+/// | 31-27 | 26-25 | 24-20 | 19-15 | 14-12 | 11-7 | 6-0     |
+/// | rs3   | sl    | rs2   | rs1   | 000   | rd   | 1110111 |
+pub fn encode_mxdotp(rd: FReg, rs1: FReg, rs2: FReg, rs3: FReg, sl: u8) -> u32 {
+    assert!(rd < 32 && rs1 < 32 && rs2 < 32 && rs3 < 32 && sl < 4);
+    ((rs3 as u32) << 27)
+        | ((sl as u32) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | ((rd as u32) << 7)
+        | MXDOTP_OPCODE
+}
+
+/// Decode a 32-bit word as `mxdotp`; returns None if the opcode does
+/// not match.
+pub fn decode_mxdotp(word: u32) -> Option<FpInstr> {
+    if word & 0x7F != MXDOTP_OPCODE || (word >> 12) & 0b111 != 0 {
+        return None;
+    }
+    Some(FpInstr::Mxdotp {
+        fd: ((word >> 7) & 0x1F) as FReg,
+        fs1: ((word >> 15) & 0x1F) as FReg,
+        fs2: ((word >> 20) & 0x1F) as FReg,
+        fs3: ((word >> 27) & 0x1F) as FReg,
+        sl: ((word >> 25) & 0b11) as u8,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mxdotp_encoding_roundtrip() {
+        for (rd, rs1, rs2, rs3, sl) in
+            [(3u8, 0u8, 1u8, 2u8, 0u8), (31, 30, 29, 28, 3), (10, 0, 1, 2, 2)]
+        {
+            let w = encode_mxdotp(rd, rs1, rs2, rs3, sl);
+            assert_eq!(
+                decode_mxdotp(w),
+                Some(FpInstr::Mxdotp { fd: rd, fs1: rs1, fs2: rs2, fs3: rs3, sl })
+            );
+        }
+    }
+
+    #[test]
+    fn mxdotp_field_positions_match_table2() {
+        // mxdotp f3, f0(=ft0), f1(=ft1), f2(=ft2), sl=1
+        let w = encode_mxdotp(3, 0, 1, 2, 1);
+        assert_eq!(w & 0x7F, 0b1110111, "opcode bits 6-0");
+        assert_eq!((w >> 7) & 0x1F, 3, "rd bits 11-7");
+        assert_eq!((w >> 12) & 0b111, 0, "funct3 bits 14-12");
+        assert_eq!((w >> 15) & 0x1F, 0, "rs1 bits 19-15");
+        assert_eq!((w >> 20) & 0x1F, 1, "rs2 bits 24-20");
+        assert_eq!((w >> 25) & 0b11, 1, "sl bits 26-25");
+        assert_eq!((w >> 27) & 0x1F, 2, "rs3 bits 31-27");
+    }
+
+    #[test]
+    fn non_mxdotp_words_rejected() {
+        assert_eq!(decode_mxdotp(0x0000_0033), None); // add
+        assert_eq!(decode_mxdotp(encode_mxdotp(1, 2, 3, 4, 0) | (1 << 12)), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn encode_rejects_bad_sl() {
+        encode_mxdotp(0, 0, 0, 0, 4);
+    }
+}

@@ -1,0 +1,134 @@
+//! Cycle-accounting reports: where did the cycles go?
+//!
+//! Builds the stall-attribution breakdown the paper's §IV-C discussion
+//! implies ("factoring in SSR and FREP configuration and loop
+//! overheads, accumulator initializations, and stores for final
+//! results") from the cluster's performance counters, so a kernel's
+//! distance from ideal is explainable, not just measurable.
+
+use super::cluster::PerfCounters;
+
+/// Per-class cycle attribution for one run (cluster-wide averages).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CycleBreakdown {
+    pub cycles: u64,
+    /// Fraction of core-cycles issuing the *primary* compute op.
+    pub compute: f64,
+    /// Other FP issues (init, converts, reductions, moves, mem).
+    pub fp_other: f64,
+    /// FPU stalled on an empty SSR FIFO.
+    pub ssr_stall: f64,
+    /// FPU stalled on register hazards.
+    pub hazard_stall: f64,
+    /// FPU stalled on memory-port arbitration.
+    pub mem_stall: f64,
+    /// FPU idle (no work in queue/sequencer: prologue, fences, drain).
+    pub idle: f64,
+    /// SPM conflicts per grant (pressure indicator, not cycles).
+    pub conflict_rate: f64,
+}
+
+impl CycleBreakdown {
+    /// Attribute cycles, treating `primary(f)` as the compute class
+    /// (e.g. mxdotp count for the MXFP8 kernel, vfmac for FP32).
+    pub fn from_perf(perf: &PerfCounters, primary: impl Fn(&crate::snitch::fpu::FpuCounters) -> u64) -> Self {
+        let cores = perf.fpu.len().max(1) as f64;
+        let total = perf.cycles as f64 * cores;
+        if total == 0.0 {
+            return Self::default();
+        }
+        let sum = |f: &dyn Fn(&crate::snitch::fpu::FpuCounters) -> u64| -> f64 {
+            perf.fpu.iter().map(|c| f(c) as f64).sum()
+        };
+        let prim = perf.fpu.iter().map(|c| primary(c) as f64).sum::<f64>();
+        let issued = sum(&|c| c.issued);
+        let b = CycleBreakdown {
+            cycles: perf.cycles,
+            compute: prim / total,
+            fp_other: (issued - prim) / total,
+            ssr_stall: sum(&|c| c.stall_ssr) / total,
+            hazard_stall: sum(&|c| c.stall_hazard) / total,
+            mem_stall: sum(&|c| c.stall_mem) / total,
+            idle: sum(&|c| c.idle) / total,
+            conflict_rate: if perf.spm_grants > 0 {
+                perf.spm_conflicts as f64 / perf.spm_grants as f64
+            } else {
+                0.0
+            },
+        };
+        b
+    }
+
+    /// Accounted fraction (compute + other + stalls + idle); the
+    /// remainder is front-end time not overlapping any FPU state.
+    pub fn accounted(&self) -> f64 {
+        self.compute + self.fp_other + self.ssr_stall + self.hazard_stall + self.mem_stall + self.idle
+    }
+
+    /// Render as an indented text block.
+    pub fn render(&self) -> String {
+        format!(
+            "  cycles               {}\n\
+             \x20 compute issue        {:5.1} %\n\
+             \x20 other FP issue       {:5.1} %\n\
+             \x20 SSR-empty stalls     {:5.1} %\n\
+             \x20 hazard stalls        {:5.1} %\n\
+             \x20 mem-port stalls      {:5.1} %\n\
+             \x20 idle / drain         {:5.1} %\n\
+             \x20 (SPM conflicts/grant {:5.2})\n",
+            self.cycles,
+            self.compute * 100.0,
+            self.fp_other * 100.0,
+            self.ssr_stall * 100.0,
+            self.hazard_stall * 100.0,
+            self.mem_stall * 100.0,
+            self.idle * 100.0,
+            self.conflict_rate,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::ElemFormat;
+    use crate::kernels::{run_mm, KernelKind, MmProblem};
+    use crate::rng::XorShift;
+
+    #[test]
+    fn mxfp8_breakdown_explains_utilization() {
+        let p = MmProblem::fig4(128, ElemFormat::E4M3);
+        let mut rng = XorShift::new(9);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        let run = run_mm(KernelKind::Mxfp8, p, &a, &b, 8);
+        let bd = CycleBreakdown::from_perf(&run.perf, |c| c.mxdotp);
+        // compute share must equal the utilization metric
+        assert!((bd.compute - run.utilization()).abs() < 1e-9);
+        // everything must be accounted (within front-end slack)
+        assert!(bd.accounted() > 0.9, "accounted {}", bd.accounted());
+        assert!(bd.accounted() <= 1.0 + 1e-9);
+        // the dominant loss at K=128 is SSR supply + idle, not hazards
+        assert!(bd.hazard_stall < 0.05);
+        let text = bd.render();
+        assert!(text.contains("SSR-empty"));
+    }
+
+    #[test]
+    fn fp32_breakdown_compute_dominant() {
+        let p = MmProblem::fig4(64, ElemFormat::E4M3);
+        let mut rng = XorShift::new(10);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        let run = run_mm(KernelKind::Fp32, p, &a, &b, 8);
+        let bd = CycleBreakdown::from_perf(&run.perf, |c| c.vfmac);
+        assert!(bd.compute > 0.6, "vfmac share {}", bd.compute);
+    }
+
+    #[test]
+    fn empty_perf_is_zero() {
+        let bd = CycleBreakdown::from_perf(&PerfCounters::default(), |c| c.mxdotp);
+        assert_eq!(bd.cycles, 0);
+        assert_eq!(bd.accounted(), 0.0);
+    }
+}

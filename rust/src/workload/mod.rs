@@ -1,0 +1,221 @@
+//! DeiT-Tiny-shaped synthetic workload: parameter generation matching
+//! `python/compile/model.py`, plus the simulated-hardware cost model
+//! the coordinator attaches to every served request.
+//!
+//! The paper extracts its power traces from DeiT-Tiny quantized to
+//! MXFP8 (§IV-A); the shapes here are DeiT-Tiny's (dim 192, 3 heads,
+//! MLP ratio 4), with the 197-token sequence padded to 256 (DESIGN.md
+//! §2). Parameters are moment-matched synthetic tensors (std 0.02),
+//! generated with the same deterministic RNG family as the tests.
+
+use crate::energy::EnergyModel;
+use crate::formats::ElemFormat;
+use crate::kernels::{run_mm, KernelKind, MmProblem};
+use crate::rng::XorShift;
+
+/// DeiT-Tiny-shaped model configuration (mirror of model.DeiTConfig).
+#[derive(Clone, Copy, Debug)]
+pub struct DeitConfig {
+    pub seq: usize,
+    pub dim: usize,
+    pub heads: usize,
+    pub mlp_ratio: usize,
+    pub fmt: ElemFormat,
+    pub block_size: usize,
+}
+
+impl Default for DeitConfig {
+    fn default() -> Self {
+        DeitConfig { seq: 256, dim: 192, heads: 3, mlp_ratio: 4, fmt: ElemFormat::E4M3, block_size: 32 }
+    }
+}
+
+impl DeitConfig {
+    pub fn mlp_dim(&self) -> usize {
+        self.dim * self.mlp_ratio
+    }
+
+    /// Parameter (name, shape) list — MUST stay in sync with
+    /// `model.param_specs` (the Rust side feeds PJRT in this order).
+    pub fn param_specs(&self) -> Vec<(&'static str, Vec<usize>)> {
+        let d = self.dim;
+        let md = self.mlp_dim();
+        vec![
+            ("ln1_gamma", vec![d]),
+            ("ln1_beta", vec![d]),
+            ("w_qkv", vec![d, 3 * d]),
+            ("b_qkv", vec![3 * d]),
+            ("w_proj", vec![d, d]),
+            ("b_proj", vec![d]),
+            ("ln2_gamma", vec![d]),
+            ("ln2_beta", vec![d]),
+            ("w_fc1", vec![d, md]),
+            ("b_fc1", vec![md]),
+            ("w_fc2", vec![md, d]),
+            ("b_fc2", vec![d]),
+        ]
+    }
+
+    /// The five MX-quantized matmuls of one encoder block, as MM
+    /// problems (QKV, attention-out, fc1, fc2; attention internals stay
+    /// FP32 — same recipe as the Python model).
+    pub fn mx_matmuls(&self) -> Vec<MmProblem> {
+        let (s, d, md) = (self.seq, self.dim, self.mlp_dim());
+        vec![
+            MmProblem { m: s, k: d, n: 3 * d, fmt: self.fmt, block_size: self.block_size },
+            MmProblem { m: s, k: d, n: d, fmt: self.fmt, block_size: self.block_size },
+            MmProblem { m: s, k: d, n: md, fmt: self.fmt, block_size: self.block_size },
+            MmProblem { m: s, k: md, n: d, fmt: self.fmt, block_size: self.block_size },
+        ]
+    }
+
+    /// Total MX-matmul FLOPs per forward pass.
+    pub fn mx_flops(&self) -> u64 {
+        self.mx_matmuls().iter().map(|p| p.flops()).sum()
+    }
+}
+
+/// Generate the flat parameter tensors (moment-matched synthetic).
+pub fn generate_params(cfg: &DeitConfig, seed: u64) -> Vec<(String, Vec<usize>, Vec<f32>)> {
+    let mut rng = XorShift::new(seed);
+    cfg.param_specs()
+        .into_iter()
+        .map(|(name, shape)| {
+            let n: usize = shape.iter().product();
+            let data = if name.ends_with("gamma") {
+                vec![1.0f32; n]
+            } else if name.ends_with("beta") || name.starts_with("b_") {
+                vec![0.0f32; n]
+            } else {
+                rng.normal_vec(n, 0.02)
+            };
+            (name.to_string(), shape, data)
+        })
+        .collect()
+}
+
+/// Generate one input activation (seq × dim).
+pub fn generate_input(cfg: &DeitConfig, seed: u64) -> Vec<f32> {
+    XorShift::new(seed).normal_vec(cfg.seq * cfg.dim, 0.5)
+}
+
+/// Hardware cost of one forward pass on the simulated cluster.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HwCost {
+    /// Simulated cluster cycles for the MX matmuls.
+    pub cycles: u64,
+    /// Simulated energy (µJ).
+    pub energy_uj: f64,
+    /// Equivalent wall-clock at the cluster's 1 GHz (µs).
+    pub time_us: f64,
+    /// Useful FLOPs.
+    pub flops: u64,
+}
+
+/// Analytic cost model: cycles ≈ FLOPs / (16 FLOP/cycle/core × cores ×
+/// utilization(K)). `calibrated_util` comes from a measured kernel run
+/// (see [`calibrate_util`]); energy from the EnergyModel's MXFP8
+/// operating point.
+pub fn analytic_cost(cfg: &DeitConfig, num_cores: usize, calibrated_util: f64) -> HwCost {
+    let flops = cfg.mx_flops();
+    let ideal = 16.0 * num_cores as f64;
+    let cycles = (flops as f64 / (ideal * calibrated_util)) as u64;
+    // power at the calibrated MXFP8 operating point (see EnergyModel):
+    // derive from a synthetic counter set with the same activity mix.
+    let em = EnergyModel;
+    let mut perf = crate::snitch::cluster::PerfCounters {
+        cycles,
+        ..Default::default()
+    };
+    let mut fpu = crate::snitch::fpu::FpuCounters::default();
+    fpu.mxdotp = flops / 16;
+    fpu.issued = fpu.mxdotp;
+    fpu.ssr_words = fpu.mxdotp * 9 / 8 + fpu.mxdotp / 4; // ft0/8 + ft1 + ft2/4
+    perf.fpu = vec![fpu; num_cores.max(1)];
+    // fpu counters above are totals split across cores; rescale
+    for f in perf.fpu.iter_mut() {
+        f.mxdotp /= num_cores as u64;
+        f.issued /= num_cores as u64;
+        f.ssr_words /= num_cores as u64;
+    }
+    let p = em.power(&perf, 1.0, true);
+    HwCost {
+        cycles,
+        energy_uj: p.energy_uj,
+        time_us: cycles as f64 / 1000.0,
+        flops,
+    }
+}
+
+/// Measure real MXFP8 utilization on a representative layer (fc1) by
+/// running the full cycle-accurate simulator once; the coordinator
+/// uses the result to calibrate [`analytic_cost`].
+pub fn calibrate_util(cfg: &DeitConfig, num_cores: usize, seed: u64) -> f64 {
+    // fc1 shape is the largest; use a K-truncated version to keep the
+    // calibration run fast while exercising the same inner structure.
+    let p = MmProblem { m: 64, k: cfg.dim, n: 64, fmt: cfg.fmt, block_size: cfg.block_size };
+    let mut rng = XorShift::new(seed);
+    let a = rng.normal_vec(p.m * p.k, 0.5);
+    let b = rng.normal_vec(p.k * p.n, 0.02);
+    let run = run_mm(KernelKind::Mxfp8, p, &a, &b, num_cores);
+    run.utilization()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_specs_match_python_layout() {
+        let cfg = DeitConfig::default();
+        let specs = cfg.param_specs();
+        assert_eq!(specs.len(), 12);
+        assert_eq!(specs[2], ("w_qkv", vec![192, 576]));
+        assert_eq!(specs[10], ("w_fc2", vec![768, 192]));
+        let total: usize = specs.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        // DeiT-Tiny per-block parameter count
+        assert_eq!(total, 192 * 576 + 576 + 192 * 192 + 192 + 192 * 768 + 768 + 768 * 192 + 192 + 4 * 192);
+    }
+
+    #[test]
+    fn generated_params_are_deterministic_and_shaped() {
+        let cfg = DeitConfig::default();
+        let p1 = generate_params(&cfg, 42);
+        let p2 = generate_params(&cfg, 42);
+        for ((n1, s1, d1), (n2, s2, d2)) in p1.iter().zip(&p2) {
+            assert_eq!(n1, n2);
+            assert_eq!(s1, s2);
+            assert_eq!(d1, d2);
+        }
+        let w_qkv = &p1[2].2;
+        let mean: f32 = w_qkv.iter().sum::<f32>() / w_qkv.len() as f32;
+        assert!(mean.abs() < 0.001);
+    }
+
+    #[test]
+    fn flop_accounting() {
+        let cfg = DeitConfig::default();
+        let s = 256u64;
+        let d = 192u64;
+        let want = 2 * s * d * 3 * d + 2 * s * d * d + 2 * s * d * 4 * d + 2 * s * 4 * d * d;
+        assert_eq!(cfg.mx_flops(), want);
+    }
+
+    #[test]
+    fn analytic_cost_sane() {
+        let cfg = DeitConfig::default();
+        let c = analytic_cost(&cfg, 8, 0.75);
+        assert!(c.cycles > 0);
+        assert!(c.energy_uj > 0.0);
+        // sanity: cycles ~ flops / (16*8*0.75)
+        let want = cfg.mx_flops() as f64 / 96.0;
+        assert!((c.cycles as f64 - want).abs() / want < 0.01);
+    }
+
+    #[test]
+    fn calibration_runs() {
+        let cfg = DeitConfig::default();
+        let u = calibrate_util(&cfg, 4, 1);
+        assert!(u > 0.3 && u < 1.0, "util {u}");
+    }
+}
