@@ -1,0 +1,94 @@
+//! Bench `scaleout`: strong scaling of the sharded MXFP8 GEMM engine —
+//! the DeiT-Tiny MX matmul workload executed on 1/2/4/8 simulated
+//! Snitch clusters, with the fabric wall-clock model (max over
+//! clusters) and the energy roll-up (sum over clusters).
+//!
+//! Besides the human-readable table this writes `BENCH_scaleout.json`
+//! (clusters → cycles, GFLOPS, GFLOPS/W, parallel efficiency) so the
+//! perf trajectory is trackable across PRs.
+//!
+//! Run: `cargo bench --bench scaleout`
+
+mod common;
+
+use mxdotp::report::{render_scaling, scaleout_scaling, ScalingPoint, SCALING_CLUSTERS};
+use mxdotp::workload::DeitConfig;
+use std::fmt::Write as _;
+
+fn json(cfg: &DeitConfig, points: &[ScalingPoint], host_wall_s: f64) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(
+        s,
+        "  \"workload\": {{\"name\": \"deit-tiny-mx-matmuls\", \"seq\": {}, \"dim\": {}, \
+         \"heads\": {}, \"mlp_ratio\": {}, \"fmt\": \"{}\", \"block_size\": {}}},",
+        cfg.seq, cfg.dim, cfg.heads, cfg.mlp_ratio, cfg.fmt, cfg.block_size
+    );
+    let _ = writeln!(s, "  \"host_wall_s\": {host_wall_s:.3},");
+    s.push_str("  \"points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "    {{\"clusters\": {}, \"wall_cycles\": {}, \"total_cycles\": {}, \
+             \"gflops\": {:.3}, \"gflops_per_w\": {:.3}, \"energy_uj\": {:.3}, \
+             \"speedup\": {:.4}, \"parallel_efficiency\": {:.4}}}{}",
+            p.clusters,
+            p.wall_cycles,
+            p.total_cycles,
+            p.gflops,
+            p.gflops_per_w,
+            p.energy_uj,
+            p.speedup,
+            p.efficiency,
+            if i + 1 == points.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+fn main() {
+    common::header(
+        "scaleout",
+        "strong scaling: DeiT-Tiny MX matmuls across 1/2/4/8 simulated clusters",
+    );
+    // Full DeiT-Tiny sequence by default; CI smoke runs set
+    // SCALEOUT_BENCH_SEQ=64 to bound the cycle-accurate sweep's wall
+    // time (shapes stay DeiT-Tiny's, the recorded JSON names the seq).
+    let seq: usize = std::env::var("SCALEOUT_BENCH_SEQ")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    let cfg = DeitConfig { seq, ..DeitConfig::default() };
+    let t0 = std::time::Instant::now();
+    let points = scaleout_scaling(&cfg, &SCALING_CLUSTERS, 42);
+    let host_wall = t0.elapsed().as_secs_f64();
+    println!("\n{}", render_scaling(&points, &cfg));
+    println!("[swept in {host_wall:.1} s host wall-clock]");
+
+    // Shape assertions: monotone speedup, the 4x acceptance bar at 8
+    // clusters, sane efficiency.
+    for w in points.windows(2) {
+        assert!(
+            w[1].wall_cycles < w[0].wall_cycles,
+            "scaling regressed: {} clusters {} cycles vs {} clusters {}",
+            w[1].clusters,
+            w[1].wall_cycles,
+            w[0].clusters,
+            w[0].wall_cycles
+        );
+    }
+    let last = points.last().unwrap();
+    assert!(last.clusters == 8);
+    assert!(
+        last.speedup >= 4.0,
+        "8-cluster speedup {:.2}x below the 4x acceptance bar",
+        last.speedup
+    );
+    assert!(last.efficiency <= 1.0 + 1e-9, "superlinear? {}", last.efficiency);
+
+    let out = json(&cfg, &points, host_wall);
+    std::fs::write("BENCH_scaleout.json", &out).expect("write BENCH_scaleout.json");
+    println!("wrote BENCH_scaleout.json ({} points)", points.len());
+    println!("\nscaleout: OK (strong-scaling assertions passed)");
+}

@@ -18,9 +18,9 @@ use std::collections::HashMap;
 #[derive(Clone, Debug, PartialEq)]
 pub enum Command {
     Quantize { fmt: ElemFormat, block: usize, n: usize, seed: u64 },
-    Simulate { kernel: KernelKind, m: usize, k: usize, n: usize, cores: usize, fmt: ElemFormat, seed: u64 },
-    Reproduce { what: String, cores: usize, fmt: ElemFormat },
-    Serve { requests: usize, batch: usize, artifacts: String },
+    Simulate { kernel: KernelKind, m: usize, k: usize, n: usize, cores: usize, clusters: usize, fmt: ElemFormat, seed: u64 },
+    Reproduce { what: String, cores: usize, clusters: usize, fmt: ElemFormat },
+    Serve { requests: usize, batch: usize, clusters: usize, artifacts: String },
     Info,
     Help,
 }
@@ -66,6 +66,15 @@ fn get_parse<T: std::str::FromStr>(
     }
 }
 
+/// `--clusters N`: size of the simulated cluster fabric.
+fn get_clusters(f: &HashMap<String, String>, default: usize) -> Result<usize, CliError> {
+    let clusters: usize = get_parse(f, "clusters", default)?;
+    if clusters == 0 {
+        return Err(CliError("--clusters must be at least 1".into()));
+    }
+    Ok(clusters)
+}
+
 fn get_fmt(f: &HashMap<String, String>) -> Result<ElemFormat, CliError> {
     match f.get("fmt") {
         None => Ok(ElemFormat::E4M3),
@@ -107,6 +116,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 k: get_parse(&f, "k", 256)?,
                 n: get_parse(&f, "n", 64)?,
                 cores: get_parse(&f, "cores", 8)?,
+                clusters: get_clusters(&f, 1)?,
                 fmt: get_fmt(&f)?,
                 seed: get_parse(&f, "seed", 42)?,
             })
@@ -117,20 +127,26 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 .filter(|w| !w.starts_with("--"))
                 .cloned()
                 .unwrap_or_else(|| "all".to_string());
-            if !["fig3", "fig4", "table3", "all"].contains(&what.as_str()) {
+            if !["fig3", "fig4", "table3", "scaling", "all"].contains(&what.as_str()) {
                 return Err(CliError(format!(
-                    "unknown target '{what}' (expected fig3|fig4|table3|all)"
+                    "unknown target '{what}' (expected fig3|fig4|table3|scaling|all)"
                 )));
             }
             let skip = usize::from(!rest.is_empty() && !rest[0].starts_with("--"));
             let f = flags(&rest[skip..])?;
-            Ok(Command::Reproduce { what, cores: get_parse(&f, "cores", 8)?, fmt: get_fmt(&f)? })
+            Ok(Command::Reproduce {
+                what,
+                cores: get_parse(&f, "cores", 8)?,
+                clusters: get_clusters(&f, 8)?,
+                fmt: get_fmt(&f)?,
+            })
         }
         "serve" => {
             let f = flags(rest)?;
             Ok(Command::Serve {
                 requests: get_parse(&f, "requests", 16)?,
                 batch: get_parse(&f, "batch", 8)?,
+                clusters: get_clusters(&f, 1)?,
                 artifacts: f.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
             })
         }
@@ -144,9 +160,10 @@ mxdotp-cli — MXDOTP paper reproduction driver
 USAGE:
   mxdotp-cli quantize  [--fmt e4m3|e5m2|e3m2|e2m3|e2m1|int8] [--block 32] [--n 8] [--seed S]
   mxdotp-cli simulate  [--kernel mxfp8|fp32|fp8sw] [--m 64] [--k 256] [--n 64]
-                       [--cores 8] [--fmt e4m3] [--seed S]
-  mxdotp-cli reproduce [fig3|fig4|table3|all] [--cores 8] [--fmt e4m3]
-  mxdotp-cli serve     [--requests 16] [--batch 8] [--artifacts DIR]
+                       [--cores 8] [--clusters 1] [--fmt e4m3] [--seed S]
+                       (--clusters N > 1 shards the MXFP8 GEMM across N simulated clusters)
+  mxdotp-cli reproduce [fig3|fig4|table3|scaling|all] [--cores 8] [--clusters 8] [--fmt e4m3]
+  mxdotp-cli serve     [--requests 16] [--batch 8] [--clusters 1] [--artifacts DIR]
   mxdotp-cli info
 ";
 
@@ -169,10 +186,33 @@ mod tests {
                 k: 128,
                 n: 64,
                 cores: 4,
+                clusters: 1,
                 fmt: ElemFormat::E4M3,
                 seed: 42
             }
         );
+    }
+
+    #[test]
+    fn parse_clusters_flag() {
+        assert!(matches!(
+            parse(&argv("simulate --clusters 8")),
+            Ok(Command::Simulate { clusters: 8, .. })
+        ));
+        assert!(matches!(
+            parse(&argv("serve --clusters 4")),
+            Ok(Command::Serve { clusters: 4, .. })
+        ));
+        assert!(matches!(
+            parse(&argv("reproduce scaling --clusters 4")),
+            Ok(Command::Reproduce { ref what, clusters: 4, .. }) if what == "scaling"
+        ));
+        // default fabric sizes: 1 for simulate/serve, 8 for reproduce
+        assert!(matches!(parse(&argv("simulate")), Ok(Command::Simulate { clusters: 1, .. })));
+        assert!(matches!(parse(&argv("reproduce")), Ok(Command::Reproduce { clusters: 8, .. })));
+        assert!(parse(&argv("simulate --clusters 0")).is_err());
+        assert!(parse(&argv("serve --clusters 0")).is_err());
+        assert!(parse(&argv("reproduce scaling --clusters 0")).is_err());
     }
 
     #[test]

@@ -16,4 +16,4 @@ pub mod constants;
 pub mod power;
 
 pub use area::AreaModel;
-pub use power::EnergyModel;
+pub use power::{EnergyModel, FabricEnergy};

@@ -18,6 +18,21 @@ pub struct PowerEstimate {
     pub energy_uj: f64,
 }
 
+/// Fabric-level energy roll-up across concurrent clusters (the
+/// scale-out engine's per-cluster breakdown).
+#[derive(Clone, Debug, Default)]
+pub struct FabricEnergy {
+    /// Wall-clock of the fabric: max over per-cluster busy cycles.
+    pub wall_cycles: u64,
+    pub wall_us: f64,
+    /// Total energy across clusters (µJ).
+    pub total_energy_uj: f64,
+    /// Average fabric power over the wall-clock (mW).
+    pub avg_power_mw: f64,
+    /// Per-cluster energies (µJ), indexed by cluster.
+    pub per_cluster_uj: Vec<f64>,
+}
+
 /// The energy model (constants live in [`super::constants`]).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EnergyModel;
@@ -76,6 +91,24 @@ impl EnergyModel {
         let p = self.power(perf, freq_ghz, with_mxdotp);
         let gflops = flops as f64 / perf.cycles as f64 * freq_ghz;
         gflops / (p.total_mw * 1e-3)
+    }
+
+    /// Roll energy up across a fabric of clusters running concurrently:
+    /// per-cluster `(busy_cycles, energy_uj)` pairs become fabric
+    /// wall-clock (max), total energy (sum) and the average fabric
+    /// power over that wall-clock — the scale-out extension of
+    /// [`Self::power`]'s single-cluster accounting.
+    pub fn fabric_rollup(&self, per_cluster: &[(u64, f64)], freq_ghz: f64) -> FabricEnergy {
+        let wall_cycles = per_cluster.iter().map(|&(c, _)| c).max().unwrap_or(0);
+        let total_energy_uj: f64 = per_cluster.iter().map(|&(_, e)| e).sum();
+        let wall_us = wall_cycles as f64 / (freq_ghz * 1e3);
+        FabricEnergy {
+            wall_cycles,
+            wall_us,
+            total_energy_uj,
+            avg_power_mw: if wall_us > 0.0 { total_energy_uj / wall_us * 1e3 } else { 0.0 },
+            per_cluster_uj: per_cluster.iter().map(|&(_, e)| e).collect(),
+        }
     }
 
     /// Standalone-unit estimate for the Table III unit row: one MXDOTP
@@ -188,6 +221,21 @@ mod tests {
             "unit efficiency {eff:.0} vs anchor {}",
             k::ANCHOR_UNIT_GFLOPS_W
         );
+    }
+
+    #[test]
+    fn fabric_rollup_max_and_sum() {
+        let em = EnergyModel;
+        let f = em.fabric_rollup(&[(1000, 2.0), (800, 1.5), (1200, 2.5)], 1.0);
+        assert_eq!(f.wall_cycles, 1200);
+        assert!((f.total_energy_uj - 6.0).abs() < 1e-12);
+        assert!((f.wall_us - 1.2).abs() < 1e-12);
+        // 6 µJ over 1.2 µs = 5 W = 5000 mW
+        assert!((f.avg_power_mw - 5000.0).abs() < 1e-6);
+        assert_eq!(f.per_cluster_uj.len(), 3);
+        let empty = em.fabric_rollup(&[], 1.0);
+        assert_eq!(empty.wall_cycles, 0);
+        assert_eq!(empty.avg_power_mw, 0.0);
     }
 
     #[test]

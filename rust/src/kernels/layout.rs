@@ -87,6 +87,24 @@ pub fn fp32_footprint(p: &MmProblem) -> usize {
     4 * (p.m * p.k + p.k * p.n + p.m * p.n)
 }
 
+/// Exact upper bound of the bytes `mxfp8::stage_mx` actually places:
+/// the padded-stride element regions (one 8-byte pad word per A row /
+/// B column), the A-scale guard row, the pre-shifted 16-bit B scales,
+/// FP32 C, the per-core double-buffered scale streams, plus the
+/// worst-case bank-stagger/alignment slack the [`Planner`] can insert
+/// per region (< 256 B each). Both `stage_mx`'s capacity check and the
+/// scale-out engine's tile planner use this single definition, so the
+/// staging layout and its footprint model cannot drift apart.
+pub fn mx_staged_footprint(p: &MmProblem, num_cores: usize) -> usize {
+    let kb = p.k / p.block_size;
+    let elems = (p.k + 8) * p.m + (p.k + 8) * p.n;
+    let scales = (p.m + 1) * kb + p.n * kb * 2;
+    let c = 4 * p.m * p.n;
+    let bufs = num_cores * 2 * (8 * kb * 8);
+    let regions = 5 + 2 * num_cores;
+    elems + scales + c + bufs + regions * 256
+}
+
 /// MX kernels footprint: FP8 elements for A and B, E8M0 scales, FP32
 /// C, plus the per-core reshaped scale stream buffers (double-buffered)
 /// for the MXFP8 kernel.
@@ -129,6 +147,9 @@ mod tests {
     fn mx_k256_fits() {
         let p = MmProblem::fig4(256, ElemFormat::E4M3);
         assert!(mx_footprint(&p, 8, true) <= SPM_BYTES);
+        // the exact staged bound also fits, and dominates the model
+        assert!(mx_staged_footprint(&p, 8) <= SPM_BYTES);
+        assert!(mx_staged_footprint(&p, 8) >= mx_footprint(&p, 8, true));
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //! (block size stays configurable in software by changing that bound).
 //! Ideal rate: 8 MACs = 16 FLOPs per cycle per core.
 
-use super::layout::{mx_footprint, rows_for_core, Planner, Region};
+use super::layout::{mx_staged_footprint, rows_for_core, Planner, Region};
 use super::reference::quantize_operands;
 use super::{fp32::emit_ssr, MmProblem};
 use crate::formats::MxMatrix;
@@ -59,7 +59,7 @@ pub(super) fn stage_mx(
     assert_eq!(p.k % p.block_size, 0);
     assert_eq!(p.block_size % 8, 0);
     assert!(
-        mx_footprint(&p, ncores, true) <= SPM_BYTES,
+        mx_staged_footprint(&p, ncores) <= SPM_BYTES,
         "MX workload does not fit into L1"
     );
     let (qa, qb) = quantize_operands(&p, a, b);

@@ -20,6 +20,10 @@
 //!   stream builders for the simulator.
 //! * [`energy`] — GE-level area accounting and per-op energy models
 //!   calibrated to the paper's 12 nm FinFET implementation numbers.
+//! * [`scaleout`] — the multi-cluster scale-out engine: MX-block-aware
+//!   tile partitioning, a pool of N independent cluster simulators on
+//!   OS threads with work stealing, and the fabric aggregation model
+//!   (wall-clock = max over clusters, energy = sum).
 //! * [`runtime`] — PJRT CPU runtime loading the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); Python is never on this path.
 //! * [`coordinator`] — the serving layer: request queue, dynamic
@@ -35,6 +39,7 @@ pub mod coordinator;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod scaleout;
 pub mod snitch;
 pub mod workload;
 

@@ -4,11 +4,14 @@
 
 use anyhow::Result;
 use mxdotp::cli::{parse, Command, USAGE};
-use mxdotp::coordinator::{BatchPolicy, Coordinator, PjrtExecutor, Request};
+use mxdotp::coordinator::{
+    BatchPolicy, Coordinator, ModelExecutor, PjrtExecutor, Request, ShardedExecutor,
+};
 use mxdotp::formats::MxVector;
 use mxdotp::kernels::{run_mm, MmProblem};
 use mxdotp::rng::XorShift;
 use mxdotp::runtime::Runtime;
+use mxdotp::scaleout::{measure_parallel_efficiency, sharded_mm, ScaleoutConfig};
 use mxdotp::workload::{calibrate_util, generate_input, generate_params, DeitConfig};
 use mxdotp::{report, snitch};
 
@@ -61,15 +64,47 @@ fn main() -> Result<()> {
                 data.iter().zip(&dq).map(|(a, b)| (a - b).abs()).sum::<f32>() / data.len() as f32;
             println!("  mean |dequant - original| = {err:.5}");
         }
-        Command::Simulate { kernel, m, k, n, cores, fmt, seed } => {
+        Command::Simulate { kernel, m, k, n, cores, clusters, fmt, seed } => {
             let p = MmProblem { m, k, n, fmt, block_size: 32 };
             let mut rng = XorShift::new(seed);
             let a = rng.normal_vec(m * k, 1.0);
             let b = rng.normal_vec(k * n, 1.0);
-            let run = run_mm(kernel, p, &a, &b, cores);
-            println!("{}", report::render_run_detailed(&run));
+            if clusters > 1 {
+                if kernel != mxdotp::kernels::KernelKind::Mxfp8 {
+                    eprintln!("note: --clusters shards the MXFP8 kernel; ignoring --kernel");
+                }
+                let scfg = ScaleoutConfig {
+                    clusters,
+                    cores_per_cluster: cores,
+                    ..ScaleoutConfig::default()
+                };
+                let run = sharded_mm(&scfg, p, &a, &b);
+                println!(
+                    "MXFP8 {m}x{k}x{n} sharded across {clusters} clusters x {cores} cores \
+                     ({} shards):",
+                    run.shards
+                );
+                println!(
+                    "  wall {} cycles (max over clusters), {} total busy cycles, \
+                     {:.1} GFLOPS, {:.1} GFLOPS/W, {:.1} µJ",
+                    run.wall_cycles,
+                    run.total_cycles,
+                    run.gflops(),
+                    run.gflops_per_w(),
+                    run.total_energy_uj
+                );
+                for st in &run.clusters {
+                    println!(
+                        "    cluster {}: {} shards, {} passes, {} cycles, {} mxdotp, {:.1} µJ",
+                        st.id, st.shards, st.passes, st.cycles, st.mxdotp, st.energy_uj
+                    );
+                }
+            } else {
+                let run = run_mm(kernel, p, &a, &b, cores);
+                println!("{}", report::render_run_detailed(&run));
+            }
         }
-        Command::Reproduce { what, cores, fmt } => {
+        Command::Reproduce { what, cores, clusters, fmt } => {
             if what == "fig3" || what == "all" {
                 println!("{}", report::render_fig3());
             }
@@ -81,53 +116,111 @@ fn main() -> Result<()> {
                 let point = report::table3_cluster_point(42);
                 println!("{}", report::render_table3(Some(&point)));
             }
+            if what == "scaling" || what == "all" {
+                let cfg = DeitConfig { fmt, ..DeitConfig::default() };
+                // The standard sweep points below the requested fabric
+                // size, plus the requested size itself (so e.g.
+                // --clusters 6 or 16 gets its own row).
+                let mut sweep: Vec<usize> = report::SCALING_CLUSTERS
+                    .iter()
+                    .copied()
+                    .filter(|&c| c < clusters)
+                    .collect();
+                sweep.push(clusters);
+                eprintln!(
+                    "simulating the DeiT-Tiny matmuls on {sweep:?} clusters \
+                     (cycle-accurate; this takes a while)..."
+                );
+                let points = report::scaleout_scaling(&cfg, &sweep, 42);
+                println!("{}", report::render_scaling(&points, &cfg));
+            }
         }
-        Command::Serve { requests, batch, artifacts } => {
-            let rt = Runtime::new(&artifacts)?;
+        Command::Serve { requests, batch, clusters, artifacts } => {
             let cfg = DeitConfig::default();
-            println!("serving DeiT-Tiny-shaped encoder block via PJRT ({})", rt.platform());
             let params = generate_params(&cfg, 42);
-            let exec = PjrtExecutor::new(&rt, cfg, params)?;
             println!("calibrating MXFP8 utilization on the cycle-accurate cluster...");
             let util = calibrate_util(&cfg, snitch::NUM_CORES, 1);
             println!("  calibrated utilization: {:.1} %", util * 100.0);
-            let mut coord = Coordinator::new(
-                cfg,
-                BatchPolicy { max_batch: batch, max_wait_ticks: 4 },
-                exec,
-                util,
-            );
-            let t0 = std::time::Instant::now();
-            for i in 0..requests as u64 {
-                coord.submit(Request { id: i, input: generate_input(&cfg, 1000 + i) });
+            let scfg = ScaleoutConfig::with_clusters(clusters);
+            let eff = if clusters > 1 {
+                let e = measure_parallel_efficiency(&scfg, 2);
+                println!(
+                    "  measured {clusters}-cluster parallel efficiency: {:.1} %",
+                    e * 100.0
+                );
+                e
+            } else {
+                1.0
+            };
+            let policy = BatchPolicy { max_batch: batch, max_wait_ticks: 4 };
+            // Prefer the PJRT artifact path when available; otherwise
+            // serve through the PJRT-free sharded in-process executor.
+            let pjrt = Runtime::new(&artifacts).ok().filter(|_| {
+                Runtime::artifacts_present(std::path::Path::new(&artifacts))
+            });
+            match pjrt {
+                Some(rt) => {
+                    println!(
+                        "serving DeiT-Tiny-shaped encoder block via PJRT ({})",
+                        rt.platform()
+                    );
+                    let exec = PjrtExecutor::new(&rt, cfg, params)?;
+                    let coord =
+                        Coordinator::new(cfg, policy, exec, util).with_scaleout(clusters, eff);
+                    serve_loop(coord, requests as u64)?;
+                }
+                None => {
+                    println!(
+                        "PJRT unavailable or artifacts missing — serving via the in-process \
+                         MX executor on a {clusters}-cluster simulated fabric"
+                    );
+                    let exec = ShardedExecutor::new(cfg, params);
+                    let coord =
+                        Coordinator::new(cfg, policy, exec, util).with_scaleout(clusters, eff);
+                    serve_loop(coord, requests as u64)?;
+                }
             }
-            let mut responses = Vec::new();
-            while coord.pending() > 0 {
-                responses.extend(coord.tick()?);
-            }
-            let wall = t0.elapsed().as_secs_f64();
-            let st = coord.stats;
-            println!(
-                "served {} requests in {} batches (mean batch {:.1}) in {:.3} s host wall-clock",
-                st.served,
-                st.batches,
-                st.mean_batch_size(),
-                wall
-            );
-            println!(
-                "  host latency: mean {:.1} µs, max {:.1} µs; throughput {:.1} req/s",
-                st.mean_latency_us(),
-                st.max_latency_us,
-                st.served as f64 / wall
-            );
-            println!(
-                "  simulated Snitch cluster cost: {} cycles ({:.1} µs @1 GHz), {:.1} µJ total",
-                st.total_sim_cycles,
-                st.total_sim_cycles as f64 / 1000.0,
-                st.total_sim_energy_uj
-            );
-            drop(responses);
         }
     }
+    Ok(())
+}
+
+/// Drive a coordinator through `requests` synthetic requests and print
+/// the serving + simulated-hardware summary (shared by the PJRT and
+/// sharded executor paths).
+fn serve_loop<E: ModelExecutor>(mut coord: Coordinator<E>, requests: u64) -> Result<()> {
+    let cfg = coord.cfg;
+    let clusters = coord.num_clusters;
+    let t0 = std::time::Instant::now();
+    for i in 0..requests {
+        coord.submit(Request { id: i, input: generate_input(&cfg, 1000 + i) });
+    }
+    let mut responses = Vec::new();
+    while coord.pending() > 0 {
+        responses.extend(coord.tick()?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let st = coord.stats;
+    println!(
+        "served {} requests in {} batches (mean batch {:.1}) in {:.3} s host wall-clock",
+        st.served,
+        st.batches,
+        st.mean_batch_size(),
+        wall
+    );
+    println!(
+        "  host latency: mean {:.1} µs, max {:.1} µs; throughput {:.1} req/s",
+        st.mean_latency_us(),
+        st.max_latency_us,
+        st.served as f64 / wall
+    );
+    println!(
+        "  simulated hardware cost ({clusters} cluster{}): {} wall cycles ({:.1} µs @1 GHz), {:.1} µJ total",
+        if clusters == 1 { "" } else { "s" },
+        st.total_sim_cycles,
+        st.total_sim_cycles as f64 / 1000.0,
+        st.total_sim_energy_uj
+    );
+    drop(responses);
     Ok(())
 }

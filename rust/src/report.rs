@@ -9,6 +9,8 @@ use crate::energy::{AreaModel, EnergyModel};
 use crate::formats::ElemFormat;
 use crate::kernels::{layout, run_mm, KernelKind, MmProblem, MmRun};
 use crate::rng::XorShift;
+use crate::scaleout::{sharded_mm, ScaleoutConfig};
+use crate::workload::DeitConfig;
 
 /// The Fig. 4 inner-dimension sweep (block size 32 bounds K below).
 pub const FIG4_K_SWEEP: [usize; 4] = [32, 64, 128, 256];
@@ -283,6 +285,107 @@ pub fn table3_cluster_point(seed: u64) -> Fig4Point {
         .expect("sweep must contain the K=256 MXFP8 point")
 }
 
+/// The default strong-scaling sweep (the scale-out scaling table).
+pub const SCALING_CLUSTERS: [usize; 4] = [1, 2, 4, 8];
+
+/// One row of the scale-out scaling table: the DeiT-Tiny MX matmuls
+/// executed on an N-cluster fabric.
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    pub clusters: usize,
+    /// Fabric wall-clock summed over the workload's layers (max over
+    /// clusters within each layer).
+    pub wall_cycles: u64,
+    /// Total busy cycles across clusters and layers.
+    pub total_cycles: u64,
+    /// Total fabric energy (µJ).
+    pub energy_uj: f64,
+    /// Useful FLOPs of the workload.
+    pub flops: u64,
+    pub gflops: f64,
+    pub gflops_per_w: f64,
+    /// Strong-scaling speedup vs the sweep's first point.
+    pub speedup: f64,
+    /// Parallel efficiency: speedup normalized by the cluster ratio.
+    pub efficiency: f64,
+}
+
+/// Run the DeiT-Tiny MX matmul workload (`cfg.mx_matmuls()`, executed
+/// layer by layer) on each fabric size in `clusters_list`, through the
+/// cycle-accurate scale-out engine. Inputs are the same for every
+/// fabric size, so results are bit-comparable across the sweep.
+pub fn scaleout_scaling(cfg: &DeitConfig, clusters_list: &[usize], seed: u64) -> Vec<ScalingPoint> {
+    assert!(!clusters_list.is_empty());
+    let layers = cfg.mx_matmuls();
+    let mut points: Vec<ScalingPoint> = Vec::with_capacity(clusters_list.len());
+    for &clusters in clusters_list {
+        let scfg = ScaleoutConfig::with_clusters(clusters);
+        let mut wall = 0u64;
+        let mut total = 0u64;
+        let mut energy = 0.0f64;
+        let mut flops = 0u64;
+        for (li, p) in layers.iter().enumerate() {
+            let mut rng = XorShift::new(seed ^ ((li as u64 + 1) << 32));
+            let a = rng.normal_vec(p.m * p.k, 0.5);
+            let b = rng.normal_vec(p.k * p.n, 0.02);
+            let run = sharded_mm(&scfg, *p, &a, &b);
+            wall += run.wall_cycles;
+            total += run.total_cycles;
+            energy += run.total_energy_uj;
+            flops += p.flops();
+        }
+        let time_us = wall as f64 / (scfg.freq_ghz * 1e3);
+        let gflops = flops as f64 / wall as f64 * scfg.freq_ghz;
+        let avg_power_w = if time_us > 0.0 { energy / time_us } else { 0.0 };
+        let (speedup, efficiency) = match points.first() {
+            None => (1.0, 1.0),
+            Some(base) => {
+                let s = base.wall_cycles as f64 / wall as f64;
+                (s, s * base.clusters as f64 / clusters as f64)
+            }
+        };
+        points.push(ScalingPoint {
+            clusters,
+            wall_cycles: wall,
+            total_cycles: total,
+            energy_uj: energy,
+            flops,
+            gflops,
+            gflops_per_w: if avg_power_w > 0.0 { gflops / avg_power_w } else { 0.0 },
+            speedup,
+            efficiency,
+        });
+    }
+    points
+}
+
+/// Render the scale-out scaling table.
+pub fn render_scaling(points: &[ScalingPoint], cfg: &DeitConfig) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Scale-out — DeiT-Tiny MX matmuls (seq {}, dim {}, {fmt}) sharded across \
+         N simulated Snitch clusters\n(wall-clock = max over clusters per layer; \
+         energy = fabric total; M-split, bit-identical results)\n\n",
+        cfg.seq,
+        cfg.dim,
+        fmt = cfg.fmt
+    ));
+    s.push_str("  clusters   wall cycles   speedup   par.eff   GFLOPS   GFLOPS/W   energy[µJ]\n");
+    for p in points {
+        s.push_str(&format!(
+            "  {:<8}  {:>12}   {:>6.2}x   {:>6.1} %  {:>7.1}   {:>8.1}   {:>10.1}\n",
+            p.clusters,
+            p.wall_cycles,
+            p.speedup,
+            p.efficiency * 100.0,
+            p.gflops,
+            p.gflops_per_w,
+            p.energy_uj
+        ));
+    }
+    s
+}
+
 /// Summarize an MmRun for CLI output.
 pub fn render_run(run: &MmRun) -> String {
     let em = EnergyModel;
@@ -331,6 +434,22 @@ mod tests {
         for d in ["ExSdotp", "Desrentes", "Lutz", "This work (unit)", "MiniFloat-NN"] {
             assert!(s.contains(d), "{d} missing");
         }
+    }
+
+    #[test]
+    fn scaling_table_shape() {
+        // A reduced DeiT-shaped workload keeps the sweep fast while
+        // exercising the full scale-out path end to end.
+        let cfg = DeitConfig { seq: 16, ..DeitConfig::default() };
+        let pts = scaleout_scaling(&cfg, &[1, 2], 5);
+        assert_eq!(pts.len(), 2);
+        assert!((pts[0].speedup - 1.0).abs() < 1e-12);
+        assert!(pts[1].speedup > 1.2, "2 clusters only {}x", pts[1].speedup);
+        assert!(pts[1].efficiency <= 1.0 + 1e-9);
+        assert!(pts[1].gflops > pts[0].gflops);
+        let text = render_scaling(&pts, &cfg);
+        assert!(text.contains("clusters"));
+        assert!(text.contains("Scale-out"));
     }
 
     #[test]

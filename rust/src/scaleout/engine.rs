@@ -1,0 +1,223 @@
+//! Per-cluster execution engine: turns one [`Shard`] into simulated
+//! cycles and a row-slab of C by running L1-sized passes on a
+//! cycle-accurate `snitch::Cluster`.
+//!
+//! A DeiT-shaped GEMM does not fit a 128 KiB L1 (fc1's B alone is
+//! 147 KiB of FP8), so the engine tiles each shard into passes of
+//! `tile_m × K × tile_n` that satisfy every MXFP8 staging constraint
+//! (rows a multiple of the core count, columns a multiple of 8, the
+//! `kernels::layout` footprint within SPM) and runs each pass through
+//! `kernels::run_mm` on a freshly staged cluster — the same
+//! stage-then-run idiom the single-cluster paths use. Crucially K is
+//! **never** cut here: a pass streams the shard's whole K range, so
+//! each output element's MXDOTP accumulation chain is fused exactly as
+//! in a single-cluster run and results stay bit-identical under any
+//! tiling.
+//!
+//! Cycle accounting: a cluster's cost for a shard is the *sum* of its
+//! pass cycles (one cluster executes passes back to back); counters
+//! are merged with [`PerfCounters::merge`] and energy integrated per
+//! pass with the activity-based [`EnergyModel`].
+
+use super::partition::Shard;
+use crate::energy::EnergyModel;
+use crate::kernels::layout::mx_staged_footprint;
+use crate::kernels::{run_mm, KernelKind, MmProblem};
+use crate::snitch::cluster::PerfCounters;
+use crate::snitch::SPM_BYTES;
+
+/// One simulated Snitch cluster executing shards sequentially.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterEngine {
+    pub id: usize,
+    /// Compute cores per cluster (8 in the paper's cluster).
+    pub cores: usize,
+    pub freq_ghz: f64,
+    /// Upper bounds for the per-pass tile (rows / columns of C).
+    pub max_tile_m: usize,
+    pub max_tile_n: usize,
+}
+
+/// A shard plus borrowed views of the padded operands.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardJob<'a> {
+    pub shard: &'a Shard,
+    /// The padded problem (full M/N; K already block-aligned).
+    pub problem: MmProblem,
+    /// Padded A, row-major `problem.m × problem.k`.
+    pub a: &'a [f32],
+    /// Padded B, row-major `problem.k × problem.n`.
+    pub b: &'a [f32],
+}
+
+/// What one shard produced.
+#[derive(Clone, Debug)]
+pub struct ShardOutput {
+    pub shard: Shard,
+    /// Which cluster ran it (filled by the pool).
+    pub cluster: usize,
+    /// Row-major `shard.rows.len() × problem.n` slab of C (a partial
+    /// product when the shard covers a K chunk).
+    pub c: Vec<f32>,
+    /// L1-sized passes executed.
+    pub passes: u32,
+    /// Counters merged across the shard's passes.
+    pub perf: PerfCounters,
+    /// Activity-based energy across the shard's passes (µJ).
+    pub energy_uj: f64,
+}
+
+impl ClusterEngine {
+    /// Footprint of a candidate `m × k × n` pass on this cluster —
+    /// the exact staged bound shared with `mxfp8::stage_mx` via
+    /// [`mx_staged_footprint`], so the planner can never accept a tile
+    /// the stager would reject.
+    fn tile_footprint(&self, m: usize, k: usize, n: usize, template: MmProblem) -> usize {
+        mx_staged_footprint(&MmProblem { m, k, n, ..template }, self.cores)
+    }
+
+    /// Pick the per-pass tile: the widest column tile ≤ `max_tile_n`
+    /// that fits alongside a minimum-height row tile, then the tallest
+    /// row tile that still fits. Both stay multiples of the staging
+    /// granularity (8 columns, `cores` rows).
+    fn plan_tiles(&self, k: usize, n: usize, template: MmProblem) -> (usize, usize) {
+        let n_cap = self.max_tile_n.max(8).min(n.div_ceil(8) * 8);
+        let mut tile_n = n_cap / 8 * 8;
+        while tile_n > 8 && self.tile_footprint(self.cores, k, tile_n, template) > SPM_BYTES {
+            tile_n -= 8;
+        }
+        assert!(
+            self.tile_footprint(self.cores, k, tile_n, template) <= SPM_BYTES,
+            "scaleout: K={k} does not fit L1 even at the minimum {0}x{k}x8 tile; \
+             split K with SplitStrategy::MkSplit",
+            self.cores
+        );
+        let m_cap = self.max_tile_m.max(self.cores) / self.cores * self.cores;
+        let mut tile_m = self.cores;
+        while tile_m + self.cores <= m_cap
+            && self.tile_footprint(tile_m + self.cores, k, tile_n, template) <= SPM_BYTES
+        {
+            tile_m += self.cores;
+        }
+        (tile_m, tile_n)
+    }
+
+    /// Run one shard to completion on this (simulated) cluster.
+    pub fn run_shard(&self, job: &ShardJob<'_>) -> ShardOutput {
+        let p = job.problem;
+        let rows = job.shard.rows.clone();
+        let kr = job.shard.k_range.clone();
+        let kc = kr.len();
+        assert!(kc > 0 && !rows.is_empty(), "empty shard");
+        assert_eq!(kc % p.block_size, 0);
+        let n = p.n;
+        let (tile_m, tile_n) = self.plan_tiles(kc, n, p);
+        let mut c = vec![0.0f32; rows.len() * n];
+        let mut perf = PerfCounters::default();
+        let mut passes = 0u32;
+        let mut energy_uj = 0.0;
+        let em = EnergyModel;
+
+        let mut m0 = rows.start;
+        while m0 < rows.end {
+            let real_m = (rows.end - m0).min(tile_m);
+            // Pad the row tile to a core multiple with zero rows; the
+            // padded rows' outputs are simply not copied out.
+            let mpad = real_m.div_ceil(self.cores) * self.cores;
+            let mut a_tile = vec![0.0f32; mpad * kc];
+            for r in 0..real_m {
+                let src = (m0 + r) * p.k + kr.start;
+                a_tile[r * kc..(r + 1) * kc].copy_from_slice(&job.a[src..src + kc]);
+            }
+            let mut n0 = 0;
+            while n0 < n {
+                let w = (n - n0).min(tile_n);
+                // Pad the column tile to an 8-multiple with zero cols.
+                let w8 = w.div_ceil(8) * 8;
+                let mut b_tile = vec![0.0f32; kc * w8];
+                for kk in 0..kc {
+                    let src = (kr.start + kk) * n + n0;
+                    b_tile[kk * w8..kk * w8 + w].copy_from_slice(&job.b[src..src + w]);
+                }
+                let sub = MmProblem { m: mpad, k: kc, n: w8, fmt: p.fmt, block_size: p.block_size };
+                let run = run_mm(KernelKind::Mxfp8, sub, &a_tile, &b_tile, self.cores);
+                energy_uj += em.power(&run.perf, self.freq_ghz, true).energy_uj;
+                perf.merge(&run.perf);
+                passes += 1;
+                for r in 0..real_m {
+                    let dst = (m0 - rows.start + r) * n + n0;
+                    c[dst..dst + w].copy_from_slice(&run.c[r * w8..r * w8 + w]);
+                }
+                n0 += w;
+            }
+            m0 += real_m;
+        }
+        ShardOutput {
+            shard: job.shard.clone(),
+            cluster: self.id,
+            c,
+            passes,
+            perf,
+            energy_uj,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::ElemFormat;
+    use crate::kernels::reference::mxfp8_hw_ref;
+    use crate::rng::XorShift;
+    use crate::snitch::NUM_CORES;
+
+    fn engine() -> ClusterEngine {
+        ClusterEngine { id: 0, cores: NUM_CORES, freq_ghz: 1.0, max_tile_m: 64, max_tile_n: 64 }
+    }
+
+    #[test]
+    fn tiles_fit_l1_for_deit_shapes() {
+        let e = engine();
+        // fc1 (K=192) and fc2 (K=768) must both tile.
+        for k in [192usize, 768] {
+            let template =
+                MmProblem { m: 8, k, n: 768, fmt: ElemFormat::E4M3, block_size: 32 };
+            let (tm, tn) = e.plan_tiles(k, 768, template);
+            assert_eq!(tm % NUM_CORES, 0);
+            assert_eq!(tn % 8, 0);
+            assert!(
+                mx_staged_footprint(
+                    &MmProblem { m: tm, k, n: tn, ..template },
+                    NUM_CORES
+                ) <= SPM_BYTES
+            );
+        }
+    }
+
+    #[test]
+    fn shard_result_matches_reference_with_tiling_and_padding() {
+        // 13 rows (pads to 16 per pass), 24 cols, small tiles to force
+        // multiple passes in both dimensions.
+        let p = MmProblem { m: 13, k: 64, n: 24, fmt: ElemFormat::E4M3, block_size: 32 };
+        let mut rng = XorShift::new(0x5CA1E);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        let shard = Shard { id: 0, rows: 0..p.m, k_chunk: 0, k_range: 0..p.k };
+        let mut e = engine();
+        e.max_tile_m = 8;
+        e.max_tile_n = 8;
+        let out = e.run_shard(&ShardJob { shard: &shard, problem: p, a: &a, b: &b });
+        assert!(out.passes >= 6, "expected multiple passes, got {}", out.passes);
+        let want = mxfp8_hw_ref(&p, &a, &b);
+        for i in 0..want.len() {
+            assert_eq!(
+                out.c[i].to_bits(),
+                want[i].to_bits(),
+                "C[{i}]: {} vs {}",
+                out.c[i],
+                want[i]
+            );
+        }
+        assert!(out.perf.cycles > 0 && out.energy_uj > 0.0);
+    }
+}

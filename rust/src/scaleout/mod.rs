@@ -1,0 +1,298 @@
+//! Multi-cluster scale-out engine (DESIGN.md §9): shard an MXFP8 GEMM
+//! across N simulated Snitch clusters and drive the cycle-accurate
+//! simulations concurrently on a pool of OS threads.
+//!
+//! The paper measures one 8-core cluster (up to 102 GFLOPS,
+//! 356 GFLOPS/W). This subsystem extends those numbers to a manycore
+//! fabric of identical clusters:
+//!
+//! * [`partition`] — the tile partitioner: splits C's rows (and
+//!   optionally K, with a reduction/combine step) on MX-block-aware
+//!   boundaries, with bit-neutral zero padding;
+//! * [`engine`] — one cluster's executor: tiles a shard into L1-sized
+//!   passes (K never cut, so accumulation chains stay fused) and runs
+//!   each pass on a freshly staged `snitch::Cluster`;
+//! * [`pool`] — N worker threads with per-cluster deques and work
+//!   stealing; simulated clusters are embarrassingly parallel on the
+//!   host;
+//! * this module — [`sharded_mm`], the aggregation model
+//!   ([`ShardedRun`]: wall-clock = **max** over per-cluster busy
+//!   cycles, energy = **sum**), and the parallel-efficiency probe the
+//!   serving layer calibrates with.
+//!
+//! The headline invariant, tested in `tests/scaleout.rs`: under the
+//! default [`SplitStrategy::MSplit`] the sharded result is
+//! **bit-identical** to the single-cluster result for any cluster
+//! count and any (padded) shape.
+
+pub mod engine;
+pub mod partition;
+pub mod pool;
+
+pub use engine::{ClusterEngine, ShardJob, ShardOutput};
+pub use partition::{Shard, SplitStrategy};
+pub use pool::{ClusterPool, ClusterStats};
+
+use crate::kernels::MmProblem;
+use crate::rng::XorShift;
+use crate::snitch::NUM_CORES;
+
+/// Fabric configuration for a sharded GEMM.
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleoutConfig {
+    /// Simulated clusters (= host worker threads).
+    pub clusters: usize,
+    /// Compute cores per cluster (the paper's cluster has 8).
+    pub cores_per_cluster: usize,
+    /// Cluster clock (GHz); the paper's TT point is 1.0.
+    pub freq_ghz: f64,
+    /// How to cut the GEMM (M-only by default: bit-identical).
+    pub strategy: SplitStrategy,
+    /// Per-pass tile bounds (rows / cols of C staged at once).
+    pub max_tile_m: usize,
+    pub max_tile_n: usize,
+}
+
+impl Default for ScaleoutConfig {
+    fn default() -> Self {
+        ScaleoutConfig {
+            clusters: 1,
+            cores_per_cluster: NUM_CORES,
+            freq_ghz: 1.0,
+            strategy: SplitStrategy::MSplit,
+            max_tile_m: 64,
+            max_tile_n: 64,
+        }
+    }
+}
+
+impl ScaleoutConfig {
+    /// Default fabric with `clusters` clusters.
+    pub fn with_clusters(clusters: usize) -> Self {
+        ScaleoutConfig { clusters, ..Default::default() }
+    }
+}
+
+/// Result of one sharded GEMM across the fabric.
+#[derive(Clone, Debug)]
+pub struct ShardedRun {
+    /// The original (unpadded) problem.
+    pub problem: MmProblem,
+    pub cfg: ScaleoutConfig,
+    /// Row-major `m × n` result, padding cropped.
+    pub c: Vec<f32>,
+    /// Per-cluster roll-up (indexed by cluster id).
+    pub clusters: Vec<ClusterStats>,
+    /// Shards executed.
+    pub shards: usize,
+    /// Fabric wall-clock model: max over per-cluster busy cycles.
+    pub wall_cycles: u64,
+    /// Total busy cycles across clusters (the serial-equivalent work).
+    pub total_cycles: u64,
+    /// Total `mxdotp` instructions across the fabric.
+    pub total_mxdotp: u64,
+    /// Total activity-based energy across the fabric (µJ). Idle
+    /// clusters burn nothing in this accounting: energy is integrated
+    /// over busy cycles only.
+    pub total_energy_uj: f64,
+}
+
+impl ShardedRun {
+    /// Useful FLOPs of the original problem.
+    pub fn flops(&self) -> u64 {
+        self.problem.flops()
+    }
+
+    /// Fabric wall-clock in µs at the configured clock.
+    pub fn time_us(&self) -> f64 {
+        self.wall_cycles as f64 / (self.cfg.freq_ghz * 1e3)
+    }
+
+    /// Fabric throughput (GFLOPS) under the max-over-clusters model.
+    pub fn gflops(&self) -> f64 {
+        if self.wall_cycles == 0 {
+            return 0.0;
+        }
+        self.flops() as f64 / self.wall_cycles as f64 * self.cfg.freq_ghz
+    }
+
+    /// Fabric energy efficiency (GFLOPS/W): throughput over the
+    /// average power implied by total energy across the wall time.
+    pub fn gflops_per_w(&self) -> f64 {
+        if self.total_energy_uj <= 0.0 || self.wall_cycles == 0 {
+            return 0.0;
+        }
+        let avg_power_w = self.total_energy_uj / self.time_us();
+        self.gflops() / avg_power_w
+    }
+
+    /// Strong-scaling speedup vs a baseline run of the same problem.
+    pub fn speedup_vs(&self, baseline: &ShardedRun) -> f64 {
+        baseline.wall_cycles as f64 / self.wall_cycles.max(1) as f64
+    }
+
+    /// Parallel efficiency vs a baseline run: speedup / cluster ratio.
+    pub fn parallel_efficiency_vs(&self, baseline: &ShardedRun) -> f64 {
+        self.speedup_vs(baseline) * baseline.cfg.clusters as f64 / self.cfg.clusters as f64
+    }
+}
+
+/// Run one MXFP8 GEMM sharded across the configured fabric.
+///
+/// `a` is row-major `m × k`, `b` row-major `k × n`; any shape is
+/// accepted (padding handled internally, result cropped to `m × n`).
+pub fn sharded_mm(cfg: &ScaleoutConfig, problem: MmProblem, a: &[f32], b: &[f32]) -> ShardedRun {
+    assert!(problem.m > 0 && problem.k > 0 && problem.n > 0, "degenerate GEMM");
+    let (pp, a_pad, b_pad) = partition::pad_k(&problem, a, b);
+    let shards = partition::make_shards(&pp, cfg.strategy, cfg.clusters, cfg.cores_per_cluster);
+    let jobs: Vec<ShardJob> = shards
+        .iter()
+        .map(|sh| ShardJob { shard: sh, problem: pp, a: &a_pad, b: &b_pad })
+        .collect();
+    let pool = ClusterPool {
+        clusters: cfg.clusters,
+        cores_per_cluster: cfg.cores_per_cluster,
+        freq_ghz: cfg.freq_ghz,
+        max_tile_m: cfg.max_tile_m,
+        max_tile_n: cfg.max_tile_n,
+    };
+    let n_shards = jobs.len();
+    let (mut outputs, stats) = pool.execute(jobs);
+
+    // Deterministic combine: ascending K chunk, then row range. For
+    // MSplit each row appears once; for MkSplit chunk 0 initializes and
+    // later chunks reduce with FP32 adds in chunk order, so the result
+    // is independent of worker scheduling.
+    outputs.sort_by_key(|o| (o.shard.k_chunk, o.shard.rows.start));
+    let mut c = vec![0.0f32; problem.m * problem.n];
+    for o in &outputs {
+        for (ri, row) in o.shard.rows.clone().enumerate() {
+            let src = &o.c[ri * pp.n..ri * pp.n + problem.n];
+            let dst = &mut c[row * problem.n..(row + 1) * problem.n];
+            if o.shard.k_chunk == 0 {
+                dst.copy_from_slice(src);
+            } else {
+                for (d, s) in dst.iter_mut().zip(src) {
+                    *d += s;
+                }
+            }
+        }
+    }
+
+    let fabric = crate::energy::EnergyModel.fabric_rollup(
+        &stats.iter().map(|s| (s.cycles, s.energy_uj)).collect::<Vec<_>>(),
+        cfg.freq_ghz,
+    );
+    let wall_cycles = fabric.wall_cycles;
+    let total_cycles = stats.iter().map(|s| s.cycles).sum();
+    let total_mxdotp = stats.iter().map(|s| s.mxdotp).sum();
+    let total_energy_uj = fabric.total_energy_uj;
+    ShardedRun {
+        problem,
+        cfg: *cfg,
+        c,
+        clusters: stats,
+        shards: n_shards,
+        wall_cycles,
+        total_cycles,
+        total_mxdotp,
+        total_energy_uj,
+    }
+}
+
+/// Measure strong-scaling parallel efficiency on a small representative
+/// GEMM: run it on 1 cluster and on `clusters`, and return
+/// `wall(1) / (wall(N) · N)`. The serving layer uses this to calibrate
+/// its analytic sharded cost model without simulating full layers.
+///
+/// Both runs are forced to the same per-pass row count (one core
+/// granule), so the single-cluster baseline executes the identical
+/// pass sequence serially and the ratio isolates the *parallel*
+/// overheads (shard skew, padding, stealing) rather than per-pass
+/// staging cost differences from unequal tile heights.
+pub fn measure_parallel_efficiency(cfg: &ScaleoutConfig, seed: u64) -> f64 {
+    if cfg.clusters <= 1 {
+        return 1.0;
+    }
+    // One granule of rows per cluster keeps the probe cheap while
+    // exercising the real shard/pass machinery.
+    let p = MmProblem {
+        m: cfg.cores_per_cluster * cfg.clusters,
+        k: 64,
+        n: 32,
+        fmt: crate::formats::ElemFormat::E4M3,
+        block_size: 32,
+    };
+    let mut rng = XorShift::new(seed);
+    let a = rng.normal_vec(p.m * p.k, 0.5);
+    let b = rng.normal_vec(p.k * p.n, 0.02);
+    let probe = ScaleoutConfig { max_tile_m: cfg.cores_per_cluster, ..*cfg };
+    let single = sharded_mm(&ScaleoutConfig { clusters: 1, ..probe }, p, &a, &b);
+    let multi = sharded_mm(&probe, p, &a, &b);
+    multi.parallel_efficiency_vs(&single).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::ElemFormat;
+    use crate::kernels::{run_mm, KernelKind};
+
+    fn small() -> (MmProblem, Vec<f32>, Vec<f32>) {
+        let p = MmProblem { m: 16, k: 64, n: 16, fmt: ElemFormat::E4M3, block_size: 32 };
+        let mut rng = XorShift::new(0xFA8);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        (p, a, b)
+    }
+
+    #[test]
+    fn one_cluster_matches_direct_run_mm_bitwise() {
+        let (p, a, b) = small();
+        let sharded = sharded_mm(&ScaleoutConfig::default(), p, &a, &b);
+        let direct = run_mm(KernelKind::Mxfp8, p, &a, &b, NUM_CORES);
+        assert_eq!(sharded.c.len(), direct.c.len());
+        for i in 0..direct.c.len() {
+            assert_eq!(sharded.c[i].to_bits(), direct.c[i].to_bits(), "C[{i}]");
+        }
+        assert_eq!(sharded.clusters.len(), 1);
+        assert!(sharded.wall_cycles > 0);
+        assert_eq!(sharded.wall_cycles, sharded.total_cycles);
+    }
+
+    #[test]
+    fn two_clusters_split_the_work() {
+        let (p, a, b) = small();
+        let one = sharded_mm(&ScaleoutConfig::default(), p, &a, &b);
+        let two = sharded_mm(&ScaleoutConfig::with_clusters(2), p, &a, &b);
+        assert_eq!(two.clusters.len(), 2);
+        assert_eq!(two.shards, 2);
+        for i in 0..one.c.len() {
+            assert_eq!(two.c[i].to_bits(), one.c[i].to_bits(), "C[{i}]");
+        }
+        assert!(two.wall_cycles < one.wall_cycles, "{} !< {}", two.wall_cycles, one.wall_cycles);
+        // both clusters actually ran
+        assert!(two.clusters.iter().all(|s| s.cycles > 0));
+    }
+
+    #[test]
+    fn aggregation_model_is_consistent() {
+        let (p, a, b) = small();
+        let run = sharded_mm(&ScaleoutConfig::with_clusters(2), p, &a, &b);
+        assert_eq!(run.total_cycles, run.clusters.iter().map(|s| s.cycles).sum::<u64>());
+        assert_eq!(run.wall_cycles, run.clusters.iter().map(|s| s.cycles).max().unwrap());
+        assert!(run.total_energy_uj > 0.0);
+        assert!(run.gflops() > 0.0);
+        assert!(run.gflops_per_w() > 0.0);
+        // the MX matmul executes exactly m·n·k/8 mxdotp ops over the
+        // padded problem (here already padded)
+        assert_eq!(run.total_mxdotp, (p.m * p.n * p.k / 8) as u64);
+    }
+
+    #[test]
+    fn efficiency_probe_is_sane() {
+        let cfg = ScaleoutConfig::with_clusters(2);
+        let eff = measure_parallel_efficiency(&cfg, 7);
+        assert!(eff > 0.5 && eff <= 1.0, "parallel efficiency {eff}");
+    }
+}

@@ -1,0 +1,219 @@
+//! GEMM tile partitioning for the multi-cluster scale-out engine.
+//!
+//! A sharded MXFP8 GEMM is split along **M** (rows of C) into
+//! per-cluster shards, and optionally along **K** into reduction
+//! chunks. All cuts respect the MX geometry:
+//!
+//! * row shards are sized in multiples of the per-cluster core count
+//!   (the Snitch GEMM convention — `kernels::layout::rows_for_core`
+//!   splits a staged problem's rows evenly across cores), with the tail
+//!   shard padded by the engine;
+//! * K cuts land on MX block boundaries (`block_size`, 32 by default),
+//!   so a chunk's quantization blocks are exactly a subset of the full
+//!   matrix's blocks — chunk-local quantization is bit-identical to
+//!   slicing the full quantization;
+//! * K itself is zero-padded up to a block multiple *before* any
+//!   partitioning, uniformly for every cluster count. A zero 8-element
+//!   group contributes an exact `round(acc + 0) == acc` step to the
+//!   MXDOTP accumulation chain (the 95-bit window round-trips any FP32
+//!   accumulator, see `dotp::exact`), so the padding is bit-neutral.
+//!
+//! **Bit-exactness.** With M-only splitting ([`SplitStrategy::MSplit`])
+//! every output element's full K accumulation chain runs on a single
+//! cluster, in the same order as a single-cluster run — results are
+//! bit-identical for *any* cluster count. K splitting
+//! ([`SplitStrategy::MkSplit`]) combines chunk partials with FP32 adds
+//! in ascending-chunk order: deterministic and cluster-count-invariant,
+//! but rounded differently than the fused chain (exact only when no
+//! accumulation step rounds, e.g. small-integer operands).
+
+use crate::kernels::MmProblem;
+use std::ops::Range;
+
+/// How to cut the GEMM across clusters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitStrategy {
+    /// Split rows of C only (bit-identical to single-cluster).
+    MSplit,
+    /// Split rows *and* the contraction dimension into `k_chunks`
+    /// reduction chunks, combined in ascending-chunk order.
+    MkSplit { k_chunks: usize },
+}
+
+/// One unit of cluster work: a row range of C and one K chunk.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shard {
+    pub id: usize,
+    /// Rows of C this shard produces (over the padded problem's M).
+    pub rows: Range<usize>,
+    /// Which reduction chunk this shard computes (0 for MSplit).
+    pub k_chunk: usize,
+    /// The K slice of the chunk (over the padded K).
+    pub k_range: Range<usize>,
+}
+
+/// Zero-pad K up to a `block_size` multiple; returns the padded
+/// problem plus padded row-major A (m × k_pad) and B (k_pad × n).
+/// The padding is bit-neutral (see module docs) and applied before any
+/// partitioning so every cluster count sees the same operands.
+pub fn pad_k(p: &MmProblem, a: &[f32], b: &[f32]) -> (MmProblem, Vec<f32>, Vec<f32>) {
+    assert_eq!(a.len(), p.m * p.k, "A shape mismatch");
+    assert_eq!(b.len(), p.k * p.n, "B shape mismatch");
+    assert_eq!(p.block_size % 8, 0, "MX block size must be a multiple of 8");
+    let k_pad = p.k.div_ceil(p.block_size) * p.block_size;
+    let pp = MmProblem { k: k_pad, ..*p };
+    let mut a_pad = vec![0.0f32; p.m * k_pad];
+    for m in 0..p.m {
+        a_pad[m * k_pad..m * k_pad + p.k].copy_from_slice(&a[m * p.k..(m + 1) * p.k]);
+    }
+    let mut b_pad = vec![0.0f32; k_pad * p.n];
+    b_pad[..p.k * p.n].copy_from_slice(b);
+    (pp, a_pad, b_pad)
+}
+
+/// Split `m` rows into at most `parts` contiguous ranges, balanced in
+/// units of `granule` rows (the per-cluster core count) so only the
+/// final range can need padding. Empty ranges are dropped.
+pub fn partition_rows(m: usize, parts: usize, granule: usize) -> Vec<Range<usize>> {
+    assert!(m > 0 && parts > 0 && granule > 0);
+    let blocks = m.div_ceil(granule);
+    let n = parts.min(blocks);
+    let base = blocks / n;
+    let extra = blocks % n;
+    let mut out = Vec::with_capacity(n);
+    let mut row = 0;
+    for i in 0..n {
+        let nblocks = base + usize::from(i < extra);
+        let end = (row + nblocks * granule).min(m);
+        out.push(row..end);
+        row = end;
+    }
+    debug_assert_eq!(row, m);
+    out
+}
+
+/// Split a block-multiple `k` into at most `chunks` ranges cut on MX
+/// block boundaries.
+pub fn partition_k(k: usize, block_size: usize, chunks: usize) -> Vec<Range<usize>> {
+    assert_eq!(k % block_size, 0, "K must be padded to a block multiple first");
+    let kb = k / block_size;
+    let n = chunks.clamp(1, kb);
+    let base = kb / n;
+    let extra = kb % n;
+    let mut out = Vec::with_capacity(n);
+    let mut pos = 0;
+    for i in 0..n {
+        let nb = base + usize::from(i < extra);
+        out.push(pos..pos + nb * block_size);
+        pos += nb * block_size;
+    }
+    debug_assert_eq!(pos, k);
+    out
+}
+
+/// Build the shard list for a padded problem: rows × K chunks.
+///
+/// For `MSplit`, rows are cut into up to `clusters` shards. For
+/// `MkSplit { k_chunks }`, the row budget shrinks so the total shard
+/// count stays near `clusters` (work stealing rebalances the rest).
+pub fn make_shards(
+    p: &MmProblem,
+    strategy: SplitStrategy,
+    clusters: usize,
+    granule: usize,
+) -> Vec<Shard> {
+    assert!(clusters > 0);
+    let (row_parts, k_parts) = match strategy {
+        SplitStrategy::MSplit => (clusters, 1),
+        SplitStrategy::MkSplit { k_chunks } => {
+            (clusters.div_ceil(k_chunks.max(1)), k_chunks.max(1))
+        }
+    };
+    let rows = partition_rows(p.m, row_parts, granule);
+    let ks = partition_k(p.k, p.block_size, k_parts);
+    let mut shards = Vec::with_capacity(rows.len() * ks.len());
+    let mut id = 0;
+    for (ci, kr) in ks.iter().enumerate() {
+        for rr in &rows {
+            shards.push(Shard { id, rows: rr.clone(), k_chunk: ci, k_range: kr.clone() });
+            id += 1;
+        }
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::ElemFormat;
+
+    fn prob(m: usize, k: usize, n: usize) -> MmProblem {
+        MmProblem { m, k, n, fmt: ElemFormat::E4M3, block_size: 32 }
+    }
+
+    #[test]
+    fn pad_k_is_zero_filled_and_block_aligned() {
+        let p = prob(3, 40, 2);
+        let a: Vec<f32> = (0..p.m * p.k).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..p.k * p.n).map(|i| -(i as f32)).collect();
+        let (pp, ap, bp) = pad_k(&p, &a, &b);
+        assert_eq!(pp.k, 64);
+        assert_eq!(ap.len(), 3 * 64);
+        // original data preserved, tail zeroed
+        assert_eq!(ap[1 * 64 + 39], a[1 * 40 + 39]);
+        assert!(ap[64 + 40..2 * 64].iter().all(|&v| v == 0.0));
+        assert_eq!(bp[39 * 2 + 1], b[39 * 2 + 1]);
+        assert!(bp[40 * 2..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn row_partition_is_balanced_and_granular() {
+        let parts = partition_rows(64, 8, 8);
+        assert_eq!(parts.len(), 8);
+        assert!(parts.iter().all(|r| r.len() == 8));
+        // non-divisible: 13 rows over 4 clusters, granule 8 -> 2 shards
+        let parts = partition_rows(13, 4, 8);
+        assert_eq!(parts, vec![0..8, 8..13]);
+        // fewer rows than one granule -> single shard
+        assert_eq!(partition_rows(5, 8, 8), vec![0..5]);
+        // coverage is exact and contiguous
+        let parts = partition_rows(100, 3, 8);
+        assert_eq!(parts.first().unwrap().start, 0);
+        assert_eq!(parts.last().unwrap().end, 100);
+        for w in parts.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+    }
+
+    #[test]
+    fn k_partition_cuts_on_block_boundaries() {
+        let ks = partition_k(256, 32, 3);
+        assert_eq!(ks.iter().map(|r| r.len()).sum::<usize>(), 256);
+        for r in &ks {
+            assert_eq!(r.start % 32, 0);
+            assert_eq!(r.len() % 32, 0);
+        }
+        // more chunks than blocks clamps to blocks
+        assert_eq!(partition_k(64, 32, 8).len(), 2);
+    }
+
+    #[test]
+    fn shards_cover_every_row_once_per_chunk() {
+        let p = prob(100, 96, 16);
+        for strategy in [SplitStrategy::MSplit, SplitStrategy::MkSplit { k_chunks: 2 }] {
+            let shards = make_shards(&p, strategy, 8, 8);
+            let chunks = match strategy {
+                SplitStrategy::MSplit => 1,
+                SplitStrategy::MkSplit { k_chunks } => k_chunks,
+            };
+            let mut cover = vec![0u32; p.m];
+            for s in &shards {
+                for r in s.rows.clone() {
+                    cover[r] += 1;
+                }
+                assert_eq!(s.k_range.start % 32, 0);
+            }
+            assert!(cover.iter().all(|&c| c == chunks as u32), "{strategy:?}: {cover:?}");
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! The cluster pool: N independent simulated Snitch clusters driven by
+//! N OS worker threads with work stealing.
+//!
+//! Each cycle-accurate cluster simulation is CPU-bound and shares
+//! nothing with its siblings (every pass stages its own SPM), so the
+//! natural host mapping is one `std::thread` per simulated cluster.
+//! Shards are dealt round-robin into per-cluster deques; a worker pops
+//! from the *front* of its own deque and, when empty, steals from the
+//! *back* of a victim's — the classic split so owner and thief contend
+//! on opposite ends. Stealing is what keeps the wall-clock model
+//! (`max` over per-cluster busy cycles) near `total / N` when shard
+//! costs are skewed (e.g. a padded tail shard or MkSplit chunks of
+//! different K length).
+//!
+//! Determinism: shard *results* are independent of which cluster runs
+//! them (the engine stages each pass from scratch), so work stealing
+//! affects the cycle distribution but never the numerics.
+
+use super::engine::{ClusterEngine, ShardJob, ShardOutput};
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Pool configuration: how many clusters, and their shape.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterPool {
+    pub clusters: usize,
+    pub cores_per_cluster: usize,
+    pub freq_ghz: f64,
+    pub max_tile_m: usize,
+    pub max_tile_n: usize,
+}
+
+/// Per-cluster roll-up after a pool run.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterStats {
+    pub id: usize,
+    /// Shards this cluster executed (work stealing included).
+    pub shards: usize,
+    /// L1-sized passes across those shards.
+    pub passes: u32,
+    /// Busy cycles: the sum of this cluster's pass cycles.
+    pub cycles: u64,
+    /// `mxdotp` instructions this cluster issued.
+    pub mxdotp: u64,
+    /// Activity-based energy this cluster burned (µJ).
+    pub energy_uj: f64,
+}
+
+fn pop_or_steal<'a, 'j>(
+    queues: &'a [Mutex<VecDeque<ShardJob<'j>>>],
+    id: usize,
+) -> Option<ShardJob<'j>> {
+    if let Some(job) = queues[id].lock().unwrap().pop_front() {
+        return Some(job);
+    }
+    for off in 1..queues.len() {
+        let victim = (id + off) % queues.len();
+        if let Some(job) = queues[victim].lock().unwrap().pop_back() {
+            return Some(job);
+        }
+    }
+    None
+}
+
+impl ClusterPool {
+    /// Execute all jobs; returns every shard's output plus per-cluster
+    /// stats (sorted by cluster id). Blocks until the fleet drains.
+    pub fn execute<'j>(&self, jobs: Vec<ShardJob<'j>>) -> (Vec<ShardOutput>, Vec<ClusterStats>) {
+        assert!(self.clusters > 0);
+        let queues: Vec<Mutex<VecDeque<ShardJob<'j>>>> =
+            (0..self.clusters).map(|_| Mutex::new(VecDeque::new())).collect();
+        for (i, job) in jobs.into_iter().enumerate() {
+            queues[i % self.clusters].lock().unwrap().push_back(job);
+        }
+        let mut outputs = Vec::new();
+        let mut stats = Vec::new();
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(self.clusters);
+            for id in 0..self.clusters {
+                let queues = &queues;
+                let engine = ClusterEngine {
+                    id,
+                    cores: self.cores_per_cluster,
+                    freq_ghz: self.freq_ghz,
+                    max_tile_m: self.max_tile_m,
+                    max_tile_n: self.max_tile_n,
+                };
+                handles.push(s.spawn(move || {
+                    let mut outs: Vec<ShardOutput> = Vec::new();
+                    let mut st = ClusterStats { id, ..ClusterStats::default() };
+                    while let Some(job) = pop_or_steal(queues, id) {
+                        let out = engine.run_shard(&job);
+                        st.shards += 1;
+                        st.passes += out.passes;
+                        st.cycles += out.perf.cycles;
+                        st.mxdotp += out.perf.mxdotp_total();
+                        st.energy_uj += out.energy_uj;
+                        outs.push(out);
+                    }
+                    (outs, st)
+                }));
+            }
+            for h in handles {
+                let (outs, st) = h.join().expect("cluster worker panicked");
+                outputs.extend(outs);
+                stats.push(st);
+            }
+        });
+        stats.sort_by_key(|s| s.id);
+        (outputs, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::partition::{make_shards, SplitStrategy};
+    use crate::formats::ElemFormat;
+    use crate::kernels::MmProblem;
+    use crate::rng::XorShift;
+    use crate::snitch::NUM_CORES;
+
+    fn pool(clusters: usize) -> ClusterPool {
+        ClusterPool {
+            clusters,
+            cores_per_cluster: NUM_CORES,
+            freq_ghz: 1.0,
+            max_tile_m: 64,
+            max_tile_n: 64,
+        }
+    }
+
+    #[test]
+    fn every_shard_is_executed_exactly_once() {
+        let p = MmProblem { m: 40, k: 32, n: 8, fmt: ElemFormat::E4M3, block_size: 32 };
+        let mut rng = XorShift::new(9);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        // 5 shards on 3 clusters: uneven deal forces at least the
+        // accounting (and usually a steal) to cover all of them.
+        let shards = make_shards(&p, SplitStrategy::MSplit, 5, NUM_CORES);
+        assert_eq!(shards.len(), 5);
+        let jobs: Vec<ShardJob> =
+            shards.iter().map(|sh| ShardJob { shard: sh, problem: p, a: &a, b: &b }).collect();
+        let (outs, stats) = pool(3).execute(jobs);
+        assert_eq!(outs.len(), 5);
+        let mut ids: Vec<usize> = outs.iter().map(|o| o.shard.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        assert_eq!(stats.len(), 3);
+        assert_eq!(stats.iter().map(|s| s.shards).sum::<usize>(), 5);
+        assert_eq!(
+            stats.iter().map(|s| s.cycles).sum::<u64>(),
+            outs.iter().map(|o| o.perf.cycles).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn stealing_drains_a_single_hot_queue() {
+        // More clusters than shards: round-robin leaves some queues
+        // empty from the start; everything must still complete.
+        let p = MmProblem { m: 8, k: 32, n: 8, fmt: ElemFormat::E4M3, block_size: 32 };
+        let mut rng = XorShift::new(10);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        let shards = make_shards(&p, SplitStrategy::MSplit, 8, NUM_CORES);
+        assert_eq!(shards.len(), 1, "8 rows is a single granule");
+        let jobs: Vec<ShardJob> =
+            shards.iter().map(|sh| ShardJob { shard: sh, problem: p, a: &a, b: &b }).collect();
+        let (outs, stats) = pool(4).execute(jobs);
+        assert_eq!(outs.len(), 1);
+        assert_eq!(stats.iter().filter(|s| s.shards > 0).count(), 1);
+        assert_eq!(stats.iter().filter(|s| s.cycles == 0).count(), 3);
+    }
+}

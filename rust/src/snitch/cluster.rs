@@ -79,6 +79,47 @@ impl PerfCounters {
         }
         self.fp_issued_total() as f64 / (self.fpu.len() as f64 * self.cycles as f64)
     }
+
+    /// Accumulate another run's counters into this one, field-wise and
+    /// per-core — the roll-up the scale-out engine uses to total a
+    /// cluster's back-to-back passes (`cycles` becomes the serial sum;
+    /// utilization ratios remain meaningful because the work and the
+    /// cycles grow together).
+    pub fn merge(&mut self, other: &PerfCounters) {
+        self.cycles += other.cycles;
+        self.spm_conflicts += other.spm_conflicts;
+        self.spm_grants += other.spm_grants;
+        self.dma_busy += other.dma_busy;
+        if self.core.len() < other.core.len() {
+            self.core.resize(other.core.len(), CoreCounters::default());
+        }
+        for (d, s) in self.core.iter_mut().zip(&other.core) {
+            d.int_issued += s.int_issued;
+            d.branches_taken += s.branches_taken;
+            d.int_mem += s.int_mem;
+            d.stall_fp_queue += s.stall_fp_queue;
+            d.stall_mem += s.stall_mem;
+            d.stall_fence += s.stall_fence;
+        }
+        if self.fpu.len() < other.fpu.len() {
+            self.fpu.resize(other.fpu.len(), FpuCounters::default());
+        }
+        for (d, s) in self.fpu.iter_mut().zip(&other.fpu) {
+            d.issued += s.issued;
+            d.mxdotp += s.mxdotp;
+            d.vfmac += s.vfmac;
+            d.cvt += s.cvt;
+            d.mem_ops += s.mem_ops;
+            d.fma_s += s.fma_s;
+            d.addmul += s.addmul;
+            d.moves += s.moves;
+            d.ssr_words += s.ssr_words;
+            d.stall_hazard += s.stall_hazard;
+            d.stall_ssr += s.stall_ssr;
+            d.stall_mem += s.stall_mem;
+            d.idle += s.idle;
+        }
+    }
 }
 
 /// The cluster.
@@ -364,6 +405,25 @@ mod tests {
         }
         let perf = cl.run(100_000);
         assert!(perf.spm_conflicts > 0, "contended pattern produced no conflicts");
+    }
+
+    #[test]
+    fn perf_counters_merge_accumulates() {
+        let mut a = PerfCounters { cycles: 100, spm_grants: 10, ..Default::default() };
+        a.fpu = vec![crate::snitch::fpu::FpuCounters { mxdotp: 5, issued: 7, ..Default::default() }; 2];
+        let mut b = PerfCounters { cycles: 50, spm_conflicts: 3, ..Default::default() };
+        b.fpu = vec![crate::snitch::fpu::FpuCounters { mxdotp: 1, issued: 2, ..Default::default() }; 4];
+        b.core = vec![CoreCounters { int_issued: 9, ..Default::default() }; 4];
+        a.merge(&b);
+        assert_eq!(a.cycles, 150);
+        assert_eq!(a.spm_grants, 10);
+        assert_eq!(a.spm_conflicts, 3);
+        // vectors grew to the larger core count and summed element-wise
+        assert_eq!(a.fpu.len(), 4);
+        assert_eq!(a.fpu[0].mxdotp, 6);
+        assert_eq!(a.fpu[3].mxdotp, 1);
+        assert_eq!(a.mxdotp_total(), 5 * 2 + 4);
+        assert_eq!(a.core[0].int_issued, 9);
     }
 
     #[test]

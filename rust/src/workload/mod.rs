@@ -112,21 +112,12 @@ pub struct HwCost {
     pub flops: u64,
 }
 
-/// Analytic cost model: cycles ≈ FLOPs / (16 FLOP/cycle/core × cores ×
-/// utilization(K)). `calibrated_util` comes from a measured kernel run
-/// (see [`calibrate_util`]); energy from the EnergyModel's MXFP8
-/// operating point.
-pub fn analytic_cost(cfg: &DeitConfig, num_cores: usize, calibrated_util: f64) -> HwCost {
-    let flops = cfg.mx_flops();
-    let ideal = 16.0 * num_cores as f64;
-    let cycles = (flops as f64 / (ideal * calibrated_util)) as u64;
-    // power at the calibrated MXFP8 operating point (see EnergyModel):
-    // derive from a synthetic counter set with the same activity mix.
-    let em = EnergyModel;
-    let mut perf = crate::snitch::cluster::PerfCounters {
-        cycles,
-        ..Default::default()
-    };
+/// Synthetic per-cluster counters with the MXFP8 kernel's activity mix
+/// (one `mxdotp` per 16 FLOPs; ft0/8 + ft1 + ft2/4 SSR words), split
+/// evenly across `num_cores` — the input both analytic cost models
+/// feed to the [`EnergyModel`].
+fn synthetic_mx_perf(flops: u64, num_cores: usize, cycles: u64) -> crate::snitch::cluster::PerfCounters {
+    let mut perf = crate::snitch::cluster::PerfCounters { cycles, ..Default::default() };
     let mut fpu = crate::snitch::fpu::FpuCounters::default();
     fpu.mxdotp = flops / 16;
     fpu.issued = fpu.mxdotp;
@@ -138,12 +129,84 @@ pub fn analytic_cost(cfg: &DeitConfig, num_cores: usize, calibrated_util: f64) -
         f.issued /= num_cores as u64;
         f.ssr_words /= num_cores as u64;
     }
+    perf
+}
+
+/// Analytic cost model: cycles ≈ FLOPs / (16 FLOP/cycle/core × cores ×
+/// utilization(K)). `calibrated_util` comes from a measured kernel run
+/// (see [`calibrate_util`]); energy from the EnergyModel's MXFP8
+/// operating point.
+pub fn analytic_cost(cfg: &DeitConfig, num_cores: usize, calibrated_util: f64) -> HwCost {
+    let flops = cfg.mx_flops();
+    let ideal = 16.0 * num_cores as f64;
+    let cycles = (flops as f64 / (ideal * calibrated_util)) as u64;
+    // power at the calibrated MXFP8 operating point (see EnergyModel):
+    // derive from a synthetic counter set with the same activity mix.
+    let em = EnergyModel;
+    let perf = synthetic_mx_perf(flops, num_cores, cycles);
     let p = em.power(&perf, 1.0, true);
     HwCost {
         cycles,
         energy_uj: p.energy_uj,
         time_us: cycles as f64 / 1000.0,
         flops,
+    }
+}
+
+/// Hardware cost of one forward pass sharded across a cluster fabric,
+/// with the per-cluster breakdown the scale-out engine reports.
+#[derive(Clone, Debug, Default)]
+pub struct ShardedHwCost {
+    /// Fabric totals: `cycles` is the wall-clock model (max over
+    /// clusters), `energy_uj` the sum across clusters.
+    pub total: HwCost,
+    /// Per-cluster costs (`cycles` = that cluster's busy window).
+    pub per_cluster: Vec<HwCost>,
+}
+
+/// Analytic scale-out cost model: the serial single-cluster cost of
+/// [`analytic_cost`] divided across `clusters` at a measured
+/// `parallel_eff` (strong-scaling efficiency from
+/// `scaleout::measure_parallel_efficiency`). Each cluster stays powered
+/// for the whole fabric wall-clock, so total energy *rises* as
+/// efficiency falls — the fabric idle floor is N clusters wide.
+pub fn analytic_sharded_cost(
+    cfg: &DeitConfig,
+    num_cores: usize,
+    calibrated_util: f64,
+    clusters: usize,
+    parallel_eff: f64,
+) -> ShardedHwCost {
+    let clusters = clusters.max(1);
+    let serial = analytic_cost(cfg, num_cores, calibrated_util);
+    if clusters == 1 {
+        return ShardedHwCost { total: serial, per_cluster: vec![serial] };
+    }
+    let eff = parallel_eff.clamp(0.05, 1.0);
+    let wall = ((serial.cycles as f64) / (clusters as f64 * eff)).ceil() as u64;
+    let em = EnergyModel;
+    let flops_per = cfg.mx_flops() / clusters as u64;
+    let mut per_cluster = Vec::with_capacity(clusters);
+    let mut total_energy = 0.0;
+    for _ in 0..clusters {
+        let perf = synthetic_mx_perf(flops_per, num_cores, wall);
+        let e = em.power(&perf, 1.0, true).energy_uj;
+        total_energy += e;
+        per_cluster.push(HwCost {
+            cycles: wall,
+            energy_uj: e,
+            time_us: wall as f64 / 1000.0,
+            flops: flops_per,
+        });
+    }
+    ShardedHwCost {
+        total: HwCost {
+            cycles: wall,
+            energy_uj: total_energy,
+            time_us: wall as f64 / 1000.0,
+            flops: cfg.mx_flops(),
+        },
+        per_cluster,
     }
 }
 
@@ -210,6 +273,31 @@ mod tests {
         // sanity: cycles ~ flops / (16*8*0.75)
         let want = cfg.mx_flops() as f64 / 96.0;
         assert!((c.cycles as f64 - want).abs() / want < 0.01);
+    }
+
+    #[test]
+    fn sharded_cost_scales_wall_and_energy() {
+        let cfg = DeitConfig::default();
+        let serial = analytic_cost(&cfg, 8, 0.75);
+        let sharded = analytic_sharded_cost(&cfg, 8, 0.75, 4, 0.9);
+        assert_eq!(sharded.per_cluster.len(), 4);
+        // wall shrinks by clusters × efficiency
+        let want = serial.cycles as f64 / (4.0 * 0.9);
+        assert!((sharded.total.cycles as f64 - want).abs() < 2.0);
+        // per-cluster wall == fabric wall; flops partition
+        for c in &sharded.per_cluster {
+            assert_eq!(c.cycles, sharded.total.cycles);
+        }
+        assert_eq!(
+            sharded.per_cluster.iter().map(|c| c.flops).sum::<u64>(),
+            cfg.mx_flops() / 4 * 4
+        );
+        // the N-wide idle floor makes total energy >= the serial energy
+        assert!(sharded.total.energy_uj >= serial.energy_uj * 0.99);
+        // one cluster degenerates to the serial model
+        let one = analytic_sharded_cost(&cfg, 8, 0.75, 1, 1.0);
+        assert_eq!(one.total.cycles, serial.cycles);
+        assert_eq!(one.per_cluster.len(), 1);
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! Scale-out engine integration tests: the sharded MXFP8 GEMM must be
+//! **bit-identical** to the single-cluster kernel for any cluster
+//! count — including non-divisible M/N/K shapes that exercise the
+//! padding and MX-block edge cases — and must show real strong-scaling
+//! speedup on the DeiT-Tiny workload.
+
+use mxdotp::formats::ElemFormat;
+use mxdotp::kernels::reference::mxfp8_hw_ref;
+use mxdotp::kernels::{run_mm, KernelKind, MmProblem};
+use mxdotp::rng::XorShift;
+use mxdotp::scaleout::{sharded_mm, ScaleoutConfig, SplitStrategy};
+use mxdotp::workload::DeitConfig;
+
+fn problem(m: usize, k: usize, n: usize) -> MmProblem {
+    MmProblem { m, k, n, fmt: ElemFormat::E4M3, block_size: 32 }
+}
+
+fn inputs(p: &MmProblem, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = XorShift::new(seed);
+    (rng.normal_vec(p.m * p.k, 1.0), rng.normal_vec(p.k * p.n, 0.5))
+}
+
+/// The oracle for arbitrary shapes: zero-pad K to a block multiple
+/// (bit-neutral, see `scaleout::partition`) and evaluate the
+/// element-wise single-`mxdotp`-chain reference.
+fn oracle(p: &MmProblem, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let k_pad = p.k.div_ceil(p.block_size) * p.block_size;
+    let pp = MmProblem { k: k_pad, ..*p };
+    let mut a_pad = vec![0.0f32; p.m * k_pad];
+    for m in 0..p.m {
+        a_pad[m * k_pad..m * k_pad + p.k].copy_from_slice(&a[m * p.k..(m + 1) * p.k]);
+    }
+    let mut b_pad = vec![0.0f32; k_pad * p.n];
+    b_pad[..p.k * p.n].copy_from_slice(b);
+    mxfp8_hw_ref(&pp, &a_pad, &b_pad)
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for i in 0..want.len() {
+        assert!(
+            got[i].to_bits() == want[i].to_bits(),
+            "{what}: C[{i}] = {:?} ({:#010x}) vs {:?} ({:#010x})",
+            got[i],
+            got[i].to_bits(),
+            want[i],
+            want[i].to_bits()
+        );
+    }
+}
+
+#[test]
+fn sharded_gemm_bit_identical_across_cluster_counts_divisible_shape() {
+    let p = problem(32, 64, 16);
+    let (a, b) = inputs(&p, 0xA11CE);
+    let want = sharded_mm(&ScaleoutConfig::with_clusters(1), p, &a, &b);
+    // ... and the single-cluster result equals the plain kernel path
+    let direct = run_mm(KernelKind::Mxfp8, p, &a, &b, 8);
+    assert_bits_eq(&want.c, &direct.c, "1 cluster vs direct run_mm");
+    for clusters in [2usize, 4, 8] {
+        let got = sharded_mm(&ScaleoutConfig::with_clusters(clusters), p, &a, &b);
+        assert_bits_eq(&got.c, &want.c, &format!("{clusters} clusters"));
+    }
+}
+
+#[test]
+fn sharded_gemm_bit_identical_on_non_divisible_shapes() {
+    // M not a multiple of the 8-core row granule, N not a multiple of
+    // the 8-column tile, K not a multiple of the 32-element MX block:
+    // every padding path at once, plus single-row/column extremes.
+    for (m, k, n) in [(13usize, 40usize, 10usize), (21, 96, 17), (5, 32, 8), (1, 33, 1)] {
+        let p = problem(m, k, n);
+        let (a, b) = inputs(&p, (m * 1000 + k * 10 + n) as u64);
+        let want = oracle(&p, &a, &b);
+        for clusters in [1usize, 2, 8] {
+            let got = sharded_mm(&ScaleoutConfig::with_clusters(clusters), p, &a, &b);
+            assert_bits_eq(
+                &got.c,
+                &want,
+                &format!("{m}x{k}x{n} on {clusters} clusters vs oracle"),
+            );
+        }
+    }
+}
+
+#[test]
+fn k_split_reduction_is_deterministic_and_exact_on_integer_data() {
+    // With small-integer operands every product and partial sum is
+    // exactly representable, so no accumulation step rounds and the
+    // K-chunked reduction must agree bit-for-bit with the fused chain.
+    let p = problem(16, 128, 8);
+    let mut rng = XorShift::new(0x1437);
+    let a: Vec<f32> = (0..p.m * p.k).map(|_| rng.range_i64(-3, 3) as f32).collect();
+    let b: Vec<f32> = (0..p.k * p.n).map(|_| rng.range_i64(-2, 2) as f32).collect();
+    let fused = sharded_mm(&ScaleoutConfig::with_clusters(1), p, &a, &b);
+    for clusters in [2usize, 4] {
+        let cfg = ScaleoutConfig {
+            clusters,
+            strategy: SplitStrategy::MkSplit { k_chunks: 2 },
+            ..ScaleoutConfig::default()
+        };
+        let got = sharded_mm(&cfg, p, &a, &b);
+        assert_eq!(got.shards, clusters.div_ceil(2) * 2);
+        assert_bits_eq(&got.c, &fused.c, &format!("MkSplit on {clusters} clusters"));
+    }
+}
+
+#[test]
+fn k_split_on_real_data_is_close_and_cluster_count_invariant() {
+    let p = problem(16, 128, 8);
+    let (a, b) = inputs(&p, 0xBEEF);
+    let fused = sharded_mm(&ScaleoutConfig::with_clusters(1), p, &a, &b);
+    let mk = |clusters| ScaleoutConfig {
+        clusters,
+        strategy: SplitStrategy::MkSplit { k_chunks: 2 },
+        ..ScaleoutConfig::default()
+    };
+    let two = sharded_mm(&mk(2), p, &a, &b);
+    let four = sharded_mm(&mk(4), p, &a, &b);
+    // chunk combine order is fixed, so the result does not depend on
+    // how many clusters executed the chunks
+    assert_bits_eq(&four.c, &two.c, "MkSplit 4 vs 2 clusters");
+    // and differs from the fused chain only by final-reduction rounding
+    for i in 0..fused.c.len() {
+        let d = (two.c[i] - fused.c[i]).abs();
+        assert!(
+            d <= 1e-4 * fused.c[i].abs().max(1.0),
+            "C[{i}]: {} vs {}",
+            two.c[i],
+            fused.c[i]
+        );
+    }
+}
+
+#[test]
+fn deit_workload_reaches_4x_throughput_on_8_clusters() {
+    // The acceptance bar: ≥ 4x simulated-cycle throughput at N=8 under
+    // the wall-clock = max-over-clusters model, on DeiT-Tiny-shaped
+    // matmuls (shortened sequence keeps the cycle-accurate sweep fast;
+    // dim/heads/MLP shapes are DeiT-Tiny's).
+    let cfg = DeitConfig { seq: 64, ..DeitConfig::default() };
+    // attention-out projection: seq × dim × dim
+    let p = cfg.mx_matmuls()[1];
+    let (a, b) = inputs(&p, 0xDE17);
+    let one = sharded_mm(&ScaleoutConfig::with_clusters(1), p, &a, &b);
+    let eight = sharded_mm(&ScaleoutConfig::with_clusters(8), p, &a, &b);
+    assert_bits_eq(&eight.c, &one.c, "DeiT proj on 8 clusters");
+    let speedup = eight.speedup_vs(&one);
+    assert!(
+        speedup >= 4.0,
+        "8-cluster speedup {speedup:.2}x below the 4x acceptance bar \
+         (wall {} vs {})",
+        eight.wall_cycles,
+        one.wall_cycles
+    );
+    // all eight clusters participated
+    assert_eq!(eight.clusters.iter().filter(|s| s.cycles > 0).count(), 8);
+    // fabric energy stays within a factor of the serial energy (same
+    // dynamic work, idle floor integrated over busy cycles only)
+    assert!(eight.total_energy_uj > 0.5 * one.total_energy_uj);
+    assert!(eight.total_energy_uj < 2.0 * one.total_energy_uj);
+}

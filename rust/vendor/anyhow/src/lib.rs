@@ -1,0 +1,162 @@
+//! Minimal offline stand-in for the `anyhow` crate, providing the
+//! subset of its API this workspace uses: [`Error`], [`Result`],
+//! [`anyhow!`], [`bail!`] and the [`Context`] extension trait.
+//!
+//! Semantics match upstream where it matters:
+//! * `Error` deliberately does **not** implement `std::error::Error`,
+//!   so the blanket `From<E: std::error::Error>` conversion (what makes
+//!   `?` work on concrete error types) does not overlap `From<Error>`;
+//! * `.context(..)` wraps the underlying message rather than replacing
+//!   it.
+//!
+//! The error chain is kept as a rendered string — downcasting and
+//! backtraces are not supported, and nothing in this workspace uses
+//! them.
+
+use std::fmt;
+
+/// A type-erased error: a rendered message plus optional source text.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything printable (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context line, upstream-style (`context: cause`).
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Self {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` prints the Debug form on
+        // error: keep it human-readable.
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Render the chain of sources inline, like anyhow's {:#}.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` to `Result` and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_wraps_both_results_and_options() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening artifact").unwrap_err();
+        assert!(e.to_string().starts_with("opening artifact: "));
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 3;
+        assert_eq!(anyhow!("bad value {x}").to_string(), "bad value 3");
+        assert_eq!(anyhow!("bad value {}", 4).to_string(), "bad value 4");
+        fn bails() -> Result<()> {
+            bail!("stop {}", "here")
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stop here");
+    }
+}

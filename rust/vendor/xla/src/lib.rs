@@ -1,0 +1,152 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate links libxla and exposes a PJRT CPU client; this
+//! environment has neither network nor the native library, so this
+//! stub keeps the `runtime` module compiling with the same type
+//! surface while making unavailability a *runtime* condition:
+//! [`PjRtClient::cpu`] returns an error, which `Runtime::new` already
+//! propagates gracefully (the CLI prints "PJRT: unavailable", the
+//! integration tests skip, and serving falls back to the
+//! `ShardedExecutor`, which needs no XLA at all).
+//!
+//! Every other constructor is unreachable without a client, but all
+//! methods are implemented (as errors) so the stub stays honest if
+//! call order ever changes.
+
+use std::fmt;
+
+/// Error type matching the `{e:?}`-style uses in the runtime layer.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+fn unavailable() -> Error {
+    Error("XLA/PJRT native runtime is not available in this offline build (stub crate)".into())
+}
+
+/// Marker for element types a [`Literal`] can expose.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// A host tensor (stub: shape + f32 data only).
+#[derive(Clone, Debug, Default)]
+pub struct Literal {
+    data: Vec<f32>,
+    shape: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal { data: v.to_vec(), shape: vec![v.len() as i64] }
+    }
+
+    /// Reshape without moving data (element count must match).
+    pub fn reshape(&self, shape: &[i64]) -> Result<Literal, Error> {
+        let want: i64 = shape.iter().product();
+        if want != self.data.len() as i64 {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {shape:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), shape: shape.to_vec() })
+    }
+
+    /// Destructure a tuple literal (stub literals are never tuples).
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable())
+    }
+
+    /// Copy out as a flat vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (stub: never constructible).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-side buffer handle returned by an execution.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; one result list per device.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// The PJRT client handle.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// In the real crate this spins up the CPU PJRT plugin; the stub
+    /// reports unavailability so callers degrade gracefully.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_unavailable_not_panicking() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e:?}").contains("offline"));
+    }
+
+    #[test]
+    fn literal_reshape_checks_element_count() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+}
