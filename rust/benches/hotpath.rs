@@ -5,7 +5,13 @@
 //! * quantizer: MX matrix quantization throughput;
 //! * simulator: simulated cluster-cycles per host-second on the
 //!   MXFP8 kernel (the Fig. 4 regeneration bottleneck);
-//! * reference matmul: the bit-exact oracle's throughput.
+//! * reference matmul: the bit-exact oracle's throughput;
+//! * plan cache: cold-plan vs warm-plan wall-clock and host-side
+//!   GFLOPS on a DeiT-shaped sharded GEMM (the serving hot path).
+//!
+//! Writes `BENCH_hotpath.json` (uploaded as a CI artifact next to
+//! `BENCH_scaleout.json`) so the cold/warm perf trajectory is recorded
+//! across PRs.
 //!
 //! Run: `cargo bench --bench hotpath`
 
@@ -14,8 +20,12 @@ mod common;
 use common::bench;
 use mxdotp::dotp::{Fp8Format, MxDotpUnit};
 use mxdotp::formats::{ElemFormat, MxMatrix, ScaleAxis};
+use mxdotp::kernels::plan::PlanCache;
 use mxdotp::kernels::{reference, run_mm, KernelKind, MmProblem};
 use mxdotp::rng::XorShift;
+use mxdotp::scaleout::{sharded_mm_with_cache, ScaleoutConfig};
+use mxdotp::workload::DeitConfig;
+use std::fmt::Write as _;
 
 fn main() {
     common::header("hotpath", "host-side throughput of the crate's hot paths (§Perf)");
@@ -80,6 +90,81 @@ fn main() {
     });
     let mdot_ref = (p.m * p.n * p.k / 8) as f64 / st.mean_s / 1e6;
     println!("hw-ref:     {mdot_ref:8.1} M mxdotp/s   (analytical reference)");
+
+    // --- plan cache: cold vs warm --------------------------------------
+    // A DeiT-proj-shaped GEMM (seq x dim x dim, shortened sequence for
+    // the CI smoke run) sharded across 2 clusters: the first run pays
+    // plan compilation, quantization and the full cycle-accurate
+    // simulation; the repeat returns bit-identical results from the
+    // warm cache. This is the serving hot path's repeated-request
+    // profile.
+    let seq: usize = std::env::var("HOTPATH_BENCH_SEQ")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+    let dcfg = DeitConfig { seq, ..DeitConfig::default() };
+    let gemm = dcfg.mx_matmuls()[1]; // attention-out projection
+    let mut rp = XorShift::new(6);
+    let ga = rp.normal_vec(gemm.m * gemm.k, 0.5);
+    let gb = rp.normal_vec(gemm.k * gemm.n, 0.02);
+    let scfg = ScaleoutConfig::with_clusters(2);
+    let cache = PlanCache::new();
+    let t_cold = std::time::Instant::now();
+    let cold = sharded_mm_with_cache(&scfg, gemm, &ga, &gb, &cache);
+    let cold_s = t_cold.elapsed().as_secs_f64();
+    let t_warm = std::time::Instant::now();
+    let warm = sharded_mm_with_cache(&scfg, gemm, &ga, &gb, &cache);
+    let warm_s = t_warm.elapsed().as_secs_f64();
+    assert_eq!(cold.c.len(), warm.c.len());
+    for (i, (c0, c1)) in cold.c.iter().zip(&warm.c).enumerate() {
+        assert_eq!(c0.to_bits(), c1.to_bits(), "warm plan changed C[{i}]");
+    }
+    assert_eq!(cold.wall_cycles, warm.wall_cycles, "warm plan changed the cycle model");
+    assert!(warm_s < cold_s, "warm run not faster: {warm_s:.4}s vs {cold_s:.4}s");
+    let flops = gemm.flops() as f64;
+    let cold_host_gflops = flops / cold_s / 1e9;
+    let warm_host_gflops = flops / warm_s / 1e9;
+    println!(
+        "plan-cache: cold {:.3} s ({cold_host_gflops:.3} host-GFLOPS) -> warm {:.4} s \
+         ({warm_host_gflops:.2} host-GFLOPS), {:.0}x, bit-identical",
+        cold_s,
+        warm_s,
+        cold_s / warm_s
+    );
+    let cst = cache.stats();
+    println!(
+        "            cache: {} plan hits / {} misses, {} B-tile hits / {} misses, \
+         {} pass hits / {} misses",
+        cst.plan_hits,
+        cst.plan_misses,
+        cst.b_tile_hits,
+        cst.b_tile_misses,
+        cst.pass_hits,
+        cst.pass_misses
+    );
+
+    // --- JSON trajectory ------------------------------------------------
+    let mut j = String::new();
+    j.push_str("{\n");
+    let _ = writeln!(j, "  \"datapath_mops\": {mdots:.3},");
+    let _ = writeln!(j, "  \"quantizer_melems\": {melems:.3},");
+    let _ = writeln!(j, "  \"simulator_mcycles\": {mcps:.3},");
+    let _ = writeln!(j, "  \"hw_ref_mops\": {mdot_ref:.3},");
+    let _ = writeln!(
+        j,
+        "  \"plan_cache\": {{\"workload\": \"deit-proj {}x{}x{} on 2 clusters\", \
+         \"cold_wall_s\": {cold_s:.6}, \"warm_wall_s\": {warm_s:.6}, \
+         \"cold_host_gflops\": {cold_host_gflops:.4}, \
+         \"warm_host_gflops\": {warm_host_gflops:.4}, \
+         \"warm_speedup\": {:.2}, \"bit_identical\": true}}",
+        gemm.m,
+        gemm.k,
+        gemm.n,
+        cold_s / warm_s
+    );
+    j.push_str("}\n");
+    std::fs::write("BENCH_hotpath.json", &j).expect("write BENCH_hotpath.json");
+    println!("wrote BENCH_hotpath.json");
 
     println!("\nhotpath: OK (record these in EXPERIMENTS.md §Perf)");
 }

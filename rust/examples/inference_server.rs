@@ -61,7 +61,7 @@ fn main() -> Result<()> {
 
     // Calibrate the analytic HW-cost model with one real simulator run.
     let t_cal = Instant::now();
-    let util = calibrate_util(&cfg, snitch::NUM_CORES, 1);
+    let util = calibrate_util(&cfg, snitch::NUM_CORES, 1, false);
     println!(
         "calibrated MXFP8 utilization: {:.1} % (cycle-accurate run, {:.2} s)\n",
         util * 100.0,

@@ -18,9 +18,9 @@ use std::collections::HashMap;
 #[derive(Clone, Debug, PartialEq)]
 pub enum Command {
     Quantize { fmt: ElemFormat, block: usize, n: usize, seed: u64 },
-    Simulate { kernel: KernelKind, m: usize, k: usize, n: usize, cores: usize, clusters: usize, fmt: ElemFormat, seed: u64 },
-    Reproduce { what: String, cores: usize, clusters: usize, fmt: ElemFormat },
-    Serve { requests: usize, batch: usize, clusters: usize, artifacts: String },
+    Simulate { kernel: KernelKind, m: usize, k: usize, n: usize, cores: usize, clusters: usize, fmt: ElemFormat, seed: u64, cold_plans: bool },
+    Reproduce { what: String, cores: usize, clusters: usize, fmt: ElemFormat, cold_plans: bool },
+    Serve { requests: usize, batch: usize, clusters: usize, artifacts: String, cold_plans: bool },
     Info,
     Help,
 }
@@ -37,7 +37,11 @@ impl std::fmt::Display for CliError {
 
 impl std::error::Error for CliError {}
 
-/// Split `--key value` pairs after the subcommand.
+/// Valueless boolean flags (present = true).
+const BOOL_FLAGS: [&str; 1] = ["cold-plans"];
+
+/// Split `--key value` pairs (plus valueless boolean flags) after the
+/// subcommand.
 fn flags(args: &[String]) -> Result<HashMap<String, String>, CliError> {
     let mut map = HashMap::new();
     let mut i = 0;
@@ -46,13 +50,24 @@ fn flags(args: &[String]) -> Result<HashMap<String, String>, CliError> {
         if !k.starts_with("--") {
             return Err(CliError(format!("unexpected argument '{k}' (flags are --key value)")));
         }
+        let name = k.trim_start_matches("--");
+        if BOOL_FLAGS.contains(&name) {
+            map.insert(name.to_string(), "true".to_string());
+            i += 1;
+            continue;
+        }
         let v = args
             .get(i + 1)
             .ok_or_else(|| CliError(format!("flag '{k}' needs a value")))?;
-        map.insert(k.trim_start_matches("--").to_string(), v.clone());
+        map.insert(name.to_string(), v.clone());
         i += 2;
     }
     Ok(map)
+}
+
+/// `--cold-plans`: bypass the plan/pass caches (cold-path measurement).
+fn get_cold_plans(f: &HashMap<String, String>) -> bool {
+    f.contains_key("cold-plans")
 }
 
 fn get_parse<T: std::str::FromStr>(
@@ -119,6 +134,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 clusters: get_clusters(&f, 1)?,
                 fmt: get_fmt(&f)?,
                 seed: get_parse(&f, "seed", 42)?,
+                cold_plans: get_cold_plans(&f),
             })
         }
         "reproduce" => {
@@ -139,6 +155,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 cores: get_parse(&f, "cores", 8)?,
                 clusters: get_clusters(&f, 8)?,
                 fmt: get_fmt(&f)?,
+                cold_plans: get_cold_plans(&f),
             })
         }
         "serve" => {
@@ -148,6 +165,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 batch: get_parse(&f, "batch", 8)?,
                 clusters: get_clusters(&f, 1)?,
                 artifacts: f.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
+                cold_plans: get_cold_plans(&f),
             })
         }
         other => Err(CliError(format!("unknown subcommand '{other}' (try 'help')"))),
@@ -160,11 +178,16 @@ mxdotp-cli — MXDOTP paper reproduction driver
 USAGE:
   mxdotp-cli quantize  [--fmt e4m3|e5m2|e3m2|e2m3|e2m1|int8] [--block 32] [--n 8] [--seed S]
   mxdotp-cli simulate  [--kernel mxfp8|fp32|fp8sw] [--m 64] [--k 256] [--n 64]
-                       [--cores 8] [--clusters 1] [--fmt e4m3] [--seed S]
+                       [--cores 8] [--clusters 1] [--fmt e4m3] [--seed S] [--cold-plans]
                        (--clusters N > 1 shards the MXFP8 GEMM across N simulated clusters)
   mxdotp-cli reproduce [fig3|fig4|table3|scaling|all] [--cores 8] [--clusters 8] [--fmt e4m3]
-  mxdotp-cli serve     [--requests 16] [--batch 8] [--clusters 1] [--artifacts DIR]
+                       [--cold-plans]
+  mxdotp-cli serve     [--requests 16] [--batch 8] [--clusters 1] [--artifacts DIR] [--cold-plans]
   mxdotp-cli info
+
+--cold-plans bypasses the compile-once/execute-many plan cache (plans,
+quantized weight tiles, memoized passes) and measures the from-scratch
+path; results are bit-identical either way.
 ";
 
 #[cfg(test)]
@@ -188,9 +211,31 @@ mod tests {
                 cores: 4,
                 clusters: 1,
                 fmt: ElemFormat::E4M3,
-                seed: 42
+                seed: 42,
+                cold_plans: false
             }
         );
+    }
+
+    #[test]
+    fn parse_cold_plans_flag() {
+        // valueless boolean flag, anywhere among the --key value pairs
+        assert!(matches!(
+            parse(&argv("simulate --cold-plans --k 64")),
+            Ok(Command::Simulate { cold_plans: true, k: 64, .. })
+        ));
+        assert!(matches!(
+            parse(&argv("reproduce scaling --clusters 4 --cold-plans")),
+            Ok(Command::Reproduce { cold_plans: true, clusters: 4, .. })
+        ));
+        assert!(matches!(
+            parse(&argv("serve --cold-plans")),
+            Ok(Command::Serve { cold_plans: true, .. })
+        ));
+        assert!(matches!(
+            parse(&argv("serve")),
+            Ok(Command::Serve { cold_plans: false, .. })
+        ));
     }
 
     #[test]

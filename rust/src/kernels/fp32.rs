@@ -7,20 +7,31 @@
 //! (each word repeated 8×, one per column), B — stored column-major —
 //! on ft1. Ideal rate: 2 MACs = 4 FLOPs per cycle per core.
 
-use super::layout::{fp32_footprint, rows_for_core, Planner};
+use super::layout::{fp32_footprint, rows_for_core, Planner, Region};
 use super::MmProblem;
-use crate::snitch::cluster::Cluster;
 use crate::snitch::isa::{csr, FpInstr, Instr, IntInstr, SsrField};
+use crate::snitch::spm::Spm;
 use crate::snitch::SPM_BYTES;
 
-/// Stage data into SPM and build per-core programs.
-/// Returns (C base address, programs).
-pub fn stage(cluster: &mut Cluster, p: MmProblem, a: &[f32], b: &[f32]) -> (usize, Vec<Vec<Instr>>) {
-    assert_eq!(a.len(), p.m * p.k);
-    assert_eq!(b.len(), p.k * p.n);
+/// The FP32 kernel's SPM placement, computed once by [`plan`] and
+/// reused by every execution of the plan.
+#[derive(Clone, Copy, Debug)]
+pub struct Fp32Layout {
+    pub a: Region,
+    pub b: Region,
+    pub c: Region,
+    /// Padded byte stride of one A row / one B column (one extra
+    /// 64-bit word so lockstep streams rotate banks).
+    pub a_stride: usize,
+    pub b_stride: usize,
+}
+
+/// Plan the FP32 kernel: validate the shape, compute the SPM layout
+/// and compile the per-core instruction programs. Data-independent —
+/// two problems with the same shape share the identical plan.
+pub fn plan(p: MmProblem, ncores: usize) -> (Fp32Layout, Vec<Vec<Instr>>) {
     assert_eq!(p.k % 2, 0, "FP32 kernel needs even K (2-way SIMD)");
     assert_eq!(p.n % 8, 0, "N must be a multiple of the unroll factor 8");
-    let ncores = cluster.cores.len();
     assert_eq!(p.m % ncores, 0);
     assert!(
         fp32_footprint(&p) <= SPM_BYTES,
@@ -34,28 +45,35 @@ pub fn stage(cluster: &mut Cluster, p: MmProblem, a: &[f32], b: &[f32]) -> (usiz
     // lockstep B streams on one bank and throughput collapses to 1/8.
     let a_stride = 4 * p.k + 8;
     let b_stride = 4 * p.k + 8;
-    let mut plan = Planner::new();
-    let a_reg = plan.place(a_stride * p.m).unwrap();
-    let b_reg = plan.place(b_stride * p.n).unwrap();
-    let c_reg = plan.place(4 * p.m * p.n).unwrap();
+    let mut planner = Planner::new();
+    let a_reg = planner.place(a_stride * p.m).unwrap();
+    let b_reg = planner.place(b_stride * p.n).unwrap();
+    let c_reg = planner.place(4 * p.m * p.n).unwrap();
+    let layout = Fp32Layout { a: a_reg, b: b_reg, c: c_reg, a_stride, b_stride };
 
+    let programs = (0..ncores)
+        .map(|c| build(p, c, ncores, a_reg.addr, b_reg.addr, c_reg.addr, a_stride, b_stride))
+        .collect();
+    (layout, programs)
+}
+
+/// Write the FP32 operands into SPM at the planned addresses (the
+/// per-execution half of the old `stage`).
+pub fn write_operands(spm: &mut Spm, l: &Fp32Layout, p: &MmProblem, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), p.m * p.k);
+    assert_eq!(b.len(), p.k * p.n);
     // A row-major (padded rows).
     for m in 0..p.m {
         for k in 0..p.k {
-            cluster.spm.write_f32(a_reg.addr + m * a_stride + 4 * k, a[m * p.k + k]);
+            spm.write_f32(l.a.addr + m * l.a_stride + 4 * k, a[m * p.k + k]);
         }
     }
     // B column-major (padded columns): Bcol[n][k] = B[k][n].
     for n in 0..p.n {
         for k in 0..p.k {
-            cluster.spm.write_f32(b_reg.addr + n * b_stride + 4 * k, b[k * p.n + n]);
+            spm.write_f32(l.b.addr + n * l.b_stride + 4 * k, b[k * p.n + n]);
         }
     }
-
-    let programs = (0..ncores)
-        .map(|c| build(p, c, ncores, a_reg.addr, b_reg.addr, c_reg.addr, a_stride, b_stride))
-        .collect();
-    (c_reg.addr, programs)
 }
 
 /// Emit the SSR configuration sequence for one stream.
@@ -168,8 +186,8 @@ mod tests {
         let b = rng.normal_vec(p.k * p.n, 1.0);
         let run = run_mm(KernelKind::Fp32, p, &a, &b, 4);
         let want = fp32_hw_ref(&p, &a, &b);
-        for i in 0..want.len() {
-            assert_eq!(run.c[i].to_bits(), want[i].to_bits(), "C[{i}]");
+        for (i, (got, w)) in run.c.iter().zip(&want).enumerate() {
+            assert_eq!(got.to_bits(), w.to_bits(), "C[{i}]");
         }
     }
 

@@ -17,26 +17,20 @@
 //! tile by the integer core.
 
 use super::layout::rows_for_core;
-use super::mxfp8::{emit_reshape, emit_reshape_advance, stage_mx};
+use super::mxfp8::{emit_reshape, emit_reshape_advance, layout_mx, MxRegions};
 use super::{fp32::emit_ssr, MmProblem};
-use crate::snitch::cluster::Cluster;
 use crate::snitch::isa::{csr, FpInstr, Instr, IntInstr, SsrField};
 
-/// Stage the FP8-to-FP32 kernel. Returns (C address, per-core programs).
-pub fn stage(cluster: &mut Cluster, p: MmProblem, a: &[f32], b: &[f32]) -> (usize, Vec<Vec<Instr>>) {
+/// Plan the FP8-to-FP32 kernel: SPM layout (shared with the MXFP8
+/// kernel) + per-core programs for one tile shape.
+pub(super) fn plan(p: MmProblem, ncores: usize) -> (MxRegions, Vec<Vec<Instr>>) {
     assert_eq!(p.block_size, 32, "the software kernel is written for the spec block size");
-    let (r, _qa, _qb) = stage_mx(cluster, p, a, b);
-    let ncores = cluster.cores.len();
+    let r = layout_mx(&p, ncores);
     let progs = (0..ncores).map(|c| build(p, c, ncores, &r)).collect();
-    (r.c.addr, progs)
+    (r, progs)
 }
 
-fn build(
-    p: MmProblem,
-    core: usize,
-    ncores: usize,
-    r: &super::mxfp8::MxRegions,
-) -> Vec<Instr> {
+fn build(p: MmProblem, core: usize, ncores: usize, r: &MxRegions) -> Vec<Instr> {
     let rows = rows_for_core(p.m, core, ncores);
     let nrows = rows.len() as u32;
     let (k, n) = (p.k, p.n);
@@ -185,14 +179,8 @@ mod tests {
             let b = rng.normal_vec(p.k * p.n, 1.0);
             let run = run_mm(KernelKind::Fp8ToFp32, p, &a, &b, 2);
             let want = fp8sw_hw_ref(&p, &a, &b);
-            for i in 0..want.len() {
-                assert_eq!(
-                    run.c[i].to_bits(),
-                    want[i].to_bits(),
-                    "{fmt} C[{i}]: {} vs {}",
-                    run.c[i],
-                    want[i]
-                );
+            for (i, (got, w)) in run.c.iter().zip(&want).enumerate() {
+                assert_eq!(got.to_bits(), w.to_bits(), "{fmt} C[{i}]: {got} vs {w}");
             }
         }
     }

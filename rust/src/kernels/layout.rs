@@ -87,14 +87,14 @@ pub fn fp32_footprint(p: &MmProblem) -> usize {
     4 * (p.m * p.k + p.k * p.n + p.m * p.n)
 }
 
-/// Exact upper bound of the bytes `mxfp8::stage_mx` actually places:
+/// Exact upper bound of the bytes `mxfp8::layout_mx` actually places:
 /// the padded-stride element regions (one 8-byte pad word per A row /
 /// B column), the A-scale guard row, the pre-shifted 16-bit B scales,
 /// FP32 C, the per-core double-buffered scale streams, plus the
 /// worst-case bank-stagger/alignment slack the [`Planner`] can insert
-/// per region (< 256 B each). Both `stage_mx`'s capacity check and the
-/// scale-out engine's tile planner use this single definition, so the
-/// staging layout and its footprint model cannot drift apart.
+/// per region (< 256 B each). Both `layout_mx`'s capacity check and
+/// the scale-out engine's tile planner use this single definition, so
+/// the planned layout and its footprint model cannot drift apart.
 pub fn mx_staged_footprint(p: &MmProblem, num_cores: usize) -> usize {
     let kb = p.k / p.block_size;
     let elems = (p.k + 8) * p.m + (p.k + 8) * p.n;

@@ -15,9 +15,21 @@
 //!               capacity checks — reproducing the paper's "FP32 does
 //!               not fit into L1 at K=256" footnote) and row-block
 //!               multi-core partitioning;
+//! * [`plan`]   — the compile-once/execute-many layer: each kernel's
+//!               old per-call `stage()` is split into a shape-keyed
+//!               [`plan::MmPlan`] (SPM layout + per-core programs +
+//!               worst-case cycle bound) and an `execute()` that writes
+//!               operands into a reset, long-lived cluster; the
+//!               [`plan::PlanCache`] shares plans across identical tile
+//!               shapes and quantized B tiles across passes/requests;
 //! * [`reference`] — instruction-order-exact analytical references the
 //!               simulator's results are compared against *bit for
 //!               bit*, plus the FLOP accounting used by Fig. 4.
+//!
+//! [`run_mm`] below is the *cold* single-call convenience path (plan,
+//! quantize, execute once — what the figures and golden tests use);
+//! the serving and scale-out layers go through [`plan::run_mm_cached`]
+//! and the engine's warm tile loop instead, with bit-identical results.
 //!
 //! FLOP counting follows Table III's footnote: 1 FLOP = 1 FP multiply
 //! or 1 FP add; a matmul is 2·M·N·K FLOPs; scale operations are *not*
@@ -27,13 +39,14 @@ pub mod fp8sw;
 pub mod fp32;
 pub mod layout;
 pub mod mxfp8;
+pub mod plan;
 pub mod reference;
 
 use crate::formats::ElemFormat;
 use crate::snitch::cluster::{Cluster, ClusterConfig, PerfCounters};
 
 /// Which kernel to run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum KernelKind {
     Fp32,
     Fp8ToFp32,
@@ -109,6 +122,12 @@ impl MmRun {
 /// Run `kind` on an `num_cores`-core cluster and return results +
 /// counters. Inputs are FP32 matrices; MX kernels quantize them with
 /// the OCP recipe before staging into SPM.
+///
+/// This is the *cold* path: plan compiled, operands quantized and one
+/// execution performed per call, under the plan's per-kernel
+/// worst-case cycle bound (guard expiry panics with the kernel name).
+/// Warm callers (scale-out, serving) use [`plan::run_mm_cached`] /
+/// the engine's tile loop, which are bit-identical.
 pub fn run_mm(
     kind: KernelKind,
     problem: MmProblem,
@@ -116,21 +135,15 @@ pub fn run_mm(
     b: &[f32],
     num_cores: usize,
 ) -> MmRun {
-    let cfg = ClusterConfig { num_cores, freq_ghz: 1.0 };
-    let mut cluster = Cluster::new(cfg);
-    let (c_addr, programs) = match kind {
-        KernelKind::Fp32 => fp32::stage(&mut cluster, problem, a, b),
-        KernelKind::Fp8ToFp32 => fp8sw::stage(&mut cluster, problem, a, b),
-        KernelKind::Mxfp8 => mxfp8::stage(&mut cluster, problem, a, b),
-    };
-    for (core, prog) in programs.into_iter().enumerate() {
-        cluster.load_program(core, prog);
+    let mm_plan = plan::MmPlan::build(plan::PlanKey::new(kind, &problem, num_cores));
+    let mut cluster = Cluster::new(ClusterConfig { num_cores, freq_ghz: 1.0 });
+    match kind {
+        KernelKind::Fp32 => mm_plan.execute(&mut cluster, &plan::MmOperands::Fp32 { a, b }),
+        KernelKind::Fp8ToFp32 | KernelKind::Mxfp8 => {
+            let (qa, qb) = mm_plan.quantize(a, b);
+            mm_plan.execute(&mut cluster, &plan::MmOperands::Mx { qa: &qa, qb: &qb })
+        }
     }
-    // generous guard: the slowest kernel runs ~30 cycles per 8 elements
-    let guard = 200 + (problem.flops() / num_cores as u64) * 8;
-    let perf = cluster.run(guard);
-    let c = cluster.spm.read_f32_slice(c_addr, problem.m * problem.n);
-    MmRun { kind, problem, perf, c, num_cores, freq_ghz: cfg.freq_ghz }
 }
 
 #[cfg(test)]
@@ -144,28 +157,125 @@ mod tests {
         assert_eq!(p.flops(), 2 * 64 * 64 * 128);
     }
 
+    /// Run `kinds` on the simulated cluster and assert bit-agreement
+    /// with each kernel's instruction-order-exact reference (NaN
+    /// compares as NaN; everything else bit-for-bit).
+    fn assert_kernels_agree(
+        what: &str,
+        p: MmProblem,
+        a: &[f32],
+        b: &[f32],
+        cores: usize,
+        kinds: &[KernelKind],
+    ) {
+        for &kind in kinds {
+            let want = match kind {
+                KernelKind::Fp32 => reference::fp32_hw_ref(&p, a, b),
+                KernelKind::Fp8ToFp32 => reference::fp8sw_hw_ref(&p, a, b),
+                KernelKind::Mxfp8 => reference::mxfp8_hw_ref(&p, a, b),
+            };
+            let run = run_mm(kind, p, a, b, cores);
+            assert_eq!(run.c.len(), want.len());
+            for (i, (&got, &w)) in run.c.iter().zip(&want).enumerate() {
+                assert!(
+                    got.to_bits() == w.to_bits() || (got.is_nan() && w.is_nan()),
+                    "{what} / {}: C[{i}] = {got:?} (bits {:08x}), want {w:?} ({:08x})",
+                    kind.name(),
+                    got.to_bits(),
+                    w.to_bits()
+                );
+            }
+        }
+    }
+
+    const ALL_KINDS: [KernelKind; 3] =
+        [KernelKind::Fp32, KernelKind::Fp8ToFp32, KernelKind::Mxfp8];
+
     #[test]
     fn all_three_kernels_agree_with_their_references() {
         let mut rng = XorShift::new(0xC0DE);
         let p = MmProblem { m: 16, k: 64, n: 16, fmt: ElemFormat::E4M3, block_size: 32 };
         let a = rng.normal_vec(p.m * p.k, 1.0);
         let b = rng.normal_vec(p.k * p.n, 1.0);
-        for (kind, want) in [
-            (KernelKind::Fp32, reference::fp32_hw_ref(&p, &a, &b)),
-            (KernelKind::Fp8ToFp32, reference::fp8sw_hw_ref(&p, &a, &b)),
-            (KernelKind::Mxfp8, reference::mxfp8_hw_ref(&p, &a, &b)),
-        ] {
-            let run = run_mm(kind, p, &a, &b, 2);
-            assert_eq!(run.c.len(), want.len());
-            for (i, (&got, &w)) in run.c.iter().zip(&want).enumerate() {
-                assert!(
-                    got == w || (got.is_nan() && w.is_nan()),
-                    "{}: C[{i}] = {got:?} (bits {:08x}), want {w:?} ({:08x})",
-                    kind.name(),
-                    got.to_bits(),
-                    w.to_bits()
-                );
+        assert_kernels_agree("e4m3", p, &a, &b, 2, &ALL_KINDS);
+    }
+
+    #[test]
+    fn all_three_kernels_agree_on_e5m2() {
+        let mut rng = XorShift::new(0xE5A2);
+        let p = MmProblem { m: 16, k: 64, n: 16, fmt: ElemFormat::E5M2, block_size: 32 };
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        assert_kernels_agree("e5m2", p, &a, &b, 2, &ALL_KINDS);
+    }
+
+    #[test]
+    fn kernels_agree_on_non_default_block_sizes() {
+        // "the block size remains configurable in software": the MXFP8
+        // kernel's ft2 middle bound adapts; FP32 ignores the block size
+        // entirely. The FP8-to-FP32 software baseline is written for
+        // the spec's block 32 only (its plan asserts so) and is
+        // exercised at 32 by the tests above.
+        for bs in [16usize, 64] {
+            let p = MmProblem { m: 8, k: 128, n: 16, fmt: ElemFormat::E4M3, block_size: bs };
+            let mut rng = XorShift::new(0xB5 + bs as u64);
+            let a = rng.normal_vec(p.m * p.k, 1.0);
+            let b = rng.normal_vec(p.k * p.n, 1.0);
+            assert_kernels_agree(
+                &format!("bs={bs}"),
+                p,
+                &a,
+                &b,
+                2,
+                &[KernelKind::Fp32, KernelKind::Mxfp8],
+            );
+        }
+    }
+
+    #[test]
+    fn kernels_agree_on_nan_and_inf_operands() {
+        // NaN poisons, E5M2 infinities propagate (E4M3 has no Inf
+        // encoding: the OCP recipe saturates ±Inf to ±max-normal).
+        // The simulator executes these through the architectural
+        // MxDotpUnit; the references must agree element for element.
+        for fmt in [ElemFormat::E4M3, ElemFormat::E5M2] {
+            let p = MmProblem { m: 8, k: 64, n: 16, fmt, block_size: 32 };
+            let mut rng = XorShift::new(0x7A7);
+            let mut a = rng.normal_vec(p.m * p.k, 1.0);
+            let mut b = rng.normal_vec(p.k * p.n, 1.0);
+            a[3] = f32::NAN; // row 0: NaN poisons every C[0][*]
+            a[p.k + 10] = f32::INFINITY; // row 1: ±Inf propagation
+            a[2 * p.k + 5] = f32::NEG_INFINITY;
+            b[4 * p.n + 7] = f32::NAN; // column 7 via k=4
+            b[9 * p.n + 3] = f32::INFINITY;
+            assert_kernels_agree(&format!("{fmt} specials"), p, &a, &b, 2, &ALL_KINDS);
+        }
+    }
+
+    #[test]
+    fn kernels_agree_on_subnormal_heavy_blocks() {
+        // Whole FP32-subnormal blocks force the OCP shared exponent to
+        // its EMIN clamp and exercise the quantizer's and datapath's
+        // denormal paths.
+        for fmt in [ElemFormat::E4M3, ElemFormat::E5M2] {
+            let p = MmProblem { m: 8, k: 64, n: 16, fmt, block_size: 32 };
+            let mut rng = XorShift::new(0x5AB);
+            let mut a = rng.normal_vec(p.m * p.k, 1.0);
+            let mut b = rng.normal_vec(p.k * p.n, 1.0);
+            // first K-block of every A row: subnormal magnitudes
+            for (m, row) in (0..p.m).map(|m| (m, m * p.k)) {
+                for k in 0..p.block_size {
+                    let tiny = f32::from_bits(1 + (m * 97 + k * 13) as u32 % 0x7F_FFFF);
+                    a[row + k] = if k % 2 == 0 { tiny } else { -tiny };
+                }
             }
+            // one B block per column mixes subnormals with normals
+            for n in 0..p.n {
+                for k in 32..48 {
+                    b[k * p.n + n] = f32::from_bits(((n * 31 + k) as u32 % 0xFFFF) + 1);
+                }
+            }
+            assert_kernels_agree(&format!("{fmt} subnormals"), p, &a, &b, 2, &ALL_KINDS);
         }
     }
 

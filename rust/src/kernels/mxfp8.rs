@@ -21,14 +21,14 @@
 //! Ideal rate: 8 MACs = 16 FLOPs per cycle per core.
 
 use super::layout::{mx_staged_footprint, rows_for_core, Planner, Region};
-use super::reference::quantize_operands;
 use super::{fp32::emit_ssr, MmProblem};
 use crate::formats::MxMatrix;
-use crate::snitch::cluster::Cluster;
 use crate::snitch::isa::{csr, FpInstr, Instr, IntInstr, SsrField};
+use crate::snitch::spm::Spm;
 use crate::snitch::SPM_BYTES;
 
 /// Staged operand addresses (shared with the fp8sw kernel).
+#[derive(Clone, Debug)]
 pub(super) struct MxRegions {
     pub a: Region,
     pub b: Region,
@@ -43,67 +43,81 @@ pub(super) struct MxRegions {
     pub bufs: Vec<[Region; 2]>,
 }
 
-/// Quantize + place the MX operands (used by both MX kernels):
-/// A elements row-major, B elements column-major, A scales as bytes
-/// (with one guard row for the reshape lookahead), B scales pre-shifted
-/// into the high byte of a u16 (so the reshape loop is lhu+or+sh).
-pub(super) fn stage_mx(
-    cluster: &mut Cluster,
-    p: MmProblem,
-    a: &[f32],
-    b: &[f32],
-) -> (MxRegions, MxMatrix, MxMatrix) {
-    let ncores = cluster.cores.len();
+/// Place the MX operand regions (used by both MX kernels): A elements
+/// row-major, B elements column-major, A scales as bytes (with one
+/// guard row for the reshape lookahead), B scales pre-shifted into the
+/// high byte of a u16 (so the reshape loop is lhu+or+sh). Shape-only —
+/// the data-dependent half lives in [`write_mx_operands`].
+pub(super) fn layout_mx(p: &MmProblem, ncores: usize) -> MxRegions {
     assert_eq!(p.m % ncores, 0);
     assert_eq!(p.n % 8, 0);
     assert_eq!(p.k % p.block_size, 0);
     assert_eq!(p.block_size % 8, 0);
     assert!(
-        mx_staged_footprint(&p, ncores) <= SPM_BYTES,
+        mx_staged_footprint(p, ncores) <= SPM_BYTES,
         "MX workload does not fit into L1"
     );
-    let (qa, qb) = quantize_operands(&p, a, b);
     let kb = p.k / p.block_size;
 
     let a_stride = p.k + 8;
     let b_stride = p.k + 8;
-    let mut plan = Planner::new();
-    let a_reg = plan.place(a_stride * p.m).unwrap();
-    let b_reg = plan.place(b_stride * p.n).unwrap();
-    let asc = plan.place((p.m + 1) * kb).unwrap(); // +1 guard row
-    let bs16 = plan.place(p.n * kb * 2).unwrap();
-    let c_reg = plan.place(4 * p.m * p.n).unwrap();
+    let mut planner = Planner::new();
+    let a_reg = planner.place(a_stride * p.m).unwrap();
+    let b_reg = planner.place(b_stride * p.n).unwrap();
+    let asc = planner.place((p.m + 1) * kb).unwrap(); // +1 guard row
+    let bs16 = planner.place(p.n * kb * 2).unwrap();
+    let c_reg = planner.place(4 * p.m * p.n).unwrap();
     let bufs: Vec<[Region; 2]> = (0..ncores)
-        .map(|_| [plan.place(8 * kb * 8).unwrap(), plan.place(8 * kb * 8).unwrap()])
+        .map(|_| [planner.place(8 * kb * 8).unwrap(), planner.place(8 * kb * 8).unwrap()])
         .collect();
+    MxRegions { a: a_reg, b: b_reg, a_stride, b_stride, asc, bs16, c: c_reg, bufs }
+}
 
+/// Write pre-quantized MX operands into SPM at the planned addresses —
+/// the per-execution half of the old `stage_mx`. `qa`/`qb` come from
+/// `reference::quantize_a`/`quantize_b` (directly or via the plan
+/// cache's reusable tile buffers); the bytes written are identical
+/// either way.
+pub(super) fn write_mx_operands(
+    spm: &mut Spm,
+    r: &MxRegions,
+    p: &MmProblem,
+    qa: &MxMatrix,
+    qb: &MxMatrix,
+) {
+    assert_eq!(qa.rows, p.m);
+    assert_eq!(qa.cols, p.k);
+    assert_eq!(qb.rows, p.k);
+    assert_eq!(qb.cols, p.n);
+    assert_eq!(qa.fmt, p.fmt);
+    assert_eq!(qb.fmt, p.fmt);
+    assert_eq!(qa.block_size, p.block_size);
+    assert_eq!(qb.block_size, p.block_size);
+    let kb = p.k / p.block_size;
     // A elements row-major (padded rows).
     for m in 0..p.m {
         for k in 0..p.k {
-            cluster.spm.data[a_reg.addr + m * a_stride + k] = qa.elem_bits(m, k);
+            spm.data[r.a.addr + m * r.a_stride + k] = qa.elem_bits(m, k);
         }
     }
     // B elements column-major (padded columns): Bcol[n][k] = qb[k][n].
     for n in 0..p.n {
         for k in 0..p.k {
-            cluster.spm.data[b_reg.addr + n * b_stride + k] = qb.elem_bits(k, n);
+            spm.data[r.b.addr + n * r.b_stride + k] = qb.elem_bits(k, n);
         }
     }
     // A scales: Asc[m][kb] bytes (guard row stays zero).
     for m in 0..p.m {
         for b_i in 0..kb {
-            cluster.spm.data[asc.addr + m * kb + b_i] = qa.scale(m, b_i).0;
+            spm.data[r.asc.addr + m * kb + b_i] = qa.scale(m, b_i).0;
         }
     }
     // B scales as u16 = xb << 8, laid out [n][kb].
     for n in 0..p.n {
         for b_i in 0..kb {
-            cluster
-                .spm
-                .write_u16(bs16.addr + (n * kb + b_i) * 2, (qb.scale(n, b_i).0 as u16) << 8);
+            spm.write_u16(r.bs16.addr + (n * kb + b_i) * 2, (qb.scale(n, b_i).0 as u16) << 8);
         }
     }
-    (MxRegions { a: a_reg, b: b_reg, a_stride, b_stride, asc, bs16, c: c_reg, bufs }, qa, qb)
 }
 
 /// Emit the straight-line reshape of one tile's scale words:
@@ -162,12 +176,13 @@ pub(super) fn emit_reshape_advance(prog: &mut Vec<Instr>, kb: usize) {
     prog.push(IntInstr::Addi { rd: 20, rs1: 20, imm: kb as i64 }.into());
 }
 
-/// Stage the MXFP8 kernel. Returns (C address, per-core programs).
-pub fn stage(cluster: &mut Cluster, p: MmProblem, a: &[f32], b: &[f32]) -> (usize, Vec<Vec<Instr>>) {
-    let (r, _qa, _qb) = stage_mx(cluster, p, a, b);
-    let ncores = cluster.cores.len();
+/// Plan the MXFP8 kernel: SPM layout + per-core programs for one tile
+/// shape. Returns (regions, programs); writing operands and running is
+/// the plan layer's `execute`.
+pub(super) fn plan(p: MmProblem, ncores: usize) -> (MxRegions, Vec<Vec<Instr>>) {
+    let r = layout_mx(&p, ncores);
     let progs = (0..ncores).map(|c| build(p, c, ncores, &r)).collect();
-    (r.c.addr, progs)
+    (r, progs)
 }
 
 fn build(p: MmProblem, core: usize, ncores: usize, r: &MxRegions) -> Vec<Instr> {
@@ -294,14 +309,8 @@ mod tests {
             let b = rng.normal_vec(p.k * p.n, 1.0);
             let run = run_mm(KernelKind::Mxfp8, p, &a, &b, 4);
             let want = mxfp8_hw_ref(&p, &a, &b);
-            for i in 0..want.len() {
-                assert_eq!(
-                    run.c[i].to_bits(),
-                    want[i].to_bits(),
-                    "{fmt} C[{i}]: {} vs {}",
-                    run.c[i],
-                    want[i]
-                );
+            for (i, (got, w)) in run.c.iter().zip(&want).enumerate() {
+                assert_eq!(got.to_bits(), w.to_bits(), "{fmt} C[{i}]: {got} vs {w}");
             }
         }
     }
@@ -331,8 +340,8 @@ mod tests {
             let b = rng.normal_vec(p.k * p.n, 1.0);
             let run = run_mm(KernelKind::Mxfp8, p, &a, &b, 2);
             let want = mxfp8_hw_ref(&p, &a, &b);
-            for i in 0..want.len() {
-                assert_eq!(run.c[i].to_bits(), want[i].to_bits(), "bs={bs} C[{i}]");
+            for (i, (got, w)) in run.c.iter().zip(&want).enumerate() {
+                assert_eq!(got.to_bits(), w.to_bits(), "bs={bs} C[{i}]");
             }
         }
     }

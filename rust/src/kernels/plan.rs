@@ -1,0 +1,601 @@
+//! The compile-once / execute-many GEMM plan layer.
+//!
+//! The paper's 25× speedup depends on keeping the MXDOTP datapath fed;
+//! our serving stack additionally depends on not re-doing preparation
+//! work per request. This module splits the old per-call `stage()`
+//! idiom into:
+//!
+//! * [`MmPlan`] — everything *data-independent* about one kernel launch:
+//!   the SPM layout and the per-core instruction programs, keyed by
+//!   [`PlanKey`] `(kind, m, k, n, fmt, block_size, cores)`. Built once,
+//!   executed many times.
+//! * [`MmPlan::execute`] — the *per-execution* half: reset a (long-
+//!   lived) cluster, write the operands into SPM at the planned
+//!   addresses, load the shared programs, run under the plan's
+//!   per-kernel worst-case cycle bound.
+//! * [`PlanCache`] — the warm path: identical tile shapes share one
+//!   compiled plan; identical B tiles (weights!) share one quantized
+//!   MX buffer; and — because the simulator is a deterministic pure
+//!   function of (plan, operand bits) — identical passes share their
+//!   full result (C bits + performance counters).
+//!
+//! **Bit-identity invariant.** A cached execution returns *exactly*
+//! the bytes and counters a cold execution produces: plans are pure
+//! functions of the shape, quantization is the stage-identical
+//! `reference::quantize_a`/`quantize_b` recipe, `Cluster::reset`
+//! restores power-on state, and pass results are memoized outputs of a
+//! deterministic simulation. The cache can change wall-clock only.
+//!
+//! The escape hatch for measuring the cold path (and for debugging) is
+//! [`PlanCache::disabled`], surfaced as `--cold-plans` on the CLI.
+
+use super::fp32::{self, Fp32Layout};
+use super::fp8sw;
+use super::mxfp8::{self, MxRegions};
+use super::reference::{quantize_a, quantize_b};
+use super::{KernelKind, MmProblem, MmRun};
+use crate::formats::{ElemFormat, MxMatrix};
+use crate::snitch::cluster::{Cluster, PerfCounters};
+use crate::snitch::isa::Instr;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, LazyLock, Mutex};
+
+/// Everything that determines a compiled plan: two launches with equal
+/// keys share the SPM layout, the instruction programs and the cycle
+/// bound.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub kind: KernelKind,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub fmt: ElemFormat,
+    pub block_size: usize,
+    pub cores: usize,
+}
+
+impl PlanKey {
+    pub fn new(kind: KernelKind, p: &MmProblem, cores: usize) -> Self {
+        PlanKey { kind, m: p.m, k: p.k, n: p.n, fmt: p.fmt, block_size: p.block_size, cores }
+    }
+
+    /// The problem this key describes.
+    pub fn problem(&self) -> MmProblem {
+        MmProblem { m: self.m, k: self.k, n: self.n, fmt: self.fmt, block_size: self.block_size }
+    }
+}
+
+/// Kernel-specific SPM placement.
+enum PlanLayout {
+    Fp32(Fp32Layout),
+    Mx(MxRegions),
+}
+
+/// Operands for one plan execution, borrowed from the caller (raw FP32
+/// matrices for the FP32 kernel; pre-quantized MX tile buffers —
+/// possibly shared through the [`PlanCache`] — for the MX kernels).
+pub enum MmOperands<'a> {
+    Fp32 { a: &'a [f32], b: &'a [f32] },
+    Mx { qa: &'a MxMatrix, qb: &'a MxMatrix },
+}
+
+/// A compiled GEMM plan: SPM layout + per-core programs + worst-case
+/// cycle bound for one `(kernel, tile shape, cluster shape)`.
+pub struct MmPlan {
+    pub key: PlanKey,
+    layout: PlanLayout,
+    /// Per-core instruction streams, shared (not copied) into every
+    /// cluster that executes this plan.
+    programs: Vec<Arc<Vec<Instr>>>,
+    /// C base address in SPM.
+    pub c_addr: usize,
+    /// Conservative worst-case cycles for one execution (see
+    /// [`cycle_bound`]); expiry is a deadlock or a simulator bug, never
+    /// a slow-but-correct run.
+    pub cycle_bound: u64,
+}
+
+impl MmPlan {
+    /// Compile a plan. Panics exactly where the old `stage()` did on
+    /// shapes that violate kernel constraints or do not fit L1.
+    pub fn build(key: PlanKey) -> MmPlan {
+        let p = key.problem();
+        let (layout, programs, c_addr) = match key.kind {
+            KernelKind::Fp32 => {
+                let (l, progs) = fp32::plan(p, key.cores);
+                let c = l.c.addr;
+                (PlanLayout::Fp32(l), progs, c)
+            }
+            KernelKind::Fp8ToFp32 => {
+                let (r, progs) = fp8sw::plan(p, key.cores);
+                let c = r.c.addr;
+                (PlanLayout::Mx(r), progs, c)
+            }
+            KernelKind::Mxfp8 => {
+                let (r, progs) = mxfp8::plan(p, key.cores);
+                let c = r.c.addr;
+                (PlanLayout::Mx(r), progs, c)
+            }
+        };
+        let programs = programs.into_iter().map(Arc::new).collect();
+        let cycle_bound = cycle_bound(key.kind, &p, key.cores);
+        MmPlan { key, layout, programs, c_addr, cycle_bound }
+    }
+
+    /// Quantize raw FP32 operands into this plan's MX tile buffers
+    /// (identity for the FP32 kernel is handled by the caller passing
+    /// [`MmOperands::Fp32`] directly).
+    pub fn quantize(&self, a: &[f32], b: &[f32]) -> (MxMatrix, MxMatrix) {
+        let p = self.key.problem();
+        (quantize_a(&p, a), quantize_b(&p, b))
+    }
+
+    /// Execute the plan on a cluster: reset it (restoring power-on
+    /// state without reallocating the SPM), write the operands at the
+    /// planned addresses, load the shared programs and run. The result
+    /// is bit- and cycle-identical to the old stage-then-run path on a
+    /// freshly allocated cluster.
+    ///
+    /// Panics with the kernel's name if the run exceeds the plan's
+    /// worst-case cycle bound.
+    pub fn execute(&self, cluster: &mut Cluster, ops: &MmOperands<'_>) -> MmRun {
+        assert_eq!(
+            cluster.cores.len(),
+            self.key.cores,
+            "plan compiled for {} cores executed on a {}-core cluster",
+            self.key.cores,
+            cluster.cores.len()
+        );
+        let p = self.key.problem();
+        cluster.reset();
+        match (&self.layout, ops) {
+            (PlanLayout::Fp32(l), MmOperands::Fp32 { a, b }) => {
+                fp32::write_operands(&mut cluster.spm, l, &p, a, b);
+            }
+            (PlanLayout::Mx(r), MmOperands::Mx { qa, qb }) => {
+                mxfp8::write_mx_operands(&mut cluster.spm, r, &p, qa, qb);
+            }
+            _ => panic!("{} plan executed with mismatched operand kind", self.key.kind.name()),
+        }
+        for (core, prog) in self.programs.iter().enumerate() {
+            cluster.load_program_shared(core, Arc::clone(prog));
+        }
+        let perf = cluster.run_checked(self.cycle_bound).unwrap_or_else(|bound| {
+            panic!(
+                "{} kernel did not finish within its worst-case cycle bound of {bound} \
+                 cycles ({}x{}x{} on {} cores) — deadlock or simulator bug",
+                self.key.kind.name(),
+                p.m,
+                p.k,
+                p.n,
+                self.key.cores
+            )
+        });
+        let c = cluster.spm.read_f32_slice(self.c_addr, p.m * p.n);
+        MmRun {
+            kind: self.key.kind,
+            problem: p,
+            perf,
+            c,
+            num_cores: self.key.cores,
+            freq_ghz: cluster.cfg.freq_ghz,
+        }
+    }
+}
+
+/// Per-kernel worst-case cycle bound for one plan execution.
+///
+/// Replaces the old one-size-fits-all `200 + flops/cores * 8` guard.
+/// Each bound counts the kernel's dynamic issue stream per C tile and
+/// multiplies the streamed portion by 8 — the interconnect's full
+/// serialization factor (eight cores' lockstep streams can in the
+/// worst case all hit one bank, cutting throughput to 1/8; see
+/// `cluster::tests::bank_conflicts_are_observed_under_contention`) —
+/// plus a 2x factor on scalar reshape traffic for lost LSU arbitration.
+/// Deliberately conservative: expiry means deadlock, not slowness.
+pub fn cycle_bound(kind: KernelKind, p: &MmProblem, cores: usize) -> u64 {
+    let tiles = ((p.m / cores).max(1) as u64) * (p.n as u64 / 8).max(1);
+    let k = p.k as u64;
+    let kb = (p.k / p.block_size).max(1) as u64;
+    // SSR/CSR setup plus the prologue reshape (≈29 int instructions per
+    // block, doubled for worst-case LSU arbitration).
+    let setup = 400 + 60 * kb;
+    let per_tile = match kind {
+        // 8-instruction FREP body replayed K/2 times = 4K vfmac issues,
+        // ×8 worst-case stream serialization, + epilogue.
+        KernelKind::Fp32 => 32 * k + 200,
+        // K/8 mxdotp ×8 serialization, + the (normally hidden) reshape
+        // of the next tile ×2, + fences/stores.
+        KernelKind::Mxfp8 => 8 * k + 60 * kb + 200,
+        // Per output: per block ≈ 114 FPU issues (2 moves + 16 converts
+        // + 8 FMAs per word, ×4 words, + reduction and scale ops); 8
+        // outputs per tile, ×8 worst-case serialization.
+        KernelKind::Fp8ToFp32 => 8 * 8 * 114 * kb + 60 * kb + 400,
+    };
+    setup + tiles * per_tile
+}
+
+/// A memoized pass: the full observable output of one deterministic
+/// plan execution.
+pub struct PassResult {
+    pub c: Vec<f32>,
+    pub perf: PerfCounters,
+}
+
+impl PassResult {
+    /// Reconstruct the `MmRun` this memoized pass recorded — the single
+    /// definition both warm paths (`run_mm_cached` and the scale-out
+    /// engine) use, so the memoized-result contract cannot drift.
+    pub fn to_run(&self, key: &PlanKey, freq_ghz: f64) -> MmRun {
+        MmRun {
+            kind: key.kind,
+            problem: key.problem(),
+            perf: self.perf.clone(),
+            c: self.c.clone(),
+            num_cores: key.cores,
+            freq_ghz,
+        }
+    }
+}
+
+/// 128-bit content fingerprint of an operand tile (two independent
+/// FNV-1a-style lanes over the FP32 bit patterns). Used purely as a
+/// cache key for *numeric simulation inputs* — not adversarial data —
+/// where a 2⁻¹²⁸-ish collision probability is negligible next to the
+/// simulator's own modeling error budget.
+pub fn fingerprint(data: &[f32]) -> [u64; 2] {
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h0: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut h1: u64 = 0x9e37_79b9_7f4a_7c15;
+    for &v in data {
+        let x = v.to_bits() as u64;
+        h0 = (h0 ^ x).wrapping_mul(PRIME);
+        h1 = (h1.rotate_left(23) ^ (x.wrapping_mul(0x2545_F491_4F6C_DD1D))).wrapping_mul(PRIME);
+    }
+    [h0 ^ (data.len() as u64), h1]
+}
+
+/// Key for a shared quantized-B tile: content fingerprint + the
+/// quantization parameters that determine the MX bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct BTileKey {
+    fp: [u64; 2],
+    k: usize,
+    n: usize,
+    fmt: ElemFormat,
+    block_size: usize,
+}
+
+/// Key for a memoized pass: the plan plus both operand fingerprints.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct PassKey {
+    plan: PlanKey,
+    a: [u64; 2],
+    b: [u64; 2],
+}
+
+/// Hit/miss counters of one cache instance (coarse, for benches and
+/// the warm-vs-cold tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub b_tile_hits: u64,
+    pub b_tile_misses: u64,
+    pub pass_hits: u64,
+    pub pass_misses: u64,
+}
+
+// Simple capacity bounds (the working sets — a handful of tile
+// shapes, one B tile per layer column tile, a few hundred unique
+// passes — sit far below these; the caps only bound pathological
+// churn). On overflow an arbitrary half of the map is evicted rather
+// than the whole map, so a steady stream of one-shot entries cannot
+// wipe out the long-lived reusable ones all at once.
+const PLANS_CAP: usize = 512;
+const B_TILES_CAP: usize = 512;
+const PASSES_CAP: usize = 4096;
+
+/// Evict an arbitrary half of `map` (HashMap order) once it reaches
+/// `cap`.
+fn evict_half<K: Clone + std::hash::Hash + Eq, V>(map: &mut HashMap<K, V>, cap: usize) {
+    if map.len() >= cap {
+        let victims: Vec<K> = map.keys().take(cap / 2).cloned().collect();
+        for k in victims {
+            map.remove(&k);
+        }
+    }
+}
+
+/// The warm-path cache: compiled plans, quantized B tiles, memoized
+/// pass results. Thread-safe (shared by the scale-out worker pool);
+/// one [`PlanCache::global`] instance backs the default serving and
+/// reproduction paths so per-layer plans live across batches and
+/// requests.
+pub struct PlanCache {
+    enabled: bool,
+    plans: Mutex<HashMap<PlanKey, Arc<MmPlan>>>,
+    b_tiles: Mutex<HashMap<BTileKey, Arc<MxMatrix>>>,
+    passes: Mutex<HashMap<PassKey, Arc<PassResult>>>,
+    plan_hits: AtomicU64,
+    plan_misses: AtomicU64,
+    b_hits: AtomicU64,
+    b_misses: AtomicU64,
+    pass_hits: AtomicU64,
+    pass_misses: AtomicU64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::with_enabled(true)
+    }
+
+    /// A cache that never stores or returns anything — the
+    /// `--cold-plans` escape hatch. Plans are compiled per call, B
+    /// tiles quantized per lookup, every pass simulated. Note this
+    /// disables *cross-call* sharing only: the scale-out engine still
+    /// hoists operand building within one shard (A quantized once per
+    /// row tile, B once per column tile), so the cold path is not an
+    /// exact reproduction of the pre-plan-split per-pass staging cost —
+    /// results are bit-identical either way.
+    pub fn disabled() -> Self {
+        Self::with_enabled(false)
+    }
+
+    fn with_enabled(enabled: bool) -> Self {
+        PlanCache {
+            enabled,
+            plans: Mutex::new(HashMap::new()),
+            b_tiles: Mutex::new(HashMap::new()),
+            passes: Mutex::new(HashMap::new()),
+            plan_hits: AtomicU64::new(0),
+            plan_misses: AtomicU64::new(0),
+            b_hits: AtomicU64::new(0),
+            b_misses: AtomicU64::new(0),
+            pass_hits: AtomicU64::new(0),
+            pass_misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide cache used by the default (warm) paths.
+    pub fn global() -> &'static PlanCache {
+        static GLOBAL: LazyLock<PlanCache> = LazyLock::new(PlanCache::new);
+        &GLOBAL
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Get or compile the plan for `key`.
+    pub fn plan(&self, key: PlanKey) -> Arc<MmPlan> {
+        if !self.enabled {
+            self.plan_misses.fetch_add(1, Ordering::Relaxed);
+            return Arc::new(MmPlan::build(key));
+        }
+        if let Some(p) = self.plans.lock().unwrap().get(&key) {
+            self.plan_hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(p);
+        }
+        self.plan_misses.fetch_add(1, Ordering::Relaxed);
+        // Build outside the lock (compilation can take a while); a
+        // racing builder just produces an identical plan.
+        let built = Arc::new(MmPlan::build(key));
+        let mut plans = self.plans.lock().unwrap();
+        evict_half(&mut plans, PLANS_CAP);
+        Arc::clone(plans.entry(key).or_insert(built))
+    }
+
+    /// Get or quantize the B tile for `(b, shape)` — `bfp` must be
+    /// `fingerprint(b)`. M-split sharding and repeated requests stream
+    /// the same B (the weights), so this is quantize-once per layer.
+    pub fn quantized_b(&self, p: &MmProblem, b: &[f32], bfp: [u64; 2]) -> Arc<MxMatrix> {
+        if !self.enabled {
+            self.b_misses.fetch_add(1, Ordering::Relaxed);
+            return Arc::new(quantize_b(p, b));
+        }
+        let key = BTileKey { fp: bfp, k: p.k, n: p.n, fmt: p.fmt, block_size: p.block_size };
+        if let Some(q) = self.b_tiles.lock().unwrap().get(&key) {
+            self.b_hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(q);
+        }
+        self.b_misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(quantize_b(p, b));
+        let mut tiles = self.b_tiles.lock().unwrap();
+        evict_half(&mut tiles, B_TILES_CAP);
+        Arc::clone(tiles.entry(key).or_insert(built))
+    }
+
+    /// Look up a memoized pass result for (plan, operand fingerprints).
+    pub fn pass(&self, plan: &PlanKey, afp: [u64; 2], bfp: [u64; 2]) -> Option<Arc<PassResult>> {
+        if !self.enabled {
+            self.pass_misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let key = PassKey { plan: *plan, a: afp, b: bfp };
+        let hit = self.passes.lock().unwrap().get(&key).map(Arc::clone);
+        match &hit {
+            Some(_) => self.pass_hits.fetch_add(1, Ordering::Relaxed),
+            None => self.pass_misses.fetch_add(1, Ordering::Relaxed),
+        };
+        hit
+    }
+
+    /// Memoize a completed pass.
+    pub fn store_pass(&self, plan: &PlanKey, afp: [u64; 2], bfp: [u64; 2], run: &MmRun) {
+        if !self.enabled {
+            return;
+        }
+        let key = PassKey { plan: *plan, a: afp, b: bfp };
+        let mut passes = self.passes.lock().unwrap();
+        evict_half(&mut passes, PASSES_CAP);
+        passes
+            .entry(key)
+            .or_insert_with(|| Arc::new(PassResult { c: run.c.clone(), perf: run.perf.clone() }));
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            plan_hits: self.plan_hits.load(Ordering::Relaxed),
+            plan_misses: self.plan_misses.load(Ordering::Relaxed),
+            b_tile_hits: self.b_hits.load(Ordering::Relaxed),
+            b_tile_misses: self.b_misses.load(Ordering::Relaxed),
+            pass_hits: self.pass_hits.load(Ordering::Relaxed),
+            pass_misses: self.pass_misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Warm-path equivalent of `run_mm`: plan through `cache`, reuse
+/// quantized B tiles and memoized pass results, execute on the given
+/// (long-lived) cluster. Bit- and counter-identical to `run_mm`.
+pub fn run_mm_cached(
+    cache: &PlanCache,
+    cluster: &mut Cluster,
+    kind: KernelKind,
+    problem: MmProblem,
+    a: &[f32],
+    b: &[f32],
+) -> MmRun {
+    let key = PlanKey::new(kind, &problem, cluster.cores.len());
+    let plan = cache.plan(key);
+    let afp = fingerprint(a);
+    let bfp = fingerprint(b);
+    if let Some(hit) = cache.pass(&key, afp, bfp) {
+        return hit.to_run(&key, cluster.cfg.freq_ghz);
+    }
+    let run = match kind {
+        KernelKind::Fp32 => plan.execute(cluster, &MmOperands::Fp32 { a, b }),
+        KernelKind::Fp8ToFp32 | KernelKind::Mxfp8 => {
+            let qa = quantize_a(&problem, a);
+            let qb = cache.quantized_b(&problem, b, bfp);
+            plan.execute(cluster, &MmOperands::Mx { qa: &qa, qb: &qb })
+        }
+    };
+    cache.store_pass(&key, afp, bfp, &run);
+    run
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_mm, KernelKind, MmProblem};
+    use super::*;
+    use crate::rng::XorShift;
+    use crate::snitch::cluster::ClusterConfig;
+
+    fn small() -> (MmProblem, Vec<f32>, Vec<f32>) {
+        let p = MmProblem { m: 8, k: 64, n: 16, fmt: ElemFormat::E4M3, block_size: 32 };
+        let mut rng = XorShift::new(0x9A11);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        (p, a, b)
+    }
+
+    #[test]
+    fn cached_run_bit_and_cycle_identical_to_cold_run() {
+        let (p, a, b) = small();
+        for kind in [KernelKind::Fp32, KernelKind::Fp8ToFp32, KernelKind::Mxfp8] {
+            let cold = run_mm(kind, p, &a, &b, 4);
+            let cache = PlanCache::new();
+            let mut cluster = Cluster::new(ClusterConfig { num_cores: 4, freq_ghz: 1.0 });
+            let warm1 = run_mm_cached(&cache, &mut cluster, kind, p, &a, &b);
+            let warm2 = run_mm_cached(&cache, &mut cluster, kind, p, &a, &b);
+            for (i, ((c0, c1), c2)) in cold.c.iter().zip(&warm1.c).zip(&warm2.c).enumerate() {
+                assert_eq!(c0.to_bits(), c1.to_bits(), "{} C[{i}] cold vs warm1", kind.name());
+                assert_eq!(c1.to_bits(), c2.to_bits(), "{} C[{i}] warm1 vs warm2", kind.name());
+            }
+            assert_eq!(cold.perf.cycles, warm1.perf.cycles, "{}", kind.name());
+            assert_eq!(cold.perf.cycles, warm2.perf.cycles, "{}", kind.name());
+            assert_eq!(cold.perf.mxdotp_total(), warm2.perf.mxdotp_total());
+            let st = cache.stats();
+            assert_eq!(st.pass_hits, 1, "{}: second run must hit the pass cache", kind.name());
+            assert_eq!(st.plan_hits, 1);
+        }
+    }
+
+    #[test]
+    fn disabled_cache_never_hits() {
+        let (p, a, b) = small();
+        let cache = PlanCache::disabled();
+        let mut cluster = Cluster::new(ClusterConfig { num_cores: 4, freq_ghz: 1.0 });
+        let r1 = run_mm_cached(&cache, &mut cluster, KernelKind::Mxfp8, p, &a, &b);
+        let r2 = run_mm_cached(&cache, &mut cluster, KernelKind::Mxfp8, p, &a, &b);
+        for (c1, c2) in r1.c.iter().zip(&r2.c) {
+            assert_eq!(c1.to_bits(), c2.to_bits());
+        }
+        let st = cache.stats();
+        assert_eq!(st.pass_hits + st.plan_hits + st.b_tile_hits, 0);
+        assert_eq!(st.pass_misses, 2);
+    }
+
+    #[test]
+    fn plans_are_shared_by_shape_not_data() {
+        let (p, a, b) = small();
+        let mut rng = XorShift::new(0x0DD);
+        let a2 = rng.normal_vec(p.m * p.k, 2.0);
+        let cache = PlanCache::new();
+        let mut cluster = Cluster::new(ClusterConfig { num_cores: 4, freq_ghz: 1.0 });
+        let r1 = run_mm_cached(&cache, &mut cluster, KernelKind::Mxfp8, p, &a, &b);
+        let r2 = run_mm_cached(&cache, &mut cluster, KernelKind::Mxfp8, p, &a2, &b);
+        // different A data: plan and B tile hit, pass misses
+        let st = cache.stats();
+        assert_eq!(st.plan_hits, 1);
+        assert_eq!(st.b_tile_hits, 1);
+        assert_eq!(st.pass_hits, 0);
+        // and the second result matches its own cold run
+        let cold2 = run_mm(KernelKind::Mxfp8, p, &a2, &b, 4);
+        for (g, w) in r2.c.iter().zip(&cold2.c) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+        drop(r1);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_data_and_length() {
+        let x = vec![1.0f32, 2.0, 3.0];
+        let y = vec![1.0f32, 2.0, 3.0000002];
+        let z = vec![1.0f32, 2.0, 3.0, 0.0];
+        assert_eq!(fingerprint(&x), fingerprint(&x));
+        assert_ne!(fingerprint(&x), fingerprint(&y));
+        assert_ne!(fingerprint(&x), fingerprint(&z));
+        // -0.0 and 0.0 have different bits and must not collide
+        assert_ne!(fingerprint(&[0.0f32]), fingerprint(&[-0.0f32]));
+    }
+
+    #[test]
+    fn cycle_bound_dominates_measured_cycles() {
+        // The per-kernel worst-case bound must comfortably exceed every
+        // measured run (it guards deadlocks, not slowness).
+        let (p, a, b) = small();
+        for kind in [KernelKind::Fp32, KernelKind::Fp8ToFp32, KernelKind::Mxfp8] {
+            let run = run_mm(kind, p, &a, &b, 4);
+            let bound = cycle_bound(kind, &p, 4);
+            assert!(
+                run.perf.cycles * 2 < bound,
+                "{}: measured {} cycles vs bound {bound} — bound too tight",
+                kind.name(),
+                run.perf.cycles
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "MXFP8 kernel did not finish")]
+    fn guard_expiry_names_the_kernel() {
+        let (p, a, b) = small();
+        let plan = MmPlan::build(PlanKey::new(KernelKind::Mxfp8, &p, 4));
+        // A sabotaged plan with a 1-cycle bound must trip the guard and
+        // name the offending kernel.
+        let hobbled = MmPlan { cycle_bound: 1, ..plan };
+        let (qa, qb) = hobbled.quantize(&a, &b);
+        let mut cluster = Cluster::new(ClusterConfig { num_cores: 4, freq_ghz: 1.0 });
+        hobbled.execute(&mut cluster, &MmOperands::Mx { qa: &qa, qb: &qb });
+    }
+}

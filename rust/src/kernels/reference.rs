@@ -9,15 +9,40 @@
 //! failure, not a tolerance.
 
 use super::MmProblem;
-use crate::dotp::exact::mxdotp_exact;
-use crate::formats::{MxMatrix, ScaleAxis};
+use crate::dotp::{Fp8Format, MxDotpUnit};
+use crate::formats::{ElemFormat, MxMatrix, ScaleAxis};
 
-/// Stage-identical quantization of the A (row-axis) and B (col-axis)
-/// operands — shared by the MX kernel stagers and these references.
+/// Stage-identical quantization of the A operand (row-axis blocks
+/// along K). The single definition shared by the kernel plans, the
+/// scale-out engine's tile reuse and these references — so a tile
+/// quantized once and executed many times is bit-identical to one
+/// quantized inline.
+pub fn quantize_a(p: &MmProblem, a: &[f32]) -> MxMatrix {
+    MxMatrix::quantize(a, p.m, p.k, p.fmt, p.block_size, ScaleAxis::Row)
+}
+
+/// Stage-identical quantization of the B operand (col-axis blocks
+/// along K); see [`quantize_a`].
+pub fn quantize_b(p: &MmProblem, b: &[f32]) -> MxMatrix {
+    MxMatrix::quantize(b, p.k, p.n, p.fmt, p.block_size, ScaleAxis::Col)
+}
+
+/// Stage-identical quantization of both operands.
 pub fn quantize_operands(p: &MmProblem, a: &[f32], b: &[f32]) -> (MxMatrix, MxMatrix) {
-    let qa = MxMatrix::quantize(a, p.m, p.k, p.fmt, p.block_size, ScaleAxis::Row);
-    let qb = MxMatrix::quantize(b, p.k, p.n, p.fmt, p.block_size, ScaleAxis::Col);
-    (qa, qb)
+    (quantize_a(p, a), quantize_b(p, b))
+}
+
+/// The architectural `mxdotp` unit for an element format (the same
+/// special-value semantics — NaN poisoning, E5M2 infinity propagation —
+/// the simulated FPU executes, so references agree bit-for-bit even on
+/// NaN/Inf operands).
+fn unit_for(fmt: ElemFormat) -> MxDotpUnit {
+    let fmt8 = match fmt {
+        ElemFormat::E4M3 => Fp8Format::E4m3,
+        ElemFormat::E5M2 => Fp8Format::E5m2,
+        other => panic!("MXFP8 kernel needs an FP8 format, got {other}"),
+    };
+    MxDotpUnit::new(fmt8)
 }
 
 /// FP32 kernel reference: 2-way SIMD `vfmac.s` lane split (even k in
@@ -81,10 +106,18 @@ fn e8m0_to_f32(byte: u8) -> f32 {
 }
 
 /// MXFP8 kernel reference: one `mxdotp` (exact sum, single RNE round)
-/// per 8 elements, accumulated in instruction order along K.
+/// per 8 elements, accumulated in instruction order along K, executed
+/// through the same architectural unit as the simulated FPU (so
+/// NaN/Inf special semantics match bit-for-bit too).
 pub fn mxfp8_hw_ref(p: &MmProblem, a: &[f32], b: &[f32]) -> Vec<f32> {
     let (qa, qb) = quantize_operands(p, a, b);
-    let spec = p.fmt.float_spec().expect("MXFP8 kernel needs an FP8 format");
+    mxfp8_hw_ref_quantized(p, &qa, &qb)
+}
+
+/// [`mxfp8_hw_ref`] on pre-quantized operands (the plan layer's
+/// reusable tile buffers).
+pub fn mxfp8_hw_ref_quantized(p: &MmProblem, qa: &MxMatrix, qb: &MxMatrix) -> Vec<f32> {
+    let mut unit = unit_for(p.fmt);
     let per_block = p.block_size / 8;
     let mut c = vec![0.0f32; p.m * p.n];
     for m in 0..p.m {
@@ -100,7 +133,7 @@ pub fn mxfp8_hw_ref(p: &MmProblem, a: &[f32], b: &[f32]) -> Vec<f32> {
                 }
                 let xa = qa.scale(m, kb).0;
                 let xb = qb.scale(n, kb).0;
-                acc = mxdotp_exact(spec, &pa, &pb, xa, xb, acc);
+                acc = unit.execute_unpacked(&pa, &pb, xa, xb, acc);
             }
             c[m * p.n + n] = acc;
         }

@@ -17,13 +17,18 @@
 //!   32-bank shared L1 SPM behind a logarithmic interconnect, DMA.
 //! * [`kernels`] — the three matrix-multiplication kernels of Fig. 2
 //!   (FP32, FP8-to-FP32 software MX, MXFP8 hardware MX) as instruction-
-//!   stream builders for the simulator.
+//!   stream builders, split into a compile-once plan layer
+//!   (`kernels::plan`: shape-keyed SPM layouts + shared per-core
+//!   programs + worst-case cycle bounds, with a warm `PlanCache` for
+//!   plans, quantized B tiles and memoized passes) and an
+//!   execute-many half that runs against reset, long-lived clusters.
 //! * [`energy`] — GE-level area accounting and per-op energy models
 //!   calibrated to the paper's 12 nm FinFET implementation numbers.
 //! * [`scaleout`] — the multi-cluster scale-out engine: MX-block-aware
-//!   tile partitioning, a pool of N independent cluster simulators on
-//!   OS threads with work stealing, and the fabric aggregation model
-//!   (wall-clock = max over clusters, energy = sum).
+//!   tile partitioning, a pool of N worker threads each owning one
+//!   persistent cluster simulator (work stealing included), warm plan
+//!   reuse across passes/shards/requests, and the fabric aggregation
+//!   model (wall-clock = max over clusters, energy = sum).
 //! * [`runtime`] — PJRT CPU runtime loading the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); Python is never on this path.
 //! * [`coordinator`] — the serving layer: request queue, dynamic

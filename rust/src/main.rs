@@ -64,7 +64,7 @@ fn main() -> Result<()> {
                 data.iter().zip(&dq).map(|(a, b)| (a - b).abs()).sum::<f32>() / data.len() as f32;
             println!("  mean |dequant - original| = {err:.5}");
         }
-        Command::Simulate { kernel, m, k, n, cores, clusters, fmt, seed } => {
+        Command::Simulate { kernel, m, k, n, cores, clusters, fmt, seed, cold_plans } => {
             let p = MmProblem { m, k, n, fmt, block_size: 32 };
             let mut rng = XorShift::new(seed);
             let a = rng.normal_vec(m * k, 1.0);
@@ -76,6 +76,7 @@ fn main() -> Result<()> {
                 let scfg = ScaleoutConfig {
                     clusters,
                     cores_per_cluster: cores,
+                    cold_plans,
                     ..ScaleoutConfig::default()
                 };
                 let run = sharded_mm(&scfg, p, &a, &b);
@@ -104,7 +105,7 @@ fn main() -> Result<()> {
                 println!("{}", report::render_run_detailed(&run));
             }
         }
-        Command::Reproduce { what, cores, clusters, fmt } => {
+        Command::Reproduce { what, cores, clusters, fmt, cold_plans } => {
             if what == "fig3" || what == "all" {
                 println!("{}", report::render_fig3());
             }
@@ -131,17 +132,17 @@ fn main() -> Result<()> {
                     "simulating the DeiT-Tiny matmuls on {sweep:?} clusters \
                      (cycle-accurate; this takes a while)..."
                 );
-                let points = report::scaleout_scaling(&cfg, &sweep, 42);
+                let points = report::scaleout_scaling(&cfg, &sweep, 42, cold_plans);
                 println!("{}", report::render_scaling(&points, &cfg));
             }
         }
-        Command::Serve { requests, batch, clusters, artifacts } => {
+        Command::Serve { requests, batch, clusters, artifacts, cold_plans } => {
             let cfg = DeitConfig::default();
             let params = generate_params(&cfg, 42);
             println!("calibrating MXFP8 utilization on the cycle-accurate cluster...");
-            let util = calibrate_util(&cfg, snitch::NUM_CORES, 1);
+            let util = calibrate_util(&cfg, snitch::NUM_CORES, 1, cold_plans);
             println!("  calibrated utilization: {:.1} %", util * 100.0);
-            let scfg = ScaleoutConfig::with_clusters(clusters);
+            let scfg = ScaleoutConfig { cold_plans, ..ScaleoutConfig::with_clusters(clusters) };
             let eff = if clusters > 1 {
                 let e = measure_parallel_efficiency(&scfg, 2);
                 println!(

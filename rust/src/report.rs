@@ -314,12 +314,24 @@ pub struct ScalingPoint {
 /// layer by layer) on each fabric size in `clusters_list`, through the
 /// cycle-accurate scale-out engine. Inputs are the same for every
 /// fabric size, so results are bit-comparable across the sweep.
-pub fn scaleout_scaling(cfg: &DeitConfig, clusters_list: &[usize], seed: u64) -> Vec<ScalingPoint> {
+///
+/// With warm plans (`cold_plans = false`, the default path) the sweep
+/// reuses compiled programs, quantized B tiles and memoized passes
+/// across fabric sizes — under M-split every fabric size executes the
+/// *same* per-cluster passes, just distributed differently, so the
+/// 2/4/8-cluster points cost almost no additional host time. Simulated
+/// cycles/energy are bit-identical either way.
+pub fn scaleout_scaling(
+    cfg: &DeitConfig,
+    clusters_list: &[usize],
+    seed: u64,
+    cold_plans: bool,
+) -> Vec<ScalingPoint> {
     assert!(!clusters_list.is_empty());
     let layers = cfg.mx_matmuls();
     let mut points: Vec<ScalingPoint> = Vec::with_capacity(clusters_list.len());
     for &clusters in clusters_list {
-        let scfg = ScaleoutConfig::with_clusters(clusters);
+        let scfg = ScaleoutConfig { cold_plans, ..ScaleoutConfig::with_clusters(clusters) };
         let mut wall = 0u64;
         let mut total = 0u64;
         let mut energy = 0.0f64;
@@ -441,7 +453,7 @@ mod tests {
         // A reduced DeiT-shaped workload keeps the sweep fast while
         // exercising the full scale-out path end to end.
         let cfg = DeitConfig { seq: 16, ..DeitConfig::default() };
-        let pts = scaleout_scaling(&cfg, &[1, 2], 5);
+        let pts = scaleout_scaling(&cfg, &[1, 2], 5, false);
         assert_eq!(pts.len(), 2);
         assert!((pts[0].speedup - 1.0).abs() < 1e-12);
         assert!(pts[1].speedup > 1.2, "2 clusters only {}x", pts[1].speedup);

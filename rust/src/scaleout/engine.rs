@@ -6,13 +6,26 @@
 //! 147 KiB of FP8), so the engine tiles each shard into passes of
 //! `tile_m × K × tile_n` that satisfy every MXFP8 staging constraint
 //! (rows a multiple of the core count, columns a multiple of 8, the
-//! `kernels::layout` footprint within SPM) and runs each pass through
-//! `kernels::run_mm` on a freshly staged cluster — the same
-//! stage-then-run idiom the single-cluster paths use. Crucially K is
-//! **never** cut here: a pass streams the shard's whole K range, so
-//! each output element's MXDOTP accumulation chain is fused exactly as
-//! in a single-cluster run and results stay bit-identical under any
-//! tiling.
+//! `kernels::layout` footprint within SPM). Crucially K is **never**
+//! cut here: a pass streams the shard's whole K range, so each output
+//! element's MXDOTP accumulation chain is fused exactly as in a
+//! single-cluster run and results stay bit-identical under any tiling.
+//!
+//! Plan/execute split (DESIGN.md §10): the shard's tile schedule is
+//! planned once, then passes execute against the **worker's one
+//! long-lived cluster** (reset between passes — no SPM reallocation)
+//! through the [`PlanCache`]:
+//!
+//! * the per-tile-shape instruction programs and SPM layout are
+//!   compiled once and shared across passes, shards and requests;
+//! * each B column tile is quantized **once per distinct content** —
+//!   under M-split every shard of a GEMM streams the same B (the
+//!   weights), so this is quantize-once per layer;
+//! * each A row tile is quantized once and reused across the row's
+//!   column passes;
+//! * a pass whose (plan, operand bits) were already simulated returns
+//!   its memoized C slab and counters — the simulator is deterministic,
+//!   so this changes host wall-clock only, never results.
 //!
 //! Cycle accounting: a cluster's cost for a shard is the *sum* of its
 //! pass cycles (one cluster executes passes back to back); counters
@@ -22,8 +35,10 @@
 use super::partition::Shard;
 use crate::energy::EnergyModel;
 use crate::kernels::layout::mx_staged_footprint;
-use crate::kernels::{run_mm, KernelKind, MmProblem};
-use crate::snitch::cluster::PerfCounters;
+use crate::kernels::plan::{fingerprint, MmOperands, PlanCache, PlanKey};
+use crate::kernels::reference::quantize_a;
+use crate::kernels::{KernelKind, MmProblem, MmRun};
+use crate::snitch::cluster::{Cluster, ClusterConfig, PerfCounters};
 use crate::snitch::SPM_BYTES;
 
 /// One simulated Snitch cluster executing shards sequentially.
@@ -68,8 +83,14 @@ pub struct ShardOutput {
 }
 
 impl ClusterEngine {
+    /// The long-lived cluster a worker owns for this engine: allocated
+    /// once, reset per pass.
+    pub fn new_cluster(&self) -> Cluster {
+        Cluster::new(ClusterConfig { num_cores: self.cores, freq_ghz: self.freq_ghz })
+    }
+
     /// Footprint of a candidate `m × k × n` pass on this cluster —
-    /// the exact staged bound shared with `mxfp8::stage_mx` via
+    /// the exact staged bound shared with `mxfp8` staging via
     /// [`mx_staged_footprint`], so the planner can never accept a tile
     /// the stager would reject.
     fn tile_footprint(&self, m: usize, k: usize, n: usize, template: MmProblem) -> usize {
@@ -102,14 +123,21 @@ impl ClusterEngine {
         (tile_m, tile_n)
     }
 
-    /// Run one shard to completion on this (simulated) cluster.
-    pub fn run_shard(&self, job: &ShardJob<'_>) -> ShardOutput {
+    /// Run one shard to completion on this engine's long-lived
+    /// `cluster`, planning through `cache`.
+    pub fn run_shard(
+        &self,
+        job: &ShardJob<'_>,
+        cluster: &mut Cluster,
+        cache: &PlanCache,
+    ) -> ShardOutput {
         let p = job.problem;
         let rows = job.shard.rows.clone();
         let kr = job.shard.k_range.clone();
         let kc = kr.len();
         assert!(kc > 0 && !rows.is_empty(), "empty shard");
         assert_eq!(kc % p.block_size, 0);
+        assert_eq!(cluster.cores.len(), self.cores, "worker cluster shape mismatch");
         let n = p.n;
         let (tile_m, tile_n) = self.plan_tiles(kc, n, p);
         let mut c = vec![0.0f32; rows.len() * n];
@@ -117,6 +145,34 @@ impl ClusterEngine {
         let mut passes = 0u32;
         let mut energy_uj = 0.0;
         let em = EnergyModel;
+
+        // Column tiles: build each padded B tile once per shard and let
+        // the cache share the quantized bytes across row tiles, sibling
+        // shards (M-split streams one B) and future requests.
+        struct ColTile {
+            n0: usize,
+            w: usize,
+            w8: usize,
+            bfp: [u64; 2],
+            qb: std::sync::Arc<crate::formats::MxMatrix>,
+        }
+        let mut cols: Vec<ColTile> = Vec::with_capacity(n.div_ceil(tile_n));
+        let mut n0 = 0;
+        while n0 < n {
+            let w = (n - n0).min(tile_n);
+            // Pad the column tile to an 8-multiple with zero cols.
+            let w8 = w.div_ceil(8) * 8;
+            let mut b_tile = vec![0.0f32; kc * w8];
+            for kk in 0..kc {
+                let src = (kr.start + kk) * n + n0;
+                b_tile[kk * w8..kk * w8 + w].copy_from_slice(&job.b[src..src + w]);
+            }
+            let bfp = fingerprint(&b_tile);
+            let sub = MmProblem { m: 0, k: kc, n: w8, fmt: p.fmt, block_size: p.block_size };
+            let qb = cache.quantized_b(&sub, &b_tile, bfp);
+            cols.push(ColTile { n0, w, w8, bfp, qb });
+            n0 += w;
+        }
 
         let mut m0 = rows.start;
         while m0 < rows.end {
@@ -129,26 +185,34 @@ impl ClusterEngine {
                 let src = (m0 + r) * p.k + kr.start;
                 a_tile[r * kc..(r + 1) * kc].copy_from_slice(&job.a[src..src + kc]);
             }
-            let mut n0 = 0;
-            while n0 < n {
-                let w = (n - n0).min(tile_n);
-                // Pad the column tile to an 8-multiple with zero cols.
-                let w8 = w.div_ceil(8) * 8;
-                let mut b_tile = vec![0.0f32; kc * w8];
-                for kk in 0..kc {
-                    let src = (kr.start + kk) * n + n0;
-                    b_tile[kk * w8..kk * w8 + w].copy_from_slice(&job.b[src..src + w]);
-                }
-                let sub = MmProblem { m: mpad, k: kc, n: w8, fmt: p.fmt, block_size: p.block_size };
-                let run = run_mm(KernelKind::Mxfp8, sub, &a_tile, &b_tile, self.cores);
+            let afp = fingerprint(&a_tile);
+            // Quantize the A row tile once; reused by every column pass
+            // of this row tile (built lazily: an all-cached row never
+            // quantizes at all).
+            let mut qa = None;
+            for col in &cols {
+                let sub =
+                    MmProblem { m: mpad, k: kc, n: col.w8, fmt: p.fmt, block_size: p.block_size };
+                let key = PlanKey::new(KernelKind::Mxfp8, &sub, self.cores);
+                let run: MmRun = match cache.pass(&key, afp, col.bfp) {
+                    Some(hit) => hit.to_run(&key, self.freq_ghz),
+                    None => {
+                        let plan = cache.plan(key);
+                        let qa_tile = qa.get_or_insert_with(|| quantize_a(&sub, &a_tile));
+                        let run = plan
+                            .execute(cluster, &MmOperands::Mx { qa: &*qa_tile, qb: &*col.qb });
+                        cache.store_pass(&key, afp, col.bfp, &run);
+                        run
+                    }
+                };
                 energy_uj += em.power(&run.perf, self.freq_ghz, true).energy_uj;
                 perf.merge(&run.perf);
                 passes += 1;
                 for r in 0..real_m {
-                    let dst = (m0 - rows.start + r) * n + n0;
-                    c[dst..dst + w].copy_from_slice(&run.c[r * w8..r * w8 + w]);
+                    let dst = (m0 - rows.start + r) * n + col.n0;
+                    c[dst..dst + col.w]
+                        .copy_from_slice(&run.c[r * col.w8..r * col.w8 + col.w]);
                 }
-                n0 += w;
             }
             m0 += real_m;
         }
@@ -202,22 +266,49 @@ mod tests {
         let mut rng = XorShift::new(0x5CA1E);
         let a = rng.normal_vec(p.m * p.k, 1.0);
         let b = rng.normal_vec(p.k * p.n, 1.0);
-        let shard = Shard { id: 0, rows: 0..p.m, k_chunk: 0, k_range: 0..p.k };
+        let shard = crate::scaleout::Shard { id: 0, rows: 0..p.m, k_chunk: 0, k_range: 0..p.k };
         let mut e = engine();
         e.max_tile_m = 8;
         e.max_tile_n = 8;
-        let out = e.run_shard(&ShardJob { shard: &shard, problem: p, a: &a, b: &b });
+        let mut cluster = e.new_cluster();
+        let cache = PlanCache::new();
+        let job = ShardJob { shard: &shard, problem: p, a: &a, b: &b };
+        let out = e.run_shard(&job, &mut cluster, &cache);
         assert!(out.passes >= 6, "expected multiple passes, got {}", out.passes);
         let want = mxfp8_hw_ref(&p, &a, &b);
-        for i in 0..want.len() {
-            assert_eq!(
-                out.c[i].to_bits(),
-                want[i].to_bits(),
-                "C[{i}]: {} vs {}",
-                out.c[i],
-                want[i]
-            );
+        for (i, (got, w)) in out.c.iter().zip(&want).enumerate() {
+            assert_eq!(got.to_bits(), w.to_bits(), "C[{i}]: {got} vs {w}");
         }
         assert!(out.perf.cycles > 0 && out.energy_uj > 0.0);
+
+        // Warm rerun on the same long-lived cluster: every pass is
+        // memoized, results and counters identical.
+        let warm = e.run_shard(&job, &mut cluster, &cache);
+        assert_eq!(warm.passes, out.passes);
+        assert_eq!(warm.perf.cycles, out.perf.cycles);
+        for (g, w) in warm.c.iter().zip(&out.c) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+        let st = cache.stats();
+        assert_eq!(st.pass_hits as u32, out.passes, "warm rerun must be fully memoized");
+    }
+
+    #[test]
+    fn cold_cache_matches_warm_cache_bitwise() {
+        let p = MmProblem { m: 16, k: 96, n: 16, fmt: ElemFormat::E4M3, block_size: 32 };
+        let mut rng = XorShift::new(0xC01D);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 0.5);
+        let shard = crate::scaleout::Shard { id: 0, rows: 0..p.m, k_chunk: 0, k_range: 0..p.k };
+        let e = engine();
+        let job = ShardJob { shard: &shard, problem: p, a: &a, b: &b };
+        let mut cl1 = e.new_cluster();
+        let cold = e.run_shard(&job, &mut cl1, &PlanCache::disabled());
+        let mut cl2 = e.new_cluster();
+        let warm = e.run_shard(&job, &mut cl2, &PlanCache::new());
+        assert_eq!(cold.perf.cycles, warm.perf.cycles);
+        for (g, w) in warm.c.iter().zip(&cold.c) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
     }
 }

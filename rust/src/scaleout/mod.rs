@@ -11,7 +11,11 @@
 //!   boundaries, with bit-neutral zero padding;
 //! * [`engine`] — one cluster's executor: tiles a shard into L1-sized
 //!   passes (K never cut, so accumulation chains stay fused) and runs
-//!   each pass on a freshly staged `snitch::Cluster`;
+//!   each pass on the worker's one long-lived `snitch::Cluster`
+//!   (reset between passes), planning through the shared
+//!   `kernels::plan::PlanCache` — programs compiled once per tile
+//!   shape, B tiles quantized once per content, repeated passes
+//!   memoized (DESIGN.md §10);
 //! * [`pool`] — N worker threads with per-cluster deques and work
 //!   stealing; simulated clusters are embarrassingly parallel on the
 //!   host;
@@ -33,6 +37,7 @@ pub use engine::{ClusterEngine, ShardJob, ShardOutput};
 pub use partition::{Shard, SplitStrategy};
 pub use pool::{ClusterPool, ClusterStats};
 
+pub use crate::kernels::plan::PlanCache;
 use crate::kernels::MmProblem;
 use crate::rng::XorShift;
 use crate::snitch::NUM_CORES;
@@ -51,6 +56,12 @@ pub struct ScaleoutConfig {
     /// Per-pass tile bounds (rows / cols of C staged at once).
     pub max_tile_m: usize,
     pub max_tile_n: usize,
+    /// Escape hatch (`--cold-plans`): bypass the process-wide plan
+    /// cache — compile plans, quantize tiles and simulate every pass
+    /// from scratch (no cross-call sharing; within-shard operand
+    /// hoisting still applies). Results are bit-identical either way;
+    /// only host wall-clock changes.
+    pub cold_plans: bool,
 }
 
 impl Default for ScaleoutConfig {
@@ -62,6 +73,7 @@ impl Default for ScaleoutConfig {
             strategy: SplitStrategy::MSplit,
             max_tile_m: 64,
             max_tile_n: 64,
+            cold_plans: false,
         }
     }
 }
@@ -141,7 +153,27 @@ impl ShardedRun {
 ///
 /// `a` is row-major `m × k`, `b` row-major `k × n`; any shape is
 /// accepted (padding handled internally, result cropped to `m × n`).
+///
+/// Plans warm through the process-wide [`PlanCache::global`] (so
+/// per-layer plans and quantized weights live across batches and
+/// requests) unless `cfg.cold_plans` asks for the from-scratch path.
 pub fn sharded_mm(cfg: &ScaleoutConfig, problem: MmProblem, a: &[f32], b: &[f32]) -> ShardedRun {
+    if cfg.cold_plans {
+        sharded_mm_with_cache(cfg, problem, a, b, &PlanCache::disabled())
+    } else {
+        sharded_mm_with_cache(cfg, problem, a, b, PlanCache::global())
+    }
+}
+
+/// [`sharded_mm`] against an explicit plan cache (the warm-vs-cold
+/// tests and benches own their cache to measure hit rates).
+pub fn sharded_mm_with_cache(
+    cfg: &ScaleoutConfig,
+    problem: MmProblem,
+    a: &[f32],
+    b: &[f32],
+    cache: &PlanCache,
+) -> ShardedRun {
     assert!(problem.m > 0 && problem.k > 0 && problem.n > 0, "degenerate GEMM");
     let (pp, a_pad, b_pad) = partition::pad_k(&problem, a, b);
     let shards = partition::make_shards(&pp, cfg.strategy, cfg.clusters, cfg.cores_per_cluster);
@@ -157,7 +189,7 @@ pub fn sharded_mm(cfg: &ScaleoutConfig, problem: MmProblem, a: &[f32], b: &[f32]
         max_tile_n: cfg.max_tile_n,
     };
     let n_shards = jobs.len();
-    let (mut outputs, stats) = pool.execute(jobs);
+    let (mut outputs, stats) = pool.execute(jobs, cache);
 
     // Deterministic combine: ascending K chunk, then row range. For
     // MSplit each row appears once; for MkSplit chunk 0 initializes and
@@ -252,8 +284,8 @@ mod tests {
         let sharded = sharded_mm(&ScaleoutConfig::default(), p, &a, &b);
         let direct = run_mm(KernelKind::Mxfp8, p, &a, &b, NUM_CORES);
         assert_eq!(sharded.c.len(), direct.c.len());
-        for i in 0..direct.c.len() {
-            assert_eq!(sharded.c[i].to_bits(), direct.c[i].to_bits(), "C[{i}]");
+        for (i, (s, d)) in sharded.c.iter().zip(&direct.c).enumerate() {
+            assert_eq!(s.to_bits(), d.to_bits(), "C[{i}]");
         }
         assert_eq!(sharded.clusters.len(), 1);
         assert!(sharded.wall_cycles > 0);
@@ -267,8 +299,8 @@ mod tests {
         let two = sharded_mm(&ScaleoutConfig::with_clusters(2), p, &a, &b);
         assert_eq!(two.clusters.len(), 2);
         assert_eq!(two.shards, 2);
-        for i in 0..one.c.len() {
-            assert_eq!(two.c[i].to_bits(), one.c[i].to_bits(), "C[{i}]");
+        for (i, (t, o)) in two.c.iter().zip(&one.c).enumerate() {
+            assert_eq!(t.to_bits(), o.to_bits(), "C[{i}]");
         }
         assert!(two.wall_cycles < one.wall_cycles, "{} !< {}", two.wall_cycles, one.wall_cycles);
         // both clusters actually ran

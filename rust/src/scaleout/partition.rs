@@ -160,7 +160,7 @@ mod tests {
         assert_eq!(pp.k, 64);
         assert_eq!(ap.len(), 3 * 64);
         // original data preserved, tail zeroed
-        assert_eq!(ap[1 * 64 + 39], a[1 * 40 + 39]);
+        assert_eq!(ap[64 + 39], a[40 + 39]);
         assert!(ap[64 + 40..2 * 64].iter().all(|&v| v == 0.0));
         assert_eq!(bp[39 * 2 + 1], b[39 * 2 + 1]);
         assert!(bp[40 * 2..].iter().all(|&v| v == 0.0));

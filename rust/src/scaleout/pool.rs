@@ -2,21 +2,33 @@
 //! N OS worker threads with work stealing.
 //!
 //! Each cycle-accurate cluster simulation is CPU-bound and shares
-//! nothing with its siblings (every pass stages its own SPM), so the
-//! natural host mapping is one `std::thread` per simulated cluster.
-//! Shards are dealt round-robin into per-cluster deques; a worker pops
-//! from the *front* of its own deque and, when empty, steals from the
-//! *back* of a victim's — the classic split so owner and thief contend
-//! on opposite ends. Stealing is what keeps the wall-clock model
-//! (`max` over per-cluster busy cycles) near `total / N` when shard
-//! costs are skewed (e.g. a padded tail shard or MkSplit chunks of
-//! different K length).
+//! nothing mutable with its siblings, so the natural host mapping is
+//! one `std::thread` per simulated cluster. Shards are dealt
+//! round-robin into per-worker deques; a worker pops from the *front*
+//! of its own deque and, when empty, steals from the *back* of a
+//! victim's — the classic split so owner and thief contend on opposite
+//! ends.
 //!
-//! Determinism: shard *results* are independent of which cluster runs
-//! them (the engine stages each pass from scratch), so work stealing
-//! affects the cycle distribution but never the numerics.
+//! **Host scheduling vs simulated accounting.** Which OS thread
+//! computes a shard is a host-side load-balancing detail (and with the
+//! plan cache's memoized passes a shard can complete in microseconds,
+//! making host races routine). The *simulated* fabric assignment is
+//! therefore computed deterministically after execution: shards in id
+//! order are placed onto the simulated cluster with the least
+//! accumulated busy cycles (greedy least-busy — round-robin for
+//! uniform shards, LPT-style rebalancing for skewed ones, exactly the
+//! load balance work stealing is meant to model). Results *and*
+//! per-cluster cycle accounting are thus independent of host thread
+//! timing.
+//!
+//! Plan/execute split (DESIGN.md §10): each worker owns **one
+//! long-lived cluster** for its whole lifetime — allocated before the
+//! first shard, reset (not reallocated) between passes — and all
+//! workers share one [`PlanCache`] so compiled programs and quantized
+//! B tiles are built once per fabric, not once per pass.
 
 use super::engine::{ClusterEngine, ShardJob, ShardOutput};
+use crate::kernels::plan::PlanCache;
 use std::collections::VecDeque;
 use std::sync::Mutex;
 
@@ -30,11 +42,12 @@ pub struct ClusterPool {
     pub max_tile_n: usize,
 }
 
-/// Per-cluster roll-up after a pool run.
+/// Per-cluster roll-up after a pool run. Assignment is the
+/// deterministic least-busy placement described in the module docs.
 #[derive(Clone, Debug, Default)]
 pub struct ClusterStats {
     pub id: usize,
-    /// Shards this cluster executed (work stealing included).
+    /// Shards assigned to this simulated cluster.
     pub shards: usize,
     /// L1-sized passes across those shards.
     pub passes: u32,
@@ -63,17 +76,21 @@ fn pop_or_steal<'a, 'j>(
 }
 
 impl ClusterPool {
-    /// Execute all jobs; returns every shard's output plus per-cluster
-    /// stats (sorted by cluster id). Blocks until the fleet drains.
-    pub fn execute<'j>(&self, jobs: Vec<ShardJob<'j>>) -> (Vec<ShardOutput>, Vec<ClusterStats>) {
+    /// Execute all jobs, planning through the shared `cache`; returns
+    /// every shard's output plus per-cluster stats (sorted by cluster
+    /// id). Blocks until the fleet drains.
+    pub fn execute<'j>(
+        &self,
+        jobs: Vec<ShardJob<'j>>,
+        cache: &PlanCache,
+    ) -> (Vec<ShardOutput>, Vec<ClusterStats>) {
         assert!(self.clusters > 0);
         let queues: Vec<Mutex<VecDeque<ShardJob<'j>>>> =
             (0..self.clusters).map(|_| Mutex::new(VecDeque::new())).collect();
         for (i, job) in jobs.into_iter().enumerate() {
             queues[i % self.clusters].lock().unwrap().push_back(job);
         }
-        let mut outputs = Vec::new();
-        let mut stats = Vec::new();
+        let mut outputs: Vec<ShardOutput> = Vec::new();
         std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(self.clusters);
             for id in 0..self.clusters {
@@ -86,35 +103,52 @@ impl ClusterPool {
                     max_tile_n: self.max_tile_n,
                 };
                 handles.push(s.spawn(move || {
+                    // One persistent cluster per worker for its whole
+                    // lifetime; reset (not reallocated) between passes.
+                    let mut cluster = engine.new_cluster();
                     let mut outs: Vec<ShardOutput> = Vec::new();
-                    let mut st = ClusterStats { id, ..ClusterStats::default() };
                     while let Some(job) = pop_or_steal(queues, id) {
-                        let out = engine.run_shard(&job);
-                        st.shards += 1;
-                        st.passes += out.passes;
-                        st.cycles += out.perf.cycles;
-                        st.mxdotp += out.perf.mxdotp_total();
-                        st.energy_uj += out.energy_uj;
-                        outs.push(out);
+                        outs.push(engine.run_shard(&job, &mut cluster, cache));
                     }
-                    (outs, st)
+                    outs
                 }));
             }
             for h in handles {
-                let (outs, st) = h.join().expect("cluster worker panicked");
-                outputs.extend(outs);
-                stats.push(st);
+                outputs.extend(h.join().expect("cluster worker panicked"));
             }
         });
-        stats.sort_by_key(|s| s.id);
+
+        // Deterministic fabric assignment: shards in id order onto the
+        // least-busy simulated cluster (ties -> lowest cluster id).
+        // Host thread timing (and therefore steal patterns) cannot
+        // influence the simulated accounting.
+        outputs.sort_by_key(|o| o.shard.id);
+        let mut stats: Vec<ClusterStats> = (0..self.clusters)
+            .map(|id| ClusterStats { id, ..ClusterStats::default() })
+            .collect();
+        for o in outputs.iter_mut() {
+            let target = stats
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, st)| st.cycles)
+                .map(|(i, _)| i)
+                .unwrap();
+            o.cluster = target;
+            let st = &mut stats[target];
+            st.shards += 1;
+            st.passes += o.passes;
+            st.cycles += o.perf.cycles;
+            st.mxdotp += o.perf.mxdotp_total();
+            st.energy_uj += o.energy_uj;
+        }
         (outputs, stats)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use super::super::partition::{make_shards, SplitStrategy};
+    use super::*;
     use crate::formats::ElemFormat;
     use crate::kernels::MmProblem;
     use crate::rng::XorShift;
@@ -142,7 +176,7 @@ mod tests {
         assert_eq!(shards.len(), 5);
         let jobs: Vec<ShardJob> =
             shards.iter().map(|sh| ShardJob { shard: sh, problem: p, a: &a, b: &b }).collect();
-        let (outs, stats) = pool(3).execute(jobs);
+        let (outs, stats) = pool(3).execute(jobs, &PlanCache::new());
         assert_eq!(outs.len(), 5);
         let mut ids: Vec<usize> = outs.iter().map(|o| o.shard.id).collect();
         ids.sort_unstable();
@@ -153,6 +187,8 @@ mod tests {
             stats.iter().map(|s| s.cycles).sum::<u64>(),
             outs.iter().map(|o| o.perf.cycles).sum::<u64>()
         );
+        // the deterministic assignment spread work across all clusters
+        assert!(stats.iter().all(|s| s.shards >= 1));
     }
 
     #[test]
@@ -167,9 +203,38 @@ mod tests {
         assert_eq!(shards.len(), 1, "8 rows is a single granule");
         let jobs: Vec<ShardJob> =
             shards.iter().map(|sh| ShardJob { shard: sh, problem: p, a: &a, b: &b }).collect();
-        let (outs, stats) = pool(4).execute(jobs);
+        let (outs, stats) = pool(4).execute(jobs, &PlanCache::new());
         assert_eq!(outs.len(), 1);
         assert_eq!(stats.iter().filter(|s| s.shards > 0).count(), 1);
         assert_eq!(stats.iter().filter(|s| s.cycles == 0).count(), 3);
+    }
+
+    #[test]
+    fn fabric_assignment_is_deterministic_under_any_host_schedule() {
+        // Run the same job set repeatedly: per-cluster stats (the
+        // simulated fabric model) must be identical every time, no
+        // matter how the OS schedules the worker threads — with warm
+        // plans a shard completes in microseconds and steal races are
+        // routine.
+        let p = MmProblem { m: 48, k: 32, n: 8, fmt: ElemFormat::E4M3, block_size: 32 };
+        let mut rng = XorShift::new(11);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        let shards = make_shards(&p, SplitStrategy::MSplit, 3, NUM_CORES);
+        let cache = PlanCache::new();
+        let mut baseline: Option<Vec<(usize, u64, u32)>> = None;
+        for _ in 0..5 {
+            let jobs: Vec<ShardJob> = shards
+                .iter()
+                .map(|sh| ShardJob { shard: sh, problem: p, a: &a, b: &b })
+                .collect();
+            let (_, stats) = pool(3).execute(jobs, &cache);
+            let sig: Vec<(usize, u64, u32)> =
+                stats.iter().map(|s| (s.shards, s.cycles, s.passes)).collect();
+            match &baseline {
+                None => baseline = Some(sig),
+                Some(want) => assert_eq!(&sig, want, "fabric stats depend on host schedule"),
+            }
+        }
     }
 }

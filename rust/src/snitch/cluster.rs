@@ -147,6 +147,35 @@ impl Cluster {
         self.cores[core].load(program);
     }
 
+    /// Load a shared (plan-compiled) program onto one core without
+    /// copying the instruction stream.
+    pub fn load_program_shared(&mut self, core: usize, program: std::sync::Arc<Vec<Instr>>) {
+        self.cores[core].load_shared(program);
+    }
+
+    /// Reset the cluster to power-on state **without reallocating the
+    /// 128 KiB SPM**: zero the scratchpad, reset every core (registers,
+    /// SSRs, FP subsystem, counters), drop queued DMA transfers and DMA
+    /// counters, rewind the cycle counter. After `reset()` the cluster
+    /// is observationally identical to `Cluster::new(self.cfg)` for
+    /// everything the kernel plans touch — arbitration state, counters,
+    /// SPM image — so a long-lived cluster that executes many kernel
+    /// passes produces bit-identical results *and* cycle counts to one
+    /// allocated fresh per pass; this is what lets each scale-out
+    /// worker own a single persistent cluster. The one deliberate
+    /// exception: the DMA's *external* memory buffer is preserved
+    /// (`Dma::reset` keeps `ext_mem`), so workloads that stage via DMA
+    /// must not assume reset() clears it — the plan-executed GEMM
+    /// kernels never read it.
+    pub fn reset(&mut self) {
+        self.spm.reset();
+        for core in &mut self.cores {
+            core.reset();
+        }
+        self.dma.reset();
+        self.cycle = 0;
+    }
+
     /// All cores halted, FP drained, DMA idle?
     pub fn done(&self) -> bool {
         self.cores.iter().all(|c| c.done(self.cycle)) && self.dma.idle()
@@ -204,15 +233,23 @@ impl Cluster {
     /// aggregated counters; panics if the limit is hit (a deadlocked
     /// kernel is a bug, not a measurement).
     pub fn run(&mut self, max_cycles: u64) -> PerfCounters {
+        self.run_checked(max_cycles)
+            .unwrap_or_else(|limit| panic!("cluster did not finish within {limit} cycles"))
+    }
+
+    /// Like [`Cluster::run`], but returns `Err(max_cycles)` instead of
+    /// panicking when the guard expires, so callers that know *which*
+    /// kernel they launched (the plan layer) can attribute the failure
+    /// by name.
+    pub fn run_checked(&mut self, max_cycles: u64) -> Result<PerfCounters, u64> {
         let start = self.cycle;
         while !self.done() {
             self.step();
-            assert!(
-                self.cycle - start < max_cycles,
-                "cluster did not finish within {max_cycles} cycles"
-            );
+            if self.cycle - start >= max_cycles {
+                return Err(max_cycles);
+            }
         }
-        self.counters_since(start)
+        Ok(self.counters_since(start))
     }
 
     /// Snapshot counters, reporting `cycles` relative to `start`.
@@ -405,6 +442,42 @@ mod tests {
         }
         let perf = cl.run(100_000);
         assert!(perf.spm_conflicts > 0, "contended pattern produced no conflicts");
+    }
+
+    #[test]
+    fn reset_makes_reruns_bit_and_cycle_identical() {
+        // A long-lived cluster that is reset between passes must be
+        // indistinguishable from a freshly allocated one: same result
+        // bits, same cycle count, same conflict count.
+        let one = ElemFormat::E4M3.encode(1.0);
+        let stage = |cl: &mut Cluster| {
+            for w in 0..8usize {
+                cl.spm.write_u64(w * 8, u64::from_le_bytes([one; 8]));
+                cl.spm.write_u64(264 + w * 8, u64::from_le_bytes([one; 8]));
+                cl.spm
+                    .write_u64(528 + w * 8, crate::dotp::unit::pack_scales(&[(127, 127); 4]));
+            }
+            cl.load_program(0, ones_program(0, 264, 528, 768, 8));
+        };
+        let mut fresh = Cluster::new(ClusterConfig { num_cores: 1, freq_ghz: 1.0 });
+        stage(&mut fresh);
+        let p_fresh = fresh.run(10_000);
+        let v_fresh = read_acc_sum(&fresh.spm, 768);
+
+        let mut reused = Cluster::new(ClusterConfig { num_cores: 1, freq_ghz: 1.0 });
+        stage(&mut reused);
+        reused.run(10_000);
+        reused.reset();
+        assert_eq!(reused.cycle, 0);
+        assert_eq!(reused.spm.grants, 0);
+        assert!(reused.spm.data.iter().all(|&b| b == 0), "SPM not zeroed");
+        stage(&mut reused);
+        let p_again = reused.run(10_000);
+        assert_eq!(read_acc_sum(&reused.spm, 768), v_fresh);
+        assert_eq!(p_again.cycles, p_fresh.cycles);
+        assert_eq!(p_again.spm_conflicts, p_fresh.spm_conflicts);
+        assert_eq!(p_again.spm_grants, p_fresh.spm_grants);
+        assert_eq!(p_again.mxdotp_total(), p_fresh.mxdotp_total());
     }
 
     #[test]

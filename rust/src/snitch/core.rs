@@ -10,6 +10,7 @@ use super::isa::{csr, FpInstr, Instr, IntInstr, SsrField};
 use super::spm::Spm;
 use super::ssr::SsrConfig;
 use crate::dotp::Fp8Format;
+use std::sync::Arc;
 
 /// Taken-branch penalty (flush bubble) in cycles.
 pub const BRANCH_PENALTY: u64 = 1;
@@ -31,7 +32,9 @@ pub struct Core {
     pub id: usize,
     pub pc: usize,
     pub xregs: [i64; 32],
-    pub program: Vec<Instr>,
+    /// Shared, immutable instruction stream: compiled once by a plan
+    /// and loaded onto many cores / many runs without copying.
+    pub program: Arc<Vec<Instr>>,
     pub halted: bool,
     /// Cycle until which the front-end is squashed (branch bubble).
     stall_until: u64,
@@ -47,7 +50,7 @@ impl Core {
             id,
             pc: 0,
             xregs: [0; 32],
-            program: Vec::new(),
+            program: Arc::new(Vec::new()),
             halted: true,
             stall_until: 0,
             fpu: FpSubsystem::new(),
@@ -59,10 +62,31 @@ impl Core {
     /// Load a program and reset architectural state (regs preserved —
     /// kernels pass arguments via x10+ set by the launcher).
     pub fn load(&mut self, program: Vec<Instr>) {
+        self.load_shared(Arc::new(program));
+    }
+
+    /// Load a shared (plan-compiled) program without copying it.
+    pub fn load_shared(&mut self, program: Arc<Vec<Instr>>) {
+        self.halted = program.is_empty();
         self.program = program;
         self.pc = 0;
-        self.halted = self.program.is_empty();
         self.stall_until = 0;
+    }
+
+    /// Reset every piece of architectural and microarchitectural state
+    /// back to power-on (as after [`Core::new`]): registers, program,
+    /// counters, SSR shadow, FP subsystem. Used by `Cluster::reset` so
+    /// one long-lived cluster can execute back-to-back kernel passes
+    /// with run-to-run behavior identical to a freshly allocated one.
+    pub fn reset(&mut self) {
+        self.pc = 0;
+        self.xregs = [0; 32];
+        self.program = Arc::new(Vec::new());
+        self.halted = true;
+        self.stall_until = 0;
+        self.fpu.reset();
+        self.counters = CoreCounters::default();
+        self.ssr_shadow = [SsrConfig::default(); super::NUM_SSRS];
     }
 
     fn x(&self, r: u8) -> i64 {

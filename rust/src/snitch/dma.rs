@@ -65,6 +65,14 @@ impl Dma {
         self.queue.is_empty()
     }
 
+    /// Drop any queued transfers and zero the perf counters, keeping
+    /// the external-memory buffer (used by `Cluster::reset`).
+    pub fn reset(&mut self) {
+        self.queue.clear();
+        self.busy_cycles = 0;
+        self.bytes_moved = 0;
+    }
+
     /// Advance one cycle; commits a transfer's data on its last beat.
     pub fn step(&mut self, spm: &mut Spm) {
         let Some(t) = self.queue.front_mut() else {

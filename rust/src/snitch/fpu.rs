@@ -140,6 +140,21 @@ impl FpSubsystem {
         }
     }
 
+    /// Reset to power-on state (identical to [`FpSubsystem::new`],
+    /// reusing the existing allocations where possible): registers,
+    /// scoreboard, queue, sequencer, SSRs, format CSR, counters.
+    pub fn reset(&mut self) {
+        self.fregs = [0; 32];
+        self.ready = [0; 32];
+        self.max_ready = 0;
+        self.queue.clear();
+        self.frep = None;
+        self.ssrs = std::array::from_fn(|_| Ssr::default());
+        self.ssr_enabled = false;
+        self.unit = MxDotpUnit::default();
+        self.counters = FpuCounters::default();
+    }
+
     pub fn set_fp8_format(&mut self, fmt: Fp8Format) {
         self.unit.set_format(fmt);
     }

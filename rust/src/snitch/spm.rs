@@ -61,6 +61,21 @@ impl Spm {
         }
     }
 
+    /// Reset to power-on state without reallocating the 128 KiB data
+    /// array: zero the memory, the round-robin pointers and the
+    /// counters. After this the SPM is indistinguishable from a fresh
+    /// [`Spm::new`], so a long-lived cluster's next pass arbitrates and
+    /// computes exactly like a newly allocated one.
+    pub fn reset(&mut self) {
+        self.data.fill(0);
+        self.rr = [0; SPM_BANKS];
+        self.pending.clear();
+        self.granted.clear();
+        self.granted_mask = 0;
+        self.conflicts = 0;
+        self.grants = 0;
+    }
+
     /// Queue a request for this cycle. Returns false (and drops the
     /// request) if the address is out of range — callers assert.
     pub fn request(&mut self, requester: usize, addr: usize) {

@@ -118,10 +118,13 @@ pub struct HwCost {
 /// feed to the [`EnergyModel`].
 fn synthetic_mx_perf(flops: u64, num_cores: usize, cycles: u64) -> crate::snitch::cluster::PerfCounters {
     let mut perf = crate::snitch::cluster::PerfCounters { cycles, ..Default::default() };
-    let mut fpu = crate::snitch::fpu::FpuCounters::default();
-    fpu.mxdotp = flops / 16;
-    fpu.issued = fpu.mxdotp;
-    fpu.ssr_words = fpu.mxdotp * 9 / 8 + fpu.mxdotp / 4; // ft0/8 + ft1 + ft2/4
+    let mxdotp = flops / 16;
+    let fpu = crate::snitch::fpu::FpuCounters {
+        mxdotp,
+        issued: mxdotp,
+        ssr_words: mxdotp * 9 / 8 + mxdotp / 4, // ft0/8 + ft1 + ft2/4
+        ..Default::default()
+    };
     perf.fpu = vec![fpu; num_cores.max(1)];
     // fpu counters above are totals split across cores; rescale
     for f in perf.fpu.iter_mut() {
@@ -213,14 +216,35 @@ pub fn analytic_sharded_cost(
 /// Measure real MXFP8 utilization on a representative layer (fc1) by
 /// running the full cycle-accurate simulator once; the coordinator
 /// uses the result to calibrate [`analytic_cost`].
-pub fn calibrate_util(cfg: &DeitConfig, num_cores: usize, seed: u64) -> f64 {
+///
+/// Warm path by default: the calibration GEMM plans through the
+/// process-wide [`PlanCache`](crate::kernels::plan::PlanCache), so a
+/// server that re-calibrates per batch/restart-of-serving pays the
+/// simulation once per (shape, seed) and hits the memoized pass after
+/// that. `cold_plans` (the CLI's `--cold-plans`) forces a from-scratch
+/// run; the measured utilization is identical either way because the
+/// simulation is deterministic.
+pub fn calibrate_util(cfg: &DeitConfig, num_cores: usize, seed: u64, cold_plans: bool) -> f64 {
     // fc1 shape is the largest; use a K-truncated version to keep the
     // calibration run fast while exercising the same inner structure.
     let p = MmProblem { m: 64, k: cfg.dim, n: 64, fmt: cfg.fmt, block_size: cfg.block_size };
     let mut rng = XorShift::new(seed);
     let a = rng.normal_vec(p.m * p.k, 0.5);
     let b = rng.normal_vec(p.k * p.n, 0.02);
-    let run = run_mm(KernelKind::Mxfp8, p, &a, &b, num_cores);
+    if cold_plans {
+        return run_mm(KernelKind::Mxfp8, p, &a, &b, num_cores).utilization();
+    }
+    let mut cluster = crate::snitch::cluster::Cluster::new(
+        crate::snitch::cluster::ClusterConfig { num_cores, freq_ghz: 1.0 },
+    );
+    let run = crate::kernels::plan::run_mm_cached(
+        crate::kernels::plan::PlanCache::global(),
+        &mut cluster,
+        KernelKind::Mxfp8,
+        p,
+        &a,
+        &b,
+    );
     run.utilization()
 }
 
@@ -301,9 +325,14 @@ mod tests {
     }
 
     #[test]
-    fn calibration_runs() {
+    fn calibration_runs_and_warm_matches_cold() {
         let cfg = DeitConfig::default();
-        let u = calibrate_util(&cfg, 4, 1);
+        let u = calibrate_util(&cfg, 4, 1, true);
         assert!(u > 0.3 && u < 1.0, "util {u}");
+        // warm path is the same deterministic simulation
+        let w = calibrate_util(&cfg, 4, 1, false);
+        assert_eq!(u, w);
+        // and a repeat hits the memoized pass with the identical value
+        assert_eq!(calibrate_util(&cfg, 4, 1, false), w);
     }
 }

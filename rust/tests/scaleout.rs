@@ -8,7 +8,9 @@ use mxdotp::formats::ElemFormat;
 use mxdotp::kernels::reference::mxfp8_hw_ref;
 use mxdotp::kernels::{run_mm, KernelKind, MmProblem};
 use mxdotp::rng::XorShift;
-use mxdotp::scaleout::{sharded_mm, ScaleoutConfig, SplitStrategy};
+use mxdotp::scaleout::{
+    sharded_mm, sharded_mm_with_cache, PlanCache, ScaleoutConfig, SplitStrategy,
+};
 use mxdotp::workload::DeitConfig;
 
 fn problem(m: usize, k: usize, n: usize) -> MmProblem {
@@ -37,14 +39,12 @@ fn oracle(p: &MmProblem, a: &[f32], b: &[f32]) -> Vec<f32> {
 
 fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
     assert_eq!(got.len(), want.len(), "{what}: length");
-    for i in 0..want.len() {
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
         assert!(
-            got[i].to_bits() == want[i].to_bits(),
-            "{what}: C[{i}] = {:?} ({:#010x}) vs {:?} ({:#010x})",
-            got[i],
-            got[i].to_bits(),
-            want[i],
-            want[i].to_bits()
+            g.to_bits() == w.to_bits(),
+            "{what}: C[{i}] = {g:?} ({:#010x}) vs {w:?} ({:#010x})",
+            g.to_bits(),
+            w.to_bits()
         );
     }
 }
@@ -121,15 +121,68 @@ fn k_split_on_real_data_is_close_and_cluster_count_invariant() {
     // how many clusters executed the chunks
     assert_bits_eq(&four.c, &two.c, "MkSplit 4 vs 2 clusters");
     // and differs from the fused chain only by final-reduction rounding
-    for i in 0..fused.c.len() {
-        let d = (two.c[i] - fused.c[i]).abs();
-        assert!(
-            d <= 1e-4 * fused.c[i].abs().max(1.0),
-            "C[{i}]: {} vs {}",
-            two.c[i],
-            fused.c[i]
-        );
+    for (i, (t, f)) in two.c.iter().zip(&fused.c).enumerate() {
+        let d = (t - f).abs();
+        assert!(d <= 1e-4 * f.abs().max(1.0), "C[{i}]: {t} vs {f}");
     }
+}
+
+#[test]
+fn warm_plans_are_bit_identical_and_strictly_faster_on_repeated_deit_gemm() {
+    // The plan-cache acceptance test: a repeated DeiT-shaped GEMM must
+    // (a) return bit-identical C and identical simulated counters, and
+    // (b) take strictly less host wall-clock, because the second run
+    // reuses the compiled plans, the quantized B tiles and the
+    // memoized passes instead of re-simulating.
+    let cfg = DeitConfig { seq: 64, ..DeitConfig::default() };
+    let p = cfg.mx_matmuls()[1]; // attention-out projection 64x192x192
+    let (a, b) = inputs(&p, 0x3A3A);
+    let cache = PlanCache::new();
+    let scfg = ScaleoutConfig::with_clusters(2);
+
+    let t0 = std::time::Instant::now();
+    let cold = sharded_mm_with_cache(&scfg, p, &a, &b, &cache);
+    let cold_s = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let warm = sharded_mm_with_cache(&scfg, p, &a, &b, &cache);
+    let warm_s = t1.elapsed();
+
+    assert_bits_eq(&warm.c, &cold.c, "warm vs cold plans");
+    assert_eq!(warm.wall_cycles, cold.wall_cycles, "cycle model must not change");
+    assert_eq!(warm.total_cycles, cold.total_cycles);
+    assert_eq!(warm.total_mxdotp, cold.total_mxdotp);
+    assert!(
+        (warm.total_energy_uj - cold.total_energy_uj).abs() < 1e-9,
+        "energy model must not change"
+    );
+    let st = cache.stats();
+    assert!(st.pass_hits > 0, "second run must hit the pass cache: {st:?}");
+    assert_eq!(
+        st.pass_hits, st.pass_misses,
+        "every cold pass must be served from cache on the warm run: {st:?}"
+    );
+    assert!(
+        warm_s < cold_s,
+        "warm plans not faster: warm {warm_s:?} vs cold {cold_s:?}"
+    );
+}
+
+#[test]
+fn cold_plans_escape_hatch_matches_warm_path_bitwise() {
+    // --cold-plans must change host wall-clock only, never results or
+    // the simulated cycle/energy model.
+    let p = problem(16, 96, 24);
+    let (a, b) = inputs(&p, 0xC0DE);
+    let warm = sharded_mm(&ScaleoutConfig::with_clusters(2), p, &a, &b);
+    let cold = sharded_mm(
+        &ScaleoutConfig { cold_plans: true, ..ScaleoutConfig::with_clusters(2) },
+        p,
+        &a,
+        &b,
+    );
+    assert_bits_eq(&cold.c, &warm.c, "cold-plans vs warm");
+    assert_eq!(cold.wall_cycles, warm.wall_cycles);
+    assert_eq!(cold.total_cycles, warm.total_cycles);
 }
 
 #[test]
