@@ -4,7 +4,9 @@
 //! * **block size** — the MX spec fixes 32; the instruction supports
 //!   any multiple of 8 ("the block size remains configurable in
 //!   software", §IV-B): accuracy + performance across 16/32/64;
-//! * **element format** — E4M3 vs E5M2 (Fig. 4 is reported for both);
+//! * **element format** — the full OCP family on the format-generic
+//!   datapath (GFLOPS + utilization + accuracy per format, written to
+//!   `BENCH_formats.json` for the CI perf trajectory);
 //! * **core scaling** — 1→8 cores at fixed problem size (cluster-level
 //!   speedup + the SPM banking's ability to feed all SSRs);
 //! * **accumulator unroll** — why the kernel unrolls 8 accumulators
@@ -16,9 +18,11 @@ mod common;
 
 use mxdotp::formats::{dot, ElemFormat};
 use mxdotp::kernels::{reference, run_mm, KernelKind, MmProblem};
+use mxdotp::report::{format_sweep, render_format_sweep, FIG4_K_SWEEP};
 use mxdotp::rng::XorShift;
 use mxdotp::snitch::asm::assemble;
 use mxdotp::snitch::cluster::{Cluster, ClusterConfig};
+use std::fmt::Write as _;
 
 fn rel_err(got: &[f32], want: &[f64]) -> f64 {
     let num: f64 = got.iter().zip(want).map(|(&g, &w)| (g as f64 - w).powi(2)).sum();
@@ -39,7 +43,7 @@ fn main() {
     let exact = reference::matmul_f64(&base, &a, &b);
     for bs in [16usize, 32, 64] {
         let p = MmProblem { block_size: bs, ..base };
-        let run = run_mm(KernelKind::Mxfp8, p, &a, &b, 8);
+        let run = run_mm(KernelKind::Mx(p.fmt), p, &a, &b, 8);
         let scale_bytes = p.m * p.k / bs + p.k * p.n / bs;
         println!(
             "    {bs:<4}  {:<9.5} {:>8}   {:>5.1}    {scale_bytes}",
@@ -50,25 +54,63 @@ fn main() {
     }
     println!("    -> on homoscedastic data the error is flat; smaller blocks pay 2x scale\n       traffic + reshape work (see mx_formats_tour for where they win)");
 
-    // ---- element format ----------------------------------------------
-    println!("\n[2] element format (64x256x64, 8 cores)");
-    println!("    fmt    rel.err    GFLOPS   util");
-    let p = MmProblem::fig4(256, ElemFormat::E4M3);
-    let a = rng.normal_vec(p.m * p.k, 1.0);
-    let b = rng.normal_vec(p.k * p.n, 1.0);
-    let exact = reference::matmul_f64(&p, &a, &b);
-    for fmt in [ElemFormat::E4M3, ElemFormat::E5M2] {
-        let p = MmProblem { fmt, ..p };
-        let run = run_mm(KernelKind::Mxfp8, p, &a, &b, 8);
-        println!(
-            "    {:<6} {:<9.5}  {:>5.1}   {:>5.1} %",
-            fmt.name(),
-            rel_err(&run.c, &exact),
-            run.gflops(),
-            run.utilization() * 100.0
+    // ---- element format sweep (all six OCP formats) -------------------
+    println!("\n[2] element format sweep on the format-generic datapath (Fig. 4 shapes, 8 cores)");
+    let fpoints = format_sweep(8, 0xF0, &FIG4_K_SWEEP);
+    println!("{}", render_format_sweep(&fpoints, 8));
+    println!("    -> byte-wide formats share one speed (one datapath); FP4's 16 lanes/issue");
+    println!("       ~double it; accuracy ranks by mantissa width");
+
+    // Acceptance bar (ISSUE 3): on the largest Fig. 4 shape, MXFP4
+    // must reach >= 1.8x the MXFP8 GFLOPS at comparable utilization.
+    let at_k = |fmt: ElemFormat, k: usize| {
+        fpoints.iter().find(|p| p.fmt == fmt && p.k == k).expect("sweep point missing")
+    };
+    let f8 = at_k(ElemFormat::E4M3, 256);
+    let f4 = at_k(ElemFormat::E2M1, 256);
+    assert!(
+        f4.gflops >= 1.8 * f8.gflops,
+        "MXFP4 {:.1} GFLOPS below 1.8x MXFP8 {:.1}",
+        f4.gflops,
+        f8.gflops
+    );
+    assert!(
+        f4.utilization > f8.utilization - 0.12,
+        "MXFP4 utilization collapsed: {:.3} vs {:.3}",
+        f4.utilization,
+        f8.utilization
+    );
+
+    // BENCH_formats.json: GFLOPS + utilization per element format,
+    // uploaded by CI next to the scaleout/hotpath trajectories.
+    let mut j = String::new();
+    j.push_str("{\n  \"shapes\": \"fig4 (M=N=64, K sweep), 8 cores @ 1 GHz\",\n");
+    j.push_str("  \"points\": [\n");
+    for (i, p) in fpoints.iter().enumerate() {
+        let _ = writeln!(
+            j,
+            "    {{\"fmt\": \"{}\", \"k\": {}, \"lanes\": {}, \"gflops\": {:.3}, \
+             \"utilization\": {:.4}, \"gflops_per_w\": {:.3}, \"cycles\": {}, \
+             \"mxdotp\": {}, \"rel_err\": {:.6}}}{}",
+            p.fmt.name(),
+            p.k,
+            p.fmt.hw_lanes(),
+            p.gflops,
+            p.utilization,
+            p.gflops_per_w,
+            p.cycles,
+            p.mxdotp,
+            p.rel_err,
+            if i + 1 == fpoints.len() { "" } else { "," }
         );
     }
-    println!("    -> same speed (one datapath), e4m3 more accurate on N(0,1) data");
+    let _ = writeln!(
+        j,
+        "  ],\n  \"fp4_vs_fp8_speedup_at_k256\": {:.4}\n}}",
+        f4.gflops / f8.gflops
+    );
+    std::fs::write("BENCH_formats.json", &j).expect("write BENCH_formats.json");
+    println!("    wrote BENCH_formats.json ({} points)", fpoints.len());
 
     // ---- core scaling --------------------------------------------------
     println!("\n[3] core scaling (64x128x64 MXFP8)");
@@ -76,7 +118,7 @@ fn main() {
     let p = MmProblem::fig4(128, ElemFormat::E4M3);
     let mut t1 = 0u64;
     for cores in [1usize, 2, 4, 8] {
-        let run = run_mm(KernelKind::Mxfp8, p, &a[..p.m * p.k], &b[..p.k * p.n], cores);
+        let run = run_mm(KernelKind::Mx(p.fmt), p, &a[..p.m * p.k], &b[..p.k * p.n], cores);
         if cores == 1 {
             t1 = run.perf.cycles;
         }

@@ -18,7 +18,7 @@
 mod common;
 
 use common::bench;
-use mxdotp::dotp::{Fp8Format, MxDotpUnit};
+use mxdotp::dotp::MxDotpUnit;
 use mxdotp::formats::{ElemFormat, MxMatrix, ScaleAxis};
 use mxdotp::kernels::plan::PlanCache;
 use mxdotp::kernels::{reference, run_mm, KernelKind, MmProblem};
@@ -32,7 +32,7 @@ fn main() {
 
     // --- datapath ----------------------------------------------------
     let mut rng = XorShift::new(1);
-    let mut unit = MxDotpUnit::new(Fp8Format::E4m3);
+    let mut unit = MxDotpUnit::new(ElemFormat::E4M3);
     let ops: Vec<([u8; 8], [u8; 8], u8, u8)> = (0..4096)
         .map(|_| {
             let mut a = [0u8; 8];
@@ -72,7 +72,7 @@ fn main() {
     let b = r2.normal_vec(p.k * p.n, 1.0);
     let mut sim_cycles = 0u64;
     let st = bench(1, 5, || {
-        let run = run_mm(KernelKind::Mxfp8, p, &a, &b, 8);
+        let run = run_mm(KernelKind::Mx(p.fmt), p, &a, &b, 8);
         sim_cycles = run.perf.cycles;
         std::hint::black_box(&run.c);
     });
@@ -85,7 +85,7 @@ fn main() {
 
     // --- bit-exact reference ------------------------------------------
     let st = bench(1, 5, || {
-        let c = reference::mxfp8_hw_ref(&p, &a, &b);
+        let c = reference::mx_hw_ref(&p, &a, &b);
         std::hint::black_box(&c);
     });
     let mdot_ref = (p.m * p.n * p.k / 8) as f64 / st.mean_s / 1e6;

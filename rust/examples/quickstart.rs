@@ -6,7 +6,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use mxdotp::dotp::{Fp8Format, MxDotpUnit};
+use mxdotp::dotp::MxDotpUnit;
 use mxdotp::formats::{dot, ElemFormat, MxMatrix, MxVector, ScaleAxis};
 use mxdotp::kernels::{run_mm, KernelKind, MmProblem};
 use mxdotp::report::render_run;
@@ -21,14 +21,9 @@ fn main() {
     let b = rng.normal_vec(8, 2.0);
     let qa = MxVector::quantize(&a, ElemFormat::E4M3, 8);
     let qb = MxVector::quantize(&b, ElemFormat::E4M3, 8);
-    let mut unit = MxDotpUnit::new(Fp8Format::E4m3);
-    let acc = unit.execute_unpacked(
-        &qa.elems[..8].try_into().unwrap(),
-        &qb.elems[..8].try_into().unwrap(),
-        qa.scales[0].0,
-        qb.scales[0].0,
-        0.0,
-    );
+    let mut unit = MxDotpUnit::new(ElemFormat::E4M3);
+    let acc =
+        unit.execute_unpacked(&qa.elems[..8], &qb.elems[..8], qa.scales[0].0, qb.scales[0].0, 0.0);
     let exact: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
     println!("  mxdotp  = {acc:.4}");
     println!("  exact   = {exact:.4}  (difference is MXFP8 quantization error)");
@@ -57,7 +52,7 @@ fn main() {
 
     // --- 3. the same matmul on the cycle-accurate 8-core cluster -----
     println!("\n== the same matmul on the simulated Snitch cluster ==");
-    for kind in [KernelKind::Fp32, KernelKind::Fp8ToFp32, KernelKind::Mxfp8] {
+    for kind in [KernelKind::Fp32, KernelKind::Fp8ToFp32, KernelKind::Mx(p.fmt)] {
         let run = run_mm(kind, p, &a, &b, 8);
         println!("  {}", render_run(&run));
     }

@@ -3,12 +3,16 @@
 //!
 //! ```text
 //! mxdotp-cli quantize  --fmt e4m3 --block 32 --n 8 [--seed S]
-//! mxdotp-cli simulate  --kernel mxfp8|fp32|fp8sw --m 64 --k 256 --n 64
-//!                      [--cores 8] [--fmt e4m3] [--seed S]
-//! mxdotp-cli reproduce fig3|fig4|table3|all [--cores 8] [--fmt e4m3]
-//! mxdotp-cli serve     [--requests 16] [--batch 8] [--artifacts DIR]
+//! mxdotp-cli simulate  --kernel mx|fp32|fp8sw --m 64 --k 256 --n 64
+//!                      [--cores 8] [--fmt e5m2|e4m3|e3m2|e2m3|e2m1|int8] [--seed S]
+//! mxdotp-cli reproduce fig3|fig4|table3|formats|scaling|all [--cores 8] [--fmt e4m3]
+//! mxdotp-cli serve     [--requests 16] [--batch 8] [--fmt e4m3] [--artifacts DIR]
 //! mxdotp-cli info
 //! ```
+//!
+//! Kernel/format compatibility is validated at parse time
+//! ([`kernel_for`]): the `mx` hardware kernel takes every OCP element
+//! format, `fp8sw` is FP8-only, `fp32` ignores the format.
 
 use crate::formats::ElemFormat;
 use crate::kernels::KernelKind;
@@ -20,9 +24,30 @@ pub enum Command {
     Quantize { fmt: ElemFormat, block: usize, n: usize, seed: u64 },
     Simulate { kernel: KernelKind, m: usize, k: usize, n: usize, cores: usize, clusters: usize, fmt: ElemFormat, seed: u64, cold_plans: bool },
     Reproduce { what: String, cores: usize, clusters: usize, fmt: ElemFormat, cold_plans: bool },
-    Serve { requests: usize, batch: usize, clusters: usize, artifacts: String, cold_plans: bool },
+    Serve { requests: usize, batch: usize, clusters: usize, fmt: ElemFormat, artifacts: String, cold_plans: bool },
     Info,
     Help,
+}
+
+/// Resolve a kernel name + element format at parse/dispatch time,
+/// rejecting unsupported combinations with the per-kernel format list
+/// (instead of dying later on a deep plan assert).
+pub fn kernel_for(name: &str, fmt: ElemFormat) -> Result<KernelKind, CliError> {
+    let kind = match name {
+        "fp32" => KernelKind::Fp32,
+        "fp8sw" | "fp8-to-fp32" => KernelKind::Fp8ToFp32,
+        "mx" | "mxfp8" => KernelKind::Mx(fmt),
+        other => return Err(CliError(format!("unknown kernel '{other}' (mx|fp32|fp8sw)"))),
+    };
+    if !kind.supported_fmts().contains(&fmt) {
+        let supported: Vec<&str> =
+            kind.supported_fmts().iter().map(|f| f.name()).collect();
+        return Err(CliError(format!(
+            "kernel '{name}' does not support --fmt {fmt}; supported formats: {}",
+            supported.join(", ")
+        )));
+    }
+    Ok(kind)
 }
 
 /// Parse error with a user-facing message.
@@ -119,12 +144,8 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
         }
         "simulate" => {
             let f = flags(rest)?;
-            let kernel = match f.get("kernel").map(String::as_str) {
-                None | Some("mxfp8") => KernelKind::Mxfp8,
-                Some("fp32") => KernelKind::Fp32,
-                Some("fp8sw") | Some("fp8-to-fp32") => KernelKind::Fp8ToFp32,
-                Some(other) => return Err(CliError(format!("unknown kernel '{other}'"))),
-            };
+            let fmt = get_fmt(&f)?;
+            let kernel = kernel_for(f.get("kernel").map(String::as_str).unwrap_or("mx"), fmt)?;
             Ok(Command::Simulate {
                 kernel,
                 m: get_parse(&f, "m", 64)?,
@@ -132,7 +153,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 n: get_parse(&f, "n", 64)?,
                 cores: get_parse(&f, "cores", 8)?,
                 clusters: get_clusters(&f, 1)?,
-                fmt: get_fmt(&f)?,
+                fmt,
                 seed: get_parse(&f, "seed", 42)?,
                 cold_plans: get_cold_plans(&f),
             })
@@ -143,9 +164,9 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 .filter(|w| !w.starts_with("--"))
                 .cloned()
                 .unwrap_or_else(|| "all".to_string());
-            if !["fig3", "fig4", "table3", "scaling", "all"].contains(&what.as_str()) {
+            if !["fig3", "fig4", "table3", "formats", "scaling", "all"].contains(&what.as_str()) {
                 return Err(CliError(format!(
-                    "unknown target '{what}' (expected fig3|fig4|table3|scaling|all)"
+                    "unknown target '{what}' (expected fig3|fig4|table3|formats|scaling|all)"
                 )));
             }
             let skip = usize::from(!rest.is_empty() && !rest[0].starts_with("--"));
@@ -164,6 +185,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 requests: get_parse(&f, "requests", 16)?,
                 batch: get_parse(&f, "batch", 8)?,
                 clusters: get_clusters(&f, 1)?,
+                fmt: get_fmt(&f)?,
                 artifacts: f.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
                 cold_plans: get_cold_plans(&f),
             })
@@ -177,13 +199,21 @@ mxdotp-cli — MXDOTP paper reproduction driver
 
 USAGE:
   mxdotp-cli quantize  [--fmt e4m3|e5m2|e3m2|e2m3|e2m1|int8] [--block 32] [--n 8] [--seed S]
-  mxdotp-cli simulate  [--kernel mxfp8|fp32|fp8sw] [--m 64] [--k 256] [--n 64]
+  mxdotp-cli simulate  [--kernel mx|fp32|fp8sw] [--m 64] [--k 256] [--n 64]
                        [--cores 8] [--clusters 1] [--fmt e4m3] [--seed S] [--cold-plans]
-                       (--clusters N > 1 shards the MXFP8 GEMM across N simulated clusters)
-  mxdotp-cli reproduce [fig3|fig4|table3|scaling|all] [--cores 8] [--clusters 8] [--fmt e4m3]
-                       [--cold-plans]
-  mxdotp-cli serve     [--requests 16] [--batch 8] [--clusters 1] [--artifacts DIR] [--cold-plans]
+                       (--clusters N > 1 shards the MX GEMM across N simulated clusters)
+  mxdotp-cli reproduce [fig3|fig4|table3|formats|scaling|all] [--cores 8] [--clusters 8]
+                       [--fmt e4m3] [--cold-plans]
+  mxdotp-cli serve     [--requests 16] [--batch 8] [--clusters 1] [--fmt e4m3]
+                       [--artifacts DIR] [--cold-plans]
   mxdotp-cli info
+
+--fmt selects the MX element format end to end (all six OCP formats:
+e5m2/e4m3 FP8, e3m2/e2m3 FP6, e2m1 FP4 at 16 lanes/issue, int8). The
+'mx' kernel (alias 'mxfp8') is the format-generic hardware kernel and
+accepts every format; 'fp8sw' is the FP8-only software baseline;
+'fp32' ignores --fmt. 'reproduce formats' prints the format sweep on
+the Fig. 4 shapes.
 
 --cold-plans bypasses the compile-once/execute-many plan cache (plans,
 quantized weight tiles, memoized passes) and measures the from-scratch
@@ -273,6 +303,56 @@ mod tests {
         assert!(parse(&argv("simulate --k")).is_err());
         assert!(parse(&argv("frobnicate")).is_err());
         assert!(parse(&argv("quantize --fmt fp64")).is_err());
+    }
+
+    #[test]
+    fn kernel_format_mismatch_is_a_parse_error_listing_supported_formats() {
+        // fp8sw + a non-FP8 format must fail at parse time, not on a
+        // deep plan assert — and the message must list what IS valid.
+        let err = parse(&argv("simulate --kernel fp8sw --fmt e2m1")).unwrap_err();
+        assert!(err.0.contains("fp8sw"), "{err}");
+        assert!(err.0.contains("e4m3") && err.0.contains("e5m2"), "{err}");
+        assert!(parse(&argv("simulate --kernel fp8sw --fmt int8")).is_err());
+        assert!(parse(&argv("simulate --kernel fp8sw --fmt e5m2")).is_ok());
+        // the hw kernel and fp32 take every format
+        for fmt in ElemFormat::ALL {
+            assert!(
+                matches!(
+                    parse(&argv(&format!("simulate --kernel mx --fmt {fmt}"))),
+                    Ok(Command::Simulate { kernel: KernelKind::Mx(f), .. }) if f == fmt
+                ),
+                "{fmt}"
+            );
+            assert!(parse(&argv(&format!("simulate --kernel fp32 --fmt {fmt}"))).is_ok());
+        }
+        // flag order must not matter (fmt parsed before kernel check)
+        assert!(parse(&argv("simulate --fmt e2m1 --kernel fp8sw")).is_err());
+    }
+
+    #[test]
+    fn default_and_alias_kernels_follow_fmt() {
+        // no --kernel: the hw kernel at the requested format
+        assert!(matches!(
+            parse(&argv("simulate --fmt e2m1")),
+            Ok(Command::Simulate { kernel: KernelKind::Mx(ElemFormat::E2M1), .. })
+        ));
+        // 'mxfp8' stays as a compatibility alias for 'mx'
+        assert!(matches!(
+            parse(&argv("simulate --kernel mxfp8")),
+            Ok(Command::Simulate { kernel: KernelKind::Mx(ElemFormat::E4M3), .. })
+        ));
+    }
+
+    #[test]
+    fn parse_serve_fmt_and_reproduce_formats() {
+        assert!(matches!(
+            parse(&argv("serve --fmt int8")),
+            Ok(Command::Serve { fmt: ElemFormat::Int8, .. })
+        ));
+        assert!(matches!(
+            parse(&argv("reproduce formats --fmt e2m1")),
+            Ok(Command::Reproduce { ref what, fmt: ElemFormat::E2M1, .. }) if what == "formats"
+        ));
     }
 
     #[test]

@@ -305,7 +305,7 @@ mod tests {
         acc = u.execute(&E5M2, [big, 0], [one, 0], acc);
         assert!(f16_bits_to_f32(acc).is_infinite(), "fp16 acc must overflow");
         // MXDOTP with FP32 accumulation does not.
-        let mut m = super::super::unit::MxDotpUnit::new(super::super::unit::Fp8Format::E5m2);
+        let mut m = super::super::unit::MxDotpUnit::new(crate::formats::ElemFormat::E5M2);
         let pa = super::super::unit::pack8(&[big, 0, 0, 0, 0, 0, 0, 0]);
         let pb = super::super::unit::pack8(&[one, 0, 0, 0, 0, 0, 0, 0]);
         let a1 = m.execute(pa, pb, 127, 127, 0.0);

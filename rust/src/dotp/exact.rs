@@ -205,14 +205,22 @@ pub fn add_dyadic_rne(a: Dyadic, b: Dyadic) -> f32 {
 /// above the format's product anchor). Specials are flagged so the
 /// unit can branch on them in one load. This LUT is the §Perf fix that
 /// took the datapath model past 20 M ops/s.
+///
+/// Indexed by the *unpacked lane byte*: the full byte for 8-bit
+/// formats, the low 6 bits for the byte-padded FP6 formats, the nibble
+/// for FP4, and the two's-complement byte for MXINT8 (whose element
+/// values `m · 2^-6` are dyadic too — the same exact-sum datapath
+/// covers it with shift 0 and anchor −12).
 pub struct DecodeLut {
-    /// Signed significand of the value (|num| < 2^(mbits+1)).
+    /// Signed significand of the value (|num| < 2^(mbits+1); the raw
+    /// i8 for MXINT8).
     pub num: [i32; 256],
-    /// Value exponent minus (emin - mbits): always >= 0 for finite.
+    /// Value exponent minus the element anchor: always >= 0 for finite.
     pub shift: [i32; 256],
     /// 0 = finite, 1 = NaN, 2 = +inf, 3 = -inf.
     pub special: [u8; 256],
-    /// The anchor exponent: 2 * (emin - mbits).
+    /// The product anchor exponent: 2 × the element anchor
+    /// (`emin - mbits` for floats, −6 for MXINT8).
     pub anchor: i32,
 }
 
@@ -241,51 +249,79 @@ impl DecodeLut {
         lut
     }
 
-    /// The (lazily built) LUT for an FP8 spec.
-    pub fn for_spec(spec: &FloatSpec) -> &'static DecodeLut {
-        use std::sync::LazyLock;
-        static E4M3_LUT: LazyLock<Box<DecodeLut>> =
-            LazyLock::new(|| DecodeLut::build(&crate::formats::minifloat::E4M3));
-        static E5M2_LUT: LazyLock<Box<DecodeLut>> =
-            LazyLock::new(|| DecodeLut::build(&crate::formats::minifloat::E5M2));
-        match spec.name {
-            "e4m3" => &E4M3_LUT,
-            "e5m2" => &E5M2_LUT,
-            other => panic!("no decode LUT for {other}"),
+    fn build_int8() -> Box<DecodeLut> {
+        // value = (i8) · 2^-6: numerator is the two's-complement byte,
+        // element anchor -6, no specials.
+        let mut lut =
+            Box::new(DecodeLut { num: [0; 256], shift: [0; 256], special: [0; 256], anchor: -12 });
+        for bits in 0..256usize {
+            lut.num[bits] = (bits as u8 as i8) as i32;
         }
+        lut
+    }
+
+    /// The (lazily built) LUT for an element format.
+    pub fn for_fmt(fmt: crate::formats::ElemFormat) -> &'static DecodeLut {
+        use crate::formats::ElemFormat;
+        use std::sync::LazyLock;
+        static LUTS: LazyLock<[Box<DecodeLut>; 6]> = LazyLock::new(|| {
+            [
+                DecodeLut::build(&crate::formats::minifloat::E5M2),
+                DecodeLut::build(&crate::formats::minifloat::E4M3),
+                DecodeLut::build(&crate::formats::minifloat::E3M2),
+                DecodeLut::build(&crate::formats::minifloat::E2M3),
+                DecodeLut::build(&crate::formats::minifloat::E2M1),
+                DecodeLut::build_int8(),
+            ]
+        });
+        let idx = match fmt {
+            ElemFormat::E5M2 => 0,
+            ElemFormat::E4M3 => 1,
+            ElemFormat::E3M2 => 2,
+            ElemFormat::E2M3 => 3,
+            ElemFormat::E2M1 => 4,
+            ElemFormat::Int8 => 5,
+        };
+        &LUTS[idx]
+    }
+
+    /// The LUT for a float spec (looked up by name; all five FP element
+    /// formats are covered).
+    pub fn for_spec(spec: &FloatSpec) -> &'static DecodeLut {
+        use crate::formats::ElemFormat;
+        let fmt = ElemFormat::parse(spec.name)
+            .unwrap_or_else(|| panic!("no decode LUT for {}", spec.name));
+        Self::for_fmt(fmt)
     }
 }
 
 /// The exact MXDOTP semantics on *finite* operands:
 /// `acc + 2^(sa + sb - 254) · Σ pa_i·pb_i`, one RNE rounding.
 ///
-/// `pa`/`pb` are element bit patterns in `spec` (E5M2 or E4M3);
-/// `xa`/`xb` are E8M0 *biased* scale exponents (bias 127, 255 = NaN —
-/// callers handle NaN before this); `acc` is the FP32 accumulator.
-pub fn mxdotp_exact(
-    spec: &FloatSpec,
-    pa: &[u8; 8],
-    pb: &[u8; 8],
-    xa: u8,
-    xb: u8,
-    acc: f32,
-) -> f32 {
+/// `pa`/`pb` are unpacked element lane bytes in `spec` (any of the
+/// five FP element formats; one issue's worth — 8 lanes for byte-wide
+/// formats, 16 for FP4); `xa`/`xb` are E8M0 *biased* scale exponents
+/// (bias 127, 255 = NaN — callers handle NaN before this); `acc` is
+/// the FP32 accumulator.
+pub fn mxdotp_exact(spec: &FloatSpec, pa: &[u8], pb: &[u8], xa: u8, xb: u8, acc: f32) -> f32 {
     mxdotp_exact_lut(DecodeLut::for_spec(spec), pa, pb, xa, xb, acc)
 }
 
 /// LUT-driven core: sum of products anchored at the minimum product
 /// exponent so the i128 accumulation is exact (product numerators are
-/// <= 2^(2 mbits + 2); shifts stay < 2·(emax − emin + mbits) < 70).
+/// <= 2^(2 mbits + 2), or < 2^14 for MXINT8; shifts stay
+/// < 2·(emax − emin + mbits) < 70; at most 16 addends).
 pub fn mxdotp_exact_lut(
     lut: &DecodeLut,
-    pa: &[u8; 8],
-    pb: &[u8; 8],
+    pa: &[u8],
+    pb: &[u8],
     xa: u8,
     xb: u8,
     acc: f32,
 ) -> f32 {
+    debug_assert_eq!(pa.len(), pb.len());
     let mut sum: i128 = 0;
-    for i in 0..8 {
+    for i in 0..pa.len() {
         let (a, b) = (pa[i] as usize, pb[i] as usize);
         debug_assert!(lut.special[a] == 0 && lut.special[b] == 0);
         let p = (lut.num[a] as i64 * lut.num[b] as i64) as i128;

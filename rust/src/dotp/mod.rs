@@ -6,14 +6,17 @@
 //! acc_out = acc_in + 2^(Xa-127) · 2^(Xb-127) · Σ_{i=1..8} Pa_i · Pb_i
 //! ```
 //!
-//! with the *early accumulation* scheme of Lutz et al.: both FP8
-//! formats are decoded into a common FP9 (E5M3) form (lossless), the
-//! eight products and the shifted FP32 accumulator are summed in a
-//! 95-bit fixed-point register anchored at bit 34, and a single
-//! round-to-nearest-even conversion produces the FP32 result. Because
-//! the window is wide enough for every bit of every addend, the sum is
-//! **exact** and the result is uniquely determined: it equals the
-//! exact rational value rounded once to FP32.
+//! with the *early accumulation* scheme of Lutz et al.: the element
+//! formats are decoded into a common lossless form (FP9/E5M3 covers
+//! both FP8 formats; the narrower FP6/FP4 formats and MXINT8 embed
+//! trivially), the lane products and the shifted FP32 accumulator are
+//! summed in a 95-bit fixed-point register anchored at bit 34, and a
+//! single round-to-nearest-even conversion produces the FP32 result.
+//! Because the window is wide enough for every bit of every addend,
+//! the sum is **exact** and the result is uniquely determined: it
+//! equals the exact rational value rounded once to FP32. The unit is
+//! format-generic over the whole OCP MX v1.0 element family
+//! (8 × FP8/FP6/INT8 or 16 × FP4 lanes per 64-bit issue).
 //!
 //! * [`exact`] — the datapath semantics as exact integer arithmetic +
 //!   one RNE rounding (what the hardware computes, by construction);
@@ -30,4 +33,4 @@ pub mod unit;
 pub mod window;
 
 pub use exact::mxdotp_exact;
-pub use unit::{Fp8Format, MxDotpUnit, PIPELINE_STAGES};
+pub use unit::{MxDotpUnit, PIPELINE_STAGES};

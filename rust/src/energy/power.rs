@@ -143,7 +143,7 @@ mod tests {
         let f32k = (crate::kernels::layout::fp32_footprint(&p) <= crate::snitch::SPM_BYTES)
             .then(|| run_mm(KernelKind::Fp32, p, &a, &b, 8));
         let sw = run_mm(KernelKind::Fp8ToFp32, p, &a, &b, 8);
-        let mx = run_mm(KernelKind::Mxfp8, p, &a, &b, 8);
+        let mx = run_mm(KernelKind::Mx(p.fmt), p, &a, &b, 8);
         (f32k, sw, mx)
     }
 

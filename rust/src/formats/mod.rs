@@ -31,8 +31,14 @@ pub use quantize::{MxMatrix, MxVector, ScaleAxis};
 /// The block size fixed by the MX v1.0 spec for all concrete formats.
 pub const SPEC_BLOCK_SIZE: usize = 32;
 
-/// Elements consumed by one `mxdotp` instruction (8 × FP8 in 64 bits).
+/// Elements consumed by one `mxdotp` issue for the byte-wide element
+/// formats (8 × FP8/FP6/INT8 in one 64-bit register). FP4 packs two
+/// elements per byte and doubles this (see [`ElemFormat::hw_lanes`]).
 pub const HW_DOT_WIDTH: usize = 8;
+
+/// Upper bound of [`ElemFormat::hw_lanes`] across all formats (the
+/// 16 × FP4 case) — sizes the unit's lane buffers.
+pub const MAX_HW_LANES: usize = 16;
 
 /// An MX *element* format tag (the private-value encoding of a block).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -71,6 +77,59 @@ impl ElemFormat {
             ElemFormat::E5M2 | ElemFormat::E4M3 | ElemFormat::Int8 => 8,
             ElemFormat::E3M2 | ElemFormat::E2M3 => 6,
             ElemFormat::E2M1 => 4,
+        }
+    }
+
+    /// Elements consumed per 64-bit `mxdotp` issue in the hardware
+    /// packing: 8 for the byte-wide lanes (FP8, INT8, and FP6 — FP6 is
+    /// *byte-padded* in registers/SPM, its 6 bits in the low bits of a
+    /// byte), 16 for FP4 (two elements per byte, nibble-packed).
+    pub fn hw_lanes(self) -> usize {
+        match self {
+            ElemFormat::E2M1 => 16,
+            _ => 8,
+        }
+    }
+
+    /// Bytes occupied by `n` elements in the hardware packing (`n` must
+    /// be even for FP4). FP6 is byte-padded, so only FP4 packs denser
+    /// than one byte per element on the datapath.
+    pub fn hw_packed_bytes(self, n: usize) -> usize {
+        match self {
+            ElemFormat::E2M1 => {
+                debug_assert_eq!(n % 2, 0, "FP4 packs two elements per byte");
+                n / 2
+            }
+            _ => n,
+        }
+    }
+
+    /// The element-format CSR encoding (the unit's format register,
+    /// §III-B generalized to the full OCP format family). 0/1 keep the
+    /// paper's original E4M3/E5M2 assignment.
+    pub fn csr_code(self) -> u8 {
+        match self {
+            ElemFormat::E4M3 => 0,
+            ElemFormat::E5M2 => 1,
+            ElemFormat::E3M2 => 2,
+            ElemFormat::E2M3 => 3,
+            ElemFormat::E2M1 => 4,
+            ElemFormat::Int8 => 5,
+        }
+    }
+
+    /// Decode an element-format CSR value (inverse of [`Self::csr_code`];
+    /// out-of-range values alias down to the low 3 bits, unknown codes
+    /// fall back to the default E4M3 — hardware ignores reserved bits).
+    pub fn from_csr(v: i64) -> Self {
+        match v & 0b111 {
+            0 => ElemFormat::E4M3,
+            1 => ElemFormat::E5M2,
+            2 => ElemFormat::E3M2,
+            3 => ElemFormat::E2M3,
+            4 => ElemFormat::E2M1,
+            5 => ElemFormat::Int8,
+            _ => ElemFormat::E4M3,
         }
     }
 
@@ -172,6 +231,24 @@ mod tests {
         assert_eq!(ElemFormat::E2M3.max_value(), 7.5);
         assert_eq!(ElemFormat::E2M1.max_value(), 6.0);
         assert_eq!(ElemFormat::Int8.max_value(), 1.984375);
+    }
+
+    #[test]
+    fn csr_roundtrip_and_lane_widths() {
+        for fmt in ElemFormat::ALL {
+            assert_eq!(ElemFormat::from_csr(fmt.csr_code() as i64), fmt);
+            // one 64-bit register always carries exactly one issue
+            assert_eq!(fmt.hw_packed_bytes(fmt.hw_lanes()), 8);
+        }
+        // FP4 doubles the lanes; everything else is byte-wide.
+        assert_eq!(ElemFormat::E2M1.hw_lanes(), 16);
+        assert_eq!(ElemFormat::E3M2.hw_lanes(), 8);
+        assert_eq!(ElemFormat::E2M1.hw_packed_bytes(32), 16);
+        assert_eq!(ElemFormat::E3M2.hw_packed_bytes(32), 32); // byte-padded
+        assert_eq!(ElemFormat::Int8.hw_packed_bytes(32), 32);
+        // reserved CSR codes fall back to the default format
+        assert_eq!(ElemFormat::from_csr(6), ElemFormat::E4M3);
+        assert_eq!(ElemFormat::from_csr(7), ElemFormat::E4M3);
     }
 
     #[test]

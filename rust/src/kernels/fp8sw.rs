@@ -17,14 +17,24 @@
 //! tile by the integer core.
 
 use super::layout::rows_for_core;
-use super::mxfp8::{emit_reshape, emit_reshape_advance, layout_mx, MxRegions};
+use super::mx::{emit_reshape, emit_reshape_advance, layout_mx, MxRegions};
 use super::{fp32::emit_ssr, MmProblem};
+use crate::formats::ElemFormat;
 use crate::snitch::isa::{csr, FpInstr, Instr, IntInstr, SsrField};
 
-/// Plan the FP8-to-FP32 kernel: SPM layout (shared with the MXFP8
+/// The element formats the software baseline supports (its `fcvt.s.b`
+/// expansion path is FP8-only, as in the paper).
+pub const SUPPORTED_FMTS: [ElemFormat; 2] = ElemFormat::FP8;
+
+/// Plan the FP8-to-FP32 kernel: SPM layout (shared with the MX hw
 /// kernel) + per-core programs for one tile shape.
 pub(super) fn plan(p: MmProblem, ncores: usize) -> (MxRegions, Vec<Vec<Instr>>) {
     assert_eq!(p.block_size, 32, "the software kernel is written for the spec block size");
+    assert!(
+        SUPPORTED_FMTS.contains(&p.fmt),
+        "the FP8-to-FP32 software kernel supports e4m3/e5m2 only, got {}",
+        p.fmt
+    );
     let r = layout_mx(&p, ncores);
     let progs = (0..ncores).map(|c| build(p, c, ncores, &r)).collect();
     (r, progs)
@@ -36,11 +46,10 @@ fn build(p: MmProblem, core: usize, ncores: usize, r: &MxRegions) -> Vec<Instr> 
     let (k, n) = (p.k, p.n);
     let kb = k / p.block_size;
     let [buf0, buf1] = r.bufs[core];
-    let e5m2 = p.fmt == crate::formats::ElemFormat::E5M2;
     let mut prog: Vec<Instr> = Vec::new();
 
-    prog.push(IntInstr::Li { rd: 6, imm: e5m2 as i64 }.into());
-    prog.push(IntInstr::CsrW { csr: csr::FP8_FMT, rs1: 6 }.into());
+    prog.push(IntInstr::Li { rd: 6, imm: p.fmt.csr_code() as i64 }.into());
+    prog.push(IntInstr::CsrW { csr: csr::MX_FMT, rs1: 6 }.into());
 
     // ft0: A words — (k8: K/8, 8), (out: 8, 0), (ntile: N/8, 0), (m: rows, K).
     emit_ssr(

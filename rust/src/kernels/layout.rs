@@ -87,29 +87,33 @@ pub fn fp32_footprint(p: &MmProblem) -> usize {
     4 * (p.m * p.k + p.k * p.n + p.m * p.n)
 }
 
-/// Exact upper bound of the bytes `mxfp8::layout_mx` actually places:
-/// the padded-stride element regions (one 8-byte pad word per A row /
-/// B column), the A-scale guard row, the pre-shifted 16-bit B scales,
-/// FP32 C, the per-core double-buffered scale streams, plus the
-/// worst-case bank-stagger/alignment slack the [`Planner`] can insert
-/// per region (< 256 B each). Both `layout_mx`'s capacity check and
-/// the scale-out engine's tile planner use this single definition, so
-/// the planned layout and its footprint model cannot drift apart.
+/// Exact upper bound of the bytes `mx::layout_mx` actually places:
+/// the padded-stride packed element regions (one 8-byte pad word per A
+/// row / B column; FP4 packs two elements per byte), the A-scale guard
+/// row, the pre-shifted 16-bit and pre-paired 32-bit B scales, FP32 C,
+/// the per-core double-buffered scale streams, plus the worst-case
+/// bank-stagger/alignment slack the [`Planner`] can insert per region
+/// (< 256 B each). Both `layout_mx`'s capacity check and the scale-out
+/// engine's tile planner use this single definition, so the planned
+/// layout and its footprint model cannot drift apart.
 pub fn mx_staged_footprint(p: &MmProblem, num_cores: usize) -> usize {
     let kb = p.k / p.block_size;
-    let elems = (p.k + 8) * p.m + (p.k + 8) * p.n;
-    let scales = (p.m + 1) * kb + p.n * kb * 2;
+    let row_bytes = p.fmt.hw_packed_bytes(p.k);
+    let elems = (row_bytes + 8) * p.m + (row_bytes + 8) * p.n;
+    let scales = (p.m + 1) * kb + p.n * kb * 2 + p.n / 2 * kb * 4;
     let c = 4 * p.m * p.n;
-    let bufs = num_cores * 2 * (8 * kb * 8);
-    let regions = 5 + 2 * num_cores;
+    let unroll = super::mx::mx_unroll(p);
+    let bufs = num_cores * 2 * (2 * unroll * kb).max(8 * kb * 8);
+    let regions = 6 + 2 * num_cores;
     elems + scales + c + bufs + regions * 256
 }
 
-/// MX kernels footprint: FP8 elements for A and B, E8M0 scales, FP32
-/// C, plus the per-core reshaped scale stream buffers (double-buffered)
-/// for the MXFP8 kernel.
+/// MX kernels footprint model: packed elements for A and B at the
+/// format's hardware width, E8M0 scales, FP32 C, plus the per-core
+/// reshaped scale stream buffers (double-buffered) for the MX hw
+/// kernel.
 pub fn mx_footprint(p: &MmProblem, num_cores: usize, scale_buffers: bool) -> usize {
-    let elems = p.m * p.k + p.k * p.n;
+    let elems = p.fmt.hw_packed_bytes(p.m * p.k) + p.fmt.hw_packed_bytes(p.k * p.n);
     let scales = p.m * (p.k / p.block_size) + (p.k / p.block_size) * p.n;
     let c = 4 * p.m * p.n;
     let bufs = if scale_buffers {

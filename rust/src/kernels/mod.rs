@@ -1,16 +1,21 @@
-//! The three matrix-multiplication kernels of Fig. 2, as instruction-
-//! stream builders for the Snitch cluster simulator.
+//! The matrix-multiplication kernels of Fig. 2, as instruction-stream
+//! builders for the Snitch cluster simulator — with the hardware path
+//! generalized over every OCP MX element format.
 //!
 //! * [`fp32`]   — the FP32 baseline: 2-way SIMD `vfmac.s` with SSR
 //!               streaming and FREP (4 FLOPs/cycle/core ideal);
 //! * [`fp8sw`]  — the FP8-to-FP32 *software* MX baseline: SSR-streamed
 //!               packed FP8, per-lane `fcvt` expansion to FP32, FP32
 //!               FMAs, explicit block-scale materialization and
-//!               application (the paper's 20.9-25× slower kernel);
-//! * [`mxfp8`]  — the paper's kernel: one `mxdotp` per 8 elements with
-//!               both scales fused, scales reshaped and streamed on the
-//!               third SSR, 8-way accumulator unroll under FREP
-//!               (16 FLOPs/cycle/core ideal);
+//!               application (the paper's 20.9-25× slower kernel;
+//!               FP8 formats only);
+//! * [`mx`]     — the format-generic hardware kernel: one `mxdotp` per
+//!               issue-width of elements with both scales fused, scales
+//!               reshaped and streamed on the third SSR, accumulator
+//!               unroll under FREP. Lane count and SPM packing derive
+//!               from the element format (8 × FP8/FP6/INT8 byte lanes,
+//!               16 × FP4 nibble lanes): 16 FLOPs/cycle/core ideal for
+//!               the byte-wide formats, 32 for MXFP4;
 //! * [`layout`] — SPM placement (bank-staggered operand regions, L1
 //!               capacity checks — reproducing the paper's "FP32 does
 //!               not fit into L1 at K=256" footnote) and row-block
@@ -24,7 +29,8 @@
 //!               shapes and quantized B tiles across passes/requests;
 //! * [`reference`] — instruction-order-exact analytical references the
 //!               simulator's results are compared against *bit for
-//!               bit*, plus the FLOP accounting used by Fig. 4.
+//!               bit* for every element format, plus the FLOP
+//!               accounting used by Fig. 4.
 //!
 //! [`run_mm`] below is the *cold* single-call convenience path (plan,
 //! quantize, execute once — what the figures and golden tests use);
@@ -33,33 +39,65 @@
 //!
 //! FLOP counting follows Table III's footnote: 1 FLOP = 1 FP multiply
 //! or 1 FP add; a matmul is 2·M·N·K FLOPs; scale operations are *not*
-//! counted as useful FLOPs (they are overhead the MXFP8 kernel fuses).
+//! counted as useful FLOPs (they are overhead the MX kernel fuses).
 
 pub mod fp8sw;
 pub mod fp32;
 pub mod layout;
-pub mod mxfp8;
+pub mod mx;
 pub mod plan;
 pub mod reference;
 
 use crate::formats::ElemFormat;
 use crate::snitch::cluster::{Cluster, ClusterConfig, PerfCounters};
 
-/// Which kernel to run.
+/// Which kernel to run. The hardware kernel carries its element format
+/// (it must match [`MmProblem::fmt`]; the plan layer asserts so).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum KernelKind {
     Fp32,
     Fp8ToFp32,
-    Mxfp8,
+    /// The format-generic `mxdotp` hardware kernel.
+    Mx(ElemFormat),
 }
 
 impl KernelKind {
-    pub fn name(self) -> &'static str {
+    pub fn name(self) -> String {
         match self {
-            KernelKind::Fp32 => "FP32",
-            KernelKind::Fp8ToFp32 => "FP8-to-FP32",
-            KernelKind::Mxfp8 => "MXFP8",
+            KernelKind::Fp32 => "FP32".into(),
+            KernelKind::Fp8ToFp32 => "FP8-to-FP32".into(),
+            KernelKind::Mx(fmt) => format!("MX({fmt})"),
         }
+    }
+
+    /// Element formats this kernel can execute. The FP32 baseline never
+    /// quantizes (any format tag is accepted and ignored); the software
+    /// baseline's `fcvt.s.b` path is FP8-only; the hardware kernel
+    /// covers the whole OCP family.
+    pub fn supported_fmts(self) -> &'static [ElemFormat] {
+        match self {
+            KernelKind::Fp32 => &ElemFormat::ALL,
+            KernelKind::Fp8ToFp32 => &fp8sw::SUPPORTED_FMTS,
+            KernelKind::Mx(_) => &ElemFormat::ALL,
+        }
+    }
+
+    /// Ideal FLOPs per cycle per core, derived from the kernel's issue
+    /// width — for the hardware kernel that is the element format's
+    /// lane count (8 MACs = 16 FLOPs for byte-wide formats, 16 MACs =
+    /// 32 FLOPs for MXFP4), not a hardcoded per-kernel constant.
+    pub fn ideal_flops_per_cycle_per_core(self) -> f64 {
+        match self {
+            KernelKind::Fp32 => 4.0,      // 2-way SIMD MAC
+            KernelKind::Fp8ToFp32 => 4.0, // bounded by the same FPU MACs
+            KernelKind::Mx(fmt) => 2.0 * fmt.hw_lanes() as f64,
+        }
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
     }
 }
 
@@ -77,6 +115,11 @@ impl MmProblem {
     /// The Fig. 4 workload: rows/cols fixed at 64, inner dim varies.
     pub fn fig4(k: usize, fmt: ElemFormat) -> Self {
         MmProblem { m: 64, k, n: 64, fmt, block_size: 32 }
+    }
+
+    /// The hardware kernel for this problem's element format.
+    pub fn mx_kernel(&self) -> KernelKind {
+        KernelKind::Mx(self.fmt)
     }
 
     /// Useful FLOPs (2·M·N·K; scale ops not counted, Table III note).
@@ -103,14 +146,11 @@ impl MmRun {
         self.problem.flops() as f64 / self.perf.cycles as f64 * self.freq_ghz
     }
 
-    /// Ideal per-kernel throughput (GFLOPS) on this cluster.
+    /// Ideal per-kernel throughput (GFLOPS) on this cluster, derived
+    /// from the kernel's format lane width
+    /// ([`KernelKind::ideal_flops_per_cycle_per_core`]).
     pub fn ideal_gflops(&self) -> f64 {
-        let per_core = match self.kind {
-            KernelKind::Fp32 => 4.0,       // 2-way SIMD MAC
-            KernelKind::Fp8ToFp32 => 4.0,  // bounded by the same FPU MACs
-            KernelKind::Mxfp8 => 16.0,     // 8 mul + 8 add per cycle
-        };
-        per_core * self.num_cores as f64 * self.freq_ghz
+        self.kind.ideal_flops_per_cycle_per_core() * self.num_cores as f64 * self.freq_ghz
     }
 
     /// Fraction of the kernel's ideal throughput (the paper's 79.7 %).
@@ -139,7 +179,7 @@ pub fn run_mm(
     let mut cluster = Cluster::new(ClusterConfig { num_cores, freq_ghz: 1.0 });
     match kind {
         KernelKind::Fp32 => mm_plan.execute(&mut cluster, &plan::MmOperands::Fp32 { a, b }),
-        KernelKind::Fp8ToFp32 | KernelKind::Mxfp8 => {
+        KernelKind::Fp8ToFp32 | KernelKind::Mx(_) => {
             let (qa, qb) = mm_plan.quantize(a, b);
             mm_plan.execute(&mut cluster, &plan::MmOperands::Mx { qa: &qa, qb: &qb })
         }
@@ -157,6 +197,16 @@ mod tests {
         assert_eq!(p.flops(), 2 * 64 * 64 * 128);
     }
 
+    #[test]
+    fn ideal_gflops_derives_from_lane_width() {
+        for fmt in ElemFormat::ALL {
+            let want = if fmt == ElemFormat::E2M1 { 32.0 } else { 16.0 };
+            assert_eq!(KernelKind::Mx(fmt).ideal_flops_per_cycle_per_core(), want, "{fmt}");
+        }
+        assert_eq!(KernelKind::Fp32.ideal_flops_per_cycle_per_core(), 4.0);
+        assert_eq!(KernelKind::Fp8ToFp32.ideal_flops_per_cycle_per_core(), 4.0);
+    }
+
     /// Run `kinds` on the simulated cluster and assert bit-agreement
     /// with each kernel's instruction-order-exact reference (NaN
     /// compares as NaN; everything else bit-for-bit).
@@ -172,7 +222,7 @@ mod tests {
             let want = match kind {
                 KernelKind::Fp32 => reference::fp32_hw_ref(&p, a, b),
                 KernelKind::Fp8ToFp32 => reference::fp8sw_hw_ref(&p, a, b),
-                KernelKind::Mxfp8 => reference::mxfp8_hw_ref(&p, a, b),
+                KernelKind::Mx(_) => reference::mx_hw_ref(&p, a, b),
             };
             let run = run_mm(kind, p, a, b, cores);
             assert_eq!(run.c.len(), want.len());
@@ -188,67 +238,71 @@ mod tests {
         }
     }
 
-    const ALL_KINDS: [KernelKind; 3] =
-        [KernelKind::Fp32, KernelKind::Fp8ToFp32, KernelKind::Mxfp8];
-
-    #[test]
-    fn all_three_kernels_agree_with_their_references() {
-        let mut rng = XorShift::new(0xC0DE);
-        let p = MmProblem { m: 16, k: 64, n: 16, fmt: ElemFormat::E4M3, block_size: 32 };
-        let a = rng.normal_vec(p.m * p.k, 1.0);
-        let b = rng.normal_vec(p.k * p.n, 1.0);
-        assert_kernels_agree("e4m3", p, &a, &b, 2, &ALL_KINDS);
+    /// Every kernel that supports `fmt` (fp8sw only covers FP8).
+    fn kinds_for(fmt: ElemFormat) -> Vec<KernelKind> {
+        let mut kinds = vec![KernelKind::Fp32];
+        if KernelKind::Fp8ToFp32.supported_fmts().contains(&fmt) {
+            kinds.push(KernelKind::Fp8ToFp32);
+        }
+        kinds.push(KernelKind::Mx(fmt));
+        kinds
     }
 
     #[test]
-    fn all_three_kernels_agree_on_e5m2() {
-        let mut rng = XorShift::new(0xE5A2);
-        let p = MmProblem { m: 16, k: 64, n: 16, fmt: ElemFormat::E5M2, block_size: 32 };
-        let a = rng.normal_vec(p.m * p.k, 1.0);
-        let b = rng.normal_vec(p.k * p.n, 1.0);
-        assert_kernels_agree("e5m2", p, &a, &b, 2, &ALL_KINDS);
+    fn all_kernels_agree_with_their_references_per_format() {
+        for fmt in ElemFormat::ALL {
+            let mut rng = XorShift::new(0xC0DE ^ fmt.csr_code() as u64);
+            let p = MmProblem { m: 16, k: 64, n: 16, fmt, block_size: 32 };
+            let a = rng.normal_vec(p.m * p.k, 1.0);
+            let b = rng.normal_vec(p.k * p.n, 1.0);
+            assert_kernels_agree(fmt.name(), p, &a, &b, 2, &kinds_for(fmt));
+        }
     }
 
     #[test]
     fn kernels_agree_on_non_default_block_sizes() {
-        // "the block size remains configurable in software": the MXFP8
+        // "the block size remains configurable in software": the MX
         // kernel's ft2 middle bound adapts; FP32 ignores the block size
         // entirely. The FP8-to-FP32 software baseline is written for
         // the spec's block 32 only (its plan asserts so) and is
         // exercised at 32 by the tests above.
-        for bs in [16usize, 64] {
-            let p = MmProblem { m: 8, k: 128, n: 16, fmt: ElemFormat::E4M3, block_size: bs };
-            let mut rng = XorShift::new(0xB5 + bs as u64);
-            let a = rng.normal_vec(p.m * p.k, 1.0);
-            let b = rng.normal_vec(p.k * p.n, 1.0);
-            assert_kernels_agree(
-                &format!("bs={bs}"),
-                p,
-                &a,
-                &b,
-                2,
-                &[KernelKind::Fp32, KernelKind::Mxfp8],
-            );
+        for fmt in [ElemFormat::E4M3, ElemFormat::E2M1, ElemFormat::Int8] {
+            for bs in [16usize, 64] {
+                let p = MmProblem { m: 8, k: 128, n: 16, fmt, block_size: bs };
+                let mut rng = XorShift::new(0xB5 + bs as u64);
+                let a = rng.normal_vec(p.m * p.k, 1.0);
+                let b = rng.normal_vec(p.k * p.n, 1.0);
+                assert_kernels_agree(
+                    &format!("{fmt} bs={bs}"),
+                    p,
+                    &a,
+                    &b,
+                    2,
+                    &[KernelKind::Fp32, KernelKind::Mx(fmt)],
+                );
+            }
         }
     }
 
     #[test]
     fn kernels_agree_on_nan_and_inf_operands() {
         // NaN poisons, E5M2 infinities propagate (E4M3 has no Inf
-        // encoding: the OCP recipe saturates ±Inf to ±max-normal).
-        // The simulator executes these through the architectural
-        // MxDotpUnit; the references must agree element for element.
-        for fmt in [ElemFormat::E4M3, ElemFormat::E5M2] {
+        // encoding: the OCP recipe saturates ±Inf to ±max-normal; the
+        // special-free FP6/FP4 formats saturate NaN to ±max-normal and
+        // MXINT8 maps NaN to 0 at quantization time). The simulator
+        // executes these through the architectural MxDotpUnit; the
+        // references must agree element for element.
+        for fmt in ElemFormat::ALL {
             let p = MmProblem { m: 8, k: 64, n: 16, fmt, block_size: 32 };
             let mut rng = XorShift::new(0x7A7);
             let mut a = rng.normal_vec(p.m * p.k, 1.0);
             let mut b = rng.normal_vec(p.k * p.n, 1.0);
-            a[3] = f32::NAN; // row 0: NaN poisons every C[0][*]
+            a[3] = f32::NAN; // row 0: NaN poisons every C[0][*] (FP8)
             a[p.k + 10] = f32::INFINITY; // row 1: ±Inf propagation
             a[2 * p.k + 5] = f32::NEG_INFINITY;
             b[4 * p.n + 7] = f32::NAN; // column 7 via k=4
             b[9 * p.n + 3] = f32::INFINITY;
-            assert_kernels_agree(&format!("{fmt} specials"), p, &a, &b, 2, &ALL_KINDS);
+            assert_kernels_agree(&format!("{fmt} specials"), p, &a, &b, 2, &kinds_for(fmt));
         }
     }
 
@@ -256,8 +310,8 @@ mod tests {
     fn kernels_agree_on_subnormal_heavy_blocks() {
         // Whole FP32-subnormal blocks force the OCP shared exponent to
         // its EMIN clamp and exercise the quantizer's and datapath's
-        // denormal paths.
-        for fmt in [ElemFormat::E4M3, ElemFormat::E5M2] {
+        // denormal paths — across every element format.
+        for fmt in ElemFormat::ALL {
             let p = MmProblem { m: 8, k: 64, n: 16, fmt, block_size: 32 };
             let mut rng = XorShift::new(0x5AB);
             let mut a = rng.normal_vec(p.m * p.k, 1.0);
@@ -275,17 +329,17 @@ mod tests {
                     b[k * p.n + n] = f32::from_bits(((n * 31 + k) as u32 % 0xFFFF) + 1);
                 }
             }
-            assert_kernels_agree(&format!("{fmt} subnormals"), p, &a, &b, 2, &ALL_KINDS);
+            assert_kernels_agree(&format!("{fmt} subnormals"), p, &a, &b, 2, &kinds_for(fmt));
         }
     }
 
     #[test]
-    fn mxfp8_beats_fp32_beats_fp8sw() {
+    fn mx_beats_fp32_beats_fp8sw() {
         let mut rng = XorShift::new(0x5EED);
         let p = MmProblem::fig4(64, ElemFormat::E4M3);
         let a = rng.normal_vec(p.m * p.k, 1.0);
         let b = rng.normal_vec(p.k * p.n, 1.0);
-        let mx = run_mm(KernelKind::Mxfp8, p, &a, &b, 8);
+        let mx = run_mm(KernelKind::Mx(p.fmt), p, &a, &b, 8);
         let f32k = run_mm(KernelKind::Fp32, p, &a, &b, 8);
         let sw = run_mm(KernelKind::Fp8ToFp32, p, &a, &b, 8);
         assert!(mx.gflops() > f32k.gflops() * 2.0, "mx {} vs fp32 {}", mx.gflops(), f32k.gflops());

@@ -31,7 +31,7 @@
 
 use super::fp32::{self, Fp32Layout};
 use super::fp8sw;
-use super::mxfp8::{self, MxRegions};
+use super::mx::{self, MxRegions};
 use super::reference::{quantize_a, quantize_b};
 use super::{KernelKind, MmProblem, MmRun};
 use crate::formats::{ElemFormat, MxMatrix};
@@ -112,8 +112,13 @@ impl MmPlan {
                 let c = r.c.addr;
                 (PlanLayout::Mx(r), progs, c)
             }
-            KernelKind::Mxfp8 => {
-                let (r, progs) = mxfp8::plan(p, key.cores);
+            KernelKind::Mx(fmt) => {
+                assert_eq!(
+                    fmt, p.fmt,
+                    "MX kernel format {fmt} does not match the problem's {}",
+                    p.fmt
+                );
+                let (r, progs) = mx::plan(p, key.cores);
                 let c = r.c.addr;
                 (PlanLayout::Mx(r), progs, c)
             }
@@ -154,7 +159,7 @@ impl MmPlan {
                 fp32::write_operands(&mut cluster.spm, l, &p, a, b);
             }
             (PlanLayout::Mx(r), MmOperands::Mx { qa, qb }) => {
-                mxfp8::write_mx_operands(&mut cluster.spm, r, &p, qa, qb);
+                mx::write_mx_operands(&mut cluster.spm, r, &p, qa, qb);
             }
             _ => panic!("{} plan executed with mismatched operand kind", self.key.kind.name()),
         }
@@ -195,23 +200,32 @@ impl MmPlan {
 /// plus a 2x factor on scalar reshape traffic for lost LSU arbitration.
 /// Deliberately conservative: expiry means deadlock, not slowness.
 pub fn cycle_bound(kind: KernelKind, p: &MmProblem, cores: usize) -> u64 {
-    let tiles = ((p.m / cores).max(1) as u64) * (p.n as u64 / 8).max(1);
     let k = p.k as u64;
     let kb = (p.k / p.block_size).max(1) as u64;
     // SSR/CSR setup plus the prologue reshape (≈29 int instructions per
     // block, doubled for worst-case LSU arbitration).
     let setup = 400 + 60 * kb;
-    let per_tile = match kind {
+    let (tiles, per_tile) = match kind {
         // 8-instruction FREP body replayed K/2 times = 4K vfmac issues,
         // ×8 worst-case stream serialization, + epilogue.
-        KernelKind::Fp32 => 32 * k + 200,
-        // K/8 mxdotp ×8 serialization, + the (normally hidden) reshape
-        // of the next tile ×2, + fences/stores.
-        KernelKind::Mxfp8 => 8 * k + 60 * kb + 200,
+        KernelKind::Fp32 => {
+            (((p.m / cores).max(1) as u64) * (p.n as u64 / 8).max(1), 32 * k + 200)
+        }
+        // unroll × K/lanes mxdotp ×8 serialization, + the (normally
+        // hidden) reshape of the next tile ×2, + fences/stores.
+        KernelKind::Mx(fmt) => {
+            let lanes = fmt.hw_lanes() as u64;
+            let unroll = super::mx::mx_unroll(p) as u64;
+            let tiles = ((p.m / cores).max(1) as u64) * (p.n as u64 / unroll).max(1);
+            (tiles, 8 * unroll * (k / lanes).max(1) + 8 * unroll * kb + 200)
+        }
         // Per output: per block ≈ 114 FPU issues (2 moves + 16 converts
         // + 8 FMAs per word, ×4 words, + reduction and scale ops); 8
         // outputs per tile, ×8 worst-case serialization.
-        KernelKind::Fp8ToFp32 => 8 * 8 * 114 * kb + 60 * kb + 400,
+        KernelKind::Fp8ToFp32 => (
+            ((p.m / cores).max(1) as u64) * (p.n as u64 / 8).max(1),
+            8 * 8 * 114 * kb + 60 * kb + 400,
+        ),
     };
     setup + tiles * per_tile
 }
@@ -473,7 +487,7 @@ pub fn run_mm_cached(
     }
     let run = match kind {
         KernelKind::Fp32 => plan.execute(cluster, &MmOperands::Fp32 { a, b }),
-        KernelKind::Fp8ToFp32 | KernelKind::Mxfp8 => {
+        KernelKind::Fp8ToFp32 | KernelKind::Mx(_) => {
             let qa = quantize_a(&problem, a);
             let qb = cache.quantized_b(&problem, b, bfp);
             plan.execute(cluster, &MmOperands::Mx { qa: &qa, qb: &qb })
@@ -501,7 +515,7 @@ mod tests {
     #[test]
     fn cached_run_bit_and_cycle_identical_to_cold_run() {
         let (p, a, b) = small();
-        for kind in [KernelKind::Fp32, KernelKind::Fp8ToFp32, KernelKind::Mxfp8] {
+        for kind in [KernelKind::Fp32, KernelKind::Fp8ToFp32, KernelKind::Mx(p.fmt)] {
             let cold = run_mm(kind, p, &a, &b, 4);
             let cache = PlanCache::new();
             let mut cluster = Cluster::new(ClusterConfig { num_cores: 4, freq_ghz: 1.0 });
@@ -525,8 +539,8 @@ mod tests {
         let (p, a, b) = small();
         let cache = PlanCache::disabled();
         let mut cluster = Cluster::new(ClusterConfig { num_cores: 4, freq_ghz: 1.0 });
-        let r1 = run_mm_cached(&cache, &mut cluster, KernelKind::Mxfp8, p, &a, &b);
-        let r2 = run_mm_cached(&cache, &mut cluster, KernelKind::Mxfp8, p, &a, &b);
+        let r1 = run_mm_cached(&cache, &mut cluster, KernelKind::Mx(p.fmt), p, &a, &b);
+        let r2 = run_mm_cached(&cache, &mut cluster, KernelKind::Mx(p.fmt), p, &a, &b);
         for (c1, c2) in r1.c.iter().zip(&r2.c) {
             assert_eq!(c1.to_bits(), c2.to_bits());
         }
@@ -542,15 +556,15 @@ mod tests {
         let a2 = rng.normal_vec(p.m * p.k, 2.0);
         let cache = PlanCache::new();
         let mut cluster = Cluster::new(ClusterConfig { num_cores: 4, freq_ghz: 1.0 });
-        let r1 = run_mm_cached(&cache, &mut cluster, KernelKind::Mxfp8, p, &a, &b);
-        let r2 = run_mm_cached(&cache, &mut cluster, KernelKind::Mxfp8, p, &a2, &b);
+        let r1 = run_mm_cached(&cache, &mut cluster, KernelKind::Mx(p.fmt), p, &a, &b);
+        let r2 = run_mm_cached(&cache, &mut cluster, KernelKind::Mx(p.fmt), p, &a2, &b);
         // different A data: plan and B tile hit, pass misses
         let st = cache.stats();
         assert_eq!(st.plan_hits, 1);
         assert_eq!(st.b_tile_hits, 1);
         assert_eq!(st.pass_hits, 0);
         // and the second result matches its own cold run
-        let cold2 = run_mm(KernelKind::Mxfp8, p, &a2, &b, 4);
+        let cold2 = run_mm(KernelKind::Mx(p.fmt), p, &a2, &b, 4);
         for (g, w) in r2.c.iter().zip(&cold2.c) {
             assert_eq!(g.to_bits(), w.to_bits());
         }
@@ -574,7 +588,13 @@ mod tests {
         // The per-kernel worst-case bound must comfortably exceed every
         // measured run (it guards deadlocks, not slowness).
         let (p, a, b) = small();
-        for kind in [KernelKind::Fp32, KernelKind::Fp8ToFp32, KernelKind::Mxfp8] {
+        let mut kinds = vec![KernelKind::Fp32, KernelKind::Fp8ToFp32];
+        kinds.extend(ElemFormat::ALL.map(KernelKind::Mx));
+        for kind in kinds {
+            let p = match kind {
+                KernelKind::Mx(fmt) => MmProblem { fmt, ..p },
+                _ => p,
+            };
             let run = run_mm(kind, p, &a, &b, 4);
             let bound = cycle_bound(kind, &p, 4);
             assert!(
@@ -587,10 +607,10 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "MXFP8 kernel did not finish")]
+    #[should_panic(expected = "MX(e4m3) kernel did not finish")]
     fn guard_expiry_names_the_kernel() {
         let (p, a, b) = small();
-        let plan = MmPlan::build(PlanKey::new(KernelKind::Mxfp8, &p, 4));
+        let plan = MmPlan::build(PlanKey::new(KernelKind::Mx(p.fmt), &p, 4));
         // A sabotaged plan with a 1-cycle bound must trip the guard and
         // name the offending kernel.
         let hobbled = MmPlan { cycle_bound: 1, ..plan };

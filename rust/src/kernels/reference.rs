@@ -9,8 +9,8 @@
 //! failure, not a tolerance.
 
 use super::MmProblem;
-use crate::dotp::{Fp8Format, MxDotpUnit};
-use crate::formats::{ElemFormat, MxMatrix, ScaleAxis};
+use crate::dotp::MxDotpUnit;
+use crate::formats::{MxMatrix, ScaleAxis};
 
 /// Stage-identical quantization of the A operand (row-axis blocks
 /// along K). The single definition shared by the kernel plans, the
@@ -30,19 +30,6 @@ pub fn quantize_b(p: &MmProblem, b: &[f32]) -> MxMatrix {
 /// Stage-identical quantization of both operands.
 pub fn quantize_operands(p: &MmProblem, a: &[f32], b: &[f32]) -> (MxMatrix, MxMatrix) {
     (quantize_a(p, a), quantize_b(p, b))
-}
-
-/// The architectural `mxdotp` unit for an element format (the same
-/// special-value semantics — NaN poisoning, E5M2 infinity propagation —
-/// the simulated FPU executes, so references agree bit-for-bit even on
-/// NaN/Inf operands).
-fn unit_for(fmt: ElemFormat) -> MxDotpUnit {
-    let fmt8 = match fmt {
-        ElemFormat::E4M3 => Fp8Format::E4m3,
-        ElemFormat::E5M2 => Fp8Format::E5m2,
-        other => panic!("MXFP8 kernel needs an FP8 format, got {other}"),
-    };
-    MxDotpUnit::new(fmt8)
 }
 
 /// FP32 kernel reference: 2-way SIMD `vfmac.s` lane split (even k in
@@ -105,31 +92,34 @@ fn e8m0_to_f32(byte: u8) -> f32 {
     crate::formats::E8m0(byte).value_f32()
 }
 
-/// MXFP8 kernel reference: one `mxdotp` (exact sum, single RNE round)
-/// per 8 elements, accumulated in instruction order along K, executed
-/// through the same architectural unit as the simulated FPU (so
-/// NaN/Inf special semantics match bit-for-bit too).
-pub fn mxfp8_hw_ref(p: &MmProblem, a: &[f32], b: &[f32]) -> Vec<f32> {
+/// MX hardware-kernel reference: one `mxdotp` (exact sum, single RNE
+/// round) per issue-width of elements (8, or 16 for FP4), accumulated
+/// in instruction order along K, executed through the same
+/// architectural unit as the simulated FPU (so NaN/Inf special
+/// semantics match bit-for-bit too) — for every OCP element format.
+pub fn mx_hw_ref(p: &MmProblem, a: &[f32], b: &[f32]) -> Vec<f32> {
     let (qa, qb) = quantize_operands(p, a, b);
-    mxfp8_hw_ref_quantized(p, &qa, &qb)
+    mx_hw_ref_quantized(p, &qa, &qb)
 }
 
-/// [`mxfp8_hw_ref`] on pre-quantized operands (the plan layer's
-/// reusable tile buffers).
-pub fn mxfp8_hw_ref_quantized(p: &MmProblem, qa: &MxMatrix, qb: &MxMatrix) -> Vec<f32> {
-    let mut unit = unit_for(p.fmt);
-    let per_block = p.block_size / 8;
+/// [`mx_hw_ref`] on pre-quantized operands (the plan layer's reusable
+/// tile buffers).
+pub fn mx_hw_ref_quantized(p: &MmProblem, qa: &MxMatrix, qb: &MxMatrix) -> Vec<f32> {
+    let mut unit = MxDotpUnit::new(p.fmt);
+    let lanes = p.fmt.hw_lanes();
+    assert_eq!(p.block_size % lanes, 0, "{}: block size vs issue width", p.fmt);
+    let per_block = p.block_size / lanes;
+    let mut pa = vec![0u8; lanes];
+    let mut pb = vec![0u8; lanes];
     let mut c = vec![0.0f32; p.m * p.n];
     for m in 0..p.m {
         for n in 0..p.n {
             let mut acc = 0.0f32;
-            for k8 in 0..p.k / 8 {
-                let kb = k8 / per_block;
-                let mut pa = [0u8; 8];
-                let mut pb = [0u8; 8];
-                for i in 0..8 {
-                    pa[i] = qa.elem_bits(m, k8 * 8 + i);
-                    pb[i] = qb.elem_bits(k8 * 8 + i, n);
+            for ki in 0..p.k / lanes {
+                let kb = ki / per_block;
+                for i in 0..lanes {
+                    pa[i] = qa.elem_bits(m, ki * lanes + i);
+                    pb[i] = qb.elem_bits(ki * lanes + i, n);
                 }
                 let xa = qa.scale(m, kb).0;
                 let xb = qb.scale(n, kb).0;
@@ -175,7 +165,7 @@ mod tests {
         let exact = matmul_f64(&p, &a, &b);
         let fp32 = fp32_hw_ref(&p, &a, &b);
         let sw = fp8sw_hw_ref(&p, &a, &b);
-        let mx = mxfp8_hw_ref(&p, &a, &b);
+        let mx = mx_hw_ref(&p, &a, &b);
         let scale = (p.k as f64).sqrt();
         for i in 0..exact.len() {
             assert!((fp32[i] as f64 - exact[i]).abs() < 1e-4 * scale, "fp32[{i}]");
@@ -196,7 +186,7 @@ mod tests {
         let a = rng.normal_vec(p.m * p.k, 1.0);
         let b = rng.normal_vec(p.k * p.n, 1.0);
         let sw = fp8sw_hw_ref(&p, &a, &b);
-        let mx = mxfp8_hw_ref(&p, &a, &b);
+        let mx = mx_hw_ref(&p, &a, &b);
         for i in 0..sw.len() {
             let d = (sw[i] - mx[i]).abs();
             assert!(d <= 1e-4 * sw[i].abs().max(1.0), "sw {} vs mx {}", sw[i], mx[i]);
@@ -211,7 +201,7 @@ mod tests {
         let mut a = vec![100.0f32; 32];
         a.extend(vec![0.01f32; 32]);
         let b = vec![1.0f32; 64];
-        let mx = mxfp8_hw_ref(&p, &a, &b);
+        let mx = mx_hw_ref(&p, &a, &b);
         let want = 32.0 * 100.0 + 32.0 * 0.01;
         // e4m3 mid-grid values like 100.0 carry up to 4% quantization error
         assert!((mx[0] - want).abs() / want < 0.05, "{} vs {want}", mx[0]);

@@ -10,13 +10,16 @@
 //!   block scales, RNE quantization, and the spec's Dot / DotGeneral.
 //! * [`dotp`] — a bit-accurate model of the MXDOTP dot-product-
 //!   accumulate datapath (95-bit fixed-point early accumulation,
-//!   anchor 34, single RNE round to FP32) plus the baseline units the
-//!   paper compares against in Table III.
+//!   anchor 34, single RNE round to FP32), format-generic over the
+//!   whole OCP element family (8 × FP8/FP6/INT8 or 16 × FP4 lanes per
+//!   issue, DESIGN.md §11), plus the baseline units the paper compares
+//!   against in Table III.
 //! * [`snitch`] — a cycle-accurate simulator of the 8-core Snitch
 //!   cluster: RV32IMAFD subset + FREP + SSR + the `mxdotp` instruction,
 //!   32-bank shared L1 SPM behind a logarithmic interconnect, DMA.
-//! * [`kernels`] — the three matrix-multiplication kernels of Fig. 2
-//!   (FP32, FP8-to-FP32 software MX, MXFP8 hardware MX) as instruction-
+//! * [`kernels`] — the matrix-multiplication kernels of Fig. 2
+//!   (FP32, FP8-to-FP32 software MX, and the format-generic MX
+//!   hardware kernel) as instruction-
 //!   stream builders, split into a compile-once plan layer
 //!   (`kernels::plan`: shape-keyed SPM layouts + shared per-core
 //!   programs + worst-case cycle bounds, with a warm `PlanCache` for

@@ -70,8 +70,8 @@ fn main() -> Result<()> {
             let a = rng.normal_vec(m * k, 1.0);
             let b = rng.normal_vec(k * n, 1.0);
             if clusters > 1 {
-                if kernel != mxdotp::kernels::KernelKind::Mxfp8 {
-                    eprintln!("note: --clusters shards the MXFP8 kernel; ignoring --kernel");
+                if !matches!(kernel, mxdotp::kernels::KernelKind::Mx(_)) {
+                    eprintln!("note: --clusters shards the MX hardware kernel; ignoring --kernel");
                 }
                 let scfg = ScaleoutConfig {
                     clusters,
@@ -81,7 +81,7 @@ fn main() -> Result<()> {
                 };
                 let run = sharded_mm(&scfg, p, &a, &b);
                 println!(
-                    "MXFP8 {m}x{k}x{n} sharded across {clusters} clusters x {cores} cores \
+                    "MX({fmt}) {m}x{k}x{n} sharded across {clusters} clusters x {cores} cores \
                      ({} shards):",
                     run.shards
                 );
@@ -117,6 +117,10 @@ fn main() -> Result<()> {
                 let point = report::table3_cluster_point(42);
                 println!("{}", report::render_table3(Some(&point)));
             }
+            if what == "formats" || what == "all" {
+                let points = report::format_sweep(cores, 42, &report::FIG4_K_SWEEP);
+                println!("{}", report::render_format_sweep(&points, cores));
+            }
             if what == "scaling" || what == "all" {
                 let cfg = DeitConfig { fmt, ..DeitConfig::default() };
                 // The standard sweep points below the requested fabric
@@ -136,10 +140,10 @@ fn main() -> Result<()> {
                 println!("{}", report::render_scaling(&points, &cfg));
             }
         }
-        Command::Serve { requests, batch, clusters, artifacts, cold_plans } => {
-            let cfg = DeitConfig::default();
+        Command::Serve { requests, batch, clusters, fmt, artifacts, cold_plans } => {
+            let cfg = DeitConfig { fmt, ..DeitConfig::default() };
             let params = generate_params(&cfg, 42);
-            println!("calibrating MXFP8 utilization on the cycle-accurate cluster...");
+            println!("calibrating MX({fmt}) utilization on the cycle-accurate cluster...");
             let util = calibrate_util(&cfg, snitch::NUM_CORES, 1, cold_plans);
             println!("  calibrated utilization: {:.1} %", util * 100.0);
             let scfg = ScaleoutConfig { cold_plans, ..ScaleoutConfig::with_clusters(clusters) };

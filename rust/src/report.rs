@@ -28,6 +28,9 @@ pub struct Fig4Point {
 }
 
 /// Run the full Fig. 4 sweep (both subfigures) for one element format.
+/// The FP8-to-FP32 software baseline only exists for the FP8 formats;
+/// for the other element formats its column is absent (like FP32 at
+/// K=256).
 pub fn fig4_sweep(fmt: ElemFormat, num_cores: usize, seed: u64) -> Vec<Fig4Point> {
     let em = EnergyModel;
     let mut points = Vec::new();
@@ -36,14 +39,17 @@ pub fn fig4_sweep(fmt: ElemFormat, num_cores: usize, seed: u64) -> Vec<Fig4Point
         let mut rng = XorShift::new(seed ^ kdim as u64);
         let a = rng.normal_vec(p.m * p.k, 1.0);
         let b = rng.normal_vec(p.k * p.n, 1.0);
-        let mut kinds = vec![KernelKind::Fp8ToFp32, KernelKind::Mxfp8];
+        let mut kinds = vec![KernelKind::Mx(fmt)];
+        if KernelKind::Fp8ToFp32.supported_fmts().contains(&fmt) {
+            kinds.insert(0, KernelKind::Fp8ToFp32);
+        }
         // the paper's footnote: FP32 does not fit into L1 at K=256
         if layout::fp32_footprint(&p) <= crate::snitch::SPM_BYTES {
             kinds.insert(0, KernelKind::Fp32);
         }
         for kind in kinds {
             let run = run_mm(kind, p, &a, &b, num_cores);
-            let with_mx = kind == KernelKind::Mxfp8;
+            let with_mx = matches!(kind, KernelKind::Mx(_));
             let power = em.power(&run.perf, run.freq_ghz, with_mx);
             points.push(Fig4Point {
                 k: kdim,
@@ -82,7 +88,10 @@ pub fn headline(points: &[Fig4Point]) -> Headline {
     };
     for &kdim in &FIG4_K_SWEEP {
         let get = |kind: KernelKind| points.iter().find(|p| p.k == kdim && p.kind == kind);
-        let Some(mx) = get(KernelKind::Mxfp8) else { continue };
+        let Some(mx) = points.iter().find(|p| p.k == kdim && matches!(p.kind, KernelKind::Mx(_)))
+        else {
+            continue;
+        };
         h.peak_gflops = h.peak_gflops.max(mx.gflops);
         h.peak_gflops_per_w = h.peak_gflops_per_w.max(mx.gflops_per_w);
         h.peak_utilization = h.peak_utilization.max(mx.utilization);
@@ -110,7 +119,7 @@ pub fn render_fig4(points: &[Fig4Point], fmt: ElemFormat) -> String {
          (paper: MXFP8 up to 102 GFLOPS / 356 GFLOPS/W; FP32 absent at K=256)\n\n"
     ));
     s.push_str("(a) Throughput [GFLOPS]\n");
-    s.push_str("  K      FP32   FP8-to-FP32   MXFP8    (MXFP8 util)\n");
+    s.push_str("  K      FP32   FP8-to-FP32   MX-HW    (MX util)\n");
     for &kdim in &FIG4_K_SWEEP {
         let cell = |kind| {
             points
@@ -121,19 +130,19 @@ pub fn render_fig4(points: &[Fig4Point], fmt: ElemFormat) -> String {
         };
         let util = points
             .iter()
-            .find(|p| p.k == kdim && p.kind == KernelKind::Mxfp8)
+            .find(|p| p.k == kdim && p.kind == KernelKind::Mx(fmt))
             .map(|p| p.utilization)
             .unwrap_or(0.0);
         s.push_str(&format!(
             "  {kdim:<4} {}  {}       {}     ({:.1} %)\n",
             cell(KernelKind::Fp32),
             cell(KernelKind::Fp8ToFp32),
-            cell(KernelKind::Mxfp8),
+            cell(KernelKind::Mx(fmt)),
             util * 100.0
         ));
     }
     s.push_str("\n(b) Energy efficiency [GFLOPS/W]\n");
-    s.push_str("  K      FP32   FP8-to-FP32   MXFP8\n");
+    s.push_str("  K      FP32   FP8-to-FP32   MX-HW\n");
     for &kdim in &FIG4_K_SWEEP {
         let cell = |kind| {
             points
@@ -146,30 +155,37 @@ pub fn render_fig4(points: &[Fig4Point], fmt: ElemFormat) -> String {
             "  {kdim:<4} {}  {}       {}\n",
             cell(KernelKind::Fp32),
             cell(KernelKind::Fp8ToFp32),
-            cell(KernelKind::Mxfp8)
+            cell(KernelKind::Mx(fmt))
         ));
     }
     let h = headline(points);
+    // A baseline can be absent from the sweep (FP32 never fits at
+    // K=256; the FP8-software kernel only exists for the FP8 formats):
+    // its ratio range then still holds the (f64::MAX, 0.0) init and
+    // must render as a dash, not the sentinel.
+    let range = |r: (f64, f64), prec: usize| {
+        if r.0 == f64::MAX {
+            "      —      ".to_string()
+        } else {
+            format!("{:.p$}x – {:.p$}x", r.0, r.1, p = prec)
+        }
+    };
     s.push_str(&format!(
         "\n§IV-C headline (measured vs paper):\n\
            peak throughput    {:6.1} GFLOPS      (paper 102)\n\
            peak efficiency    {:6.1} GFLOPS/W    (paper 356)\n\
            peak utilization   {:6.1} %           (paper 79.7)\n\
-           speedup vs FP32    {:.2}x – {:.2}x      (paper 3.1x – 3.4x)\n\
-           speedup vs FP8-SW  {:.1}x – {:.1}x      (paper 20.9x – 25.0x)\n\
-           energy  vs FP32    {:.2}x – {:.2}x      (paper 3.0x – 3.2x)\n\
-           energy  vs FP8-SW  {:.1}x – {:.1}x      (paper 10.4x – 12.5x)\n",
+           speedup vs FP32    {}      (paper 3.1x – 3.4x)\n\
+           speedup vs FP8-SW  {}      (paper 20.9x – 25.0x)\n\
+           energy  vs FP32    {}      (paper 3.0x – 3.2x)\n\
+           energy  vs FP8-SW  {}      (paper 10.4x – 12.5x)\n",
         h.peak_gflops,
         h.peak_gflops_per_w,
         h.peak_utilization * 100.0,
-        h.speedup_vs_fp32.0,
-        h.speedup_vs_fp32.1,
-        h.speedup_vs_sw.0,
-        h.speedup_vs_sw.1,
-        h.eff_vs_fp32.0,
-        h.eff_vs_fp32.1,
-        h.eff_vs_sw.0,
-        h.eff_vs_sw.1,
+        range(h.speedup_vs_fp32, 2),
+        range(h.speedup_vs_sw, 1),
+        range(h.eff_vs_fp32, 2),
+        range(h.eff_vs_sw, 1),
     ));
     s
 }
@@ -280,9 +296,99 @@ pub fn render_table3(cluster_point: Option<&Fig4Point>) -> String {
 pub fn table3_cluster_point(seed: u64) -> Fig4Point {
     fig4_sweep(ElemFormat::E4M3, 8, seed)
         .into_iter()
-        .filter(|p| p.kind == KernelKind::Mxfp8 && p.k == 256)
+        .filter(|p| matches!(p.kind, KernelKind::Mx(_)) && p.k == 256)
         .next_back()
         .expect("sweep must contain the K=256 MXFP8 point")
+}
+
+/// One row of the format sweep: the hardware kernel run on a Fig. 4
+/// shape for one element format.
+#[derive(Clone, Debug)]
+pub struct FormatPoint {
+    pub fmt: ElemFormat,
+    pub k: usize,
+    pub gflops: f64,
+    pub gflops_per_w: f64,
+    pub utilization: f64,
+    pub cycles: u64,
+    pub mxdotp: u64,
+    /// Relative L2 error vs the f64 matmul of the same inputs (the
+    /// precision side of the format trade-off).
+    pub rel_err: f64,
+}
+
+/// Run the format-generic hardware kernel on the Fig. 4 shapes for
+/// every OCP element format (the format-sweep table alongside
+/// fig3/fig4/table3). Inputs are identical across formats, so
+/// throughput and accuracy columns are directly comparable.
+pub fn format_sweep(num_cores: usize, seed: u64, ks: &[usize]) -> Vec<FormatPoint> {
+    let em = EnergyModel;
+    let mut points = Vec::new();
+    for &kdim in ks {
+        let base = MmProblem::fig4(kdim, ElemFormat::E4M3);
+        let mut rng = XorShift::new(seed ^ kdim as u64);
+        let a = rng.normal_vec(base.m * base.k, 1.0);
+        let b = rng.normal_vec(base.k * base.n, 1.0);
+        let exact = crate::kernels::reference::matmul_f64(&base, &a, &b);
+        for fmt in ElemFormat::ALL {
+            let p = MmProblem { fmt, ..base };
+            let run = run_mm(KernelKind::Mx(fmt), p, &a, &b, num_cores);
+            let num: f64 =
+                run.c.iter().zip(&exact).map(|(&g, &w)| (g as f64 - w).powi(2)).sum();
+            let den: f64 = exact.iter().map(|&w| w * w).sum();
+            points.push(FormatPoint {
+                fmt,
+                k: kdim,
+                gflops: run.gflops(),
+                gflops_per_w: em.gflops_per_w(&run.perf, p.flops(), run.freq_ghz, true),
+                utilization: run.utilization(),
+                cycles: run.perf.cycles,
+                mxdotp: run.perf.mxdotp_total(),
+                rel_err: (num / den).sqrt(),
+            });
+        }
+    }
+    points
+}
+
+/// Render the format sweep as text.
+pub fn render_format_sweep(points: &[FormatPoint], num_cores: usize) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Format sweep — the format-generic MX datapath on the Fig. 4 shapes \
+         (M=N=64, {num_cores} cores @ 1 GHz)\n\
+         (lanes/issue: 8 for FP8/FP6/INT8, 16 for FP4 -> 32 ideal FLOPs/cycle/core)\n\n"
+    ));
+    s.push_str("  K    fmt     GFLOPS   util     GFLOPS/W   rel.err    mxdotp\n");
+    for p in points {
+        s.push_str(&format!(
+            "  {:<4} {:<6} {:>7.1}  {:>5.1} %  {:>8.1}   {:<9.5}{:>9}\n",
+            p.k,
+            p.fmt.name(),
+            p.gflops,
+            p.utilization * 100.0,
+            p.gflops_per_w,
+            p.rel_err,
+            p.mxdotp
+        ));
+    }
+    // the headline ratio the FP4 path exists for
+    if let (Some(f8), Some(f4)) = (
+        points.iter().filter(|p| p.fmt == ElemFormat::E4M3).max_by_key(|p| p.k),
+        points.iter().filter(|p| p.fmt == ElemFormat::E2M1).max_by_key(|p| p.k),
+    ) {
+        s.push_str(&format!(
+            "\n  MXFP4 vs MXFP8 at K={}: {:.2}x throughput ({:.1} vs {:.1} GFLOPS) at \
+             {:.1} %/{:.1} % utilization\n",
+            f8.k,
+            f4.gflops / f8.gflops,
+            f4.gflops,
+            f8.gflops,
+            f4.utilization * 100.0,
+            f8.utilization * 100.0,
+        ));
+    }
+    s
 }
 
 /// The default strong-scaling sweep (the scale-out scaling table).
@@ -401,7 +507,7 @@ pub fn render_scaling(points: &[ScalingPoint], cfg: &DeitConfig) -> String {
 /// Summarize an MmRun for CLI output.
 pub fn render_run(run: &MmRun) -> String {
     let em = EnergyModel;
-    let with_mx = run.kind == KernelKind::Mxfp8;
+    let with_mx = matches!(run.kind, KernelKind::Mx(_));
     let power = em.power(&run.perf, run.freq_ghz, with_mx);
     format!(
         "{} {}x{}x{} ({} cores): {} cycles, {:.1} GFLOPS ({:.1} % of ideal), {:.1} mW, {:.1} GFLOPS/W",
@@ -421,7 +527,7 @@ pub fn render_run(run: &MmRun) -> String {
 /// Detailed run report: summary line + cycle-accounting breakdown.
 pub fn render_run_detailed(run: &MmRun) -> String {
     let bd = crate::snitch::trace::CycleBreakdown::from_perf(&run.perf, |c| match run.kind {
-        KernelKind::Mxfp8 => c.mxdotp,
+        KernelKind::Mx(_) => c.mxdotp,
         KernelKind::Fp32 => c.vfmac,
         KernelKind::Fp8ToFp32 => c.fma_s,
     });
@@ -465,13 +571,49 @@ mod tests {
     }
 
     #[test]
+    fn format_sweep_covers_all_formats_and_fp4_leads() {
+        // 2-core, single-K quick sweep: every format present, FP4 the
+        // fastest (16 lanes/issue), FP8 more accurate than FP4.
+        let pts = format_sweep(2, 1, &[64]);
+        assert_eq!(pts.len(), ElemFormat::ALL.len());
+        let g = |fmt| pts.iter().find(|p| p.fmt == fmt).unwrap();
+        let f4 = g(ElemFormat::E2M1);
+        let f8 = g(ElemFormat::E4M3);
+        assert!(f4.gflops > f8.gflops * 1.5, "{} vs {}", f4.gflops, f8.gflops);
+        assert!(f8.rel_err < f4.rel_err, "e4m3 should be more accurate than e2m1");
+        for p in &pts {
+            assert!(p.utilization > 0.2 && p.utilization <= 1.0, "{}: {}", p.fmt, p.utilization);
+        }
+        let text = render_format_sweep(&pts, 2);
+        assert!(text.contains("Format sweep"));
+        for fmt in ElemFormat::ALL {
+            assert!(text.contains(fmt.name()), "{fmt} missing from table");
+        }
+    }
+
+    #[test]
+    fn fig4_sweep_runs_for_non_fp8_formats_without_sw_baseline() {
+        let pts = fig4_sweep(ElemFormat::E2M1, 2, 1);
+        assert!(pts.iter().all(|p| p.kind != KernelKind::Fp8ToFp32));
+        assert!(pts.iter().any(|p| p.kind == KernelKind::Mx(ElemFormat::E2M1)));
+        let text = render_fig4(&pts, ElemFormat::E2M1);
+        assert!(text.contains("e2m1"));
+        // absent-baseline ratio rows render a dash, not the f64::MAX
+        // sentinel (the FP8-SW kernel does not exist for FP4)
+        assert!(text.contains("speedup vs FP8-SW        —"), "{text}");
+        assert!(!text.contains("17976931"), "sentinel leaked into the headline:\n{text}");
+        // the FP32 rows are still real ranges (FP32 runs at K<=128)
+        assert!(text.contains("speedup vs FP32"));
+    }
+
+    #[test]
     fn fig4_sweep_small_cluster_shape() {
         // 2-core quick sweep: shape must hold (mx > fp32 > sw at K=128).
         let pts = fig4_sweep(ElemFormat::E4M3, 2, 1);
         let g = |k: usize, kind| {
             pts.iter().find(|p| p.k == k && p.kind == kind).map(|p| p.gflops)
         };
-        let mx = g(128, KernelKind::Mxfp8).unwrap();
+        let mx = g(128, KernelKind::Mx(ElemFormat::E4M3)).unwrap();
         let f = g(128, KernelKind::Fp32).unwrap();
         let sw = g(128, KernelKind::Fp8ToFp32).unwrap();
         assert!(mx > f && f > sw, "{mx} {f} {sw}");

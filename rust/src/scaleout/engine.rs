@@ -193,7 +193,7 @@ impl ClusterEngine {
             for col in &cols {
                 let sub =
                     MmProblem { m: mpad, k: kc, n: col.w8, fmt: p.fmt, block_size: p.block_size };
-                let key = PlanKey::new(KernelKind::Mxfp8, &sub, self.cores);
+                let key = PlanKey::new(KernelKind::Mx(p.fmt), &sub, self.cores);
                 let run: MmRun = match cache.pass(&key, afp, col.bfp) {
                     Some(hit) => hit.to_run(&key, self.freq_ghz),
                     None => {
@@ -231,7 +231,7 @@ impl ClusterEngine {
 mod tests {
     use super::*;
     use crate::formats::ElemFormat;
-    use crate::kernels::reference::mxfp8_hw_ref;
+    use crate::kernels::reference::mx_hw_ref;
     use crate::rng::XorShift;
     use crate::snitch::NUM_CORES;
 
@@ -275,7 +275,7 @@ mod tests {
         let job = ShardJob { shard: &shard, problem: p, a: &a, b: &b };
         let out = e.run_shard(&job, &mut cluster, &cache);
         assert!(out.passes >= 6, "expected multiple passes, got {}", out.passes);
-        let want = mxfp8_hw_ref(&p, &a, &b);
+        let want = mx_hw_ref(&p, &a, &b);
         for (i, (got, w)) in out.c.iter().zip(&want).enumerate() {
             assert_eq!(got.to_bits(), w.to_bits(), "C[{i}]: {got} vs {w}");
         }

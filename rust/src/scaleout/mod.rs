@@ -1,6 +1,7 @@
-//! Multi-cluster scale-out engine (DESIGN.md §9): shard an MXFP8 GEMM
-//! across N simulated Snitch clusters and drive the cycle-accurate
-//! simulations concurrently on a pool of OS threads.
+//! Multi-cluster scale-out engine (DESIGN.md §9): shard an MX GEMM
+//! (any OCP element format, DESIGN.md §11) across N simulated Snitch
+//! clusters and drive the cycle-accurate simulations concurrently on a
+//! pool of OS threads.
 //!
 //! The paper measures one 8-core cluster (up to 102 GFLOPS,
 //! 356 GFLOPS/W). This subsystem extends those numbers to a manycore
@@ -149,7 +150,8 @@ impl ShardedRun {
     }
 }
 
-/// Run one MXFP8 GEMM sharded across the configured fabric.
+/// Run one MX GEMM (hardware kernel at `problem.fmt`) sharded across
+/// the configured fabric.
 ///
 /// `a` is row-major `m × k`, `b` row-major `k × n`; any shape is
 /// accepted (padding handled internally, result cropped to `m × n`).
@@ -282,7 +284,7 @@ mod tests {
     fn one_cluster_matches_direct_run_mm_bitwise() {
         let (p, a, b) = small();
         let sharded = sharded_mm(&ScaleoutConfig::default(), p, &a, &b);
-        let direct = run_mm(KernelKind::Mxfp8, p, &a, &b, NUM_CORES);
+        let direct = run_mm(KernelKind::Mx(p.fmt), p, &a, &b, NUM_CORES);
         assert_eq!(sharded.c.len(), direct.c.len());
         for (i, (s, d)) in sharded.c.iter().zip(&direct.c).enumerate() {
             assert_eq!(s.to_bits(), d.to_bits(), "C[{i}]");

@@ -59,7 +59,17 @@ pub struct Shard {
 pub fn pad_k(p: &MmProblem, a: &[f32], b: &[f32]) -> (MmProblem, Vec<f32>, Vec<f32>) {
     assert_eq!(a.len(), p.m * p.k, "A shape mismatch");
     assert_eq!(b.len(), p.k * p.n, "B shape mismatch");
-    assert_eq!(p.block_size % 8, 0, "MX block size must be a multiple of 8");
+    // A block must hold a whole number of `mxdotp` issues at the
+    // format's packing: 8 byte-wide lanes for FP8/FP6/INT8, 16 nibble
+    // lanes for FP4 — so block-aligned K cuts are also packing-aligned.
+    assert_eq!(
+        p.block_size % p.fmt.hw_lanes(),
+        0,
+        "MX block size {} must be a multiple of the {}-lane issue width of {}",
+        p.block_size,
+        p.fmt.hw_lanes(),
+        p.fmt
+    );
     let k_pad = p.k.div_ceil(p.block_size) * p.block_size;
     let pp = MmProblem { k: k_pad, ..*p };
     let mut a_pad = vec![0.0f32; p.m * k_pad];

@@ -244,7 +244,7 @@ pub fn assemble(src: &str) -> Result<Vec<Instr>, AsmError> {
                 need(2)?;
                 let c = match t[1].trim_end_matches(',') {
                     "ssr" | "ssr_enable" => csr::SSR_ENABLE,
-                    "fp8fmt" | "fp8_fmt" => csr::FP8_FMT,
+                    "mxfmt" | "mx_fmt" | "fp8fmt" | "fp8_fmt" => csr::MX_FMT,
                     other => imm(other, line)? as u16,
                 };
                 IntInstr::CsrW { csr: c, rs1: ir(2)? }.into()

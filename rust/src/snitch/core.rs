@@ -9,7 +9,7 @@ use super::fpu::FpSubsystem;
 use super::isa::{csr, FpInstr, Instr, IntInstr, SsrField};
 use super::spm::Spm;
 use super::ssr::SsrConfig;
-use crate::dotp::Fp8Format;
+use crate::formats::ElemFormat;
 use std::sync::Arc;
 
 /// Taken-branch penalty (flush bubble) in cycles.
@@ -260,11 +260,7 @@ impl Core {
                     let v = self.x(rs1);
                     match c {
                         csr::SSR_ENABLE => self.fpu.ssr_enabled = v != 0,
-                        csr::FP8_FMT => self.fpu.set_fp8_format(if v == 0 {
-                            Fp8Format::E4m3
-                        } else {
-                            Fp8Format::E5m2
-                        }),
+                        csr::MX_FMT => self.fpu.set_format(ElemFormat::from_csr(v)),
                         _ => {}
                     }
                     self.retire(now, false);
@@ -393,16 +389,20 @@ mod tests {
     }
 
     #[test]
-    fn csr_configures_fp8_format() {
-        let mut core = Core::new(0);
-        let mut spm = Spm::new();
-        core.load(vec![
-            IntInstr::Li { rd: 5, imm: 1 }.into(),
-            IntInstr::CsrW { csr: csr::FP8_FMT, rs1: 5 }.into(),
-            IntInstr::Halt.into(),
-        ]);
-        run_solo(&mut core, &mut spm, 100);
-        assert_eq!(core.fpu.unit.fmt, Fp8Format::E5m2);
+    fn csr_configures_mx_format() {
+        for (code, want) in
+            [(1i64, ElemFormat::E5M2), (4, ElemFormat::E2M1), (5, ElemFormat::Int8)]
+        {
+            let mut core = Core::new(0);
+            let mut spm = Spm::new();
+            core.load(vec![
+                IntInstr::Li { rd: 5, imm: code }.into(),
+                IntInstr::CsrW { csr: csr::MX_FMT, rs1: 5 }.into(),
+                IntInstr::Halt.into(),
+            ]);
+            run_solo(&mut core, &mut spm, 100);
+            assert_eq!(core.fpu.unit.fmt, want);
+        }
     }
 
     #[test]

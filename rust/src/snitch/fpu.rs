@@ -23,7 +23,7 @@ use super::isa::{FpInstr, FReg};
 use super::ssr::{Ssr, SsrConfig};
 use super::NUM_SSRS;
 use crate::dotp::unit::{select_scales, MxDotpUnit};
-use crate::dotp::Fp8Format;
+use crate::formats::ElemFormat;
 
 /// FP instruction queue depth (int core blocks when full).
 pub const QUEUE_DEPTH: usize = 16;
@@ -155,7 +155,7 @@ impl FpSubsystem {
         self.counters = FpuCounters::default();
     }
 
-    pub fn set_fp8_format(&mut self, fmt: Fp8Format) {
+    pub fn set_format(&mut self, fmt: ElemFormat) {
         self.unit.set_format(fmt);
     }
 
@@ -472,7 +472,7 @@ impl FpSubsystem {
             }
             FpInstr::FcvtSB { fd, fs1, lane } => {
                 let byte = (self.read(fs1) >> (8 * lane)) as u8;
-                let v = self.unit.fmt.spec().decode(byte as u16);
+                let v = self.unit.fmt.decode(byte);
                 self.fregs[fd as usize] = v.to_bits() as u64;
                 self.ready[fd as usize] = now + lat;
                 self.max_ready = self.max_ready.max(now + lat);
@@ -482,9 +482,9 @@ impl FpSubsystem {
                 let w = self.read(fs1);
                 let b0 = (w >> (16 * pair)) as u8;
                 let b1 = (w >> (16 * pair + 8)) as u8;
-                let spec = self.unit.fmt.spec();
-                let lo = spec.decode(b0 as u16).to_bits() as u64;
-                let hi = spec.decode(b1 as u16).to_bits() as u64;
+                let fmt = self.unit.fmt;
+                let lo = fmt.decode(b0).to_bits() as u64;
+                let hi = fmt.decode(b1).to_bits() as u64;
                 self.fregs[fd as usize] = hi << 32 | lo;
                 self.ready[fd as usize] = now + lat;
                 self.max_ready = self.max_ready.max(now + lat);

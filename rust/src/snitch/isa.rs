@@ -24,9 +24,11 @@ pub const SSR_REGS: [FReg; 3] = [0, 1, 2];
 pub mod csr {
     /// SSR enable/disable (Snitch `ssr_cfg`).
     pub const SSR_ENABLE: u16 = 0x7C0;
-    /// FP8 element format for `mxdotp`: 0 = E4M3, 1 = E5M2 (the
-    /// dedicated CSR of §III-B).
-    pub const FP8_FMT: u16 = 0x7C2;
+    /// MX element format for `mxdotp` (the dedicated CSR of §III-B,
+    /// generalized to the full OCP element family): 0 = E4M3,
+    /// 1 = E5M2, 2 = E3M2, 3 = E2M3, 4 = E2M1, 5 = INT8
+    /// (`ElemFormat::csr_code`). The paper's FP8 codes are 0/1.
+    pub const MX_FMT: u16 = 0x7C2;
 }
 
 /// SSR configuration fields (written through `Scfg` writes; the real

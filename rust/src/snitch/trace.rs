@@ -101,7 +101,7 @@ mod tests {
         let mut rng = XorShift::new(9);
         let a = rng.normal_vec(p.m * p.k, 1.0);
         let b = rng.normal_vec(p.k * p.n, 1.0);
-        let run = run_mm(KernelKind::Mxfp8, p, &a, &b, 8);
+        let run = run_mm(KernelKind::Mx(p.fmt), p, &a, &b, 8);
         let bd = CycleBreakdown::from_perf(&run.perf, |c| c.mxdotp);
         // compute share must equal the utilization metric
         assert!((bd.compute - run.utilization()).abs() < 1e-9);

@@ -112,13 +112,19 @@ pub struct HwCost {
     pub flops: u64,
 }
 
-/// Synthetic per-cluster counters with the MXFP8 kernel's activity mix
-/// (one `mxdotp` per 16 FLOPs; ft0/8 + ft1 + ft2/4 SSR words), split
-/// evenly across `num_cores` — the input both analytic cost models
-/// feed to the [`EnergyModel`].
-fn synthetic_mx_perf(flops: u64, num_cores: usize, cycles: u64) -> crate::snitch::cluster::PerfCounters {
+/// Synthetic per-cluster counters with the MX hardware kernel's
+/// activity mix at the format's lane width (one `mxdotp` per
+/// `2·lanes` FLOPs; ft0/unroll + ft1 + ft2/4 SSR words ≈ the FP8 mix),
+/// split evenly across `num_cores` — the input both analytic cost
+/// models feed to the [`EnergyModel`].
+fn synthetic_mx_perf(
+    fmt: ElemFormat,
+    flops: u64,
+    num_cores: usize,
+    cycles: u64,
+) -> crate::snitch::cluster::PerfCounters {
     let mut perf = crate::snitch::cluster::PerfCounters { cycles, ..Default::default() };
-    let mxdotp = flops / 16;
+    let mxdotp = flops / (2 * fmt.hw_lanes() as u64);
     let fpu = crate::snitch::fpu::FpuCounters {
         mxdotp,
         issued: mxdotp,
@@ -135,18 +141,20 @@ fn synthetic_mx_perf(flops: u64, num_cores: usize, cycles: u64) -> crate::snitch
     perf
 }
 
-/// Analytic cost model: cycles ≈ FLOPs / (16 FLOP/cycle/core × cores ×
-/// utilization(K)). `calibrated_util` comes from a measured kernel run
-/// (see [`calibrate_util`]); energy from the EnergyModel's MXFP8
-/// operating point.
+/// Analytic cost model: cycles ≈ FLOPs / (2·lanes FLOP/cycle/core ×
+/// cores × utilization(K)) at the workload's element format (16
+/// FLOPs/cycle/core for the byte-wide formats, 32 for MXFP4).
+/// `calibrated_util` comes from a measured kernel run (see
+/// [`calibrate_util`]); energy from the EnergyModel's MX operating
+/// point.
 pub fn analytic_cost(cfg: &DeitConfig, num_cores: usize, calibrated_util: f64) -> HwCost {
     let flops = cfg.mx_flops();
-    let ideal = 16.0 * num_cores as f64;
+    let ideal = 2.0 * cfg.fmt.hw_lanes() as f64 * num_cores as f64;
     let cycles = (flops as f64 / (ideal * calibrated_util)) as u64;
-    // power at the calibrated MXFP8 operating point (see EnergyModel):
+    // power at the calibrated MX operating point (see EnergyModel):
     // derive from a synthetic counter set with the same activity mix.
     let em = EnergyModel;
-    let perf = synthetic_mx_perf(flops, num_cores, cycles);
+    let perf = synthetic_mx_perf(cfg.fmt, flops, num_cores, cycles);
     let p = em.power(&perf, 1.0, true);
     HwCost {
         cycles,
@@ -192,7 +200,7 @@ pub fn analytic_sharded_cost(
     let mut per_cluster = Vec::with_capacity(clusters);
     let mut total_energy = 0.0;
     for _ in 0..clusters {
-        let perf = synthetic_mx_perf(flops_per, num_cores, wall);
+        let perf = synthetic_mx_perf(cfg.fmt, flops_per, num_cores, wall);
         let e = em.power(&perf, 1.0, true).energy_uj;
         total_energy += e;
         per_cluster.push(HwCost {
@@ -232,7 +240,7 @@ pub fn calibrate_util(cfg: &DeitConfig, num_cores: usize, seed: u64, cold_plans:
     let a = rng.normal_vec(p.m * p.k, 0.5);
     let b = rng.normal_vec(p.k * p.n, 0.02);
     if cold_plans {
-        return run_mm(KernelKind::Mxfp8, p, &a, &b, num_cores).utilization();
+        return run_mm(KernelKind::Mx(p.fmt), p, &a, &b, num_cores).utilization();
     }
     let mut cluster = crate::snitch::cluster::Cluster::new(
         crate::snitch::cluster::ClusterConfig { num_cores, freq_ghz: 1.0 },
@@ -240,7 +248,7 @@ pub fn calibrate_util(cfg: &DeitConfig, num_cores: usize, seed: u64, cold_plans:
     let run = crate::kernels::plan::run_mm_cached(
         crate::kernels::plan::PlanCache::global(),
         &mut cluster,
-        KernelKind::Mxfp8,
+        KernelKind::Mx(p.fmt),
         p,
         &a,
         &b,
@@ -297,6 +305,18 @@ mod tests {
         // sanity: cycles ~ flops / (16*8*0.75)
         let want = cfg.mx_flops() as f64 / 96.0;
         assert!((c.cycles as f64 - want).abs() / want < 0.01);
+    }
+
+    #[test]
+    fn analytic_cost_follows_format_lane_width() {
+        // MXFP4's 16 lanes/issue double the ideal rate: the analytic
+        // wall-clock halves at equal utilization.
+        let f8 = analytic_cost(&DeitConfig::default(), 8, 0.75);
+        let f4cfg = DeitConfig { fmt: ElemFormat::E2M1, ..DeitConfig::default() };
+        let f4 = analytic_cost(&f4cfg, 8, 0.75);
+        let ratio = f8.cycles as f64 / f4.cycles as f64;
+        assert!((ratio - 2.0).abs() < 0.01, "ratio {ratio}");
+        assert_eq!(f8.flops, f4.flops);
     }
 
     #[test]

@@ -1,11 +1,12 @@
-//! Scale-out engine integration tests: the sharded MXFP8 GEMM must be
+//! Scale-out engine integration tests: the sharded MX GEMM (any
+//! element format; MXFP8 in most tests) must be
 //! **bit-identical** to the single-cluster kernel for any cluster
 //! count — including non-divisible M/N/K shapes that exercise the
 //! padding and MX-block edge cases — and must show real strong-scaling
 //! speedup on the DeiT-Tiny workload.
 
 use mxdotp::formats::ElemFormat;
-use mxdotp::kernels::reference::mxfp8_hw_ref;
+use mxdotp::kernels::reference::mx_hw_ref;
 use mxdotp::kernels::{run_mm, KernelKind, MmProblem};
 use mxdotp::rng::XorShift;
 use mxdotp::scaleout::{
@@ -34,7 +35,7 @@ fn oracle(p: &MmProblem, a: &[f32], b: &[f32]) -> Vec<f32> {
     }
     let mut b_pad = vec![0.0f32; k_pad * p.n];
     b_pad[..p.k * p.n].copy_from_slice(b);
-    mxfp8_hw_ref(&pp, &a_pad, &b_pad)
+    mx_hw_ref(&pp, &a_pad, &b_pad)
 }
 
 fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
@@ -55,7 +56,7 @@ fn sharded_gemm_bit_identical_across_cluster_counts_divisible_shape() {
     let (a, b) = inputs(&p, 0xA11CE);
     let want = sharded_mm(&ScaleoutConfig::with_clusters(1), p, &a, &b);
     // ... and the single-cluster result equals the plain kernel path
-    let direct = run_mm(KernelKind::Mxfp8, p, &a, &b, 8);
+    let direct = run_mm(KernelKind::Mx(p.fmt), p, &a, &b, 8);
     assert_bits_eq(&want.c, &direct.c, "1 cluster vs direct run_mm");
     for clusters in [2usize, 4, 8] {
         let got = sharded_mm(&ScaleoutConfig::with_clusters(clusters), p, &a, &b);
@@ -79,6 +80,23 @@ fn sharded_gemm_bit_identical_on_non_divisible_shapes() {
                 &want,
                 &format!("{m}x{k}x{n} on {clusters} clusters vs oracle"),
             );
+        }
+    }
+}
+
+#[test]
+fn sharded_gemm_bit_identical_for_every_element_format() {
+    // The format-generic datapath threaded through the scale-out stack:
+    // for every OCP element format — including nibble-packed FP4 (16
+    // lanes/issue) and MXINT8 — the sharded result must equal the
+    // oracle on a non-divisible shape for any cluster count.
+    for fmt in ElemFormat::ALL {
+        let p = MmProblem { m: 13, k: 40, n: 10, fmt, block_size: 32 };
+        let (a, b) = inputs(&p, 0xF0F ^ fmt.csr_code() as u64);
+        let want = oracle(&p, &a, &b);
+        for clusters in [1usize, 2] {
+            let got = sharded_mm(&ScaleoutConfig::with_clusters(clusters), p, &a, &b);
+            assert_bits_eq(&got.c, &want, &format!("{fmt} on {clusters} clusters"));
         }
     }
 }
