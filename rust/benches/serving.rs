@@ -1,0 +1,130 @@
+//! Bench `serving`: goodput vs offered load for the two serving
+//! disciplines — the seed barrier batcher on one whole-machine fabric
+//! vs the admission-controlled continuous batcher on per-cluster
+//! fabrics (DESIGN.md §12) — over identical mixed-format Poisson
+//! traces on an 8-cluster machine.
+//!
+//! Besides the human-readable table this writes `BENCH_serving.json`
+//! (offered load → goodput/throughput/percentiles per scheduler) so
+//! the serving trajectory is trackable across PRs, and it enforces the
+//! §12 acceptance bar: continuous goodput ≥ 1.5× barrier goodput at
+//! the highest offered load.
+//!
+//! Run: `cargo bench --bench serving`
+
+use mxdotp::formats::ElemFormat;
+use mxdotp::report::{
+    render_serving, serving_headline_ratio, serving_sweep, ServingPoint, SERVING_LOAD_MULTS,
+};
+use mxdotp::serve::ServeConfig;
+use mxdotp::workload::DeitConfig;
+use std::fmt::Write as _;
+
+fn json(cfg: &ServeConfig, mix: &[(ElemFormat, f64)], points: &[ServingPoint], wall: f64) -> String {
+    let mix_s: Vec<String> =
+        mix.iter().map(|(f, w)| format!("\"{}:{w}\"", f.name())).collect();
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(
+        s,
+        "  \"machine\": {{\"clusters\": {}, \"fabrics\": {}, \"cores_per_cluster\": {}, \
+         \"seq\": {}, \"dim\": {}}},",
+        cfg.clusters,
+        cfg.fabric_count(),
+        cfg.cores_per_cluster,
+        cfg.model.seq,
+        cfg.model.dim
+    );
+    let _ = writeln!(s, "  \"mix\": [{}],", mix_s.join(", "));
+    let _ = writeln!(s, "  \"host_wall_s\": {wall:.3},");
+    s.push_str("  \"points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "    {{\"load_mult\": {}, \"offered_per_ktick\": {:.3}, \"scheduler\": \"{}\", \
+             \"served\": {}, \"rejected_full\": {}, \"rejected_slo\": {}, \"in_slo\": {}, \
+             \"goodput_per_ktick\": {:.4}, \"throughput_per_ktick\": {:.4}, \
+             \"p50_ticks\": {}, \"p95_ticks\": {}, \"p99_ticks\": {}, \
+             \"mean_batch\": {:.3}, \"fabric_util\": {:.4}, \"reloads\": {}}}{}",
+            p.load_mult,
+            p.offered_per_ktick,
+            p.sched.name(),
+            p.served,
+            p.rejected_full,
+            p.rejected_slo,
+            p.in_slo,
+            p.goodput_per_ktick,
+            p.throughput_per_ktick,
+            p.p50,
+            p.p95,
+            p.p99,
+            p.mean_batch,
+            p.fabric_util,
+            p.reloads,
+            if i + 1 == points.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+fn main() {
+    println!("=============================================================");
+    println!("bench serving: goodput vs offered load, barrier vs continuous");
+    println!("=============================================================");
+    // Full DeiT-Tiny shapes on the 8-cluster acceptance machine. The
+    // engine is analytic (calibrated utilization pinned to the value
+    // the cycle-accurate calibration converges to), so the sweep runs
+    // in host milliseconds; SERVING_BENCH_REQS bounds trace length.
+    let requests: usize = std::env::var("SERVING_BENCH_REQS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let cfg = ServeConfig {
+        model: DeitConfig::default(),
+        clusters: 8,
+        ..ServeConfig::default()
+    };
+    let mix = vec![(ElemFormat::E4M3, 0.6), (ElemFormat::E2M1, 0.4)];
+    let t0 = std::time::Instant::now();
+    let points = serving_sweep(&cfg, &mix, requests, 42, &SERVING_LOAD_MULTS);
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n{}", render_serving(&points, &cfg, &mix));
+    println!("[swept {} loads x 2 schedulers, {requests} requests each, in {wall:.2} s]", SERVING_LOAD_MULTS.len());
+
+    // Shape assertions: every request accounted for; goodput holds up
+    // under overload for the continuous engine; the §12 bar.
+    for p in &points {
+        assert_eq!(
+            p.served + p.rejected_full + p.rejected_slo,
+            p.offered,
+            "requests lost at load {:.2}x ({})",
+            p.load_mult,
+            p.sched
+        );
+    }
+    let at = |mult: f64, sched: &str| {
+        points
+            .iter()
+            .find(|p| p.load_mult == mult && p.sched.name() == sched)
+            .expect("sweep point missing")
+    };
+    let top = SERVING_LOAD_MULTS[SERVING_LOAD_MULTS.len() - 1];
+    let cont_top = at(top, "continuous");
+    assert!(
+        cont_top.in_slo * 10 >= cont_top.served * 6,
+        "admission control failed: only {}/{} served within SLO at {top}x load",
+        cont_top.in_slo,
+        cont_top.served
+    );
+    let ratio = serving_headline_ratio(&points).expect("headline ratio");
+    assert!(
+        ratio >= 1.5,
+        "continuous goodput only {ratio:.2}x the barrier's at {top}x load (bar: 1.5x)"
+    );
+
+    let out = json(&cfg, &mix, &points, wall);
+    std::fs::write("BENCH_serving.json", &out).expect("write BENCH_serving.json");
+    println!("wrote BENCH_serving.json ({} points)", points.len());
+    println!("\nserving: OK (goodput bar {ratio:.2}x >= 1.5x at {top}x offered load)");
+}

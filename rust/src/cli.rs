@@ -5,8 +5,10 @@
 //! mxdotp-cli quantize  --fmt e4m3 --block 32 --n 8 [--seed S]
 //! mxdotp-cli simulate  --kernel mx|fp32|fp8sw --m 64 --k 256 --n 64
 //!                      [--cores 8] [--fmt e5m2|e4m3|e3m2|e2m3|e2m1|int8] [--seed S]
-//! mxdotp-cli reproduce fig3|fig4|table3|formats|scaling|all [--cores 8] [--fmt e4m3]
-//! mxdotp-cli serve     [--requests 16] [--batch 8] [--fmt e4m3] [--artifacts DIR]
+//! mxdotp-cli reproduce fig3|fig4|table3|formats|scaling|serving|all [--cores 8] [--fmt e4m3]
+//! mxdotp-cli serve     [--requests 16] [--batch 8] [--clusters 8] [--fabrics 0]
+//!                      [--mix e4m3:0.6,e2m1:0.4] [--arrival poisson:4]
+//!                      [--slo-ticks 0] [--queue-cap 128] [--sched continuous|barrier]
 //! mxdotp-cli info
 //! ```
 //!
@@ -16,16 +18,42 @@
 
 use crate::formats::ElemFormat;
 use crate::kernels::KernelKind;
+use crate::serve::SchedulerKind;
+use crate::workload::arrivals::ArrivalKind;
 use std::collections::HashMap;
 
 /// Parsed command line.
 #[derive(Clone, Debug, PartialEq)]
+#[allow(missing_docs)] // variant fields mirror the documented flags in `USAGE`
 pub enum Command {
+    /// `quantize`: round-trip a random tensor through one MX format.
     Quantize { fmt: ElemFormat, block: usize, n: usize, seed: u64 },
+    /// `simulate`: run one GEMM kernel on the cycle-accurate cluster
+    /// (or sharded across a cluster fabric).
     Simulate { kernel: KernelKind, m: usize, k: usize, n: usize, cores: usize, clusters: usize, fmt: ElemFormat, seed: u64, cold_plans: bool },
+    /// `reproduce`: regenerate the paper's tables/figures and the
+    /// extension tables (formats, scaling, serving).
     Reproduce { what: String, cores: usize, clusters: usize, fmt: ElemFormat, cold_plans: bool },
-    Serve { requests: usize, batch: usize, clusters: usize, fmt: ElemFormat, artifacts: String, cold_plans: bool },
+    /// `serve`: drive the serving engine over a synthetic arrival
+    /// trace, executing served requests through a real executor.
+    Serve {
+        requests: usize,
+        batch: usize,
+        clusters: usize,
+        fabrics: usize,
+        fmt: ElemFormat,
+        mix: Vec<(ElemFormat, f64)>,
+        arrival: ArrivalKind,
+        rate_per_ktick: f64,
+        slo_ticks: u64,
+        queue_cap: usize,
+        sched: SchedulerKind,
+        artifacts: String,
+        cold_plans: bool,
+    },
+    /// `info`: print the simulated machine and runtime availability.
     Info,
+    /// `help` (also the empty command line).
     Help,
 }
 
@@ -124,6 +152,77 @@ fn get_fmt(f: &HashMap<String, String>) -> Result<ElemFormat, CliError> {
     }
 }
 
+/// `--batch N`: requests per batch; 0 is rejected at parse time (a
+/// zero batch would make the batcher wait forever without
+/// dispatching), mirroring the `--clusters 0` rejection.
+fn get_batch(f: &HashMap<String, String>) -> Result<usize, CliError> {
+    let batch: usize = get_parse(f, "batch", 8)?;
+    if batch == 0 {
+        return Err(CliError("--batch must be at least 1 (a zero batch never dispatches)".into()));
+    }
+    Ok(batch)
+}
+
+/// `--mix e4m3:0.6,e2m1:0.4`: weighted element-format traffic mix.
+fn parse_mix(s: &str) -> Result<Vec<(ElemFormat, f64)>, CliError> {
+    let mut mix = Vec::new();
+    for part in s.split(',') {
+        let Some((name, weight)) = part.split_once(':') else {
+            return Err(CliError(format!(
+                "bad --mix entry '{part}' (expected fmt:weight, e.g. e4m3:0.6)"
+            )));
+        };
+        let fmt = ElemFormat::parse(name)
+            .ok_or_else(|| CliError(format!("unknown format '{name}' in --mix")))?;
+        let w: f64 = weight
+            .parse()
+            .map_err(|_| CliError(format!("bad weight '{weight}' in --mix")))?;
+        if !(w > 0.0 && w.is_finite()) {
+            return Err(CliError(format!("--mix weight for {name} must be positive, got {w}")));
+        }
+        mix.push((fmt, w));
+    }
+    if mix.is_empty() {
+        return Err(CliError("--mix must name at least one fmt:weight pair".into()));
+    }
+    Ok(mix)
+}
+
+/// `--arrival poisson[:RATE] | bursty:RATE:FACTOR:PERIOD` — RATE in
+/// requests per kilotick (0 = auto: half the machine's estimated
+/// capacity), FACTOR the burst intensity, PERIOD the on/off cycle in
+/// ticks.
+fn parse_arrival(s: &str) -> Result<(ArrivalKind, f64), CliError> {
+    let parts: Vec<&str> = s.split(':').collect();
+    let num = |v: &str, what: &str| -> Result<f64, CliError> {
+        v.parse::<f64>()
+            .ok()
+            .filter(|x| x.is_finite() && *x >= 0.0)
+            .ok_or_else(|| CliError(format!("bad {what} '{v}' in --arrival")))
+    };
+    match parts.as_slice() {
+        ["poisson"] => Ok((ArrivalKind::Poisson, 0.0)),
+        ["poisson", rate] => Ok((ArrivalKind::Poisson, num(rate, "rate")?)),
+        ["bursty", rate, factor, period] => {
+            let f = num(factor, "burst factor")?;
+            if f < 1.0 {
+                return Err(CliError(format!("--arrival burst factor must be >= 1, got {f}")));
+            }
+            let p = num(period, "burst period")?;
+            if p < 1.0 {
+                return Err(CliError("--arrival burst period must be >= 1 tick".into()));
+            }
+            Ok((
+                ArrivalKind::Bursty { burst_factor: f, period_ticks: p as u64 },
+                num(rate, "rate")?,
+            ))
+        }
+        _ => Err(CliError(format!(
+            "bad --arrival '{s}' (expected poisson[:RATE] or bursty:RATE:FACTOR:PERIOD)"
+        ))),
+    }
+}
+
 /// Parse a full argument vector (without argv[0]).
 pub fn parse(args: &[String]) -> Result<Command, CliError> {
     let Some(cmd) = args.first() else {
@@ -164,9 +263,11 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 .filter(|w| !w.starts_with("--"))
                 .cloned()
                 .unwrap_or_else(|| "all".to_string());
-            if !["fig3", "fig4", "table3", "formats", "scaling", "all"].contains(&what.as_str()) {
+            if !["fig3", "fig4", "table3", "formats", "scaling", "serving", "all"]
+                .contains(&what.as_str())
+            {
                 return Err(CliError(format!(
-                    "unknown target '{what}' (expected fig3|fig4|table3|formats|scaling|all)"
+                    "unknown target '{what}' (expected fig3|fig4|table3|formats|scaling|serving|all)"
                 )));
             }
             let skip = usize::from(!rest.is_empty() && !rest[0].starts_with("--"));
@@ -181,11 +282,44 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
         }
         "serve" => {
             let f = flags(rest)?;
+            let fmt = get_fmt(&f)?;
+            let clusters = get_clusters(&f, 1)?;
+            let fabrics: usize = get_parse(&f, "fabrics", 0)?;
+            if fabrics > 0 && (fabrics > clusters || clusters % fabrics != 0) {
+                return Err(CliError(format!(
+                    "--fabrics {fabrics} must divide --clusters {clusters}"
+                )));
+            }
+            let mix = match f.get("mix") {
+                None => vec![(fmt, 1.0)],
+                Some(s) => parse_mix(s)?,
+            };
+            let (arrival, rate_per_ktick) = match f.get("arrival") {
+                None => (ArrivalKind::Poisson, 0.0),
+                Some(s) => parse_arrival(s)?,
+            };
+            let sched = match f.get("sched") {
+                None => SchedulerKind::Continuous,
+                Some(s) => SchedulerKind::parse(s).ok_or_else(|| {
+                    CliError(format!("unknown scheduler '{s}' (continuous|barrier)"))
+                })?,
+            };
+            let queue_cap: usize = get_parse(&f, "queue-cap", 128)?;
+            if queue_cap == 0 {
+                return Err(CliError("--queue-cap must be at least 1".into()));
+            }
             Ok(Command::Serve {
                 requests: get_parse(&f, "requests", 16)?,
-                batch: get_parse(&f, "batch", 8)?,
-                clusters: get_clusters(&f, 1)?,
-                fmt: get_fmt(&f)?,
+                batch: get_batch(&f)?,
+                clusters,
+                fabrics,
+                fmt,
+                mix,
+                arrival,
+                rate_per_ktick,
+                slo_ticks: get_parse(&f, "slo-ticks", 0)?,
+                queue_cap,
+                sched,
                 artifacts: f.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
                 cold_plans: get_cold_plans(&f),
             })
@@ -194,6 +328,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
     }
 }
 
+/// The help text printed by `mxdotp-cli help` (and on parse errors).
 pub const USAGE: &str = "\
 mxdotp-cli — MXDOTP paper reproduction driver
 
@@ -202,10 +337,13 @@ USAGE:
   mxdotp-cli simulate  [--kernel mx|fp32|fp8sw] [--m 64] [--k 256] [--n 64]
                        [--cores 8] [--clusters 1] [--fmt e4m3] [--seed S] [--cold-plans]
                        (--clusters N > 1 shards the MX GEMM across N simulated clusters)
-  mxdotp-cli reproduce [fig3|fig4|table3|formats|scaling|all] [--cores 8] [--clusters 8]
-                       [--fmt e4m3] [--cold-plans]
-  mxdotp-cli serve     [--requests 16] [--batch 8] [--clusters 1] [--fmt e4m3]
-                       [--artifacts DIR] [--cold-plans]
+  mxdotp-cli reproduce [fig3|fig4|table3|formats|scaling|serving|all] [--cores 8]
+                       [--clusters 8] [--fmt e4m3] [--cold-plans]
+  mxdotp-cli serve     [--requests 16] [--batch 8] [--clusters 1] [--fabrics 0]
+                       [--fmt e4m3] [--mix e4m3:0.6,e2m1:0.4]
+                       [--arrival poisson[:RATE] | bursty:RATE:FACTOR:PERIOD]
+                       [--slo-ticks 0] [--queue-cap 128]
+                       [--sched continuous|barrier] [--artifacts DIR] [--cold-plans]
   mxdotp-cli info
 
 --fmt selects the MX element format end to end (all six OCP formats:
@@ -214,6 +352,20 @@ e5m2/e4m3 FP8, e3m2/e2m3 FP6, e2m1 FP4 at 16 lanes/issue, int8). The
 accepts every format; 'fp8sw' is the FP8-only software baseline;
 'fp32' ignores --fmt. 'reproduce formats' prints the format sweep on
 the Fig. 4 shapes.
+
+serve drives the production serving engine (DESIGN.md §12) over a
+synthetic open-loop arrival trace, then executes the served requests
+through a real executor. --mix sets the per-request format mix
+(weights are relative; default: 100 % --fmt). --arrival picks the
+process and its mean RATE in requests/kilotick (1 tick = 1 µs of
+fabric time; RATE 0 or omitted = half the machine's estimated
+capacity); bursty:4:8:2000 means mean 4/ktick arriving in 8x bursts
+every 2000 ticks. --fabrics groups the clusters into independent
+serving fabrics (0 = one fabric per cluster); the barrier scheduler
+always uses one whole-machine fabric. --slo-ticks is the latency SLO
+(0 = auto: 4x the worst-case single-request cost); --queue-cap bounds
+the admission queue. 'reproduce serving' prints the goodput-vs-load
+comparison of the two schedulers on the same traces.
 
 --cold-plans bypasses the compile-once/execute-many plan cache (plans,
 quantized weight tiles, memoized passes) and measures the from-scratch
@@ -340,6 +492,84 @@ mod tests {
         assert!(matches!(
             parse(&argv("simulate --kernel mxfp8")),
             Ok(Command::Simulate { kernel: KernelKind::Mx(ElemFormat::E4M3), .. })
+        ));
+    }
+
+    #[test]
+    fn serve_rejects_zero_batch_at_parse_time() {
+        // A zero batch makes the batcher wait forever; reject it like
+        // --clusters 0 instead of hanging at runtime.
+        let err = parse(&argv("serve --batch 0")).unwrap_err();
+        assert!(err.0.contains("--batch"), "{err}");
+        assert!(err.0.contains("at least 1"), "{err}");
+        assert!(matches!(parse(&argv("serve --batch 1")), Ok(Command::Serve { batch: 1, .. })));
+    }
+
+    #[test]
+    fn parse_serve_mix_arrival_slo_and_sched() {
+        let c = parse(&argv(
+            "serve --mix e4m3:0.6,e2m1:0.4 --arrival bursty:4:8:2000 --slo-ticks 9000 \
+             --queue-cap 64 --fabrics 2 --clusters 8 --sched barrier",
+        ))
+        .unwrap();
+        match c {
+            Command::Serve {
+                mix, arrival, rate_per_ktick, slo_ticks, queue_cap, fabrics, clusters, sched, ..
+            } => {
+                assert_eq!(mix, vec![(ElemFormat::E4M3, 0.6), (ElemFormat::E2M1, 0.4)]);
+                assert_eq!(
+                    arrival,
+                    crate::workload::arrivals::ArrivalKind::Bursty {
+                        burst_factor: 8.0,
+                        period_ticks: 2000
+                    }
+                );
+                assert_eq!(rate_per_ktick, 4.0);
+                assert_eq!(slo_ticks, 9000);
+                assert_eq!(queue_cap, 64);
+                assert_eq!((fabrics, clusters), (2, 8));
+                assert_eq!(sched, crate::serve::SchedulerKind::Barrier);
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        // defaults: continuous scheduler, auto rate, single-format mix
+        assert!(matches!(
+            parse(&argv("serve --fmt e2m1")),
+            Ok(Command::Serve {
+                sched: crate::serve::SchedulerKind::Continuous,
+                rate_per_ktick: r,
+                ref mix,
+                ..
+            }) if r == 0.0 && mix == &vec![(ElemFormat::E2M1, 1.0)]
+        ));
+        assert!(matches!(
+            parse(&argv("serve --arrival poisson:12")),
+            Ok(Command::Serve { rate_per_ktick: r, .. }) if r == 12.0
+        ));
+    }
+
+    #[test]
+    fn serve_flag_validation_errors() {
+        // malformed mixes
+        assert!(parse(&argv("serve --mix e4m3")).is_err());
+        assert!(parse(&argv("serve --mix fp64:1.0")).is_err());
+        assert!(parse(&argv("serve --mix e4m3:0")).is_err());
+        // malformed arrivals
+        assert!(parse(&argv("serve --arrival warp")).is_err());
+        assert!(parse(&argv("serve --arrival bursty:4")).is_err());
+        assert!(parse(&argv("serve --arrival bursty:4:0.5:100")).is_err());
+        // fabric / queue / scheduler validation
+        assert!(parse(&argv("serve --clusters 8 --fabrics 3")).is_err());
+        assert!(parse(&argv("serve --clusters 8 --fabrics 16")).is_err());
+        assert!(parse(&argv("serve --queue-cap 0")).is_err());
+        assert!(parse(&argv("serve --sched sometimes")).is_err());
+    }
+
+    #[test]
+    fn parse_reproduce_serving_target() {
+        assert!(matches!(
+            parse(&argv("reproduce serving --clusters 8")),
+            Ok(Command::Reproduce { ref what, clusters: 8, .. }) if what == "serving"
         ));
     }
 

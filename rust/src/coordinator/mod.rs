@@ -1,14 +1,27 @@
-//! The serving coordinator (Layer 3): request queue, dynamic batcher,
-//! executor loop, per-request simulated-hardware cost attribution.
+//! The executor layer and the seed-era barrier coordinator
+//! (DESIGN.md §3): the [`ModelExecutor`] trait (single-request
+//! `forward`, batch-splice `forward_batch`), the PJRT and in-process
+//! MX executors, and a deliberately lean FIFO-plus-batcher
+//! [`Coordinator`] with per-request simulated-hardware cost
+//! attribution.
 //!
-//! For this paper the system contribution lives in the ISA/µarch, so
-//! the coordinator is deliberately lean (DESIGN.md §3): a bounded
-//! request queue feeding a dynamic batcher (batch up to `max_batch`
-//! requests or `max_wait` ticks, whichever first), an executor that
-//! runs the AOT-compiled encoder block through PJRT, and bookkeeping
-//! that attaches the simulated Snitch-cluster cost (cycles, µJ) of the
-//! MXFP8 matmuls to every response — the link between the serving path
-//! and the paper's energy story.
+//! The [`Coordinator`] here is the *barrier* discipline: a FIFO queue
+//! feeding a dynamic batcher (dispatch at `max_batch` requests or when
+//! the oldest has waited `max_wait_ticks`), with each batch completing
+//! as a unit. It remains the right tool for the paper's single-cluster
+//! energy story, the PJRT artifact path, and as the measured baseline
+//! the production serving engine ([`crate::serve`], DESIGN.md §12) is
+//! compared against — `serve`'s barrier scheduler models exactly this
+//! discipline. Production traffic (mixed formats, bursts, SLOs,
+//! admission control, multi-fabric placement) is served by
+//! `crate::serve` instead.
+//!
+//! Executors are where results are computed, and they guarantee the
+//! invariant both serving layers rely on: every output is a pure
+//! function of its own input, so batch composition, splice order and
+//! fabric placement can never change results.
+//! [`ShardedExecutor::forward_concurrent`] runs independent batches on
+//! disjoint fabrics (host threads) under that contract.
 //!
 //! The batching logic is executor-agnostic (the [`ModelExecutor`]
 //! trait) so its invariants are property-tested without PJRT.
@@ -20,14 +33,18 @@ use std::time::Instant;
 /// One inference request: an activation tensor (seq × dim, row-major).
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Caller-chosen request id (echoed in the response).
     pub id: u64,
+    /// Row-major (seq × dim) activations.
     pub input: Vec<f32>,
 }
 
 /// One response.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// Id of the request this answers.
     pub id: u64,
+    /// Row-major (seq × dim) output activations.
     pub output: Vec<f32>,
     /// Wall-clock latency through the coordinator (µs).
     pub latency_us: f64,
@@ -41,6 +58,17 @@ pub struct Response {
 pub trait ModelExecutor {
     /// x: (seq × dim) row-major activations -> same-shaped output.
     fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>>;
+
+    /// Batch-splice entry point: run every input of one batch and
+    /// return the outputs in order. The contract the serving engine
+    /// (DESIGN.md §12) relies on — and the default implementation
+    /// guarantees — is that each output is a pure function of its own
+    /// input: batch composition must never change results, so a
+    /// request spliced into an in-flight batch computes exactly what
+    /// it would have computed alone.
+    fn forward_batch(&mut self, xs: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        xs.iter().map(|x| self.forward(x)).collect()
+    }
 }
 
 /// Batching policy.
@@ -61,19 +89,27 @@ impl Default for BatchPolicy {
 /// Coordinator statistics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Stats {
+    /// Requests answered.
     pub served: u64,
+    /// Batches dispatched.
     pub batches: u64,
+    /// Sum of per-request host latencies (µs).
     pub total_latency_us: f64,
+    /// Worst host latency (µs).
     pub max_latency_us: f64,
+    /// Simulated hardware cycles attributed across responses.
     pub total_sim_cycles: u64,
+    /// Simulated hardware energy attributed across responses (µJ).
     pub total_sim_energy_uj: f64,
 }
 
 impl Stats {
+    /// Mean host latency per served request (µs).
     pub fn mean_latency_us(&self) -> f64 {
         if self.served == 0 { 0.0 } else { self.total_latency_us / self.served as f64 }
     }
 
+    /// Mean requests per dispatched batch.
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 { 0.0 } else { self.served as f64 / self.batches as f64 }
     }
@@ -81,7 +117,9 @@ impl Stats {
 
 /// The coordinator: owns the queue, the policy and the executor.
 pub struct Coordinator<E: ModelExecutor> {
+    /// Model shapes this coordinator serves.
     pub cfg: DeitConfig,
+    /// Batching policy.
     pub policy: BatchPolicy,
     executor: E,
     queue: VecDeque<(Request, Instant, u64)>, // (req, enqueue time, tick)
@@ -89,7 +127,9 @@ pub struct Coordinator<E: ModelExecutor> {
     next_batch: u64,
     /// Calibrated MXFP8 utilization for the analytic cost model.
     pub calibrated_util: f64,
+    /// Running serving statistics.
     pub stats: Stats,
+    /// Cores of the simulated cluster the cost model assumes.
     pub num_cores: usize,
     /// Clusters the simulated cost is sharded across (1 = the paper's
     /// single-cluster testbed).
@@ -100,6 +140,8 @@ pub struct Coordinator<E: ModelExecutor> {
 }
 
 impl<E: ModelExecutor> Coordinator<E> {
+    /// Build a coordinator around `executor` with a calibrated MX
+    /// utilization (see `workload::calibrate_util`).
     pub fn new(cfg: DeitConfig, policy: BatchPolicy, executor: E, calibrated_util: f64) -> Self {
         Coordinator {
             cfg,
@@ -137,6 +179,7 @@ impl<E: ModelExecutor> Coordinator<E> {
         self.queue.push_back((req, Instant::now(), self.tick));
     }
 
+    /// Requests currently queued.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
@@ -213,6 +256,8 @@ pub struct PjrtExecutor {
 }
 
 impl PjrtExecutor {
+    /// Load the encoder-block artifact; `params` are fed to PJRT in
+    /// `param_specs` order on every forward.
     pub fn new(
         runtime: &crate::runtime::Runtime,
         cfg: DeitConfig,
@@ -260,6 +305,8 @@ pub struct ShardedExecutor {
 }
 
 impl ShardedExecutor {
+    /// Build the executor: MX-quantize the four weight matrices once
+    /// (the plan half of DESIGN.md §10) for reuse across all requests.
     pub fn new(cfg: DeitConfig, params: Vec<(String, Vec<usize>, Vec<f32>)>) -> Self {
         let (d, md) = (cfg.dim, cfg.mlp_dim());
         let mut exec = ShardedExecutor { cfg, params, qweights: Vec::with_capacity(4) };
@@ -344,6 +391,49 @@ impl ShardedExecutor {
         out
     }
 
+    /// Shared-state forward pass (`&self`): the full encoder block on
+    /// one request. `ShardedExecutor` holds only immutable state after
+    /// construction (parameters + pre-quantized weights), so any
+    /// number of host threads — one per serving fabric — may serve
+    /// requests through one executor concurrently; results are
+    /// bit-identical to the sequential [`ModelExecutor::forward`]
+    /// path because the computation is a pure function of `x`.
+    pub fn forward_ref(&self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        if x.len() != self.cfg.seq * self.cfg.dim {
+            return Err(anyhow::anyhow!(
+                "input length {} != seq*dim {}",
+                x.len(),
+                self.cfg.seq * self.cfg.dim
+            ));
+        }
+        Ok(self.forward_block(x))
+    }
+
+    /// Run several batches **concurrently on disjoint fabrics** (one
+    /// host thread per batch, mirroring the serving engine's placement
+    /// of independent batches on disjoint cluster leases). Outputs
+    /// preserve the `batches` nesting. Panics if any input has the
+    /// wrong shape — callers validate shapes at admission time.
+    pub fn forward_concurrent(&self, batches: &[Vec<Vec<f32>>]) -> Vec<Vec<Vec<f32>>> {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = batches
+                .iter()
+                .map(|batch| {
+                    s.spawn(move || {
+                        batch
+                            .iter()
+                            .map(|x| self.forward_ref(x).expect("batch input shape"))
+                            .collect::<Vec<Vec<f32>>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("fabric executor thread panicked"))
+                .collect()
+        })
+    }
+
     /// The full encoder block (pre-norm, residual) on one sequence.
     fn forward_block(&self, x: &[f32]) -> Vec<f32> {
         let (s, d) = (self.cfg.seq, self.cfg.dim);
@@ -407,14 +497,7 @@ fn gelu(x: f32) -> f32 {
 
 impl ModelExecutor for ShardedExecutor {
     fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
-        if x.len() != self.cfg.seq * self.cfg.dim {
-            return Err(anyhow::anyhow!(
-                "input length {} != seq*dim {}",
-                x.len(),
-                self.cfg.seq * self.cfg.dim
-            ));
-        }
-        Ok(self.forward_block(x))
+        self.forward_ref(x)
     }
 }
 
@@ -642,6 +725,45 @@ mod tests {
         assert_eq!(got.len(), want.len());
         for (i, (g, w)) in got.iter().zip(&want).enumerate() {
             assert_eq!(g.to_bits(), w.to_bits(), "y[{i}]");
+        }
+    }
+
+    #[test]
+    fn forward_batch_default_matches_sequential_forward() {
+        let mut e = Echo { calls: 0 };
+        let xs: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32; 8]).collect();
+        let out = e.forward_batch(&xs).unwrap();
+        assert_eq!(e.calls, 4);
+        for (x, y) in xs.iter().zip(&out) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn concurrent_disjoint_fabric_batches_bit_match_sequential() {
+        // Three "fabric" batches executed concurrently must reproduce
+        // the sequential per-request outputs bit for bit — batch
+        // placement is a scheduling decision, never a numerics one.
+        let cfg = DeitConfig { seq: 8, ..DeitConfig::default() };
+        let params = crate::workload::generate_params(&cfg, 17);
+        let exec = ShardedExecutor::new(cfg, params);
+        let batches: Vec<Vec<Vec<f32>>> = (0..3)
+            .map(|f| {
+                (0..2)
+                    .map(|i| crate::workload::generate_input(&cfg, 900 + f * 10 + i))
+                    .collect()
+            })
+            .collect();
+        let conc = exec.forward_concurrent(&batches);
+        assert_eq!(conc.len(), 3);
+        for (batch, outs) in batches.iter().zip(&conc) {
+            for (x, out) in batch.iter().zip(outs) {
+                let want = exec.forward_ref(x).unwrap();
+                assert_eq!(out.len(), want.len());
+                for (a, b) in out.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
         }
     }
 

@@ -48,6 +48,7 @@ pub fn fp8_to_fp32_block(
 /// for FP32 accumulation).
 #[derive(Clone, Debug, Default)]
 pub struct ExSdotp {
+    /// Dot products executed (activity counter).
     pub issued: u64,
 }
 
@@ -170,14 +171,23 @@ impl ExSdotp {
 /// One row of Table III (units and clusters).
 #[derive(Clone, Debug)]
 pub struct Table3Row {
+    /// Design name as printed in the table.
     pub design: &'static str,
+    /// Process node (nm).
     pub tech_nm: u32,
+    /// Supply voltage (V) when published.
     pub voltage: Option<f32>,
+    /// Clock (GHz) when published.
     pub freq_ghz: Option<f32>,
+    /// Area in mm².
     pub area_mm2: f64,
+    /// Block-scale support ("2 x 8b", "none", ...).
     pub scale_support: &'static str,
+    /// Accumulator format.
     pub acc_format: &'static str,
+    /// Peak throughput (GFLOPS).
     pub gflops: f64,
+    /// Energy efficiency (GFLOPS/W) when published.
     pub gflops_per_w: Option<f64>,
     /// true if the numbers are cited from the paper (third-party RTL we
     /// cannot rebuild); false if regenerated by this repo's models.

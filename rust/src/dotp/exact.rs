@@ -19,11 +19,14 @@ use crate::formats::minifloat::FloatSpec;
 /// A dyadic rational: `num · 2^exp` (num = 0 represents zero).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Dyadic {
+    /// Signed numerator.
     pub num: i128,
+    /// Power-of-two exponent.
     pub exp: i32,
 }
 
 impl Dyadic {
+    /// The zero value (canonical `(0, 0)` form).
     pub const ZERO: Dyadic = Dyadic { num: 0, exp: 0 };
 
     /// Decode a narrow-float bit pattern to a dyadic (must be finite).
@@ -62,6 +65,7 @@ impl Dyadic {
         }
     }
 
+    /// True for the zero value.
     pub fn is_zero(&self) -> bool {
         self.num == 0
     }

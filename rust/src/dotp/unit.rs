@@ -34,6 +34,7 @@ pub const PIPELINE_STAGES: u32 = 3;
 /// is modeled by the Snitch FPU around this functional core.
 #[derive(Clone, Debug)]
 pub struct MxDotpUnit {
+    /// Element format selected by the `MX_FMT` CSR (DESIGN.md §11).
     pub fmt: ElemFormat,
     /// Instructions executed (perf counter mirrored in the core's CSRs).
     pub issued: u64,
@@ -46,6 +47,7 @@ impl Default for MxDotpUnit {
 }
 
 impl MxDotpUnit {
+    /// A unit with its format CSR initialized to `fmt`.
     pub fn new(fmt: ElemFormat) -> Self {
         Self { fmt, issued: 0 }
     }

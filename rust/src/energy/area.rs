@@ -10,6 +10,7 @@ use super::constants as k;
 /// One component of the core-complex breakdown (Fig. 3).
 #[derive(Clone, Debug, PartialEq)]
 pub struct AreaComponent {
+    /// Component name (Fig. 3 legend).
     pub name: &'static str,
     /// Kilo gate equivalents.
     pub kge: f64,

@@ -27,11 +27,17 @@ pub const UNIT_MM2: f64 = 3.15e-3;
 /// Shares follow the Snitch publications' breakdowns: the FP subsystem
 /// dominates, the scalar core is tiny.
 pub const CORE_SNITCH: f64 = 0.10;
+/// Instruction cache share of the extended core complex.
 pub const CORE_ICACHE: f64 = 0.15;
+/// The three SSR streamers' share.
 pub const CORE_SSRS: f64 = 0.06;
+/// FPU share (the 0.095 MXDOTP slice is carved out of this).
 pub const CORE_FPU: f64 = 0.56; // includes the MXDOTP unit (0.095)
+/// FP register file share.
 pub const CORE_FP_RF: f64 = 0.08;
+/// FREP sequencer share.
 pub const CORE_FREP: f64 = 0.02;
+/// Everything else (LSU glue, CSRs).
 pub const CORE_OTHER: f64 = 0.03;
 
 /// Adding a 4th FP RF read port would have cost ~12 % of the FP RF
@@ -118,4 +124,5 @@ pub const ANCHOR_SPEEDUP_SW: (f64, f64) = (20.9, 25.0);
 pub const ANCHOR_UTILIZATION: f64 = 0.797;
 /// Unit-level efficiency (Table III: 2035 GFLOPS/W at 17.4 GFLOPS).
 pub const ANCHOR_UNIT_GFLOPS_W: f64 = 2035.0;
+/// Unit-level peak throughput (Table III: 17.4 GFLOPS).
 pub const ANCHOR_UNIT_GFLOPS: f64 = 17.4;

@@ -24,6 +24,7 @@ pub struct PowerEstimate {
 pub struct FabricEnergy {
     /// Wall-clock of the fabric: max over per-cluster busy cycles.
     pub wall_cycles: u64,
+    /// Fabric wall-clock in µs at the configured clock.
     pub wall_us: f64,
     /// Total energy across clusters (µJ).
     pub total_energy_uj: f64,

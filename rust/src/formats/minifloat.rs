@@ -25,9 +25,13 @@ pub enum Specials {
 /// A narrow float format: 1 sign bit, `ebits` exponent, `mbits` mantissa.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FloatSpec {
+    /// Lowercase format name ("e4m3", ...).
     pub name: &'static str,
+    /// Exponent field width in bits.
     pub ebits: u32,
+    /// Mantissa field width in bits.
     pub mbits: u32,
+    /// Inf/NaN encoding convention.
     pub specials: Specials,
 }
 

@@ -42,8 +42,11 @@ pub fn shared_exponent(amax: f32, fmt: ElemFormat) -> i32 {
 /// One quantized MX block: `k` element encodings + one E8M0 scale.
 #[derive(Clone, Debug)]
 pub struct MxBlock {
+    /// Element format of the encodings.
     pub fmt: ElemFormat,
+    /// Shared E8M0 block scale.
     pub scale: E8m0,
+    /// Element bit patterns (one per value).
     pub elems: Vec<u8>,
 }
 
@@ -74,7 +77,9 @@ impl MxBlock {
 /// E8M0 scale per block.
 #[derive(Clone, Debug)]
 pub struct MxVector {
+    /// Element format of the encodings.
     pub fmt: ElemFormat,
+    /// Elements per shared scale.
     pub block_size: usize,
     /// Element bit patterns, length = len.
     pub elems: Vec<u8>,
@@ -97,14 +102,17 @@ impl MxVector {
         MxVector { fmt, block_size, elems, scales }
     }
 
+    /// Number of elements.
     pub fn len(&self) -> usize {
         self.elems.len()
     }
 
+    /// True when the vector holds no elements.
     pub fn is_empty(&self) -> bool {
         self.elems.is_empty()
     }
 
+    /// Number of MX blocks (= number of scales).
     pub fn num_blocks(&self) -> usize {
         self.scales.len()
     }
@@ -131,10 +139,15 @@ impl MxVector {
 /// An MX-quantized matrix, row-major elements, scales along `axis`.
 #[derive(Clone, Debug)]
 pub struct MxMatrix {
+    /// Element format of the encodings.
     pub fmt: ElemFormat,
+    /// Elements per shared scale.
     pub block_size: usize,
+    /// Matrix rows.
     pub rows: usize,
+    /// Matrix columns.
     pub cols: usize,
+    /// Axis the quantization blocks run along.
     pub axis: ScaleAxis,
     /// rows*cols element bit patterns, row-major.
     pub elems: Vec<u8>,

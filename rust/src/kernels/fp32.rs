@@ -17,12 +17,16 @@ use crate::snitch::SPM_BYTES;
 /// reused by every execution of the plan.
 #[derive(Clone, Copy, Debug)]
 pub struct Fp32Layout {
+    /// A operand region (row-major FP32).
     pub a: Region,
+    /// B operand region (column-major FP32).
     pub b: Region,
+    /// C output region.
     pub c: Region,
     /// Padded byte stride of one A row / one B column (one extra
     /// 64-bit word so lockstep streams rotate banks).
     pub a_stride: usize,
+    /// Padded byte stride of one B column.
     pub b_stride: usize,
 }
 

@@ -36,7 +36,9 @@ impl std::fmt::Display for LayoutError {
 /// A placed region.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Region {
+    /// Byte offset in SPM.
     pub addr: usize,
+    /// Region length in bytes.
     pub bytes: usize,
 }
 
@@ -54,6 +56,7 @@ impl Default for Planner {
 }
 
 impl Planner {
+    /// Fresh planner starting at SPM offset 0.
     pub fn new() -> Self {
         Planner { cursor: 0, count: 0 }
     }
@@ -77,6 +80,7 @@ impl Planner {
         Ok(Region { addr, bytes })
     }
 
+    /// Bytes consumed so far (the footprint).
     pub fn used(&self) -> usize {
         self.cursor
     }

@@ -55,13 +55,16 @@ use crate::snitch::cluster::{Cluster, ClusterConfig, PerfCounters};
 /// (it must match [`MmProblem::fmt`]; the plan layer asserts so).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum KernelKind {
+    /// The FP32 SIMD baseline.
     Fp32,
+    /// The FP8-to-FP32 software MX baseline (FP8 formats only).
     Fp8ToFp32,
     /// The format-generic `mxdotp` hardware kernel.
     Mx(ElemFormat),
 }
 
 impl KernelKind {
+    /// Human-readable kernel name ("MX(e4m3)", "FP32", ...).
     pub fn name(self) -> String {
         match self {
             KernelKind::Fp32 => "FP32".into(),
@@ -104,10 +107,15 @@ impl std::fmt::Display for KernelKind {
 /// One matmul problem instance (C[M,N] = A[M,K] · B[K,N]).
 #[derive(Clone, Copy, Debug)]
 pub struct MmProblem {
+    /// Rows of A and C.
     pub m: usize,
+    /// Inner (contraction) dimension.
     pub k: usize,
+    /// Columns of B and C.
     pub n: usize,
+    /// MX element format the operands quantize to.
     pub fmt: ElemFormat,
+    /// MX block size (32 per the spec).
     pub block_size: usize,
 }
 
@@ -131,12 +139,17 @@ impl MmProblem {
 /// Result of running one kernel on the simulated cluster.
 #[derive(Clone, Debug)]
 pub struct MmRun {
+    /// Kernel that ran.
     pub kind: KernelKind,
+    /// Problem it solved.
     pub problem: MmProblem,
+    /// Cluster counters of the run.
     pub perf: PerfCounters,
     /// The computed C matrix (row-major M×N).
     pub c: Vec<f32>,
+    /// Cores the run used.
     pub num_cores: usize,
+    /// Clock the run assumed (GHz).
     pub freq_ghz: f64,
 }
 

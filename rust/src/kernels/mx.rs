@@ -56,13 +56,17 @@ pub fn mx_unroll(p: &MmProblem) -> usize {
 /// Staged operand addresses (shared with the fp8sw kernel).
 #[derive(Clone, Debug)]
 pub(super) struct MxRegions {
+    /// Packed A elements, row-major.
     pub a: Region,
+    /// Packed B elements, column-major.
     pub b: Region,
     /// Padded byte stride of one (packed) A row / one B column: the
     /// packed element bytes + 8 (one pad word so lockstep streams
     /// rotate banks instead of colliding).
     pub a_stride: usize,
+    /// Padded byte stride of one packed B column.
     pub b_stride: usize,
+    /// A scales, row-major [m][kb].
     pub asc: Region,
     /// B scales pre-shifted into the high byte of a u16 ([n][kb]; the
     /// fp8sw kernel's reshape input).
@@ -71,6 +75,7 @@ pub(super) struct MxRegions {
     /// ([n/2][kb]: `Xb[2c] << 8 | Xb[2c+1] << 24`; the MX kernel's
     /// reshape input — one load covers two outputs).
     pub bs32: Region,
+    /// FP32 C output, row-major.
     pub c: Region,
     /// Two scale-stream buffers per core.
     pub bufs: Vec<[Region; 2]>,

@@ -46,16 +46,24 @@ use std::sync::{Arc, LazyLock, Mutex};
 /// bound.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PlanKey {
+    /// Kernel the plan compiles.
     pub kind: KernelKind,
+    /// Staged rows.
     pub m: usize,
+    /// Staged inner dimension.
     pub k: usize,
+    /// Staged columns.
     pub n: usize,
+    /// Element format.
     pub fmt: ElemFormat,
+    /// MX block size.
     pub block_size: usize,
+    /// Cluster cores the programs are compiled for.
     pub cores: usize,
 }
 
 impl PlanKey {
+    /// Key for `kind` on `p` with `cores` cores.
     pub fn new(kind: KernelKind, p: &MmProblem, cores: usize) -> Self {
         PlanKey { kind, m: p.m, k: p.k, n: p.n, fmt: p.fmt, block_size: p.block_size, cores }
     }
@@ -76,13 +84,16 @@ enum PlanLayout {
 /// matrices for the FP32 kernel; pre-quantized MX tile buffers —
 /// possibly shared through the [`PlanCache`] — for the MX kernels).
 pub enum MmOperands<'a> {
+    /// FP32 operands staged as-is.
     Fp32 { a: &'a [f32], b: &'a [f32] },
+    /// Pre-quantized MX operands (A row-axis, B col-axis scales).
     Mx { qa: &'a MxMatrix, qb: &'a MxMatrix },
 }
 
 /// A compiled GEMM plan: SPM layout + per-core programs + worst-case
 /// cycle bound for one `(kernel, tile shape, cluster shape)`.
 pub struct MmPlan {
+    /// The shape key this plan was compiled for.
     pub key: PlanKey,
     layout: PlanLayout,
     /// Per-core instruction streams, shared (not copied) into every
@@ -233,7 +244,9 @@ pub fn cycle_bound(kind: KernelKind, p: &MmProblem, cores: usize) -> u64 {
 /// A memoized pass: the full observable output of one deterministic
 /// plan execution.
 pub struct PassResult {
+    /// Recorded output slab.
     pub c: Vec<f32>,
+    /// Recorded counters.
     pub perf: PerfCounters,
 }
 
@@ -293,11 +306,17 @@ struct PassKey {
 /// the warm-vs-cold tests).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CacheStats {
+    /// Plan lookups served from the cache.
     pub plan_hits: u64,
+    /// Plans compiled.
     pub plan_misses: u64,
+    /// Quantized-B-tile lookups served from the cache.
     pub b_tile_hits: u64,
+    /// B tiles quantized.
     pub b_tile_misses: u64,
+    /// Pass executions replayed from memoized results.
     pub pass_hits: u64,
+    /// Passes simulated.
     pub pass_misses: u64,
 }
 
@@ -347,6 +366,7 @@ impl Default for PlanCache {
 }
 
 impl PlanCache {
+    /// An empty, enabled cache.
     pub fn new() -> Self {
         Self::with_enabled(true)
     }
@@ -384,6 +404,7 @@ impl PlanCache {
         &GLOBAL
     }
 
+    /// False for the `--cold-plans` no-op cache.
     pub fn is_enabled(&self) -> bool {
         self.enabled
     }
@@ -455,6 +476,7 @@ impl PlanCache {
             .or_insert_with(|| Arc::new(PassResult { c: run.c.clone(), perf: run.perf.clone() }));
     }
 
+    /// Snapshot of the hit/miss counters.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             plan_hits: self.plan_hits.load(Ordering::Relaxed),

@@ -34,9 +34,21 @@
 //!   model (wall-clock = max over clusters, energy = sum).
 //! * [`runtime`] — PJRT CPU runtime loading the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); Python is never on this path.
-//! * [`coordinator`] — the serving layer: request queue, dynamic
-//!   batcher, worker pool, per-layer simulated hardware cost.
-//! * [`workload`] — DeiT-Tiny-shaped synthetic workload generation.
+//! * [`coordinator`] — the executor layer: the `ModelExecutor` trait
+//!   (single-request and batch-splice entry points), the PJRT and
+//!   in-process MX executors, and the seed-era barrier coordinator the
+//!   serving engine is benchmarked against.
+//! * [`serve`] — the production serving engine (DESIGN.md §12):
+//!   per-(format, priority) request queues, admission control with
+//!   bounded backpressure and reject reasons, continuous batching with
+//!   in-flight splice, a multi-fabric scheduler placing batches on
+//!   least-loaded cluster groups, and p50/p95/p99 latency accounting
+//!   in simulated ticks.
+//! * [`workload`] — DeiT-Tiny-shaped synthetic workload generation,
+//!   the analytic cost models, and the open-loop arrival-trace
+//!   generators (Poisson / bursty, per-format mix).
+
+#![warn(missing_docs)]
 
 pub mod dotp;
 pub mod formats;
@@ -48,6 +60,7 @@ pub mod report;
 pub mod rng;
 pub mod runtime;
 pub mod scaleout;
+pub mod serve;
 pub mod snitch;
 pub mod workload;
 

@@ -1,19 +1,21 @@
 //! `mxdotp-cli`: the leader entrypoint. Quantize tensors, run the
 //! cycle-accurate kernels, regenerate the paper's tables/figures, or
-//! serve the AOT-compiled model through the coordinator.
+//! serve synthetic traffic through the admission-controlled serving
+//! engine (DESIGN.md §12) with real executors behind it.
 
 use anyhow::Result;
 use mxdotp::cli::{parse, Command, USAGE};
-use mxdotp::coordinator::{
-    BatchPolicy, Coordinator, ModelExecutor, PjrtExecutor, Request, ShardedExecutor,
-};
-use mxdotp::formats::MxVector;
+use mxdotp::coordinator::{ModelExecutor, PjrtExecutor, ShardedExecutor};
+use mxdotp::formats::{ElemFormat, MxVector};
 use mxdotp::kernels::{run_mm, MmProblem};
 use mxdotp::rng::XorShift;
 use mxdotp::runtime::Runtime;
 use mxdotp::scaleout::{measure_parallel_efficiency, sharded_mm, ScaleoutConfig};
+use mxdotp::serve::{self, scheduler::ServeOutcome, ServeConfig};
+use mxdotp::workload::arrivals::{generate_trace, ArrivalSpec};
 use mxdotp::workload::{calibrate_util, generate_input, generate_params, DeitConfig};
 use mxdotp::{report, snitch};
+use std::collections::HashMap;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -121,6 +123,49 @@ fn main() -> Result<()> {
                 let points = report::format_sweep(cores, 42, &report::FIG4_K_SWEEP);
                 println!("{}", report::render_format_sweep(&points, cores));
             }
+            if what == "serving" || what == "all" {
+                let model = DeitConfig { fmt, ..DeitConfig::default() };
+                // Canonical two-format mix: the requested format plus
+                // the fastest OCP format (MXFP4) — or MXFP8 when FP4
+                // itself was requested — so per-format throughput
+                // differences drive the scheduling comparison.
+                let secondary =
+                    if fmt == ElemFormat::E2M1 { ElemFormat::E4M3 } else { ElemFormat::E2M1 };
+                let mix = vec![(fmt, 0.6), (secondary, 0.4)];
+                eprintln!(
+                    "calibrating MX({fmt}) utilization and {clusters}-cluster efficiency \
+                     (cycle-accurate)..."
+                );
+                let util = calibrate_util(&model, cores, 1, cold_plans);
+                let eff = if clusters > 1 {
+                    let scfg =
+                        ScaleoutConfig { cold_plans, ..ScaleoutConfig::with_clusters(clusters) };
+                    measure_parallel_efficiency(&scfg, 2)
+                } else {
+                    1.0
+                };
+                let scfg = ServeConfig {
+                    model,
+                    clusters,
+                    cores_per_cluster: cores,
+                    util,
+                    cluster_eff: eff,
+                    ..ServeConfig::default()
+                };
+                let points =
+                    report::serving_sweep(&scfg, &mix, 400, 42, &report::SERVING_LOAD_MULTS);
+                println!("{}", report::render_serving(&points, &scfg, &mix));
+                // The §12 acceptance invariant: the schedulers reorder
+                // time, never results — checked with real per-format
+                // executors on a reduced model.
+                eprintln!("verifying scheduler bit-identity with real executors...");
+                let vmodel = DeitConfig { seq: 16, ..model };
+                let n = serve::verify_schedulers_bit_identical(&vmodel, &mix, 12, 7);
+                println!(
+                    "scheduler bit-identity: {n} requests served by both schedulers \
+                     produced bit-identical outputs"
+                );
+            }
             if what == "scaling" || what == "all" {
                 let cfg = DeitConfig { fmt, ..DeitConfig::default() };
                 // The standard sweep points below the requested fabric
@@ -140,92 +185,187 @@ fn main() -> Result<()> {
                 println!("{}", report::render_scaling(&points, &cfg));
             }
         }
-        Command::Serve { requests, batch, clusters, fmt, artifacts, cold_plans } => {
-            let cfg = DeitConfig { fmt, ..DeitConfig::default() };
-            let params = generate_params(&cfg, 42);
-            println!("calibrating MX({fmt}) utilization on the cycle-accurate cluster...");
-            let util = calibrate_util(&cfg, snitch::NUM_CORES, 1, cold_plans);
+        Command::Serve {
+            requests,
+            batch,
+            clusters,
+            fabrics,
+            fmt,
+            mix,
+            arrival,
+            rate_per_ktick,
+            slo_ticks,
+            queue_cap,
+            sched,
+            artifacts,
+            cold_plans,
+        } => {
+            let model = DeitConfig { fmt, ..DeitConfig::default() };
+            // Calibrate at the mix's dominant format; the analytic
+            // model scales the other formats by lane width.
+            let dominant = mix
+                .iter()
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .map(|&(f, _)| f)
+                .unwrap_or(fmt);
+            println!("calibrating MX({dominant}) utilization on the cycle-accurate cluster...");
+            let util =
+                calibrate_util(&DeitConfig { fmt: dominant, ..model }, snitch::NUM_CORES, 1, cold_plans);
             println!("  calibrated utilization: {:.1} %", util * 100.0);
-            let scfg = ScaleoutConfig { cold_plans, ..ScaleoutConfig::with_clusters(clusters) };
-            let eff = if clusters > 1 {
-                let e = measure_parallel_efficiency(&scfg, 2);
+            let mut scfg = ServeConfig {
+                model,
+                clusters,
+                fabrics,
+                cores_per_cluster: snitch::NUM_CORES,
+                max_batch: batch,
+                queue_cap,
+                slo_ticks,
+                util,
+                scheduler: sched,
+                ..ServeConfig::default()
+            };
+            let cpf = scfg.clusters_per_fabric();
+            if cpf > 1 {
+                let probe = ScaleoutConfig { cold_plans, ..ScaleoutConfig::with_clusters(cpf) };
+                let e = measure_parallel_efficiency(&probe, 2);
                 println!(
-                    "  measured {clusters}-cluster parallel efficiency: {:.1} %",
+                    "  measured {cpf}-cluster fabric parallel efficiency: {:.1} %",
                     e * 100.0
                 );
-                e
+                scfg.cluster_eff = e;
+            }
+            if let Err(e) = scfg.validate() {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+            let slo = serve::resolve_slo_ticks(&scfg);
+            println!(
+                "machine: {clusters} cluster(s) as {} fabric(s) × {cpf} cluster(s); \
+                 scheduler {sched}; SLO {slo} ticks (1 tick = 1 µs of fabric time)",
+                scfg.fabric_count()
+            );
+            if scfg.fabric_count() > 1 {
+                for (lease, gflops) in serve::probe_fabrics(&scfg, dominant) {
+                    println!(
+                        "  fabric on clusters {}..{}: probe {:.1} GFLOPS (cycle-accurate)",
+                        lease.first_cluster,
+                        lease.end(),
+                        gflops
+                    );
+                }
+            }
+            let rate = if rate_per_ktick > 0.0 {
+                rate_per_ktick
             } else {
-                1.0
+                let auto = 0.5 * serve::estimated_capacity_per_ktick(&scfg, &mix);
+                println!("  offered load: auto ({auto:.2} req/ktick = 0.5× estimated capacity)");
+                auto
             };
-            let policy = BatchPolicy { max_batch: batch, max_wait_ticks: 4 };
-            // Prefer the PJRT artifact path when available; otherwise
-            // serve through the PJRT-free sharded in-process executor.
-            let pjrt = Runtime::new(&artifacts).ok().filter(|_| {
-                Runtime::artifacts_present(std::path::Path::new(&artifacts))
-            });
-            match pjrt {
+            let spec = ArrivalSpec {
+                kind: arrival,
+                rate_per_ktick: rate,
+                mix: mix.clone(),
+                high_priority_frac: 0.0,
+                requests,
+                seed: 42,
+            };
+            let trace = generate_trace(&spec);
+            let outcome = serve::simulate(&scfg, &trace);
+
+            // Execute every served request through a real executor —
+            // PJRT when artifacts are present and the mix is a single
+            // format (the artifact is compiled for one format), the
+            // per-format in-process MX executors (concurrent batches
+            // on disjoint fabrics) otherwise.
+            let t0 = std::time::Instant::now();
+            let params = generate_params(&model, 42);
+            let pjrt = if mix.len() == 1 {
+                Runtime::new(&artifacts)
+                    .ok()
+                    .filter(|_| Runtime::artifacts_present(std::path::Path::new(&artifacts)))
+            } else {
+                None
+            };
+            let executed = match pjrt {
                 Some(rt) => {
                     println!(
-                        "serving DeiT-Tiny-shaped encoder block via PJRT ({})",
+                        "executing {} served request(s) via PJRT ({})",
+                        outcome.served.len(),
                         rt.platform()
                     );
-                    let exec = PjrtExecutor::new(&rt, cfg, params)?;
-                    let coord =
-                        Coordinator::new(cfg, policy, exec, util).with_scaleout(clusters, eff);
-                    serve_loop(coord, requests as u64)?;
+                    let exec_model = DeitConfig { fmt: mix[0].0, ..model };
+                    let mut exec = PjrtExecutor::new(&rt, exec_model, params)?;
+                    let mut n = 0usize;
+                    for group in serve::batches_in_dispatch_order(&outcome) {
+                        let xs: Vec<Vec<f32>> = group
+                            .iter()
+                            .map(|r| generate_input(&model, serve::INPUT_SEED_BASE + r.id))
+                            .collect();
+                        n += exec.forward_batch(&xs)?.len();
+                    }
+                    n
                 }
                 None => {
                     println!(
-                        "PJRT unavailable or artifacts missing — serving via the in-process \
-                         MX executor on a {clusters}-cluster simulated fabric"
+                        "PJRT unavailable, artifacts missing, or mixed-format mix — \
+                         executing {} served request(s) via the in-process MX executors",
+                        outcome.served.len()
                     );
-                    let exec = ShardedExecutor::new(cfg, params);
-                    let coord =
-                        Coordinator::new(cfg, policy, exec, util).with_scaleout(clusters, eff);
-                    serve_loop(coord, requests as u64)?;
+                    let mut execs: HashMap<ElemFormat, ShardedExecutor> = HashMap::new();
+                    for &(f, _) in &mix {
+                        execs
+                            .entry(f)
+                            .or_insert_with(|| {
+                                ShardedExecutor::new(DeitConfig { fmt: f, ..model }, params.clone())
+                            });
+                    }
+                    serve::execute_outcome(&outcome, &model, &execs, serve::INPUT_SEED_BASE).len()
                 }
-            }
+            };
+            let wall = t0.elapsed().as_secs_f64();
+            print!("{}", render_serve_summary(&outcome, executed, wall));
         }
     }
     Ok(())
 }
 
-/// Drive a coordinator through `requests` synthetic requests and print
-/// the serving + simulated-hardware summary (shared by the PJRT and
-/// sharded executor paths).
-fn serve_loop<E: ModelExecutor>(mut coord: Coordinator<E>, requests: u64) -> Result<()> {
-    let cfg = coord.cfg;
-    let clusters = coord.num_clusters;
-    let t0 = std::time::Instant::now();
-    for i in 0..requests {
-        coord.submit(Request { id: i, input: generate_input(&cfg, 1000 + i) });
-    }
-    let mut responses = Vec::new();
-    while coord.pending() > 0 {
-        responses.extend(coord.tick()?);
-    }
-    let wall = t0.elapsed().as_secs_f64();
-    let st = coord.stats;
-    println!(
-        "served {} requests in {} batches (mean batch {:.1}) in {:.3} s host wall-clock",
-        st.served,
-        st.batches,
-        st.mean_batch_size(),
-        wall
-    );
-    println!(
-        "  host latency: mean {:.1} µs, max {:.1} µs; throughput {:.1} req/s",
-        st.mean_latency_us(),
-        st.max_latency_us,
-        st.served as f64 / wall
-    );
-    println!(
-        "  simulated hardware cost ({clusters} cluster{}): {} wall cycles ({:.1} µs @1 GHz), {:.1} µJ total",
-        if clusters == 1 { "" } else { "s" },
-        st.total_sim_cycles,
-        st.total_sim_cycles as f64 / 1000.0,
-        st.total_sim_energy_uj
-    );
-    drop(responses);
-    Ok(())
+/// Human-readable summary of one serving run (shared by the PJRT and
+/// in-process executor paths).
+fn render_serve_summary(outcome: &ServeOutcome, executed: usize, wall_s: f64) -> String {
+    let p = outcome.percentiles();
+    let mut s = String::new();
+    s.push_str(&format!(
+        "offered {} request(s): served {}, rejected {} (queue-full {}, slo-unattainable {})\n",
+        outcome.offered(),
+        outcome.served.len(),
+        outcome.rejected.len(),
+        outcome.rejected_queue_full(),
+        outcome.rejected_slo(),
+    ));
+    s.push_str(&format!(
+        "  latency [ticks ≈ µs fabric time]: p50 {}, p95 {}, p99 {}, max {}  \
+         (SLO {}: {}/{} in SLO)\n",
+        p.p50,
+        p.p95,
+        p.p99,
+        p.max,
+        outcome.slo_ticks,
+        outcome.served_in_slo(),
+        outcome.served.len(),
+    ));
+    s.push_str(&format!(
+        "  goodput {:.2}/ktick, throughput {:.2}/ktick over a {}-tick horizon; \
+         {} batch(es), mean batch {:.1}, {} reload(s), fabric util {:.1} %\n",
+        outcome.goodput_per_ktick(),
+        outcome.throughput_per_ktick(),
+        outcome.horizon_ticks,
+        outcome.batches,
+        outcome.mean_batch_size(),
+        outcome.reloads,
+        outcome.fabric_utilization() * 100.0,
+    ));
+    s.push_str(&format!(
+        "  executed {executed} forward pass(es) on the host in {wall_s:.2} s\n"
+    ));
+    s
 }

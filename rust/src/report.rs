@@ -10,6 +10,8 @@ use crate::formats::ElemFormat;
 use crate::kernels::{layout, run_mm, KernelKind, MmProblem, MmRun};
 use crate::rng::XorShift;
 use crate::scaleout::{sharded_mm, ScaleoutConfig};
+use crate::serve::{self, SchedulerKind, ServeConfig};
+use crate::workload::arrivals::{generate_trace, ArrivalKind, ArrivalSpec};
 use crate::workload::DeitConfig;
 
 /// The Fig. 4 inner-dimension sweep (block size 32 bounds K below).
@@ -18,12 +20,19 @@ pub const FIG4_K_SWEEP: [usize; 4] = [32, 64, 128, 256];
 /// One Fig. 4 data point.
 #[derive(Clone, Debug)]
 pub struct Fig4Point {
+    /// Inner dimension of the sweep point.
     pub k: usize,
+    /// Kernel measured.
     pub kind: KernelKind,
+    /// Achieved throughput (GFLOPS).
     pub gflops: f64,
+    /// Energy efficiency (GFLOPS/W).
     pub gflops_per_w: f64,
+    /// Fraction of the kernel's ideal throughput.
     pub utilization: f64,
+    /// Simulated cycles of the run.
     pub cycles: u64,
+    /// Average power (mW).
     pub power_mw: f64,
 }
 
@@ -68,12 +77,19 @@ pub fn fig4_sweep(fmt: ElemFormat, num_cores: usize, seed: u64) -> Vec<Fig4Point
 /// Headline metrics derived from a Fig. 4 sweep (§IV-C's claims).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Headline {
+    /// Best MX throughput across the sweep (GFLOPS).
     pub peak_gflops: f64,
+    /// Best MX energy efficiency (GFLOPS/W).
     pub peak_gflops_per_w: f64,
+    /// Best MX utilization.
     pub peak_utilization: f64,
+    /// (min, max) MX speedup over FP32 across K.
     pub speedup_vs_fp32: (f64, f64),
+    /// (min, max) MX speedup over the software baseline.
     pub speedup_vs_sw: (f64, f64),
+    /// (min, max) efficiency ratio vs FP32.
     pub eff_vs_fp32: (f64, f64),
+    /// (min, max) efficiency ratio vs the software baseline.
     pub eff_vs_sw: (f64, f64),
 }
 
@@ -305,12 +321,19 @@ pub fn table3_cluster_point(seed: u64) -> Fig4Point {
 /// shape for one element format.
 #[derive(Clone, Debug)]
 pub struct FormatPoint {
+    /// Element format of the run.
     pub fmt: ElemFormat,
+    /// Inner dimension.
     pub k: usize,
+    /// Achieved throughput (GFLOPS).
     pub gflops: f64,
+    /// Energy efficiency (GFLOPS/W).
     pub gflops_per_w: f64,
+    /// Fraction of the format's ideal throughput.
     pub utilization: f64,
+    /// Simulated cycles.
     pub cycles: u64,
+    /// `mxdotp` instructions executed.
     pub mxdotp: u64,
     /// Relative L2 error vs the f64 matmul of the same inputs (the
     /// precision side of the format trade-off).
@@ -398,6 +421,7 @@ pub const SCALING_CLUSTERS: [usize; 4] = [1, 2, 4, 8];
 /// executed on an N-cluster fabric.
 #[derive(Clone, Debug)]
 pub struct ScalingPoint {
+    /// Fabric size of this row.
     pub clusters: usize,
     /// Fabric wall-clock summed over the workload's layers (max over
     /// clusters within each layer).
@@ -408,7 +432,9 @@ pub struct ScalingPoint {
     pub energy_uj: f64,
     /// Useful FLOPs of the workload.
     pub flops: u64,
+    /// Fabric throughput (GFLOPS).
     pub gflops: f64,
+    /// Fabric energy efficiency (GFLOPS/W).
     pub gflops_per_w: f64,
     /// Strong-scaling speedup vs the sweep's first point.
     pub speedup: f64,
@@ -504,6 +530,175 @@ pub fn render_scaling(points: &[ScalingPoint], cfg: &DeitConfig) -> String {
     s
 }
 
+/// Offered-load multipliers of the serving sweep, as fractions of the
+/// continuous engine's estimated capacity — from comfortable (0.25×)
+/// to deep overload (4×), where the schedulers separate.
+pub const SERVING_LOAD_MULTS: [f64; 5] = [0.25, 0.5, 1.0, 2.0, 4.0];
+
+/// One row of the serving table: one scheduler at one offered load.
+#[derive(Clone, Debug)]
+pub struct ServingPoint {
+    /// Offered load as a multiple of estimated capacity.
+    pub load_mult: f64,
+    /// Offered load in requests per kilotick.
+    pub offered_per_ktick: f64,
+    /// Scheduler that produced this row.
+    pub sched: SchedulerKind,
+    /// Requests offered / served / rejected (queue-full, SLO).
+    pub offered: usize,
+    /// Requests completed.
+    pub served: usize,
+    /// Rejections due to the queue cap.
+    pub rejected_full: usize,
+    /// Rejections due to SLO unattainability.
+    pub rejected_slo: usize,
+    /// Served requests that met the SLO.
+    pub in_slo: usize,
+    /// SLO-compliant completions per kilotick (the headline metric).
+    pub goodput_per_ktick: f64,
+    /// Raw completions per kilotick.
+    pub throughput_per_ktick: f64,
+    /// Latency percentiles in ticks (1 tick = 1 µs of fabric time).
+    pub p50: u64,
+    /// 95th percentile latency (ticks).
+    pub p95: u64,
+    /// 99th percentile latency (ticks).
+    pub p99: u64,
+    /// Mean requests per dispatched batch.
+    pub mean_batch: f64,
+    /// Fraction of fabric·ticks spent busy.
+    pub fabric_util: f64,
+    /// Weight reloads (format switches) paid.
+    pub reloads: u64,
+}
+
+/// Run the serving comparison: for each load multiplier, generate one
+/// Poisson trace at `mult ×` the continuous engine's estimated
+/// capacity and run **both** schedulers over the *identical* trace,
+/// measured against the same SLO (resolved once from the continuous
+/// config, so the barrier baseline is judged by the same yardstick it
+/// is compared against).
+pub fn serving_sweep(
+    cfg: &ServeConfig,
+    mix: &[(ElemFormat, f64)],
+    requests: usize,
+    seed: u64,
+    load_mults: &[f64],
+) -> Vec<ServingPoint> {
+    let cont = ServeConfig { scheduler: SchedulerKind::Continuous, ..*cfg };
+    let capacity = serve::estimated_capacity_per_ktick(&cont, mix);
+    let slo = serve::resolve_slo_ticks(&cont);
+    let mut points = Vec::with_capacity(load_mults.len() * 2);
+    for (li, &mult) in load_mults.iter().enumerate() {
+        let rate = capacity * mult;
+        let spec = ArrivalSpec {
+            kind: ArrivalKind::Poisson,
+            rate_per_ktick: rate,
+            mix: mix.to_vec(),
+            high_priority_frac: 0.0,
+            requests,
+            seed: seed.wrapping_add(li as u64 * 7919),
+        };
+        let trace = generate_trace(&spec);
+        for sched in [SchedulerKind::Barrier, SchedulerKind::Continuous] {
+            let run_cfg = ServeConfig { scheduler: sched, slo_ticks: slo, ..*cfg };
+            let out = serve::simulate(&run_cfg, &trace);
+            let p = out.percentiles();
+            points.push(ServingPoint {
+                load_mult: mult,
+                offered_per_ktick: rate,
+                sched,
+                offered: out.offered(),
+                served: out.served.len(),
+                rejected_full: out.rejected_queue_full(),
+                rejected_slo: out.rejected_slo(),
+                in_slo: out.served_in_slo(),
+                goodput_per_ktick: out.goodput_per_ktick(),
+                throughput_per_ktick: out.throughput_per_ktick(),
+                p50: p.p50,
+                p95: p.p95,
+                p99: p.p99,
+                mean_batch: out.mean_batch_size(),
+                fabric_util: out.fabric_utilization(),
+                reloads: out.reloads,
+            });
+        }
+    }
+    points
+}
+
+/// Goodput ratio (continuous / barrier) at the highest offered load of
+/// a sweep; `f64::INFINITY` when the barrier's goodput is zero there.
+pub fn serving_headline_ratio(points: &[ServingPoint]) -> Option<f64> {
+    let top = points
+        .iter()
+        .map(|p| p.load_mult)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let at = |s: SchedulerKind| {
+        points.iter().find(|p| p.load_mult == top && p.sched == s).map(|p| p.goodput_per_ktick)
+    };
+    let (c, b) = (at(SchedulerKind::Continuous)?, at(SchedulerKind::Barrier)?);
+    Some(if b > 0.0 { c / b } else { f64::INFINITY })
+}
+
+/// Render the serving table (goodput vs offered load, both
+/// schedulers) plus the §12 headline ratio.
+pub fn render_serving(points: &[ServingPoint], cfg: &ServeConfig, mix: &[(ElemFormat, f64)]) -> String {
+    let cont = ServeConfig { scheduler: SchedulerKind::Continuous, ..*cfg };
+    let slo = serve::resolve_slo_ticks(&cont);
+    let mix_s: Vec<String> =
+        mix.iter().map(|(f, w)| format!("{}:{:.2}", f.name(), w)).collect();
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Serving — goodput vs offered load on a {}-cluster machine (mix {}, SLO {} ticks)\n\
+         continuous: {} fabric(s) × {} cluster(s), per-format queues, SLO-aware admission, \
+         in-flight splice\nbarrier: the seed FIFO batcher on one whole-machine fabric \
+         (latency-blind admission)\nboth schedulers consume identical traces; \
+         1 tick = 1 µs of fabric time\n\n",
+        cfg.clusters,
+        mix_s.join(","),
+        slo,
+        cont.fabric_count(),
+        cont.clusters_per_fabric(),
+    ));
+    s.push_str(
+        "  load   offered[/kt]  sched        served  rej full/slo   in-SLO  goodput[/kt]  \
+         p50     p95     p99     batch  util\n",
+    );
+    for p in points {
+        let load = format!("{:.2}x", p.load_mult);
+        s.push_str(&format!(
+            "  {:<5} {:>10.2}    {:<11} {:>6}  {:>5}/{:<5}   {:>6}  {:>10.2}    \
+             {:>6}  {:>6}  {:>6}  {:>5.1}  {:>5.1} %\n",
+            load,
+            p.offered_per_ktick,
+            p.sched.name(),
+            p.served,
+            p.rejected_full,
+            p.rejected_slo,
+            p.in_slo,
+            p.goodput_per_ktick,
+            p.p50,
+            p.p95,
+            p.p99,
+            p.mean_batch,
+            p.fabric_util * 100.0,
+        ));
+    }
+    if let Some(ratio) = serving_headline_ratio(points) {
+        let shown = if ratio.is_finite() {
+            format!("{ratio:.2}x")
+        } else {
+            "∞ (barrier goodput 0)".to_string()
+        };
+        s.push_str(&format!(
+            "\n  headline: continuous vs barrier goodput at the top load = {shown}   \
+             (acceptance bar ≥ 1.5x)\n"
+        ));
+    }
+    s
+}
+
 /// Summarize an MmRun for CLI output.
 pub fn render_run(run: &MmRun) -> String {
     let em = EnergyModel;
@@ -589,6 +784,39 @@ mod tests {
         for fmt in ElemFormat::ALL {
             assert!(text.contains(fmt.name()), "{fmt} missing from table");
         }
+    }
+
+    #[test]
+    fn serving_sweep_table_and_headline_bar() {
+        // Reduced model keeps the tick horizons short; the engine is
+        // analytic, so no cycle-accurate simulation runs here.
+        let cfg = ServeConfig {
+            model: DeitConfig { seq: 64, ..DeitConfig::default() },
+            clusters: 4,
+            ..ServeConfig::default()
+        };
+        let mix = vec![(ElemFormat::E4M3, 0.6), (ElemFormat::E2M1, 0.4)];
+        let pts = serving_sweep(&cfg, &mix, 150, 42, &[0.5, 4.0]);
+        assert_eq!(pts.len(), 4);
+        // every offered request is accounted for on every row
+        for p in &pts {
+            assert_eq!(p.offered, 150);
+            assert_eq!(p.served + p.rejected_full + p.rejected_slo, 150, "{p:?}");
+        }
+        // at half load both schedulers serve everything within SLO
+        let low_cont = pts
+            .iter()
+            .find(|p| p.load_mult == 0.5 && p.sched == SchedulerKind::Continuous)
+            .unwrap();
+        assert_eq!(low_cont.served, 150);
+        assert!(low_cont.in_slo >= 145, "{low_cont:?}");
+        // the §12 acceptance bar: ≥ 1.5× goodput at the top load
+        let ratio = serving_headline_ratio(&pts).unwrap();
+        assert!(ratio >= 1.5, "continuous/barrier goodput ratio {ratio}");
+        let text = render_serving(&pts, &cfg, &mix);
+        assert!(text.contains("Serving"), "{text}");
+        assert!(text.contains("barrier") && text.contains("continuous"));
+        assert!(text.contains("headline"));
     }
 
     #[test]

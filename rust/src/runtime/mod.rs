@@ -12,6 +12,7 @@ use std::path::{Path, PathBuf};
 
 /// A compiled model artifact.
 pub struct Executable {
+    /// Artifact file name this executable was loaded from.
     pub name: String,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -19,6 +20,7 @@ pub struct Executable {
 /// The PJRT runtime: one CPU client + the artifact directory.
 pub struct Runtime {
     client: xla::PjRtClient,
+    /// Directory the artifacts are loaded from.
     pub artifact_dir: PathBuf,
 }
 
@@ -85,8 +87,11 @@ impl Executable {
 /// One line of `artifacts/manifest.txt`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ManifestEntry {
+    /// Artifact file name.
     pub file: String,
+    /// HLO entry computation name.
     pub entry: String,
+    /// Free-form detail lines (shapes, notes).
     pub detail: Vec<String>,
 }
 

@@ -44,18 +44,22 @@ use crate::snitch::SPM_BYTES;
 /// One simulated Snitch cluster executing shards sequentially.
 #[derive(Clone, Copy, Debug)]
 pub struct ClusterEngine {
+    /// Machine-global id of the simulated cluster.
     pub id: usize,
     /// Compute cores per cluster (8 in the paper's cluster).
     pub cores: usize,
+    /// Cluster clock (GHz).
     pub freq_ghz: f64,
     /// Upper bounds for the per-pass tile (rows / columns of C).
     pub max_tile_m: usize,
+    /// Per-pass column bound (see `max_tile_m`).
     pub max_tile_n: usize,
 }
 
 /// A shard plus borrowed views of the padded operands.
 #[derive(Clone, Copy, Debug)]
 pub struct ShardJob<'a> {
+    /// The shard to execute.
     pub shard: &'a Shard,
     /// The padded problem (full M/N; K already block-aligned).
     pub problem: MmProblem,
@@ -68,6 +72,7 @@ pub struct ShardJob<'a> {
 /// What one shard produced.
 #[derive(Clone, Debug)]
 pub struct ShardOutput {
+    /// The shard that was executed.
     pub shard: Shard,
     /// Which cluster ran it (filled by the pool).
     pub cluster: usize,

@@ -36,7 +36,7 @@ pub mod pool;
 
 pub use engine::{ClusterEngine, ShardJob, ShardOutput};
 pub use partition::{Shard, SplitStrategy};
-pub use pool::{ClusterPool, ClusterStats};
+pub use pool::{ClusterPool, ClusterStats, FabricLease};
 
 pub use crate::kernels::plan::PlanCache;
 use crate::kernels::MmProblem;
@@ -56,6 +56,7 @@ pub struct ScaleoutConfig {
     pub strategy: SplitStrategy,
     /// Per-pass tile bounds (rows / cols of C staged at once).
     pub max_tile_m: usize,
+    /// Per-pass column bound (see `max_tile_m`).
     pub max_tile_n: usize,
     /// Escape hatch (`--cold-plans`): bypass the process-wide plan
     /// cache — compile plans, quantize tiles and simulate every pass
@@ -91,6 +92,7 @@ impl ScaleoutConfig {
 pub struct ShardedRun {
     /// The original (unpadded) problem.
     pub problem: MmProblem,
+    /// Fabric configuration of the run.
     pub cfg: ScaleoutConfig,
     /// Row-major `m × n` result, padding cropped.
     pub c: Vec<f32>,
@@ -176,6 +178,40 @@ pub fn sharded_mm_with_cache(
     b: &[f32],
     cache: &PlanCache,
 ) -> ShardedRun {
+    sharded_mm_on_lease(cfg, pool::FabricLease::whole(cfg.clusters), problem, a, b, cache)
+}
+
+/// [`sharded_mm`] under a fabric lease (DESIGN.md §12): the GEMM runs
+/// on `cfg.clusters` workers standing in for the machine-global
+/// cluster ids the lease names, so per-cluster stats compose with the
+/// rest of the machine's accounting. The serving engine uses this to
+/// pin its fabric→cluster mapping against the cycle-accurate
+/// simulator (`serve::probe_fabrics`); disjoint leases may run
+/// concurrently. Plans warm through the process-wide cache (or the
+/// cold path under `cfg.cold_plans`).
+pub fn sharded_mm_leased(
+    cfg: &ScaleoutConfig,
+    lease: pool::FabricLease,
+    problem: MmProblem,
+    a: &[f32],
+    b: &[f32],
+) -> ShardedRun {
+    if cfg.cold_plans {
+        sharded_mm_on_lease(cfg, lease, problem, a, b, &PlanCache::disabled())
+    } else {
+        sharded_mm_on_lease(cfg, lease, problem, a, b, PlanCache::global())
+    }
+}
+
+/// Shared implementation of the sharded GEMM entry points.
+fn sharded_mm_on_lease(
+    cfg: &ScaleoutConfig,
+    lease: pool::FabricLease,
+    problem: MmProblem,
+    a: &[f32],
+    b: &[f32],
+    cache: &PlanCache,
+) -> ShardedRun {
     assert!(problem.m > 0 && problem.k > 0 && problem.n > 0, "degenerate GEMM");
     let (pp, a_pad, b_pad) = partition::pad_k(&problem, a, b);
     let shards = partition::make_shards(&pp, cfg.strategy, cfg.clusters, cfg.cores_per_cluster);
@@ -191,7 +227,7 @@ pub fn sharded_mm_with_cache(
         max_tile_n: cfg.max_tile_n,
     };
     let n_shards = jobs.len();
-    let (mut outputs, stats) = pool.execute(jobs, cache);
+    let (mut outputs, stats) = pool.execute_leased(jobs, cache, lease);
 
     // Deterministic combine: ascending K chunk, then row range. For
     // MSplit each row appears once; for MkSplit chunk 0 initializes and
@@ -321,6 +357,23 @@ mod tests {
         // the MX matmul executes exactly m·n·k/8 mxdotp ops over the
         // padded problem (here already padded)
         assert_eq!(run.total_mxdotp, (p.m * p.n * p.k / 8) as u64);
+    }
+
+    #[test]
+    fn leased_run_is_bit_identical_with_global_ids() {
+        let (p, a, b) = small();
+        let plain = sharded_mm(&ScaleoutConfig::with_clusters(2), p, &a, &b);
+        let lease = FabricLease { first_cluster: 6, clusters: 2 };
+        let leased = sharded_mm_leased(&ScaleoutConfig::with_clusters(2), lease, p, &a, &b);
+        for (x, y) in plain.c.iter().zip(&leased.c) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(leased.wall_cycles, plain.wall_cycles);
+        assert_eq!(
+            leased.clusters.iter().map(|s| s.id).collect::<Vec<_>>(),
+            vec![6, 7],
+            "leased stats must carry machine-global cluster ids"
+        );
     }
 
     #[test]

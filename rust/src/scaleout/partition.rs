@@ -43,6 +43,7 @@ pub enum SplitStrategy {
 /// One unit of cluster work: a row range of C and one K chunk.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Shard {
+    /// Dense shard id (deal/combine order).
     pub id: usize,
     /// Rows of C this shard produces (over the padded problem's M).
     pub rows: Range<usize>,

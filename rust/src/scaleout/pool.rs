@@ -32,13 +32,49 @@ use crate::kernels::plan::PlanCache;
 use std::collections::VecDeque;
 use std::sync::Mutex;
 
+/// A lease on a contiguous range of the machine's simulated cluster
+/// ids. The serving engine (DESIGN.md §12) partitions one machine into
+/// *fabrics* — disjoint leases — and runs independent batches on them
+/// concurrently; a pool executing under a lease labels its per-cluster
+/// accounting with the machine-global ids, so fabric-level roll-ups
+/// compose into one machine view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FabricLease {
+    /// First machine-global cluster id the lease covers.
+    pub first_cluster: usize,
+    /// Number of leased clusters.
+    pub clusters: usize,
+}
+
+impl FabricLease {
+    /// Lease over the whole machine (ids `0..clusters`).
+    pub fn whole(clusters: usize) -> Self {
+        FabricLease { first_cluster: 0, clusters }
+    }
+
+    /// One past the last leased cluster id.
+    pub fn end(&self) -> usize {
+        self.first_cluster + self.clusters
+    }
+
+    /// True when the leased id ranges do not overlap.
+    pub fn is_disjoint(&self, other: &FabricLease) -> bool {
+        self.end() <= other.first_cluster || other.end() <= self.first_cluster
+    }
+}
+
 /// Pool configuration: how many clusters, and their shape.
 #[derive(Clone, Copy, Debug)]
 pub struct ClusterPool {
+    /// Simulated clusters (= host worker threads).
     pub clusters: usize,
+    /// Compute cores per simulated cluster.
     pub cores_per_cluster: usize,
+    /// Cluster clock in GHz.
     pub freq_ghz: f64,
+    /// Per-pass tile bound: rows of C staged at once.
     pub max_tile_m: usize,
+    /// Per-pass tile bound: columns of C staged at once.
     pub max_tile_n: usize,
 }
 
@@ -46,6 +82,7 @@ pub struct ClusterPool {
 /// deterministic least-busy placement described in the module docs.
 #[derive(Clone, Debug, Default)]
 pub struct ClusterStats {
+    /// Machine-global id of the simulated cluster.
     pub id: usize,
     /// Shards assigned to this simulated cluster.
     pub shards: usize,
@@ -84,7 +121,27 @@ impl ClusterPool {
         jobs: Vec<ShardJob<'j>>,
         cache: &PlanCache,
     ) -> (Vec<ShardOutput>, Vec<ClusterStats>) {
+        self.execute_leased(jobs, cache, FabricLease::whole(self.clusters))
+    }
+
+    /// [`Self::execute`] under a fabric lease: the pool's `clusters`
+    /// workers stand in for the machine-global cluster ids
+    /// `lease.first_cluster .. lease.end()`, and all per-cluster
+    /// accounting ([`ClusterStats::id`], [`ShardOutput::cluster`])
+    /// carries those global ids. The lease width must equal the pool
+    /// width; disjoint leases may execute concurrently (nothing mutable
+    /// is shared beyond the thread-safe plan cache).
+    pub fn execute_leased<'j>(
+        &self,
+        jobs: Vec<ShardJob<'j>>,
+        cache: &PlanCache,
+        lease: FabricLease,
+    ) -> (Vec<ShardOutput>, Vec<ClusterStats>) {
         assert!(self.clusters > 0);
+        assert_eq!(
+            lease.clusters, self.clusters,
+            "lease width must match the pool's cluster count"
+        );
         let queues: Vec<Mutex<VecDeque<ShardJob<'j>>>> =
             (0..self.clusters).map(|_| Mutex::new(VecDeque::new())).collect();
         for (i, job) in jobs.into_iter().enumerate() {
@@ -96,7 +153,7 @@ impl ClusterPool {
             for id in 0..self.clusters {
                 let queues = &queues;
                 let engine = ClusterEngine {
-                    id,
+                    id: lease.first_cluster + id,
                     cores: self.cores_per_cluster,
                     freq_ghz: self.freq_ghz,
                     max_tile_m: self.max_tile_m,
@@ -124,7 +181,7 @@ impl ClusterPool {
         // influence the simulated accounting.
         outputs.sort_by_key(|o| o.shard.id);
         let mut stats: Vec<ClusterStats> = (0..self.clusters)
-            .map(|id| ClusterStats { id, ..ClusterStats::default() })
+            .map(|id| ClusterStats { id: lease.first_cluster + id, ..ClusterStats::default() })
             .collect();
         for o in outputs.iter_mut() {
             let target = stats
@@ -133,7 +190,7 @@ impl ClusterPool {
                 .min_by_key(|(_, st)| st.cycles)
                 .map(|(i, _)| i)
                 .unwrap();
-            o.cluster = target;
+            o.cluster = lease.first_cluster + target;
             let st = &mut stats[target];
             st.shards += 1;
             st.passes += o.passes;
@@ -207,6 +264,51 @@ mod tests {
         assert_eq!(outs.len(), 1);
         assert_eq!(stats.iter().filter(|s| s.shards > 0).count(), 1);
         assert_eq!(stats.iter().filter(|s| s.cycles == 0).count(), 3);
+    }
+
+    #[test]
+    fn leased_execution_carries_machine_global_cluster_ids() {
+        let p = MmProblem { m: 32, k: 32, n: 8, fmt: ElemFormat::E4M3, block_size: 32 };
+        let mut rng = XorShift::new(12);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        let shards = make_shards(&p, SplitStrategy::MSplit, 2, NUM_CORES);
+        let cache = PlanCache::new();
+        let jobs0: Vec<ShardJob> =
+            shards.iter().map(|sh| ShardJob { shard: sh, problem: p, a: &a, b: &b }).collect();
+        let jobs1 = jobs0.clone();
+        // whole-machine lease == plain execute
+        let (outs0, stats0) = pool(2).execute(jobs0, &cache);
+        // the same work under a lease on clusters 4..6 of a machine
+        let lease = FabricLease { first_cluster: 4, clusters: 2 };
+        let (outs1, stats1) = pool(2).execute_leased(jobs1, &cache, lease);
+        assert_eq!(stats1.iter().map(|s| s.id).collect::<Vec<_>>(), vec![4, 5]);
+        assert!(outs1.iter().all(|o| (4..6).contains(&o.cluster)));
+        // identical work and accounting, only the ids shift
+        assert_eq!(
+            stats0.iter().map(|s| (s.shards, s.cycles, s.passes)).collect::<Vec<_>>(),
+            stats1.iter().map(|s| (s.shards, s.cycles, s.passes)).collect::<Vec<_>>()
+        );
+        for (o0, o1) in outs0.iter().zip(&outs1) {
+            assert_eq!(o0.shard.id, o1.shard.id);
+            for (x, y) in o0.c.iter().zip(&o1.c) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // lease geometry helpers
+        assert!(lease.is_disjoint(&FabricLease { first_cluster: 6, clusters: 2 }));
+        assert!(!lease.is_disjoint(&FabricLease { first_cluster: 5, clusters: 2 }));
+        assert_eq!(FabricLease::whole(8).end(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "lease width")]
+    fn lease_width_must_match_the_pool() {
+        let (_, _) = pool(2).execute_leased(
+            Vec::new(),
+            &PlanCache::new(),
+            FabricLease { first_cluster: 0, clusters: 3 },
+        );
     }
 
     #[test]

@@ -1,0 +1,142 @@
+//! Admission control: bounded backpressure with explicit,
+//! machine-readable rejection reasons.
+//!
+//! The seed coordinator's queue grew without bound: under sustained
+//! overload every admitted request waited longer than the one before
+//! it, latency diverged, and *goodput* (requests completed within
+//! their SLO) collapsed toward zero even though raw throughput looked
+//! healthy — the classic congestion collapse the `reproduce serving`
+//! table demonstrates. The admission controller bounds that feedback
+//! loop in two ways, both applied at arrival time:
+//!
+//! * a hard **queue-depth cap** ([`RejectReason::QueueFull`]) — the
+//!   memory/backpressure bound;
+//! * an **SLO-attainability check** ([`RejectReason::SloUnattainable`])
+//!   — the request is rejected *now* if, under ideal load balancing of
+//!   the work already accepted, it could not complete within its SLO
+//!   anyway. Serving it would waste fabric time on a response the
+//!   client has already timed out on.
+//!
+//! Rejected requests are never silently dropped: every offered request
+//! appears exactly once in the outcome, either served or rejected with
+//! a reason (property-tested in `serve::scheduler`).
+
+/// Why a request was turned away at admission. All quantities are in
+/// scheduler ticks (1 tick = 1 µs of simulated fabric time).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The admission queue is at capacity.
+    QueueFull {
+        /// Queued requests at the rejection instant.
+        depth: usize,
+        /// The configured cap.
+        cap: usize,
+    },
+    /// Even under ideal balancing of already-accepted work, this
+    /// request could not finish inside its SLO.
+    SloUnattainable {
+        /// Predicted completion latency (ticks from arrival).
+        predicted_ticks: u64,
+        /// The SLO it would miss.
+        slo_ticks: u64,
+    },
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::QueueFull { depth, cap } => {
+                write!(f, "queue full ({depth}/{cap})")
+            }
+            RejectReason::SloUnattainable { predicted_ticks, slo_ticks } => {
+                write!(f, "SLO unattainable (predicted {predicted_ticks} > slo {slo_ticks} ticks)")
+            }
+        }
+    }
+}
+
+/// The admission controller configuration. `slo_ticks == 0` disables
+/// the attainability check (the latency-blind mode the seed barrier
+/// baseline runs under — queue-cap backpressure only).
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionController {
+    /// Maximum queued (admitted, not yet dispatched) requests.
+    pub queue_cap: usize,
+    /// SLO used for the attainability check (0 = disabled).
+    pub slo_ticks: u64,
+}
+
+impl AdmissionController {
+    /// Decide admission for one arriving request.
+    ///
+    /// * `queued` — requests currently queued;
+    /// * `outstanding_ticks` — service ticks of all accepted work not
+    ///   yet complete (queued service + in-flight remainders);
+    /// * `fabrics` — fabrics the outstanding work is balanced over;
+    /// * `request_cost_ticks` — worst-case cost of this request
+    ///   (setup + reload + service), making the estimate conservative.
+    pub fn admit(
+        &self,
+        queued: usize,
+        outstanding_ticks: u64,
+        fabrics: usize,
+        request_cost_ticks: u64,
+    ) -> Result<(), RejectReason> {
+        if queued >= self.queue_cap {
+            return Err(RejectReason::QueueFull { depth: queued, cap: self.queue_cap });
+        }
+        if self.slo_ticks > 0 {
+            let predicted = outstanding_ticks / fabrics.max(1) as u64 + request_cost_ticks;
+            if predicted > self.slo_ticks {
+                return Err(RejectReason::SloUnattainable {
+                    predicted_ticks: predicted,
+                    slo_ticks: self.slo_ticks,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_cap_binds_first() {
+        let adm = AdmissionController { queue_cap: 2, slo_ticks: 100 };
+        assert!(adm.admit(0, 0, 1, 10).is_ok());
+        assert!(adm.admit(1, 50, 1, 10).is_ok());
+        assert_eq!(
+            adm.admit(2, 0, 1, 10),
+            Err(RejectReason::QueueFull { depth: 2, cap: 2 })
+        );
+    }
+
+    #[test]
+    fn slo_check_accounts_for_backlog_per_fabric() {
+        let adm = AdmissionController { queue_cap: 100, slo_ticks: 100 };
+        // 400 outstanding ticks over 4 fabrics = 100 wait + 20 cost
+        assert_eq!(
+            adm.admit(5, 400, 4, 20),
+            Err(RejectReason::SloUnattainable { predicted_ticks: 120, slo_ticks: 100 })
+        );
+        // same backlog over 8 fabrics fits
+        assert!(adm.admit(5, 400, 8, 20).is_ok());
+    }
+
+    #[test]
+    fn zero_slo_disables_the_attainability_check() {
+        let adm = AdmissionController { queue_cap: 10, slo_ticks: 0 };
+        assert!(adm.admit(3, u64::MAX / 2, 1, 1000).is_ok());
+    }
+
+    #[test]
+    fn reasons_render_for_operators() {
+        let full = RejectReason::QueueFull { depth: 8, cap: 8 }.to_string();
+        assert!(full.contains("queue full"), "{full}");
+        let slo =
+            RejectReason::SloUnattainable { predicted_ticks: 12, slo_ticks: 9 }.to_string();
+        assert!(slo.contains("SLO"), "{slo}");
+    }
+}

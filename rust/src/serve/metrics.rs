@@ -1,0 +1,94 @@
+//! Per-request latency accounting for the serving engine: tail
+//! percentiles in simulated ticks (1 tick = 1 µs of fabric time at
+//! 1 GHz) plus host wall-clock.
+//!
+//! The serving claims of DESIGN.md §12 live in the *tail*, not the
+//! mean: a barrier batcher and a continuous batcher can have similar
+//! means while their p99s differ by an order of magnitude under mixed
+//! bursty traffic. Percentiles use the nearest-rank rule, so a
+//! reported p99 is always a latency some actual request experienced.
+
+/// Nearest-rank percentile over an **ascending-sorted** slice of tick
+/// latencies (`q` in [0, 1]); 0 for an empty slice.
+///
+/// ```
+/// use mxdotp::serve::metrics::percentile_ticks;
+/// let sorted = [10, 20, 30, 40];
+/// assert_eq!(percentile_ticks(&sorted, 0.0), 10);
+/// assert_eq!(percentile_ticks(&sorted, 0.5), 30);
+/// assert_eq!(percentile_ticks(&sorted, 1.0), 40);
+/// assert_eq!(percentile_ticks(&[], 0.99), 0);
+/// ```
+pub fn percentile_ticks(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "input must be sorted");
+    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx]
+}
+
+/// Latency summary of one serving run, in simulated ticks.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Percentiles {
+    /// Median latency (ticks).
+    pub p50: u64,
+    /// 95th-percentile latency (ticks).
+    pub p95: u64,
+    /// 99th-percentile latency (ticks).
+    pub p99: u64,
+    /// Mean latency (ticks).
+    pub mean: f64,
+    /// Worst observed latency (ticks).
+    pub max: u64,
+    /// Number of samples the summary covers.
+    pub count: usize,
+}
+
+/// Summarize a set of tick latencies (any order; sorted internally).
+pub fn latency_percentiles(latencies: &[u64]) -> Percentiles {
+    if latencies.is_empty() {
+        return Percentiles::default();
+    }
+    let mut sorted = latencies.to_vec();
+    sorted.sort_unstable();
+    Percentiles {
+        p50: percentile_ticks(&sorted, 0.50),
+        p95: percentile_ticks(&sorted, 0.95),
+        p99: percentile_ticks(&sorted, 0.99),
+        mean: sorted.iter().sum::<u64>() as f64 / sorted.len() as f64,
+        max: *sorted.last().unwrap(),
+        count: sorted.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let lat: Vec<u64> = (1..=100).collect();
+        let p = latency_percentiles(&lat);
+        assert_eq!(p.p50, 51); // round(99 * 0.5) = 50 -> value 51
+        assert_eq!(p.p95, 95);
+        assert_eq!(p.p99, 99);
+        assert_eq!(p.max, 100);
+        assert_eq!(p.count, 100);
+        assert!((p.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample_and_empty() {
+        let p = latency_percentiles(&[7]);
+        assert_eq!((p.p50, p.p95, p.p99, p.max, p.count), (7, 7, 7, 7, 1));
+        assert_eq!(latency_percentiles(&[]), Percentiles::default());
+    }
+
+    #[test]
+    fn unsorted_input_is_handled() {
+        let p = latency_percentiles(&[30, 10, 20]);
+        assert_eq!(p.p50, 20);
+        assert_eq!(p.max, 30);
+    }
+}

@@ -1,0 +1,577 @@
+//! The production serving engine (DESIGN.md §12): admission-controlled
+//! continuous batching over a multi-fabric MX cluster machine.
+//!
+//! The seed coordinator (`crate::coordinator`, DESIGN.md §3) is a
+//! deliberately lean FIFO-plus-batcher: one queue, barrier dispatch
+//! (a batch occupies the whole machine and completes as a unit), no
+//! backpressure. That is the right baseline for the paper's
+//! single-cluster energy story and it remains in place — but under
+//! mixed-format, bursty, open-loop traffic its fabric utilization and
+//! goodput collapse. This subsystem replaces it on the serving path:
+//!
+//! * **per-class queues** ([`queue`]) — one FIFO per (element format,
+//!   priority) class, so scheduling can keep a fabric's resident
+//!   format hot instead of requantizing weights on every transition;
+//! * **admission control** ([`admission`]) — bounded queue depth plus
+//!   an SLO-attainability check; rejects carry a reason and are never
+//!   silently dropped;
+//! * **continuous batching + multi-fabric scheduling** ([`scheduler`])
+//!   — the machine's clusters are grouped into *fabrics* that serve
+//!   independent batches concurrently; arriving requests splice into
+//!   in-flight batches instead of waiting for a barrier, and idle
+//!   fabrics pick the highest-priority, oldest-head class;
+//! * **latency accounting** ([`metrics`]) — p50/p95/p99 in simulated
+//!   ticks plus host wall time, surfaced by `report::render_serving`
+//!   and `mxdotp-cli reproduce serving`.
+//!
+//! **Time base.** The engine is a deterministic discrete-tick
+//! simulation: 1 tick = [`CYCLES_PER_TICK`] simulated cluster cycles
+//! (1 µs at the paper's 1 GHz operating point). Service times come
+//! from the analytic cost model (`workload::analytic_sharded_cost`)
+//! calibrated against the cycle-accurate simulator, so the serving
+//! numbers inherit the paper's per-format throughput ratios (e.g.
+//! MXFP4 requests cost half the ticks of MXFP8 ones).
+//!
+//! **Determinism.** Given a trace (see `workload::arrivals`) and a
+//! config, the outcome — every admit/reject decision, batch
+//! composition, dispatch and completion tick — is bit-reproducible,
+//! and per-request *results* are independent of the scheduler: both
+//! schedulers produce bit-identical outputs for every request they
+//! both serve ([`verify_schedulers_bit_identical`]).
+
+pub mod admission;
+pub mod metrics;
+pub mod queue;
+pub mod scheduler;
+
+pub use admission::{AdmissionController, RejectReason};
+pub use metrics::{latency_percentiles, Percentiles};
+pub use scheduler::{Rejected, Served};
+
+use crate::coordinator::ShardedExecutor;
+use crate::formats::ElemFormat;
+use crate::scaleout::pool::FabricLease;
+use crate::workload::arrivals::{generate_trace, Arrival, ArrivalKind, ArrivalSpec};
+use crate::workload::{analytic_sharded_cost, generate_input, DeitConfig};
+use std::collections::HashMap;
+
+/// Simulated cluster cycles per scheduler tick: 1 tick = 1 µs of
+/// fabric time at the paper's 1 GHz operating point.
+pub const CYCLES_PER_TICK: u64 = 1000;
+
+/// Modeled cost of software-requantizing one weight element during a
+/// format reload (cycles per element per core) — the RNE encode path
+/// of the FP8-to-FP32 software baseline, which is what a format switch
+/// runs before the fabric can serve the new class.
+pub const QUANT_CYCLES_PER_ELEM: u64 = 8;
+
+/// Fixed per-batch staging overhead in ticks (plan lookup + activation
+/// DMA-in for the first request of a batch).
+pub const SETUP_TICKS: u64 = 2;
+
+/// Seed base for deriving a request's input tensor from its trace id
+/// (`generate_input(model, INPUT_SEED_BASE + id)`). One shared
+/// constant so every executor path — PJRT, in-process, and the
+/// scheduler bit-identity check — serves the identical payload for
+/// the same trace.
+pub const INPUT_SEED_BASE: u64 = 1000;
+
+/// Number of element formats (sizes per-format cost tables).
+const NUM_FORMATS: usize = ElemFormat::ALL.len();
+
+/// Which scheduling discipline drives the machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SchedulerKind {
+    /// The seed coordinator's model: one FIFO over all formats, one
+    /// fabric spanning every cluster, barrier dispatch (the whole
+    /// batch completes as a unit), latency-blind admission (queue-cap
+    /// backpressure only).
+    Barrier,
+    /// The production engine: per-class queues, SLO-aware admission,
+    /// continuous splice into in-flight batches, concurrent batches on
+    /// disjoint fabrics.
+    Continuous,
+}
+
+impl SchedulerKind {
+    /// Canonical lowercase name (CLI value).
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::Barrier => "barrier",
+            SchedulerKind::Continuous => "continuous",
+        }
+    }
+
+    /// Parse a lowercase name ("barrier" / "continuous").
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "barrier" => Some(SchedulerKind::Barrier),
+            "continuous" => Some(SchedulerKind::Continuous),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SchedulerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Serving-engine configuration: the machine shape, the batching and
+/// admission policy, and the scheduling discipline.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Model shapes served (per-request format overrides `model.fmt`).
+    pub model: DeitConfig,
+    /// Total simulated clusters in the machine.
+    pub clusters: usize,
+    /// Fabric count for the continuous scheduler (0 = one fabric per
+    /// cluster). Must divide `clusters`. The barrier scheduler always
+    /// runs one fabric spanning every cluster.
+    pub fabrics: usize,
+    /// Compute cores per cluster (8 in the paper's cluster).
+    pub cores_per_cluster: usize,
+    /// Maximum requests per batch (and per continuous batch splice).
+    pub max_batch: usize,
+    /// Barrier batcher: ticks the oldest request may wait before a
+    /// partial batch is dispatched anyway.
+    pub max_wait_ticks: u64,
+    /// Admission queue-depth cap (bounded backpressure).
+    pub queue_cap: usize,
+    /// Latency SLO in ticks; 0 = auto (4 × the worst-case single
+    /// request cost on one fabric, [`CostModel::auto_slo_ticks`]).
+    pub slo_ticks: u64,
+    /// Calibrated MX utilization for the analytic cost model
+    /// (`workload::calibrate_util`).
+    pub util: f64,
+    /// Measured strong-scaling efficiency for multi-cluster fabrics
+    /// (`scaleout::measure_parallel_efficiency`).
+    pub cluster_eff: f64,
+    /// Scheduling discipline under simulation.
+    pub scheduler: SchedulerKind,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: DeitConfig::default(),
+            clusters: 8,
+            fabrics: 0,
+            cores_per_cluster: crate::snitch::NUM_CORES,
+            max_batch: 8,
+            max_wait_ticks: 64,
+            queue_cap: 128,
+            slo_ticks: 0,
+            util: 0.78,
+            cluster_eff: 0.9,
+            scheduler: SchedulerKind::Continuous,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Fabrics the scheduler places batches on: 1 for the barrier
+    /// baseline; `fabrics` (or one per cluster when 0) for continuous.
+    pub fn fabric_count(&self) -> usize {
+        match self.scheduler {
+            SchedulerKind::Barrier => 1,
+            SchedulerKind::Continuous => {
+                if self.fabrics == 0 {
+                    self.clusters
+                } else {
+                    self.fabrics
+                }
+            }
+        }
+    }
+
+    /// Clusters backing each fabric (`clusters / fabric_count`).
+    pub fn clusters_per_fabric(&self) -> usize {
+        self.clusters / self.fabric_count()
+    }
+
+    /// The cluster-id range each fabric leases from the machine —
+    /// fabric `f` owns clusters `[f·cpf, (f+1)·cpf)`; leases are
+    /// pairwise disjoint by construction.
+    pub fn fabric_leases(&self) -> Vec<FabricLease> {
+        let cpf = self.clusters_per_fabric();
+        (0..self.fabric_count())
+            .map(|f| FabricLease { first_cluster: f * cpf, clusters: cpf })
+            .collect()
+    }
+
+    /// Check the config is servable; `Err` carries an operator-facing
+    /// message.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.clusters == 0 {
+            return Err("clusters must be at least 1".into());
+        }
+        let f = self.fabric_count();
+        if f == 0 || f > self.clusters || self.clusters % f != 0 {
+            return Err(format!(
+                "fabrics ({f}) must divide the cluster count ({})",
+                self.clusters
+            ));
+        }
+        if self.max_batch == 0 {
+            return Err("max_batch must be at least 1 (a zero batch never dispatches)".into());
+        }
+        if self.queue_cap == 0 {
+            return Err("queue_cap must be at least 1".into());
+        }
+        if !(self.util > 0.0 && self.util <= 1.0) {
+            return Err(format!("utilization {} must be in (0, 1]", self.util));
+        }
+        if self.cores_per_cluster == 0 {
+            return Err("cores_per_cluster must be at least 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Per-format service costs on one fabric, in scheduler ticks —
+/// derived from the analytic cost model of `workload/` so the
+/// scheduler sees the real per-format throughput differences (MXFP4
+/// requests cost half the ticks of byte-wide formats) instead of an
+/// average.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    svc: [u64; NUM_FORMATS],
+    /// Format-switch cost: requantize + restage every weight element
+    /// ([`QUANT_CYCLES_PER_ELEM`] per element per core across the
+    /// fabric's clusters).
+    pub reload_ticks: u64,
+    /// Fixed per-batch staging overhead ([`SETUP_TICKS`]).
+    pub setup_ticks: u64,
+    /// Clusters backing the fabric this table was built for.
+    pub clusters_per_fabric: usize,
+}
+
+impl CostModel {
+    /// Build the cost table for `cfg`'s per-fabric cluster count.
+    pub fn build(cfg: &ServeConfig) -> Self {
+        let cpf = cfg.clusters_per_fabric();
+        let mut svc = [0u64; NUM_FORMATS];
+        for fmt in ElemFormat::ALL {
+            let m = DeitConfig { fmt, ..cfg.model };
+            let cycles = analytic_sharded_cost(
+                &m,
+                cfg.cores_per_cluster,
+                cfg.util,
+                cpf,
+                cfg.cluster_eff,
+            )
+            .total
+            .cycles;
+            svc[fmt.csr_code() as usize] = cycles.div_ceil(CYCLES_PER_TICK).max(1);
+        }
+        let eff = if cpf > 1 { cfg.cluster_eff.clamp(0.05, 1.0) } else { 1.0 };
+        let reload_cycles = (cfg.model.weight_elems() * QUANT_CYCLES_PER_ELEM) as f64
+            / (cfg.cores_per_cluster as f64 * cpf as f64 * eff);
+        CostModel {
+            svc,
+            reload_ticks: ((reload_cycles / CYCLES_PER_TICK as f64).ceil() as u64).max(1),
+            setup_ticks: SETUP_TICKS,
+            clusters_per_fabric: cpf,
+        }
+    }
+
+    /// Service ticks of one `fmt` request on one fabric.
+    pub fn svc_ticks(&self, fmt: ElemFormat) -> u64 {
+        self.svc[fmt.csr_code() as usize]
+    }
+
+    /// Worst-case cost of admitting one `fmt` request: a fresh batch
+    /// on a cold-format fabric (setup + reload + service).
+    pub fn worst_case_request_ticks(&self, fmt: ElemFormat) -> u64 {
+        self.setup_ticks + self.reload_ticks + self.svc_ticks(fmt)
+    }
+
+    /// The auto-SLO: 4 × the worst-case single-request cost of the
+    /// slowest format. Generous enough that a lightly loaded fabric
+    /// never rejects, tight enough that a saturated barrier queue
+    /// (queue-cap deep) blows straight through it.
+    pub fn auto_slo_ticks(&self) -> u64 {
+        let worst = ElemFormat::ALL
+            .iter()
+            .map(|&f| self.worst_case_request_ticks(f))
+            .max()
+            .unwrap_or(1);
+        4 * worst
+    }
+}
+
+/// Resolve the SLO a run of `cfg` is measured (and, for the continuous
+/// scheduler, admission-enforced) against: the explicit `slo_ticks`,
+/// or the cost model's auto-SLO when 0.
+pub fn resolve_slo_ticks(cfg: &ServeConfig) -> u64 {
+    scheduler::effective_slo(cfg, &CostModel::build(cfg))
+}
+
+/// Estimated steady-state service capacity of the continuous engine in
+/// requests per kilotick, for a given traffic mix — the anchor the
+/// offered-load sweeps of `report::serving_sweep` and the serving
+/// bench are scaled against.
+pub fn estimated_capacity_per_ktick(cfg: &ServeConfig, mix: &[(ElemFormat, f64)]) -> f64 {
+    assert!(!mix.is_empty(), "traffic mix must not be empty");
+    let c = ServeConfig { scheduler: SchedulerKind::Continuous, ..*cfg };
+    let costs = CostModel::build(&c);
+    let wsum: f64 = mix.iter().map(|&(_, w)| w).sum();
+    let mean_svc: f64 =
+        mix.iter().map(|&(f, w)| w * costs.svc_ticks(f) as f64).sum::<f64>() / wsum;
+    c.fabric_count() as f64 * 1000.0 / mean_svc
+}
+
+/// Run the configured scheduler over an arrival trace. The outcome is
+/// a pure function of `(cfg, trace)` — rerunning yields bit-identical
+/// attribution (dispatch/completion ticks, batch ids, reject reasons).
+///
+/// Panics on an invalid config ([`ServeConfig::validate`]) or an
+/// unsorted trace.
+pub fn simulate(cfg: &ServeConfig, trace: &[Arrival]) -> scheduler::ServeOutcome {
+    if let Err(e) = cfg.validate() {
+        panic!("invalid serving config: {e}");
+    }
+    assert!(
+        trace.windows(2).all(|w| w[0].tick <= w[1].tick),
+        "arrival trace must be sorted by tick"
+    );
+    let costs = CostModel::build(cfg);
+    match cfg.scheduler {
+        SchedulerKind::Barrier => scheduler::run_barrier(cfg, &costs, trace),
+        SchedulerKind::Continuous => scheduler::run_continuous(cfg, &costs, trace),
+    }
+}
+
+/// The scheduler's batches in dispatch order: served requests grouped
+/// by (fabric, batch id), preserving the order the batches were
+/// formed in. Barrier batches may mix formats (the FIFO interleaving
+/// is exactly what the barrier baseline pays reloads for);
+/// continuous batches are single-format by construction.
+pub fn batches_in_dispatch_order(outcome: &scheduler::ServeOutcome) -> Vec<Vec<Served>> {
+    let mut slots: HashMap<(usize, u64), usize> = HashMap::new();
+    let mut groups: Vec<Vec<Served>> = Vec::new();
+    for r in &outcome.served {
+        let slot = *slots.entry((r.fabric, r.batch_id)).or_insert_with(|| {
+            groups.push(Vec::new());
+            groups.len() - 1
+        });
+        groups[slot].push(*r);
+    }
+    groups
+}
+
+/// Execute every served request of `outcome` through per-format
+/// executors and return `(request id, output)` pairs sorted by id.
+///
+/// Batches are executed as the scheduler formed them — grouped by
+/// (fabric, batch; mixed-format barrier batches are sub-split per
+/// executor), with batches of the same format running *concurrently*
+/// on disjoint fabrics via [`ShardedExecutor::forward_concurrent`] —
+/// so this is also the proof that batch composition and placement
+/// cannot change results: every output is a pure function of the
+/// request id alone. Host concurrency is bounded by the outcome's
+/// fabric count (only that many batches were ever in flight at once).
+///
+/// `execs` must contain an executor for every format in the outcome
+/// (panics otherwise, as does a shape-invalid input).
+pub fn execute_outcome(
+    outcome: &scheduler::ServeOutcome,
+    model: &DeitConfig,
+    execs: &HashMap<ElemFormat, ShardedExecutor>,
+    input_seed_base: u64,
+) -> Vec<(u64, Vec<f32>)> {
+    let concurrency = outcome.fabric_busy_ticks.len().max(1);
+    let groups = batches_in_dispatch_order(outcome);
+    let mut results: Vec<(u64, Vec<f32>)> = Vec::with_capacity(outcome.served.len());
+    for fmt in ElemFormat::ALL {
+        // This format's slice of each batch, in dispatch order.
+        let mut batches: Vec<Vec<Vec<f32>>> = Vec::new();
+        let mut ids: Vec<Vec<u64>> = Vec::new();
+        for group in &groups {
+            let members: Vec<&Served> = group.iter().filter(|r| r.fmt == fmt).collect();
+            if members.is_empty() {
+                continue;
+            }
+            batches
+                .push(members.iter().map(|r| generate_input(model, input_seed_base + r.id)).collect());
+            ids.push(members.iter().map(|r| r.id).collect());
+        }
+        if batches.is_empty() {
+            continue;
+        }
+        let exec = execs
+            .get(&fmt)
+            .unwrap_or_else(|| panic!("no executor registered for format {fmt}"));
+        // Bound host threads to the machine's fabric count.
+        for (batch_chunk, id_chunk) in batches.chunks(concurrency).zip(ids.chunks(concurrency)) {
+            let outputs = exec.forward_concurrent(batch_chunk);
+            for (batch_ids, batch_out) in id_chunk.iter().zip(outputs) {
+                for (&id, out) in batch_ids.iter().zip(batch_out) {
+                    results.push((id, out));
+                }
+            }
+        }
+    }
+    results.sort_by_key(|&(id, _)| id);
+    results
+}
+
+/// Run the *same* trace through both schedulers, execute every served
+/// request with real per-format [`ShardedExecutor`]s, and assert that
+/// each request served by both produced bit-identical output — the
+/// acceptance invariant that continuous batching reorders *time*, not
+/// *results*. Returns the number of requests compared (panics on any
+/// mismatch or if the schedulers share no served request).
+pub fn verify_schedulers_bit_identical(
+    model: &DeitConfig,
+    mix: &[(ElemFormat, f64)],
+    requests: usize,
+    seed: u64,
+) -> usize {
+    let base = ServeConfig {
+        model: *model,
+        clusters: 2,
+        fabrics: 0,
+        ..ServeConfig::default()
+    };
+    let rate = 0.5 * estimated_capacity_per_ktick(&base, mix);
+    let spec = ArrivalSpec {
+        kind: ArrivalKind::Poisson,
+        rate_per_ktick: rate,
+        mix: mix.to_vec(),
+        high_priority_frac: 0.0,
+        requests,
+        seed,
+    };
+    let trace = generate_trace(&spec);
+    let cont = simulate(&ServeConfig { scheduler: SchedulerKind::Continuous, ..base }, &trace);
+    let barr = simulate(&ServeConfig { scheduler: SchedulerKind::Barrier, ..base }, &trace);
+
+    let params = crate::workload::generate_params(model, 42);
+    let mut execs: HashMap<ElemFormat, ShardedExecutor> = HashMap::new();
+    for &(fmt, _) in mix {
+        execs
+            .entry(fmt)
+            .or_insert_with(|| ShardedExecutor::new(DeitConfig { fmt, ..*model }, params.clone()));
+    }
+    let out_c = execute_outcome(&cont, model, &execs, INPUT_SEED_BASE);
+    let out_b = execute_outcome(&barr, model, &execs, INPUT_SEED_BASE);
+    let by_id: HashMap<u64, &Vec<f32>> = out_b.iter().map(|(id, o)| (*id, o)).collect();
+    let mut compared = 0;
+    for (id, oc) in &out_c {
+        let Some(ob) = by_id.get(id) else { continue };
+        assert_eq!(oc.len(), ob.len(), "request {id}: output shapes differ");
+        for (i, (a, b)) in oc.iter().zip(ob.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "request {id}, element {i}: schedulers disagree ({a} vs {b})"
+            );
+        }
+        compared += 1;
+    }
+    assert!(compared > 0, "schedulers served disjoint request sets — nothing compared");
+    compared
+}
+
+/// Warm-up probe: run one small representative MX GEMM on every
+/// fabric's leased cluster range through the cycle-accurate scale-out
+/// engine ([`crate::scaleout::sharded_mm_leased`]), returning each
+/// lease with its measured GFLOPS. This pins the fabric→cluster
+/// mapping against the real simulator (per-cluster stats carry
+/// machine-global cluster ids) and pre-warms the plan cache the
+/// serving executors share.
+pub fn probe_fabrics(cfg: &ServeConfig, fmt: ElemFormat) -> Vec<(FabricLease, f64)> {
+    let cpf = cfg.clusters_per_fabric();
+    let p = crate::kernels::MmProblem {
+        m: cfg.cores_per_cluster * cpf,
+        k: 64,
+        n: 32,
+        fmt,
+        block_size: 32,
+    };
+    let mut rng = crate::rng::XorShift::new(0x5E21E);
+    let a = rng.normal_vec(p.m * p.k, 0.5);
+    let b = rng.normal_vec(p.k * p.n, 0.02);
+    let scfg = crate::scaleout::ScaleoutConfig {
+        clusters: cpf,
+        cores_per_cluster: cfg.cores_per_cluster,
+        ..crate::scaleout::ScaleoutConfig::default()
+    };
+    cfg.fabric_leases()
+        .into_iter()
+        .map(|lease| {
+            let run = crate::scaleout::sharded_mm_leased(&scfg, lease, p, &a, &b);
+            (lease, run.gflops())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation_catches_degenerate_shapes() {
+        let ok = ServeConfig::default();
+        assert!(ok.validate().is_ok());
+        assert!(ServeConfig { clusters: 0, ..ok }.validate().is_err());
+        assert!(ServeConfig { max_batch: 0, ..ok }.validate().is_err());
+        assert!(ServeConfig { queue_cap: 0, ..ok }.validate().is_err());
+        assert!(ServeConfig { fabrics: 3, clusters: 8, ..ok }.validate().is_err());
+        assert!(ServeConfig { fabrics: 4, clusters: 8, ..ok }.validate().is_ok());
+        assert!(ServeConfig { util: 0.0, ..ok }.validate().is_err());
+    }
+
+    #[test]
+    fn fabric_leases_partition_the_machine() {
+        let cfg = ServeConfig { clusters: 8, fabrics: 4, ..ServeConfig::default() };
+        let leases = cfg.fabric_leases();
+        assert_eq!(leases.len(), 4);
+        assert_eq!(cfg.clusters_per_fabric(), 2);
+        for (i, l) in leases.iter().enumerate() {
+            assert_eq!(l.first_cluster, 2 * i);
+            assert_eq!(l.clusters, 2);
+            for other in &leases[i + 1..] {
+                assert!(l.is_disjoint(other), "{l:?} overlaps {other:?}");
+            }
+        }
+        // barrier always sees one whole-machine fabric
+        let b = ServeConfig { scheduler: SchedulerKind::Barrier, ..cfg };
+        assert_eq!(b.fabric_count(), 1);
+        assert_eq!(b.clusters_per_fabric(), 8);
+    }
+
+    #[test]
+    fn cost_model_tracks_format_lane_width_and_fabric_size() {
+        let cfg = ServeConfig::default(); // continuous, 1-cluster fabrics
+        let costs = CostModel::build(&cfg);
+        let f8 = costs.svc_ticks(ElemFormat::E4M3);
+        let f4 = costs.svc_ticks(ElemFormat::E2M1);
+        // FP4's 16 lanes halve the service time (±1 tick of rounding)
+        assert!((f8 as f64 / f4 as f64 - 2.0).abs() < 0.05, "{f8} vs {f4}");
+        // the barrier's whole-machine fabric is ~clusters× faster/req
+        let bcfg = ServeConfig { scheduler: SchedulerKind::Barrier, ..cfg };
+        let bcosts = CostModel::build(&bcfg);
+        let bf8 = bcosts.svc_ticks(ElemFormat::E4M3);
+        assert!(bf8 < f8 / 4, "barrier per-request svc {bf8} vs single-cluster {f8}");
+        // reload is a real cost but smaller than serving one request
+        assert!(costs.reload_ticks > 0 && costs.reload_ticks < f8);
+        assert!(costs.auto_slo_ticks() > costs.worst_case_request_ticks(ElemFormat::E4M3));
+    }
+
+    #[test]
+    fn capacity_estimate_scales_with_fabrics_and_mix() {
+        let cfg = ServeConfig::default();
+        let mix8 = [(ElemFormat::E4M3, 1.0)];
+        let mix4 = [(ElemFormat::E2M1, 1.0)];
+        let c8 = estimated_capacity_per_ktick(&cfg, &mix8);
+        let c4 = estimated_capacity_per_ktick(&cfg, &mix4);
+        assert!(c4 > 1.8 * c8, "FP4 capacity {c4} vs FP8 {c8}");
+        let half = ServeConfig { clusters: 4, ..cfg };
+        let ch = estimated_capacity_per_ktick(&half, &mix8);
+        assert!((c8 / ch - 2.0).abs() < 0.1, "8-cluster {c8} vs 4-cluster {ch}");
+    }
+}

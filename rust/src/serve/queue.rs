@@ -1,0 +1,164 @@
+//! Per-(format, priority) class queues for the continuous batcher.
+//!
+//! The seed coordinator kept one FIFO and therefore interleaved
+//! element formats in dispatch order, forcing the fabric to requantize
+//! and restage weights on every transition (DESIGN.md §12). The
+//! serving engine instead queues each *class* — a (format, priority)
+//! pair — separately:
+//!
+//! * order **within** a class is strictly FIFO (arrival order); the
+//!   scheduler can only pop from a class head, so admission can never
+//!   reorder requests of the same class (property-tested in
+//!   `serve::scheduler`);
+//! * order **across** classes is a scheduling decision: High-priority
+//!   classes are picked strictly before Normal ones, and within a
+//!   priority the class with the oldest head request wins (FIFO-fair
+//!   across formats, so no format starves).
+
+use crate::formats::ElemFormat;
+use crate::workload::arrivals::{Arrival, Priority};
+use std::collections::VecDeque;
+
+/// Number of distinct (format, priority) classes.
+const NUM_CLASSES: usize = ElemFormat::ALL.len() * Priority::ALL.len();
+
+/// A (format, priority) scheduling class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ClassId {
+    /// Element format of every request in the class.
+    pub fmt: ElemFormat,
+    /// Priority of every request in the class.
+    pub priority: Priority,
+}
+
+impl ClassId {
+    /// Dense table index (priority-major, format by CSR code).
+    fn index(self) -> usize {
+        self.priority.index() * ElemFormat::ALL.len() + self.fmt.csr_code() as usize
+    }
+}
+
+/// The class-queue set: one FIFO per (format, priority) class.
+#[derive(Clone, Debug)]
+pub struct ClassQueues {
+    queues: Vec<VecDeque<Arrival>>,
+    len: usize,
+}
+
+impl Default for ClassQueues {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ClassQueues {
+    /// Empty queue set (all classes present, all empty).
+    pub fn new() -> Self {
+        ClassQueues { queues: (0..NUM_CLASSES).map(|_| VecDeque::new()).collect(), len: 0 }
+    }
+
+    /// Total queued requests across all classes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no class holds a request.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append `req` to the tail of its class (FIFO within class).
+    pub fn push(&mut self, req: Arrival) {
+        let class = ClassId { fmt: req.fmt, priority: req.priority };
+        self.queues[class.index()].push_back(req);
+        self.len += 1;
+    }
+
+    /// Pop the head of the oldest-head class of `fmt`, High priority
+    /// first — the splice path: a fabric whose resident format is
+    /// `fmt` extends its in-flight batch without a reload.
+    pub fn pop_fmt(&mut self, fmt: ElemFormat) -> Option<Arrival> {
+        for priority in Priority::ALL {
+            let idx = ClassId { fmt, priority }.index();
+            if let Some(req) = self.queues[idx].pop_front() {
+                self.len -= 1;
+                return Some(req);
+            }
+        }
+        None
+    }
+
+    /// The class an idle fabric should serve next: the non-empty class
+    /// with the highest priority, ties broken by the oldest head
+    /// request (then by format order, for determinism). `None` when
+    /// everything is empty.
+    pub fn pick_class(&self) -> Option<ClassId> {
+        for priority in Priority::ALL {
+            let mut best: Option<(u64, u64, ClassId)> = None;
+            for fmt in ElemFormat::ALL {
+                let class = ClassId { fmt, priority };
+                if let Some(head) = self.queues[class.index()].front() {
+                    let key = (head.tick, head.id, class);
+                    if best.map(|(t, i, _)| (head.tick, head.id) < (t, i)).unwrap_or(true) {
+                        best = Some(key);
+                    }
+                }
+            }
+            if let Some((_, _, class)) = best {
+                return Some(class);
+            }
+        }
+        None
+    }
+
+    /// Arrival tick of the oldest queued request (across classes).
+    pub fn oldest_tick(&self) -> Option<u64> {
+        self.queues.iter().filter_map(|q| q.front().map(|r| r.tick)).min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, tick: u64, fmt: ElemFormat, priority: Priority) -> Arrival {
+        Arrival { id, tick, fmt, priority }
+    }
+
+    #[test]
+    fn fifo_within_class_and_priority_between_classes() {
+        let mut q = ClassQueues::new();
+        q.push(req(0, 5, ElemFormat::E4M3, Priority::Normal));
+        q.push(req(1, 6, ElemFormat::E4M3, Priority::Normal));
+        q.push(req(2, 7, ElemFormat::E4M3, Priority::High));
+        assert_eq!(q.len(), 3);
+        // splice order: High head first, then the Normal FIFO
+        assert_eq!(q.pop_fmt(ElemFormat::E4M3).unwrap().id, 2);
+        assert_eq!(q.pop_fmt(ElemFormat::E4M3).unwrap().id, 0);
+        assert_eq!(q.pop_fmt(ElemFormat::E4M3).unwrap().id, 1);
+        assert!(q.pop_fmt(ElemFormat::E4M3).is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pick_class_prefers_priority_then_oldest_head() {
+        let mut q = ClassQueues::new();
+        q.push(req(0, 1, ElemFormat::E4M3, Priority::Normal)); // oldest overall
+        q.push(req(1, 9, ElemFormat::E2M1, Priority::High));
+        let c = q.pick_class().unwrap();
+        assert_eq!((c.fmt, c.priority), (ElemFormat::E2M1, Priority::High));
+        q.pop_fmt(ElemFormat::E2M1).unwrap();
+        // now the oldest head wins among Normal classes
+        q.push(req(2, 4, ElemFormat::Int8, Priority::Normal));
+        let c = q.pick_class().unwrap();
+        assert_eq!((c.fmt, c.priority), (ElemFormat::E4M3, Priority::Normal));
+        assert_eq!(q.oldest_tick(), Some(1));
+    }
+
+    #[test]
+    fn empty_queues_pick_nothing() {
+        let q = ClassQueues::new();
+        assert!(q.pick_class().is_none());
+        assert!(q.oldest_tick().is_none());
+    }
+}

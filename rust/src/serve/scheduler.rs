@@ -1,0 +1,645 @@
+//! The two scheduling disciplines under comparison: the seed-style
+//! **barrier** batcher and the production **continuous** batcher.
+//!
+//! Both are deterministic discrete-tick simulations over the same
+//! arrival traces and the same analytic cost model, so their outcomes
+//! are directly comparable and bit-reproducible:
+//!
+//! * [`run_barrier`] models the seed coordinator on the whole machine:
+//!   one FIFO across formats, dispatch when the batch fills or the
+//!   oldest request ages out, the batch occupying the single
+//!   whole-machine fabric until **every** member finishes (responses
+//!   return at the barrier), weights reloaded on every format
+//!   transition the FIFO order happens to produce, and latency-blind
+//!   admission (queue-cap backpressure only).
+//! * [`run_continuous`] is the engine of DESIGN.md §12: clusters are
+//!   grouped into fabrics serving independent batches concurrently; an
+//!   idle fabric picks the highest-priority class with the oldest head
+//!   request (paying a weight reload only when its resident format
+//!   changes); arriving requests **splice into the in-flight batch**
+//!   of a matching fabric and complete individually the moment their
+//!   own service ends; admission is SLO-aware.
+//!
+//! Why the barrier collapses under load (the `reproduce serving`
+//! table): its FIFO interleaves formats, so ~2·p·(1−p) of adjacent
+//! pairs force a weight reload; its responses wait for the whole
+//! batch; and above saturation its bounded queue keeps every admitted
+//! request waiting `queue_cap / capacity` ticks — far past any SLO —
+//! so goodput (SLO-compliant throughput) falls toward zero while raw
+//! throughput still looks healthy. The continuous engine rejects what
+//! cannot meet the SLO at arrival time and keeps the fabrics on
+//! format-stable batches, so its goodput plateaus at machine capacity.
+
+use super::admission::{AdmissionController, RejectReason};
+use super::metrics::{latency_percentiles, Percentiles};
+use super::queue::ClassQueues;
+use super::{CostModel, SchedulerKind, ServeConfig};
+use crate::formats::ElemFormat;
+use crate::workload::arrivals::{Arrival, Priority};
+use std::collections::VecDeque;
+
+/// One completed request with its full scheduling attribution. All
+/// times are scheduler ticks (1 tick = 1 µs of simulated fabric time).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Served {
+    /// Trace id of the request.
+    pub id: u64,
+    /// Element format it was served at.
+    pub fmt: ElemFormat,
+    /// Scheduling class priority.
+    pub priority: Priority,
+    /// When it arrived (and was admitted).
+    pub arrival_tick: u64,
+    /// When the scheduler placed it into a batch.
+    pub dispatch_tick: u64,
+    /// When its response was available (barrier: the whole batch's
+    /// completion; continuous: its own service completion).
+    pub complete_tick: u64,
+    /// Service ticks it occupied its fabric for.
+    pub service_ticks: u64,
+    /// Fabric that served it.
+    pub fabric: usize,
+    /// Machine-global batch id it was served in.
+    pub batch_id: u64,
+}
+
+impl Served {
+    /// End-to-end latency in ticks (completion − arrival).
+    pub fn latency_ticks(&self) -> u64 {
+        self.complete_tick - self.arrival_tick
+    }
+}
+
+/// One rejected request (bounded backpressure — never a silent drop).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rejected {
+    /// Trace id of the request.
+    pub id: u64,
+    /// Element format it asked for.
+    pub fmt: ElemFormat,
+    /// When it arrived.
+    pub arrival_tick: u64,
+    /// Why admission turned it away.
+    pub reason: RejectReason,
+}
+
+/// Everything one scheduler run produced. `served` is in dispatch
+/// order; every offered request appears exactly once across `served`
+/// and `rejected`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeOutcome {
+    /// Discipline that produced this outcome.
+    pub scheduler: SchedulerKind,
+    /// SLO the run is measured (continuous: also admission-enforced)
+    /// against, in ticks.
+    pub slo_ticks: u64,
+    /// Completed requests in dispatch order.
+    pub served: Vec<Served>,
+    /// Rejected requests in arrival order.
+    pub rejected: Vec<Rejected>,
+    /// Simulated span of the run: last completion or last arrival,
+    /// whichever is later (≥ 1).
+    pub horizon_ticks: u64,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Weight reloads paid (format transitions on some fabric).
+    pub reloads: u64,
+    /// Busy ticks per fabric (service + setup + reload time).
+    pub fabric_busy_ticks: Vec<u64>,
+}
+
+impl ServeOutcome {
+    /// Requests offered to admission (served + rejected).
+    pub fn offered(&self) -> usize {
+        self.served.len() + self.rejected.len()
+    }
+
+    /// Per-request latencies in ticks, dispatch order.
+    pub fn latencies_ticks(&self) -> Vec<u64> {
+        self.served.iter().map(Served::latency_ticks).collect()
+    }
+
+    /// Latency percentile summary (ticks).
+    pub fn percentiles(&self) -> Percentiles {
+        latency_percentiles(&self.latencies_ticks())
+    }
+
+    /// Served requests that met the SLO.
+    pub fn served_in_slo(&self) -> usize {
+        self.served.iter().filter(|r| r.latency_ticks() <= self.slo_ticks).count()
+    }
+
+    /// Goodput: SLO-compliant completions per kilotick of horizon —
+    /// the serving metric the §12 acceptance bar is stated in.
+    pub fn goodput_per_ktick(&self) -> f64 {
+        self.served_in_slo() as f64 * 1000.0 / self.horizon_ticks as f64
+    }
+
+    /// Raw throughput: completions per kilotick of horizon.
+    pub fn throughput_per_ktick(&self) -> f64 {
+        self.served.len() as f64 * 1000.0 / self.horizon_ticks as f64
+    }
+
+    /// Mean requests per dispatched batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served.len() as f64 / self.batches as f64
+        }
+    }
+
+    /// Fraction of fabric·ticks spent busy over the horizon.
+    pub fn fabric_utilization(&self) -> f64 {
+        let busy: u64 = self.fabric_busy_ticks.iter().sum();
+        busy as f64 / (self.fabric_busy_ticks.len().max(1) as u64 * self.horizon_ticks) as f64
+    }
+
+    /// Rejections due to the queue-depth cap.
+    pub fn rejected_queue_full(&self) -> usize {
+        self.rejected
+            .iter()
+            .filter(|r| matches!(r.reason, RejectReason::QueueFull { .. }))
+            .count()
+    }
+
+    /// Rejections due to SLO unattainability.
+    pub fn rejected_slo(&self) -> usize {
+        self.rejected
+            .iter()
+            .filter(|r| matches!(r.reason, RejectReason::SloUnattainable { .. }))
+            .count()
+    }
+}
+
+/// The SLO a run is measured (and, for the continuous scheduler,
+/// admission-enforced) against: the explicit config value, or the
+/// cost model's auto-SLO when 0. `serve::resolve_slo_ticks` is the
+/// public wrapper — this is the single definition.
+pub(super) fn effective_slo(cfg: &ServeConfig, costs: &CostModel) -> u64 {
+    if cfg.slo_ticks > 0 {
+        cfg.slo_ticks
+    } else {
+        costs.auto_slo_ticks()
+    }
+}
+
+/// The seed coordinator's discipline on the whole machine (see module
+/// docs). `costs` must be built for this config (one whole-machine
+/// fabric); `trace` must be tick-sorted.
+pub fn run_barrier(cfg: &ServeConfig, costs: &CostModel, trace: &[Arrival]) -> ServeOutcome {
+    let slo = effective_slo(cfg, costs);
+    let adm = AdmissionController { queue_cap: cfg.queue_cap, slo_ticks: 0 };
+    let mut fifo: VecDeque<Arrival> = VecDeque::new();
+    let mut served: Vec<Served> = Vec::new();
+    let mut rejected: Vec<Rejected> = Vec::new();
+    let mut resident: Option<ElemFormat> = None;
+    let mut free_at = 0u64;
+    let mut busy = 0u64;
+    let mut batches = 0u64;
+    let mut reloads = 0u64;
+    let mut last_complete = 0u64;
+    let mut ti = 0usize;
+    let mut t = 0u64;
+    loop {
+        while ti < trace.len() && trace[ti].tick <= t {
+            let r = trace[ti];
+            ti += 1;
+            match adm.admit(fifo.len(), 0, 1, 0) {
+                Ok(()) => fifo.push_back(r),
+                Err(reason) => {
+                    rejected.push(Rejected { id: r.id, fmt: r.fmt, arrival_tick: r.tick, reason })
+                }
+            }
+        }
+        if t >= free_at && !fifo.is_empty() {
+            let oldest_wait = t.saturating_sub(fifo.front().unwrap().tick);
+            if fifo.len() >= cfg.max_batch || oldest_wait >= cfg.max_wait_ticks {
+                let n = fifo.len().min(cfg.max_batch);
+                let batch_id = batches;
+                batches += 1;
+                let start = t;
+                let mut end = t + costs.setup_ticks;
+                // FIFO order is preserved verbatim — including the
+                // format interleaving that forces mid-batch reloads.
+                let mut members: Vec<(Arrival, u64)> = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let r = fifo.pop_front().unwrap();
+                    if resident != Some(r.fmt) {
+                        resident = Some(r.fmt);
+                        end += costs.reload_ticks;
+                        reloads += 1;
+                    }
+                    let svc = costs.svc_ticks(r.fmt);
+                    end += svc;
+                    members.push((r, svc));
+                }
+                for (r, svc) in members {
+                    // Barrier semantics: every member completes when
+                    // the batch does.
+                    served.push(Served {
+                        id: r.id,
+                        fmt: r.fmt,
+                        priority: r.priority,
+                        arrival_tick: r.tick,
+                        dispatch_tick: start,
+                        complete_tick: end,
+                        service_ticks: svc,
+                        fabric: 0,
+                        batch_id,
+                    });
+                }
+                busy += end - start;
+                free_at = end;
+                last_complete = last_complete.max(end);
+            }
+        }
+        if ti >= trace.len() && fifo.is_empty() && t >= free_at {
+            break;
+        }
+        t += 1;
+    }
+    let last_arrival = trace.last().map(|r| r.tick).unwrap_or(0);
+    ServeOutcome {
+        scheduler: SchedulerKind::Barrier,
+        slo_ticks: slo,
+        served,
+        rejected,
+        horizon_ticks: last_complete.max(last_arrival).max(1),
+        batches,
+        reloads,
+        fabric_busy_ticks: vec![busy],
+    }
+}
+
+/// Fill the remaining splice slots of `f`'s open batch from its
+/// resident format's class queues (High priority first, FIFO within
+/// class). Each spliced request is appended at the fabric's tail and
+/// completes individually when its own service ends.
+#[allow(clippy::too_many_arguments)] // engine-internal plumbing
+fn splice_fill(
+    f: &mut Fabric,
+    fi: usize,
+    t: u64,
+    costs: &CostModel,
+    queues: &mut ClassQueues,
+    queued_svc: &mut u64,
+    served: &mut Vec<Served>,
+    last_complete: &mut u64,
+) {
+    let Some(fmt) = f.resident else { return };
+    while f.slots > 0 {
+        let Some(r) = queues.pop_fmt(fmt) else { break };
+        let svc = costs.svc_ticks(fmt);
+        *queued_svc -= svc;
+        let start = f.tail;
+        f.tail = start + svc;
+        f.busy += svc;
+        f.slots -= 1;
+        *last_complete = (*last_complete).max(f.tail);
+        served.push(Served {
+            id: r.id,
+            fmt,
+            priority: r.priority,
+            arrival_tick: r.tick,
+            dispatch_tick: t,
+            complete_tick: f.tail,
+            service_ticks: svc,
+            fabric: fi,
+            batch_id: f.batch_id,
+        });
+    }
+}
+
+/// Per-fabric scheduling state of the continuous engine.
+struct Fabric {
+    /// Format whose weights are currently staged (None = cold).
+    resident: Option<ElemFormat>,
+    /// Tick when all work assigned to this fabric completes.
+    tail: u64,
+    /// Remaining splice slots in the open batch (0 = closed).
+    slots: usize,
+    /// Batch id of the open (or last) batch.
+    batch_id: u64,
+    /// Accumulated busy ticks (service + setup + reload).
+    busy: u64,
+}
+
+/// The production discipline (see module docs). `costs` must be built
+/// for this config's per-fabric cluster count; `trace` must be
+/// tick-sorted.
+pub fn run_continuous(cfg: &ServeConfig, costs: &CostModel, trace: &[Arrival]) -> ServeOutcome {
+    let fcount = cfg.fabric_count();
+    let slo = effective_slo(cfg, costs);
+    let adm = AdmissionController { queue_cap: cfg.queue_cap, slo_ticks: slo };
+    let mut queues = ClassQueues::new();
+    let mut queued_svc = 0u64;
+    let mut fabrics: Vec<Fabric> = (0..fcount)
+        .map(|_| Fabric { resident: None, tail: 0, slots: 0, batch_id: 0, busy: 0 })
+        .collect();
+    let mut served: Vec<Served> = Vec::new();
+    let mut rejected: Vec<Rejected> = Vec::new();
+    let mut batches = 0u64;
+    let mut reloads = 0u64;
+    let mut last_complete = 0u64;
+    let mut ti = 0usize;
+    let mut t = 0u64;
+    loop {
+        while ti < trace.len() && trace[ti].tick <= t {
+            let r = trace[ti];
+            ti += 1;
+            let svc = costs.svc_ticks(r.fmt);
+            let inflight: u64 = fabrics.iter().map(|f| f.tail.saturating_sub(t)).sum();
+            match adm.admit(
+                queues.len(),
+                queued_svc + inflight,
+                fcount,
+                costs.worst_case_request_ticks(r.fmt),
+            ) {
+                Ok(()) => {
+                    queues.push(r);
+                    queued_svc += svc;
+                }
+                Err(reason) => {
+                    rejected.push(Rejected { id: r.id, fmt: r.fmt, arrival_tick: r.tick, reason })
+                }
+            }
+        }
+        // Phase 1: fabrics whose work has fully drained close their
+        // batch; each queued class is then matched to an idle fabric —
+        // preferring one whose *resident format already matches*, so a
+        // reload is only paid when no warm idle fabric exists (ties
+        // break to the lowest fabric id, keeping the engine
+        // deterministic). Idle capacity absorbs queued work *before*
+        // any in-flight batch extends its tail — splicing must never
+        // add to a busy fabric what an idle one could serve sooner.
+        let mut idle: Vec<usize> = (0..fabrics.len()).filter(|&i| t >= fabrics[i].tail).collect();
+        for &i in &idle {
+            fabrics[i].slots = 0;
+        }
+        while !idle.is_empty() {
+            let Some(class) = queues.pick_class() else { break };
+            let pos = idle
+                .iter()
+                .position(|&i| fabrics[i].resident == Some(class.fmt))
+                .unwrap_or(0);
+            let fi = idle.remove(pos);
+            let f = &mut fabrics[fi];
+            let reload = f.resident != Some(class.fmt);
+            if reload {
+                reloads += 1;
+            }
+            f.resident = Some(class.fmt);
+            let overhead = costs.setup_ticks + if reload { costs.reload_ticks } else { 0 };
+            f.tail = t + overhead;
+            f.busy += overhead;
+            f.batch_id = batches;
+            batches += 1;
+            f.slots = cfg.max_batch;
+            splice_fill(f, fi, t, costs, &mut queues, &mut queued_svc, &mut served, &mut last_complete);
+        }
+        // Phase 2: in-flight fabrics with open slots splice
+        // same-format arrivals into their running batch — this is
+        // where a request admitted mid-batch joins in-flight work
+        // instead of waiting for a barrier. Shortest tail first
+        // (ties → lowest id), so a queued request joins the
+        // *least-loaded* matching fabric, not the first by index.
+        let mut open: Vec<usize> = (0..fabrics.len())
+            .filter(|&i| t < fabrics[i].tail && fabrics[i].slots > 0)
+            .collect();
+        open.sort_by_key(|&i| (fabrics[i].tail, i));
+        for fi in open {
+            let f = &mut fabrics[fi];
+            splice_fill(f, fi, t, costs, &mut queues, &mut queued_svc, &mut served, &mut last_complete);
+        }
+        if ti >= trace.len() && queues.is_empty() && fabrics.iter().all(|f| t >= f.tail) {
+            break;
+        }
+        t += 1;
+    }
+    let last_arrival = trace.last().map(|r| r.tick).unwrap_or(0);
+    ServeOutcome {
+        scheduler: SchedulerKind::Continuous,
+        slo_ticks: slo,
+        served,
+        rejected,
+        horizon_ticks: last_complete.max(last_arrival).max(1),
+        batches,
+        reloads,
+        fabric_busy_ticks: fabrics.iter().map(|f| f.busy).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::property_cases;
+    use crate::serve::simulate;
+    use crate::workload::arrivals::{generate_trace, ArrivalKind, ArrivalSpec};
+    use crate::workload::DeitConfig;
+
+    /// Small, fast engine config (analytic cost model only — no
+    /// cycle-accurate simulation runs in these tests).
+    fn small_cfg(sched: SchedulerKind) -> ServeConfig {
+        ServeConfig {
+            model: DeitConfig { seq: 32, ..DeitConfig::default() },
+            clusters: 2,
+            scheduler: sched,
+            ..ServeConfig::default()
+        }
+    }
+
+    fn mixed_mix() -> Vec<(ElemFormat, f64)> {
+        vec![(ElemFormat::E4M3, 0.6), (ElemFormat::E2M1, 0.4)]
+    }
+
+    fn spec(rate: f64, requests: usize, seed: u64) -> ArrivalSpec {
+        ArrivalSpec {
+            kind: ArrivalKind::Poisson,
+            rate_per_ktick: rate,
+            mix: mixed_mix(),
+            high_priority_frac: 0.2,
+            requests,
+            seed,
+        }
+    }
+
+    #[test]
+    fn barrier_batch_completes_as_a_unit() {
+        let cfg = ServeConfig { max_batch: 4, ..small_cfg(SchedulerKind::Barrier) };
+        let trace = generate_trace(&spec(4.0, 8, 3));
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.offered(), 8);
+        for batch in 0..out.batches {
+            let ends: Vec<u64> = out
+                .served
+                .iter()
+                .filter(|r| r.batch_id == batch)
+                .map(|r| r.complete_tick)
+                .collect();
+            assert!(!ends.is_empty());
+            assert!(ends.iter().all(|&e| e == ends[0]), "batch {batch} not a barrier: {ends:?}");
+        }
+        // barrier preserves global FIFO dispatch order
+        let ids: Vec<u64> = out.served.iter().map(|r| r.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted);
+    }
+
+    #[test]
+    fn continuous_splices_into_inflight_batches() {
+        // One single-cluster fabric, one format: a request arriving
+        // while the first batch is in flight must join that batch
+        // (same batch id, no second setup) and complete individually.
+        let cfg = ServeConfig {
+            clusters: 1,
+            max_batch: 8,
+            ..small_cfg(SchedulerKind::Continuous)
+        };
+        let costs = CostModel::build(&cfg);
+        let svc = costs.svc_ticks(ElemFormat::E4M3);
+        let mk = |id, tick| Arrival {
+            id,
+            tick,
+            fmt: ElemFormat::E4M3,
+            priority: Priority::Normal,
+        };
+        // second request lands mid-service of the first
+        let trace = vec![mk(0, 0), mk(1, svc / 2)];
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.served.len(), 2);
+        assert_eq!(out.batches, 1, "splice must not open a second batch");
+        assert_eq!(out.served[0].batch_id, out.served[1].batch_id);
+        assert_eq!(out.reloads, 1, "only the initial cold load");
+        // individual completions, one service apart
+        assert_eq!(
+            out.served[1].complete_tick,
+            out.served[0].complete_tick + svc,
+            "spliced request must complete individually at the tail"
+        );
+        assert!(out.served[0].latency_ticks() < out.served[1].latency_ticks() + svc);
+    }
+
+    #[test]
+    fn continuous_prefers_resident_format_and_high_priority() {
+        // Two classes queued while the fabric is cold: the High class
+        // must be opened first even though the Normal request is older.
+        let cfg = ServeConfig { clusters: 1, ..small_cfg(SchedulerKind::Continuous) };
+        let trace = vec![
+            Arrival { id: 0, tick: 0, fmt: ElemFormat::E4M3, priority: Priority::Normal },
+            Arrival { id: 1, tick: 1, fmt: ElemFormat::E2M1, priority: Priority::High },
+        ];
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.served.len(), 2);
+        // id 0 dispatches first (it arrived while the queue held only
+        // its class), but once both are queued High wins: rerun with
+        // both present at t=0.
+        let trace2 = vec![
+            Arrival { id: 0, tick: 0, fmt: ElemFormat::E4M3, priority: Priority::Normal },
+            Arrival { id: 1, tick: 0, fmt: ElemFormat::E2M1, priority: Priority::High },
+        ];
+        let out2 = simulate(&cfg, &trace2);
+        assert_eq!(out2.served[0].id, 1, "High-priority class must be scheduled first");
+    }
+
+    #[test]
+    fn every_offered_request_is_served_or_rejected_with_reason() {
+        // The no-silent-drop invariant, under random load and both
+        // schedulers.
+        property_cases(25, 0x5E12E, |rng| {
+            let requests = 1 + rng.below(60) as usize;
+            let rate = 0.5 + rng.unit_f64() * 30.0;
+            let seed = rng.next_u64();
+            let trace = generate_trace(&spec(rate, requests, seed));
+            for sched in [SchedulerKind::Barrier, SchedulerKind::Continuous] {
+                let cfg = ServeConfig {
+                    max_batch: 1 + rng.below(8) as usize,
+                    queue_cap: 1 + rng.below(40) as usize,
+                    ..small_cfg(sched)
+                };
+                let out = simulate(&cfg, &trace);
+                assert_eq!(out.offered(), requests, "{sched}: lost requests");
+                let mut ids: Vec<u64> = out
+                    .served
+                    .iter()
+                    .map(|r| r.id)
+                    .chain(out.rejected.iter().map(|r| r.id))
+                    .collect();
+                ids.sort_unstable();
+                let want: Vec<u64> = (0..requests as u64).collect();
+                assert_eq!(ids, want, "{sched}: ids not served-or-rejected exactly once");
+            }
+        });
+    }
+
+    #[test]
+    fn admission_never_reorders_within_a_class() {
+        // Within every (format, priority) class, dispatch order must
+        // equal arrival order — under random mixes, priorities, batch
+        // sizes and both schedulers.
+        property_cases(25, 0xF1F0, |rng| {
+            let requests = 2 + rng.below(50) as usize;
+            let rate = 1.0 + rng.unit_f64() * 20.0;
+            let trace = generate_trace(&spec(rate, requests, rng.next_u64()));
+            for sched in [SchedulerKind::Barrier, SchedulerKind::Continuous] {
+                let cfg = ServeConfig {
+                    max_batch: 1 + rng.below(6) as usize,
+                    ..small_cfg(sched)
+                };
+                let out = simulate(&cfg, &trace);
+                for fmt in ElemFormat::ALL {
+                    for priority in Priority::ALL {
+                        let class_ids: Vec<u64> = out
+                            .served
+                            .iter()
+                            .filter(|r| r.fmt == fmt && r.priority == priority)
+                            .map(|r| r.id)
+                            .collect();
+                        let mut sorted = class_ids.clone();
+                        sorted.sort_unstable();
+                        assert_eq!(
+                            class_ids, sorted,
+                            "{sched}: class ({fmt}, {priority:?}) reordered"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn same_seed_and_trace_give_bit_identical_attribution() {
+        for sched in [SchedulerKind::Barrier, SchedulerKind::Continuous] {
+            let cfg = small_cfg(sched);
+            let trace = generate_trace(&spec(6.0, 80, 11));
+            let a = simulate(&cfg, &trace);
+            let b = simulate(&cfg, &trace);
+            assert_eq!(a, b, "{sched}: outcome not reproducible");
+        }
+    }
+
+    #[test]
+    fn overload_rejects_carry_reasons_and_continuous_meets_its_slo() {
+        let cfg = small_cfg(SchedulerKind::Continuous);
+        let cap = crate::serve::estimated_capacity_per_ktick(&cfg, &mixed_mix());
+        let trace = generate_trace(&spec(4.0 * cap, 150, 21));
+        let out = simulate(&cfg, &trace);
+        assert!(!out.rejected.is_empty(), "4x overload must shed load");
+        assert!(out.rejected_slo() + out.rejected_queue_full() == out.rejected.len());
+        // Admission predicts completion under ideal load balancing;
+        // real class/fabric skew is bounded, so the served tail stays
+        // within a small factor of the enforced SLO and most served
+        // requests meet it outright (goodput ≈ throughput).
+        let p = out.percentiles();
+        assert!(p.p99 <= 2 * out.slo_ticks, "p99 {} way past slo {}", p.p99, out.slo_ticks);
+        assert!(
+            out.served_in_slo() * 10 >= out.served.len() * 6,
+            "only {}/{} served within SLO under admission control",
+            out.served_in_slo(),
+            out.served.len()
+        );
+        // fabrics were actually kept busy at overload
+        assert!(out.fabric_utilization() > 0.5, "util {}", out.fabric_utilization());
+    }
+}

@@ -24,7 +24,9 @@ use std::collections::HashMap;
 /// Assembly error with line information.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AsmError {
+    /// 1-based source line of the error.
     pub line: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

@@ -28,6 +28,7 @@ fn ssr_id(core: usize, ssr: usize) -> usize {
 /// Cluster configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ClusterConfig {
+    /// Compute cores in the cluster (the paper's has 8).
     pub num_cores: usize,
     /// Clock frequency in GHz (used by the energy/throughput reports;
     /// the paper's cluster runs at 1.0 GHz TT).
@@ -43,11 +44,17 @@ impl Default for ClusterConfig {
 /// Aggregated performance counters after a run.
 #[derive(Clone, Debug, Default)]
 pub struct PerfCounters {
+    /// Total cycles the run took.
     pub cycles: u64,
+    /// Per-core integer-side counters.
     pub core: Vec<CoreCounters>,
+    /// Per-core FP-subsystem counters.
     pub fpu: Vec<FpuCounters>,
+    /// SPM bank conflicts observed.
     pub spm_conflicts: u64,
+    /// SPM requests granted.
     pub spm_grants: u64,
+    /// Cycles the DMA engine was busy.
     pub dma_busy: u64,
 }
 
@@ -124,14 +131,20 @@ impl PerfCounters {
 
 /// The cluster.
 pub struct Cluster {
+    /// Configuration the cluster was built with.
     pub cfg: ClusterConfig,
+    /// The shared L1 scratchpad + interconnect.
     pub spm: Spm,
+    /// The compute cores.
     pub cores: Vec<Core>,
+    /// The DMA engine.
     pub dma: Dma,
+    /// Current simulated cycle.
     pub cycle: u64,
 }
 
 impl Cluster {
+    /// Allocate a power-on cluster (zeroed SPM, idle cores).
     pub fn new(cfg: ClusterConfig) -> Self {
         Cluster {
             cfg,

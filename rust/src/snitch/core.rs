@@ -18,33 +18,45 @@ pub const BRANCH_PENALTY: u64 = 1;
 /// Integer-side perf counters.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CoreCounters {
+    /// Integer instructions issued.
     pub int_issued: u64,
+    /// Branches taken (each pays the flush bubble).
     pub branches_taken: u64,
     /// Scalar loads/stores that reached memory (the reshape traffic).
     pub int_mem: u64,
+    /// Cycles stalled on a full FP issue queue.
     pub stall_fp_queue: u64,
+    /// Cycles stalled on memory.
     pub stall_mem: u64,
+    /// Cycles stalled on fences (FP drain).
     pub stall_fence: u64,
 }
 
 /// One compute core: scalar pipeline + FP subsystem.
 pub struct Core {
+    /// Core id within the cluster.
     pub id: usize,
+    /// Program counter (instruction index).
     pub pc: usize,
+    /// Integer register file.
     pub xregs: [i64; 32],
     /// Shared, immutable instruction stream: compiled once by a plan
     /// and loaded onto many cores / many runs without copying.
     pub program: Arc<Vec<Instr>>,
+    /// True once the program ran to completion.
     pub halted: bool,
     /// Cycle until which the front-end is squashed (branch bubble).
     stall_until: u64,
+    /// The FP subsystem (FPU + SSRs + MXDOTP unit).
     pub fpu: FpSubsystem,
+    /// Integer-side perf counters.
     pub counters: CoreCounters,
     /// Pending SSR config shadow (bounds/strides written field by field).
     ssr_shadow: [SsrConfig; super::NUM_SSRS],
 }
 
 impl Core {
+    /// A power-on core with the given id.
     pub fn new(id: usize) -> Self {
         Core {
             id,

@@ -37,13 +37,17 @@ struct Transfer {
 /// simplicity (examples load/store through it).
 #[derive(Default)]
 pub struct Dma {
+    /// The modeled external memory the engine copies from/to.
     pub ext_mem: Vec<u8>,
     queue: std::collections::VecDeque<Transfer>,
+    /// Cycles the engine was moving data.
     pub busy_cycles: u64,
+    /// Total bytes transferred.
     pub bytes_moved: u64,
 }
 
 impl Dma {
+    /// An idle engine owning `ext_mem`.
     pub fn new(ext_mem: Vec<u8>) -> Self {
         Dma { ext_mem, ..Default::default() }
     }
@@ -61,6 +65,7 @@ impl Dma {
         });
     }
 
+    /// True when no transfer is queued or in flight.
     pub fn idle(&self) -> bool {
         self.queue.is_empty()
     }

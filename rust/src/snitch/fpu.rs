@@ -85,10 +85,15 @@ struct FrepState {
 /// Performance counters of one FP subsystem.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FpuCounters {
+    /// FP instructions issued.
     pub issued: u64,
+    /// `mxdotp` issues.
     pub mxdotp: u64,
+    /// SIMD FMA issues.
     pub vfmac: u64,
+    /// Convert issues.
     pub cvt: u64,
+    /// FP loads/stores.
     pub mem_ops: u64,
     /// Scalar FMA issues (the software kernel's MAC workhorse).
     pub fma_s: u64,
@@ -98,14 +103,19 @@ pub struct FpuCounters {
     pub moves: u64,
     /// Words fetched from SPM by the three SSR streamers.
     pub ssr_words: u64,
+    /// Cycles stalled on register hazards.
     pub stall_hazard: u64,
+    /// Cycles stalled on SSR data.
     pub stall_ssr: u64,
+    /// Cycles stalled on memory.
     pub stall_mem: u64,
+    /// Cycles with nothing to issue.
     pub idle: u64,
 }
 
 /// The per-core FP subsystem.
 pub struct FpSubsystem {
+    /// FP register file (raw 64-bit).
     pub fregs: [u64; 32],
     /// Cycle at which each register's pending write lands.
     ready: [u64; 32],
@@ -113,9 +123,13 @@ pub struct FpSubsystem {
     max_ready: u64,
     queue: std::collections::VecDeque<QueuedOp>,
     frep: Option<FrepState>,
+    /// The three stream semantic registers.
     pub ssrs: [Ssr; NUM_SSRS],
+    /// SSR streaming enabled (the ssr_cfg CSR).
     pub ssr_enabled: bool,
+    /// The MXDOTP functional unit.
     pub unit: MxDotpUnit,
+    /// Perf counters.
     pub counters: FpuCounters,
 }
 
@@ -126,6 +140,7 @@ impl Default for FpSubsystem {
 }
 
 impl FpSubsystem {
+    /// A power-on FP subsystem.
     pub fn new() -> Self {
         FpSubsystem {
             fregs: [0; 32],
@@ -155,10 +170,12 @@ impl FpSubsystem {
         self.counters = FpuCounters::default();
     }
 
+    /// Write the `MX_FMT` CSR (selects the element format).
     pub fn set_format(&mut self, fmt: ElemFormat) {
         self.unit.set_format(fmt);
     }
 
+    /// Program stream `id` with `cfg`.
     pub fn configure_ssr(&mut self, id: usize, cfg: SsrConfig) {
         self.ssrs[id].configure(cfg);
     }
@@ -542,6 +559,7 @@ impl FpSubsystem {
         self.fregs[r as usize] = v.to_bits() as u64;
     }
 
+    /// Direct register read for setup/verification.
     pub fn get_f32(&self, r: FReg) -> f32 {
         f32::from_bits(self.fregs[r as usize] as u32)
     }

@@ -146,7 +146,9 @@ pub enum FpInstr {
 /// A program instruction: integer-side or FP-side.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Instr {
+    /// An integer-pipeline instruction.
     Int(IntInstr),
+    /// An FP-subsystem instruction.
     Fp(FpInstr),
 }
 

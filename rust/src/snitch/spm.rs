@@ -21,12 +21,14 @@ pub fn bank_of(addr: usize) -> usize {
 pub struct Request {
     /// Globally unique requester id (stable priority rotation).
     pub requester: usize,
+    /// Target byte address.
     pub addr: usize,
 }
 
 /// The scratchpad memory + per-cycle bank arbiter.
 #[derive(Clone)]
 pub struct Spm {
+    /// Backing bytes (`SPM_BYTES` long).
     pub data: Vec<u8>,
     /// Round-robin pointer per bank.
     rr: [usize; SPM_BANKS],
@@ -49,6 +51,7 @@ impl Default for Spm {
 }
 
 impl Spm {
+    /// A zeroed scratchpad with idle arbiters.
     pub fn new() -> Self {
         Spm {
             data: vec![0; SPM_BYTES],
@@ -131,38 +134,46 @@ impl Spm {
     // ---- data access (used by the devices on the cycle they are
     // granted; also by test/setup code directly) ----
 
+    /// Read a little-endian u64 at `addr`.
     pub fn read_u64(&self, addr: usize) -> u64 {
         let mut b = [0u8; 8];
         b.copy_from_slice(&self.data[addr..addr + 8]);
         u64::from_le_bytes(b)
     }
 
+    /// Write a little-endian u64 at `addr`.
     pub fn write_u64(&mut self, addr: usize, v: u64) {
         self.data[addr..addr + 8].copy_from_slice(&v.to_le_bytes());
     }
 
+    /// Read a little-endian u32 at `addr`.
     pub fn read_u32(&self, addr: usize) -> u32 {
         let mut b = [0u8; 4];
         b.copy_from_slice(&self.data[addr..addr + 4]);
         u32::from_le_bytes(b)
     }
 
+    /// Write a little-endian u32 at `addr`.
     pub fn write_u32(&mut self, addr: usize, v: u32) {
         self.data[addr..addr + 4].copy_from_slice(&v.to_le_bytes());
     }
 
+    /// Read a little-endian u16 at `addr`.
     pub fn read_u16(&self, addr: usize) -> u16 {
         u16::from_le_bytes([self.data[addr], self.data[addr + 1]])
     }
 
+    /// Write a little-endian u16 at `addr`.
     pub fn write_u16(&mut self, addr: usize, v: u16) {
         self.data[addr..addr + 2].copy_from_slice(&v.to_le_bytes());
     }
 
+    /// Read an f32 bit pattern at `addr`.
     pub fn read_f32(&self, addr: usize) -> f32 {
         f32::from_bits(self.read_u32(addr))
     }
 
+    /// Write an f32 bit pattern at `addr`.
     pub fn write_f32(&mut self, addr: usize, v: f32) {
         self.write_u32(addr, v.to_bits());
     }

@@ -22,6 +22,7 @@ pub const FIFO_DEPTH: usize = 4;
 /// One stream's configuration.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SsrConfig {
+    /// Base byte address of the stream.
     pub base: usize,
     /// Active dimensions - 1 (0..=3).
     pub dims: u8,
@@ -47,6 +48,7 @@ impl SsrConfig {
 /// Runtime state of one SSR.
 #[derive(Clone, Debug, Default)]
 pub struct Ssr {
+    /// The programmed configuration.
     pub cfg: SsrConfig,
     /// Odometer indices.
     idx: [u32; 4],

@@ -11,6 +11,7 @@ use super::cluster::PerfCounters;
 /// Per-class cycle attribution for one run (cluster-wide averages).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CycleBreakdown {
+    /// Total cycles of the run.
     pub cycles: u64,
     /// Fraction of core-cycles issuing the *primary* compute op.
     pub compute: f64,

@@ -1,0 +1,253 @@
+//! Open-loop arrival-trace generators for the serving engine
+//! (DESIGN.md §12): Poisson and bursty request streams with a
+//! per-format traffic mix and request priorities.
+//!
+//! The serving engine (`crate::serve`) is a deterministic
+//! discrete-tick simulation; its inputs are *traces* — pre-generated
+//! arrival sequences — so every experiment is replayable from a seed
+//! and both schedulers under comparison consume the identical offered
+//! load. Time is measured in scheduler **ticks** (1 tick = 1 µs of
+//! simulated fabric time at the 1 GHz cluster clock, see
+//! `serve::CYCLES_PER_TICK`); offered load is quoted in requests per
+//! kilotick (≈ requests per simulated millisecond).
+//!
+//! Two arrival processes are modeled, both *open-loop* (arrivals do
+//! not slow down when the server backs up — the production regime the
+//! admission controller exists for):
+//!
+//! * **Poisson** — exponential inter-arrival gaps at the configured
+//!   mean rate; the memoryless baseline.
+//! * **Bursty** — a Poisson process at `burst_factor ×` the mean rate,
+//!   thinned to the first `1/burst_factor` of every `period_ticks`
+//!   window. The long-run mean rate matches the Poisson process; the
+//!   on-window instantaneous rate is `burst_factor ×` higher — the
+//!   flash-crowd pattern that collapses barrier batchers.
+//!
+//! Formats are drawn per request from a weighted mix (the VMXDOTP
+//! mixed-precision traffic scenario), priorities from a Bernoulli
+//! draw, both from the same deterministic [`XorShift`] stream.
+
+use crate::formats::ElemFormat;
+use crate::rng::XorShift;
+
+/// Request priority class. The serving engine schedules
+/// [`Priority::High`] classes strictly before [`Priority::Normal`]
+/// ones; order *within* a (format, priority) class is always FIFO.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-sensitive traffic, scheduled strictly first.
+    High,
+    /// The default class.
+    Normal,
+}
+
+impl Priority {
+    /// Both priorities, scheduling order (High first).
+    pub const ALL: [Priority; 2] = [Priority::High, Priority::Normal];
+
+    /// Dense index (High = 0, Normal = 1) for per-class tables.
+    pub fn index(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+        }
+    }
+}
+
+/// The arrival process shape.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalKind {
+    /// Memoryless arrivals at the spec's mean rate.
+    Poisson,
+    /// On/off bursts: rate `burst_factor ×` the mean inside the first
+    /// `1/burst_factor` of every `period_ticks` window, zero outside —
+    /// the long-run mean rate equals the spec's rate.
+    Bursty {
+        /// Burst intensity (≥ 1; 1 degenerates to Poisson).
+        burst_factor: f64,
+        /// Length of one on/off cycle in ticks.
+        period_ticks: u64,
+    },
+}
+
+/// Full specification of one offered-load trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrivalSpec {
+    /// Arrival process shape.
+    pub kind: ArrivalKind,
+    /// Mean offered load in requests per kilotick (≈ req/ms of
+    /// simulated time).
+    pub rate_per_ktick: f64,
+    /// Weighted element-format mix; weights are relative (they need
+    /// not sum to 1) and must be positive.
+    pub mix: Vec<(ElemFormat, f64)>,
+    /// Fraction of requests tagged [`Priority::High`] (0 disables).
+    pub high_priority_frac: f64,
+    /// Trace length in requests.
+    pub requests: usize,
+    /// RNG seed; the trace is a pure function of the spec.
+    pub seed: u64,
+}
+
+impl ArrivalSpec {
+    /// A Poisson spec with a single-format mix and no high-priority
+    /// traffic — the smallest useful trace description.
+    pub fn poisson(rate_per_ktick: f64, fmt: ElemFormat, requests: usize, seed: u64) -> Self {
+        ArrivalSpec {
+            kind: ArrivalKind::Poisson,
+            rate_per_ktick,
+            mix: vec![(fmt, 1.0)],
+            high_priority_frac: 0.0,
+            requests,
+            seed,
+        }
+    }
+}
+
+/// One offered request: when it arrives and what it asks for. The
+/// request *payload* is derived from `id` downstream (the serving
+/// engine seeds `workload::generate_input` with it), so a trace stays
+/// a compact description of real work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Arrival {
+    /// Trace-order sequence number (also the payload seed offset).
+    pub id: u64,
+    /// Arrival time in scheduler ticks (non-decreasing along a trace).
+    pub tick: u64,
+    /// Element format this request wants served.
+    pub fmt: ElemFormat,
+    /// Scheduling class.
+    pub priority: Priority,
+}
+
+/// Generate a deterministic arrival trace from `spec`.
+///
+/// Ticks are non-decreasing; ids are 0..requests in arrival order.
+/// Panics on a degenerate spec (non-positive rate, empty mix,
+/// non-positive weight, burst factor < 1, zero burst period).
+pub fn generate_trace(spec: &ArrivalSpec) -> Vec<Arrival> {
+    assert!(
+        spec.rate_per_ktick > 0.0 && spec.rate_per_ktick.is_finite(),
+        "arrival rate must be positive"
+    );
+    assert!(!spec.mix.is_empty(), "format mix must name at least one format");
+    assert!(
+        spec.mix.iter().all(|&(_, w)| w > 0.0 && w.is_finite()),
+        "format-mix weights must be positive"
+    );
+    assert!(
+        (0.0..=1.0).contains(&spec.high_priority_frac),
+        "high-priority fraction must be in [0, 1]"
+    );
+    let (gen_rate, burst) = match spec.kind {
+        ArrivalKind::Poisson => (spec.rate_per_ktick, None),
+        ArrivalKind::Bursty { burst_factor, period_ticks } => {
+            assert!(burst_factor >= 1.0, "burst factor must be >= 1");
+            assert!(period_ticks > 0, "burst period must be positive");
+            (spec.rate_per_ktick * burst_factor, Some((burst_factor, period_ticks)))
+        }
+    };
+    let per_tick = gen_rate / 1000.0;
+    let total_w: f64 = spec.mix.iter().map(|&(_, w)| w).sum();
+    let mut rng = XorShift::new(spec.seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(spec.requests);
+    while out.len() < spec.requests {
+        // Exponential inter-arrival gap at the generator rate.
+        let u = rng.unit_f64();
+        t += -(1.0 - u).ln() / per_tick;
+        let tick = t as u64;
+        if let Some((factor, period)) = burst {
+            // Thin to the on-window: keep the first 1/factor of each
+            // period (so the long-run mean rate is the spec's rate).
+            let on_ticks = (period as f64 / factor).max(1.0) as u64;
+            if tick % period >= on_ticks {
+                continue;
+            }
+        }
+        // Weighted format draw, then the priority Bernoulli — both
+        // only for *kept* events, so thinning cannot skew the mix.
+        let mut pick = rng.unit_f64() * total_w;
+        let mut fmt = spec.mix[0].0;
+        for &(f, w) in &spec.mix {
+            fmt = f;
+            pick -= w;
+            if pick <= 0.0 {
+                break;
+            }
+        }
+        let priority = if spec.high_priority_frac > 0.0
+            && rng.unit_f64() < spec.high_priority_frac
+        {
+            Priority::High
+        } else {
+            Priority::Normal
+        };
+        out.push(Arrival { id: out.len() as u64, tick, fmt, priority });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mixed_spec(kind: ArrivalKind) -> ArrivalSpec {
+        ArrivalSpec {
+            kind,
+            rate_per_ktick: 8.0,
+            mix: vec![(ElemFormat::E4M3, 0.6), (ElemFormat::E2M1, 0.4)],
+            high_priority_frac: 0.25,
+            requests: 2000,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn poisson_trace_is_deterministic_ordered_and_rate_accurate() {
+        let spec = mixed_spec(ArrivalKind::Poisson);
+        let a = generate_trace(&spec);
+        let b = generate_trace(&spec);
+        assert_eq!(a, b, "same spec must yield the identical trace");
+        assert_eq!(a.len(), 2000);
+        assert!(a.windows(2).all(|w| w[0].tick <= w[1].tick), "ticks must be sorted");
+        assert!(a.iter().enumerate().all(|(i, r)| r.id == i as u64));
+        // empirical rate within 10 % of the requested 8/ktick
+        let span = a.last().unwrap().tick.max(1) as f64;
+        let rate = a.len() as f64 * 1000.0 / span;
+        assert!((rate - 8.0).abs() / 8.0 < 0.1, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn mix_and_priority_fractions_are_respected() {
+        let a = generate_trace(&mixed_spec(ArrivalKind::Poisson));
+        let e4 = a.iter().filter(|r| r.fmt == ElemFormat::E4M3).count() as f64;
+        let frac = e4 / a.len() as f64;
+        assert!((frac - 0.6).abs() < 0.05, "e4m3 fraction {frac}");
+        let hi = a.iter().filter(|r| r.priority == Priority::High).count() as f64;
+        let hfrac = hi / a.len() as f64;
+        assert!((hfrac - 0.25).abs() < 0.05, "high-priority fraction {hfrac}");
+    }
+
+    #[test]
+    fn bursty_trace_keeps_the_mean_rate_but_clusters_arrivals() {
+        let spec = mixed_spec(ArrivalKind::Bursty { burst_factor: 8.0, period_ticks: 4000 });
+        let a = generate_trace(&spec);
+        assert_eq!(a.len(), 2000);
+        assert!(a.windows(2).all(|w| w[0].tick <= w[1].tick));
+        // every kept arrival is inside the on-window
+        assert!(a.iter().all(|r| r.tick % 4000 < 500), "arrival outside burst window");
+        // long-run mean within 15 % of the spec rate
+        let span = a.last().unwrap().tick.max(1) as f64;
+        let rate = a.len() as f64 * 1000.0 / span;
+        assert!((rate - 8.0).abs() / 8.0 < 0.15, "bursty mean rate {rate}");
+    }
+
+    #[test]
+    #[should_panic(expected = "weights must be positive")]
+    fn zero_weight_is_rejected() {
+        let mut spec = mixed_spec(ArrivalKind::Poisson);
+        spec.mix[1].1 = 0.0;
+        generate_trace(&spec);
+    }
+}

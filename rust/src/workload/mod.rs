@@ -8,6 +8,8 @@
 //! §2). Parameters are moment-matched synthetic tensors (std 0.02),
 //! generated with the same deterministic RNG family as the tests.
 
+pub mod arrivals;
+
 use crate::energy::EnergyModel;
 use crate::formats::ElemFormat;
 use crate::kernels::{run_mm, KernelKind, MmProblem};
@@ -16,11 +18,17 @@ use crate::rng::XorShift;
 /// DeiT-Tiny-shaped model configuration (mirror of model.DeiTConfig).
 #[derive(Clone, Copy, Debug)]
 pub struct DeitConfig {
+    /// Sequence length (tokens; DeiT's 197 padded to 256).
     pub seq: usize,
+    /// Embedding dimension (192 for DeiT-Tiny).
     pub dim: usize,
+    /// Attention heads.
     pub heads: usize,
+    /// MLP expansion ratio.
     pub mlp_ratio: usize,
+    /// MX element format of the quantized linears.
     pub fmt: ElemFormat,
+    /// MX block size.
     pub block_size: usize,
 }
 
@@ -31,8 +39,22 @@ impl Default for DeitConfig {
 }
 
 impl DeitConfig {
+    /// Hidden width of the MLP (dim × MLP ratio; 768 for DeiT-Tiny).
     pub fn mlp_dim(&self) -> usize {
         self.dim * self.mlp_ratio
+    }
+
+    /// Total elements across the four MX-quantized weight matrices
+    /// (w_qkv, w_proj, w_fc1, w_fc2) — 12·dim² for DeiT shapes. This
+    /// is the volume a serving fabric must *requantize and restage*
+    /// when it switches element format (the serving engine's reload
+    /// cost, DESIGN.md §12).
+    pub fn weight_elems(&self) -> u64 {
+        self.param_specs()
+            .iter()
+            .filter(|(name, _)| name.starts_with("w_"))
+            .map(|(_, shape)| shape.iter().product::<usize>() as u64)
+            .sum()
     }
 
     /// Parameter (name, shape) list — MUST stay in sync with
@@ -285,6 +307,12 @@ mod tests {
         let w_qkv = &p1[2].2;
         let mean: f32 = w_qkv.iter().sum::<f32>() / w_qkv.len() as f32;
         assert!(mean.abs() < 0.001);
+    }
+
+    #[test]
+    fn weight_elems_is_12_dim_squared() {
+        let cfg = DeitConfig::default();
+        assert_eq!(cfg.weight_elems(), 12 * 192 * 192);
     }
 
     #[test]
