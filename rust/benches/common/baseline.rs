@@ -1,0 +1,295 @@
+//! The bench-regression gate: every perf bench reports its headline
+//! metrics through [`enforce`], which checks them against the
+//! committed floors/ceilings in `bench_baselines.json` (repo root) and
+//! fails the process — and therefore CI — when a metric regresses past
+//! its tolerance.
+//!
+//! This replaces the per-bench ad-hoc asserts: the bars (scale-out
+//! speedup, warm-vs-cold hot-path ratio, MXFP4 ≥ 1.8× formats bar,
+//! serving 1.5× goodput bar, the Pareto fp4-ffn bars) live in ONE
+//! reviewed file, so moving a bar is a visible diff, not an edit
+//! buried in a bench body.
+//!
+//! Baseline schema (per bench, per metric):
+//!
+//! ```json
+//! { "scaleout": { "speedup_8c": {"min": 4.0, "tol": 0.02} } }
+//! ```
+//!
+//! `min`/`max` bound the metric (either or both); `tol` is a relative
+//! slack fraction applied *away from* the bound — a value fails when
+//! `v < min − |min|·tol` or `v > max + |max|·tol` — so tolerance
+//! always loosens the gate, including for negative bounds (e.g. the
+//! `fp4_minus_fp8_utilization_at_k256` floor of −0.12). A baselined
+//! metric the bench does not report is a failure too (a silently
+//! dropped metric must not pass the gate).
+//!
+//! The JSON parser below is a deliberately minimal offline subset
+//! (objects / arrays / numbers / strings / literals — no escapes
+//! beyond `\"` and `\\`), enough for the baseline file and for the
+//! benches' own `BENCH_*.json` output; the offline container has no
+//! serde.
+
+use std::collections::HashMap;
+
+/// A parsed JSON value (minimal offline subset).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// JSON `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number (parsed as f64).
+    Num(f64),
+    /// A string (minimal escape handling).
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object, insertion-ordered.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric value, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a JSON document (panics with a position on malformed input —
+/// the inputs are files this repo itself writes or commits).
+pub fn parse_json(s: &str) -> Json {
+    let b = s.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(b, &mut pos);
+    skip_ws(b, &mut pos);
+    assert!(pos == b.len(), "trailing JSON content at byte {pos}");
+    v
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && (b[*pos] as char).is_whitespace() {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) {
+    assert!(*pos < b.len() && b[*pos] == c, "expected '{}' at byte {pos}", c as char);
+    *pos += 1;
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Json {
+    skip_ws(b, pos);
+    assert!(*pos < b.len(), "unexpected end of JSON");
+    match b[*pos] {
+        b'{' => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Json::Obj(fields);
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos);
+                skip_ws(b, pos);
+                expect(b, pos, b':');
+                let v = parse_value(b, pos);
+                fields.push((key, v));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(&b',') => *pos += 1,
+                    Some(&b'}') => {
+                        *pos += 1;
+                        return Json::Obj(fields);
+                    }
+                    _ => panic!("expected ',' or '}}' at byte {pos}"),
+                }
+            }
+        }
+        b'[' => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Json::Arr(items);
+            }
+            loop {
+                items.push(parse_value(b, pos));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(&b',') => *pos += 1,
+                    Some(&b']') => {
+                        *pos += 1;
+                        return Json::Arr(items);
+                    }
+                    _ => panic!("expected ',' or ']' at byte {pos}"),
+                }
+            }
+        }
+        b'"' => Json::Str(parse_string(b, pos)),
+        b't' => {
+            assert!(b[*pos..].starts_with(b"true"), "bad literal at byte {pos}");
+            *pos += 4;
+            Json::Bool(true)
+        }
+        b'f' => {
+            assert!(b[*pos..].starts_with(b"false"), "bad literal at byte {pos}");
+            *pos += 5;
+            Json::Bool(false)
+        }
+        b'n' => {
+            assert!(b[*pos..].starts_with(b"null"), "bad literal at byte {pos}");
+            *pos += 4;
+            Json::Null
+        }
+        _ => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            let txt = std::str::from_utf8(&b[start..*pos]).unwrap();
+            Json::Num(txt.parse().unwrap_or_else(|_| panic!("bad number '{txt}' at byte {start}")))
+        }
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> String {
+    expect(b, pos, b'"');
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return out;
+            }
+            b'\\' => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(&b'"') => out.push('"'),
+                    Some(&b'\\') => out.push('\\'),
+                    Some(&b'n') => out.push('\n'),
+                    Some(&b't') => out.push('\t'),
+                    Some(&c) => out.push(c as char),
+                    None => panic!("dangling escape at byte {pos}"),
+                }
+                *pos += 1;
+            }
+            c => {
+                out.push(c as char);
+                *pos += 1;
+            }
+        }
+    }
+    panic!("unterminated string");
+}
+
+/// Locate `bench_baselines.json`: `$BENCH_BASELINES`, the working
+/// directory (CI runs `cargo bench` at the workspace root), or one
+/// directory up (running from `rust/`).
+fn baselines_path() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("BENCH_BASELINES") {
+        return p.into();
+    }
+    for cand in ["bench_baselines.json", "../bench_baselines.json"] {
+        let p = std::path::PathBuf::from(cand);
+        if p.exists() {
+            return p;
+        }
+    }
+    panic!(
+        "bench_baselines.json not found (looked in . and ..; set BENCH_BASELINES to \
+         override) — the bench-regression gate must not silently skip"
+    );
+}
+
+/// Check `metrics` (name → measured value) for bench `bench` against
+/// the committed baselines. Prints a PASS line per gated metric and
+/// exits the process with a failure when any metric regresses past its
+/// tolerance, a baselined metric is unreported, or the bench has no
+/// baseline section.
+pub fn enforce(bench: &str, metrics: &[(&str, f64)]) {
+    let path = baselines_path();
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()));
+    let doc = parse_json(&text);
+    let section = doc
+        .get(bench)
+        .unwrap_or_else(|| panic!("no '{bench}' section in {}", path.display()));
+    let Json::Obj(specs) = section else {
+        panic!("'{bench}' section must be an object of metric specs");
+    };
+    let reported: HashMap<&str, f64> = metrics.iter().copied().collect();
+    let mut failures: Vec<String> = Vec::new();
+    println!("\nbench-regression gate ({bench}, baselines: {}):", path.display());
+    for (name, spec) in specs {
+        if name.starts_with('_') {
+            continue; // documentation keys, not metric specs
+        }
+        let tol = spec.get("tol").and_then(Json::as_f64).unwrap_or(0.0);
+        let min = spec.get("min").and_then(Json::as_f64);
+        let max = spec.get("max").and_then(Json::as_f64);
+        let Some(&v) = reported.get(name.as_str()) else {
+            failures.push(format!("  {name}: baselined but not reported by the bench"));
+            continue;
+        };
+        let mut ok = true;
+        if let Some(m) = min {
+            // slack away from the bound: correct for negative floors too
+            if v < m - m.abs() * tol {
+                ok = false;
+                failures.push(format!(
+                    "  {name}: {v:.4} regressed below the floor {m:.4} (tol {tol})"
+                ));
+            }
+        }
+        if let Some(m) = max {
+            if v > m + m.abs() * tol {
+                ok = false;
+                failures.push(format!(
+                    "  {name}: {v:.4} regressed above the ceiling {m:.4} (tol {tol})"
+                ));
+            }
+        }
+        if ok {
+            let bound = match (min, max) {
+                (Some(a), Some(b)) => format!("[{a:.3}, {b:.3}]"),
+                (Some(a), None) => format!(">= {a:.3}"),
+                (None, Some(b)) => format!("<= {b:.3}"),
+                (None, None) => "(unbounded)".into(),
+            };
+            println!("  PASS {name} = {v:.4}  ({bound}, tol {tol})");
+        }
+    }
+    for (name, v) in metrics {
+        if !specs.iter().any(|(k, _)| k == name) {
+            println!("  note {name} = {v:.4}  (no baseline committed)");
+        }
+    }
+    if !failures.is_empty() {
+        eprintln!("\nbench-regression gate FAILED ({bench}):");
+        for f in &failures {
+            eprintln!("{f}");
+        }
+        eprintln!(
+            "if the regression is intentional, update bench_baselines.json in the \
+             same change and say why in the commit message"
+        );
+        std::process::exit(1);
+    }
+}

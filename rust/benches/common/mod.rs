@@ -1,6 +1,14 @@
 //! Minimal benchmark harness (criterion is unavailable in the offline
 //! environment): warmup + timed iterations with mean / stddev / min,
-//! plus helpers shared by the paper-reproduction benches.
+//! plus helpers shared by the paper-reproduction benches and the
+//! [`baseline`] bench-regression gate every perf bench reports its
+//! headline metrics through.
+
+// Allowed dead code: each bench target compiles its own copy of this
+// module and only some of them (the BENCH_* artifact writers) report
+// through the gate.
+#[allow(dead_code)]
+pub mod baseline;
 
 use std::time::Instant;
 

@@ -120,7 +120,7 @@ fn main() {
         assert_eq!(c0.to_bits(), c1.to_bits(), "warm plan changed C[{i}]");
     }
     assert_eq!(cold.wall_cycles, warm.wall_cycles, "warm plan changed the cycle model");
-    assert!(warm_s < cold_s, "warm run not faster: {warm_s:.4}s vs {cold_s:.4}s");
+    // (warm-faster-than-cold is enforced by the regression gate below)
     let flops = gemm.flops() as f64;
     let cold_host_gflops = flops / cold_s / 1e9;
     let warm_host_gflops = flops / warm_s / 1e9;
@@ -165,6 +165,11 @@ fn main() {
     j.push_str("}\n");
     std::fs::write("BENCH_hotpath.json", &j).expect("write BENCH_hotpath.json");
     println!("wrote BENCH_hotpath.json");
+
+    // The warm-vs-cold bar goes through the shared regression gate
+    // (bit-identity stays asserted inline above — it is a correctness
+    // invariant, not a tunable bar).
+    common::baseline::enforce("hotpath", &[("warm_speedup", cold_s / warm_s)]);
 
     println!("\nhotpath: OK (record these in EXPERIMENTS.md §Perf)");
 }

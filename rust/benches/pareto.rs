@@ -1,0 +1,114 @@
+//! Bench `pareto`: the accuracy/throughput Pareto sweep of the
+//! per-layer mixed-precision presets (DESIGN.md §13) — `all-int8`,
+//! `all-fp8`, `fp4-ffn`, `all-fp4` on the DeiT-Tiny graph.
+//!
+//! For each preset this measures (a) cycle-accurate fabric throughput
+//! over the policy's MX-quantized GEMMs (warm plans shared across
+//! presets for the layers they agree on) and (b) the mean relative
+//! error of the encoder-block output against the FP32 reference
+//! executor. Writes `BENCH_pareto.json` and reports the headline
+//! metrics through the bench-regression gate
+//! (`benches/common/baseline.rs` + `bench_baselines.json`): the
+//! fp4-ffn preset must reach ≥ 1.3× the all-fp8 throughput, and its
+//! error must stay within the committed ceilings (direct-cast MXFP4 in
+//! the FFN costs ~4× the MXFP8 error on these shapes — the measured
+//! frontier, tracked so it cannot silently drift further).
+//!
+//! Run: `cargo bench --bench pareto`  (CI sets `PARETO_BENCH_SEQ=64`
+//! to bound the cycle-accurate walks; widths stay DeiT-Tiny's).
+
+mod common;
+
+use mxdotp::report::{pareto_headline, pareto_presets, pareto_sweep, render_pareto, ParetoPoint};
+use mxdotp::workload::DeitConfig;
+use std::fmt::Write as _;
+
+fn json(cfg: &DeitConfig, clusters: usize, points: &[ParetoPoint], wall: f64) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(
+        s,
+        "  \"workload\": {{\"name\": \"deit-tiny-policy-graph\", \"seq\": {}, \"dim\": {}, \
+         \"clusters\": {clusters}, \"block_size\": {}}},",
+        cfg.seq, cfg.dim, cfg.block_size
+    );
+    let _ = writeln!(s, "  \"host_wall_s\": {wall:.3},");
+    s.push_str("  \"points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        let layers: Vec<String> = p
+            .hw
+            .layers
+            .iter()
+            .map(|l| {
+                format!(
+                    "{{\"layer\": \"{}\", \"fmt\": \"{}\", \"wall_cycles\": {}, \
+                     \"gflops\": {:.3}}}",
+                    l.class.key(),
+                    l.fmt.name(),
+                    l.wall_cycles,
+                    l.gflops()
+                )
+            })
+            .collect();
+        let _ = writeln!(
+            s,
+            "    {{\"policy\": \"{}\", \"gflops\": {:.3}, \"wall_cycles\": {}, \
+             \"energy_uj\": {:.3}, \"rel_err\": {:.6}, \"csr_switches\": {}, \
+             \"layers\": [{}]}}{}",
+            p.name,
+            p.gflops(),
+            p.hw.wall_cycles,
+            p.hw.total_energy_uj,
+            p.rel_err,
+            p.hw.csr_switches,
+            layers.join(", "),
+            if i + 1 == points.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+fn main() {
+    common::header(
+        "pareto",
+        "accuracy/throughput Pareto sweep of the mixed-precision presets (DESIGN.md §13)",
+    );
+    let seq: usize = std::env::var("PARETO_BENCH_SEQ")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    let clusters = 4usize;
+    let cfg = DeitConfig { seq, ..DeitConfig::default() };
+    let presets = pareto_presets();
+    let t0 = std::time::Instant::now();
+    let points = pareto_sweep(&cfg, &presets, clusters, 8, 42, false);
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n{}", render_pareto(&points, &cfg, clusters));
+    println!("[swept {} policies in {wall:.1} s host wall-clock]", points.len());
+
+    // Structural sanity kept inline; the perf/accuracy BARS go through
+    // the shared bench-regression gate below.
+    let get = |n: &str| points.iter().find(|p| p.name == n).expect("preset missing");
+    let (fp8, ffn4, int8, fp4) =
+        (get("all-fp8"), get("fp4-ffn"), get("all-int8"), get("all-fp4"));
+    assert_eq!(fp8.hw.flops, ffn4.hw.flops, "presets must quantize the same layer set");
+    assert!(int8.rel_err < fp8.rel_err, "MXINT8 is the accurate end of the frontier");
+    assert!(fp4.gflops() >= ffn4.gflops(), "all-fp4 is the fast end of the frontier");
+    let (thr, err_ratio) = pareto_headline(&points).expect("headline presets present");
+
+    let out = json(&cfg, clusters, &points, wall);
+    std::fs::write("BENCH_pareto.json", &out).expect("write BENCH_pareto.json");
+    println!("wrote BENCH_pareto.json ({} points)", points.len());
+
+    common::baseline::enforce(
+        "pareto",
+        &[
+            ("fp4_ffn_speedup_vs_all_fp8", thr),
+            ("all_fp8_rel_err", fp8.rel_err),
+            ("fp4_ffn_rel_err", ffn4.rel_err),
+            ("fp4_ffn_err_ratio_vs_all_fp8", err_ratio),
+        ],
+    );
+    println!("\npareto: OK (fp4-ffn {thr:.2}x all-fp8 throughput at {err_ratio:.2}x its error)");
+}

@@ -18,6 +18,7 @@
 
 use crate::formats::ElemFormat;
 use crate::kernels::KernelKind;
+use crate::model::PrecisionPolicy;
 use crate::serve::SchedulerKind;
 use crate::workload::arrivals::ArrivalKind;
 use std::collections::HashMap;
@@ -29,11 +30,12 @@ pub enum Command {
     /// `quantize`: round-trip a random tensor through one MX format.
     Quantize { fmt: ElemFormat, block: usize, n: usize, seed: u64 },
     /// `simulate`: run one GEMM kernel on the cycle-accurate cluster
-    /// (or sharded across a cluster fabric).
-    Simulate { kernel: KernelKind, m: usize, k: usize, n: usize, cores: usize, clusters: usize, fmt: ElemFormat, seed: u64, cold_plans: bool },
+    /// (or sharded across a cluster fabric); with `--policy`, walk the
+    /// whole per-layer mixed-precision model graph instead.
+    Simulate { kernel: KernelKind, m: usize, k: usize, n: usize, cores: usize, clusters: usize, fmt: ElemFormat, seed: u64, cold_plans: bool, policy: Option<PrecisionPolicy> },
     /// `reproduce`: regenerate the paper's tables/figures and the
-    /// extension tables (formats, scaling, serving).
-    Reproduce { what: String, cores: usize, clusters: usize, fmt: ElemFormat, cold_plans: bool },
+    /// extension tables (formats, scaling, serving, pareto).
+    Reproduce { what: String, cores: usize, clusters: usize, fmt: ElemFormat, cold_plans: bool, policy: Option<PrecisionPolicy> },
     /// `serve`: drive the serving engine over a synthetic arrival
     /// trace, executing served requests through a real executor.
     Serve {
@@ -50,6 +52,7 @@ pub enum Command {
         sched: SchedulerKind,
         artifacts: String,
         cold_plans: bool,
+        policy: Option<PrecisionPolicy>,
     },
     /// `info`: print the simulated machine and runtime availability.
     Info,
@@ -163,8 +166,31 @@ fn get_batch(f: &HashMap<String, String>) -> Result<usize, CliError> {
     Ok(batch)
 }
 
+/// `--policy all-fp8|fp4-ffn|...|class=fmt,...`: a per-layer
+/// precision policy (presets or a class=format list layered over the
+/// uniform `--fmt` recipe). Unknown layer classes and formats are
+/// parse errors carrying the supported-value lists.
+fn get_policy(
+    f: &HashMap<String, String>,
+    fmt: ElemFormat,
+) -> Result<Option<PrecisionPolicy>, CliError> {
+    match f.get("policy") {
+        None => Ok(None),
+        Some(s) => PrecisionPolicy::parse(s, PrecisionPolicy::uniform(fmt))
+            .map(Some)
+            .map_err(CliError),
+    }
+}
+
 /// `--mix e4m3:0.6,e2m1:0.4`: weighted element-format traffic mix.
 fn parse_mix(s: &str) -> Result<Vec<(ElemFormat, f64)>, CliError> {
+    if s.trim().is_empty() {
+        return Err(CliError(
+            "--mix must name at least one fmt:weight pair \
+             (e.g. e4m3:0.6,e2m1:0.4; formats: e5m2, e4m3, e3m2, e2m3, e2m1, int8)"
+                .into(),
+        ));
+    }
     let mut mix = Vec::new();
     for part in s.split(',') {
         let Some((name, weight)) = part.split_once(':') else {
@@ -172,8 +198,12 @@ fn parse_mix(s: &str) -> Result<Vec<(ElemFormat, f64)>, CliError> {
                 "bad --mix entry '{part}' (expected fmt:weight, e.g. e4m3:0.6)"
             )));
         };
-        let fmt = ElemFormat::parse(name)
-            .ok_or_else(|| CliError(format!("unknown format '{name}' in --mix")))?;
+        let fmt = ElemFormat::parse(name).ok_or_else(|| {
+            CliError(format!(
+                "unknown format '{name}' in --mix; supported formats: \
+                 e5m2, e4m3, e3m2, e2m3, e2m1, int8"
+            ))
+        })?;
         let w: f64 = weight
             .parse()
             .map_err(|_| CliError(format!("bad weight '{weight}' in --mix")))?;
@@ -255,6 +285,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 fmt,
                 seed: get_parse(&f, "seed", 42)?,
                 cold_plans: get_cold_plans(&f),
+                policy: get_policy(&f, fmt)?,
             })
         }
         "reproduce" => {
@@ -263,32 +294,73 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 .filter(|w| !w.starts_with("--"))
                 .cloned()
                 .unwrap_or_else(|| "all".to_string());
-            if !["fig3", "fig4", "table3", "formats", "scaling", "serving", "all"]
+            if !["fig3", "fig4", "table3", "formats", "scaling", "serving", "pareto", "all"]
                 .contains(&what.as_str())
             {
                 return Err(CliError(format!(
-                    "unknown target '{what}' (expected fig3|fig4|table3|formats|scaling|serving|all)"
+                    "unknown target '{what}' \
+                     (expected fig3|fig4|table3|formats|scaling|serving|pareto|all)"
                 )));
             }
             let skip = usize::from(!rest.is_empty() && !rest[0].starts_with("--"));
             let f = flags(&rest[skip..])?;
+            let fmt = get_fmt(&f)?;
+            let policy = get_policy(&f, fmt)?;
+            // Only the pareto sweep consumes a policy; silently
+            // ignoring it on the other tables would misrepresent what
+            // they measured, so reject it up front (like --batch 0).
+            if policy.is_some() && what != "pareto" && what != "all" {
+                return Err(CliError(format!(
+                    "--policy only applies to 'reproduce pareto' (or 'all'), \
+                     not '{what}' — the other tables sweep --fmt, not per-layer policies"
+                )));
+            }
             Ok(Command::Reproduce {
                 what,
                 cores: get_parse(&f, "cores", 8)?,
                 clusters: get_clusters(&f, 8)?,
-                fmt: get_fmt(&f)?,
+                fmt,
                 cold_plans: get_cold_plans(&f),
+                policy,
             })
         }
         "serve" => {
             let f = flags(rest)?;
             let fmt = get_fmt(&f)?;
             let clusters = get_clusters(&f, 1)?;
-            let fabrics: usize = get_parse(&f, "fabrics", 0)?;
+            // An explicit `--fabrics 0` is degenerate (a machine cannot
+            // have zero fabrics) and is rejected like `--clusters 0`;
+            // *omitting* the flag selects the default of one fabric per
+            // cluster.
+            let fabrics: usize = match f.get("fabrics") {
+                None => 0,
+                Some(v) => {
+                    let n: usize = v.parse().map_err(|_| {
+                        CliError(format!("bad value for --fabrics: '{v}'"))
+                    })?;
+                    if n == 0 {
+                        return Err(CliError(
+                            "--fabrics must be at least 1 (omit the flag for the \
+                             default of one fabric per cluster)"
+                                .into(),
+                        ));
+                    }
+                    n
+                }
+            };
             if fabrics > 0 && (fabrics > clusters || clusters % fabrics != 0) {
                 return Err(CliError(format!(
                     "--fabrics {fabrics} must divide --clusters {clusters}"
                 )));
+            }
+            let policy = get_policy(&f, fmt)?;
+            if policy.is_some() && f.contains_key("mix") {
+                return Err(CliError(
+                    "--policy and --mix are mutually exclusive: --mix weights \
+                     single-format traffic classes, --policy makes every request \
+                     carry one per-layer policy"
+                        .into(),
+                ));
             }
             let mix = match f.get("mix") {
                 None => vec![(fmt, 1.0)],
@@ -322,6 +394,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 sched,
                 artifacts: f.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
                 cold_plans: get_cold_plans(&f),
+                policy,
             })
         }
         other => Err(CliError(format!("unknown subcommand '{other}' (try 'help')"))),
@@ -336,11 +409,13 @@ USAGE:
   mxdotp-cli quantize  [--fmt e4m3|e5m2|e3m2|e2m3|e2m1|int8] [--block 32] [--n 8] [--seed S]
   mxdotp-cli simulate  [--kernel mx|fp32|fp8sw] [--m 64] [--k 256] [--n 64]
                        [--cores 8] [--clusters 1] [--fmt e4m3] [--seed S] [--cold-plans]
-                       (--clusters N > 1 shards the MX GEMM across N simulated clusters)
-  mxdotp-cli reproduce [fig3|fig4|table3|formats|scaling|serving|all] [--cores 8]
-                       [--clusters 8] [--fmt e4m3] [--cold-plans]
-  mxdotp-cli serve     [--requests 16] [--batch 8] [--clusters 1] [--fabrics 0]
-                       [--fmt e4m3] [--mix e4m3:0.6,e2m1:0.4]
+                       [--policy PRESET|class=fmt,...]
+                       (--clusters N > 1 shards the MX GEMM across N simulated clusters;
+                        --policy walks the whole mixed-precision model graph instead)
+  mxdotp-cli reproduce [fig3|fig4|table3|formats|scaling|serving|pareto|all] [--cores 8]
+                       [--clusters 8] [--fmt e4m3] [--cold-plans] [--policy ...]
+  mxdotp-cli serve     [--requests 16] [--batch 8] [--clusters 1] [--fabrics N]
+                       [--fmt e4m3] [--mix e4m3:0.6,e2m1:0.4 | --policy PRESET|class=fmt,...]
                        [--arrival poisson[:RATE] | bursty:RATE:FACTOR:PERIOD]
                        [--slo-ticks 0] [--queue-cap 128]
                        [--sched continuous|barrier] [--artifacts DIR] [--cold-plans]
@@ -353,19 +428,32 @@ accepts every format; 'fp8sw' is the FP8-only software baseline;
 'fp32' ignores --fmt. 'reproduce formats' prints the format sweep on
 the Fig. 4 shapes.
 
+--policy assigns each GEMM layer of the DeiT encoder block its own
+precision (DESIGN.md §13): a preset — all-fp32, all-int8, all-fp8,
+fp4-ffn, all-fp4 — or a class=format list layered over the uniform
+--fmt recipe (classes: qkv, scores, ctx, proj, fc1, fc2; groups: ffn,
+attn, linears, all; formats: the six OCP names, fp32, and the aliases
+fp8/fp6/fp4). 'reproduce pareto' sweeps the presets (plus --policy,
+if given) on the DeiT-Tiny shapes and prints accuracy vs the FP32
+reference against cycle-accurate fabric throughput; on other reproduce
+targets --policy is rejected (they sweep --fmt, not policies).
+
 serve drives the production serving engine (DESIGN.md §12) over a
 synthetic open-loop arrival trace, then executes the served requests
 through a real executor. --mix sets the per-request format mix
-(weights are relative; default: 100 % --fmt). --arrival picks the
-process and its mean RATE in requests/kilotick (1 tick = 1 µs of
-fabric time; RATE 0 or omitted = half the machine's estimated
-capacity); bursty:4:8:2000 means mean 4/ktick arriving in 8x bursts
-every 2000 ticks. --fabrics groups the clusters into independent
-serving fabrics (0 = one fabric per cluster); the barrier scheduler
-always uses one whole-machine fabric. --slo-ticks is the latency SLO
-(0 = auto: 4x the worst-case single-request cost); --queue-cap bounds
-the admission queue. 'reproduce serving' prints the goodput-vs-load
-comparison of the two schedulers on the same traces.
+(weights are relative; default: 100 % --fmt); --policy instead makes
+every request carry one per-layer policy (service time and
+format-switch weight reloads are accounted per layer either way).
+--arrival picks the process and its mean RATE in requests/kilotick
+(1 tick = 1 µs of fabric time; RATE 0 or omitted = half the machine's
+estimated capacity); bursty:4:8:2000 means mean 4/ktick arriving in 8x
+bursts every 2000 ticks. --fabrics groups the clusters into
+independent serving fabrics (default: one fabric per cluster; 0 is
+rejected); the barrier scheduler always uses one whole-machine fabric.
+--slo-ticks is the latency SLO (0 = auto: 4x the worst-case
+single-request cost); --queue-cap bounds the admission queue.
+'reproduce serving' prints the goodput-vs-load comparison of the two
+schedulers on the same traces.
 
 --cold-plans bypasses the compile-once/execute-many plan cache (plans,
 quantized weight tiles, memoized passes) and measures the from-scratch
@@ -378,6 +466,12 @@ mod tests {
 
     fn argv(s: &str) -> Vec<String> {
         s.split_whitespace().map(str::to_string).collect()
+    }
+
+    /// Verbatim argument vector (for values whitespace-splitting would
+    /// destroy, like an explicitly empty `--mix`).
+    fn argv2(s: &[&str]) -> Vec<String> {
+        s.iter().map(|v| v.to_string()).collect()
     }
 
     #[test]
@@ -394,9 +488,89 @@ mod tests {
                 clusters: 1,
                 fmt: ElemFormat::E4M3,
                 seed: 42,
-                cold_plans: false
+                cold_plans: false,
+                policy: None
             }
         );
+    }
+
+    #[test]
+    fn parse_policy_presets_and_custom_lists() {
+        assert!(matches!(
+            parse(&argv("simulate --policy fp4-ffn")),
+            Ok(Command::Simulate { policy: Some(p), .. })
+                if p == PrecisionPolicy::preset("fp4-ffn").unwrap()
+        ));
+        assert!(matches!(
+            parse(&argv("reproduce pareto --policy all-fp4")),
+            Ok(Command::Reproduce { ref what, policy: Some(p), .. })
+                if what == "pareto" && p == PrecisionPolicy::preset("all-fp4").unwrap()
+        ));
+        // custom list layered over the uniform --fmt base
+        assert!(matches!(
+            parse(&argv("serve --fmt e5m2 --policy ffn=fp4")),
+            Ok(Command::Serve { policy: Some(p), .. })
+                if p == PrecisionPolicy::parse(
+                    "ffn=fp4",
+                    PrecisionPolicy::uniform(ElemFormat::E5M2)
+                ).unwrap()
+        ));
+        assert!(matches!(parse(&argv("serve")), Ok(Command::Serve { policy: None, .. })));
+    }
+
+    #[test]
+    fn unknown_policy_class_is_a_parse_error_listing_supported_classes() {
+        let err = parse(&argv("serve --policy mlp=fp4")).unwrap_err();
+        assert!(err.0.contains("unknown layer class 'mlp'"), "{err}");
+        for key in ["qkv", "scores", "ctx", "proj", "fc1", "fc2", "ffn"] {
+            assert!(err.0.contains(key), "error must list '{key}': {err}");
+        }
+        let err = parse(&argv("simulate --policy ffn=fp64")).unwrap_err();
+        assert!(err.0.contains("unknown format 'fp64'"), "{err}");
+        assert!(err.0.contains("e2m1"), "{err}");
+    }
+
+    #[test]
+    fn reproduce_policy_only_applies_to_pareto() {
+        let err = parse(&argv("reproduce serving --policy fp4-ffn")).unwrap_err();
+        assert!(err.0.contains("pareto"), "{err}");
+        assert!(parse(&argv("reproduce pareto --policy fp4-ffn")).is_ok());
+        assert!(parse(&argv("reproduce all --policy fp4-ffn")).is_ok());
+        assert!(parse(&argv("reproduce scaling --policy all-fp4")).is_err());
+    }
+
+    #[test]
+    fn serve_policy_and_mix_are_mutually_exclusive() {
+        let err = parse(&argv("serve --policy fp4-ffn --mix e4m3:1")).unwrap_err();
+        assert!(err.0.contains("mutually exclusive"), "{err}");
+        assert!(parse(&argv("serve --policy fp4-ffn")).is_ok());
+        assert!(parse(&argv("serve --mix e4m3:1")).is_ok());
+    }
+
+    #[test]
+    fn explicit_zero_fabrics_is_rejected_with_guidance() {
+        // `--fabrics 0` used to silently mean "auto"; a machine cannot
+        // have zero fabrics, so the explicit value is now rejected at
+        // parse time (omitting the flag keeps the auto default).
+        let err = parse(&argv("serve --fabrics 0")).unwrap_err();
+        assert!(err.0.contains("--fabrics"), "{err}");
+        assert!(err.0.contains("at least 1"), "{err}");
+        assert!(err.0.contains("omit"), "{err}");
+        assert!(matches!(
+            parse(&argv("serve --clusters 8 --fabrics 4")),
+            Ok(Command::Serve { fabrics: 4, .. })
+        ));
+        assert!(matches!(parse(&argv("serve")), Ok(Command::Serve { fabrics: 0, .. })));
+    }
+
+    #[test]
+    fn empty_mix_is_rejected_with_expected_syntax() {
+        let err = parse(&argv2(&["serve", "--mix", ""])).unwrap_err();
+        assert!(err.0.contains("--mix"), "{err}");
+        assert!(err.0.contains("fmt:weight"), "{err}");
+        assert!(err.0.contains("e4m3"), "{err}");
+        let err = parse(&argv2(&["serve", "--mix", "   "])).unwrap_err();
+        assert!(err.0.contains("fmt:weight"), "{err}");
     }
 
     #[test]

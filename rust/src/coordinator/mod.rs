@@ -285,110 +285,38 @@ impl ModelExecutor for PjrtExecutor {
 /// PJRT-free executor for the scale-out serving path: the DeiT encoder
 /// block computed in host Rust with the same recipe as the Python
 /// model (`python/compile/model.py`) — LayerNorm / softmax / residuals
-/// in FP32, the four linear layers MX-quantized. The simulated
-/// hardware cost of those linears is attributed to an N-cluster fabric
-/// by the coordinator's own sharded cost model
+/// in FP32, the four linear layers MX-quantized at `cfg.fmt`. The
+/// simulated hardware cost of those linears is attributed to an
+/// N-cluster fabric by the coordinator's own sharded cost model
 /// ([`Coordinator::with_scaleout`]), not by this executor.
 ///
-/// Plan/execute split (DESIGN.md §10): the weight matrices are
-/// MX-quantized **once at construction** and the quantized blocks
-/// reused for every request in every batch — the per-layer "plan" half
-/// of each linear. Only the activations are quantized per request.
-/// Bit-identical to inline `quantize_matmul_ref` because quantization
-/// is a pure per-block function of the weight bits.
+/// Since DESIGN.md §13 this is a thin single-format view over the
+/// per-layer mixed-precision [`crate::model::GraphExecutor`]: the
+/// block is the explicit layer graph walked under
+/// [`crate::model::PrecisionPolicy::uniform`]`(cfg.fmt)`, which the
+/// graph executor guarantees (and `tests/model.rs` pins against a
+/// frozen copy of the pre-refactor recipe) is bit-identical to the
+/// original implementation. Weights stay quantized **once at
+/// construction** (the plan half of DESIGN.md §10) and shared across
+/// every request in every batch.
 pub struct ShardedExecutor {
-    cfg: DeitConfig,
-    params: Vec<(String, Vec<usize>, Vec<f32>)>,
-    /// Per-layer pre-quantized weights (name → col-axis MxMatrix),
-    /// shared across batches.
-    qweights: Vec<(String, crate::formats::MxMatrix)>,
+    inner: crate::model::GraphExecutor,
 }
 
 impl ShardedExecutor {
-    /// Build the executor: MX-quantize the four weight matrices once
-    /// (the plan half of DESIGN.md §10) for reuse across all requests.
+    /// Build the executor: the uniform-`cfg.fmt` policy over the layer
+    /// graph, weights MX-quantized once for reuse across all requests.
     pub fn new(cfg: DeitConfig, params: Vec<(String, Vec<usize>, Vec<f32>)>) -> Self {
-        let (d, md) = (cfg.dim, cfg.mlp_dim());
-        let mut exec = ShardedExecutor { cfg, params, qweights: Vec::with_capacity(4) };
-        for (name, k, n) in
-            [("w_qkv", d, 3 * d), ("w_proj", d, d), ("w_fc1", d, md), ("w_fc2", md, d)]
-        {
-            let q = crate::formats::MxMatrix::quantize(
-                exec.param(name),
-                k,
-                n,
-                cfg.fmt,
-                cfg.block_size,
-                crate::formats::ScaleAxis::Col,
-            );
-            exec.qweights.push((name.to_string(), q));
+        let policy = crate::model::PrecisionPolicy::uniform(cfg.fmt);
+        ShardedExecutor {
+            inner: crate::model::GraphExecutor::new(cfg, policy, params)
+                .expect("uniform policies quantize only the block-aligned linears"),
         }
-        exec
     }
 
-    fn param(&self, name: &str) -> &[f32] {
-        &self
-            .params
-            .iter()
-            .find(|(n, _, _)| n == name)
-            .unwrap_or_else(|| panic!("missing parameter {name}"))
-            .2
-    }
-
-    fn qweight(&self, name: &str) -> &crate::formats::MxMatrix {
-        &self
-            .qweights
-            .iter()
-            .find(|(n, _)| n == name)
-            .unwrap_or_else(|| panic!("missing quantized weight {name}"))
-            .1
-    }
-
-    /// MX-quantized linear layer: `y = mx(x) · mx(w) + b`, matching
-    /// `model.mx_linear` (bias add in FP32). The weight's MX blocks
-    /// come pre-quantized from construction time.
-    fn mx_linear(
-        &self,
-        x: &[f32],
-        w_name: &str,
-        b: &[f32],
-        m: usize,
-        k: usize,
-        n: usize,
-    ) -> Vec<f32> {
-        assert_eq!(x.len(), m * k);
-        let qx = crate::formats::MxMatrix::quantize(
-            x,
-            m,
-            k,
-            self.cfg.fmt,
-            self.cfg.block_size,
-            crate::formats::ScaleAxis::Row,
-        );
-        let mut y = crate::formats::dot::matmul_ref(&qx, self.qweight(w_name));
-        for row in y.chunks_mut(n) {
-            for (v, &bc) in row.iter_mut().zip(b) {
-                *v += bc;
-            }
-        }
-        y
-    }
-
-    fn layer_norm(&self, x: &[f32], gamma: &[f32], beta: &[f32]) -> Vec<f32> {
-        let d = self.cfg.dim;
-        let mut out = vec![0.0f32; x.len()];
-        for (row, orow) in x.chunks(d).zip(out.chunks_mut(d)) {
-            let mu = row.iter().sum::<f32>() / d as f32;
-            let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
-            let r = 1.0 / (var + 1e-6).sqrt();
-            for (o, &v) in orow.iter_mut().zip(row) {
-                *o = (v - mu) * r;
-            }
-            for (c, o) in orow.iter_mut().enumerate() {
-                *o = *o * gamma[c] + beta[c];
-            }
-        }
-        out
+    /// The underlying graph executor (uniform policy).
+    pub fn graph(&self) -> &crate::model::GraphExecutor {
+        &self.inner
     }
 
     /// Shared-state forward pass (`&self`): the full encoder block on
@@ -399,14 +327,7 @@ impl ShardedExecutor {
     /// bit-identical to the sequential [`ModelExecutor::forward`]
     /// path because the computation is a pure function of `x`.
     pub fn forward_ref(&self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
-        if x.len() != self.cfg.seq * self.cfg.dim {
-            return Err(anyhow::anyhow!(
-                "input length {} != seq*dim {}",
-                x.len(),
-                self.cfg.seq * self.cfg.dim
-            ));
-        }
-        Ok(self.forward_block(x))
+        self.inner.forward_ref(x)
     }
 
     /// Run several batches **concurrently on disjoint fabrics** (one
@@ -415,89 +336,13 @@ impl ShardedExecutor {
     /// preserve the `batches` nesting. Panics if any input has the
     /// wrong shape — callers validate shapes at admission time.
     pub fn forward_concurrent(&self, batches: &[Vec<Vec<f32>>]) -> Vec<Vec<Vec<f32>>> {
-        std::thread::scope(|s| {
-            let handles: Vec<_> = batches
-                .iter()
-                .map(|batch| {
-                    s.spawn(move || {
-                        batch
-                            .iter()
-                            .map(|x| self.forward_ref(x).expect("batch input shape"))
-                            .collect::<Vec<Vec<f32>>>()
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("fabric executor thread panicked"))
-                .collect()
-        })
+        self.inner.forward_concurrent(batches)
     }
-
-    /// The full encoder block (pre-norm, residual) on one sequence.
-    fn forward_block(&self, x: &[f32]) -> Vec<f32> {
-        let (s, d) = (self.cfg.seq, self.cfg.dim);
-        let h = self.cfg.heads;
-        let hd = d / h;
-        let md = self.cfg.mlp_dim();
-
-        // --- attention ------------------------------------------------
-        let y = self.layer_norm(x, self.param("ln1_gamma"), self.param("ln1_beta"));
-        let qkv = self.mx_linear(&y, "w_qkv", self.param("b_qkv"), s, d, 3 * d);
-        // qkv[t][3][h][hd]; per head: scores = q·kᵀ/√hd, softmax, ·v.
-        let at = |t: usize, which: usize, head: usize, e: usize| {
-            qkv[t * 3 * d + which * d + head * hd + e]
-        };
-        let mut ctx = vec![0.0f32; s * d];
-        let mut scores = vec![0.0f32; s];
-        for head in 0..h {
-            for tq in 0..s {
-                let mut max = f32::NEG_INFINITY;
-                for (tk, sc) in scores.iter_mut().enumerate() {
-                    let mut acc = 0.0f32;
-                    for e in 0..hd {
-                        acc += at(tq, 0, head, e) * at(tk, 1, head, e);
-                    }
-                    *sc = acc / (hd as f32).sqrt();
-                    max = max.max(*sc);
-                }
-                let mut denom = 0.0f32;
-                for sc in scores.iter_mut() {
-                    *sc = (*sc - max).exp();
-                    denom += *sc;
-                }
-                for e in 0..hd {
-                    let mut acc = 0.0f32;
-                    for (tk, &sc) in scores.iter().enumerate() {
-                        acc += sc * at(tk, 2, head, e);
-                    }
-                    ctx[tq * d + head * hd + e] = acc / denom;
-                }
-            }
-        }
-        let proj = self.mx_linear(&ctx, "w_proj", self.param("b_proj"), s, d, d);
-        let x1: Vec<f32> = x.iter().zip(&proj).map(|(&a, &b)| a + b).collect();
-
-        // --- MLP ------------------------------------------------------
-        let y = self.layer_norm(&x1, self.param("ln2_gamma"), self.param("ln2_beta"));
-        let mut hval = self.mx_linear(&y, "w_fc1", self.param("b_fc1"), s, d, md);
-        for v in hval.iter_mut() {
-            *v = gelu(*v);
-        }
-        let out = self.mx_linear(&hval, "w_fc2", self.param("b_fc2"), s, md, d);
-        x1.iter().zip(&out).map(|(&a, &b)| a + b).collect()
-    }
-}
-
-/// Tanh-approximated GELU (`jax.nn.gelu`'s default form).
-fn gelu(x: f32) -> f32 {
-    const C: f32 = 0.797_884_6; // sqrt(2/π)
-    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
 }
 
 impl ModelExecutor for ShardedExecutor {
     fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
-        self.forward_ref(x)
+        self.inner.forward_ref(x)
     }
 }
 
@@ -712,7 +557,14 @@ mod tests {
         let x = crate::workload::generate_input(&cfg, 5);
         let d = cfg.dim;
         let zero_bias = vec![0.0f32; 3 * d];
-        let got = exec.mx_linear(&x, "w_qkv", &zero_bias, cfg.seq, d, 3 * d);
+        let got = exec.graph().linear(
+            &x,
+            crate::model::LayerClass::Qkv,
+            &zero_bias,
+            cfg.seq,
+            d,
+            3 * d,
+        );
         let want = crate::formats::dot::quantize_matmul_ref(
             &x,
             &w_qkv,

@@ -38,6 +38,13 @@
 //!   (single-request and batch-splice entry points), the PJRT and
 //!   in-process MX executors, and the seed-era barrier coordinator the
 //!   serving engine is benchmarked against.
+//! * [`model`] — the per-layer mixed-precision model graph
+//!   (DESIGN.md §13): the typed encoder-block layer graph, precision
+//!   policies mapping each layer class to an element format (presets
+//!   `all-fp8`, `fp4-ffn`, `all-fp4`, ...), the graph-walking host
+//!   executor (bit-identical to the single-format path for uniform
+//!   policies) and the cycle-accurate per-layer policy runner behind
+//!   the accuracy/throughput Pareto sweep.
 //! * [`serve`] — the production serving engine (DESIGN.md §12):
 //!   per-(format, priority) request queues, admission control with
 //!   bounded backpressure and reject reasons, continuous batching with
@@ -56,6 +63,7 @@ pub mod energy;
 pub mod kernels;
 pub mod cli;
 pub mod coordinator;
+pub mod model;
 pub mod report;
 pub mod rng;
 pub mod runtime;

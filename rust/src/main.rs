@@ -5,9 +5,10 @@
 
 use anyhow::Result;
 use mxdotp::cli::{parse, Command, USAGE};
-use mxdotp::coordinator::{ModelExecutor, PjrtExecutor, ShardedExecutor};
+use mxdotp::coordinator::{ModelExecutor, PjrtExecutor};
 use mxdotp::formats::{ElemFormat, MxVector};
 use mxdotp::kernels::{run_mm, MmProblem};
+use mxdotp::model::{policy_hw_run, GraphExecutor, ModelGraph, PrecisionPolicy};
 use mxdotp::rng::XorShift;
 use mxdotp::runtime::Runtime;
 use mxdotp::scaleout::{measure_parallel_efficiency, sharded_mm, ScaleoutConfig};
@@ -66,7 +67,41 @@ fn main() -> Result<()> {
                 data.iter().zip(&dq).map(|(a, b)| (a - b).abs()).sum::<f32>() / data.len() as f32;
             println!("  mean |dequant - original| = {err:.5}");
         }
-        Command::Simulate { kernel, m, k, n, cores, clusters, fmt, seed, cold_plans } => {
+        Command::Simulate { kernel, m, k, n, cores, clusters, fmt, seed, cold_plans, policy } => {
+            if let Some(policy) = policy {
+                // Policy mode: walk the whole mixed-precision model
+                // graph instead of one GEMM (the --m/k/n flags do not
+                // apply; shapes come from the DeiT-Tiny graph).
+                let cfg = DeitConfig { fmt, ..DeitConfig::default() };
+                let graph = ModelGraph::deit_block(&cfg);
+                eprintln!(
+                    "simulating the DeiT-Tiny graph under policy '{policy}' on \
+                     {clusters} cluster(s) x {cores} cores (cycle-accurate; \
+                     --m/--k/--n are ignored in --policy mode)..."
+                );
+                let run = policy_hw_run(&graph, &policy, clusters, cores, seed, cold_plans);
+                println!(
+                    "policy {policy} on {clusters} cluster(s): {} wall cycles, \
+                     {:.1} GFLOPS over the MX layers, {:.1} µJ, {} MX_FMT CSR switch(es)",
+                    run.wall_cycles,
+                    run.gflops(),
+                    run.total_energy_uj,
+                    run.csr_switches
+                );
+                println!("  layer   fmt     gemms   wall cycles   GFLOPS   energy[µJ]");
+                for l in &run.layers {
+                    println!(
+                        "  {:<7} {:<7} {:>5}  {:>12}   {:>6.1}   {:>9.1}",
+                        l.class.key(),
+                        l.fmt.name(),
+                        l.count,
+                        l.wall_cycles,
+                        l.gflops(),
+                        l.energy_uj
+                    );
+                }
+                return Ok(());
+            }
             let p = MmProblem { m, k, n, fmt, block_size: 32 };
             let mut rng = XorShift::new(seed);
             let a = rng.normal_vec(m * k, 1.0);
@@ -107,7 +142,7 @@ fn main() -> Result<()> {
                 println!("{}", report::render_run_detailed(&run));
             }
         }
-        Command::Reproduce { what, cores, clusters, fmt, cold_plans } => {
+        Command::Reproduce { what, cores, clusters, fmt, cold_plans, policy } => {
             if what == "fig3" || what == "all" {
                 println!("{}", report::render_fig3());
             }
@@ -166,6 +201,22 @@ fn main() -> Result<()> {
                      produced bit-identical outputs"
                 );
             }
+            if what == "pareto" || what == "all" {
+                let cfg = DeitConfig { fmt, ..DeitConfig::default() };
+                let mut pols = report::pareto_presets();
+                if let Some(p) = policy {
+                    if !pols.iter().any(|(_, q)| *q == p) {
+                        pols.push((format!("custom ({p})"), p));
+                    }
+                }
+                eprintln!(
+                    "sweeping {} precision policies on the DeiT-Tiny graph across \
+                     {clusters} cluster(s) (cycle-accurate; this takes a while)...",
+                    pols.len()
+                );
+                let pts = report::pareto_sweep(&cfg, &pols, clusters, cores, 42, cold_plans);
+                println!("{}", report::render_pareto(&pts, &cfg, clusters));
+            }
             if what == "scaling" || what == "all" {
                 let cfg = DeitConfig { fmt, ..DeitConfig::default() };
                 // The standard sweep points below the requested fabric
@@ -199,6 +250,7 @@ fn main() -> Result<()> {
             sched,
             artifacts,
             cold_plans,
+            policy,
         } => {
             let model = DeitConfig { fmt, ..DeitConfig::default() };
             // Calibrate at the mix's dominant format; the analytic
@@ -238,6 +290,37 @@ fn main() -> Result<()> {
                 eprintln!("error: {e}");
                 std::process::exit(2);
             }
+            if let Some(p) = policy {
+                if scfg.slo_ticks == 0 {
+                    // The format-envelope auto-SLO does not cover
+                    // custom policies (which may quantize the attention
+                    // GEMMs and cost more than any uniform format).
+                    scfg.slo_ticks = serve::auto_slo_for_policy(&scfg, &p);
+                }
+                println!("policy: every request carries '{p}' (per-layer cost accounting)");
+                // Per-layer analytic cost at the calibrated operating
+                // point — what the scheduler bills each request.
+                let pc = mxdotp::workload::analytic_policy_sharded_cost(
+                    &model,
+                    &p,
+                    snitch::NUM_CORES,
+                    scfg.util,
+                    scfg.clusters_per_fabric(),
+                    scfg.cluster_eff,
+                );
+                println!(
+                    "  analytic per-request cost on one fabric: {} cycles, {:.1} µJ",
+                    pc.total.cycles, pc.total.energy_uj
+                );
+                for (class, c) in &pc.per_layer {
+                    println!(
+                        "    layer {:<6} {:>10} cycles   {:>12} flops",
+                        class.key(),
+                        c.cycles,
+                        c.flops
+                    );
+                }
+            }
             let slo = serve::resolve_slo_ticks(&scfg);
             println!(
                 "machine: {clusters} cluster(s) as {} fabric(s) × {cpf} cluster(s); \
@@ -257,7 +340,11 @@ fn main() -> Result<()> {
             let rate = if rate_per_ktick > 0.0 {
                 rate_per_ktick
             } else {
-                let auto = 0.5 * serve::estimated_capacity_per_ktick(&scfg, &mix);
+                let auto = 0.5
+                    * match policy {
+                        Some(p) => serve::estimated_capacity_for_policies(&scfg, &[(p, 1.0)]),
+                        None => serve::estimated_capacity_per_ktick(&scfg, &mix),
+                    };
                 println!("  offered load: auto ({auto:.2} req/ktick = 0.5× estimated capacity)");
                 auto
             };
@@ -269,7 +356,14 @@ fn main() -> Result<()> {
                 requests,
                 seed: 42,
             };
-            let trace = generate_trace(&spec);
+            let mut trace = generate_trace(&spec);
+            if let Some(p) = policy {
+                // Requests carry the serve-wide policy instead of their
+                // mix class's uniform recipe.
+                for r in trace.iter_mut() {
+                    r.policy = p;
+                }
+            }
             let outcome = serve::simulate(&scfg, &trace);
 
             // Execute every served request through a real executor —
@@ -279,7 +373,16 @@ fn main() -> Result<()> {
             // on disjoint fabrics) otherwise.
             let t0 = std::time::Instant::now();
             let params = generate_params(&model, 42);
-            let pjrt = if mix.len() == 1 {
+            // PJRT executes the single-format artifact: only a pure
+            // single-format class (and no custom per-layer policy, or
+            // a policy that is exactly that format's uniform recipe)
+            // can go through it.
+            let pjrt_ok = mix.len() == 1
+                && match policy {
+                    None => true,
+                    Some(p) => p == PrecisionPolicy::uniform(mix[0].0),
+                };
+            let pjrt = if pjrt_ok {
                 Runtime::new(&artifacts)
                     .ok()
                     .filter(|_| Runtime::artifacts_present(std::path::Path::new(&artifacts)))
@@ -307,17 +410,31 @@ fn main() -> Result<()> {
                 }
                 None => {
                     println!(
-                        "PJRT unavailable, artifacts missing, or mixed-format mix — \
+                        "PJRT unavailable, artifacts missing, or mixed-precision traffic — \
                          executing {} served request(s) via the in-process MX executors",
                         outcome.served.len()
                     );
-                    let mut execs: HashMap<ElemFormat, ShardedExecutor> = HashMap::new();
-                    for &(f, _) in &mix {
-                        execs
-                            .entry(f)
-                            .or_insert_with(|| {
-                                ShardedExecutor::new(DeitConfig { fmt: f, ..model }, params.clone())
-                            });
+                    let mut execs: HashMap<PrecisionPolicy, GraphExecutor> = HashMap::new();
+                    match policy {
+                        Some(p) => {
+                            execs.insert(
+                                p,
+                                GraphExecutor::new(model, p, params.clone())?,
+                            );
+                        }
+                        None => {
+                            for &(f, _) in &mix {
+                                let p = PrecisionPolicy::uniform(f);
+                                execs.entry(p).or_insert_with(|| {
+                                    GraphExecutor::new(
+                                        DeitConfig { fmt: f, ..model },
+                                        p,
+                                        params.clone(),
+                                    )
+                                    .expect("uniform policy")
+                                });
+                            }
+                        }
                     }
                     serve::execute_outcome(&outcome, &model, &execs, serve::INPUT_SEED_BASE).len()
                 }

@@ -1,0 +1,497 @@
+//! The graph-walking host executor: one DeiT encoder block computed
+//! layer by layer at the precision a [`PrecisionPolicy`] assigns to
+//! each [`LayerClass`] (DESIGN.md §13).
+//!
+//! **Bit-identity contract.** For any [`PrecisionPolicy::uniform`]
+//! policy — which is what every preset uses for the attention GEMMs —
+//! the forward pass reproduces the pre-refactor single-format
+//! `ShardedExecutor` path *bit for bit*: the same OCP quantization of
+//! the same operands in the same order, the same FP32 LayerNorm /
+//! softmax / GELU / residual math, the same accumulation order
+//! (guarded by `tests/model.rs` against a frozen copy of the old
+//! recipe). Mixed policies change only the element format each layer
+//! quantizes to; the surrounding math is untouched.
+//!
+//! **Attention precision.** When *both* attention GEMM classes are
+//! [`LayerPrecision::Fp32`] (every preset), the score/softmax/context
+//! math runs the legacy fused per-query loop — the exact pre-refactor
+//! code. When either class is MX-quantized, the per-head attention is
+//! computed in matrix form: the score GEMM `q·kᵀ` and the context GEMM
+//! `softmax(scores)·v` each quantize their operands at the class's
+//! format (softmax probabilities are normalized in FP32 before the
+//! context GEMM). MX attention requires the quantization blocks to
+//! divide the contraction axes: `head_dim % block_size == 0` for
+//! scores, `seq % block_size == 0` for context.
+//!
+//! Like the executor it generalizes, a `GraphExecutor` is immutable
+//! after construction (parameters plus per-layer pre-quantized
+//! weights), so any number of host threads may serve requests through
+//! one instance concurrently ([`GraphExecutor::forward_concurrent`])
+//! with results bit-identical to sequential execution.
+
+use super::{LayerClass, LayerPrecision, ModelGraph, PrecisionPolicy};
+use crate::coordinator::ModelExecutor;
+use crate::formats::{MxMatrix, ScaleAxis};
+use crate::workload::DeitConfig;
+
+/// A weight staged at its layer's precision.
+enum QWeight {
+    /// FP32 layer: the raw parameter is used directly.
+    Fp32,
+    /// MX layer: quantized once at construction (col-axis blocks),
+    /// shared across every request — the plan half of DESIGN.md §10.
+    Mx(MxMatrix),
+}
+
+/// The per-layer mixed-precision graph executor.
+pub struct GraphExecutor {
+    /// Model shapes served.
+    pub cfg: DeitConfig,
+    /// The layer graph being walked.
+    pub graph: ModelGraph,
+    /// Per-layer precision assignment.
+    pub policy: PrecisionPolicy,
+    params: Vec<(String, Vec<usize>, Vec<f32>)>,
+    /// Indexed by `LayerClass::index()`; None for the weightless
+    /// attention GEMMs.
+    qweights: Vec<Option<QWeight>>,
+}
+
+impl GraphExecutor {
+    /// Build the executor: validate the policy against the model
+    /// shapes and quantize each weighted layer's matrix once at its
+    /// assigned format.
+    ///
+    /// Errors when an MX layer's contraction axis is not divisible by
+    /// the MX block size (for the default DeiT shapes this only
+    /// constrains MX *attention*: `head_dim % block == 0` for
+    /// `scores`, `seq % block == 0` for `ctx`).
+    pub fn new(
+        cfg: DeitConfig,
+        policy: PrecisionPolicy,
+        params: Vec<(String, Vec<usize>, Vec<f32>)>,
+    ) -> anyhow::Result<Self> {
+        let graph = ModelGraph::deit_block(&cfg);
+        for node in &graph.nodes {
+            if let LayerPrecision::Mx(fmt) = policy.get(node.class) {
+                if node.gemm.k % cfg.block_size != 0 {
+                    return Err(anyhow::anyhow!(
+                        "policy assigns {fmt} to layer '{}' but its contraction dim {} \
+                         is not divisible by the MX block size {}",
+                        node.class,
+                        node.gemm.k,
+                        cfg.block_size
+                    ));
+                }
+            }
+        }
+        let mut exec = GraphExecutor {
+            cfg,
+            graph,
+            policy,
+            params,
+            qweights: (0..LayerClass::ALL.len()).map(|_| None).collect(),
+        };
+        for class in LayerClass::ALL {
+            let Some(name) = class.weight_name() else { continue };
+            let node = exec.graph.node(class).gemm;
+            let qw = match policy.get(class) {
+                LayerPrecision::Fp32 => QWeight::Fp32,
+                LayerPrecision::Mx(fmt) => QWeight::Mx(MxMatrix::quantize(
+                    exec.param(name),
+                    node.k,
+                    node.n,
+                    fmt,
+                    cfg.block_size,
+                    ScaleAxis::Col,
+                )),
+            };
+            exec.qweights[class.index()] = Some(qw);
+        }
+        Ok(exec)
+    }
+
+    fn param(&self, name: &str) -> &[f32] {
+        &self
+            .params
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .unwrap_or_else(|| panic!("missing parameter {name}"))
+            .2
+    }
+
+    /// One linear layer at the class's precision: `y = x · w + b`,
+    /// with both operands MX-quantized for [`LayerPrecision::Mx`]
+    /// classes (weight pre-quantized at construction, bias added in
+    /// FP32 — exactly `model.mx_linear`) or plain FP32 matmul for
+    /// [`LayerPrecision::Fp32`] classes.
+    pub(crate) fn linear(
+        &self,
+        x: &[f32],
+        class: LayerClass,
+        bias: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<f32> {
+        assert_eq!(x.len(), m * k);
+        let qw = self.qweights[class.index()]
+            .as_ref()
+            .unwrap_or_else(|| panic!("layer {class} has no staged weight"));
+        let mut y = match (self.policy.get(class), qw) {
+            (LayerPrecision::Mx(fmt), QWeight::Mx(w)) => {
+                let qx =
+                    MxMatrix::quantize(x, m, k, fmt, self.cfg.block_size, ScaleAxis::Row);
+                crate::formats::dot::matmul_ref(&qx, w)
+            }
+            (LayerPrecision::Fp32, QWeight::Fp32) => {
+                let w = self.param(class.weight_name().unwrap());
+                matmul_f32(x, w, m, k, n)
+            }
+            _ => unreachable!("weight staged at a different precision than the policy's"),
+        };
+        for row in y.chunks_mut(n) {
+            for (v, &bc) in row.iter_mut().zip(bias) {
+                *v += bc;
+            }
+        }
+        y
+    }
+
+    fn layer_norm(&self, x: &[f32], gamma: &[f32], beta: &[f32]) -> Vec<f32> {
+        let d = self.cfg.dim;
+        let mut out = vec![0.0f32; x.len()];
+        for (row, orow) in x.chunks(d).zip(out.chunks_mut(d)) {
+            let mu = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+            let r = 1.0 / (var + 1e-6).sqrt();
+            for (o, &v) in orow.iter_mut().zip(row) {
+                *o = (v - mu) * r;
+            }
+            for (c, o) in orow.iter_mut().enumerate() {
+                *o = *o * gamma[c] + beta[c];
+            }
+        }
+        out
+    }
+
+    /// Shared-state forward pass (`&self`): the full encoder block on
+    /// one request. Pure function of `x`, so batch composition, splice
+    /// order and fabric placement can never change results.
+    pub fn forward_ref(&self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        if x.len() != self.cfg.seq * self.cfg.dim {
+            return Err(anyhow::anyhow!(
+                "input length {} != seq*dim {}",
+                x.len(),
+                self.cfg.seq * self.cfg.dim
+            ));
+        }
+        Ok(self.forward_block(x))
+    }
+
+    /// Run several batches concurrently on disjoint fabrics (one host
+    /// thread per batch). Outputs preserve the `batches` nesting and
+    /// are bit-identical to sequential [`Self::forward_ref`] calls.
+    /// Panics if any input has the wrong shape — callers validate
+    /// shapes at admission time.
+    pub fn forward_concurrent(&self, batches: &[Vec<Vec<f32>>]) -> Vec<Vec<Vec<f32>>> {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = batches
+                .iter()
+                .map(|batch| {
+                    s.spawn(move || {
+                        batch
+                            .iter()
+                            .map(|x| self.forward_ref(x).expect("batch input shape"))
+                            .collect::<Vec<Vec<f32>>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("fabric executor thread panicked"))
+                .collect()
+        })
+    }
+
+    /// The full encoder block (pre-norm, residual) on one sequence.
+    fn forward_block(&self, x: &[f32]) -> Vec<f32> {
+        let (s, d) = (self.cfg.seq, self.cfg.dim);
+        let md = self.cfg.mlp_dim();
+
+        // --- attention ------------------------------------------------
+        let y = self.layer_norm(x, self.param("ln1_gamma"), self.param("ln1_beta"));
+        let qkv = self.linear(&y, LayerClass::Qkv, self.param("b_qkv"), s, d, 3 * d);
+        let ctx = self.attention(&qkv);
+        let proj = self.linear(&ctx, LayerClass::AttnOut, self.param("b_proj"), s, d, d);
+        let x1: Vec<f32> = x.iter().zip(&proj).map(|(&a, &b)| a + b).collect();
+
+        // --- MLP ------------------------------------------------------
+        let y = self.layer_norm(&x1, self.param("ln2_gamma"), self.param("ln2_beta"));
+        let mut hval = self.linear(&y, LayerClass::MlpUp, self.param("b_fc1"), s, d, md);
+        for v in hval.iter_mut() {
+            *v = gelu(*v);
+        }
+        let out = self.linear(&hval, LayerClass::MlpDown, self.param("b_fc2"), s, md, d);
+        x1.iter().zip(&out).map(|(&a, &b)| a + b).collect()
+    }
+
+    /// Multi-head attention over the fused `qkv` tensor. Dispatches to
+    /// the legacy fused loop (bit-identical to the pre-refactor path)
+    /// when both attention classes are FP32, and to the matrix-form
+    /// per-head GEMMs otherwise.
+    fn attention(&self, qkv: &[f32]) -> Vec<f32> {
+        let fp32 = |c| self.policy.get(c) == LayerPrecision::Fp32;
+        if fp32(LayerClass::AttnScores) && fp32(LayerClass::AttnContext) {
+            self.attention_fp32_fused(qkv)
+        } else {
+            self.attention_matrix(qkv)
+        }
+    }
+
+    /// The pre-refactor FP32 attention: per (head, query) score row,
+    /// max-subtracted exp, context accumulated over *unnormalized*
+    /// weights and divided by the denominator at the end. Must not be
+    /// restructured — uniform-policy bit-identity depends on this
+    /// exact accumulation order.
+    fn attention_fp32_fused(&self, qkv: &[f32]) -> Vec<f32> {
+        let (s, d) = (self.cfg.seq, self.cfg.dim);
+        let h = self.cfg.heads;
+        let hd = d / h;
+        // qkv[t][3][h][hd]; per head: scores = q·kᵀ/√hd, softmax, ·v.
+        let at = |t: usize, which: usize, head: usize, e: usize| {
+            qkv[t * 3 * d + which * d + head * hd + e]
+        };
+        let mut ctx = vec![0.0f32; s * d];
+        let mut scores = vec![0.0f32; s];
+        for head in 0..h {
+            for tq in 0..s {
+                let mut max = f32::NEG_INFINITY;
+                for (tk, sc) in scores.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for e in 0..hd {
+                        acc += at(tq, 0, head, e) * at(tk, 1, head, e);
+                    }
+                    *sc = acc / (hd as f32).sqrt();
+                    max = max.max(*sc);
+                }
+                let mut denom = 0.0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - max).exp();
+                    denom += *sc;
+                }
+                for e in 0..hd {
+                    let mut acc = 0.0f32;
+                    for (tk, &sc) in scores.iter().enumerate() {
+                        acc += sc * at(tk, 2, head, e);
+                    }
+                    ctx[tq * d + head * hd + e] = acc / denom;
+                }
+            }
+        }
+        ctx
+    }
+
+    /// Matrix-form attention for policies that quantize the score
+    /// and/or context GEMM: per head, `scores = mx(q)·mx(kᵀ)/√hd`,
+    /// row softmax in FP32 (probabilities normalized), then
+    /// `ctx = mx(w)·mx(v)` — each GEMM at its class's precision, with
+    /// FP32 falling back to the plain host matmul.
+    fn attention_matrix(&self, qkv: &[f32]) -> Vec<f32> {
+        let (s, d) = (self.cfg.seq, self.cfg.dim);
+        let h = self.cfg.heads;
+        let hd = d / h;
+        let at = |t: usize, which: usize, head: usize, e: usize| {
+            qkv[t * 3 * d + which * d + head * hd + e]
+        };
+        let mut ctx = vec![0.0f32; s * d];
+        for head in 0..h {
+            // gather q (s×hd), kᵀ (hd×s), v (s×hd) for this head
+            let mut q = vec![0.0f32; s * hd];
+            let mut kt = vec![0.0f32; hd * s];
+            let mut v = vec![0.0f32; s * hd];
+            for t in 0..s {
+                for e in 0..hd {
+                    q[t * hd + e] = at(t, 0, head, e);
+                    kt[e * s + t] = at(t, 1, head, e);
+                    v[t * hd + e] = at(t, 2, head, e);
+                }
+            }
+            let mut scores =
+                self.activation_gemm(LayerClass::AttnScores, &q, &kt, s, hd, s);
+            let scale = 1.0 / (hd as f32).sqrt();
+            for sc in scores.iter_mut() {
+                *sc *= scale;
+            }
+            // row softmax (max-subtracted, probabilities normalized)
+            for row in scores.chunks_mut(s) {
+                let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+                let mut denom = 0.0f32;
+                for sc in row.iter_mut() {
+                    *sc = (*sc - max).exp();
+                    denom += *sc;
+                }
+                for sc in row.iter_mut() {
+                    *sc /= denom;
+                }
+            }
+            let hctx = self.activation_gemm(LayerClass::AttnContext, &scores, &v, s, s, hd);
+            for t in 0..s {
+                ctx[t * d + head * hd..t * d + head * hd + hd]
+                    .copy_from_slice(&hctx[t * hd..(t + 1) * hd]);
+            }
+        }
+        ctx
+    }
+
+    /// Activation-by-activation GEMM at the class's precision (both
+    /// operands quantized per call — neither is a weight).
+    fn activation_gemm(
+        &self,
+        class: LayerClass,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<f32> {
+        match self.policy.get(class) {
+            LayerPrecision::Fp32 => matmul_f32(a, b, m, k, n),
+            LayerPrecision::Mx(fmt) => {
+                let qa = MxMatrix::quantize(a, m, k, fmt, self.cfg.block_size, ScaleAxis::Row);
+                let qb = MxMatrix::quantize(b, k, n, fmt, self.cfg.block_size, ScaleAxis::Col);
+                crate::formats::dot::matmul_ref(&qa, &qb)
+            }
+        }
+    }
+}
+
+impl ModelExecutor for GraphExecutor {
+    fn forward(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.forward_ref(x)
+    }
+}
+
+/// Plain FP32 row-major matmul (k-inner accumulation) for the graph's
+/// FP32-precision layers.
+fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Tanh-approximated GELU (`jax.nn.gelu`'s default form).
+pub(crate) fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/π)
+    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::ElemFormat;
+    use crate::workload::{generate_input, generate_params};
+
+    fn small_cfg() -> DeitConfig {
+        DeitConfig { seq: 8, ..DeitConfig::default() }
+    }
+
+    #[test]
+    fn uniform_policy_serves_finite_outputs_with_residual_path() {
+        let cfg = small_cfg();
+        let params = generate_params(&cfg, 42);
+        let exec =
+            GraphExecutor::new(cfg, PrecisionPolicy::uniform(cfg.fmt), params).unwrap();
+        let x = generate_input(&cfg, 3);
+        let y = exec.forward_ref(&x).unwrap();
+        assert_eq!(y.len(), cfg.seq * cfg.dim);
+        assert!(y.iter().all(|v| v.is_finite()));
+        let dot: f64 = y.iter().zip(&x).map(|(&o, &i)| (o * i) as f64).sum();
+        assert!(dot > 0.0, "residual path missing?");
+    }
+
+    #[test]
+    fn fp32_reference_differs_from_quantized_but_tracks_it() {
+        let cfg = small_cfg();
+        let params = generate_params(&cfg, 42);
+        let x = generate_input(&cfg, 3);
+        let fp32 =
+            GraphExecutor::new(cfg, PrecisionPolicy::fp32_reference(), params.clone())
+                .unwrap();
+        let fp8 = GraphExecutor::new(cfg, PrecisionPolicy::preset("all-fp8").unwrap(), params)
+            .unwrap();
+        let yr = fp32.forward_ref(&x).unwrap();
+        let y8 = fp8.forward_ref(&x).unwrap();
+        let num: f64 = y8.iter().zip(&yr).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+        let den: f64 = yr.iter().map(|&v| (v as f64).powi(2)).sum();
+        let rel = (num / den).sqrt();
+        assert!(rel > 0.0, "quantization must perturb the output");
+        assert!(rel < 0.1, "all-fp8 error implausibly large: {rel}");
+    }
+
+    #[test]
+    fn mixed_policy_error_orders_by_mantissa_width() {
+        let cfg = small_cfg();
+        let params = generate_params(&cfg, 42);
+        let x = generate_input(&cfg, 5);
+        let err_of = |name: &str| {
+            let exec = GraphExecutor::new(
+                cfg,
+                PrecisionPolicy::preset(name).unwrap(),
+                params.clone(),
+            )
+            .unwrap();
+            let fp32 =
+                GraphExecutor::new(cfg, PrecisionPolicy::fp32_reference(), params.clone())
+                    .unwrap();
+            let y = exec.forward_ref(&x).unwrap();
+            let r = fp32.forward_ref(&x).unwrap();
+            let num: f64 = y.iter().zip(&r).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+            let den: f64 = r.iter().map(|&v| (v as f64).powi(2)).sum();
+            (num / den).sqrt()
+        };
+        let (e8, effn4, e4) = (err_of("all-fp8"), err_of("fp4-ffn"), err_of("all-fp4"));
+        assert!(e8 < effn4, "fp4-ffn must be less accurate than all-fp8: {e8} vs {effn4}");
+        assert!(effn4 <= e4 * 1.2, "fp4-ffn should not exceed all-fp4's error: {effn4} vs {e4}");
+    }
+
+    #[test]
+    fn mx_attention_requires_block_divisible_axes() {
+        // seq 8 is not divisible by block 32 -> ctx quantization must
+        // be rejected at construction with a clear error.
+        let cfg = small_cfg();
+        let params = generate_params(&cfg, 1);
+        let mut p = PrecisionPolicy::uniform(cfg.fmt);
+        p.set(LayerClass::AttnContext, LayerPrecision::Mx(ElemFormat::E4M3));
+        let err = GraphExecutor::new(cfg, p, params.clone()).unwrap_err().to_string();
+        assert!(err.contains("ctx") && err.contains("block size"), "{err}");
+        // seq 64 divides: construction and forward succeed
+        let cfg64 = DeitConfig { seq: 64, ..DeitConfig::default() };
+        let params64 = generate_params(&cfg64, 1);
+        let mut p = PrecisionPolicy::uniform(cfg64.fmt);
+        p.set(LayerClass::AttnScores, LayerPrecision::Mx(ElemFormat::E4M3));
+        p.set(LayerClass::AttnContext, LayerPrecision::Mx(ElemFormat::E4M3));
+        let exec = GraphExecutor::new(cfg64, p, params64).unwrap();
+        let y = exec.forward_ref(&generate_input(&cfg64, 2)).unwrap();
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_rejects_wrong_shape() {
+        let cfg = small_cfg();
+        let params = generate_params(&cfg, 1);
+        let exec =
+            GraphExecutor::new(cfg, PrecisionPolicy::uniform(cfg.fmt), params).unwrap();
+        assert!(exec.forward_ref(&[0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! The cycle-accurate side of the policy graph (DESIGN.md §13): every
+//! MX-quantized layer of the [`ModelGraph`] executed through the
+//! scale-out engine, with per-layer format switching.
+//!
+//! [`policy_hw_run`] walks the graph in execution order and runs each
+//! [`super::LayerPrecision::Mx`] node as a sharded GEMM
+//! ([`crate::scaleout::sharded_mm`]) at the node's element format —
+//! per-head attention GEMMs once per head. Plans, quantized B tiles
+//! and memoized passes warm through the process-wide
+//! [`PlanCache`](crate::kernels::plan::PlanCache) (so a Pareto sweep's
+//! presets share the simulations of the layers they agree on), and the
+//! `MX_FMT` CSR is switched between layers by each layer's compiled
+//! program — the CSR write is the first thing every MX kernel program
+//! executes, so a format transition costs one CSR write on the
+//! datapath. The *weight restage* cost of a format switch is a
+//! serving-time concern accounted per-layer by the serving engine's
+//! cost model (`serve::CostModel::reload_ticks_between`), not here: in
+//! steady state each layer's weights stay resident at the layer's
+//! format.
+//!
+//! FP32-precision layers (the attention internals of every preset)
+//! execute on the host FP32 path and are **not** billed to the MX
+//! fabric — the same accounting the pre-refactor
+//! `workload::mx_matmuls` cost model used. The run's `gflops` is
+//! therefore fabric throughput over the policy's quantized GEMMs,
+//! directly comparable across policies that quantize the same layer
+//! set (all the presets).
+
+use super::{LayerClass, ModelGraph, PrecisionPolicy};
+use crate::rng::XorShift;
+use crate::scaleout::{sharded_mm, ScaleoutConfig};
+
+/// One MX layer's cycle-accurate result within a policy run.
+#[derive(Clone, Debug)]
+pub struct LayerHwRun {
+    /// Layer class that ran.
+    pub class: LayerClass,
+    /// Element format it ran at.
+    pub fmt: crate::formats::ElemFormat,
+    /// GEMMs executed (attention heads for the per-head classes).
+    pub count: usize,
+    /// Fabric wall cycles summed over the layer's GEMMs (max over
+    /// clusters within each GEMM).
+    pub wall_cycles: u64,
+    /// Total busy cycles across clusters and GEMMs.
+    pub total_cycles: u64,
+    /// Fabric energy (µJ).
+    pub energy_uj: f64,
+    /// Useful FLOPs of the layer.
+    pub flops: u64,
+}
+
+impl LayerHwRun {
+    /// Layer throughput (GFLOPS at 1 GHz).
+    pub fn gflops(&self) -> f64 {
+        if self.wall_cycles == 0 {
+            return 0.0;
+        }
+        self.flops as f64 / self.wall_cycles as f64
+    }
+}
+
+/// The cycle-accurate outcome of one policy walk over the graph.
+#[derive(Clone, Debug)]
+pub struct PolicyHwRun {
+    /// Policy that was walked.
+    pub policy: PrecisionPolicy,
+    /// Per-layer results, execution order (MX layers only).
+    pub layers: Vec<LayerHwRun>,
+    /// Fabric wall cycles over the whole walk.
+    pub wall_cycles: u64,
+    /// Total fabric energy (µJ).
+    pub total_energy_uj: f64,
+    /// Useful FLOPs across the policy's MX layers.
+    pub flops: u64,
+    /// `MX_FMT` CSR writes along the walk: one when the first MX layer
+    /// programs the datapath, plus one per layer-to-layer format
+    /// transition.
+    pub csr_switches: usize,
+}
+
+impl PolicyHwRun {
+    /// Fabric throughput over the policy's MX layers (GFLOPS, 1 GHz).
+    pub fn gflops(&self) -> f64 {
+        if self.wall_cycles == 0 {
+            return 0.0;
+        }
+        self.flops as f64 / self.wall_cycles as f64
+    }
+}
+
+/// Walk `graph` under `policy` on a `clusters`-wide fabric of
+/// `cores_per_cluster`-core clusters, running every MX layer through
+/// the cycle-accurate scale-out engine with deterministic per-layer
+/// operands derived from `seed`. Results (cycles, energy, outputs) are
+/// a pure function of the arguments; `cold_plans` bypasses the warm
+/// plan cache without changing any simulated number.
+pub fn policy_hw_run(
+    graph: &ModelGraph,
+    policy: &PrecisionPolicy,
+    clusters: usize,
+    cores_per_cluster: usize,
+    seed: u64,
+    cold_plans: bool,
+) -> PolicyHwRun {
+    let scfg = ScaleoutConfig {
+        cores_per_cluster,
+        cold_plans,
+        ..ScaleoutConfig::with_clusters(clusters)
+    };
+    let mut layers = Vec::new();
+    let mut wall = 0u64;
+    let mut energy = 0.0f64;
+    let mut flops = 0u64;
+    let mut switches = 0usize;
+    let mut resident_fmt = None;
+    for (class, p, count) in graph.mx_problems(policy) {
+        if resident_fmt != Some(p.fmt) {
+            resident_fmt = Some(p.fmt);
+            switches += 1;
+        }
+        let mut lw = 0u64;
+        let mut lt = 0u64;
+        let mut le = 0.0f64;
+        for rep in 0..count {
+            // Per-(layer, head) deterministic operands: activations at
+            // the workload's activation scale, weights moment-matched.
+            let mut rng =
+                XorShift::new(seed ^ ((class.index() as u64 + 1) << 32) ^ ((rep as u64) << 48));
+            let a = rng.normal_vec(p.m * p.k, 0.5);
+            let b = rng.normal_vec(p.k * p.n, 0.02);
+            let run = sharded_mm(&scfg, p, &a, &b);
+            lw += run.wall_cycles;
+            lt += run.total_cycles;
+            le += run.total_energy_uj;
+        }
+        let lf = 2 * (p.m * p.k * p.n) as u64 * count as u64;
+        wall += lw;
+        energy += le;
+        flops += lf;
+        layers.push(LayerHwRun {
+            class,
+            fmt: p.fmt,
+            count,
+            wall_cycles: lw,
+            total_cycles: lt,
+            energy_uj: le,
+            flops: lf,
+        });
+    }
+    PolicyHwRun {
+        policy: *policy,
+        layers,
+        wall_cycles: wall,
+        total_energy_uj: energy,
+        flops,
+        csr_switches: switches,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::ElemFormat;
+    use crate::workload::DeitConfig;
+
+    #[test]
+    fn csr_switch_accounting_follows_the_walk_order() {
+        // No simulation needed to check the switch count: use a tiny
+        // sequence so the run stays fast.
+        let cfg = DeitConfig { seq: 8, ..DeitConfig::default() };
+        let graph = ModelGraph::deit_block(&cfg);
+        let fp8 = PrecisionPolicy::preset("all-fp8").unwrap();
+        let ffn4 = PrecisionPolicy::preset("fp4-ffn").unwrap();
+        let r8 = policy_hw_run(&graph, &fp8, 1, 2, 7, false);
+        // qkv/proj/fc1/fc2 all e4m3: one initial CSR program
+        assert_eq!(r8.csr_switches, 1);
+        assert_eq!(r8.layers.len(), 4);
+        let r4 = policy_hw_run(&graph, &ffn4, 1, 2, 7, false);
+        // e4m3 (qkv, proj) -> e2m1 (fc1, fc2): one transition
+        assert_eq!(r4.csr_switches, 2);
+        assert_eq!(r4.flops, r8.flops, "presets quantize the same layer set");
+        assert!(r4.wall_cycles > 0 && r4.total_energy_uj > 0.0);
+        // the FP4 FFN shortens the fabric wall-clock
+        assert!(
+            r4.wall_cycles < r8.wall_cycles,
+            "fp4-ffn wall {} !< all-fp8 wall {}",
+            r4.wall_cycles,
+            r8.wall_cycles
+        );
+        // per-layer rows carry their formats in walk order
+        let fmts: Vec<ElemFormat> = r4.layers.iter().map(|l| l.fmt).collect();
+        assert_eq!(
+            fmts,
+            vec![ElemFormat::E4M3, ElemFormat::E4M3, ElemFormat::E2M1, ElemFormat::E2M1]
+        );
+    }
+}

@@ -1,0 +1,297 @@
+//! Per-layer mixed-precision model graph (DESIGN.md §13).
+//!
+//! The coordinator's original view of the DeiT encoder block was "a
+//! list of four same-format GEMMs" (`workload::DeitConfig::mx_matmuls`)
+//! with the attention internals folded into opaque FP32 host math.
+//! This module makes the block an explicit **typed layer graph**: six
+//! GEMM layer classes in execution order — the QKV projection, the
+//! per-head QK^T score GEMM, the per-head softmax·V context GEMM, the
+//! attention output projection, and the MLP up/down projections — each
+//! of which can run at its *own* precision:
+//!
+//! * [`LayerClass`] — the six GEMM classes of one encoder block, with
+//!   their shapes derived from a [`crate::workload::DeitConfig`];
+//! * [`PrecisionPolicy`] ([`policy`]) — a mapping from layer class to
+//!   [`LayerPrecision`] (FP32 host math or one of the six OCP MX
+//!   element formats), with named presets (`all-fp8`, `fp4-ffn`,
+//!   `all-fp4`, ...) and a `--policy qkv=e4m3,ffn=fp4` parser;
+//! * [`GraphExecutor`] ([`executor`]) — the graph-walking host
+//!   executor: bit-identical to the pre-refactor single-format path
+//!   for uniform policies, per-layer MX quantization otherwise;
+//! * [`policy_hw_run`] ([`hw`]) — the cycle-accurate side: every MX
+//!   layer of the graph executed through the scale-out engine with
+//!   warm plans from the shared
+//!   [`PlanCache`](crate::kernels::plan::PlanCache), the `MX_FMT` CSR
+//!   switched between layers by each layer's compiled program.
+//!
+//! The paper's motivation (§I): the OCP MX spec exists so *different
+//! tensors can use different element formats*. The graph + policy pair
+//! is what turns "six formats exist" (DESIGN.md §11) into scenarios
+//! that exploit them — the accuracy/throughput Pareto sweep of
+//! `mxdotp-cli reproduce pareto` (DESIGN.md §13).
+
+pub mod executor;
+pub mod hw;
+pub mod policy;
+
+pub use executor::GraphExecutor;
+pub use hw::{policy_hw_run, LayerHwRun, PolicyHwRun};
+pub use policy::{LayerPrecision, PrecisionPolicy};
+
+use crate::formats::ElemFormat;
+use crate::kernels::MmProblem;
+use crate::workload::DeitConfig;
+
+/// One GEMM layer class of the encoder block, in execution order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayerClass {
+    /// The fused QKV input projection (`x · w_qkv`, seq × dim × 3·dim).
+    Qkv,
+    /// The per-head attention score GEMM (`q · kᵀ`, seq × hd × seq).
+    AttnScores,
+    /// The per-head attention context GEMM (`softmax(scores) · v`,
+    /// seq × seq × hd).
+    AttnContext,
+    /// The attention output projection (`ctx · w_proj`, seq × dim × dim).
+    AttnOut,
+    /// The MLP up projection (`y · w_fc1`, seq × dim × mlp_dim).
+    MlpUp,
+    /// The MLP down projection (`gelu(h) · w_fc2`, seq × mlp_dim × dim).
+    MlpDown,
+}
+
+impl LayerClass {
+    /// All six classes, in the graph's execution order.
+    pub const ALL: [LayerClass; 6] = [
+        LayerClass::Qkv,
+        LayerClass::AttnScores,
+        LayerClass::AttnContext,
+        LayerClass::AttnOut,
+        LayerClass::MlpUp,
+        LayerClass::MlpDown,
+    ];
+
+    /// Dense index in [`Self::ALL`] order (for per-class tables).
+    pub fn index(self) -> usize {
+        match self {
+            LayerClass::Qkv => 0,
+            LayerClass::AttnScores => 1,
+            LayerClass::AttnContext => 2,
+            LayerClass::AttnOut => 3,
+            LayerClass::MlpUp => 4,
+            LayerClass::MlpDown => 5,
+        }
+    }
+
+    /// The `--policy` key naming this class (`qkv`, `scores`, `ctx`,
+    /// `proj`, `fc1`, `fc2`).
+    pub fn key(self) -> &'static str {
+        match self {
+            LayerClass::Qkv => "qkv",
+            LayerClass::AttnScores => "scores",
+            LayerClass::AttnContext => "ctx",
+            LayerClass::AttnOut => "proj",
+            LayerClass::MlpUp => "fc1",
+            LayerClass::MlpDown => "fc2",
+        }
+    }
+
+    /// Name of the weight parameter this class stages (None for the
+    /// two attention GEMMs, whose operands are activations only — a
+    /// format switch never reloads weights for them).
+    pub fn weight_name(self) -> Option<&'static str> {
+        match self {
+            LayerClass::Qkv => Some("w_qkv"),
+            LayerClass::AttnOut => Some("w_proj"),
+            LayerClass::MlpUp => Some("w_fc1"),
+            LayerClass::MlpDown => Some("w_fc2"),
+            LayerClass::AttnScores | LayerClass::AttnContext => None,
+        }
+    }
+}
+
+impl std::fmt::Display for LayerClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+/// One GEMM shape in the graph, with its per-forward multiplicity
+/// (`count` = attention heads for the per-head GEMMs, 1 otherwise).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmShape {
+    /// Rows of the left operand and the output.
+    pub m: usize,
+    /// Contraction dimension.
+    pub k: usize,
+    /// Columns of the right operand and the output.
+    pub n: usize,
+    /// GEMMs of this shape per forward pass.
+    pub count: usize,
+}
+
+impl GemmShape {
+    /// Useful FLOPs of all `count` GEMMs (2·M·N·K each).
+    pub fn flops(&self) -> u64 {
+        2 * self.m as u64 * self.k as u64 * self.n as u64 * self.count as u64
+    }
+}
+
+/// One node of the layer graph: a GEMM class and its concrete shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerNode {
+    /// GEMM class of this node.
+    pub class: LayerClass,
+    /// Shape (and per-forward multiplicity) of the GEMM.
+    pub gemm: GemmShape,
+}
+
+impl LayerNode {
+    /// Useful FLOPs of this node per forward pass.
+    pub fn flops(&self) -> u64 {
+        self.gemm.flops()
+    }
+}
+
+/// The typed layer graph of one DeiT encoder block: the six GEMM
+/// classes in execution order with their shapes. The non-GEMM ops
+/// between them (LayerNorm, softmax, GELU, residual adds) are fixed
+/// FP32 host math in every policy — exactly the recipe of
+/// `python/compile/model.py` — so the graph's nodes are precisely the
+/// operations a [`PrecisionPolicy`] can move between formats.
+#[derive(Clone, Debug)]
+pub struct ModelGraph {
+    /// Model shapes the graph was built for.
+    pub cfg: DeitConfig,
+    /// GEMM nodes in execution order.
+    pub nodes: Vec<LayerNode>,
+}
+
+impl ModelGraph {
+    /// Build the encoder-block graph for `cfg`'s shapes.
+    pub fn deit_block(cfg: &DeitConfig) -> Self {
+        let (s, d, h, md) = (cfg.seq, cfg.dim, cfg.heads, cfg.mlp_dim());
+        let hd = d / h;
+        let node = |class, m, k, n, count| LayerNode { class, gemm: GemmShape { m, k, n, count } };
+        ModelGraph {
+            cfg: *cfg,
+            nodes: vec![
+                node(LayerClass::Qkv, s, d, 3 * d, 1),
+                node(LayerClass::AttnScores, s, hd, s, h),
+                node(LayerClass::AttnContext, s, s, hd, h),
+                node(LayerClass::AttnOut, s, d, d, 1),
+                node(LayerClass::MlpUp, s, d, md, 1),
+                node(LayerClass::MlpDown, s, md, d, 1),
+            ],
+        }
+    }
+
+    /// The node of `class` (the graph holds each class exactly once).
+    pub fn node(&self, class: LayerClass) -> &LayerNode {
+        &self.nodes[class.index()]
+    }
+
+    /// The MX GEMM problems a policy quantizes, in execution order:
+    /// `(class, problem, count)` for every node whose precision is
+    /// [`LayerPrecision::Mx`]. FP32-precision nodes stay on the host
+    /// FP32 path (the paper's recipe for the attention internals) and
+    /// are absent here.
+    pub fn mx_problems(
+        &self,
+        policy: &PrecisionPolicy,
+    ) -> Vec<(LayerClass, MmProblem, usize)> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match policy.get(n.class) {
+                LayerPrecision::Fp32 => None,
+                LayerPrecision::Mx(fmt) => Some((
+                    n.class,
+                    MmProblem {
+                        m: n.gemm.m,
+                        k: n.gemm.k,
+                        n: n.gemm.n,
+                        fmt,
+                        block_size: self.cfg.block_size,
+                    },
+                    n.gemm.count,
+                )),
+            })
+            .collect()
+    }
+
+    /// Total MX-quantized FLOPs under `policy` (the FLOP base of the
+    /// Pareto sweep's fabric-throughput column).
+    pub fn mx_flops(&self, policy: &PrecisionPolicy) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(policy.get(n.class), LayerPrecision::Mx(_)))
+            .map(LayerNode::flops)
+            .sum()
+    }
+
+    /// MX-quantized FLOPs at one element format under `policy` (the
+    /// per-format grouping the analytic cost model bills by).
+    pub fn mx_flops_at(&self, policy: &PrecisionPolicy, fmt: ElemFormat) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|n| policy.get(n.class) == LayerPrecision::Mx(fmt))
+            .map(LayerNode::flops)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deit_graph_shapes_match_the_legacy_matmul_list() {
+        let cfg = DeitConfig::default();
+        let g = ModelGraph::deit_block(&cfg);
+        assert_eq!(g.nodes.len(), 6);
+        // the four linears reproduce workload::mx_matmuls exactly
+        let legacy = cfg.mx_matmuls();
+        let uniform = PrecisionPolicy::uniform(cfg.fmt);
+        let probs = g.mx_problems(&uniform);
+        assert_eq!(probs.len(), 4);
+        for ((class, p, count), l) in probs.iter().zip(&legacy) {
+            assert_eq!((p.m, p.k, p.n), (l.m, l.k, l.n), "{class}");
+            assert_eq!(p.fmt, l.fmt);
+            assert_eq!(*count, 1);
+        }
+        assert_eq!(g.mx_flops(&uniform), cfg.mx_flops());
+    }
+
+    #[test]
+    fn attention_nodes_carry_per_head_multiplicity() {
+        let cfg = DeitConfig::default();
+        let g = ModelGraph::deit_block(&cfg);
+        let hd = cfg.dim / cfg.heads;
+        let scores = g.node(LayerClass::AttnScores);
+        assert_eq!(
+            (scores.gemm.m, scores.gemm.k, scores.gemm.n, scores.gemm.count),
+            (cfg.seq, hd, cfg.seq, cfg.heads)
+        );
+        let ctx = g.node(LayerClass::AttnContext);
+        assert_eq!(
+            (ctx.gemm.m, ctx.gemm.k, ctx.gemm.n, ctx.gemm.count),
+            (cfg.seq, cfg.seq, hd, cfg.heads)
+        );
+        // per-head FLOPs: 2·s²·d for each attention GEMM class
+        let want = 2 * (cfg.seq * cfg.seq * cfg.dim) as u64;
+        assert_eq!(scores.flops(), want);
+        assert_eq!(ctx.flops(), want);
+    }
+
+    #[test]
+    fn per_format_flop_grouping_partitions_the_policy_flops() {
+        let cfg = DeitConfig::default();
+        let g = ModelGraph::deit_block(&cfg);
+        let p = PrecisionPolicy::preset("fp4-ffn").unwrap();
+        let total: u64 =
+            ElemFormat::ALL.iter().map(|&f| g.mx_flops_at(&p, f)).sum();
+        assert_eq!(total, g.mx_flops(&p));
+        // the FFN is 2/3 of the linear FLOPs
+        assert_eq!(g.mx_flops_at(&p, ElemFormat::E2M1) * 3, g.mx_flops(&p) * 2);
+    }
+}

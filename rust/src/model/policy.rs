@@ -1,0 +1,302 @@
+//! Precision policies: the per-layer-class element-format assignment
+//! of the mixed-precision graph executor (DESIGN.md §13).
+//!
+//! A [`PrecisionPolicy`] maps each [`LayerClass`] to a
+//! [`LayerPrecision`]: FP32 host math, or MX quantization at one of
+//! the six OCP element formats. The named presets anchor the Pareto
+//! sweep:
+//!
+//! * `all-int8` / `all-fp8` / `all-fp4` — the four linear projections
+//!   at one format, attention internals in FP32 (exactly the paper's
+//!   single-format recipe; `all-fp8` is bit-identical to the
+//!   pre-refactor path);
+//! * `fp4-ffn` — the MLP up/down projections at MXFP4 (16 lanes per
+//!   `mxdotp` issue, 2× the ideal throughput), everything else as
+//!   `all-fp8` — the headline throughput/accuracy trade-off point;
+//! * `all-fp32` — nothing quantized; the accuracy reference the sweep
+//!   measures errors against.
+//!
+//! Custom policies parse from `--policy qkv=e4m3,ffn=fp4,...` with the
+//! group aliases `ffn` (fc1+fc2), `attn` (scores+ctx), `linears`
+//! (qkv+proj+fc1+fc2) and `all`, and the format aliases `fp8`→e4m3,
+//! `fp6`→e3m2, `fp4`→e2m1.
+
+use super::LayerClass;
+use crate::formats::ElemFormat;
+
+/// Precision of one graph layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayerPrecision {
+    /// Unquantized FP32 host math (the paper's recipe for the
+    /// attention internals).
+    Fp32,
+    /// MX-quantize both operands at this element format.
+    Mx(ElemFormat),
+}
+
+impl std::fmt::Display for LayerPrecision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LayerPrecision::Fp32 => f.write_str("fp32"),
+            LayerPrecision::Mx(fmt) => f.write_str(fmt.name()),
+        }
+    }
+}
+
+/// A per-layer-class precision assignment for the encoder-block graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PrecisionPolicy {
+    prec: [LayerPrecision; 6],
+}
+
+/// The named presets, in Pareto-sweep order (most accurate first).
+pub const PRESET_NAMES: [&str; 5] = ["all-fp32", "all-int8", "all-fp8", "fp4-ffn", "all-fp4"];
+
+impl PrecisionPolicy {
+    /// The pre-refactor single-format recipe: the four linear
+    /// projections MX-quantized at `fmt`, the attention score/context
+    /// GEMMs in FP32.
+    pub fn uniform(fmt: ElemFormat) -> Self {
+        let mut p = PrecisionPolicy { prec: [LayerPrecision::Fp32; 6] };
+        for class in
+            [LayerClass::Qkv, LayerClass::AttnOut, LayerClass::MlpUp, LayerClass::MlpDown]
+        {
+            p.set(class, LayerPrecision::Mx(fmt));
+        }
+        p
+    }
+
+    /// The FP32 accuracy reference: nothing quantized.
+    pub fn fp32_reference() -> Self {
+        PrecisionPolicy { prec: [LayerPrecision::Fp32; 6] }
+    }
+
+    /// Precision of `class`.
+    pub fn get(&self, class: LayerClass) -> LayerPrecision {
+        self.prec[class.index()]
+    }
+
+    /// Set the precision of `class`.
+    pub fn set(&mut self, class: LayerClass, p: LayerPrecision) {
+        self.prec[class.index()] = p;
+    }
+
+    /// `Some(fmt)` when this policy is exactly [`Self::uniform`]`(fmt)`
+    /// — the single-format fast path the serving cost model keys on.
+    pub fn uniform_fmt(&self) -> Option<ElemFormat> {
+        for fmt in ElemFormat::ALL {
+            if *self == Self::uniform(fmt) {
+                return Some(fmt);
+            }
+        }
+        None
+    }
+
+    /// Look up a named preset.
+    pub fn preset(name: &str) -> Option<Self> {
+        Some(match name {
+            "all-fp32" => Self::fp32_reference(),
+            "all-int8" => Self::uniform(ElemFormat::Int8),
+            "all-fp8" => Self::uniform(ElemFormat::E4M3),
+            "all-fp4" => Self::uniform(ElemFormat::E2M1),
+            "fp4-ffn" => {
+                let mut p = Self::uniform(ElemFormat::E4M3);
+                p.set(LayerClass::MlpUp, LayerPrecision::Mx(ElemFormat::E2M1));
+                p.set(LayerClass::MlpDown, LayerPrecision::Mx(ElemFormat::E2M1));
+                p
+            }
+            _ => return None,
+        })
+    }
+
+    /// Parse a `--policy` value: a preset name, or a comma-separated
+    /// `class=format` list applied on top of `base` (classes: `qkv`,
+    /// `scores`, `ctx`, `proj`, `fc1`, `fc2`; groups: `ffn`, `attn`,
+    /// `linears`, `all`; formats: the six OCP names, `fp32`, and the
+    /// aliases `fp8`/`fp6`/`fp4`). Unknown classes and formats are
+    /// rejected with the supported-value list in the error.
+    pub fn parse(s: &str, base: PrecisionPolicy) -> Result<Self, String> {
+        if let Some(p) = Self::preset(s) {
+            return Ok(p);
+        }
+        if s.trim().is_empty() {
+            return Err(format!(
+                "--policy must be a preset ({}) or a class=format list",
+                PRESET_NAMES.join("|")
+            ));
+        }
+        let mut p = base;
+        for part in s.split(',') {
+            let Some((class, val)) = part.split_once('=') else {
+                return Err(format!(
+                    "bad --policy entry '{part}' (expected class=format, e.g. ffn=fp4, \
+                     or a preset: {})",
+                    PRESET_NAMES.join("|")
+                ));
+            };
+            let classes: &[LayerClass] = match class {
+                "qkv" => &[LayerClass::Qkv],
+                "scores" => &[LayerClass::AttnScores],
+                "ctx" => &[LayerClass::AttnContext],
+                "proj" => &[LayerClass::AttnOut],
+                "fc1" => &[LayerClass::MlpUp],
+                "fc2" => &[LayerClass::MlpDown],
+                "ffn" => &[LayerClass::MlpUp, LayerClass::MlpDown],
+                "attn" => &[LayerClass::AttnScores, LayerClass::AttnContext],
+                "linears" => {
+                    &[LayerClass::Qkv, LayerClass::AttnOut, LayerClass::MlpUp, LayerClass::MlpDown]
+                }
+                "all" => &LayerClass::ALL,
+                other => {
+                    return Err(format!(
+                        "unknown layer class '{other}' in --policy; supported classes: \
+                         qkv, scores, ctx, proj, fc1, fc2 (groups: ffn, attn, linears, all)"
+                    ));
+                }
+            };
+            let prec = match val {
+                "fp32" => LayerPrecision::Fp32,
+                "fp8" => LayerPrecision::Mx(ElemFormat::E4M3),
+                "fp6" => LayerPrecision::Mx(ElemFormat::E3M2),
+                "fp4" => LayerPrecision::Mx(ElemFormat::E2M1),
+                other => match ElemFormat::parse(other) {
+                    Some(f) => LayerPrecision::Mx(f),
+                    None => {
+                        return Err(format!(
+                            "unknown format '{other}' in --policy; supported formats: \
+                             e5m2, e4m3, e3m2, e2m3, e2m1, int8, fp32 \
+                             (aliases: fp8, fp6, fp4)"
+                        ));
+                    }
+                },
+            };
+            for &c in classes {
+                p.set(c, prec);
+            }
+        }
+        Ok(p)
+    }
+
+    /// Human-readable name: the preset name when the policy matches
+    /// one, the full `class=format` list otherwise.
+    pub fn describe(&self) -> String {
+        for name in PRESET_NAMES {
+            if Self::preset(name) == Some(*self) {
+                return name.to_string();
+            }
+        }
+        LayerClass::ALL
+            .iter()
+            .map(|&c| format!("{}={}", c.key(), self.get(c)))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// The layer classes whose staged weights must be requantized and
+    /// restaged when a fabric resident on `from` (None = cold) starts
+    /// serving this policy: every weighted MX layer whose format
+    /// `from` did not already have staged. The attention GEMMs carry
+    /// no weights and never contribute (their operands are quantized
+    /// per request).
+    pub fn reload_classes_from(&self, from: Option<&PrecisionPolicy>) -> Vec<LayerClass> {
+        LayerClass::ALL
+            .iter()
+            .copied()
+            .filter(|&c| c.weight_name().is_some())
+            .filter(|&c| match self.get(c) {
+                LayerPrecision::Fp32 => false,
+                LayerPrecision::Mx(_) => match from {
+                    None => true,
+                    Some(prev) => prev.get(c) != self.get(c),
+                },
+            })
+            .collect()
+    }
+}
+
+impl std::fmt::Display for PrecisionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_describe_roundtrip() {
+        for name in PRESET_NAMES {
+            let p = PrecisionPolicy::preset(name).unwrap();
+            assert_eq!(p.describe(), name, "preset {name} must describe as itself");
+        }
+        assert!(PrecisionPolicy::preset("all-bf16").is_none());
+        // all-fp8 is exactly the uniform E4M3 recipe
+        assert_eq!(
+            PrecisionPolicy::preset("all-fp8").unwrap(),
+            PrecisionPolicy::uniform(ElemFormat::E4M3)
+        );
+        assert_eq!(
+            PrecisionPolicy::preset("all-fp8").unwrap().uniform_fmt(),
+            Some(ElemFormat::E4M3)
+        );
+        assert_eq!(PrecisionPolicy::preset("fp4-ffn").unwrap().uniform_fmt(), None);
+    }
+
+    #[test]
+    fn parse_presets_custom_lists_and_aliases() {
+        let base = PrecisionPolicy::uniform(ElemFormat::E4M3);
+        assert_eq!(
+            PrecisionPolicy::parse("fp4-ffn", base).unwrap(),
+            PrecisionPolicy::preset("fp4-ffn").unwrap()
+        );
+        // the issue's example syntax
+        let p = PrecisionPolicy::parse("qkv=e4m3,ffn=fp4", base).unwrap();
+        assert_eq!(p, PrecisionPolicy::preset("fp4-ffn").unwrap());
+        // group + explicit override, attention quantization
+        let p = PrecisionPolicy::parse("linears=int8,attn=e4m3", base).unwrap();
+        assert_eq!(p.get(LayerClass::MlpDown), LayerPrecision::Mx(ElemFormat::Int8));
+        assert_eq!(p.get(LayerClass::AttnScores), LayerPrecision::Mx(ElemFormat::E4M3));
+        // fp32 demotes a layer back to host math
+        let p = PrecisionPolicy::parse("fc2=fp32", base).unwrap();
+        assert_eq!(p.get(LayerClass::MlpDown), LayerPrecision::Fp32);
+        assert_eq!(p.get(LayerClass::MlpUp), LayerPrecision::Mx(ElemFormat::E4M3));
+    }
+
+    #[test]
+    fn parse_errors_list_supported_values() {
+        let base = PrecisionPolicy::uniform(ElemFormat::E4M3);
+        let e = PrecisionPolicy::parse("mlp=fp4", base).unwrap_err();
+        assert!(e.contains("unknown layer class 'mlp'"), "{e}");
+        for key in ["qkv", "scores", "ctx", "proj", "fc1", "fc2", "ffn"] {
+            assert!(e.contains(key), "error must list '{key}': {e}");
+        }
+        let e = PrecisionPolicy::parse("ffn=fp64", base).unwrap_err();
+        assert!(e.contains("unknown format 'fp64'"), "{e}");
+        assert!(e.contains("e2m1") && e.contains("fp32"), "{e}");
+        assert!(PrecisionPolicy::parse("ffn", base).is_err());
+        assert!(PrecisionPolicy::parse("", base).is_err());
+    }
+
+    #[test]
+    fn reload_classes_account_per_layer() {
+        let fp8 = PrecisionPolicy::preset("all-fp8").unwrap();
+        let ffn4 = PrecisionPolicy::preset("fp4-ffn").unwrap();
+        // cold start: every weighted MX layer
+        assert_eq!(fp8.reload_classes_from(None).len(), 4);
+        // all-fp8 -> fp4-ffn: only the two FFN layers changed format
+        assert_eq!(
+            ffn4.reload_classes_from(Some(&fp8)),
+            vec![LayerClass::MlpUp, LayerClass::MlpDown]
+        );
+        // same policy: nothing to reload
+        assert!(ffn4.reload_classes_from(Some(&ffn4)).is_empty());
+        // uniform -> uniform at another format: all four
+        let fp4 = PrecisionPolicy::uniform(ElemFormat::E2M1);
+        assert_eq!(fp4.reload_classes_from(Some(&fp8)).len(), 4);
+        // attention-only quantization adds no reloadable weights
+        let mut attn = PrecisionPolicy::fp32_reference();
+        attn.set(LayerClass::AttnScores, LayerPrecision::Mx(ElemFormat::E4M3));
+        assert!(attn.reload_classes_from(None).is_empty());
+    }
+}

@@ -9,9 +9,15 @@
 //! mixed-format, bursty, open-loop traffic its fabric utilization and
 //! goodput collapse. This subsystem replaces it on the serving path:
 //!
-//! * **per-class queues** ([`queue`]) — one FIFO per (element format,
-//!   priority) class, so scheduling can keep a fabric's resident
-//!   format hot instead of requantizing weights on every transition;
+//! * **per-class queues** ([`queue`]) — one FIFO per (precision
+//!   policy, priority) class (uniform per-format policies for
+//!   format-mix traces), so scheduling can keep a fabric's resident
+//!   weights hot instead of requantizing on every transition; since
+//!   DESIGN.md §13 requests carry a full per-layer
+//!   [`PrecisionPolicy`], and both the service-time and the
+//!   format-switch reload accounting are per-layer
+//!   ([`CostModel::svc_policy_ticks`],
+//!   [`CostModel::reload_ticks_between`]);
 //! * **admission control** ([`admission`]) — bounded queue depth plus
 //!   an SLO-attainability check; rejects carry a reason and are never
 //!   silently dropped;
@@ -48,11 +54,14 @@ pub use admission::{AdmissionController, RejectReason};
 pub use metrics::{latency_percentiles, Percentiles};
 pub use scheduler::{Rejected, Served};
 
-use crate::coordinator::ShardedExecutor;
 use crate::formats::ElemFormat;
+use crate::model::{GraphExecutor, LayerClass, LayerPrecision, PrecisionPolicy};
 use crate::scaleout::pool::FabricLease;
 use crate::workload::arrivals::{generate_trace, Arrival, ArrivalKind, ArrivalSpec};
-use crate::workload::{analytic_sharded_cost, generate_input, DeitConfig};
+use crate::workload::{
+    analytic_policy_cycles_from, analytic_sharded_cost, generate_input, layer_flops_table,
+    DeitConfig,
+};
 use std::collections::HashMap;
 
 /// Simulated cluster cycles per scheduler tick: 1 tick = 1 µs of
@@ -230,22 +239,40 @@ impl ServeConfig {
     }
 }
 
-/// Per-format service costs on one fabric, in scheduler ticks —
+/// Per-policy service costs on one fabric, in scheduler ticks —
 /// derived from the analytic cost model of `workload/` so the
 /// scheduler sees the real per-format throughput differences (MXFP4
 /// requests cost half the ticks of byte-wide formats) instead of an
-/// average.
+/// average. Since DESIGN.md §13 both halves are **per-layer**: a
+/// request's service time sums its policy's layers at each layer's
+/// format, and a policy transition reloads only the weights whose
+/// format actually changed ([`Self::reload_ticks_between`]).
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
     svc: [u64; NUM_FORMATS],
-    /// Format-switch cost: requantize + restage every weight element
-    /// ([`QUANT_CYCLES_PER_ELEM`] per element per core across the
-    /// fabric's clusters).
+    /// Full-machine format-switch cost (every weighted layer
+    /// requantized and restaged at [`QUANT_CYCLES_PER_ELEM`] per
+    /// element per core across the fabric's clusters) — the cost of a
+    /// cold start or a transition between two uniform policies of
+    /// different formats. Partial transitions cost less; see
+    /// [`Self::reload_ticks_between`].
     pub reload_ticks: u64,
     /// Fixed per-batch staging overhead ([`SETUP_TICKS`]).
     pub setup_ticks: u64,
     /// Clusters backing the fabric this table was built for.
     pub clusters_per_fabric: usize,
+    cores_per_cluster: usize,
+    util: f64,
+    /// Strong-scaling efficiency applied to multi-cluster fabrics
+    /// (1.0 for single-cluster fabrics).
+    eff: f64,
+    /// Per-layer-class MX FLOPs (`workload::layer_flops_table`),
+    /// precomputed so per-arrival policy costing allocates nothing.
+    layer_flops: [u64; 6],
+    /// Per-layer-class weight elements
+    /// (`DeitConfig::layer_weight_elems`), precomputed for the same
+    /// reason on the reload path.
+    layer_welems: [u64; 6],
 }
 
 impl CostModel {
@@ -274,18 +301,88 @@ impl CostModel {
             reload_ticks: ((reload_cycles / CYCLES_PER_TICK as f64).ceil() as u64).max(1),
             setup_ticks: SETUP_TICKS,
             clusters_per_fabric: cpf,
+            cores_per_cluster: cfg.cores_per_cluster,
+            util: cfg.util,
+            eff,
+            layer_flops: layer_flops_table(&cfg.model),
+            layer_welems: LayerClass::ALL.map(|c| cfg.model.layer_weight_elems(c)),
         }
     }
 
-    /// Service ticks of one `fmt` request on one fabric.
+    /// Service ticks of one uniform-`fmt` request on one fabric.
     pub fn svc_ticks(&self, fmt: ElemFormat) -> u64 {
         self.svc[fmt.csr_code() as usize]
+    }
+
+    /// Service ticks of one request under `policy`: the per-layer
+    /// analytic cost ([`analytic_policy_cycles_from`], over the
+    /// precomputed layer-FLOPs table — no allocation per call) sharded
+    /// over the fabric. Uniform policies hit the precomputed
+    /// per-format table, so format-mix traces cost exactly what they
+    /// did before policies existed.
+    pub fn svc_policy_ticks(&self, policy: &PrecisionPolicy) -> u64 {
+        if let Some(fmt) = policy.uniform_fmt() {
+            return self.svc_ticks(fmt);
+        }
+        let serial = analytic_policy_cycles_from(
+            &self.layer_flops,
+            policy,
+            self.cores_per_cluster,
+            self.util,
+        );
+        let wall = if self.clusters_per_fabric > 1 {
+            ((serial as f64) / (self.clusters_per_fabric as f64 * self.eff)).ceil() as u64
+        } else {
+            serial
+        };
+        wall.div_ceil(CYCLES_PER_TICK).max(1)
+    }
+
+    /// Ticks to requantize and restage the weights a fabric resident
+    /// on `from` (None = cold) is missing for `to`: per-layer
+    /// accounting — only the weighted layers whose element format
+    /// differs contribute ([`PrecisionPolicy::reload_classes_from`]),
+    /// so e.g. `all-fp8 → fp4-ffn` pays for the two FFN matrices only.
+    /// Returns 0 when nothing needs restaging.
+    pub fn reload_ticks_between(
+        &self,
+        from: Option<&PrecisionPolicy>,
+        to: &PrecisionPolicy,
+    ) -> u64 {
+        // Same per-layer rule as `PrecisionPolicy::reload_classes_from`
+        // (which the policy tests pin), inlined over the precomputed
+        // weight-elems table so the admission path allocates nothing.
+        let mut elems = 0u64;
+        for class in LayerClass::ALL {
+            if let LayerPrecision::Mx(_) = to.get(class) {
+                let stale = match from {
+                    None => true,
+                    Some(prev) => prev.get(class) != to.get(class),
+                };
+                if stale {
+                    elems += self.layer_welems[class.index()];
+                }
+            }
+        }
+        if elems == 0 {
+            return 0;
+        }
+        let cycles = (elems * QUANT_CYCLES_PER_ELEM) as f64
+            / (self.cores_per_cluster as f64 * self.clusters_per_fabric as f64 * self.eff);
+        ((cycles / CYCLES_PER_TICK as f64).ceil() as u64).max(1)
     }
 
     /// Worst-case cost of admitting one `fmt` request: a fresh batch
     /// on a cold-format fabric (setup + reload + service).
     pub fn worst_case_request_ticks(&self, fmt: ElemFormat) -> u64 {
-        self.setup_ticks + self.reload_ticks + self.svc_ticks(fmt)
+        self.worst_case_policy_ticks(&PrecisionPolicy::uniform(fmt))
+    }
+
+    /// Worst-case cost of admitting one `policy` request: a fresh
+    /// batch on a cold fabric (setup + full per-layer reload +
+    /// service).
+    pub fn worst_case_policy_ticks(&self, policy: &PrecisionPolicy) -> u64 {
+        self.setup_ticks + self.reload_ticks_between(None, policy) + self.svc_policy_ticks(policy)
     }
 
     /// The auto-SLO: 4 × the worst-case single-request cost of the
@@ -314,13 +411,39 @@ pub fn resolve_slo_ticks(cfg: &ServeConfig) -> u64 {
 /// offered-load sweeps of `report::serving_sweep` and the serving
 /// bench are scaled against.
 pub fn estimated_capacity_per_ktick(cfg: &ServeConfig, mix: &[(ElemFormat, f64)]) -> f64 {
+    let policies: Vec<(PrecisionPolicy, f64)> =
+        mix.iter().map(|&(f, w)| (PrecisionPolicy::uniform(f), w)).collect();
+    estimated_capacity_for_policies(cfg, &policies)
+}
+
+/// [`estimated_capacity_per_ktick`] for a weighted mix of per-layer
+/// precision policies (the format-mix version maps each format to its
+/// uniform policy and delegates here).
+pub fn estimated_capacity_for_policies(
+    cfg: &ServeConfig,
+    mix: &[(PrecisionPolicy, f64)],
+) -> f64 {
     assert!(!mix.is_empty(), "traffic mix must not be empty");
     let c = ServeConfig { scheduler: SchedulerKind::Continuous, ..*cfg };
     let costs = CostModel::build(&c);
     let wsum: f64 = mix.iter().map(|&(_, w)| w).sum();
-    let mean_svc: f64 =
-        mix.iter().map(|&(f, w)| w * costs.svc_ticks(f) as f64).sum::<f64>() / wsum;
+    let mean_svc: f64 = mix
+        .iter()
+        .map(|(p, w)| w * costs.svc_policy_ticks(p) as f64)
+        .sum::<f64>()
+        / wsum;
     c.fabric_count() as f64 * 1000.0 / mean_svc
+}
+
+/// The auto-SLO for a machine serving `policy` traffic: 4 × the
+/// worst-case single-request cost of that policy (cold fabric: setup +
+/// full per-layer reload + service). The format-mix auto-SLO
+/// ([`CostModel::auto_slo_ticks`]) covers the uniform per-format
+/// envelope; a custom policy — which may quantize the attention GEMMs
+/// and cost more than any uniform format — gets its own bound here.
+pub fn auto_slo_for_policy(cfg: &ServeConfig, policy: &PrecisionPolicy) -> u64 {
+    let costs = CostModel::build(cfg);
+    4 * costs.worst_case_policy_ticks(policy)
 }
 
 /// Run the configured scheduler over an arrival trace. The outcome is
@@ -362,35 +485,42 @@ pub fn batches_in_dispatch_order(outcome: &scheduler::ServeOutcome) -> Vec<Vec<S
     groups
 }
 
-/// Execute every served request of `outcome` through per-format
+/// Execute every served request of `outcome` through per-policy
 /// executors and return `(request id, output)` pairs sorted by id.
 ///
 /// Batches are executed as the scheduler formed them — grouped by
-/// (fabric, batch; mixed-format barrier batches are sub-split per
-/// executor), with batches of the same format running *concurrently*
-/// on disjoint fabrics via [`ShardedExecutor::forward_concurrent`] —
+/// (fabric, batch; mixed-policy barrier batches are sub-split per
+/// executor), with batches of the same policy running *concurrently*
+/// on disjoint fabrics via [`GraphExecutor::forward_concurrent`] —
 /// so this is also the proof that batch composition and placement
 /// cannot change results: every output is a pure function of the
 /// request id alone. Host concurrency is bounded by the outcome's
 /// fabric count (only that many batches were ever in flight at once).
 ///
-/// `execs` must contain an executor for every format in the outcome
+/// `execs` must contain an executor for every policy in the outcome
 /// (panics otherwise, as does a shape-invalid input).
 pub fn execute_outcome(
     outcome: &scheduler::ServeOutcome,
     model: &DeitConfig,
-    execs: &HashMap<ElemFormat, ShardedExecutor>,
+    execs: &HashMap<PrecisionPolicy, GraphExecutor>,
     input_seed_base: u64,
 ) -> Vec<(u64, Vec<f32>)> {
     let concurrency = outcome.fabric_busy_ticks.len().max(1);
     let groups = batches_in_dispatch_order(outcome);
+    // Distinct policies in first-served order (deterministic).
+    let mut policies: Vec<PrecisionPolicy> = Vec::new();
+    for r in &outcome.served {
+        if !policies.contains(&r.policy) {
+            policies.push(r.policy);
+        }
+    }
     let mut results: Vec<(u64, Vec<f32>)> = Vec::with_capacity(outcome.served.len());
-    for fmt in ElemFormat::ALL {
-        // This format's slice of each batch, in dispatch order.
+    for policy in policies {
+        // This policy's slice of each batch, in dispatch order.
         let mut batches: Vec<Vec<Vec<f32>>> = Vec::new();
         let mut ids: Vec<Vec<u64>> = Vec::new();
         for group in &groups {
-            let members: Vec<&Served> = group.iter().filter(|r| r.fmt == fmt).collect();
+            let members: Vec<&Served> = group.iter().filter(|r| r.policy == policy).collect();
             if members.is_empty() {
                 continue;
             }
@@ -402,8 +532,8 @@ pub fn execute_outcome(
             continue;
         }
         let exec = execs
-            .get(&fmt)
-            .unwrap_or_else(|| panic!("no executor registered for format {fmt}"));
+            .get(&policy)
+            .unwrap_or_else(|| panic!("no executor registered for policy {policy}"));
         // Bound host threads to the machine's fabric count.
         for (batch_chunk, id_chunk) in batches.chunks(concurrency).zip(ids.chunks(concurrency)) {
             let outputs = exec.forward_concurrent(batch_chunk);
@@ -419,7 +549,7 @@ pub fn execute_outcome(
 }
 
 /// Run the *same* trace through both schedulers, execute every served
-/// request with real per-format [`ShardedExecutor`]s, and assert that
+/// request with real per-policy [`GraphExecutor`]s, and assert that
 /// each request served by both produced bit-identical output — the
 /// acceptance invariant that continuous batching reorders *time*, not
 /// *results*. Returns the number of requests compared (panics on any
@@ -450,11 +580,13 @@ pub fn verify_schedulers_bit_identical(
     let barr = simulate(&ServeConfig { scheduler: SchedulerKind::Barrier, ..base }, &trace);
 
     let params = crate::workload::generate_params(model, 42);
-    let mut execs: HashMap<ElemFormat, ShardedExecutor> = HashMap::new();
+    let mut execs: HashMap<PrecisionPolicy, GraphExecutor> = HashMap::new();
     for &(fmt, _) in mix {
-        execs
-            .entry(fmt)
-            .or_insert_with(|| ShardedExecutor::new(DeitConfig { fmt, ..*model }, params.clone()));
+        let policy = PrecisionPolicy::uniform(fmt);
+        execs.entry(policy).or_insert_with(|| {
+            GraphExecutor::new(DeitConfig { fmt, ..*model }, policy, params.clone())
+                .expect("uniform policy")
+        });
     }
     let out_c = execute_outcome(&cont, model, &execs, INPUT_SEED_BASE);
     let out_b = execute_outcome(&barr, model, &execs, INPUT_SEED_BASE);
@@ -560,6 +692,102 @@ mod tests {
         // reload is a real cost but smaller than serving one request
         assert!(costs.reload_ticks > 0 && costs.reload_ticks < f8);
         assert!(costs.auto_slo_ticks() > costs.worst_case_request_ticks(ElemFormat::E4M3));
+    }
+
+    #[test]
+    fn policy_costs_degenerate_to_format_costs_for_uniform_policies() {
+        let cfg = ServeConfig::default();
+        let costs = CostModel::build(&cfg);
+        for fmt in ElemFormat::ALL {
+            let p = PrecisionPolicy::uniform(fmt);
+            assert_eq!(costs.svc_policy_ticks(&p), costs.svc_ticks(fmt), "{fmt}");
+            assert_eq!(
+                costs.worst_case_policy_ticks(&p),
+                costs.worst_case_request_ticks(fmt),
+                "{fmt}"
+            );
+            // cold reload of a uniform policy = the full-machine reload
+            assert_eq!(costs.reload_ticks_between(None, &p), costs.reload_ticks, "{fmt}");
+        }
+        // the same invariants hold on a multi-cluster fabric
+        let wide = ServeConfig { clusters: 8, fabrics: 2, ..cfg };
+        let wcosts = CostModel::build(&wide);
+        let p = PrecisionPolicy::uniform(ElemFormat::E4M3);
+        assert_eq!(wcosts.svc_policy_ticks(&p), wcosts.svc_ticks(ElemFormat::E4M3));
+        assert_eq!(wcosts.reload_ticks_between(None, &p), wcosts.reload_ticks);
+    }
+
+    #[test]
+    fn reload_ticks_derive_from_the_policy_class_rule_property() {
+        // The inline per-layer rule in `reload_ticks_between` must
+        // agree with `PrecisionPolicy::reload_classes_from` for
+        // arbitrary (from, to) policy pairs — partial transitions
+        // included — so the serving bill cannot drift from the policy
+        // semantics the model layer documents and tests.
+        use crate::model::{LayerClass, LayerPrecision};
+        let cfg = ServeConfig::default(); // 1-cluster fabrics: eff 1.0
+        let costs = CostModel::build(&cfg);
+        let random_policy = |rng: &mut crate::rng::XorShift| {
+            let mut p = PrecisionPolicy::fp32_reference();
+            for class in LayerClass::ALL {
+                match rng.below(8) {
+                    0 | 1 => {} // stays Fp32
+                    i => p.set(class, LayerPrecision::Mx(ElemFormat::ALL[(i % 6) as usize])),
+                }
+            }
+            p
+        };
+        crate::rng::property_cases(40, 0x2E10AD, |rng| {
+            let to = random_policy(rng);
+            let from = if rng.bool() { Some(random_policy(rng)) } else { None };
+            let elems: u64 = to
+                .reload_classes_from(from.as_ref())
+                .iter()
+                .map(|&c| cfg.model.layer_weight_elems(c))
+                .sum();
+            let ticks = costs.reload_ticks_between(from.as_ref(), &to);
+            if elems == 0 {
+                assert_eq!(ticks, 0, "{from:?} -> {to}: no stale weights, no reload");
+            } else {
+                // the documented formula on the class set the policy
+                // layer derives (cores = 8, cpf = 1, eff = 1.0 here)
+                let cycles =
+                    (elems * QUANT_CYCLES_PER_ELEM) as f64 / cfg.cores_per_cluster as f64;
+                let want = ((cycles / CYCLES_PER_TICK as f64).ceil() as u64).max(1);
+                assert_eq!(ticks, want, "{from:?} -> {to}");
+            }
+        });
+    }
+
+    #[test]
+    fn policy_capacity_and_auto_slo_track_the_mixed_cost() {
+        let cfg = ServeConfig::default();
+        let fp8 = PrecisionPolicy::preset("all-fp8").unwrap();
+        let ffn4 = PrecisionPolicy::preset("fp4-ffn").unwrap();
+        let c8 = estimated_capacity_for_policies(&cfg, &[(fp8, 1.0)]);
+        let cm = estimated_capacity_for_policies(&cfg, &[(ffn4, 1.0)]);
+        assert!(cm > c8 * 1.2, "fp4-ffn capacity {cm} vs all-fp8 {c8}");
+        // format-mix capacity is the uniform-policy capacity
+        assert_eq!(
+            estimated_capacity_per_ktick(&cfg, &[(ElemFormat::E4M3, 1.0)]),
+            c8
+        );
+        let slo8 = auto_slo_for_policy(&cfg, &fp8);
+        let slom = auto_slo_for_policy(&cfg, &ffn4);
+        assert!(slom < slo8, "cheaper policy must get a tighter auto-SLO");
+        // a policy that also quantizes attention costs more than its
+        // uniform base (more MX FLOPs on the fabric)
+        let mut heavy = fp8;
+        heavy.set(
+            crate::model::LayerClass::AttnScores,
+            crate::model::LayerPrecision::Mx(ElemFormat::E4M3),
+        );
+        heavy.set(
+            crate::model::LayerClass::AttnContext,
+            crate::model::LayerPrecision::Mx(ElemFormat::E4M3),
+        );
+        let costs = CostModel::build(&cfg);
+        assert!(costs.svc_policy_ticks(&heavy) > costs.svc_policy_ticks(&fp8));
     }
 
     #[test]

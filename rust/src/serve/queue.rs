@@ -1,10 +1,10 @@
-//! Per-(format, priority) class queues for the continuous batcher.
+//! Per-(policy, priority) class queues for the continuous batcher.
 //!
 //! The seed coordinator kept one FIFO and therefore interleaved
-//! element formats in dispatch order, forcing the fabric to requantize
-//! and restage weights on every transition (DESIGN.md §12). The
-//! serving engine instead queues each *class* — a (format, priority)
-//! pair — separately:
+//! precision classes in dispatch order, forcing the fabric to
+//! requantize and restage weights on every transition (DESIGN.md §12).
+//! The serving engine instead queues each *class* — a (precision
+//! policy, priority) pair — separately:
 //!
 //! * order **within** a class is strictly FIFO (arrival order); the
 //!   scheduler can only pop from a class head, so admission can never
@@ -13,48 +13,42 @@
 //! * order **across** classes is a scheduling decision: High-priority
 //!   classes are picked strictly before Normal ones, and within a
 //!   priority the class with the oldest head request wins (FIFO-fair
-//!   across formats, so no format starves).
+//!   across classes, so no policy starves).
+//!
+//! Before DESIGN.md §13 the class key was the request's element
+//! format; it is now the request's full [`PrecisionPolicy`]. Traces
+//! generated from a format mix carry uniform per-format policies, so
+//! for them the class structure (and every scheduling decision) is
+//! unchanged — two requests share a class exactly when they share a
+//! format. Policy classes are kept in first-seen order and ties break
+//! on (head arrival tick, id), which is total because ids are unique,
+//! so scheduling stays deterministic.
 
-use crate::formats::ElemFormat;
+use crate::model::PrecisionPolicy;
 use crate::workload::arrivals::{Arrival, Priority};
 use std::collections::VecDeque;
 
-/// Number of distinct (format, priority) classes.
-const NUM_CLASSES: usize = ElemFormat::ALL.len() * Priority::ALL.len();
-
-/// A (format, priority) scheduling class.
+/// A (precision policy, priority) scheduling class.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ClassId {
-    /// Element format of every request in the class.
-    pub fmt: ElemFormat,
+    /// Precision policy every request in the class carries.
+    pub policy: PrecisionPolicy,
     /// Priority of every request in the class.
     pub priority: Priority,
 }
 
-impl ClassId {
-    /// Dense table index (priority-major, format by CSR code).
-    fn index(self) -> usize {
-        self.priority.index() * ElemFormat::ALL.len() + self.fmt.csr_code() as usize
-    }
-}
-
-/// The class-queue set: one FIFO per (format, priority) class.
-#[derive(Clone, Debug)]
+/// The class-queue set: one FIFO per (policy, priority) class, created
+/// on first use and kept in first-seen order.
+#[derive(Clone, Debug, Default)]
 pub struct ClassQueues {
-    queues: Vec<VecDeque<Arrival>>,
+    queues: Vec<(ClassId, VecDeque<Arrival>)>,
     len: usize,
 }
 
-impl Default for ClassQueues {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
 impl ClassQueues {
-    /// Empty queue set (all classes present, all empty).
+    /// Empty queue set.
     pub fn new() -> Self {
-        ClassQueues { queues: (0..NUM_CLASSES).map(|_| VecDeque::new()).collect(), len: 0 }
+        ClassQueues { queues: Vec::new(), len: 0 }
     }
 
     /// Total queued requests across all classes.
@@ -69,20 +63,29 @@ impl ClassQueues {
 
     /// Append `req` to the tail of its class (FIFO within class).
     pub fn push(&mut self, req: Arrival) {
-        let class = ClassId { fmt: req.fmt, priority: req.priority };
-        self.queues[class.index()].push_back(req);
+        let class = ClassId { policy: req.policy, priority: req.priority };
+        let idx = match self.queues.iter().position(|(c, _)| *c == class) {
+            Some(i) => i,
+            None => {
+                self.queues.push((class, VecDeque::new()));
+                self.queues.len() - 1
+            }
+        };
+        self.queues[idx].1.push_back(req);
         self.len += 1;
     }
 
-    /// Pop the head of the oldest-head class of `fmt`, High priority
-    /// first — the splice path: a fabric whose resident format is
-    /// `fmt` extends its in-flight batch without a reload.
-    pub fn pop_fmt(&mut self, fmt: ElemFormat) -> Option<Arrival> {
+    /// Pop the head of `policy`'s oldest-head class, High priority
+    /// first — the splice path: a fabric resident on `policy` extends
+    /// its in-flight batch without a reload.
+    pub fn pop_policy(&mut self, policy: &PrecisionPolicy) -> Option<Arrival> {
         for priority in Priority::ALL {
-            let idx = ClassId { fmt, priority }.index();
-            if let Some(req) = self.queues[idx].pop_front() {
-                self.len -= 1;
-                return Some(req);
+            let class = ClassId { policy: *policy, priority };
+            if let Some((_, q)) = self.queues.iter_mut().find(|(c, _)| *c == class) {
+                if let Some(req) = q.pop_front() {
+                    self.len -= 1;
+                    return Some(req);
+                }
             }
         }
         None
@@ -90,17 +93,18 @@ impl ClassQueues {
 
     /// The class an idle fabric should serve next: the non-empty class
     /// with the highest priority, ties broken by the oldest head
-    /// request (then by format order, for determinism). `None` when
-    /// everything is empty.
+    /// request (then by head id — total, since ids are unique). `None`
+    /// when everything is empty.
     pub fn pick_class(&self) -> Option<ClassId> {
         for priority in Priority::ALL {
             let mut best: Option<(u64, u64, ClassId)> = None;
-            for fmt in ElemFormat::ALL {
-                let class = ClassId { fmt, priority };
-                if let Some(head) = self.queues[class.index()].front() {
-                    let key = (head.tick, head.id, class);
+            for (class, q) in &self.queues {
+                if class.priority != priority {
+                    continue;
+                }
+                if let Some(head) = q.front() {
                     if best.map(|(t, i, _)| (head.tick, head.id) < (t, i)).unwrap_or(true) {
-                        best = Some(key);
+                        best = Some((head.tick, head.id, *class));
                     }
                 }
             }
@@ -113,30 +117,32 @@ impl ClassQueues {
 
     /// Arrival tick of the oldest queued request (across classes).
     pub fn oldest_tick(&self) -> Option<u64> {
-        self.queues.iter().filter_map(|q| q.front().map(|r| r.tick)).min()
+        self.queues.iter().filter_map(|(_, q)| q.front().map(|r| r.tick)).min()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::formats::ElemFormat;
 
     fn req(id: u64, tick: u64, fmt: ElemFormat, priority: Priority) -> Arrival {
-        Arrival { id, tick, fmt, priority }
+        Arrival { id, tick, fmt, priority, policy: PrecisionPolicy::uniform(fmt) }
     }
 
     #[test]
     fn fifo_within_class_and_priority_between_classes() {
+        let e4 = PrecisionPolicy::uniform(ElemFormat::E4M3);
         let mut q = ClassQueues::new();
         q.push(req(0, 5, ElemFormat::E4M3, Priority::Normal));
         q.push(req(1, 6, ElemFormat::E4M3, Priority::Normal));
         q.push(req(2, 7, ElemFormat::E4M3, Priority::High));
         assert_eq!(q.len(), 3);
         // splice order: High head first, then the Normal FIFO
-        assert_eq!(q.pop_fmt(ElemFormat::E4M3).unwrap().id, 2);
-        assert_eq!(q.pop_fmt(ElemFormat::E4M3).unwrap().id, 0);
-        assert_eq!(q.pop_fmt(ElemFormat::E4M3).unwrap().id, 1);
-        assert!(q.pop_fmt(ElemFormat::E4M3).is_none());
+        assert_eq!(q.pop_policy(&e4).unwrap().id, 2);
+        assert_eq!(q.pop_policy(&e4).unwrap().id, 0);
+        assert_eq!(q.pop_policy(&e4).unwrap().id, 1);
+        assert!(q.pop_policy(&e4).is_none());
         assert!(q.is_empty());
     }
 
@@ -146,13 +152,37 @@ mod tests {
         q.push(req(0, 1, ElemFormat::E4M3, Priority::Normal)); // oldest overall
         q.push(req(1, 9, ElemFormat::E2M1, Priority::High));
         let c = q.pick_class().unwrap();
-        assert_eq!((c.fmt, c.priority), (ElemFormat::E2M1, Priority::High));
-        q.pop_fmt(ElemFormat::E2M1).unwrap();
+        assert_eq!(
+            (c.policy, c.priority),
+            (PrecisionPolicy::uniform(ElemFormat::E2M1), Priority::High)
+        );
+        q.pop_policy(&c.policy).unwrap();
         // now the oldest head wins among Normal classes
         q.push(req(2, 4, ElemFormat::Int8, Priority::Normal));
         let c = q.pick_class().unwrap();
-        assert_eq!((c.fmt, c.priority), (ElemFormat::E4M3, Priority::Normal));
+        assert_eq!(
+            (c.policy, c.priority),
+            (PrecisionPolicy::uniform(ElemFormat::E4M3), Priority::Normal)
+        );
         assert_eq!(q.oldest_tick(), Some(1));
+    }
+
+    #[test]
+    fn distinct_policies_with_one_format_are_distinct_classes() {
+        // fp4-ffn and all-fp8 must not share a FIFO even though both
+        // could advertise the same label format.
+        let fp8 = PrecisionPolicy::preset("all-fp8").unwrap();
+        let ffn4 = PrecisionPolicy::preset("fp4-ffn").unwrap();
+        let mut q = ClassQueues::new();
+        let mut a = req(0, 0, ElemFormat::E4M3, Priority::Normal);
+        a.policy = fp8;
+        let mut b = req(1, 1, ElemFormat::E4M3, Priority::Normal);
+        b.policy = ffn4;
+        q.push(a);
+        q.push(b);
+        assert_eq!(q.pop_policy(&ffn4).unwrap().id, 1);
+        assert_eq!(q.pop_policy(&fp8).unwrap().id, 0);
+        assert!(q.is_empty());
     }
 
     #[test]

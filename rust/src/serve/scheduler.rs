@@ -35,6 +35,7 @@ use super::metrics::{latency_percentiles, Percentiles};
 use super::queue::ClassQueues;
 use super::{CostModel, SchedulerKind, ServeConfig};
 use crate::formats::ElemFormat;
+use crate::model::PrecisionPolicy;
 use crate::workload::arrivals::{Arrival, Priority};
 use std::collections::VecDeque;
 
@@ -44,8 +45,11 @@ use std::collections::VecDeque;
 pub struct Served {
     /// Trace id of the request.
     pub id: u64,
-    /// Element format it was served at.
+    /// Element format it advertised (the traffic-mix label).
     pub fmt: ElemFormat,
+    /// Per-layer precision policy it was served under (DESIGN.md §13;
+    /// uniform-per-format for format-mix traces).
+    pub policy: PrecisionPolicy,
     /// Scheduling class priority.
     pub priority: Priority,
     /// When it arrived (and was admitted).
@@ -193,7 +197,7 @@ pub fn run_barrier(cfg: &ServeConfig, costs: &CostModel, trace: &[Arrival]) -> S
     let mut fifo: VecDeque<Arrival> = VecDeque::new();
     let mut served: Vec<Served> = Vec::new();
     let mut rejected: Vec<Rejected> = Vec::new();
-    let mut resident: Option<ElemFormat> = None;
+    let mut resident: Option<PrecisionPolicy> = None;
     let mut free_at = 0u64;
     let mut busy = 0u64;
     let mut batches = 0u64;
@@ -221,16 +225,19 @@ pub fn run_barrier(cfg: &ServeConfig, costs: &CostModel, trace: &[Arrival]) -> S
                 let start = t;
                 let mut end = t + costs.setup_ticks;
                 // FIFO order is preserved verbatim — including the
-                // format interleaving that forces mid-batch reloads.
+                // policy interleaving that forces mid-batch reloads
+                // (per-layer: only the weights whose format actually
+                // changes between adjacent policies are restaged).
                 let mut members: Vec<(Arrival, u64)> = Vec::with_capacity(n);
                 for _ in 0..n {
                     let r = fifo.pop_front().unwrap();
-                    if resident != Some(r.fmt) {
-                        resident = Some(r.fmt);
-                        end += costs.reload_ticks;
+                    let reload = costs.reload_ticks_between(resident.as_ref(), &r.policy);
+                    if reload > 0 {
+                        end += reload;
                         reloads += 1;
                     }
-                    let svc = costs.svc_ticks(r.fmt);
+                    resident = Some(r.policy);
+                    let svc = costs.svc_policy_ticks(&r.policy);
                     end += svc;
                     members.push((r, svc));
                 }
@@ -240,6 +247,7 @@ pub fn run_barrier(cfg: &ServeConfig, costs: &CostModel, trace: &[Arrival]) -> S
                     served.push(Served {
                         id: r.id,
                         fmt: r.fmt,
+                        policy: r.policy,
                         priority: r.priority,
                         arrival_tick: r.tick,
                         dispatch_tick: start,
@@ -273,7 +281,7 @@ pub fn run_barrier(cfg: &ServeConfig, costs: &CostModel, trace: &[Arrival]) -> S
 }
 
 /// Fill the remaining splice slots of `f`'s open batch from its
-/// resident format's class queues (High priority first, FIFO within
+/// resident policy's class queues (High priority first, FIFO within
 /// class). Each spliced request is appended at the fabric's tail and
 /// completes individually when its own service ends.
 #[allow(clippy::too_many_arguments)] // engine-internal plumbing
@@ -287,10 +295,10 @@ fn splice_fill(
     served: &mut Vec<Served>,
     last_complete: &mut u64,
 ) {
-    let Some(fmt) = f.resident else { return };
+    let Some(policy) = f.resident else { return };
     while f.slots > 0 {
-        let Some(r) = queues.pop_fmt(fmt) else { break };
-        let svc = costs.svc_ticks(fmt);
+        let Some(r) = queues.pop_policy(&policy) else { break };
+        let svc = costs.svc_policy_ticks(&policy);
         *queued_svc -= svc;
         let start = f.tail;
         f.tail = start + svc;
@@ -299,7 +307,8 @@ fn splice_fill(
         *last_complete = (*last_complete).max(f.tail);
         served.push(Served {
             id: r.id,
-            fmt,
+            fmt: r.fmt,
+            policy,
             priority: r.priority,
             arrival_tick: r.tick,
             dispatch_tick: t,
@@ -313,8 +322,8 @@ fn splice_fill(
 
 /// Per-fabric scheduling state of the continuous engine.
 struct Fabric {
-    /// Format whose weights are currently staged (None = cold).
-    resident: Option<ElemFormat>,
+    /// Policy whose weights are currently staged (None = cold).
+    resident: Option<PrecisionPolicy>,
     /// Tick when all work assigned to this fabric completes.
     tail: u64,
     /// Remaining splice slots in the open batch (0 = closed).
@@ -348,13 +357,13 @@ pub fn run_continuous(cfg: &ServeConfig, costs: &CostModel, trace: &[Arrival]) -
         while ti < trace.len() && trace[ti].tick <= t {
             let r = trace[ti];
             ti += 1;
-            let svc = costs.svc_ticks(r.fmt);
+            let svc = costs.svc_policy_ticks(&r.policy);
             let inflight: u64 = fabrics.iter().map(|f| f.tail.saturating_sub(t)).sum();
             match adm.admit(
                 queues.len(),
                 queued_svc + inflight,
                 fcount,
-                costs.worst_case_request_ticks(r.fmt),
+                costs.worst_case_policy_ticks(&r.policy),
             ) {
                 Ok(()) => {
                     queues.push(r);
@@ -381,16 +390,19 @@ pub fn run_continuous(cfg: &ServeConfig, costs: &CostModel, trace: &[Arrival]) -
             let Some(class) = queues.pick_class() else { break };
             let pos = idle
                 .iter()
-                .position(|&i| fabrics[i].resident == Some(class.fmt))
+                .position(|&i| fabrics[i].resident == Some(class.policy))
                 .unwrap_or(0);
             let fi = idle.remove(pos);
             let f = &mut fabrics[fi];
-            let reload = f.resident != Some(class.fmt);
-            if reload {
+            // Per-layer reload accounting (DESIGN.md §13): only the
+            // weighted layers whose format differs from the resident
+            // policy's are requantized and restaged.
+            let reload = costs.reload_ticks_between(f.resident.as_ref(), &class.policy);
+            if reload > 0 {
                 reloads += 1;
             }
-            f.resident = Some(class.fmt);
-            let overhead = costs.setup_ticks + if reload { costs.reload_ticks } else { 0 };
+            f.resident = Some(class.policy);
+            let overhead = costs.setup_ticks + reload;
             f.tail = t + overhead;
             f.busy += overhead;
             f.batch_id = batches;
@@ -504,6 +516,7 @@ mod tests {
             tick,
             fmt: ElemFormat::E4M3,
             priority: Priority::Normal,
+            policy: PrecisionPolicy::uniform(ElemFormat::E4M3),
         };
         // second request lands mid-service of the first
         let trace = vec![mk(0, 0), mk(1, svc / 2)];
@@ -526,9 +539,16 @@ mod tests {
         // Two classes queued while the fabric is cold: the High class
         // must be opened first even though the Normal request is older.
         let cfg = ServeConfig { clusters: 1, ..small_cfg(SchedulerKind::Continuous) };
+        let mk = |id, tick, fmt, priority| Arrival {
+            id,
+            tick,
+            fmt,
+            priority,
+            policy: PrecisionPolicy::uniform(fmt),
+        };
         let trace = vec![
-            Arrival { id: 0, tick: 0, fmt: ElemFormat::E4M3, priority: Priority::Normal },
-            Arrival { id: 1, tick: 1, fmt: ElemFormat::E2M1, priority: Priority::High },
+            mk(0, 0, ElemFormat::E4M3, Priority::Normal),
+            mk(1, 1, ElemFormat::E2M1, Priority::High),
         ];
         let out = simulate(&cfg, &trace);
         assert_eq!(out.served.len(), 2);
@@ -536,8 +556,8 @@ mod tests {
         // its class), but once both are queued High wins: rerun with
         // both present at t=0.
         let trace2 = vec![
-            Arrival { id: 0, tick: 0, fmt: ElemFormat::E4M3, priority: Priority::Normal },
-            Arrival { id: 1, tick: 0, fmt: ElemFormat::E2M1, priority: Priority::High },
+            mk(0, 0, ElemFormat::E4M3, Priority::Normal),
+            mk(1, 0, ElemFormat::E2M1, Priority::High),
         ];
         let out2 = simulate(&cfg, &trace2);
         assert_eq!(out2.served[0].id, 1, "High-priority class must be scheduled first");
@@ -606,6 +626,47 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn policy_transitions_pay_per_layer_reloads() {
+        // all-fp8 -> fp4-ffn shares the qkv/proj weights: the
+        // transition must cost strictly less than a full-format switch
+        // (all-fp8 -> all-fp4), and the attribution must carry the
+        // policies requests arrived with.
+        let cfg = ServeConfig { clusters: 1, ..small_cfg(SchedulerKind::Continuous) };
+        let costs = CostModel::build(&cfg);
+        let fp8 = PrecisionPolicy::preset("all-fp8").unwrap();
+        let ffn4 = PrecisionPolicy::preset("fp4-ffn").unwrap();
+        let fp4 = PrecisionPolicy::preset("all-fp4").unwrap();
+        let partial = costs.reload_ticks_between(Some(&fp8), &ffn4);
+        let full = costs.reload_ticks_between(Some(&fp8), &fp4);
+        assert!(partial > 0 && partial < full, "partial {partial} vs full {full}");
+        assert_eq!(costs.reload_ticks_between(Some(&ffn4), &ffn4), 0);
+        // engine run: two policies interleaved on one fabric
+        let mk = |id, tick, policy| Arrival {
+            id,
+            tick,
+            fmt: ElemFormat::E4M3,
+            priority: Priority::Normal,
+            policy,
+        };
+        let spacing = costs.svc_policy_ticks(&fp8) * 4;
+        let trace = vec![
+            mk(0, 0, fp8),
+            mk(1, spacing, ffn4),
+            mk(2, 2 * spacing, fp8),
+        ];
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.served.len(), 3);
+        assert_eq!(out.reloads, 3, "cold + two partial transitions");
+        let pols: Vec<PrecisionPolicy> = out.served.iter().map(|r| r.policy).collect();
+        assert_eq!(pols, vec![fp8, ffn4, fp8]);
+        // mixed-policy service sits between the uniform extremes
+        let s8 = costs.svc_policy_ticks(&fp8);
+        let s4 = costs.svc_policy_ticks(&fp4);
+        let sm = costs.svc_policy_ticks(&ffn4);
+        assert!(s4 < sm && sm < s8, "{s4} < {sm} < {s8}");
     }
 
     #[test]

@@ -28,6 +28,7 @@
 //! draw, both from the same deterministic [`XorShift`] stream.
 
 use crate::formats::ElemFormat;
+use crate::model::PrecisionPolicy;
 use crate::rng::XorShift;
 
 /// Request priority class. The serving engine schedules
@@ -114,10 +115,17 @@ pub struct Arrival {
     pub id: u64,
     /// Arrival time in scheduler ticks (non-decreasing along a trace).
     pub tick: u64,
-    /// Element format this request wants served.
+    /// Element format this request advertises (the traffic-mix label;
+    /// `policy` is authoritative for cost and execution).
     pub fmt: ElemFormat,
     /// Scheduling class.
     pub priority: Priority,
+    /// Per-layer precision policy this request carries (DESIGN.md
+    /// §13). Traces generated from a format mix carry
+    /// [`PrecisionPolicy::uniform`]`(fmt)` — the single-format recipe —
+    /// so a format-mix trace behaves exactly as before the policy
+    /// field existed; `mxdotp-cli serve --policy` rewrites it.
+    pub policy: PrecisionPolicy,
 }
 
 /// Generate a deterministic arrival trace from `spec`.
@@ -183,7 +191,13 @@ pub fn generate_trace(spec: &ArrivalSpec) -> Vec<Arrival> {
         } else {
             Priority::Normal
         };
-        out.push(Arrival { id: out.len() as u64, tick, fmt, priority });
+        out.push(Arrival {
+            id: out.len() as u64,
+            tick,
+            fmt,
+            priority,
+            policy: PrecisionPolicy::uniform(fmt),
+        });
     }
     out
 }
@@ -241,6 +255,16 @@ mod tests {
         let span = a.last().unwrap().tick.max(1) as f64;
         let rate = a.len() as f64 * 1000.0 / span;
         assert!((rate - 8.0).abs() / 8.0 < 0.15, "bursty mean rate {rate}");
+    }
+
+    #[test]
+    fn generated_arrivals_carry_uniform_policies() {
+        // Format-mix traces are single-format per request: every
+        // arrival's policy is the uniform recipe of its format, so the
+        // serving engine's per-policy accounting degenerates exactly
+        // to the per-format behavior for these traces.
+        let a = generate_trace(&mixed_spec(ArrivalKind::Poisson));
+        assert!(a.iter().all(|r| r.policy == PrecisionPolicy::uniform(r.fmt)));
     }
 
     #[test]

@@ -13,6 +13,7 @@ pub mod arrivals;
 use crate::energy::EnergyModel;
 use crate::formats::ElemFormat;
 use crate::kernels::{run_mm, KernelKind, MmProblem};
+use crate::model::{LayerClass, LayerPrecision, ModelGraph, PrecisionPolicy};
 use crate::rng::XorShift;
 
 /// DeiT-Tiny-shaped model configuration (mirror of model.DeiTConfig).
@@ -55,6 +56,20 @@ impl DeitConfig {
             .filter(|(name, _)| name.starts_with("w_"))
             .map(|(_, shape)| shape.iter().product::<usize>() as u64)
             .sum()
+    }
+
+    /// Elements of the weight matrix one layer class stages (0 for the
+    /// weightless attention GEMMs) — the per-layer unit of the serving
+    /// engine's format-switch reload accounting (DESIGN.md §13):
+    /// switching a fabric between two policies requantizes and
+    /// restages only the layers whose format actually changed.
+    pub fn layer_weight_elems(&self, class: LayerClass) -> u64 {
+        let Some(name) = class.weight_name() else { return 0 };
+        self.param_specs()
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, shape)| shape.iter().product::<usize>() as u64)
+            .unwrap_or(0)
     }
 
     /// Parameter (name, shape) list — MUST stay in sync with
@@ -195,6 +210,11 @@ pub struct ShardedHwCost {
     pub total: HwCost,
     /// Per-cluster costs (`cycles` = that cluster's busy window).
     pub per_cluster: Vec<HwCost>,
+    /// Per-layer-class breakdown when built by the policy-aware
+    /// [`analytic_policy_sharded_cost`] (each entry's `cycles` is that
+    /// layer's sharded wall share); empty for the single-format
+    /// [`analytic_sharded_cost`] entry point.
+    pub per_layer: Vec<(LayerClass, HwCost)>,
 }
 
 /// Analytic scale-out cost model: the serial single-cluster cost of
@@ -213,7 +233,7 @@ pub fn analytic_sharded_cost(
     let clusters = clusters.max(1);
     let serial = analytic_cost(cfg, num_cores, calibrated_util);
     if clusters == 1 {
-        return ShardedHwCost { total: serial, per_cluster: vec![serial] };
+        return ShardedHwCost { total: serial, per_cluster: vec![serial], per_layer: Vec::new() };
     }
     let eff = parallel_eff.clamp(0.05, 1.0);
     let wall = ((serial.cycles as f64) / (clusters as f64 * eff)).ceil() as u64;
@@ -240,7 +260,139 @@ pub fn analytic_sharded_cost(
             flops: cfg.mx_flops(),
         },
         per_cluster,
+        per_layer: Vec::new(),
     }
+}
+
+/// Per-layer-class MX GEMM FLOPs of one forward pass, indexed by
+/// `LayerClass::index()` — precompute once and price policies through
+/// [`analytic_policy_cycles_from`] on hot paths (the serving engine's
+/// per-arrival costing) instead of rebuilding the graph per call.
+pub fn layer_flops_table(cfg: &DeitConfig) -> [u64; 6] {
+    let graph = ModelGraph::deit_block(cfg);
+    let mut table = [0u64; 6];
+    for node in &graph.nodes {
+        table[node.class.index()] = node.flops();
+    }
+    table
+}
+
+/// Serial (single-cluster) analytic cycles of one forward pass under a
+/// per-layer precision policy: the policy's MX FLOPs grouped by
+/// element format, each group billed at its format's lane width —
+/// `cycles_g = flops_g / (2·lanes·cores·utilization)` — and summed.
+///
+/// For a [`PrecisionPolicy::uniform`] policy this reduces to exactly
+/// the single group of [`analytic_cost`], bit-for-bit (the serving
+/// cost model's uniform-policy compatibility depends on it).
+pub fn analytic_policy_cycles(
+    cfg: &DeitConfig,
+    policy: &PrecisionPolicy,
+    num_cores: usize,
+    calibrated_util: f64,
+) -> u64 {
+    analytic_policy_cycles_from(&layer_flops_table(cfg), policy, num_cores, calibrated_util)
+}
+
+/// [`analytic_policy_cycles`] from a precomputed [`layer_flops_table`]
+/// — allocation-free, so the serving engine can price every arriving
+/// request's policy without rebuilding the model graph.
+pub fn analytic_policy_cycles_from(
+    layer_flops: &[u64; 6],
+    policy: &PrecisionPolicy,
+    num_cores: usize,
+    calibrated_util: f64,
+) -> u64 {
+    let mut per_fmt = [0u64; 6];
+    for class in LayerClass::ALL {
+        if let LayerPrecision::Mx(f) = policy.get(class) {
+            per_fmt[f.csr_code() as usize] += layer_flops[class.index()];
+        }
+    }
+    let mut cycles = 0u64;
+    for fmt in ElemFormat::ALL {
+        let flops = per_fmt[fmt.csr_code() as usize];
+        if flops == 0 {
+            continue;
+        }
+        let ideal = 2.0 * fmt.hw_lanes() as f64 * num_cores as f64;
+        cycles += (flops as f64 / (ideal * calibrated_util)) as u64;
+    }
+    cycles
+}
+
+/// Policy-aware analytic scale-out cost: the per-layer mixed-precision
+/// counterpart of [`analytic_sharded_cost`], with a per-layer-class
+/// breakdown in [`ShardedHwCost::per_layer`].
+///
+/// Uniform policies delegate to [`analytic_sharded_cost`] (identical
+/// totals, so the serving engine's numbers cannot drift when every
+/// request still carries a single-format policy); mixed policies bill
+/// each format group at its lane width and sum the groups' energies at
+/// the calibrated MX operating point.
+pub fn analytic_policy_sharded_cost(
+    cfg: &DeitConfig,
+    policy: &PrecisionPolicy,
+    num_cores: usize,
+    calibrated_util: f64,
+    clusters: usize,
+    parallel_eff: f64,
+) -> ShardedHwCost {
+    let clusters = clusters.max(1);
+    let graph = ModelGraph::deit_block(cfg);
+    let eff = if clusters > 1 { parallel_eff.clamp(0.05, 1.0) } else { 1.0 };
+    let shard = |serial: u64| -> u64 {
+        if clusters == 1 {
+            serial
+        } else {
+            ((serial as f64) / (clusters as f64 * eff)).ceil() as u64
+        }
+    };
+    // Per-layer breakdown (each layer's own sharded wall share).
+    let em = EnergyModel;
+    let mut per_layer = Vec::new();
+    for node in &graph.nodes {
+        let LayerPrecision::Mx(fmt) = policy.get(node.class) else { continue };
+        let flops = node.flops();
+        let ideal = 2.0 * fmt.hw_lanes() as f64 * num_cores as f64;
+        let serial = (flops as f64 / (ideal * calibrated_util)) as u64;
+        let wall = shard(serial);
+        let perf = synthetic_mx_perf(fmt, flops / clusters as u64, num_cores, wall);
+        let energy = clusters as f64 * em.power(&perf, 1.0, true).energy_uj;
+        per_layer.push((
+            node.class,
+            HwCost { cycles: wall, energy_uj: energy, time_us: wall as f64 / 1000.0, flops },
+        ));
+    }
+    let mut cost = if let Some(fmt) = policy.uniform_fmt() {
+        // Exact compatibility with the single-format path.
+        analytic_sharded_cost(
+            &DeitConfig { fmt, ..*cfg },
+            num_cores,
+            calibrated_util,
+            clusters,
+            parallel_eff,
+        )
+    } else {
+        let serial = analytic_policy_cycles(cfg, policy, num_cores, calibrated_util);
+        let wall = shard(serial);
+        let energy: f64 = per_layer.iter().map(|(_, c)| c.energy_uj).sum();
+        let flops = graph.mx_flops(policy);
+        let total =
+            HwCost { cycles: wall, energy_uj: energy, time_us: wall as f64 / 1000.0, flops };
+        let per_cluster = vec![
+            HwCost {
+                cycles: wall,
+                energy_uj: energy / clusters as f64,
+                time_us: wall as f64 / 1000.0,
+                flops: flops / clusters as u64,
+            };
+            clusters
+        ];
+        ShardedHwCost { total, per_cluster, per_layer: Vec::new() }
+    };
+    cost.per_layer = per_layer;
+    cost
 }
 
 /// Measure real MXFP8 utilization on a representative layer (fc1) by
@@ -313,6 +465,72 @@ mod tests {
     fn weight_elems_is_12_dim_squared() {
         let cfg = DeitConfig::default();
         assert_eq!(cfg.weight_elems(), 12 * 192 * 192);
+    }
+
+    #[test]
+    fn layer_weight_elems_partition_the_total() {
+        let cfg = DeitConfig::default();
+        let per: u64 =
+            LayerClass::ALL.iter().map(|&c| cfg.layer_weight_elems(c)).sum();
+        assert_eq!(per, cfg.weight_elems());
+        assert_eq!(cfg.layer_weight_elems(LayerClass::Qkv), 3 * 192 * 192);
+        assert_eq!(cfg.layer_weight_elems(LayerClass::AttnScores), 0);
+        assert_eq!(cfg.layer_weight_elems(LayerClass::AttnContext), 0);
+        assert_eq!(cfg.layer_weight_elems(LayerClass::MlpUp), 4 * 192 * 192);
+    }
+
+    #[test]
+    fn uniform_policy_cycles_match_the_single_format_model_exactly() {
+        let cfg = DeitConfig::default();
+        for fmt in ElemFormat::ALL {
+            let c = DeitConfig { fmt, ..cfg };
+            let serial = analytic_cost(&c, 8, 0.75).cycles;
+            let policy = PrecisionPolicy::uniform(fmt);
+            assert_eq!(
+                analytic_policy_cycles(&c, &policy, 8, 0.75),
+                serial,
+                "{fmt}: uniform policy must reproduce analytic_cost bit-for-bit"
+            );
+            let sharded = analytic_sharded_cost(&c, 8, 0.75, 4, 0.9);
+            let psharded = analytic_policy_sharded_cost(&c, &policy, 8, 0.75, 4, 0.9);
+            assert_eq!(psharded.total.cycles, sharded.total.cycles);
+            assert_eq!(psharded.total.energy_uj, sharded.total.energy_uj);
+            assert_eq!(psharded.per_layer.len(), 4, "four MX linears under uniform");
+        }
+    }
+
+    #[test]
+    fn fp4_ffn_policy_cost_sits_between_fp8_and_fp4() {
+        let cfg = DeitConfig::default();
+        let fp8 = analytic_policy_cycles(&cfg, &PrecisionPolicy::uniform(ElemFormat::E4M3), 8, 0.75);
+        let fp4 = analytic_policy_cycles(&cfg, &PrecisionPolicy::uniform(ElemFormat::E2M1), 8, 0.75);
+        let mixed = analytic_policy_cycles(
+            &cfg,
+            &PrecisionPolicy::preset("fp4-ffn").unwrap(),
+            8,
+            0.75,
+        );
+        assert!(fp4 < mixed && mixed < fp8, "{fp4} < {mixed} < {fp8}");
+        // FFN = 2/3 of the FLOPs at double rate: mixed = 2/3 · fp8
+        let want = fp8 as f64 * 2.0 / 3.0;
+        assert!((mixed as f64 - want).abs() / want < 0.01, "mixed {mixed} vs want {want}");
+        // the analytic throughput bar behind `reproduce pareto`
+        assert!(fp8 as f64 / mixed as f64 >= 1.3);
+    }
+
+    #[test]
+    fn mixed_policy_sharded_cost_breaks_down_per_layer() {
+        let cfg = DeitConfig::default();
+        let policy = PrecisionPolicy::preset("fp4-ffn").unwrap();
+        let c = analytic_policy_sharded_cost(&cfg, &policy, 8, 0.75, 4, 0.9);
+        assert_eq!(c.per_layer.len(), 4);
+        assert!(c.total.cycles > 0 && c.total.energy_uj > 0.0);
+        // layer walls sum to ~the fabric wall (per-layer ceil rounding)
+        let sum: u64 = c.per_layer.iter().map(|(_, l)| l.cycles).sum();
+        assert!(sum >= c.total.cycles && sum <= c.total.cycles + 4, "{sum} vs {}", c.total.cycles);
+        // flops across layers partition the policy flops
+        let flops: u64 = c.per_layer.iter().map(|(_, l)| l.flops).sum();
+        assert_eq!(flops, cfg.mx_flops());
     }
 
     #[test]

@@ -1,0 +1,275 @@
+//! Mixed-precision model-graph acceptance tests (DESIGN.md §13).
+//!
+//! Two invariants guard the graph-executor refactor:
+//!
+//! 1. **No silent drift**: the `all-fp8` preset (and every uniform
+//!    policy) must reproduce the pre-refactor single-format
+//!    `ShardedExecutor` recipe *bit for bit*. The reference below is a
+//!    frozen copy of that recipe (as it stood before the refactor),
+//!    deliberately duplicated here so a behavioral change in the
+//!    library cannot silently rewrite its own oracle.
+//! 2. **Placement never changes results**: for *any* precision
+//!    policy, sequential, batched, and concurrent (disjoint-fabric)
+//!    execution produce bit-identical outputs; and each policy GEMM
+//!    layer is bit-identical between the single-cluster, sharded, and
+//!    leased-concurrent cycle-accurate paths.
+
+use mxdotp::coordinator::ShardedExecutor;
+use mxdotp::formats::{dot, ElemFormat, MxMatrix, ScaleAxis};
+use mxdotp::kernels::{run_mm, KernelKind};
+use mxdotp::model::{
+    GraphExecutor, LayerClass, LayerPrecision, ModelGraph, PrecisionPolicy,
+};
+use mxdotp::rng::{property_cases, XorShift};
+use mxdotp::scaleout::{sharded_mm, sharded_mm_leased, FabricLease, ScaleoutConfig};
+use mxdotp::workload::{generate_input, generate_params, DeitConfig};
+
+// --------------------------------------------------------------------
+// Frozen pre-refactor reference (the seed ShardedExecutor recipe)
+// --------------------------------------------------------------------
+
+/// The single-format DeiT encoder block exactly as the pre-refactor
+/// `ShardedExecutor::forward_block` computed it: four MX-quantized
+/// linears at `cfg.fmt` (weights col-axis, activations row-axis,
+/// FP32 bias add), FP32 LayerNorm / fused attention / GELU /
+/// residuals.
+fn legacy_forward_block(
+    cfg: &DeitConfig,
+    params: &[(String, Vec<usize>, Vec<f32>)],
+    x: &[f32],
+) -> Vec<f32> {
+    let param = |name: &str| -> &[f32] {
+        &params.iter().find(|(n, _, _)| n == name).expect("param").2
+    };
+    let mx_linear = |x: &[f32], w_name: &str, b: &[f32], m: usize, k: usize, n: usize| {
+        let qx = MxMatrix::quantize(x, m, k, cfg.fmt, cfg.block_size, ScaleAxis::Row);
+        let qw = MxMatrix::quantize(param(w_name), k, n, cfg.fmt, cfg.block_size, ScaleAxis::Col);
+        let mut y = dot::matmul_ref(&qx, &qw);
+        for row in y.chunks_mut(n) {
+            for (v, &bc) in row.iter_mut().zip(b) {
+                *v += bc;
+            }
+        }
+        y
+    };
+    let layer_norm = |x: &[f32], gamma: &[f32], beta: &[f32]| {
+        let d = cfg.dim;
+        let mut out = vec![0.0f32; x.len()];
+        for (row, orow) in x.chunks(d).zip(out.chunks_mut(d)) {
+            let mu = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+            let r = 1.0 / (var + 1e-6).sqrt();
+            for (o, &v) in orow.iter_mut().zip(row) {
+                *o = (v - mu) * r;
+            }
+            for (c, o) in orow.iter_mut().enumerate() {
+                *o = *o * gamma[c] + beta[c];
+            }
+        }
+        out
+    };
+    let gelu = |x: f32| {
+        const C: f32 = 0.797_884_6;
+        0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+    };
+
+    let (s, d) = (cfg.seq, cfg.dim);
+    let h = cfg.heads;
+    let hd = d / h;
+    let md = cfg.mlp_dim();
+
+    let y = layer_norm(x, param("ln1_gamma"), param("ln1_beta"));
+    let qkv = mx_linear(&y, "w_qkv", param("b_qkv"), s, d, 3 * d);
+    let at = |t: usize, which: usize, head: usize, e: usize| {
+        qkv[t * 3 * d + which * d + head * hd + e]
+    };
+    let mut ctx = vec![0.0f32; s * d];
+    let mut scores = vec![0.0f32; s];
+    for head in 0..h {
+        for tq in 0..s {
+            let mut max = f32::NEG_INFINITY;
+            for (tk, sc) in scores.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for e in 0..hd {
+                    acc += at(tq, 0, head, e) * at(tk, 1, head, e);
+                }
+                *sc = acc / (hd as f32).sqrt();
+                max = max.max(*sc);
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - max).exp();
+                denom += *sc;
+            }
+            for e in 0..hd {
+                let mut acc = 0.0f32;
+                for (tk, &sc) in scores.iter().enumerate() {
+                    acc += sc * at(tk, 2, head, e);
+                }
+                ctx[tq * d + head * hd + e] = acc / denom;
+            }
+        }
+    }
+    let proj = mx_linear(&ctx, "w_proj", param("b_proj"), s, d, d);
+    let x1: Vec<f32> = x.iter().zip(&proj).map(|(&a, &b)| a + b).collect();
+
+    let y = layer_norm(&x1, param("ln2_gamma"), param("ln2_beta"));
+    let mut hval = mx_linear(&y, "w_fc1", param("b_fc1"), s, d, md);
+    for v in hval.iter_mut() {
+        *v = gelu(*v);
+    }
+    let out = mx_linear(&hval, "w_fc2", param("b_fc2"), s, md, d);
+    x1.iter().zip(&out).map(|(&a, &b)| a + b).collect()
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}: element {i} ({g} vs {w})");
+    }
+}
+
+// --------------------------------------------------------------------
+// 1. all-fp8 (and every uniform policy) == the pre-refactor path
+// --------------------------------------------------------------------
+
+#[test]
+fn uniform_policies_bit_match_the_frozen_pre_refactor_recipe() {
+    for fmt in [ElemFormat::E4M3, ElemFormat::E5M2, ElemFormat::E2M1, ElemFormat::Int8] {
+        let cfg = DeitConfig { seq: 8, fmt, ..DeitConfig::default() };
+        let params = generate_params(&cfg, 11);
+        let exec = GraphExecutor::new(cfg, PrecisionPolicy::uniform(fmt), params.clone())
+            .unwrap();
+        for seed in [3u64, 7] {
+            let x = generate_input(&cfg, seed);
+            let want = legacy_forward_block(&cfg, &params, &x);
+            let got = exec.forward_ref(&x).unwrap();
+            assert_bits_eq(&got, &want, &format!("uniform({fmt}), input {seed}"));
+        }
+    }
+}
+
+#[test]
+fn all_fp8_preset_is_the_pre_refactor_default_path() {
+    // The acceptance criterion verbatim: the `all-fp8` preset on the
+    // default DeiT config reproduces the pre-refactor single-format
+    // path bit for bit — through the GraphExecutor AND through the
+    // ShardedExecutor wrapper the serving stack uses.
+    let cfg = DeitConfig { seq: 8, ..DeitConfig::default() };
+    assert_eq!(cfg.fmt, ElemFormat::E4M3, "the default format is FP8 E4M3");
+    let params = generate_params(&cfg, 42);
+    let x = generate_input(&cfg, 5);
+    let want = legacy_forward_block(&cfg, &params, &x);
+    let graph =
+        GraphExecutor::new(cfg, PrecisionPolicy::preset("all-fp8").unwrap(), params.clone())
+            .unwrap();
+    assert_bits_eq(&graph.forward_ref(&x).unwrap(), &want, "all-fp8 GraphExecutor");
+    let wrapper = ShardedExecutor::new(cfg, params);
+    assert_bits_eq(&wrapper.forward_ref(&x).unwrap(), &want, "ShardedExecutor wrapper");
+}
+
+// --------------------------------------------------------------------
+// 2. any policy: sequential == batched == concurrent (bit-identical)
+// --------------------------------------------------------------------
+
+#[test]
+fn any_policy_is_pure_across_sequential_batched_and_concurrent_execution() {
+    // Random policies (random per-class formats, occasionally FP32
+    // layers) over random inputs: the three execution disciplines must
+    // agree bit for bit. seq 8 keeps attention FP32-only policies
+    // cheap; a separate case below covers MX attention at seq 64.
+    let cfg = DeitConfig { seq: 8, ..DeitConfig::default() };
+    let params = generate_params(&cfg, 23);
+    property_cases(6, 0x90CF, |rng: &mut XorShift| {
+        let mut policy = PrecisionPolicy::uniform(cfg.fmt);
+        for class in [LayerClass::Qkv, LayerClass::AttnOut, LayerClass::MlpUp, LayerClass::MlpDown]
+        {
+            let prec = match rng.below(7) {
+                6 => LayerPrecision::Fp32,
+                i => LayerPrecision::Mx(ElemFormat::ALL[i as usize]),
+            };
+            policy.set(class, prec);
+        }
+        let exec = GraphExecutor::new(cfg, policy, params.clone()).unwrap();
+        let base = 100 + rng.below(50);
+        let inputs: Vec<Vec<f32>> =
+            (0..4u64).map(|i| generate_input(&cfg, base + i)).collect();
+        // sequential
+        let seq: Vec<Vec<f32>> =
+            inputs.iter().map(|x| exec.forward_ref(x).unwrap()).collect();
+        // concurrent on two disjoint "fabrics"
+        let batches = vec![inputs[..2].to_vec(), inputs[2..].to_vec()];
+        let conc = exec.forward_concurrent(&batches);
+        for (i, (want, got)) in
+            seq.iter().zip(conc.iter().flatten()).enumerate()
+        {
+            assert_bits_eq(got, want, &format!("policy {policy}, input {i}"));
+        }
+    });
+}
+
+#[test]
+fn mx_attention_policy_is_pure_across_execution_disciplines() {
+    // seq 64 divides the block size, so the attention GEMMs themselves
+    // can be MX-quantized; purity must hold for them too.
+    let cfg = DeitConfig { seq: 64, ..DeitConfig::default() };
+    let params = generate_params(&cfg, 29);
+    let policy = PrecisionPolicy::parse(
+        "attn=e4m3,ffn=fp4",
+        PrecisionPolicy::uniform(cfg.fmt),
+    )
+    .unwrap();
+    let exec = GraphExecutor::new(cfg, policy, params).unwrap();
+    let inputs: Vec<Vec<f32>> = (0..2u64).map(|i| generate_input(&cfg, 700 + i)).collect();
+    let seq: Vec<Vec<f32>> = inputs.iter().map(|x| exec.forward_ref(x).unwrap()).collect();
+    let conc = exec.forward_concurrent(&[vec![inputs[0].clone()], vec![inputs[1].clone()]]);
+    for (want, got) in seq.iter().zip(conc.iter().flatten()) {
+        assert_bits_eq(got, want, "mx-attention policy");
+    }
+}
+
+// --------------------------------------------------------------------
+// 3. per-layer GEMMs: sequential == sharded == leased-concurrent
+// --------------------------------------------------------------------
+
+#[test]
+fn policy_layers_bit_identical_across_sequential_sharded_and_leased_paths() {
+    // Every MX GEMM layer of the fp4-ffn policy (mixed formats!), on a
+    // reduced sequence: the single-cluster run, the 2-cluster sharded
+    // run, and a leased run at a nonzero machine offset must produce
+    // bit-identical C matrices.
+    let cfg = DeitConfig { seq: 16, ..DeitConfig::default() };
+    let graph = ModelGraph::deit_block(&cfg);
+    let policy = PrecisionPolicy::preset("fp4-ffn").unwrap();
+    for (class, p, _) in graph.mx_problems(&policy) {
+        let mut rng = XorShift::new(0x1A7E ^ class.index() as u64);
+        let a = rng.normal_vec(p.m * p.k, 0.5);
+        let b = rng.normal_vec(p.k * p.n, 0.02);
+        let single = run_mm(KernelKind::Mx(p.fmt), p, &a, &b, 8);
+        let sharded = sharded_mm(&ScaleoutConfig::with_clusters(2), p, &a, &b);
+        let lease = FabricLease { first_cluster: 4, clusters: 2 };
+        let leased = sharded_mm_leased(&ScaleoutConfig::with_clusters(2), lease, p, &a, &b);
+        assert_bits_eq(&sharded.c, &single.c, &format!("{class}: sharded vs sequential"));
+        assert_bits_eq(&leased.c, &sharded.c, &format!("{class}: leased vs sharded"));
+        assert_eq!(leased.wall_cycles, sharded.wall_cycles, "{class}: lease changed timing");
+    }
+}
+
+// --------------------------------------------------------------------
+// 4. the fp4-ffn hardware walk beats all-fp8 (reduced shapes)
+// --------------------------------------------------------------------
+
+#[test]
+fn fp4_ffn_hw_walk_is_faster_than_all_fp8_at_equal_flops() {
+    let cfg = DeitConfig { seq: 16, ..DeitConfig::default() };
+    let graph = ModelGraph::deit_block(&cfg);
+    let fp8 = PrecisionPolicy::preset("all-fp8").unwrap();
+    let ffn4 = PrecisionPolicy::preset("fp4-ffn").unwrap();
+    let r8 = mxdotp::model::policy_hw_run(&graph, &fp8, 2, 8, 3, false);
+    let r4 = mxdotp::model::policy_hw_run(&graph, &ffn4, 2, 8, 3, false);
+    assert_eq!(r8.flops, r4.flops);
+    let ratio = r8.wall_cycles as f64 / r4.wall_cycles as f64;
+    assert!(ratio >= 1.2, "fp4-ffn wall speedup only {ratio:.2}x on reduced shapes");
+    assert_eq!(r8.csr_switches, 1);
+    assert_eq!(r4.csr_switches, 2);
+}

@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Render a markdown table of every BENCH_*.json headline metric, with
+its committed baseline and delta, for $GITHUB_STEP_SUMMARY — so PRs
+show the perf trajectory without downloading artifacts.
+
+Usage: python3 tools/bench_summary.py [dir-with-BENCH-json]  >> "$GITHUB_STEP_SUMMARY"
+
+Stdlib only (the CI runner needs nothing installed). Missing bench
+files render as a note, not an error: partial bench runs still get a
+summary for what they produced.
+"""
+
+import json
+import os
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+
+
+def extract_metrics(bench_dir):
+    """(bench, metric, value) triples mirroring the headline metrics the
+    benches report through the bench-regression gate, plus a few
+    context metrics worth trending."""
+    out = []
+
+    j = load(os.path.join(bench_dir, "BENCH_scaleout.json"))
+    if j:
+        last = j["points"][-1]
+        out += [
+            ("scaleout", "speedup_8c", last["speedup"]),
+            ("scaleout", "parallel_efficiency_8c", last["parallel_efficiency"]),
+            ("scaleout", "gflops_8c", last["gflops"]),
+        ]
+
+    j = load(os.path.join(bench_dir, "BENCH_hotpath.json"))
+    if j:
+        out += [
+            ("hotpath", "warm_speedup", j["plan_cache"]["warm_speedup"]),
+            ("hotpath", "datapath_mops", j["datapath_mops"]),
+            ("hotpath", "simulator_mcycles", j["simulator_mcycles"]),
+        ]
+
+    j = load(os.path.join(bench_dir, "BENCH_formats.json"))
+    if j:
+        out.append(("formats", "fp4_vs_fp8_speedup_at_k256", j["fp4_vs_fp8_speedup_at_k256"]))
+        util = {}
+        for p in j["points"]:
+            if p["k"] == 256 and p["fmt"] == "e2m1":
+                util["e2m1"] = p["utilization"]
+                out.append(("formats", "fp4_utilization_at_k256", p["utilization"]))
+            if p["k"] == 256 and p["fmt"] == "e4m3":
+                util["e4m3"] = p["utilization"]
+                out.append(("formats", "fp8_gflops_at_k256", p["gflops"]))
+        if "e2m1" in util and "e4m3" in util:
+            out.append(
+                ("formats", "fp4_minus_fp8_utilization_at_k256", util["e2m1"] - util["e4m3"])
+            )
+
+    j = load(os.path.join(bench_dir, "BENCH_serving.json"))
+    if j:
+        top = max(p["load_mult"] for p in j["points"])
+        at = {p["scheduler"]: p for p in j["points"] if p["load_mult"] == top}
+        if "continuous" in at and "barrier" in at and at["barrier"]["goodput_per_ktick"] > 0:
+            cont = at["continuous"]
+            out += [
+                (
+                    "serving",
+                    "goodput_ratio_top_load",
+                    cont["goodput_per_ktick"] / at["barrier"]["goodput_per_ktick"],
+                ),
+                (
+                    "serving",
+                    "continuous_in_slo_frac_top_load",
+                    cont["in_slo"] / max(cont["served"], 1),
+                ),
+                ("serving", "continuous_p99_top_load_ticks", cont["p99_ticks"]),
+            ]
+
+    j = load(os.path.join(bench_dir, "BENCH_pareto.json"))
+    if j:
+        by = {p["policy"]: p for p in j["points"]}
+        if "all-fp8" in by and "fp4-ffn" in by and by["all-fp8"]["gflops"] > 0:
+            fp8, ffn4 = by["all-fp8"], by["fp4-ffn"]
+            out += [
+                ("pareto", "fp4_ffn_speedup_vs_all_fp8", ffn4["gflops"] / fp8["gflops"]),
+                ("pareto", "all_fp8_rel_err", fp8["rel_err"]),
+                ("pareto", "fp4_ffn_rel_err", ffn4["rel_err"]),
+                (
+                    "pareto",
+                    "fp4_ffn_err_ratio_vs_all_fp8",
+                    ffn4["rel_err"] / max(fp8["rel_err"], 1e-12),
+                ),
+            ]
+        for p in j["points"]:
+            out.append(("pareto", f"{p['policy']}_gflops", p["gflops"]))
+
+    return out
+
+
+def main():
+    bench_dir = sys.argv[1] if len(sys.argv) > 1 else "."
+    baselines = load(os.path.join(bench_dir, "bench_baselines.json")) or load(
+        "bench_baselines.json"
+    ) or {}
+    metrics = extract_metrics(bench_dir)
+
+    print("## Bench trajectory")
+    print()
+    if not metrics:
+        print("_No BENCH_*.json artifacts found — benches did not run._")
+        return
+    print("| bench | metric | current | baseline | delta | gate |")
+    print("|---|---|---:|---:|---:|---|")
+    for bench, metric, value in metrics:
+        spec = (baselines.get(bench) or {}).get(metric) if isinstance(baselines, dict) else None
+        if isinstance(spec, dict):
+            tol = spec.get("tol", 0.0)
+            parts, status, delta = [], "pass", ""
+            # slack is applied away from the bound (matches
+            # benches/common/baseline.rs, incl. negative bounds)
+            if "min" in spec:
+                parts.append(f"≥ {spec['min']:g}")
+                if spec["min"]:
+                    delta = f"{(value / spec['min'] - 1) * 100:+.1f}% vs floor"
+                if value < spec["min"] - abs(spec["min"]) * tol:
+                    status = "**FAIL**"
+            if "max" in spec:
+                parts.append(f"≤ {spec['max']:g}")
+                if spec["max"]:
+                    delta = f"{(value / spec['max'] - 1) * 100:+.1f}% vs ceiling"
+                if value > spec["max"] + abs(spec["max"]) * tol:
+                    status = "**FAIL**"
+            base = " , ".join(parts)
+        else:
+            base, delta, status = "—", "—", "untracked"
+        print(f"| {bench} | `{metric}` | {value:.4g} | {base} | {delta} | {status} |")
+    print()
+    print(
+        "_Floors/ceilings come from `bench_baselines.json` and are enforced as a "
+        "blocking gate by `benches/common/baseline.rs`._"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Bit-for-bit determinism check for the bench artifacts: compare two
+independent runs' BENCH_*.json files after stripping host-timing keys
+(the only fields allowed to differ between runs with identical seeds).
+
+Usage: python3 tools/check_determinism.py RUN1_DIR RUN2_DIR
+
+Every BENCH_*.json present in RUN1_DIR must exist in RUN2_DIR and be
+identical modulo the volatile keys below. The per-request attribution
+artifact (BENCH_serving_attribution.json) carries no host timing at
+all and is compared verbatim. Exit code 1 on any mismatch — this is
+the blocking CI determinism job.
+"""
+
+import glob
+import json
+import os
+import sys
+
+# Host-side wall-clock measurements: legitimately nondeterministic.
+VOLATILE_KEYS = {
+    "host_wall_s",
+    "cold_wall_s",
+    "warm_wall_s",
+    "cold_host_gflops",
+    "warm_host_gflops",
+    "warm_speedup",
+}
+
+
+def strip(value):
+    if isinstance(value, dict):
+        return {k: strip(v) for k, v in value.items() if k not in VOLATILE_KEYS}
+    if isinstance(value, list):
+        return [strip(v) for v in value]
+    return value
+
+
+def diff_paths(a, b, prefix=""):
+    """Human-readable first-divergence paths between two stripped JSON
+    values (bounded, for the failure message)."""
+    out = []
+    if type(a) is not type(b):
+        return [f"{prefix}: type {type(a).__name__} vs {type(b).__name__}"]
+    if isinstance(a, dict):
+        for k in sorted(set(a) | set(b)):
+            if k not in a or k not in b:
+                out.append(f"{prefix}.{k}: present in one run only")
+            else:
+                out += diff_paths(a[k], b[k], f"{prefix}.{k}")
+    elif isinstance(a, list):
+        if len(a) != len(b):
+            out.append(f"{prefix}: length {len(a)} vs {len(b)}")
+        for i, (x, y) in enumerate(zip(a, b)):
+            out += diff_paths(x, y, f"{prefix}[{i}]")
+    elif a != b:
+        out.append(f"{prefix}: {a!r} vs {b!r}")
+    return out[:20]
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    run1, run2 = sys.argv[1], sys.argv[2]
+    files = sorted(glob.glob(os.path.join(run1, "BENCH_*.json")))
+    if not files:
+        sys.exit(f"no BENCH_*.json artifacts in {run1} — determinism job has nothing to check")
+    failed = False
+    for f1 in files:
+        name = os.path.basename(f1)
+        f2 = os.path.join(run2, name)
+        if not os.path.exists(f2):
+            print(f"FAIL {name}: missing from {run2}")
+            failed = True
+            continue
+        if name == "BENCH_serving_attribution.json":
+            # No host timing inside: the bytes themselves must match.
+            b1, b2 = open(f1, "rb").read(), open(f2, "rb").read()
+            if b1 != b2:
+                print(f"FAIL {name}: per-request attribution differs byte-for-byte")
+                failed = True
+            else:
+                print(f"PASS {name} (byte-identical, {len(b1)} bytes)")
+            continue
+        with open(f1) as fh:
+            j1 = strip(json.load(fh))
+        with open(f2) as fh:
+            j2 = strip(json.load(fh))
+        if j1 != j2:
+            print(f"FAIL {name}: runs differ after stripping host-timing keys")
+            for d in diff_paths(j1, j2):
+                print(f"     {d}")
+            failed = True
+        else:
+            print(f"PASS {name} (bit-identical modulo host timing)")
+    if failed:
+        sys.exit(1)
+    print("determinism: OK — two runs with identical seeds agree bit-for-bit")
+
+
+if __name__ == "__main__":
+    main()
