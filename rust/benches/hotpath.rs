@@ -29,6 +29,9 @@ use std::fmt::Write as _;
 
 fn main() {
     common::header("hotpath", "host-side throughput of the crate's hot paths (§Perf)");
+    // The bench binary is the one sanctioned reset site for the
+    // process-wide host profile (single main, no concurrent tests).
+    mxdotp::obs::hostprof::reset();
 
     // --- datapath ----------------------------------------------------
     let mut rng = XorShift::new(1);
@@ -143,6 +146,22 @@ fn main() {
         cst.pass_misses
     );
 
+    // --- host profile (obs::hostprof) ----------------------------------
+    // Wall-clock spent inside the cycle-accurate simulator and the plan
+    // builder across everything this bench ran, as recorded by the
+    // always-on hooks in `snitch::cluster` and `kernels::plan` — the
+    // simulator-speed number the regression gate tracks.
+    let hp = mxdotp::obs::hostprof::snapshot();
+    println!(
+        "host-prof:  {:.1} ms simulating ({:.2} Mcycles/host-s over {} runs), \
+         {} plan build(s) in {:.2} ms",
+        hp.sim_wall_ms(),
+        hp.sim_cycles_per_host_us(),
+        hp.sim_runs,
+        hp.plan_builds,
+        hp.plan_build_nanos as f64 / 1e6
+    );
+
     // --- JSON trajectory ------------------------------------------------
     let mut j = String::new();
     j.push_str("{\n");
@@ -150,6 +169,9 @@ fn main() {
     let _ = writeln!(j, "  \"quantizer_melems\": {melems:.3},");
     let _ = writeln!(j, "  \"simulator_mcycles\": {mcps:.3},");
     let _ = writeln!(j, "  \"hw_ref_mops\": {mdot_ref:.3},");
+    let _ = writeln!(j, "  \"sim_wall_ms\": {:.3},", hp.sim_wall_ms());
+    let _ = writeln!(j, "  \"sim_cycles_per_host_us\": {:.4},", hp.sim_cycles_per_host_us());
+    let _ = writeln!(j, "  \"plan_builds\": {},", hp.plan_builds);
     let _ = writeln!(
         j,
         "  \"plan_cache\": {{\"workload\": \"deit-proj {}x{}x{} on 2 clusters\", \
@@ -169,7 +191,13 @@ fn main() {
     // The warm-vs-cold bar goes through the shared regression gate
     // (bit-identity stays asserted inline above — it is a correctness
     // invariant, not a tunable bar).
-    common::baseline::enforce("hotpath", &[("warm_speedup", cold_s / warm_s)]);
+    common::baseline::enforce(
+        "hotpath",
+        &[
+            ("warm_speedup", cold_s / warm_s),
+            ("sim_cycles_per_host_us", hp.sim_cycles_per_host_us()),
+        ],
+    );
 
     println!("\nhotpath: OK (record these in EXPERIMENTS.md §Perf)");
 }

@@ -177,6 +177,31 @@ fn main() {
         .expect("write BENCH_serving_attribution.json");
     println!("wrote BENCH_serving_attribution.json");
 
+    // Observability artifacts over the same fixed trace, also diffed
+    // bit-for-bit by the determinism job: the Perfetto trace and the
+    // sim-only metrics registry (no host block — `render_json`, not
+    // `render_json_with_host` — so every byte is simulated state).
+    {
+        let spec = ArrivalSpec {
+            kind: ArrivalKind::Poisson,
+            rate_per_ktick: serve::estimated_capacity_per_ktick(&cfg, &mix),
+            mix: mix.clone(),
+            high_priority_frac: 0.2,
+            requests: requests.min(200),
+            seed: 1234,
+        };
+        let out = serve::simulate(&cfg, &generate_trace(&spec));
+        let sink = mxdotp::obs::serve_spans(&out, &serve::CostModel::build(&cfg));
+        std::fs::write("OBS_trace_serving.json", mxdotp::obs::perfetto::render(&sink))
+            .expect("write OBS_trace_serving.json");
+        std::fs::write("OBS_metrics.json", mxdotp::obs::serve_metrics(&out).render_json())
+            .expect("write OBS_metrics.json");
+        println!(
+            "wrote OBS_trace_serving.json ({} spans) and OBS_metrics.json",
+            sink.len()
+        );
+    }
+
     common::baseline::enforce(
         "serving",
         &[

@@ -32,10 +32,10 @@ pub enum Command {
     /// `simulate`: run one GEMM kernel on the cycle-accurate cluster
     /// (or sharded across a cluster fabric); with `--policy`, walk the
     /// whole per-layer mixed-precision model graph instead.
-    Simulate { kernel: KernelKind, m: usize, k: usize, n: usize, cores: usize, clusters: usize, fmt: ElemFormat, seed: u64, cold_plans: bool, policy: Option<PrecisionPolicy> },
+    Simulate { kernel: KernelKind, m: usize, k: usize, n: usize, cores: usize, clusters: usize, fmt: ElemFormat, seed: u64, cold_plans: bool, policy: Option<PrecisionPolicy>, trace_out: Option<String>, obs_out: Option<String> },
     /// `reproduce`: regenerate the paper's tables/figures and the
     /// extension tables (formats, scaling, serving, pareto).
-    Reproduce { what: String, cores: usize, clusters: usize, fmt: ElemFormat, cold_plans: bool, policy: Option<PrecisionPolicy> },
+    Reproduce { what: String, cores: usize, clusters: usize, fmt: ElemFormat, cold_plans: bool, policy: Option<PrecisionPolicy>, trace_out: Option<String>, obs_out: Option<String> },
     /// `serve`: drive the serving engine over a synthetic arrival
     /// trace, executing served requests through a real executor.
     Serve {
@@ -53,6 +53,8 @@ pub enum Command {
         artifacts: String,
         cold_plans: bool,
         policy: Option<PrecisionPolicy>,
+        trace_out: Option<String>,
+        obs_out: Option<String>,
     },
     /// `info`: print the simulated machine and runtime availability.
     Info,
@@ -96,9 +98,27 @@ impl std::error::Error for CliError {}
 /// Valueless boolean flags (present = true).
 const BOOL_FLAGS: [&str; 1] = ["cold-plans"];
 
+/// Flags the `quantize` subcommand accepts.
+const QUANTIZE_FLAGS: &[&str] = &["fmt", "block", "n", "seed"];
+/// Flags the `simulate` subcommand accepts.
+const SIMULATE_FLAGS: &[&str] = &[
+    "kernel", "m", "k", "n", "cores", "clusters", "fmt", "seed", "cold-plans", "policy",
+    "trace-out", "obs-out",
+];
+/// Flags the `reproduce` subcommand accepts.
+const REPRODUCE_FLAGS: &[&str] =
+    &["cores", "clusters", "fmt", "cold-plans", "policy", "trace-out", "obs-out"];
+/// Flags the `serve` subcommand accepts.
+const SERVE_FLAGS: &[&str] = &[
+    "requests", "batch", "clusters", "fabrics", "fmt", "mix", "arrival", "slo-ticks",
+    "queue-cap", "sched", "artifacts", "cold-plans", "policy", "trace-out", "obs-out",
+];
+
 /// Split `--key value` pairs (plus valueless boolean flags) after the
-/// subcommand.
-fn flags(args: &[String]) -> Result<HashMap<String, String>, CliError> {
+/// subcommand. Flags outside `known` — typos like `--cold-plan` — are
+/// parse errors carrying the subcommand's full flag list, instead of
+/// being silently accepted (and silently ignored downstream).
+fn flags(args: &[String], known: &[&str]) -> Result<HashMap<String, String>, CliError> {
     let mut map = HashMap::new();
     let mut i = 0;
     while i < args.len() {
@@ -107,6 +127,13 @@ fn flags(args: &[String]) -> Result<HashMap<String, String>, CliError> {
             return Err(CliError(format!("unexpected argument '{k}' (flags are --key value)")));
         }
         let name = k.trim_start_matches("--");
+        if !known.contains(&name) {
+            let supported: Vec<String> = known.iter().map(|f| format!("--{f}")).collect();
+            return Err(CliError(format!(
+                "unknown flag '{k}'; supported flags: {}",
+                supported.join(", ")
+            )));
+        }
         if BOOL_FLAGS.contains(&name) {
             map.insert(name.to_string(), "true".to_string());
             i += 1;
@@ -124,6 +151,30 @@ fn flags(args: &[String]) -> Result<HashMap<String, String>, CliError> {
 /// `--cold-plans`: bypass the plan/pass caches (cold-path measurement).
 fn get_cold_plans(f: &HashMap<String, String>) -> bool {
     f.contains_key("cold-plans")
+}
+
+/// `--trace-out FILE` / `--obs-out FILE`: observability artifact
+/// paths. The parent directory must already exist — checked at parse
+/// time so a long simulation cannot die on its final write.
+fn get_out_path(
+    f: &HashMap<String, String>,
+    key: &str,
+) -> Result<Option<String>, CliError> {
+    let Some(p) = f.get(key) else { return Ok(None) };
+    if p.is_empty() {
+        return Err(CliError(format!("--{key} needs a file path")));
+    }
+    if let Some(parent) = std::path::Path::new(p).parent() {
+        // an empty parent means the file lands in the current
+        // directory, which always exists
+        if !parent.as_os_str().is_empty() && !parent.is_dir() {
+            return Err(CliError(format!(
+                "--{key} {p}: directory '{}' does not exist (create it first)",
+                parent.display()
+            )));
+        }
+    }
+    Ok(Some(p.clone()))
 }
 
 fn get_parse<T: std::str::FromStr>(
@@ -263,7 +314,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
         "help" | "--help" | "-h" => Ok(Command::Help),
         "info" => Ok(Command::Info),
         "quantize" => {
-            let f = flags(rest)?;
+            let f = flags(rest, QUANTIZE_FLAGS)?;
             Ok(Command::Quantize {
                 fmt: get_fmt(&f)?,
                 block: get_parse(&f, "block", 32)?,
@@ -272,7 +323,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             })
         }
         "simulate" => {
-            let f = flags(rest)?;
+            let f = flags(rest, SIMULATE_FLAGS)?;
             let fmt = get_fmt(&f)?;
             let kernel = kernel_for(f.get("kernel").map(String::as_str).unwrap_or("mx"), fmt)?;
             Ok(Command::Simulate {
@@ -286,6 +337,8 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 seed: get_parse(&f, "seed", 42)?,
                 cold_plans: get_cold_plans(&f),
                 policy: get_policy(&f, fmt)?,
+                trace_out: get_out_path(&f, "trace-out")?,
+                obs_out: get_out_path(&f, "obs-out")?,
             })
         }
         "reproduce" => {
@@ -303,7 +356,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 )));
             }
             let skip = usize::from(!rest.is_empty() && !rest[0].starts_with("--"));
-            let f = flags(&rest[skip..])?;
+            let f = flags(&rest[skip..], REPRODUCE_FLAGS)?;
             let fmt = get_fmt(&f)?;
             let policy = get_policy(&f, fmt)?;
             // Only the pareto sweep consumes a policy; silently
@@ -322,10 +375,12 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 fmt,
                 cold_plans: get_cold_plans(&f),
                 policy,
+                trace_out: get_out_path(&f, "trace-out")?,
+                obs_out: get_out_path(&f, "obs-out")?,
             })
         }
         "serve" => {
-            let f = flags(rest)?;
+            let f = flags(rest, SERVE_FLAGS)?;
             let fmt = get_fmt(&f)?;
             let clusters = get_clusters(&f, 1)?;
             // An explicit `--fabrics 0` is degenerate (a machine cannot
@@ -395,6 +450,8 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 artifacts: f.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
                 cold_plans: get_cold_plans(&f),
                 policy,
+                trace_out: get_out_path(&f, "trace-out")?,
+                obs_out: get_out_path(&f, "obs-out")?,
             })
         }
         other => Err(CliError(format!("unknown subcommand '{other}' (try 'help')"))),
@@ -409,16 +466,18 @@ USAGE:
   mxdotp-cli quantize  [--fmt e4m3|e5m2|e3m2|e2m3|e2m1|int8] [--block 32] [--n 8] [--seed S]
   mxdotp-cli simulate  [--kernel mx|fp32|fp8sw] [--m 64] [--k 256] [--n 64]
                        [--cores 8] [--clusters 1] [--fmt e4m3] [--seed S] [--cold-plans]
-                       [--policy PRESET|class=fmt,...]
+                       [--policy PRESET|class=fmt,...] [--trace-out FILE] [--obs-out FILE]
                        (--clusters N > 1 shards the MX GEMM across N simulated clusters;
                         --policy walks the whole mixed-precision model graph instead)
   mxdotp-cli reproduce [fig3|fig4|table3|formats|scaling|serving|pareto|all] [--cores 8]
                        [--clusters 8] [--fmt e4m3] [--cold-plans] [--policy ...]
+                       [--trace-out FILE] [--obs-out FILE]
   mxdotp-cli serve     [--requests 16] [--batch 8] [--clusters 1] [--fabrics N]
                        [--fmt e4m3] [--mix e4m3:0.6,e2m1:0.4 | --policy PRESET|class=fmt,...]
                        [--arrival poisson[:RATE] | bursty:RATE:FACTOR:PERIOD]
                        [--slo-ticks 0] [--queue-cap 128]
                        [--sched continuous|barrier] [--artifacts DIR] [--cold-plans]
+                       [--trace-out FILE] [--obs-out FILE]
   mxdotp-cli info
 
 --fmt selects the MX element format end to end (all six OCP formats:
@@ -458,6 +517,17 @@ schedulers on the same traces.
 --cold-plans bypasses the compile-once/execute-many plan cache (plans,
 quantized weight tiles, memoized passes) and measures the from-scratch
 path; results are bit-identical either way.
+
+--trace-out writes a Chrome/Perfetto trace-event JSON file (open it at
+https://ui.perfetto.dev) with the run on one simulated timeline: serve
+batches, weight-reload stalls and per-request service spans per
+fabric, per-cluster shard placement, per-layer spans with MX_FMT CSR
+switch markers, and a queued-requests counter track (DESIGN.md §14).
+--obs-out writes the metrics registry (counters / gauges / histograms
+rolled up from the same run) as pretty-printed JSON. Both artifacts
+are stamped in simulated time only, so reruns are byte-identical;
+host wall-clock lives under host_* keys excluded from determinism
+checks. The parent directory of either path must already exist.
 ";
 
 #[cfg(test)]
@@ -489,9 +559,59 @@ mod tests {
                 fmt: ElemFormat::E4M3,
                 seed: 42,
                 cold_plans: false,
-                policy: None
+                policy: None,
+                trace_out: None,
+                obs_out: None
             }
         );
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_listing_the_supported_set() {
+        // a --cold-plans typo must not be silently accepted (it used to
+        // be: any unknown flag parsed fine and was ignored downstream)
+        let err = parse(&argv("simulate --cold-plan")).unwrap_err();
+        assert!(err.0.contains("unknown flag '--cold-plan'"), "{err}");
+        for flag in ["--cold-plans", "--trace-out", "--obs-out", "--kernel"] {
+            assert!(err.0.contains(flag), "error must list '{flag}': {err}");
+        }
+        let err = parse(&argv("serve --traceout t.json")).unwrap_err();
+        assert!(err.0.contains("unknown flag '--traceout'"), "{err}");
+        assert!(err.0.contains("--trace-out"), "{err}");
+        assert!(parse(&argv("quantize --kernel mx")).is_err());
+        assert!(parse(&argv("reproduce scaling --batch 4")).is_err());
+    }
+
+    #[test]
+    fn trace_and_obs_out_paths_are_validated_at_parse_time() {
+        // bare filename (parent = cwd) parses fine on all three
+        assert!(matches!(
+            parse(&argv("serve --trace-out trace.json --obs-out m.json")),
+            Ok(Command::Serve { trace_out: Some(ref t), obs_out: Some(ref o), .. })
+                if t == "trace.json" && o == "m.json"
+        ));
+        assert!(matches!(
+            parse(&argv("simulate --trace-out t.json")),
+            Ok(Command::Simulate { trace_out: Some(_), obs_out: None, .. })
+        ));
+        assert!(matches!(
+            parse(&argv("reproduce serving --obs-out m.json")),
+            Ok(Command::Reproduce { obs_out: Some(_), .. })
+        ));
+        // a missing parent directory fails at parse time, with the path
+        let err =
+            parse(&argv("serve --trace-out /no/such/dir/trace.json")).unwrap_err();
+        assert!(err.0.contains("--trace-out"), "{err}");
+        assert!(err.0.contains("/no/such/dir"), "{err}");
+        assert!(err.0.contains("does not exist"), "{err}");
+        assert!(parse(&argv("simulate --obs-out /no/such/dir/m.json")).is_err());
+        // an empty path is a clear error, not a write to ""
+        assert!(parse(&argv2(&["serve", "--trace-out", ""])).is_err());
+        // defaults stay off
+        assert!(matches!(
+            parse(&argv("serve")),
+            Ok(Command::Serve { trace_out: None, obs_out: None, .. })
+        ));
     }
 
     #[test]

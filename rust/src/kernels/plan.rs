@@ -413,7 +413,7 @@ impl PlanCache {
     pub fn plan(&self, key: PlanKey) -> Arc<MmPlan> {
         if !self.enabled {
             self.plan_misses.fetch_add(1, Ordering::Relaxed);
-            return Arc::new(MmPlan::build(key));
+            return Arc::new(Self::build_timed(key));
         }
         if let Some(p) = self.plans.lock().unwrap().get(&key) {
             self.plan_hits.fetch_add(1, Ordering::Relaxed);
@@ -422,10 +422,21 @@ impl PlanCache {
         self.plan_misses.fetch_add(1, Ordering::Relaxed);
         // Build outside the lock (compilation can take a while); a
         // racing builder just produces an identical plan.
-        let built = Arc::new(MmPlan::build(key));
+        let built = Arc::new(Self::build_timed(key));
         let mut plans = self.plans.lock().unwrap();
         evict_half(&mut plans, PLANS_CAP);
         Arc::clone(plans.entry(key).or_insert(built))
+    }
+
+    /// [`MmPlan::build`] with host wall-clock recorded into the
+    /// observability profile (`obs::hostprof`) — the PlanCache side of
+    /// the simulator-speed accounting the hotpath bench reports. The
+    /// timing is export-only; the built plan is byte-identical.
+    fn build_timed(key: PlanKey) -> MmPlan {
+        let host_start = std::time::Instant::now();
+        let plan = MmPlan::build(key);
+        crate::obs::hostprof::record_plan_build(host_start.elapsed().as_nanos() as u64);
+        plan
     }
 
     /// Get or quantize the B tile for `(b, shape)` — `bfp` must be

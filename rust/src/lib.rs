@@ -54,6 +54,11 @@
 //! * [`workload`] — DeiT-Tiny-shaped synthetic workload generation,
 //!   the analytic cost models, and the open-loop arrival-trace
 //!   generators (Poisson / bursty, per-format mix).
+//! * [`obs`] — the deterministic observability layer (DESIGN.md §14):
+//!   sim-time span tracing across the serve → fabric → layer → kernel
+//!   hierarchy, the typed metrics registry behind `OBS_metrics.json`,
+//!   the Chrome/Perfetto trace exporter behind `--trace-out`, and the
+//!   host-side simulator-speed profile surfaced by the hotpath bench.
 
 #![warn(missing_docs)]
 
@@ -64,6 +69,7 @@ pub mod kernels;
 pub mod cli;
 pub mod coordinator;
 pub mod model;
+pub mod obs;
 pub mod report;
 pub mod rng;
 pub mod runtime;

@@ -9,11 +9,12 @@ use mxdotp::coordinator::{ModelExecutor, PjrtExecutor};
 use mxdotp::formats::{ElemFormat, MxVector};
 use mxdotp::kernels::{run_mm, MmProblem};
 use mxdotp::model::{policy_hw_run, GraphExecutor, ModelGraph, PrecisionPolicy};
+use mxdotp::obs;
 use mxdotp::rng::XorShift;
 use mxdotp::runtime::Runtime;
-use mxdotp::scaleout::{measure_parallel_efficiency, sharded_mm, ScaleoutConfig};
+use mxdotp::scaleout::{measure_parallel_efficiency, sharded_mm, sharded_mm_traced, ScaleoutConfig};
 use mxdotp::serve::{self, scheduler::ServeOutcome, ServeConfig};
-use mxdotp::workload::arrivals::{generate_trace, ArrivalSpec};
+use mxdotp::workload::arrivals::{generate_trace, ArrivalKind, ArrivalSpec};
 use mxdotp::workload::{calibrate_util, generate_input, generate_params, DeitConfig};
 use mxdotp::{report, snitch};
 use std::collections::HashMap;
@@ -67,7 +68,21 @@ fn main() -> Result<()> {
                 data.iter().zip(&dq).map(|(a, b)| (a - b).abs()).sum::<f32>() / data.len() as f32;
             println!("  mean |dequant - original| = {err:.5}");
         }
-        Command::Simulate { kernel, m, k, n, cores, clusters, fmt, seed, cold_plans, policy } => {
+        Command::Simulate {
+            kernel,
+            m,
+            k,
+            n,
+            cores,
+            clusters,
+            fmt,
+            seed,
+            cold_plans,
+            policy,
+            trace_out,
+            obs_out,
+        } => {
+            let want_obs = trace_out.is_some() || obs_out.is_some();
             if let Some(policy) = policy {
                 // Policy mode: walk the whole mixed-precision model
                 // graph instead of one GEMM (the --m/k/n flags do not
@@ -100,6 +115,14 @@ fn main() -> Result<()> {
                         l.energy_uj
                     );
                 }
+                if want_obs {
+                    write_obs_artifacts(
+                        &obs::policy_spans(&run),
+                        &obs::policy_metrics(&run),
+                        trace_out.as_deref(),
+                        obs_out.as_deref(),
+                    )?;
+                }
                 return Ok(());
             }
             let p = MmProblem { m, k, n, fmt, block_size: 32 };
@@ -116,7 +139,14 @@ fn main() -> Result<()> {
                     cold_plans,
                     ..ScaleoutConfig::default()
                 };
-                let run = sharded_mm(&scfg, p, &a, &b);
+                let mut sink = obs::TraceSink::new();
+                // tracing is derived from the same deterministic
+                // assignment pass, so the traced run is bit-identical
+                let run = if want_obs {
+                    sharded_mm_traced(&scfg, p, &a, &b, &mut sink)
+                } else {
+                    sharded_mm(&scfg, p, &a, &b)
+                };
                 println!(
                     "MX({fmt}) {m}x{k}x{n} sharded across {clusters} clusters x {cores} cores \
                      ({} shards):",
@@ -137,12 +167,33 @@ fn main() -> Result<()> {
                         st.id, st.shards, st.passes, st.cycles, st.mxdotp, st.energy_uj
                     );
                 }
+                if want_obs {
+                    write_obs_artifacts(
+                        &sink,
+                        &obs::sharded_metrics(&run),
+                        trace_out.as_deref(),
+                        obs_out.as_deref(),
+                    )?;
+                }
             } else {
                 let run = run_mm(kernel, p, &a, &b, cores);
                 println!("{}", report::render_run_detailed(&run));
+                if want_obs {
+                    let primary = |c: &mxdotp::snitch::fpu::FpuCounters| match run.kind {
+                        mxdotp::kernels::KernelKind::Mx(_) => c.mxdotp,
+                        mxdotp::kernels::KernelKind::Fp32 => c.vfmac,
+                        mxdotp::kernels::KernelKind::Fp8ToFp32 => c.fma_s,
+                    };
+                    write_obs_artifacts(
+                        &obs::attribution_spans(&run.perf, &primary),
+                        &obs::run_metrics(&run, &primary),
+                        trace_out.as_deref(),
+                        obs_out.as_deref(),
+                    )?;
+                }
             }
         }
-        Command::Reproduce { what, cores, clusters, fmt, cold_plans, policy } => {
+        Command::Reproduce { what, cores, clusters, fmt, cold_plans, policy, trace_out, obs_out } => {
             if what == "fig3" || what == "all" {
                 println!("{}", report::render_fig3());
             }
@@ -235,6 +286,37 @@ fn main() -> Result<()> {
                 let points = report::scaleout_scaling(&cfg, &sweep, 42, cold_plans);
                 println!("{}", report::render_scaling(&points, &cfg));
             }
+            if trace_out.is_some() || obs_out.is_some() {
+                // The reproduce targets print tables; the observability
+                // artifacts capture one canonical serving run at the
+                // same --fmt/--clusters operating point (serving
+                // exercises the whole stack, queue to kernel).
+                let model = DeitConfig { fmt, ..DeitConfig::default() };
+                let scfg = ServeConfig {
+                    model,
+                    clusters,
+                    cores_per_cluster: cores,
+                    ..ServeConfig::default()
+                };
+                let secondary =
+                    if fmt == ElemFormat::E2M1 { ElemFormat::E4M3 } else { ElemFormat::E2M1 };
+                let mix = vec![(fmt, 0.6), (secondary, 0.4)];
+                let spec = ArrivalSpec {
+                    kind: ArrivalKind::Poisson,
+                    rate_per_ktick: 0.5 * serve::estimated_capacity_per_ktick(&scfg, &mix),
+                    mix,
+                    high_priority_frac: 0.2,
+                    requests: 200,
+                    seed: 42,
+                };
+                let outcome = serve::simulate(&scfg, &generate_trace(&spec));
+                write_obs_artifacts(
+                    &obs::serve_spans(&outcome, &serve::CostModel::build(&scfg)),
+                    &obs::serve_metrics(&outcome),
+                    trace_out.as_deref(),
+                    obs_out.as_deref(),
+                )?;
+            }
         }
         Command::Serve {
             requests,
@@ -251,6 +333,8 @@ fn main() -> Result<()> {
             artifacts,
             cold_plans,
             policy,
+            trace_out,
+            obs_out,
         } => {
             let model = DeitConfig { fmt, ..DeitConfig::default() };
             // Calibrate at the mix's dominant format; the analytic
@@ -365,6 +449,16 @@ fn main() -> Result<()> {
                 }
             }
             let outcome = serve::simulate(&scfg, &trace);
+            if trace_out.is_some() || obs_out.is_some() {
+                // Derived post-hoc from the outcome: writing the
+                // artifacts cannot change any simulated number.
+                write_obs_artifacts(
+                    &obs::serve_spans(&outcome, &serve::CostModel::build(&scfg)),
+                    &obs::serve_metrics(&outcome),
+                    trace_out.as_deref(),
+                    obs_out.as_deref(),
+                )?;
+            }
 
             // Execute every served request through a real executor —
             // PJRT when artifacts are present and the mix is a single
@@ -442,6 +536,27 @@ fn main() -> Result<()> {
             let wall = t0.elapsed().as_secs_f64();
             print!("{}", render_serve_summary(&outcome, executed, wall));
         }
+    }
+    Ok(())
+}
+
+/// Write the `--trace-out` / `--obs-out` artifacts for one run and
+/// print a note per file. Spans and the registry are sim-time only;
+/// the registry JSON additionally carries the `host_*` simulator-speed
+/// profile (quarantined keys, excluded from determinism checks).
+fn write_obs_artifacts(
+    sink: &obs::TraceSink,
+    reg: &obs::Registry,
+    trace_out: Option<&str>,
+    obs_out: Option<&str>,
+) -> Result<()> {
+    if let Some(path) = trace_out {
+        std::fs::write(path, obs::perfetto::render(sink))?;
+        println!("{}", report::render_trace_note(path));
+    }
+    if let Some(path) = obs_out {
+        std::fs::write(path, reg.render_json_with_host(Some(&obs::hostprof::snapshot())))?;
+        println!("{}", report::render_obs_note(path));
     }
     Ok(())
 }

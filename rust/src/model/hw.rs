@@ -87,6 +87,24 @@ impl PolicyHwRun {
         }
         self.flops as f64 / self.wall_cycles as f64
     }
+
+    /// Start cycle of each layer on the fabric timeline: the walk is
+    /// sequential, so layer `i` begins at the cumulative wall of
+    /// layers `0..i`. Same length as [`Self::layers`]; the end of the
+    /// last layer is [`Self::wall_cycles`]. This is what the
+    /// observability layer (`crate::obs::policy_spans`) lays the
+    /// per-layer trace spans out along.
+    pub fn layer_start_cycles(&self) -> Vec<u64> {
+        let mut at = 0u64;
+        self.layers
+            .iter()
+            .map(|l| {
+                let start = at;
+                at += l.wall_cycles;
+                start
+            })
+            .collect()
+    }
 }
 
 /// Walk `graph` under `policy` on a `clusters`-wide fabric of
@@ -193,6 +211,14 @@ mod tests {
         assert_eq!(
             fmts,
             vec![ElemFormat::E4M3, ElemFormat::E4M3, ElemFormat::E2M1, ElemFormat::E2M1]
+        );
+        // layer timeline offsets tile the wall exactly
+        let starts = r4.layer_start_cycles();
+        assert_eq!(starts.len(), r4.layers.len());
+        assert_eq!(starts[0], 0);
+        assert_eq!(
+            starts.last().unwrap() + r4.layers.last().unwrap().wall_cycles,
+            r4.wall_cycles
         );
     }
 }

@@ -1,0 +1,131 @@
+//! Host-side wall-clock profiling of the simulator itself.
+//!
+//! Everything else in `obs` is stamped in *simulated* time; this
+//! module is the one sanctioned home for **host** wall-clock. It
+//! answers the ROADMAP's "simulator hot-loop speed" question — how
+//! many simulated cycles does a host microsecond buy? — by timing the
+//! two host-dominant paths:
+//!
+//! * the snitch decode/execute hot loop
+//!   ([`crate::snitch::Cluster::run_checked`] wraps every simulated
+//!   run with one [`std::time::Instant`] pair), and
+//! * plan compilation ([`crate::kernels::PlanCache`] times each
+//!   [`crate::kernels::MmPlan`] build).
+//!
+//! The counters are process-global relaxed atomics: two `fetch_add`s
+//! per multi-thousand-cycle cluster run, cheap enough to stay
+//! always-on. Their values are **never** fed back into simulation and
+//! never appear in deterministic artifacts except under `host_`-
+//! prefixed keys (which `tools/check_determinism.py` strips), so the
+//! bit-reproducibility story is untouched. `benches/hotpath.rs`
+//! surfaces the headline ratio as `sim_cycles_per_host_us` in
+//! `BENCH_hotpath.json`, min-bounded by the bench-regression gate.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static SIM_WALL_NANOS: AtomicU64 = AtomicU64::new(0);
+static SIM_CYCLES: AtomicU64 = AtomicU64::new(0);
+static SIM_RUNS: AtomicU64 = AtomicU64::new(0);
+static PLAN_BUILD_NANOS: AtomicU64 = AtomicU64::new(0);
+static PLAN_BUILDS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one timed simulator run: `nanos` of host wall-clock spent
+/// advancing `cycles` simulated cycles.
+pub fn record_sim(nanos: u64, cycles: u64) {
+    SIM_WALL_NANOS.fetch_add(nanos, Ordering::Relaxed);
+    SIM_CYCLES.fetch_add(cycles, Ordering::Relaxed);
+    SIM_RUNS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record one timed plan compilation.
+pub fn record_plan_build(nanos: u64) {
+    PLAN_BUILD_NANOS.fetch_add(nanos, Ordering::Relaxed);
+    PLAN_BUILDS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Zero every counter — call at the start of a measurement window
+/// (benches do; the CLI reports whole-process totals).
+pub fn reset() {
+    SIM_WALL_NANOS.store(0, Ordering::Relaxed);
+    SIM_CYCLES.store(0, Ordering::Relaxed);
+    SIM_RUNS.store(0, Ordering::Relaxed);
+    PLAN_BUILD_NANOS.store(0, Ordering::Relaxed);
+    PLAN_BUILDS.store(0, Ordering::Relaxed);
+}
+
+/// A point-in-time copy of the profiling counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HostProfile {
+    /// Host nanoseconds spent inside timed simulator runs.
+    pub sim_wall_nanos: u64,
+    /// Simulated cycles advanced by those runs.
+    pub sim_cycles: u64,
+    /// Number of timed simulator runs.
+    pub sim_runs: u64,
+    /// Host nanoseconds spent compiling `MmPlan`s.
+    pub plan_build_nanos: u64,
+    /// Number of plan compilations.
+    pub plan_builds: u64,
+}
+
+impl HostProfile {
+    /// Host milliseconds spent simulating (`sim_wall_ms` in
+    /// `BENCH_hotpath.json`).
+    pub fn sim_wall_ms(&self) -> f64 {
+        self.sim_wall_nanos as f64 / 1e6
+    }
+
+    /// Simulator speed: simulated cycles per host microsecond (the
+    /// gated `sim_cycles_per_host_us` metric). 0 when nothing ran.
+    pub fn sim_cycles_per_host_us(&self) -> f64 {
+        if self.sim_wall_nanos == 0 {
+            return 0.0;
+        }
+        self.sim_cycles as f64 * 1e3 / self.sim_wall_nanos as f64
+    }
+}
+
+/// Snapshot the current counter values.
+pub fn snapshot() -> HostProfile {
+    HostProfile {
+        sim_wall_nanos: SIM_WALL_NANOS.load(Ordering::Relaxed),
+        sim_cycles: SIM_CYCLES.load(Ordering::Relaxed),
+        sim_runs: SIM_RUNS.load(Ordering::Relaxed),
+        plan_build_nanos: PLAN_BUILD_NANOS.load(Ordering::Relaxed),
+        plan_builds: PLAN_BUILDS.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_are_well_defined() {
+        // Pure arithmetic on a local snapshot: the global counters are
+        // shared with concurrently running tests, so assertions on
+        // them would race — the integration suite covers accumulation.
+        let p = HostProfile {
+            sim_wall_nanos: 2_000_000,
+            sim_cycles: 10_000,
+            sim_runs: 2,
+            plan_build_nanos: 0,
+            plan_builds: 0,
+        };
+        assert!((p.sim_wall_ms() - 2.0).abs() < 1e-12);
+        assert!((p.sim_cycles_per_host_us() - 5.0).abs() < 1e-12);
+        assert_eq!(HostProfile::default().sim_cycles_per_host_us(), 0.0);
+    }
+
+    #[test]
+    fn recording_accumulates_monotonically() {
+        let before = snapshot();
+        record_sim(1_000, 500);
+        record_plan_build(250);
+        let after = snapshot();
+        assert!(after.sim_wall_nanos >= before.sim_wall_nanos + 1_000);
+        assert!(after.sim_cycles >= before.sim_cycles + 500);
+        assert!(after.sim_runs >= before.sim_runs + 1);
+        assert!(after.plan_builds >= before.plan_builds + 1);
+    }
+}

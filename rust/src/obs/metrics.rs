@@ -1,0 +1,265 @@
+//! The typed metrics registry behind `OBS_metrics.json`.
+//!
+//! Three metric kinds, all keyed by a flat string name and stored in
+//! `BTreeMap`s so every rendering is canonically ordered:
+//!
+//! * **counters** — monotonically accumulated `u64` event counts
+//!   (requests served, reloads paid, simulated cycles);
+//! * **gauges** — point-in-time `f64` levels (utilization, maximum
+//!   queue depth);
+//! * **histograms** — `u64` sample sets summarized with the same
+//!   nearest-rank rule as the serving metrics
+//!   ([`crate::serve::metrics::percentile_ticks`]), so an exported
+//!   p99 is always a value some sample actually took.
+//!
+//! Every value recorded here is derived from **simulated** state, so
+//! [`Registry::render_json`] is a pure function of the run and two
+//! identical runs export byte-identical files — the property the
+//! determinism CI job checks. Host wall-clock numbers are quarantined
+//! in an optional `host_profile` block whose keys all carry the
+//! `host_` prefix that `tools/check_determinism.py` strips
+//! (DESIGN.md §14).
+
+use super::hostprof::HostProfile;
+use crate::serve::metrics::percentile_ticks;
+use std::collections::BTreeMap;
+
+/// Render a finite `f64` as a JSON number (shortest round-trip form);
+/// non-finite values render as `null`.
+pub(crate) fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:?}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Escape a string for embedding in a JSON document (quotes included).
+pub(crate) fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// A typed, deterministically ordered metrics registry.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Vec<u64>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Add `v` to the named counter (creating it at 0).
+    pub fn counter_add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    /// Current value of a counter (0 when never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set the named gauge to `v` (last write wins).
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Current value of a gauge, if it was ever set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Record one sample into the named histogram.
+    pub fn hist_record(&mut self, name: &str, v: u64) {
+        self.hists.entry(name.to_string()).or_default().push(v);
+    }
+
+    /// Nearest-rank summary of a histogram:
+    /// `(count, min, p50, p95, p99, max, sum)`; all zero when empty.
+    pub fn hist_summary(&self, name: &str) -> (usize, u64, u64, u64, u64, u64, u64) {
+        let Some(samples) = self.hists.get(name) else {
+            return (0, 0, 0, 0, 0, 0, 0);
+        };
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        let count = sorted.len();
+        if count == 0 {
+            return (0, 0, 0, 0, 0, 0, 0);
+        }
+        (
+            count,
+            sorted[0],
+            percentile_ticks(&sorted, 0.50),
+            percentile_ticks(&sorted, 0.95),
+            percentile_ticks(&sorted, 0.99),
+            *sorted.last().unwrap(),
+            sorted.iter().sum(),
+        )
+    }
+
+    /// Absorb another registry: counters add, gauges overwrite,
+    /// histogram samples append.
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, v) in &other.hists {
+            self.hists.entry(k.clone()).or_default().extend(v);
+        }
+    }
+
+    /// Render the registry as a deterministic pretty-printed JSON
+    /// object: `BTreeMap` key order, shortest-round-trip floats, no
+    /// host state — two identical simulated runs produce byte-equal
+    /// output.
+    pub fn render_json(&self) -> String {
+        self.render_json_with_host(None)
+    }
+
+    /// [`Registry::render_json`] plus an optional `host_profile` block
+    /// of wall-clock measurements. Every key in the block carries the
+    /// `host_` prefix: the determinism checker strips such keys, so
+    /// adding host numbers never breaks twice-run bit-identity.
+    pub fn render_json_with_host(&self, host: Option<&HostProfile>) -> String {
+        let mut out = String::from("{\n");
+        out.push_str("  \"counters\": {");
+        for (i, (k, v)) in self.counters.iter().enumerate() {
+            out.push_str(if i == 0 { "\n" } else { ",\n" });
+            out.push_str(&format!("    {}: {}", json_string(k), v));
+        }
+        out.push_str(if self.counters.is_empty() { "},\n" } else { "\n  },\n" });
+        out.push_str("  \"gauges\": {");
+        for (i, (k, v)) in self.gauges.iter().enumerate() {
+            out.push_str(if i == 0 { "\n" } else { ",\n" });
+            out.push_str(&format!("    {}: {}", json_string(k), json_f64(*v)));
+        }
+        out.push_str(if self.gauges.is_empty() { "},\n" } else { "\n  },\n" });
+        out.push_str("  \"histograms\": {");
+        for (i, k) in self.hists.keys().enumerate() {
+            let (count, min, p50, p95, p99, max, sum) = self.hist_summary(k);
+            let mean = if count > 0 { sum as f64 / count as f64 } else { 0.0 };
+            out.push_str(if i == 0 { "\n" } else { ",\n" });
+            out.push_str(&format!(
+                "    {}: {{ \"count\": {count}, \"min\": {min}, \"p50\": {p50}, \
+                 \"p95\": {p95}, \"p99\": {p99}, \"max\": {max}, \"sum\": {sum}, \
+                 \"mean\": {} }}",
+                json_string(k),
+                json_f64(mean)
+            ));
+        }
+        out.push_str(if self.hists.is_empty() { "}" } else { "\n  }" });
+        if let Some(h) = host {
+            out.push_str(",\n  \"host_profile\": {\n");
+            out.push_str(&format!(
+                "    \"host_sim_wall_ms\": {},\n",
+                json_f64(h.sim_wall_ms())
+            ));
+            out.push_str(&format!(
+                "    \"host_sim_cycles_per_host_us\": {},\n",
+                json_f64(h.sim_cycles_per_host_us())
+            ));
+            out.push_str(&format!("    \"host_sim_runs\": {},\n", h.sim_runs));
+            out.push_str(&format!("    \"host_plan_builds\": {},\n", h.plan_builds));
+            out.push_str(&format!(
+                "    \"host_plan_build_ms\": {}\n",
+                json_f64(h.plan_build_nanos as f64 / 1e6)
+            ));
+            out.push_str("  }");
+        }
+        out.push_str("\n}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms_round_trip() {
+        let mut r = Registry::new();
+        r.counter_add("serve.served", 3);
+        r.counter_add("serve.served", 2);
+        r.gauge_set("util", 0.5);
+        for v in [10, 20, 30, 40] {
+            r.hist_record("lat", v);
+        }
+        assert_eq!(r.counter("serve.served"), 5);
+        assert_eq!(r.counter("missing"), 0);
+        assert_eq!(r.gauge("util"), Some(0.5));
+        let (count, min, p50, _, _, max, sum) = r.hist_summary("lat");
+        assert_eq!((count, min, max, sum), (4, 10, 40, 100));
+        assert_eq!(p50, 30); // matches serve::metrics doctest ranking
+        assert_eq!(r.hist_summary("missing").0, 0);
+    }
+
+    #[test]
+    fn render_is_deterministic_and_ordered() {
+        let build = || {
+            let mut r = Registry::new();
+            r.counter_add("b", 2);
+            r.counter_add("a", 1);
+            r.gauge_set("z", 1.25);
+            r.hist_record("h", 7);
+            r
+        };
+        let j1 = build().render_json();
+        let j2 = build().render_json();
+        assert_eq!(j1, j2, "identical registries must render byte-identically");
+        // BTreeMap ordering: "a" before "b" regardless of insert order
+        assert!(j1.find("\"a\"").unwrap() < j1.find("\"b\"").unwrap());
+        assert!(j1.contains("\"p99\": 7"));
+    }
+
+    #[test]
+    fn merge_adds_counters_and_appends_samples() {
+        let mut a = Registry::new();
+        a.counter_add("c", 1);
+        a.hist_record("h", 1);
+        let mut b = Registry::new();
+        b.counter_add("c", 2);
+        b.hist_record("h", 9);
+        b.gauge_set("g", 4.0);
+        a.merge(&b);
+        assert_eq!(a.counter("c"), 3);
+        assert_eq!(a.hist_summary("h").0, 2);
+        assert_eq!(a.gauge("g"), Some(4.0));
+    }
+
+    #[test]
+    fn json_helpers_escape_and_render() {
+        assert_eq!(json_string("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_f64(0.5), "0.5");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn empty_registry_renders_valid_json() {
+        let j = Registry::new().render_json();
+        assert!(j.contains("\"counters\": {}"));
+        assert!(j.contains("\"gauges\": {}"));
+        assert!(j.contains("\"histograms\": {}"));
+    }
+}

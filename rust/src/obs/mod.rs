@@ -1,0 +1,470 @@
+//! Deterministic observability: sim-time span tracing, a typed
+//! metrics registry, and Chrome/Perfetto trace export (DESIGN.md §14).
+//!
+//! The paper's headline numbers rest on *explaining* where cycles go.
+//! [`crate::snitch::trace::CycleBreakdown`] does that for one kernel
+//! run; this layer extends the attribution across the whole
+//! `serve tick → fabric lease → layer → kernel plan/execute →
+//! cluster run` hierarchy:
+//!
+//! * [`span`] — sim-time [`Span`]s collected by an append-only
+//!   [`TraceSink`] (per-worker, merge-after-join; no locks);
+//! * [`metrics`] — the [`Registry`] of counters/gauges/nearest-rank
+//!   histograms exported as `OBS_metrics.json`;
+//! * [`perfetto`] — the trace-event JSON exporter behind
+//!   `--trace-out` (load the file in <https://ui.perfetto.dev>);
+//! * [`hostprof`] — the one sanctioned home for **host** wall-clock
+//!   (simulator speed), quarantined under `host_*` keys.
+//!
+//! **Determinism rules.** Spans and metrics are stamped exclusively in
+//! simulated time (cycles = ns at the 1 GHz operating point; 1
+//! scheduler tick = [`crate::serve::CYCLES_PER_TICK`] cycles) and are
+//! *derived post-hoc* from the simulation's deterministic outcomes
+//! ([`crate::serve::scheduler::ServeOutcome`],
+//! [`crate::model::PolicyHwRun`], per-cluster stats) rather than
+//! threaded through scheduler hot loops. That construction makes the
+//! two acceptance properties structural: enabling tracing cannot
+//! change a simulated number (the simulation never observes the
+//! sink), and disabled tracing is allocation-free (no sink exists).
+//! The derivations reconcile exactly with the engine's own
+//! accounting: per-fabric serve-span durations sum to the scheduler's
+//! busy ticks, asserted in `tests/obs.rs`.
+
+pub mod hostprof;
+pub mod metrics;
+pub mod perfetto;
+pub mod span;
+
+pub use metrics::Registry;
+pub use span::{CounterSample, Span, TraceSink};
+
+use crate::kernels::MmRun;
+use crate::model::PolicyHwRun;
+use crate::scaleout::ShardedRun;
+use crate::serve::scheduler::ServeOutcome;
+use crate::serve::{batches_in_dispatch_order, CostModel, SchedulerKind};
+use crate::snitch::cluster::PerfCounters;
+use crate::snitch::fpu::FpuCounters;
+use crate::snitch::trace::CycleBreakdown;
+use crate::workload::arrivals::Priority;
+use std::collections::BTreeMap;
+
+/// Process lane for serving-engine tracks (one track per fabric).
+pub const PID_SERVE: u32 = 1;
+/// Process lane for scale-out cluster tracks (one per cluster).
+pub const PID_CLUSTERS: u32 = 2;
+/// Process lane for model-graph layer tracks.
+pub const PID_MODEL: u32 = 3;
+/// Process lane for per-core cycle-attribution tracks.
+pub const PID_CORES: u32 = 4;
+
+/// Simulated nanoseconds per scheduler tick (1 cycle = 1 ns at the
+/// paper's 1 GHz clock, so this equals
+/// [`crate::serve::CYCLES_PER_TICK`]).
+pub const NS_PER_TICK: u64 = crate::serve::CYCLES_PER_TICK;
+
+/// Convert scheduler ticks to simulated nanoseconds.
+pub fn ticks_to_ns(ticks: u64) -> u64 {
+    ticks * NS_PER_TICK
+}
+
+/// Stable lowercase label for a scheduling priority.
+fn priority_label(p: Priority) -> &'static str {
+    match p {
+        Priority::High => "high",
+        Priority::Normal => "normal",
+    }
+}
+
+/// Derive the serving timeline of `outcome` as a trace: one track per
+/// fabric carrying batch setup/reload overhead spans and per-request
+/// service spans, plus a machine-wide queue-depth counter.
+///
+/// The derivation mirrors the scheduler's busy-tick accounting
+/// exactly, so for every fabric `f` the span durations on its track
+/// sum to `outcome.fabric_busy_ticks[f]` (in ticks) — the
+/// reconciliation invariant `tests/obs.rs` asserts. Barrier batches
+/// (which occupy the whole machine and complete as a unit) become one
+/// span per batch; continuous batches decompose into setup + reload
+/// overhead (split at `costs.setup_ticks`) followed by the
+/// back-to-back per-request service spans.
+pub fn serve_spans(outcome: &ServeOutcome, costs: &CostModel) -> TraceSink {
+    let mut sink = TraceSink::new();
+    sink.name_process(PID_SERVE, format!("serving machine ({})", outcome.scheduler.name()));
+    for f in 0..outcome.fabric_busy_ticks.len() {
+        sink.name_thread(PID_SERVE, f as u32, format!("fabric {f}"));
+    }
+    for (bi, batch) in batches_in_dispatch_order(outcome).iter().enumerate() {
+        let fabric = batch[0].fabric as u32;
+        match outcome.scheduler {
+            SchedulerKind::Barrier => {
+                // The whole batch (setup + member reloads + services)
+                // occupies the machine as one unit; its span covers
+                // exactly the busy interval the scheduler charged.
+                let start = batch[0].dispatch_tick;
+                let end = batch[0].complete_tick;
+                sink.record(Span {
+                    pid: PID_SERVE,
+                    tid: fabric,
+                    name: format!("batch {bi} ({} req)", batch.len()),
+                    cat: "serve.batch",
+                    ts_ns: ticks_to_ns(start),
+                    dur_ns: ticks_to_ns(end - start),
+                    args: vec![
+                        ("batch_id", batch[0].batch_id.to_string()),
+                        ("requests", batch.len().to_string()),
+                    ],
+                });
+            }
+            SchedulerKind::Continuous => {
+                // Batch opened at the earliest dispatch; services run
+                // back-to-back from the end of the setup+reload
+                // overhead. Both facts are reconstructible from the
+                // served rows alone because the scheduler stamps
+                // dispatch/complete/service ticks per request.
+                let open = batch.iter().map(|r| r.dispatch_tick).min().unwrap();
+                let first_svc =
+                    batch.iter().map(|r| r.complete_tick - r.service_ticks).min().unwrap();
+                let overhead = first_svc.saturating_sub(open);
+                if overhead > 0 {
+                    let setup = overhead.min(costs.setup_ticks);
+                    sink.record(Span {
+                        pid: PID_SERVE,
+                        tid: fabric,
+                        name: "setup".to_string(),
+                        cat: "serve.setup",
+                        ts_ns: ticks_to_ns(open),
+                        dur_ns: ticks_to_ns(setup),
+                        args: vec![("batch_id", batch[0].batch_id.to_string())],
+                    });
+                    if overhead > setup {
+                        sink.record(Span {
+                            pid: PID_SERVE,
+                            tid: fabric,
+                            name: format!("reload → {}", batch[0].policy),
+                            cat: "serve.reload",
+                            ts_ns: ticks_to_ns(open + setup),
+                            dur_ns: ticks_to_ns(overhead - setup),
+                            args: vec![("policy", batch[0].policy.to_string())],
+                        });
+                    }
+                }
+                let mut members = batch.clone();
+                members.sort_by_key(|r| (r.complete_tick, r.id));
+                for r in members {
+                    sink.record(Span {
+                        pid: PID_SERVE,
+                        tid: fabric,
+                        name: format!("req {}", r.id),
+                        cat: "serve.request",
+                        ts_ns: ticks_to_ns(r.complete_tick - r.service_ticks),
+                        dur_ns: ticks_to_ns(r.service_ticks),
+                        args: vec![
+                            ("fmt", r.fmt.name().to_string()),
+                            ("policy", r.policy.to_string()),
+                            ("priority", priority_label(r.priority).to_string()),
+                            ("latency_ticks", r.latency_ticks().to_string()),
+                        ],
+                    });
+                }
+            }
+        }
+    }
+    // Machine-wide queued-request depth: +1 at arrival, -1 at
+    // dispatch, swept in tick order.
+    let mut deltas: BTreeMap<u64, i64> = BTreeMap::new();
+    for r in &outcome.served {
+        *deltas.entry(r.arrival_tick).or_insert(0) += 1;
+        *deltas.entry(r.dispatch_tick).or_insert(0) -= 1;
+    }
+    let mut depth = 0i64;
+    for (tick, d) in deltas {
+        depth += d;
+        sink.record_counter(CounterSample {
+            pid: PID_SERVE,
+            name: "queued requests".to_string(),
+            ts_ns: ticks_to_ns(tick),
+            value: depth as f64,
+        });
+    }
+    sink
+}
+
+/// Roll a serve outcome up into the metrics registry: admission and
+/// reject counters, per-fabric busy/utilization, per-class maximum
+/// queue depth gauges, and latency/service/queue-wait histograms.
+/// Pure function of the outcome — byte-stable across identical runs.
+pub fn serve_metrics(outcome: &ServeOutcome) -> Registry {
+    let mut reg = Registry::new();
+    reg.counter_add("serve.offered", outcome.offered() as u64);
+    reg.counter_add("serve.served", outcome.served.len() as u64);
+    reg.counter_add("serve.rejected.queue_full", outcome.rejected_queue_full() as u64);
+    reg.counter_add("serve.rejected.slo_unattainable", outcome.rejected_slo() as u64);
+    reg.counter_add("serve.batches", outcome.batches as u64);
+    reg.counter_add("serve.reloads", outcome.reloads);
+    reg.counter_add("serve.horizon_ticks", outcome.horizon_ticks);
+    reg.counter_add("serve.slo_ticks", outcome.slo_ticks);
+    let horizon = outcome.horizon_ticks.max(1) as f64;
+    for (f, &busy) in outcome.fabric_busy_ticks.iter().enumerate() {
+        reg.counter_add(&format!("serve.fabric{f}.busy_ticks"), busy);
+        reg.gauge_set(&format!("serve.fabric{f}.utilization"), busy as f64 / horizon);
+    }
+    reg.gauge_set("serve.fabric_utilization", outcome.fabric_utilization());
+    reg.gauge_set("serve.mean_batch_size", outcome.mean_batch_size());
+    if !outcome.served.is_empty() {
+        reg.gauge_set(
+            "serve.in_slo_frac",
+            outcome.served_in_slo() as f64 / outcome.served.len() as f64,
+        );
+    }
+    for r in &outcome.served {
+        reg.hist_record("serve.latency_ticks", r.latency_ticks());
+        reg.hist_record("serve.service_ticks", r.service_ticks);
+        reg.hist_record(
+            "serve.queue_wait_ticks",
+            r.dispatch_tick.saturating_sub(r.arrival_tick),
+        );
+    }
+    // Per-class (policy, priority) maximum queue depth, by the same
+    // +arrival/-dispatch sweep the machine-wide counter uses.
+    let mut class_deltas: BTreeMap<String, BTreeMap<u64, i64>> = BTreeMap::new();
+    for r in &outcome.served {
+        let key = format!(
+            "serve.queue_depth_max.{}.{}",
+            r.policy,
+            priority_label(r.priority)
+        );
+        let d = class_deltas.entry(key).or_default();
+        *d.entry(r.arrival_tick).or_insert(0) += 1;
+        *d.entry(r.dispatch_tick).or_insert(0) -= 1;
+    }
+    for (key, deltas) in class_deltas {
+        let (mut depth, mut max) = (0i64, 0i64);
+        for (_, d) in deltas {
+            depth += d;
+            max = max.max(depth);
+        }
+        reg.gauge_set(&key, max as f64);
+    }
+    reg
+}
+
+/// Add a [`CycleBreakdown`]'s attribution shares to `reg` under
+/// `prefix` (gauges for the per-class fractions, a counter for the
+/// cycle total).
+pub fn breakdown_metrics(reg: &mut Registry, prefix: &str, bd: &CycleBreakdown) {
+    reg.counter_add(&format!("{prefix}.cycles"), bd.cycles);
+    reg.gauge_set(&format!("{prefix}.compute"), bd.compute);
+    reg.gauge_set(&format!("{prefix}.fp_other"), bd.fp_other);
+    reg.gauge_set(&format!("{prefix}.ssr_stall"), bd.ssr_stall);
+    reg.gauge_set(&format!("{prefix}.hazard_stall"), bd.hazard_stall);
+    reg.gauge_set(&format!("{prefix}.mem_stall"), bd.mem_stall);
+    reg.gauge_set(&format!("{prefix}.idle"), bd.idle);
+    reg.gauge_set(&format!("{prefix}.conflict_rate"), bd.conflict_rate);
+}
+
+/// Metrics rollup of a single-cluster kernel run: throughput,
+/// utilization, and the §IV-C cycle breakdown with the run's own
+/// compute op as the primary class.
+pub fn run_metrics(run: &MmRun, primary: impl Fn(&FpuCounters) -> u64) -> Registry {
+    let mut reg = Registry::new();
+    reg.counter_add("kernel.cycles", run.perf.cycles);
+    reg.counter_add("kernel.flops", run.problem.flops());
+    reg.gauge_set("kernel.gflops", run.gflops());
+    reg.gauge_set("kernel.utilization", run.utilization());
+    breakdown_metrics(&mut reg, "kernel.breakdown", &CycleBreakdown::from_perf(&run.perf, primary));
+    reg
+}
+
+/// Per-core cycle-*attribution* tracks for one cluster run: each
+/// core's cycles laid out as consecutive
+/// `[compute][fp other][ssr][hazard][mem][idle]` segments.
+///
+/// This is an attribution layout, not a timeline — the segments show
+/// *how many* cycles each class consumed, not *when* (the per-cycle
+/// interleaving is not recorded by the performance counters). The
+/// `kernel.attrib` category marks them so the distinction is visible
+/// in the viewer.
+pub fn attribution_spans(
+    perf: &PerfCounters,
+    primary: impl Fn(&FpuCounters) -> u64,
+) -> TraceSink {
+    let mut sink = TraceSink::new();
+    sink.name_process(PID_CORES, "per-core cycle attribution (layout, not timeline)");
+    for (core, c) in perf.fpu.iter().enumerate() {
+        sink.name_thread(PID_CORES, core as u32, format!("core {core}"));
+        let prim = primary(c);
+        let segments: [(&str, u64); 6] = [
+            ("compute", prim),
+            ("fp other", c.issued.saturating_sub(prim)),
+            ("ssr stall", c.stall_ssr),
+            ("hazard stall", c.stall_hazard),
+            ("mem stall", c.stall_mem),
+            ("idle", c.idle),
+        ];
+        let mut at = 0u64;
+        for (name, cycles) in segments {
+            if cycles == 0 {
+                continue;
+            }
+            sink.record(Span {
+                pid: PID_CORES,
+                tid: core as u32,
+                name: name.to_string(),
+                cat: "kernel.attrib",
+                ts_ns: at,
+                dur_ns: cycles,
+                args: Vec::new(),
+            });
+            at += cycles;
+        }
+    }
+    sink
+}
+
+/// Metrics rollup of a sharded multi-cluster run: machine totals plus
+/// per-cluster cycle/shard/pass/mxdotp counters (machine-global
+/// cluster ids, as the pool's fabric stats report them).
+pub fn sharded_metrics(run: &ShardedRun) -> Registry {
+    let mut reg = Registry::new();
+    reg.counter_add("scaleout.wall_cycles", run.wall_cycles);
+    reg.counter_add("scaleout.total_cycles", run.total_cycles);
+    reg.counter_add("scaleout.total_mxdotp", run.total_mxdotp);
+    reg.counter_add("scaleout.shards", run.shards as u64);
+    reg.gauge_set("scaleout.gflops", run.gflops());
+    reg.gauge_set("scaleout.energy_uj", run.total_energy_uj);
+    for st in &run.clusters {
+        let p = format!("scaleout.cluster{}", st.id);
+        reg.counter_add(&format!("{p}.cycles"), st.cycles);
+        reg.counter_add(&format!("{p}.shards"), st.shards as u64);
+        reg.counter_add(&format!("{p}.passes"), st.passes as u64);
+        reg.counter_add(&format!("{p}.mxdotp"), st.mxdotp);
+        reg.hist_record("scaleout.cluster_cycles", st.cycles);
+    }
+    reg
+}
+
+/// Derive the per-layer timeline of a policy run: one `layers` track
+/// with back-to-back spans (the graph executes sequentially, so layer
+/// `i` starts at the cumulative wall of layers `0..i`), plus zero-
+/// length `MX_FMT` CSR-switch markers on a second track wherever the
+/// element format changed between consecutive MX layers. Span
+/// durations sum to `run.wall_cycles` exactly.
+pub fn policy_spans(run: &PolicyHwRun) -> TraceSink {
+    let mut sink = TraceSink::new();
+    sink.name_process(PID_MODEL, format!("model graph (policy {})", run.policy));
+    sink.name_thread(PID_MODEL, 0, "layers");
+    sink.name_thread(PID_MODEL, 1, "csr switches");
+    let starts = run.layer_start_cycles();
+    let mut prev_fmt = None;
+    for (layer, &start) in run.layers.iter().zip(&starts) {
+        sink.record(Span {
+            pid: PID_MODEL,
+            tid: 0,
+            name: format!("{} ({})", layer.class.key(), layer.fmt.name()),
+            cat: "model.layer",
+            ts_ns: start,
+            dur_ns: layer.wall_cycles,
+            args: vec![
+                ("class", layer.class.key().to_string()),
+                ("fmt", layer.fmt.name().to_string()),
+                ("count", layer.count.to_string()),
+                ("gflops", format!("{:.2}", layer.gflops())),
+            ],
+        });
+        if prev_fmt != Some(layer.fmt) {
+            sink.record(Span {
+                pid: PID_MODEL,
+                tid: 1,
+                name: format!("MX_FMT → {}", layer.fmt.name()),
+                cat: "model.csr",
+                ts_ns: start,
+                dur_ns: 0,
+                args: vec![("fmt", layer.fmt.name().to_string())],
+            });
+            prev_fmt = Some(layer.fmt);
+        }
+    }
+    sink
+}
+
+/// Metrics rollup of a policy run: machine totals, CSR switch count,
+/// and per-layer cycle/throughput attribution keyed by layer class.
+pub fn policy_metrics(run: &PolicyHwRun) -> Registry {
+    let mut reg = Registry::new();
+    reg.counter_add("model.wall_cycles", run.wall_cycles);
+    reg.counter_add("model.flops", run.flops);
+    reg.counter_add("model.csr_switches", run.csr_switches as u64);
+    reg.gauge_set("model.gflops", run.gflops());
+    reg.gauge_set("model.energy_uj", run.total_energy_uj);
+    for layer in &run.layers {
+        let p = format!("model.layer.{}", layer.class.key());
+        reg.counter_add(&format!("{p}.wall_cycles"), layer.wall_cycles);
+        reg.counter_add(&format!("{p}.flops"), layer.flops);
+        reg.gauge_set(&format!("{p}.gflops"), layer.gflops());
+        reg.hist_record("model.layer_wall_cycles", layer.wall_cycles);
+    }
+    reg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::ElemFormat;
+    use crate::serve::{simulate, ServeConfig};
+    use crate::workload::arrivals::{ArrivalKind, ArrivalSpec, generate_trace};
+
+    fn outcome(kind: SchedulerKind) -> (ServeOutcome, CostModel) {
+        let cfg = ServeConfig { clusters: 2, scheduler: kind, ..ServeConfig::default() };
+        let spec = ArrivalSpec {
+            kind: ArrivalKind::Poisson,
+            rate_per_ktick: 4.0,
+            mix: vec![(ElemFormat::E4M3, 0.5), (ElemFormat::E2M1, 0.5)],
+            high_priority_frac: 0.2,
+            requests: 60,
+            seed: 11,
+        };
+        (simulate(&cfg, &generate_trace(&spec)), CostModel::build(&cfg))
+    }
+
+    #[test]
+    fn serve_spans_reconcile_with_busy_ticks() {
+        for kind in [SchedulerKind::Continuous, SchedulerKind::Barrier] {
+            let (out, costs) = outcome(kind);
+            assert!(!out.served.is_empty(), "{kind}: nothing served");
+            let sink = serve_spans(&out, &costs);
+            for (f, &busy) in out.fabric_busy_ticks.iter().enumerate() {
+                assert_eq!(
+                    sink.track_total_ns(PID_SERVE, f as u32),
+                    ticks_to_ns(busy),
+                    "{kind}: fabric {f} span total must equal its busy ticks"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn serve_metrics_account_every_request() {
+        let (out, costs) = outcome(SchedulerKind::Continuous);
+        let reg = serve_metrics(&out);
+        assert_eq!(reg.counter("serve.offered"), out.offered() as u64);
+        assert_eq!(
+            reg.counter("serve.served")
+                + reg.counter("serve.rejected.queue_full")
+                + reg.counter("serve.rejected.slo_unattainable"),
+            out.offered() as u64,
+            "admission counters must partition the offered load"
+        );
+        assert_eq!(reg.hist_summary("serve.latency_ticks").0, out.served.len());
+        // queue-depth sweep returns to zero: everything dispatched
+        let sink = serve_spans(&out, &costs);
+        let last = sink.counters().last().unwrap();
+        assert_eq!(last.value, 0.0, "queue must drain by the end of the run");
+    }
+
+    #[test]
+    fn ticks_to_ns_matches_the_time_base() {
+        assert_eq!(ticks_to_ns(0), 0);
+        assert_eq!(ticks_to_ns(3), 3 * crate::serve::CYCLES_PER_TICK);
+    }
+}

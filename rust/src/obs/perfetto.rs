@@ -1,0 +1,171 @@
+//! Chrome/Perfetto trace-event JSON export.
+//!
+//! Renders a [`TraceSink`] as a plain trace-event array loadable by
+//! <https://ui.perfetto.dev> (or `chrome://tracing`): `M` metadata
+//! events name the process/track lanes, every span becomes a complete
+//! `X` event, and counter samples become `C` events.
+//!
+//! Determinism: timestamps are simulated nanoseconds rendered as exact
+//! microsecond decimals (`ts = ns/1000 + "." + ns%1000`, pure integer
+//! arithmetic — no float formatting), events are emitted in a total
+//! order (`(pid, tid, ts, longest-first, name)` so enclosing spans
+//! precede their children at equal start), and all map iteration is
+//! over `BTreeMap`s. Two sinks recorded from identical runs therefore
+//! render byte-identically, which is what lets the determinism CI job
+//! diff trace artifacts like any other `OBS_*` file.
+//! `tools/check_trace.py` validates the schema (well-formed array,
+//! monotonic `ts` per track, complete `X` events) in CI.
+
+use super::metrics::{json_f64, json_string};
+use super::span::{Span, TraceSink};
+
+/// Exact microseconds-with-nanosecond-fraction rendering of a
+/// simulated-ns timestamp (the trace-event `ts`/`dur` unit is µs).
+fn us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+/// The sink's spans in the exporter's canonical event order:
+/// `(pid, tid, ts, longer-duration-first, name)`. Sorting longest
+/// first at equal start keeps enclosing spans ahead of the children
+/// they contain, which nested-slice viewers require.
+pub fn sorted_spans(sink: &TraceSink) -> Vec<&Span> {
+    let mut spans: Vec<&Span> = sink.spans().iter().collect();
+    spans.sort_by(|a, b| {
+        (a.pid, a.tid, a.ts_ns)
+            .cmp(&(b.pid, b.tid, b.ts_ns))
+            .then(b.dur_ns.cmp(&a.dur_ns))
+            .then(a.name.cmp(&b.name))
+    });
+    spans
+}
+
+/// Render the sink as a Chrome trace-event JSON array (one event per
+/// line). Pure function of the sink: byte-identical for equal sinks.
+pub fn render(sink: &TraceSink) -> String {
+    let mut events: Vec<String> = Vec::new();
+    for (pid, name) in sink.processes() {
+        events.push(format!(
+            "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\"name\":\"process_name\",\
+             \"args\":{{\"name\":{}}}}}",
+            json_string(name)
+        ));
+    }
+    for ((pid, tid), name) in sink.threads() {
+        events.push(format!(
+            "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":{}}}}}",
+            json_string(name)
+        ));
+    }
+    for s in sorted_spans(sink) {
+        let mut args = String::new();
+        for (i, (k, v)) in s.args.iter().enumerate() {
+            if i > 0 {
+                args.push(',');
+            }
+            args.push_str(&format!("{}:{}", json_string(k), json_string(v)));
+        }
+        events.push(format!(
+            "{{\"ph\":\"X\",\"pid\":{},\"tid\":{},\"ts\":{},\"dur\":{},\
+             \"cat\":{},\"name\":{},\"args\":{{{args}}}}}",
+            s.pid,
+            s.tid,
+            us(s.ts_ns),
+            us(s.dur_ns),
+            json_string(s.cat),
+            json_string(&s.name),
+        ));
+    }
+    let mut counters: Vec<_> = sink.counters().iter().collect();
+    counters.sort_by(|a, b| {
+        (a.pid, &a.name, a.ts_ns)
+            .cmp(&(b.pid, &b.name, b.ts_ns))
+            .then(a.value.total_cmp(&b.value))
+    });
+    for c in counters {
+        events.push(format!(
+            "{{\"ph\":\"C\",\"pid\":{},\"tid\":0,\"ts\":{},\"name\":{},\
+             \"args\":{{\"value\":{}}}}}",
+            c.pid,
+            us(c.ts_ns),
+            json_string(&c.name),
+            json_f64(c.value),
+        ));
+    }
+    let mut out = String::from("[\n");
+    for (i, e) in events.iter().enumerate() {
+        out.push_str(if i == 0 { "" } else { ",\n" });
+        out.push_str(e);
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::CounterSample;
+
+    fn sink() -> TraceSink {
+        let mut s = TraceSink::new();
+        s.name_process(1, "machine");
+        s.name_thread(1, 0, "fabric 0");
+        s.record(Span {
+            pid: 1,
+            tid: 0,
+            name: "child".into(),
+            cat: "t",
+            ts_ns: 1500,
+            dur_ns: 500,
+            args: vec![("fmt", "e4m3".into())],
+        });
+        s.record(Span {
+            pid: 1,
+            tid: 0,
+            name: "parent".into(),
+            cat: "t",
+            ts_ns: 1500,
+            dur_ns: 2500,
+            args: Vec::new(),
+        });
+        s.record_counter(CounterSample { pid: 1, name: "depth".into(), ts_ns: 0, value: 2.0 });
+        s
+    }
+
+    #[test]
+    fn timestamps_are_exact_microsecond_decimals() {
+        assert_eq!(us(0), "0.000");
+        assert_eq!(us(999), "0.999");
+        assert_eq!(us(1500), "1.500");
+        assert_eq!(us(1_234_567), "1234.567");
+    }
+
+    #[test]
+    fn render_orders_parents_first_and_is_deterministic() {
+        let j1 = render(&sink());
+        let j2 = render(&sink());
+        assert_eq!(j1, j2);
+        assert!(j1.starts_with("[\n"));
+        assert!(j1.ends_with("\n]\n"));
+        // the longer (enclosing) span precedes the child at equal ts
+        assert!(j1.find("\"parent\"").unwrap() < j1.find("\"child\"").unwrap());
+        assert!(j1.contains("\"ts\":1.500"));
+        assert!(j1.contains("\"dur\":2.500"));
+        assert!(j1.contains("\"process_name\""));
+        assert!(j1.contains("\"thread_name\""));
+        assert!(j1.contains("\"ph\":\"C\""));
+        assert!(j1.contains("\"fmt\":\"e4m3\""));
+    }
+
+    #[test]
+    fn sorted_spans_are_monotonic_per_track() {
+        let s = sink();
+        let sorted = sorted_spans(&s);
+        for w in sorted.windows(2) {
+            if (w[0].pid, w[0].tid) == (w[1].pid, w[1].tid) {
+                assert!(w[0].ts_ns <= w[1].ts_ns);
+            }
+        }
+    }
+}

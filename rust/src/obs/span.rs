@@ -1,0 +1,203 @@
+//! Sim-time spans and the `TraceSink` they accumulate in.
+//!
+//! A [`Span`] is one closed interval of **simulated** time on one
+//! track: its timestamps are cluster cycles (1 cycle = 1 ns at the
+//! paper's 1 GHz operating point; 1 scheduler tick =
+//! [`crate::serve::CYCLES_PER_TICK`] cycles). Host wall-clock never
+//! appears in a span — that is the determinism rule that keeps traces
+//! bit-for-bit reproducible (DESIGN.md §14); host-side profiling lives
+//! in [`crate::obs::hostprof`] instead.
+//!
+//! A [`TraceSink`] is a plain append-only buffer: recording a span is
+//! a `Vec::push`, with no locking and no I/O. Worker threads that emit
+//! spans each own a private sink (the scale-out pool's per-worker
+//! buffers) and the owner merges them afterwards with
+//! [`TraceSink::merge`] — the same join-then-combine discipline the
+//! pool already uses for shard outputs, so tracing adds no
+//! synchronization to the simulated path. When tracing is disabled no
+//! sink exists at all (callers pass `None`); the hot paths never
+//! allocate on its behalf.
+
+use std::collections::BTreeMap;
+
+/// One span of simulated time on one trace track.
+///
+/// `pid`/`tid` follow the Chrome trace-event convention: `pid` groups
+/// related tracks into one named process lane (see the `PID_*`
+/// constants in [`crate::obs`]) and `tid` is the track within it
+/// (a fabric, a cluster, a core, ...).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Span {
+    /// Process lane (top-level grouping in the viewer).
+    pub pid: u32,
+    /// Track within the process lane.
+    pub tid: u32,
+    /// Display name of the span.
+    pub name: String,
+    /// Category tag (filterable in the viewer), e.g. `"serve.batch"`.
+    pub cat: &'static str,
+    /// Start of the span in simulated nanoseconds (= cycles at 1 GHz).
+    pub ts_ns: u64,
+    /// Duration in simulated nanoseconds; 0 renders as an instant.
+    pub dur_ns: u64,
+    /// Ordered key/value annotations shown in the viewer's args pane.
+    pub args: Vec<(&'static str, String)>,
+}
+
+/// One sample of a counter track (rendered as a Chrome `ph:"C"`
+/// event): the counter's value from this simulated instant onward.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CounterSample {
+    /// Process lane the counter belongs to.
+    pub pid: u32,
+    /// Counter name (one plot per name in the viewer).
+    pub name: String,
+    /// Sample time in simulated nanoseconds.
+    pub ts_ns: u64,
+    /// Sampled value.
+    pub value: f64,
+}
+
+/// Append-only buffer of spans, counter samples, and track names.
+///
+/// Everything a sink holds is a pure function of simulated state, so
+/// two sinks recorded from identical runs are `==` and render to
+/// byte-identical JSON ([`crate::obs::perfetto::render`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceSink {
+    spans: Vec<Span>,
+    counters: Vec<CounterSample>,
+    processes: BTreeMap<u32, String>,
+    threads: BTreeMap<(u32, u32), String>,
+}
+
+impl TraceSink {
+    /// An empty sink.
+    pub fn new() -> Self {
+        TraceSink::default()
+    }
+
+    /// Append one span (no ordering requirement; the exporter sorts).
+    pub fn record(&mut self, span: Span) {
+        self.spans.push(span);
+    }
+
+    /// Append one counter sample.
+    pub fn record_counter(&mut self, sample: CounterSample) {
+        self.counters.push(sample);
+    }
+
+    /// Name a process lane (viewer metadata; last write wins).
+    pub fn name_process(&mut self, pid: u32, name: impl Into<String>) {
+        self.processes.insert(pid, name.into());
+    }
+
+    /// Name a track within a process lane (last write wins).
+    pub fn name_thread(&mut self, pid: u32, tid: u32, name: impl Into<String>) {
+        self.threads.insert((pid, tid), name.into());
+    }
+
+    /// Absorb another sink (a worker's private buffer) into this one.
+    /// Spans keep their recorded order within each source; track names
+    /// from `other` win on collision.
+    pub fn merge(&mut self, other: TraceSink) {
+        self.spans.extend(other.spans);
+        self.counters.extend(other.counters);
+        self.processes.extend(other.processes);
+        self.threads.extend(other.threads);
+    }
+
+    /// The recorded spans, in recording order.
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// The recorded counter samples, in recording order.
+    pub fn counters(&self) -> &[CounterSample] {
+        &self.counters
+    }
+
+    /// Named process lanes (sorted by pid).
+    pub fn processes(&self) -> &BTreeMap<u32, String> {
+        &self.processes
+    }
+
+    /// Named tracks (sorted by (pid, tid)).
+    pub fn threads(&self) -> &BTreeMap<(u32, u32), String> {
+        &self.threads
+    }
+
+    /// Number of recorded spans.
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// True when no span has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Sum of span durations (ns) on one track — the reconciliation
+    /// primitive: per-fabric serve spans must sum to the scheduler's
+    /// busy-tick accounting (asserted in `tests/obs.rs`).
+    pub fn track_total_ns(&self, pid: u32, tid: u32) -> u64 {
+        self.spans
+            .iter()
+            .filter(|s| s.pid == pid && s.tid == tid)
+            .map(|s| s.dur_ns)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(pid: u32, tid: u32, ts: u64, dur: u64) -> Span {
+        Span {
+            pid,
+            tid,
+            name: format!("s{ts}"),
+            cat: "test",
+            ts_ns: ts,
+            dur_ns: dur,
+            args: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn record_merge_and_track_totals() {
+        let mut a = TraceSink::new();
+        a.name_process(1, "machine");
+        a.name_thread(1, 0, "fabric 0");
+        a.record(span(1, 0, 0, 10));
+        a.record(span(1, 1, 5, 7));
+        let mut b = TraceSink::new();
+        b.record(span(1, 0, 20, 3));
+        b.name_thread(1, 1, "fabric 1");
+        a.merge(b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.track_total_ns(1, 0), 13);
+        assert_eq!(a.track_total_ns(1, 1), 7);
+        assert_eq!(a.track_total_ns(2, 0), 0);
+        assert_eq!(a.processes()[&1], "machine");
+        assert_eq!(a.threads()[&(1, 1)], "fabric 1");
+    }
+
+    #[test]
+    fn identical_recordings_compare_equal() {
+        let build = || {
+            let mut s = TraceSink::new();
+            s.name_process(3, "model");
+            s.record(span(3, 0, 4, 4));
+            s.record_counter(CounterSample {
+                pid: 3,
+                name: "queue depth".into(),
+                ts_ns: 4,
+                value: 2.0,
+            });
+            s
+        };
+        assert_eq!(build(), build());
+    }
+}

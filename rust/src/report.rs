@@ -874,6 +874,16 @@ pub fn render_run(run: &MmRun) -> String {
     )
 }
 
+/// Note printed after writing a `--trace-out` Perfetto trace file.
+pub fn render_trace_note(path: &str) -> String {
+    format!("wrote Perfetto trace to {path} — open it at https://ui.perfetto.dev")
+}
+
+/// Note printed after writing a `--obs-out` metrics-registry file.
+pub fn render_obs_note(path: &str) -> String {
+    format!("wrote observability metrics to {path}")
+}
+
 /// Detailed run report: summary line + cycle-accounting breakdown.
 pub fn render_run_detailed(run: &MmRun) -> String {
     let bd = crate::snitch::trace::CycleBreakdown::from_perf(&run.perf, |c| match run.kind {
@@ -894,6 +904,13 @@ mod tests {
         assert!(s.contains("4.89 MGE"));
         assert!(s.contains("+5.1 %"));
         assert!(s.contains("MXDOTP unit"));
+    }
+
+    #[test]
+    fn obs_notes_name_the_artifact_paths() {
+        assert!(render_trace_note("out/t.json").contains("out/t.json"));
+        assert!(render_trace_note("t.json").contains("ui.perfetto.dev"));
+        assert!(render_obs_note("m.json").contains("m.json"));
     }
 
     #[test]

@@ -178,7 +178,28 @@ pub fn sharded_mm_with_cache(
     b: &[f32],
     cache: &PlanCache,
 ) -> ShardedRun {
-    sharded_mm_on_lease(cfg, pool::FabricLease::whole(cfg.clusters), problem, a, b, cache)
+    sharded_mm_on_lease(cfg, pool::FabricLease::whole(cfg.clusters), problem, a, b, cache, None)
+}
+
+/// [`sharded_mm`] with span tracing: every shard's deterministic
+/// placement on the simulated fabric is recorded into `sink` as a span
+/// on its cluster's track (`obs::PID_CLUSTERS`). Tracing is derived
+/// from the same post-join assignment pass that builds the per-cluster
+/// stats, so the returned [`ShardedRun`] is bit-identical to the
+/// untraced [`sharded_mm`] — asserted in `tests/obs.rs`.
+pub fn sharded_mm_traced(
+    cfg: &ScaleoutConfig,
+    problem: MmProblem,
+    a: &[f32],
+    b: &[f32],
+    sink: &mut crate::obs::TraceSink,
+) -> ShardedRun {
+    let lease = pool::FabricLease::whole(cfg.clusters);
+    if cfg.cold_plans {
+        sharded_mm_on_lease(cfg, lease, problem, a, b, &PlanCache::disabled(), Some(sink))
+    } else {
+        sharded_mm_on_lease(cfg, lease, problem, a, b, PlanCache::global(), Some(sink))
+    }
 }
 
 /// [`sharded_mm`] under a fabric lease (DESIGN.md §12): the GEMM runs
@@ -197,9 +218,9 @@ pub fn sharded_mm_leased(
     b: &[f32],
 ) -> ShardedRun {
     if cfg.cold_plans {
-        sharded_mm_on_lease(cfg, lease, problem, a, b, &PlanCache::disabled())
+        sharded_mm_on_lease(cfg, lease, problem, a, b, &PlanCache::disabled(), None)
     } else {
-        sharded_mm_on_lease(cfg, lease, problem, a, b, PlanCache::global())
+        sharded_mm_on_lease(cfg, lease, problem, a, b, PlanCache::global(), None)
     }
 }
 
@@ -211,6 +232,7 @@ fn sharded_mm_on_lease(
     a: &[f32],
     b: &[f32],
     cache: &PlanCache,
+    sink: Option<&mut crate::obs::TraceSink>,
 ) -> ShardedRun {
     assert!(problem.m > 0 && problem.k > 0 && problem.n > 0, "degenerate GEMM");
     let (pp, a_pad, b_pad) = partition::pad_k(&problem, a, b);
@@ -227,7 +249,7 @@ fn sharded_mm_on_lease(
         max_tile_n: cfg.max_tile_n,
     };
     let n_shards = jobs.len();
-    let (mut outputs, stats) = pool.execute_leased(jobs, cache, lease);
+    let (mut outputs, stats) = pool.execute_leased_traced(jobs, cache, lease, sink);
 
     // Deterministic combine: ascending K chunk, then row range. For
     // MSplit each row appears once; for MkSplit chunk 0 initializes and
@@ -374,6 +396,30 @@ mod tests {
             vec![6, 7],
             "leased stats must carry machine-global cluster ids"
         );
+    }
+
+    #[test]
+    fn traced_run_is_bit_identical_and_records_every_shard() {
+        let (p, a, b) = small();
+        let cfg = ScaleoutConfig::with_clusters(2);
+        let plain = sharded_mm(&cfg, p, &a, &b);
+        let mut sink = crate::obs::TraceSink::new();
+        let traced = sharded_mm_traced(&cfg, p, &a, &b, &mut sink);
+        for (x, y) in plain.c.iter().zip(&traced.c) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(traced.wall_cycles, plain.wall_cycles);
+        assert_eq!(traced.total_cycles, plain.total_cycles);
+        assert_eq!(sink.spans().len(), traced.shards, "one span per shard");
+        // every cluster's recorded span time matches its stats exactly
+        for st in &traced.clusters {
+            assert_eq!(
+                sink.track_total_ns(crate::obs::PID_CLUSTERS, st.id as u32),
+                st.cycles,
+                "cluster {} span sum must equal its cycle count",
+                st.id
+            );
+        }
     }
 
     #[test]

@@ -29,6 +29,7 @@
 
 use super::engine::{ClusterEngine, ShardJob, ShardOutput};
 use crate::kernels::plan::PlanCache;
+use crate::obs::{Span, TraceSink, PID_CLUSTERS};
 use std::collections::VecDeque;
 use std::sync::Mutex;
 
@@ -137,6 +138,27 @@ impl ClusterPool {
         cache: &PlanCache,
         lease: FabricLease,
     ) -> (Vec<ShardOutput>, Vec<ClusterStats>) {
+        self.execute_leased_traced(jobs, cache, lease, None)
+    }
+
+    /// [`Self::execute_leased`] with optional span tracing: when a
+    /// sink is supplied, every shard's placement on the simulated
+    /// fabric is recorded as a span on its cluster's track
+    /// (machine-global ids — the cluster relabeling the lease
+    /// performs on stats applies to spans too). Spans are derived in
+    /// the same deterministic assignment pass that builds
+    /// [`ClusterStats`], after the worker threads have joined: the
+    /// workers' own output buffers are the per-worker trace buffers,
+    /// so tracing adds no synchronization, and with `sink: None`
+    /// (the [`Self::execute_leased`] path) this is bit-for-bit and
+    /// allocation-for-allocation the untraced pool.
+    pub fn execute_leased_traced<'j>(
+        &self,
+        jobs: Vec<ShardJob<'j>>,
+        cache: &PlanCache,
+        lease: FabricLease,
+        mut sink: Option<&mut TraceSink>,
+    ) -> (Vec<ShardOutput>, Vec<ClusterStats>) {
         assert!(self.clusters > 0);
         assert_eq!(
             lease.clusters, self.clusters,
@@ -183,6 +205,12 @@ impl ClusterPool {
         let mut stats: Vec<ClusterStats> = (0..self.clusters)
             .map(|id| ClusterStats { id: lease.first_cluster + id, ..ClusterStats::default() })
             .collect();
+        if let Some(sink) = sink.as_deref_mut() {
+            sink.name_process(PID_CLUSTERS, "scale-out fabric");
+            for st in &stats {
+                sink.name_thread(PID_CLUSTERS, st.id as u32, format!("cluster {}", st.id));
+            }
+        }
         for o in outputs.iter_mut() {
             let target = stats
                 .iter()
@@ -192,6 +220,23 @@ impl ClusterPool {
                 .unwrap();
             o.cluster = lease.first_cluster + target;
             let st = &mut stats[target];
+            if let Some(sink) = sink.as_deref_mut() {
+                // The shard runs back-to-back after the work already
+                // placed on its cluster — st.cycles before this
+                // accumulation is exactly its start offset.
+                sink.record(Span {
+                    pid: PID_CLUSTERS,
+                    tid: st.id as u32,
+                    name: format!("shard {}", o.shard.id),
+                    cat: "scaleout.shard",
+                    ts_ns: st.cycles,
+                    dur_ns: o.perf.cycles,
+                    args: vec![
+                        ("passes", o.passes.to_string()),
+                        ("mxdotp", o.perf.mxdotp_total().to_string()),
+                    ],
+                });
+            }
             st.shards += 1;
             st.passes += o.passes;
             st.cycles += o.perf.cycles;

@@ -11,12 +11,19 @@
 /// Nearest-rank percentile over an **ascending-sorted** slice of tick
 /// latencies (`q` in [0, 1]); 0 for an empty slice.
 ///
+/// Total for every input: out-of-range `q` clamps to the nearest end
+/// (`q <= 0` → minimum, `q >= 1` → maximum), a NaN `q` behaves as 0
+/// (the only order-free choice), and the computed rank is re-clamped
+/// to the last index so float rounding can never walk off the slice.
+///
 /// ```
 /// use mxdotp::serve::metrics::percentile_ticks;
 /// let sorted = [10, 20, 30, 40];
 /// assert_eq!(percentile_ticks(&sorted, 0.0), 10);
 /// assert_eq!(percentile_ticks(&sorted, 0.5), 30);
 /// assert_eq!(percentile_ticks(&sorted, 1.0), 40);
+/// assert_eq!(percentile_ticks(&sorted, 2.5), 40);
+/// assert_eq!(percentile_ticks(&sorted, -1.0), 10);
 /// assert_eq!(percentile_ticks(&[], 0.99), 0);
 /// ```
 pub fn percentile_ticks(sorted: &[u64], q: f64) -> u64 {
@@ -24,7 +31,16 @@ pub fn percentile_ticks(sorted: &[u64], q: f64) -> u64 {
         return 0;
     }
     debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "input must be sorted");
-    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    // NaN fails both comparisons below and lands on 0.0; clamp() is
+    // avoided because its NaN result would cast to an arbitrary rank.
+    let q = if q >= 1.0 {
+        1.0
+    } else if q >= 0.0 {
+        q
+    } else {
+        0.0
+    };
+    let idx = (((sorted.len() - 1) as f64 * q).round() as usize).min(sorted.len() - 1);
     sorted[idx]
 }
 
@@ -90,5 +106,27 @@ mod tests {
         let p = latency_percentiles(&[30, 10, 20]);
         assert_eq!(p.p50, 20);
         assert_eq!(p.max, 30);
+    }
+
+    #[test]
+    fn percentile_is_total_over_degenerate_quantiles() {
+        let sorted = [10, 20, 30, 40];
+        // out-of-range q clamps to the ends instead of indexing past them
+        assert_eq!(percentile_ticks(&sorted, 1.5), 40);
+        assert_eq!(percentile_ticks(&sorted, f64::INFINITY), 40);
+        assert_eq!(percentile_ticks(&sorted, -0.5), 10);
+        assert_eq!(percentile_ticks(&sorted, f64::NEG_INFINITY), 10);
+        // NaN behaves as q = 0 — still a value a request experienced
+        assert_eq!(percentile_ticks(&sorted, f64::NAN), 10);
+        // single- and two-element slices never misrank at the ends
+        assert_eq!(percentile_ticks(&[7], 0.0), 7);
+        assert_eq!(percentile_ticks(&[7], 1.0), 7);
+        assert_eq!(percentile_ticks(&[7], f64::NAN), 7);
+        assert_eq!(percentile_ticks(&[3, 9], 0.49), 3);
+        assert_eq!(percentile_ticks(&[3, 9], 0.51), 9);
+        assert_eq!(percentile_ticks(&[3, 9], 1.0), 9);
+        // empty stays 0 for every q, including NaN
+        assert_eq!(percentile_ticks(&[], f64::NAN), 0);
+        assert_eq!(percentile_ticks(&[], 1.0), 0);
     }
 }

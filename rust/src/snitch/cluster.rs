@@ -255,13 +255,26 @@ impl Cluster {
     /// kernel they launched (the plan layer) can attribute the failure
     /// by name.
     pub fn run_checked(&mut self, max_cycles: u64) -> Result<PerfCounters, u64> {
+        // Host wall-clock around the decode/execute hot loop, recorded
+        // into the process-global profile (obs::hostprof). The reading
+        // is never fed back into simulation — purely an observability
+        // export, so determinism is untouched.
+        let host_start = std::time::Instant::now();
         let start = self.cycle;
         while !self.done() {
             self.step();
             if self.cycle - start >= max_cycles {
+                crate::obs::hostprof::record_sim(
+                    host_start.elapsed().as_nanos() as u64,
+                    self.cycle - start,
+                );
                 return Err(max_cycles);
             }
         }
+        crate::obs::hostprof::record_sim(
+            host_start.elapsed().as_nanos() as u64,
+            self.cycle - start,
+        );
         Ok(self.counters_since(start))
     }
 

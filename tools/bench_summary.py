@@ -45,6 +45,10 @@ def extract_metrics(bench_dir):
             ("hotpath", "datapath_mops", j["datapath_mops"]),
             ("hotpath", "simulator_mcycles", j["simulator_mcycles"]),
         ]
+        # host simulator-speed profile (absent from pre-obs artifacts)
+        for key in ("sim_wall_ms", "sim_cycles_per_host_us"):
+            if key in j:
+                out.append(("hotpath", key, j[key]))
 
     j = load(os.path.join(bench_dir, "BENCH_formats.json"))
     if j:
@@ -138,7 +142,10 @@ def main():
                     status = "**FAIL**"
             base = " , ".join(parts)
         else:
-            base, delta, status = "—", "—", "untracked"
+            # Make brand-new metrics visible instead of silently
+            # unlabeled: a NEW row is the cue to baseline them once
+            # their trajectory settles.
+            base, delta, status = "—", "—", "NEW (unbaselined)"
         print(f"| {bench} | `{metric}` | {value:.4g} | {base} | {delta} | {status} |")
     print()
     print(

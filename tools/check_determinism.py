@@ -1,15 +1,19 @@
 #!/usr/bin/env python3
-"""Bit-for-bit determinism check for the bench artifacts: compare two
-independent runs' BENCH_*.json files after stripping host-timing keys
-(the only fields allowed to differ between runs with identical seeds).
+"""Bit-for-bit determinism check for the bench and observability
+artifacts: compare two independent runs' BENCH_*.json and OBS_*.json
+files after stripping host-timing keys (the only fields allowed to
+differ between runs with identical seeds).
 
 Usage: python3 tools/check_determinism.py RUN1_DIR RUN2_DIR
 
-Every BENCH_*.json present in RUN1_DIR must exist in RUN2_DIR and be
-identical modulo the volatile keys below. The per-request attribution
-artifact (BENCH_serving_attribution.json) carries no host timing at
-all and is compared verbatim. Exit code 1 on any mismatch — this is
-the blocking CI determinism job.
+Every BENCH_*.json / OBS_*.json present in RUN1_DIR must exist in
+RUN2_DIR and be identical modulo the volatile keys below — any key
+starting with ``host_`` is volatile by convention (DESIGN.md §14: host
+wall-clock is quarantined under that prefix). Artifacts that carry no
+host timing at all — the per-request attribution and the OBS_trace_*
+Perfetto traces, which are stamped purely in simulated time — are
+compared verbatim, byte for byte. Exit code 1 on any mismatch — this
+is the blocking CI determinism job.
 """
 
 import glob
@@ -18,22 +22,37 @@ import os
 import sys
 
 # Host-side wall-clock measurements: legitimately nondeterministic.
+# (Newer artifacts use the host_ prefix, matched below; these are the
+# grandfathered names from before the convention, plus the headline
+# simulator-speed keys in BENCH_hotpath.json — that bench is excluded
+# from the CI determinism job today, but keep its host-derived keys
+# volatile so adding it later cannot produce spurious failures.)
 VOLATILE_KEYS = {
-    "host_wall_s",
     "cold_wall_s",
     "warm_wall_s",
     "cold_host_gflops",
     "warm_host_gflops",
     "warm_speedup",
+    "sim_wall_ms",
+    "sim_cycles_per_host_us",
 }
+
+
+def volatile(key):
+    return key in VOLATILE_KEYS or key.startswith("host_")
 
 
 def strip(value):
     if isinstance(value, dict):
-        return {k: strip(v) for k, v in value.items() if k not in VOLATILE_KEYS}
+        return {k: strip(v) for k, v in value.items() if not volatile(k)}
     if isinstance(value, list):
         return [strip(v) for v in value]
     return value
+
+
+def byte_compared(name):
+    """Artifacts with no host timing inside: the bytes must match."""
+    return name == "BENCH_serving_attribution.json" or name.startswith("OBS_trace_")
 
 
 def diff_paths(a, b, prefix=""):
@@ -62,7 +81,10 @@ def main():
     if len(sys.argv) != 3:
         sys.exit(__doc__)
     run1, run2 = sys.argv[1], sys.argv[2]
-    files = sorted(glob.glob(os.path.join(run1, "BENCH_*.json")))
+    files = sorted(
+        glob.glob(os.path.join(run1, "BENCH_*.json"))
+        + glob.glob(os.path.join(run1, "OBS_*.json"))
+    )
     if not files:
         sys.exit(f"no BENCH_*.json artifacts in {run1} — determinism job has nothing to check")
     failed = False
@@ -73,11 +95,10 @@ def main():
             print(f"FAIL {name}: missing from {run2}")
             failed = True
             continue
-        if name == "BENCH_serving_attribution.json":
-            # No host timing inside: the bytes themselves must match.
+        if byte_compared(name):
             b1, b2 = open(f1, "rb").read(), open(f2, "rb").read()
             if b1 != b2:
-                print(f"FAIL {name}: per-request attribution differs byte-for-byte")
+                print(f"FAIL {name}: sim-time-only artifact differs byte-for-byte")
                 failed = True
             else:
                 print(f"PASS {name} (byte-identical, {len(b1)} bytes)")

@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Validate a Chrome/Perfetto trace-event JSON file (the `--trace-out`
+artifact) against the subset of the trace-event format this repo emits.
+
+Usage: python3 tools/check_trace.py TRACE_FILE [TRACE_FILE...]
+
+Checks, per file:
+
+* the document is a JSON array of events (or an object with a
+  ``traceEvents`` array — both spellings load in ui.perfetto.dev);
+* every event has a ``ph`` phase and integer ``pid``/``tid`` (counter
+  ``C`` events need no ``tid``);
+* ``X`` (complete) events carry a non-negative ``dur``;
+* ``B``/``E`` (begin/end) events are properly nested and matched per
+  ``(pid, tid)`` track — no dangling begins, no stray ends;
+* ``ts`` is monotonically non-decreasing per ``(pid, tid)`` track for
+  duration events, and per ``(pid, name)`` series for counters — the
+  exporter emits events in deterministic sorted order, so a violation
+  means the exporter (not the simulation) regressed;
+* ``M`` (metadata) events are ``process_name``/``thread_name`` with a
+  ``name`` arg.
+
+Stdlib only (the CI runner needs nothing installed). Exit code 1 on
+the first structural violation, with the event index in the message.
+"""
+
+import json
+import sys
+
+
+def fail(path, i, msg):
+    sys.exit(f"FAIL {path}: event {i}: {msg}")
+
+
+def check(path):
+    with open(path) as fh:
+        doc = json.load(fh)
+    if isinstance(doc, dict):
+        events = doc.get("traceEvents")
+        if not isinstance(events, list):
+            sys.exit(f"FAIL {path}: object form must carry a traceEvents array")
+    elif isinstance(doc, list):
+        events = doc
+    else:
+        sys.exit(f"FAIL {path}: document must be a JSON array of trace events")
+
+    open_stack = {}  # (pid, tid) -> list of begin names
+    last_ts = {}  # (pid, tid) -> float, duration events
+    last_counter_ts = {}  # (pid, name) -> float
+    counts = {"X": 0, "B": 0, "E": 0, "C": 0, "M": 0}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(path, i, "event is not an object")
+        ph = ev.get("ph")
+        if ph not in counts:
+            fail(path, i, f"unsupported phase {ph!r}")
+        counts[ph] += 1
+        if not isinstance(ev.get("pid"), int):
+            fail(path, i, "missing/non-integer pid")
+        if ph != "C" and not isinstance(ev.get("tid"), int):
+            fail(path, i, "missing/non-integer tid")
+        if ph == "M":
+            if ev.get("name") not in ("process_name", "thread_name"):
+                fail(path, i, f"unknown metadata event {ev.get('name')!r}")
+            if not isinstance(ev.get("args", {}).get("name"), str):
+                fail(path, i, "metadata event without args.name")
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)):
+            fail(path, i, "missing/non-numeric ts")
+        if ph == "C":
+            series = (ev["pid"], ev.get("name"))
+            if ts < last_counter_ts.get(series, float("-inf")):
+                fail(path, i, f"counter ts went backwards on series {series}")
+            last_counter_ts[series] = ts
+            if "value" not in ev.get("args", {}):
+                fail(path, i, "counter event without args.value")
+            continue
+        track = (ev["pid"], ev["tid"])
+        if ts < last_ts.get(track, float("-inf")):
+            fail(path, i, f"ts went backwards on track {track}")
+        last_ts[track] = ts
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                fail(path, i, "complete event without non-negative dur")
+        elif ph == "B":
+            open_stack.setdefault(track, []).append(ev.get("name"))
+        elif ph == "E":
+            if not open_stack.get(track):
+                fail(path, i, f"end event with no open begin on track {track}")
+            open_stack[track].pop()
+    dangling = {t: names for t, names in open_stack.items() if names}
+    if dangling:
+        sys.exit(f"FAIL {path}: unclosed begin events: {dangling}")
+    if counts["X"] + counts["B"] == 0:
+        sys.exit(f"FAIL {path}: no duration events — empty trace")
+    print(
+        f"PASS {path}: {len(events)} events "
+        f"({counts['X']} complete, {counts['B']}/{counts['E']} begin/end, "
+        f"{counts['C']} counter, {counts['M']} metadata) on "
+        f"{len(last_ts)} track(s)"
+    )
+
+
+def main():
+    if len(sys.argv) < 2:
+        sys.exit(__doc__)
+    for path in sys.argv[1:]:
+        check(path)
+
+
+if __name__ == "__main__":
+    main()
