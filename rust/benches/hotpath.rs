@@ -7,7 +7,11 @@
 //!   MXFP8 kernel (the Fig. 4 regeneration bottleneck);
 //! * reference matmul: the bit-exact oracle's throughput;
 //! * plan cache: cold-plan vs warm-plan wall-clock and host-side
-//!   GFLOPS on a DeiT-shaped sharded GEMM (the serving hot path).
+//!   GFLOPS on a DeiT-shaped sharded GEMM (the serving hot path);
+//! * fast path: the same workload with the snitch fast path off vs on
+//!   (FREP fast-forwarding) vs replayed from the layer-run cache —
+//!   all bit-identical, with the A-vs-replay `fastpath_speedup`
+//!   min-bounded by the regression gate (DESIGN.md §15).
 //!
 //! Writes `BENCH_hotpath.json` (uploaded as a CI artifact next to
 //! `BENCH_scaleout.json`) so the cold/warm perf trajectory is recorded
@@ -137,13 +141,65 @@ fn main() {
     let cst = cache.stats();
     println!(
         "            cache: {} plan hits / {} misses, {} B-tile hits / {} misses, \
-         {} pass hits / {} misses",
+         {} pass hits / {} misses, {} layer-run hits / {} misses",
         cst.plan_hits,
         cst.plan_misses,
         cst.b_tile_hits,
         cst.b_tile_misses,
         cst.pass_hits,
-        cst.pass_misses
+        cst.pass_misses,
+        cst.layer_run_hits,
+        cst.layer_run_misses
+    );
+
+    // --- fast path: FREP fast-forward + layer-run replay ----------------
+    // Three runs of the same sharded workload: (A) fast path disabled,
+    // fresh cache — every cycle steps the full per-core machinery; (C)
+    // fast path enabled, fresh cache — FREP iterations retire through
+    // the analytic fast-forward; (B) repeat on C's cache — the whole
+    // layer run replays from the memoized cache. All three must be
+    // bit-identical (the fast path's core invariant, also pinned by
+    // tests/fastpath.rs); the gated `fastpath_speedup` is A vs B, the
+    // serving profile's repeated-layer path.
+    mxdotp::snitch::set_default_fast_path(false);
+    let cache_slow = PlanCache::new();
+    let t_a = std::time::Instant::now();
+    let run_a = sharded_mm_with_cache(&scfg, gemm, &ga, &gb, &cache_slow);
+    let slow_s = t_a.elapsed().as_secs_f64();
+    mxdotp::snitch::set_default_fast_path(true);
+    let cache_fast = PlanCache::new();
+    let hp0 = mxdotp::obs::hostprof::snapshot();
+    let t_c = std::time::Instant::now();
+    let run_c = sharded_mm_with_cache(&scfg, gemm, &ga, &gb, &cache_fast);
+    let ff_s = t_c.elapsed().as_secs_f64();
+    let hp1 = mxdotp::obs::hostprof::snapshot();
+    let t_b = std::time::Instant::now();
+    let run_b = sharded_mm_with_cache(&scfg, gemm, &ga, &gb, &cache_fast);
+    let replay_s = t_b.elapsed().as_secs_f64();
+    for (i, c0) in run_a.c.iter().enumerate() {
+        assert_eq!(c0.to_bits(), run_c.c[i].to_bits(), "fast path changed C[{i}]");
+        assert_eq!(c0.to_bits(), run_b.c[i].to_bits(), "layer-run replay changed C[{i}]");
+    }
+    assert_eq!(run_a.wall_cycles, run_c.wall_cycles, "fast path changed the cycle model");
+    assert_eq!(run_a.wall_cycles, run_b.wall_cycles, "replay changed the cycle model");
+    assert_eq!(run_a.total_cycles, run_c.total_cycles);
+    assert_eq!(run_a.total_cycles, run_b.total_cycles);
+    let d_cycles = hp1.sim_cycles - hp0.sim_cycles;
+    let d_ff = hp1.ff_cycles - hp0.ff_cycles;
+    let ff_hit_rate = if d_cycles == 0 { 0.0 } else { d_ff as f64 / d_cycles as f64 };
+    let fcst = cache_fast.stats();
+    let fastpath_speedup = slow_s / replay_s;
+    println!(
+        "fast-path:  slow {:.3} s -> FREP-FF {:.3} s ({:.1}x, {:.0} % cycles fast-forwarded) \
+         -> layer replay {:.6} s ({fastpath_speedup:.0}x), bit-identical",
+        slow_s,
+        ff_s,
+        slow_s / ff_s,
+        ff_hit_rate * 100.0
+    );
+    println!(
+        "            layer-run cache: {} hit(s) / {} miss(es)",
+        fcst.layer_run_hits, fcst.layer_run_misses
     );
 
     // --- host profile (obs::hostprof) ----------------------------------
@@ -153,13 +209,20 @@ fn main() {
     // simulator-speed number the regression gate tracks.
     let hp = mxdotp::obs::hostprof::snapshot();
     println!(
-        "host-prof:  {:.1} ms simulating ({:.2} Mcycles/host-s over {} runs), \
-         {} plan build(s) in {:.2} ms",
+        "host-prof:  {:.1} ms simulating ({:.2} Mcycles/host-s over {} runs, \
+         {:.0} % FREP-FF), {} plan build(s) in {:.2} ms, {} quantize(s) in {:.2} ms, \
+         {} replay(s) in {:.3} ms ({:.2} delivered cycles/host-µs)",
         hp.sim_wall_ms(),
         hp.sim_cycles_per_host_us(),
         hp.sim_runs,
+        hp.ff_hit_rate() * 100.0,
         hp.plan_builds,
-        hp.plan_build_nanos as f64 / 1e6
+        hp.plan_build_nanos as f64 / 1e6,
+        hp.quantizes,
+        hp.quantize_nanos as f64 / 1e6,
+        hp.replay_runs,
+        hp.replay_nanos as f64 / 1e6,
+        hp.delivered_cycles_per_host_us()
     );
 
     // --- JSON trajectory ------------------------------------------------
@@ -172,17 +235,46 @@ fn main() {
     let _ = writeln!(j, "  \"sim_wall_ms\": {:.3},", hp.sim_wall_ms());
     let _ = writeln!(j, "  \"sim_cycles_per_host_us\": {:.4},", hp.sim_cycles_per_host_us());
     let _ = writeln!(j, "  \"plan_builds\": {},", hp.plan_builds);
+    let _ = writeln!(j, "  \"ff_hit_rate\": {:.4},", hp.ff_hit_rate());
+    let _ = writeln!(
+        j,
+        "  \"delivered_cycles_per_host_us\": {:.4},",
+        hp.delivered_cycles_per_host_us()
+    );
     let _ = writeln!(
         j,
         "  \"plan_cache\": {{\"workload\": \"deit-proj {}x{}x{} on 2 clusters\", \
          \"cold_wall_s\": {cold_s:.6}, \"warm_wall_s\": {warm_s:.6}, \
          \"cold_host_gflops\": {cold_host_gflops:.4}, \
          \"warm_host_gflops\": {warm_host_gflops:.4}, \
-         \"warm_speedup\": {:.2}, \"bit_identical\": true}}",
+         \"warm_speedup\": {:.2}, \"bit_identical\": true}},",
         gemm.m,
         gemm.k,
         gemm.n,
         cold_s / warm_s
+    );
+    let _ = writeln!(
+        j,
+        "  \"fastpath\": {{\"workload\": \"deit-proj {}x{}x{} on 2 clusters\", \
+         \"slow_wall_s\": {slow_s:.6}, \"ff_wall_s\": {ff_s:.6}, \
+         \"replay_wall_s\": {replay_s:.6}, \"ff_speedup\": {:.2}, \
+         \"fastpath_speedup\": {fastpath_speedup:.2}, \"ff_hit_rate\": {ff_hit_rate:.4}, \
+         \"layer_run_hits\": {}, \"layer_run_misses\": {}, \"bit_identical\": true}},",
+        gemm.m,
+        gemm.k,
+        gemm.n,
+        slow_s / ff_s,
+        fcst.layer_run_hits,
+        fcst.layer_run_misses
+    );
+    let _ = writeln!(
+        j,
+        "  \"host_phases\": {{\"sim_ms\": {:.3}, \"plan_build_ms\": {:.3}, \
+         \"quantize_ms\": {:.3}, \"replay_ms\": {:.4}}}",
+        hp.sim_wall_ms(),
+        hp.plan_build_nanos as f64 / 1e6,
+        hp.quantize_nanos as f64 / 1e6,
+        hp.replay_nanos as f64 / 1e6
     );
     j.push_str("}\n");
     std::fs::write("BENCH_hotpath.json", &j).expect("write BENCH_hotpath.json");
@@ -196,6 +288,7 @@ fn main() {
         &[
             ("warm_speedup", cold_s / warm_s),
             ("sim_cycles_per_host_us", hp.sim_cycles_per_host_us()),
+            ("fastpath_speedup", fastpath_speedup),
         ],
     );
 

@@ -32,10 +32,10 @@ pub enum Command {
     /// `simulate`: run one GEMM kernel on the cycle-accurate cluster
     /// (or sharded across a cluster fabric); with `--policy`, walk the
     /// whole per-layer mixed-precision model graph instead.
-    Simulate { kernel: KernelKind, m: usize, k: usize, n: usize, cores: usize, clusters: usize, fmt: ElemFormat, seed: u64, cold_plans: bool, policy: Option<PrecisionPolicy>, trace_out: Option<String>, obs_out: Option<String> },
+    Simulate { kernel: KernelKind, m: usize, k: usize, n: usize, cores: usize, clusters: usize, fmt: ElemFormat, seed: u64, cold_plans: bool, policy: Option<PrecisionPolicy>, exec: ExecMode, trace_out: Option<String>, obs_out: Option<String> },
     /// `reproduce`: regenerate the paper's tables/figures and the
     /// extension tables (formats, scaling, serving, pareto).
-    Reproduce { what: String, cores: usize, clusters: usize, fmt: ElemFormat, cold_plans: bool, policy: Option<PrecisionPolicy>, trace_out: Option<String>, obs_out: Option<String> },
+    Reproduce { what: String, cores: usize, clusters: usize, fmt: ElemFormat, cold_plans: bool, policy: Option<PrecisionPolicy>, exec: ExecMode, trace_out: Option<String>, obs_out: Option<String> },
     /// `serve`: drive the serving engine over a synthetic arrival
     /// trace, executing served requests through a real executor.
     Serve {
@@ -53,6 +53,7 @@ pub enum Command {
         artifacts: String,
         cold_plans: bool,
         policy: Option<PrecisionPolicy>,
+        exec: ExecMode,
         trace_out: Option<String>,
         obs_out: Option<String>,
     },
@@ -83,6 +84,64 @@ pub fn kernel_for(name: &str, fmt: ElemFormat) -> Result<KernelKind, CliError> {
     Ok(kind)
 }
 
+/// How simulated work is costed (DESIGN.md §15): the cycle-accurate
+/// engine, the calibrated analytic model, or the analytic model with a
+/// deterministic 1-in-N cycle-engine spot check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Everything runs on the cycle-accurate simulator (default).
+    Cycle,
+    /// Costs come from the analytic model at the default calibration;
+    /// no cycle-accurate simulation runs.
+    Analytic,
+    /// Analytic costing calibrated by one cycle run, plus a
+    /// deterministic 1-in-N cycle-engine spot check that fails loudly
+    /// when the models diverge past the stored tolerance.
+    Sampled(u32),
+}
+
+impl ExecMode {
+    /// Parse a `--exec` value (`cycle`, `analytic`, `sampled:N`).
+    pub fn parse(s: &str) -> Result<Self, CliError> {
+        match s {
+            "cycle" => Ok(ExecMode::Cycle),
+            "analytic" => Ok(ExecMode::Analytic),
+            other => {
+                if let Some(n) = other.strip_prefix("sampled:") {
+                    let n: u32 = n.parse().map_err(|_| {
+                        CliError(format!(
+                            "bad --exec sample rate '{n}' (expected sampled:N with integer N >= 1)"
+                        ))
+                    })?;
+                    if n == 0 {
+                        return Err(CliError(
+                            "--exec sampled:0 would spot-check nothing; the rate must be \
+                             at least 1 (sampled:1 checks every request)"
+                                .into(),
+                        ));
+                    }
+                    Ok(ExecMode::Sampled(n))
+                } else {
+                    Err(CliError(format!(
+                        "unknown --exec mode '{other}'; supported modes: cycle, analytic, \
+                         sampled:N"
+                    )))
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ExecMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecMode::Cycle => f.write_str("cycle"),
+            ExecMode::Analytic => f.write_str("analytic"),
+            ExecMode::Sampled(n) => write!(f, "sampled:{n}"),
+        }
+    }
+}
+
 /// Parse error with a user-facing message.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CliError(pub String);
@@ -103,15 +162,16 @@ const QUANTIZE_FLAGS: &[&str] = &["fmt", "block", "n", "seed"];
 /// Flags the `simulate` subcommand accepts.
 const SIMULATE_FLAGS: &[&str] = &[
     "kernel", "m", "k", "n", "cores", "clusters", "fmt", "seed", "cold-plans", "policy",
-    "trace-out", "obs-out",
+    "exec", "trace-out", "obs-out",
 ];
 /// Flags the `reproduce` subcommand accepts.
 const REPRODUCE_FLAGS: &[&str] =
-    &["cores", "clusters", "fmt", "cold-plans", "policy", "trace-out", "obs-out"];
+    &["cores", "clusters", "fmt", "cold-plans", "policy", "exec", "trace-out", "obs-out"];
 /// Flags the `serve` subcommand accepts.
 const SERVE_FLAGS: &[&str] = &[
     "requests", "batch", "clusters", "fabrics", "fmt", "mix", "arrival", "slo-ticks",
-    "queue-cap", "sched", "artifacts", "cold-plans", "policy", "trace-out", "obs-out",
+    "queue-cap", "sched", "artifacts", "cold-plans", "policy", "exec", "trace-out",
+    "obs-out",
 ];
 
 /// Split `--key value` pairs (plus valueless boolean flags) after the
@@ -215,6 +275,15 @@ fn get_batch(f: &HashMap<String, String>) -> Result<usize, CliError> {
         return Err(CliError("--batch must be at least 1 (a zero batch never dispatches)".into()));
     }
     Ok(batch)
+}
+
+/// `--exec cycle|analytic|sampled:N`: which executor costs the run
+/// (default: the cycle-accurate engine).
+fn get_exec(f: &HashMap<String, String>) -> Result<ExecMode, CliError> {
+    match f.get("exec") {
+        None => Ok(ExecMode::Cycle),
+        Some(s) => ExecMode::parse(s),
+    }
 }
 
 /// `--policy all-fp8|fp4-ffn|...|class=fmt,...`: a per-layer
@@ -326,6 +395,17 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let f = flags(rest, SIMULATE_FLAGS)?;
             let fmt = get_fmt(&f)?;
             let kernel = kernel_for(f.get("kernel").map(String::as_str).unwrap_or("mx"), fmt)?;
+            let policy = get_policy(&f, fmt)?;
+            let exec = get_exec(&f)?;
+            // A single-GEMM simulate *is* a cycle run — there is no
+            // analytic single-kernel model to swap in — so the analytic
+            // and sampled executors only apply to --policy model walks.
+            if exec != ExecMode::Cycle && policy.is_none() {
+                return Err(CliError(format!(
+                    "--exec {exec} only applies to 'simulate --policy ...' model-graph \
+                     walks; a plain kernel simulate is inherently a cycle-accurate run"
+                )));
+            }
             Ok(Command::Simulate {
                 kernel,
                 m: get_parse(&f, "m", 64)?,
@@ -336,7 +416,8 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 fmt,
                 seed: get_parse(&f, "seed", 42)?,
                 cold_plans: get_cold_plans(&f),
-                policy: get_policy(&f, fmt)?,
+                policy,
+                exec,
                 trace_out: get_out_path(&f, "trace-out")?,
                 obs_out: get_out_path(&f, "obs-out")?,
             })
@@ -368,6 +449,18 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                      not '{what}' — the other tables sweep --fmt, not per-layer policies"
                 )));
             }
+            let exec = get_exec(&f)?;
+            // The paper tables (fig3/fig4/table3/formats/scaling) exist
+            // to showcase the cycle engine; only the serving comparison
+            // has an analytic cost model to swap in. Mirror the
+            // --policy/pareto restriction instead of silently ignoring
+            // the flag.
+            if exec != ExecMode::Cycle && what != "serving" && what != "all" {
+                return Err(CliError(format!(
+                    "--exec {exec} only applies to 'reproduce serving' (or 'all'), \
+                     not '{what}' — the paper tables are cycle-accurate by definition"
+                )));
+            }
             Ok(Command::Reproduce {
                 what,
                 cores: get_parse(&f, "cores", 8)?,
@@ -375,6 +468,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 fmt,
                 cold_plans: get_cold_plans(&f),
                 policy,
+                exec,
                 trace_out: get_out_path(&f, "trace-out")?,
                 obs_out: get_out_path(&f, "obs-out")?,
             })
@@ -450,6 +544,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 artifacts: f.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
                 cold_plans: get_cold_plans(&f),
                 policy,
+                exec: get_exec(&f)?,
                 trace_out: get_out_path(&f, "trace-out")?,
                 obs_out: get_out_path(&f, "obs-out")?,
             })
@@ -466,17 +561,20 @@ USAGE:
   mxdotp-cli quantize  [--fmt e4m3|e5m2|e3m2|e2m3|e2m1|int8] [--block 32] [--n 8] [--seed S]
   mxdotp-cli simulate  [--kernel mx|fp32|fp8sw] [--m 64] [--k 256] [--n 64]
                        [--cores 8] [--clusters 1] [--fmt e4m3] [--seed S] [--cold-plans]
-                       [--policy PRESET|class=fmt,...] [--trace-out FILE] [--obs-out FILE]
+                       [--policy PRESET|class=fmt,...] [--exec cycle|analytic|sampled:N]
+                       [--trace-out FILE] [--obs-out FILE]
                        (--clusters N > 1 shards the MX GEMM across N simulated clusters;
                         --policy walks the whole mixed-precision model graph instead)
   mxdotp-cli reproduce [fig3|fig4|table3|formats|scaling|serving|pareto|all] [--cores 8]
                        [--clusters 8] [--fmt e4m3] [--cold-plans] [--policy ...]
+                       [--exec cycle|analytic|sampled:N]
                        [--trace-out FILE] [--obs-out FILE]
   mxdotp-cli serve     [--requests 16] [--batch 8] [--clusters 1] [--fabrics N]
                        [--fmt e4m3] [--mix e4m3:0.6,e2m1:0.4 | --policy PRESET|class=fmt,...]
                        [--arrival poisson[:RATE] | bursty:RATE:FACTOR:PERIOD]
                        [--slo-ticks 0] [--queue-cap 128]
                        [--sched continuous|barrier] [--artifacts DIR] [--cold-plans]
+                       [--exec cycle|analytic|sampled:N]
                        [--trace-out FILE] [--obs-out FILE]
   mxdotp-cli info
 
@@ -515,8 +613,18 @@ single-request cost); --queue-cap bounds the admission queue.
 schedulers on the same traces.
 
 --cold-plans bypasses the compile-once/execute-many plan cache (plans,
-quantized weight tiles, memoized passes) and measures the from-scratch
-path; results are bit-identical either way.
+quantized weight tiles, memoized passes, layer runs) and measures the
+from-scratch path; results are bit-identical either way.
+
+--exec picks the executor (DESIGN.md §15). 'cycle' (default) runs
+everything on the cycle-accurate engine. 'analytic' costs the run with
+the calibrated analytic model and never enters the cycle loop.
+'sampled:N' runs analytically but calibrates against one cycle run and
+deterministically spot-checks 1-in-N served requests (seeded, so the
+check schedule is reproducible) on the cycle engine, exiting non-zero
+if the two models diverge past the stored tolerance. Applies to
+'simulate --policy', 'reproduce serving' and 'serve'; sampled:0 and
+unknown modes are rejected at parse time.
 
 --trace-out writes a Chrome/Perfetto trace-event JSON file (open it at
 https://ui.perfetto.dev) with the run on one simulated timeline: serve
@@ -560,10 +668,81 @@ mod tests {
                 seed: 42,
                 cold_plans: false,
                 policy: None,
+                exec: ExecMode::Cycle,
                 trace_out: None,
                 obs_out: None
             }
         );
+    }
+
+    #[test]
+    fn parse_exec_modes() {
+        // default is the cycle engine on all three subcommands
+        assert!(matches!(parse(&argv("serve")), Ok(Command::Serve { exec: ExecMode::Cycle, .. })));
+        assert!(matches!(
+            parse(&argv("reproduce serving")),
+            Ok(Command::Reproduce { exec: ExecMode::Cycle, .. })
+        ));
+        assert!(matches!(
+            parse(&argv("simulate --policy fp4-ffn")),
+            Ok(Command::Simulate { exec: ExecMode::Cycle, .. })
+        ));
+        // explicit modes parse on all three
+        assert!(matches!(
+            parse(&argv("serve --exec analytic")),
+            Ok(Command::Serve { exec: ExecMode::Analytic, .. })
+        ));
+        assert!(matches!(
+            parse(&argv("serve --exec sampled:8")),
+            Ok(Command::Serve { exec: ExecMode::Sampled(8), .. })
+        ));
+        assert!(matches!(
+            parse(&argv("reproduce serving --exec sampled:8")),
+            Ok(Command::Reproduce { exec: ExecMode::Sampled(8), .. })
+        ));
+        assert!(matches!(
+            parse(&argv("reproduce all --exec analytic")),
+            Ok(Command::Reproduce { exec: ExecMode::Analytic, .. })
+        ));
+        assert!(matches!(
+            parse(&argv("simulate --policy fp4-ffn --exec sampled:1")),
+            Ok(Command::Simulate { exec: ExecMode::Sampled(1), .. })
+        ));
+        assert!(matches!(
+            parse(&argv("serve --exec cycle")),
+            Ok(Command::Serve { exec: ExecMode::Cycle, .. })
+        ));
+    }
+
+    #[test]
+    fn unknown_exec_mode_is_rejected_listing_supported_modes() {
+        let err = parse(&argv("serve --exec warp")).unwrap_err();
+        assert!(err.0.contains("unknown --exec mode 'warp'"), "{err}");
+        for mode in ["cycle", "analytic", "sampled:N"] {
+            assert!(err.0.contains(mode), "error must list '{mode}': {err}");
+        }
+        // sampled:0 would check nothing — rejected with guidance
+        let err = parse(&argv("serve --exec sampled:0")).unwrap_err();
+        assert!(err.0.contains("sampled:0"), "{err}");
+        assert!(err.0.contains("at least 1"), "{err}");
+        // malformed rates
+        assert!(parse(&argv("serve --exec sampled:")).is_err());
+        assert!(parse(&argv("serve --exec sampled:two")).is_err());
+        assert!(parse(&argv("serve --exec sampled:-3")).is_err());
+    }
+
+    #[test]
+    fn exec_scope_is_validated_per_subcommand() {
+        // simulate without --policy is inherently a cycle run
+        let err = parse(&argv("simulate --exec analytic")).unwrap_err();
+        assert!(err.0.contains("--policy"), "{err}");
+        assert!(parse(&argv("simulate --policy all-fp8 --exec analytic")).is_ok());
+        // reproduce: only the serving comparison has an analytic model
+        let err = parse(&argv("reproduce scaling --exec sampled:4")).unwrap_err();
+        assert!(err.0.contains("serving"), "{err}");
+        assert!(parse(&argv("reproduce fig4 --exec analytic")).is_err());
+        assert!(parse(&argv("reproduce serving --exec sampled:4")).is_ok());
+        assert!(parse(&argv("reproduce --exec cycle")).is_ok());
     }
 
     #[test]

@@ -302,6 +302,49 @@ struct PassKey {
     b: [u64; 2],
 }
 
+/// Key for a memoized whole **layer run**: everything that determines
+/// a `scaleout::sharded_mm` result — problem shape + format, the full
+/// scale-out configuration (cluster/core counts, split strategy, tile
+/// caps, clock), the fabric placement, and both operand content
+/// fingerprints. Two lookups with equal keys would run a bit-identical
+/// simulation, so the stored [`crate::scaleout::ShardedRun`] (output
+/// bits, per-cluster stats, cycle/energy totals) replays exactly.
+///
+/// `MmProblem`/`ScaleoutConfig` carry an `f64` clock and don't derive
+/// `Hash`, so the key copies their fields with the clock as raw bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct LayerRunKey {
+    /// Problem shape + MX geometry.
+    pub m: usize,
+    /// Inner dimension.
+    pub k: usize,
+    /// Columns.
+    pub n: usize,
+    /// Element format.
+    pub fmt: ElemFormat,
+    /// MX block size.
+    pub block_size: usize,
+    /// Clusters in the scale-out config.
+    pub clusters: usize,
+    /// Cores per cluster.
+    pub cores_per_cluster: usize,
+    /// Split strategy (M-only or M×K).
+    pub strategy: crate::scaleout::SplitStrategy,
+    /// Row-tile cap.
+    pub max_tile_m: usize,
+    /// Column-tile cap.
+    pub max_tile_n: usize,
+    /// Clock frequency as raw f64 bits.
+    pub freq_bits: u64,
+    /// First cluster id of the fabric lease (cluster ids appear in the
+    /// per-cluster stats, so placement is part of the result).
+    pub first_cluster: usize,
+    /// Content fingerprint of A.
+    pub a_fp: [u64; 2],
+    /// Content fingerprint of B.
+    pub b_fp: [u64; 2],
+}
+
 /// Hit/miss counters of one cache instance (coarse, for benches and
 /// the warm-vs-cold tests).
 #[derive(Clone, Copy, Debug, Default)]
@@ -318,6 +361,10 @@ pub struct CacheStats {
     pub pass_hits: u64,
     /// Passes simulated.
     pub pass_misses: u64,
+    /// Whole layer runs replayed from memoized results.
+    pub layer_run_hits: u64,
+    /// Layer runs simulated.
+    pub layer_run_misses: u64,
 }
 
 // Simple capacity bounds (the working sets — a handful of tile
@@ -329,6 +376,7 @@ pub struct CacheStats {
 const PLANS_CAP: usize = 512;
 const B_TILES_CAP: usize = 512;
 const PASSES_CAP: usize = 4096;
+const LAYER_RUNS_CAP: usize = 256;
 
 /// Evict an arbitrary half of `map` (HashMap order) once it reaches
 /// `cap`.
@@ -351,12 +399,15 @@ pub struct PlanCache {
     plans: Mutex<HashMap<PlanKey, Arc<MmPlan>>>,
     b_tiles: Mutex<HashMap<BTileKey, Arc<MxMatrix>>>,
     passes: Mutex<HashMap<PassKey, Arc<PassResult>>>,
+    layer_runs: Mutex<HashMap<LayerRunKey, Arc<crate::scaleout::ShardedRun>>>,
     plan_hits: AtomicU64,
     plan_misses: AtomicU64,
     b_hits: AtomicU64,
     b_misses: AtomicU64,
     pass_hits: AtomicU64,
     pass_misses: AtomicU64,
+    layer_hits: AtomicU64,
+    layer_misses: AtomicU64,
 }
 
 impl Default for PlanCache {
@@ -389,12 +440,15 @@ impl PlanCache {
             plans: Mutex::new(HashMap::new()),
             b_tiles: Mutex::new(HashMap::new()),
             passes: Mutex::new(HashMap::new()),
+            layer_runs: Mutex::new(HashMap::new()),
             plan_hits: AtomicU64::new(0),
             plan_misses: AtomicU64::new(0),
             b_hits: AtomicU64::new(0),
             b_misses: AtomicU64::new(0),
             pass_hits: AtomicU64::new(0),
             pass_misses: AtomicU64::new(0),
+            layer_hits: AtomicU64::new(0),
+            layer_misses: AtomicU64::new(0),
         }
     }
 
@@ -445,7 +499,7 @@ impl PlanCache {
     pub fn quantized_b(&self, p: &MmProblem, b: &[f32], bfp: [u64; 2]) -> Arc<MxMatrix> {
         if !self.enabled {
             self.b_misses.fetch_add(1, Ordering::Relaxed);
-            return Arc::new(quantize_b(p, b));
+            return Arc::new(quantize_b_timed(p, b));
         }
         let key = BTileKey { fp: bfp, k: p.k, n: p.n, fmt: p.fmt, block_size: p.block_size };
         if let Some(q) = self.b_tiles.lock().unwrap().get(&key) {
@@ -453,7 +507,7 @@ impl PlanCache {
             return Arc::clone(q);
         }
         self.b_misses.fetch_add(1, Ordering::Relaxed);
-        let built = Arc::new(quantize_b(p, b));
+        let built = Arc::new(quantize_b_timed(p, b));
         let mut tiles = self.b_tiles.lock().unwrap();
         evict_half(&mut tiles, B_TILES_CAP);
         Arc::clone(tiles.entry(key).or_insert(built))
@@ -487,6 +541,33 @@ impl PlanCache {
             .or_insert_with(|| Arc::new(PassResult { c: run.c.clone(), perf: run.perf.clone() }));
     }
 
+    /// Look up a memoized whole layer run. Counts a miss when absent
+    /// (the caller is expected to simulate and [`store_layer_run`]).
+    ///
+    /// [`store_layer_run`]: PlanCache::store_layer_run
+    pub fn layer_run(&self, key: &LayerRunKey) -> Option<Arc<crate::scaleout::ShardedRun>> {
+        if !self.enabled {
+            self.layer_misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let hit = self.layer_runs.lock().unwrap().get(key).map(Arc::clone);
+        match &hit {
+            Some(_) => self.layer_hits.fetch_add(1, Ordering::Relaxed),
+            None => self.layer_misses.fetch_add(1, Ordering::Relaxed),
+        };
+        hit
+    }
+
+    /// Memoize a completed layer run.
+    pub fn store_layer_run(&self, key: LayerRunKey, run: Arc<crate::scaleout::ShardedRun>) {
+        if !self.enabled {
+            return;
+        }
+        let mut runs = self.layer_runs.lock().unwrap();
+        evict_half(&mut runs, LAYER_RUNS_CAP);
+        runs.entry(key).or_insert(run);
+    }
+
     /// Snapshot of the hit/miss counters.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
@@ -496,8 +577,29 @@ impl PlanCache {
             b_tile_misses: self.b_misses.load(Ordering::Relaxed),
             pass_hits: self.pass_hits.load(Ordering::Relaxed),
             pass_misses: self.pass_misses.load(Ordering::Relaxed),
+            layer_run_hits: self.layer_hits.load(Ordering::Relaxed),
+            layer_run_misses: self.layer_misses.load(Ordering::Relaxed),
         }
     }
+}
+
+/// [`quantize_a`] with host wall-clock recorded into the quantize
+/// phase of the observability profile. Export-only timing; the
+/// quantized bytes are identical.
+fn quantize_a_timed(p: &MmProblem, a: &[f32]) -> MxMatrix {
+    let host_start = std::time::Instant::now();
+    let q = quantize_a(p, a);
+    crate::obs::hostprof::record_quantize(host_start.elapsed().as_nanos() as u64);
+    q
+}
+
+/// [`quantize_b`] with host wall-clock recorded (see
+/// [`quantize_a_timed`]).
+fn quantize_b_timed(p: &MmProblem, b: &[f32]) -> MxMatrix {
+    let host_start = std::time::Instant::now();
+    let q = quantize_b(p, b);
+    crate::obs::hostprof::record_quantize(host_start.elapsed().as_nanos() as u64);
+    q
 }
 
 /// Warm-path equivalent of `run_mm`: plan through `cache`, reuse
@@ -521,7 +623,7 @@ pub fn run_mm_cached(
     let run = match kind {
         KernelKind::Fp32 => plan.execute(cluster, &MmOperands::Fp32 { a, b }),
         KernelKind::Fp8ToFp32 | KernelKind::Mx(_) => {
-            let qa = quantize_a(&problem, a);
+            let qa = quantize_a_timed(&problem, a);
             let qb = cache.quantized_b(&problem, b, bfp);
             plan.execute(cluster, &MmOperands::Mx { qa: &qa, qb: &qb })
         }

@@ -4,7 +4,7 @@
 //! engine (DESIGN.md §12) with real executors behind it.
 
 use anyhow::Result;
-use mxdotp::cli::{parse, Command, USAGE};
+use mxdotp::cli::{parse, Command, ExecMode, USAGE};
 use mxdotp::coordinator::{ModelExecutor, PjrtExecutor};
 use mxdotp::formats::{ElemFormat, MxVector};
 use mxdotp::kernels::{run_mm, MmProblem};
@@ -79,6 +79,7 @@ fn main() -> Result<()> {
             seed,
             cold_plans,
             policy,
+            exec,
             trace_out,
             obs_out,
         } => {
@@ -89,6 +90,71 @@ fn main() -> Result<()> {
                 // apply; shapes come from the DeiT-Tiny graph).
                 let cfg = DeitConfig { fmt, ..DeitConfig::default() };
                 let graph = ModelGraph::deit_block(&cfg);
+                if exec != ExecMode::Cycle {
+                    // Analytic / sampled executors (DESIGN.md §15):
+                    // cost the walk from the analytic model instead of
+                    // simulating every layer.
+                    if want_obs {
+                        eprintln!(
+                            "note: --trace-out/--obs-out capture cycle-engine runs; \
+                             skipped under --exec {exec}"
+                        );
+                    }
+                    let util = match exec {
+                        ExecMode::Sampled(_) => {
+                            eprintln!(
+                                "calibrating MX({fmt}) utilization (one cycle run)..."
+                            );
+                            calibrate_util(&cfg, cores, 1, cold_plans)
+                        }
+                        _ => ServeConfig::default().util,
+                    };
+                    let eff =
+                        if clusters > 1 { ServeConfig::default().cluster_eff } else { 1.0 };
+                    let pc = mxdotp::workload::analytic_policy_sharded_cost(
+                        &cfg, &policy, cores, util, clusters, eff,
+                    );
+                    println!(
+                        "policy {policy} on {clusters} cluster(s) [--exec {exec}]: \
+                         {} analytic wall cycles, {:.1} µJ \
+                         (util {:.1} %, cluster eff {:.1} %)",
+                        pc.total.cycles,
+                        pc.total.energy_uj,
+                        util * 100.0,
+                        eff * 100.0
+                    );
+                    for (class, c) in &pc.per_layer {
+                        println!(
+                            "  layer {:<6} {:>12} cycles {:>14} flops",
+                            class.key(),
+                            c.cycles,
+                            c.flops
+                        );
+                    }
+                    if let ExecMode::Sampled(_) = exec {
+                        let (measured, analytic) =
+                            serve::spot_check_policy(&cfg, &policy, cores, util, seed);
+                        let rel = if measured == 0 {
+                            0.0
+                        } else {
+                            (measured as f64 - analytic as f64).abs() / measured as f64
+                        };
+                        println!(
+                            "spot-check on the reduced model: cycle {measured} vs analytic \
+                             {analytic} cycles — rel err {rel:.4} (tol {:.2})",
+                            serve::SAMPLED_DIVERGENCE_TOL
+                        );
+                        if rel > serve::SAMPLED_DIVERGENCE_TOL {
+                            eprintln!(
+                                "error: analytic executor diverged from the cycle engine \
+                                 (rel err {rel:.4} > tol {:.2})",
+                                serve::SAMPLED_DIVERGENCE_TOL
+                            );
+                            std::process::exit(1);
+                        }
+                    }
+                    return Ok(());
+                }
                 eprintln!(
                     "simulating the DeiT-Tiny graph under policy '{policy}' on \
                      {clusters} cluster(s) x {cores} cores (cycle-accurate; \
@@ -193,7 +259,7 @@ fn main() -> Result<()> {
                 }
             }
         }
-        Command::Reproduce { what, cores, clusters, fmt, cold_plans, policy, trace_out, obs_out } => {
+        Command::Reproduce { what, cores, clusters, fmt, cold_plans, policy, exec, trace_out, obs_out } => {
             if what == "fig3" || what == "all" {
                 println!("{}", report::render_fig3());
             }
@@ -218,17 +284,27 @@ fn main() -> Result<()> {
                 let secondary =
                     if fmt == ElemFormat::E2M1 { ElemFormat::E4M3 } else { ElemFormat::E2M1 };
                 let mix = vec![(fmt, 0.6), (secondary, 0.4)];
-                eprintln!(
-                    "calibrating MX({fmt}) utilization and {clusters}-cluster efficiency \
-                     (cycle-accurate)..."
-                );
-                let util = calibrate_util(&model, cores, 1, cold_plans);
-                let eff = if clusters > 1 {
-                    let scfg =
-                        ScaleoutConfig { cold_plans, ..ScaleoutConfig::with_clusters(clusters) };
-                    measure_parallel_efficiency(&scfg, 2)
+                let (util, eff) = if exec == ExecMode::Analytic {
+                    println!(
+                        "--exec analytic: default calibration (no cycle-engine runs)"
+                    );
+                    (ServeConfig::default().util, ServeConfig::default().cluster_eff)
                 } else {
-                    1.0
+                    eprintln!(
+                        "calibrating MX({fmt}) utilization and {clusters}-cluster efficiency \
+                         (cycle-accurate)..."
+                    );
+                    let util = calibrate_util(&model, cores, 1, cold_plans);
+                    let eff = if clusters > 1 {
+                        let scfg = ScaleoutConfig {
+                            cold_plans,
+                            ..ScaleoutConfig::with_clusters(clusters)
+                        };
+                        measure_parallel_efficiency(&scfg, 2)
+                    } else {
+                        1.0
+                    };
+                    (util, eff)
                 };
                 let scfg = ServeConfig {
                     model,
@@ -241,16 +317,61 @@ fn main() -> Result<()> {
                 let points =
                     report::serving_sweep(&scfg, &mix, 400, 42, &report::SERVING_LOAD_MULTS);
                 println!("{}", report::render_serving(&points, &scfg, &mix));
-                // The §12 acceptance invariant: the schedulers reorder
-                // time, never results — checked with real per-format
-                // executors on a reduced model.
-                eprintln!("verifying scheduler bit-identity with real executors...");
-                let vmodel = DeitConfig { seq: 16, ..model };
-                let n = serve::verify_schedulers_bit_identical(&vmodel, &mix, 12, 7);
-                println!(
-                    "scheduler bit-identity: {n} requests served by both schedulers \
-                     produced bit-identical outputs"
-                );
+                match exec {
+                    ExecMode::Cycle => {
+                        // The §12 acceptance invariant: the schedulers
+                        // reorder time, never results — checked with
+                        // real per-format executors on a reduced model.
+                        eprintln!("verifying scheduler bit-identity with real executors...");
+                        let vmodel = DeitConfig { seq: 16, ..model };
+                        let n = serve::verify_schedulers_bit_identical(&vmodel, &mix, 12, 7);
+                        println!(
+                            "scheduler bit-identity: {n} requests served by both schedulers \
+                             produced bit-identical outputs"
+                        );
+                    }
+                    ExecMode::Analytic => {
+                        println!(
+                            "scheduler bit-identity check skipped \
+                             (--exec analytic runs no executors)"
+                        );
+                    }
+                    ExecMode::Sampled(n) => {
+                        // The sampled executor's calibration contract
+                        // (DESIGN.md §15): replay the canonical serving
+                        // trace analytically, then re-cost a seeded
+                        // 1-in-N sample of it on the cycle engine.
+                        eprintln!(
+                            "spot-checking the analytic executor (1 in {n}) against the \
+                             cycle engine..."
+                        );
+                        let spec = ArrivalSpec {
+                            kind: ArrivalKind::Poisson,
+                            rate_per_ktick: 0.5
+                                * serve::estimated_capacity_per_ktick(&scfg, &mix),
+                            mix: mix.clone(),
+                            high_priority_frac: 0.2,
+                            requests: 200,
+                            seed: 42,
+                        };
+                        let outcome = serve::simulate(&scfg, &generate_trace(&spec));
+                        let rep = serve::spot_check_sampled(&scfg, &outcome, n, 42);
+                        print!("{}", rep.render());
+                        std::fs::write("OBS_spotcheck_serving.json", rep.render_json())?;
+                        println!(
+                            "wrote OBS_spotcheck_serving.json \
+                             (deterministic spot-check artifact)"
+                        );
+                        if !rep.within_tolerance() {
+                            eprintln!(
+                                "error: --exec sampled:{n} divergence: max rel err {:.4} \
+                                 exceeds tolerance {:.2}",
+                                rep.max_rel_err, rep.tol
+                            );
+                            std::process::exit(1);
+                        }
+                    }
+                }
             }
             if what == "pareto" || what == "all" {
                 let cfg = DeitConfig { fmt, ..DeitConfig::default() };
@@ -333,21 +454,39 @@ fn main() -> Result<()> {
             artifacts,
             cold_plans,
             policy,
+            exec,
             trace_out,
             obs_out,
         } => {
             let model = DeitConfig { fmt, ..DeitConfig::default() };
             // Calibrate at the mix's dominant format; the analytic
-            // model scales the other formats by lane width.
+            // model scales the other formats by lane width. The pure
+            // analytic executor skips even this one cycle run; sampled
+            // keeps it (calibration is its contract with the engine).
             let dominant = mix
                 .iter()
                 .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
                 .map(|&(f, _)| f)
                 .unwrap_or(fmt);
-            println!("calibrating MX({dominant}) utilization on the cycle-accurate cluster...");
-            let util =
-                calibrate_util(&DeitConfig { fmt: dominant, ..model }, snitch::NUM_CORES, 1, cold_plans);
-            println!("  calibrated utilization: {:.1} %", util * 100.0);
+            let util = if exec == ExecMode::Analytic {
+                println!(
+                    "--exec analytic: default utilization {:.1} % (no cycle-engine runs)",
+                    ServeConfig::default().util * 100.0
+                );
+                ServeConfig::default().util
+            } else {
+                println!(
+                    "calibrating MX({dominant}) utilization on the cycle-accurate cluster..."
+                );
+                let util = calibrate_util(
+                    &DeitConfig { fmt: dominant, ..model },
+                    snitch::NUM_CORES,
+                    1,
+                    cold_plans,
+                );
+                println!("  calibrated utilization: {:.1} %", util * 100.0);
+                util
+            };
             let mut scfg = ServeConfig {
                 model,
                 clusters,
@@ -361,7 +500,7 @@ fn main() -> Result<()> {
                 ..ServeConfig::default()
             };
             let cpf = scfg.clusters_per_fabric();
-            if cpf > 1 {
+            if cpf > 1 && exec != ExecMode::Analytic {
                 let probe = ScaleoutConfig { cold_plans, ..ScaleoutConfig::with_clusters(cpf) };
                 let e = measure_parallel_efficiency(&probe, 2);
                 println!(
@@ -411,7 +550,7 @@ fn main() -> Result<()> {
                  scheduler {sched}; SLO {slo} ticks (1 tick = 1 µs of fabric time)",
                 scfg.fabric_count()
             );
-            if scfg.fabric_count() > 1 {
+            if scfg.fabric_count() > 1 && exec == ExecMode::Cycle {
                 for (lease, gflops) in serve::probe_fabrics(&scfg, dominant) {
                     println!(
                         "  fabric on clusters {}..{}: probe {:.1} GFLOPS (cycle-accurate)",
@@ -464,8 +603,34 @@ fn main() -> Result<()> {
             // PJRT when artifacts are present and the mix is a single
             // format (the artifact is compiled for one format), the
             // per-format in-process MX executors (concurrent batches
-            // on disjoint fabrics) otherwise.
+            // on disjoint fabrics) otherwise. The analytic and sampled
+            // executors skip the host forward passes entirely (the
+            // sampled mode re-costs a seeded sample below instead).
             let t0 = std::time::Instant::now();
+            if exec != ExecMode::Cycle {
+                println!(
+                    "--exec {exec}: analytic costing; skipping host forward passes for \
+                     {} served request(s)",
+                    outcome.served.len()
+                );
+                print!("{}", render_serve_summary(&outcome, 0, t0.elapsed().as_secs_f64()));
+                if let ExecMode::Sampled(n) = exec {
+                    eprintln!(
+                        "spot-checking 1 in {n} served request(s) on the cycle engine..."
+                    );
+                    let rep = serve::spot_check_sampled(&scfg, &outcome, n, 42);
+                    print!("{}", rep.render());
+                    if !rep.within_tolerance() {
+                        eprintln!(
+                            "error: --exec sampled:{n} divergence: max rel err {:.4} \
+                             exceeds tolerance {:.2}",
+                            rep.max_rel_err, rep.tol
+                        );
+                        std::process::exit(1);
+                    }
+                }
+                return Ok(());
+            }
             let params = generate_params(&model, 42);
             // PJRT executes the single-format artifact: only a pure
             // single-format class (and no custom per-layer policy, or

@@ -4,15 +4,21 @@
 //! module is the one sanctioned home for **host** wall-clock. It
 //! answers the ROADMAP's "simulator hot-loop speed" question — how
 //! many simulated cycles does a host microsecond buy? — by timing the
-//! two host-dominant paths:
+//! host-dominant phases separately, so `BENCH_hotpath.json` can
+//! attribute host wall to simulator phases instead of one global
+//! ratio:
 //!
-//! * the snitch decode/execute hot loop
+//! * **decode/execute** — the snitch hot loop
 //!   ([`crate::snitch::Cluster::run_checked`] wraps every simulated
-//!   run with one [`std::time::Instant`] pair), and
-//! * plan compilation ([`crate::kernels::PlanCache`] times each
-//!   [`crate::kernels::MmPlan`] build).
+//!   run with one [`std::time::Instant`] pair) plus the FREP
+//!   fast-forward hit counter (fast cycles retired by the slim path);
+//! * **plan** — plan compilation ([`crate::kernels::PlanCache`] times
+//!   each [`crate::kernels::MmPlan`] build);
+//! * **quantize** — MX operand quantization on the cached-pass path;
+//! * **replay** — layer-run cache hits: simulated cycles *delivered*
+//!   from the memoized layer cache without re-entering the cycle loop.
 //!
-//! The counters are process-global relaxed atomics: two `fetch_add`s
+//! The counters are process-global relaxed atomics: a few `fetch_add`s
 //! per multi-thousand-cycle cluster run, cheap enough to stay
 //! always-on. Their values are **never** fed back into simulation and
 //! never appear in deterministic artifacts except under `host_`-
@@ -28,6 +34,12 @@ static SIM_CYCLES: AtomicU64 = AtomicU64::new(0);
 static SIM_RUNS: AtomicU64 = AtomicU64::new(0);
 static PLAN_BUILD_NANOS: AtomicU64 = AtomicU64::new(0);
 static PLAN_BUILDS: AtomicU64 = AtomicU64::new(0);
+static FF_CYCLES: AtomicU64 = AtomicU64::new(0);
+static QUANTIZE_NANOS: AtomicU64 = AtomicU64::new(0);
+static QUANTIZES: AtomicU64 = AtomicU64::new(0);
+static REPLAY_NANOS: AtomicU64 = AtomicU64::new(0);
+static REPLAY_CYCLES: AtomicU64 = AtomicU64::new(0);
+static REPLAY_RUNS: AtomicU64 = AtomicU64::new(0);
 
 /// Record one timed simulator run: `nanos` of host wall-clock spent
 /// advancing `cycles` simulated cycles.
@@ -43,6 +55,26 @@ pub fn record_plan_build(nanos: u64) {
     PLAN_BUILDS.fetch_add(1, Ordering::Relaxed);
 }
 
+/// Record how many of a run's cycles were retired by the FREP
+/// fast-forward path (a subset of that run's `record_sim` cycles).
+pub fn record_frep_ff(cycles: u64) {
+    FF_CYCLES.fetch_add(cycles, Ordering::Relaxed);
+}
+
+/// Record one timed MX quantization (operand prep before simulation).
+pub fn record_quantize(nanos: u64) {
+    QUANTIZE_NANOS.fetch_add(nanos, Ordering::Relaxed);
+    QUANTIZES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record one layer-run cache hit: `cycles` of simulated work
+/// delivered in `nanos` of host wall without entering the cycle loop.
+pub fn record_replay(nanos: u64, cycles: u64) {
+    REPLAY_NANOS.fetch_add(nanos, Ordering::Relaxed);
+    REPLAY_CYCLES.fetch_add(cycles, Ordering::Relaxed);
+    REPLAY_RUNS.fetch_add(1, Ordering::Relaxed);
+}
+
 /// Zero every counter — call at the start of a measurement window
 /// (benches do; the CLI reports whole-process totals).
 pub fn reset() {
@@ -51,6 +83,12 @@ pub fn reset() {
     SIM_RUNS.store(0, Ordering::Relaxed);
     PLAN_BUILD_NANOS.store(0, Ordering::Relaxed);
     PLAN_BUILDS.store(0, Ordering::Relaxed);
+    FF_CYCLES.store(0, Ordering::Relaxed);
+    QUANTIZE_NANOS.store(0, Ordering::Relaxed);
+    QUANTIZES.store(0, Ordering::Relaxed);
+    REPLAY_NANOS.store(0, Ordering::Relaxed);
+    REPLAY_CYCLES.store(0, Ordering::Relaxed);
+    REPLAY_RUNS.store(0, Ordering::Relaxed);
 }
 
 /// A point-in-time copy of the profiling counters.
@@ -66,6 +104,20 @@ pub struct HostProfile {
     pub plan_build_nanos: u64,
     /// Number of plan compilations.
     pub plan_builds: u64,
+    /// Simulated cycles retired by the FREP fast-forward path (a
+    /// subset of `sim_cycles`).
+    pub ff_cycles: u64,
+    /// Host nanoseconds spent quantizing MX operands.
+    pub quantize_nanos: u64,
+    /// Number of timed quantizations.
+    pub quantizes: u64,
+    /// Host nanoseconds spent serving layer-run cache hits.
+    pub replay_nanos: u64,
+    /// Simulated cycles delivered from the layer-run cache (disjoint
+    /// from `sim_cycles` — these runs never entered the cycle loop).
+    pub replay_cycles: u64,
+    /// Number of layer-run cache hits.
+    pub replay_runs: u64,
 }
 
 impl HostProfile {
@@ -83,6 +135,26 @@ impl HostProfile {
         }
         self.sim_cycles as f64 * 1e3 / self.sim_wall_nanos as f64
     }
+
+    /// Fraction of simulated cycles retired by the FREP fast-forward
+    /// path. 0 when nothing ran.
+    pub fn ff_hit_rate(&self) -> f64 {
+        if self.sim_cycles == 0 {
+            return 0.0;
+        }
+        self.ff_cycles as f64 / self.sim_cycles as f64
+    }
+
+    /// *Delivered* simulator speed: simulated cycles per host
+    /// microsecond counting layer-run cache replays — the number that
+    /// reflects what the serving path actually gets per host second.
+    pub fn delivered_cycles_per_host_us(&self) -> f64 {
+        let nanos = self.sim_wall_nanos + self.replay_nanos;
+        if nanos == 0 {
+            return 0.0;
+        }
+        (self.sim_cycles + self.replay_cycles) as f64 * 1e3 / nanos as f64
+    }
 }
 
 /// Snapshot the current counter values.
@@ -93,6 +165,12 @@ pub fn snapshot() -> HostProfile {
         sim_runs: SIM_RUNS.load(Ordering::Relaxed),
         plan_build_nanos: PLAN_BUILD_NANOS.load(Ordering::Relaxed),
         plan_builds: PLAN_BUILDS.load(Ordering::Relaxed),
+        ff_cycles: FF_CYCLES.load(Ordering::Relaxed),
+        quantize_nanos: QUANTIZE_NANOS.load(Ordering::Relaxed),
+        quantizes: QUANTIZES.load(Ordering::Relaxed),
+        replay_nanos: REPLAY_NANOS.load(Ordering::Relaxed),
+        replay_cycles: REPLAY_CYCLES.load(Ordering::Relaxed),
+        replay_runs: REPLAY_RUNS.load(Ordering::Relaxed),
     }
 }
 
@@ -109,12 +187,29 @@ mod tests {
             sim_wall_nanos: 2_000_000,
             sim_cycles: 10_000,
             sim_runs: 2,
-            plan_build_nanos: 0,
-            plan_builds: 0,
+            ff_cycles: 7_500,
+            ..Default::default()
         };
         assert!((p.sim_wall_ms() - 2.0).abs() < 1e-12);
         assert!((p.sim_cycles_per_host_us() - 5.0).abs() < 1e-12);
+        assert!((p.ff_hit_rate() - 0.75).abs() < 1e-12);
         assert_eq!(HostProfile::default().sim_cycles_per_host_us(), 0.0);
+        assert_eq!(HostProfile::default().ff_hit_rate(), 0.0);
+        assert_eq!(HostProfile::default().delivered_cycles_per_host_us(), 0.0);
+    }
+
+    #[test]
+    fn delivered_ratio_counts_replayed_cycles() {
+        let p = HostProfile {
+            sim_wall_nanos: 1_000_000,
+            sim_cycles: 1_000,
+            replay_nanos: 1_000_000,
+            replay_cycles: 99_000,
+            ..Default::default()
+        };
+        // 100k cycles over 2 ms = 50 cycles/us delivered, vs 1 raw.
+        assert!((p.delivered_cycles_per_host_us() - 50.0).abs() < 1e-12);
+        assert!((p.sim_cycles_per_host_us() - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -122,10 +217,17 @@ mod tests {
         let before = snapshot();
         record_sim(1_000, 500);
         record_plan_build(250);
+        record_frep_ff(400);
+        record_quantize(100);
+        record_replay(50, 500);
         let after = snapshot();
         assert!(after.sim_wall_nanos >= before.sim_wall_nanos + 1_000);
         assert!(after.sim_cycles >= before.sim_cycles + 500);
         assert!(after.sim_runs >= before.sim_runs + 1);
         assert!(after.plan_builds >= before.plan_builds + 1);
+        assert!(after.ff_cycles >= before.ff_cycles + 400);
+        assert!(after.quantizes >= before.quantizes + 1);
+        assert!(after.replay_cycles >= before.replay_cycles + 500);
+        assert!(after.replay_runs >= before.replay_runs + 1);
     }
 }

@@ -225,6 +225,15 @@ pub fn sharded_mm_leased(
 }
 
 /// Shared implementation of the sharded GEMM entry points.
+///
+/// This is the single choke point for the **layer-run cache**
+/// (DESIGN.md §15): when the call is untraced, the whole
+/// (policy-shape, fabric-config, operand-fingerprint) run is memoized
+/// in the [`PlanCache`], so serving and `model::hw` replay identical
+/// layers without re-entering the cycle loop. Traced runs always
+/// simulate (spans must be emitted), and a disabled cache (the
+/// `--cold-plans` path) never hits — either way the returned
+/// [`ShardedRun`] is bit-identical, asserted in `tests/fastpath.rs`.
 fn sharded_mm_on_lease(
     cfg: &ScaleoutConfig,
     lease: pool::FabricLease,
@@ -235,6 +244,35 @@ fn sharded_mm_on_lease(
     sink: Option<&mut crate::obs::TraceSink>,
 ) -> ShardedRun {
     assert!(problem.m > 0 && problem.k > 0 && problem.n > 0, "degenerate GEMM");
+    let layer_key = if sink.is_none() {
+        let t0 = std::time::Instant::now();
+        let key = crate::kernels::plan::LayerRunKey {
+            m: problem.m,
+            k: problem.k,
+            n: problem.n,
+            fmt: problem.fmt,
+            block_size: problem.block_size,
+            clusters: cfg.clusters,
+            cores_per_cluster: cfg.cores_per_cluster,
+            strategy: cfg.strategy,
+            max_tile_m: cfg.max_tile_m,
+            max_tile_n: cfg.max_tile_n,
+            freq_bits: cfg.freq_ghz.to_bits(),
+            first_cluster: lease.first_cluster,
+            a_fp: crate::kernels::plan::fingerprint(a),
+            b_fp: crate::kernels::plan::fingerprint(b),
+        };
+        if let Some(run) = cache.layer_run(&key) {
+            crate::obs::hostprof::record_replay(
+                t0.elapsed().as_nanos() as u64,
+                run.total_cycles,
+            );
+            return (*run).clone();
+        }
+        Some(key)
+    } else {
+        None
+    };
     let (pp, a_pad, b_pad) = partition::pad_k(&problem, a, b);
     let shards = partition::make_shards(&pp, cfg.strategy, cfg.clusters, cfg.cores_per_cluster);
     let jobs: Vec<ShardJob> = shards
@@ -279,7 +317,7 @@ fn sharded_mm_on_lease(
     let total_cycles = stats.iter().map(|s| s.cycles).sum();
     let total_mxdotp = stats.iter().map(|s| s.mxdotp).sum();
     let total_energy_uj = fabric.total_energy_uj;
-    ShardedRun {
+    let run = ShardedRun {
         problem,
         cfg: *cfg,
         c,
@@ -289,7 +327,11 @@ fn sharded_mm_on_lease(
         total_cycles,
         total_mxdotp,
         total_energy_uj,
+    };
+    if let Some(key) = layer_key {
+        cache.store_layer_run(key, std::sync::Arc::new(run.clone()));
     }
+    run
 }
 
 /// Measure strong-scaling parallel efficiency on a small representative

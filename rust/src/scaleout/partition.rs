@@ -31,7 +31,7 @@ use crate::kernels::MmProblem;
 use std::ops::Range;
 
 /// How to cut the GEMM across clusters.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SplitStrategy {
     /// Split rows of C only (bit-identical to single-cluster).
     MSplit,

@@ -641,6 +641,213 @@ pub fn probe_fabrics(cfg: &ServeConfig, fmt: ElemFormat) -> Vec<(FabricLease, f6
         .collect()
 }
 
+/// Stored divergence tolerance for the sampled executor (DESIGN.md
+/// §15): the maximum relative error between a spot-checked request's
+/// cycle-engine cost and its analytic cost before `--exec sampled:N`
+/// fails loudly. Deliberately loose — the analytic model is a
+/// calibrated first-order throughput model, not a cycle twin — so this
+/// is a drift alarm (the two models disagreeing *wildly* means a bug),
+/// not an accuracy gate.
+pub const SAMPLED_DIVERGENCE_TOL: f64 = 1.0;
+
+/// Sequence-length cap for the spot-check's reduced model: checking a
+/// request on the full serving shapes would cost more cycle-simulation
+/// than the analytic executor saved, and the analytic model's error is
+/// shape-stable, so the check runs the same policy on a `seq`-capped
+/// copy of the model.
+pub const SPOT_CHECK_SEQ: usize = 64;
+
+/// Salt XORed into the spot-check RNG seed so the 1-in-N selection
+/// stream is decorrelated from the arrival-trace stream that commonly
+/// shares the same user-facing seed.
+const SPOT_CHECK_SALT: u64 = 0x5907_C4EC_0D15_7A11;
+
+/// One sampled-executor spot check: a served request re-costed on the
+/// cycle engine next to its analytic estimate.
+#[derive(Clone, Copy, Debug)]
+pub struct SpotCheck {
+    /// Trace id of the checked request.
+    pub id: u64,
+    /// Cycle-engine wall cycles of the request's policy on the reduced
+    /// ([`SPOT_CHECK_SEQ`]-capped) model, one cluster.
+    pub measured_cycles: u64,
+    /// Analytic-model cycles for the same reduced model and policy.
+    pub analytic_cycles: u64,
+    /// `|measured − analytic| / measured` (0 when nothing ran on the
+    /// MX fabric, i.e. an all-FP32 policy).
+    pub rel_err: f64,
+}
+
+/// The outcome of a `--exec sampled:N` spot-check pass: which requests
+/// the seeded 1-in-N schedule selected, and how far the analytic model
+/// strayed from the cycle engine on each.
+#[derive(Clone, Debug)]
+pub struct SpotCheckReport {
+    /// The N of 1-in-N: each served request is selected with
+    /// probability 1/N by the seeded stream.
+    pub sample_every: u32,
+    /// Served requests in the outcome (the sampling population).
+    pub population: usize,
+    /// The selected checks, in ascending request-id order.
+    pub checks: Vec<SpotCheck>,
+    /// Largest relative error across the checks (0 when none ran).
+    pub max_rel_err: f64,
+    /// Request id carrying `max_rel_err`, if any check ran.
+    pub worst_request: Option<u64>,
+    /// The tolerance the report is judged against
+    /// ([`SAMPLED_DIVERGENCE_TOL`]).
+    pub tol: f64,
+}
+
+impl SpotCheckReport {
+    /// Whether every check stayed within the stored tolerance. An
+    /// empty check set passes (nothing diverged).
+    pub fn within_tolerance(&self) -> bool {
+        self.max_rel_err <= self.tol
+    }
+
+    /// Human-readable per-check table plus the verdict line. Pure
+    /// simulated quantities — bit-reproducible for a given
+    /// (config, outcome, seed).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "spot-check (1 in {}): {} of {} served request(s) selected, tol {:.2}\n",
+            self.sample_every,
+            self.checks.len(),
+            self.population,
+            self.tol
+        );
+        for c in &self.checks {
+            s.push_str(&format!(
+                "  request {:>5}: cycle {:>10} vs analytic {:>10} cycles  rel err {:.4}\n",
+                c.id, c.measured_cycles, c.analytic_cycles, c.rel_err
+            ));
+        }
+        match self.worst_request {
+            Some(id) if self.within_tolerance() => s.push_str(&format!(
+                "  max rel err {:.4} (request {id}) within tolerance — \
+                 analytic executor agrees with the cycle engine\n",
+                self.max_rel_err
+            )),
+            Some(id) => s.push_str(&format!(
+                "  DIVERGENCE: max rel err {:.4} (request {id}) exceeds tolerance {:.2}\n",
+                self.max_rel_err, self.tol
+            )),
+            None => s.push_str("  no requests selected (empty outcome or sparse schedule)\n"),
+        }
+        s
+    }
+
+    /// The report as deterministic JSON (simulated quantities only) —
+    /// written by `reproduce serving --exec sampled:N` so
+    /// `tools/check_determinism.py` can byte-compare the spot-check
+    /// schedule and verdict across reruns.
+    pub fn render_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"sample_every\": {},\n", self.sample_every));
+        s.push_str(&format!("  \"population\": {},\n", self.population));
+        s.push_str(&format!("  \"tol\": {:.6},\n", self.tol));
+        s.push_str(&format!("  \"max_rel_err\": {:.6},\n", self.max_rel_err));
+        match self.worst_request {
+            Some(id) => s.push_str(&format!("  \"worst_request\": {id},\n")),
+            None => s.push_str("  \"worst_request\": null,\n"),
+        }
+        s.push_str(&format!("  \"within_tolerance\": {},\n", self.within_tolerance()));
+        s.push_str("  \"checks\": [\n");
+        for (i, c) in self.checks.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"id\": {}, \"measured_cycles\": {}, \"analytic_cycles\": {}, \
+                 \"rel_err\": {:.6}}}{}\n",
+                c.id,
+                c.measured_cycles,
+                c.analytic_cycles,
+                c.rel_err,
+                if i + 1 < self.checks.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// Re-cost one policy on both executors for the spot check: the cycle
+/// engine runs the policy's model walk on a [`SPOT_CHECK_SEQ`]-capped
+/// copy of `model` (one cluster — the analytic per-cluster cost is
+/// what calibration targets), the analytic model costs the identical
+/// reduced shapes. Returns `(measured_cycles, analytic_cycles)`.
+pub fn spot_check_policy(
+    model: &DeitConfig,
+    policy: &PrecisionPolicy,
+    cores_per_cluster: usize,
+    util: f64,
+    seed: u64,
+) -> (u64, u64) {
+    let rcfg = DeitConfig { seq: model.seq.min(SPOT_CHECK_SEQ), ..*model };
+    let graph = crate::model::ModelGraph::deit_block(&rcfg);
+    let measured =
+        crate::model::policy_hw_run(&graph, policy, 1, cores_per_cluster, seed, false)
+            .wall_cycles;
+    let analytic =
+        crate::workload::analytic_policy_cycles(&rcfg, policy, cores_per_cluster, util);
+    (measured, analytic)
+}
+
+/// The `--exec sampled:N` divergence check (DESIGN.md §15): walk the
+/// outcome's served requests in ascending-id order, select each with
+/// probability 1/N from a seeded [`crate::rng::XorShift`] stream (so
+/// the schedule is a pure function of the seed — reruns check the
+/// same requests), and re-cost every selected request's policy on the
+/// cycle engine via [`spot_check_policy`]. Checks are memoized per
+/// policy: the cycle engine is deterministic, so re-simulating a
+/// policy already checked in this pass can only reproduce the same
+/// number.
+///
+/// The caller decides what to do with an out-of-tolerance report; the
+/// CLI exits non-zero ("fails loudly").
+pub fn spot_check_sampled(
+    cfg: &ServeConfig,
+    outcome: &scheduler::ServeOutcome,
+    every: u32,
+    seed: u64,
+) -> SpotCheckReport {
+    assert!(every > 0, "sample rate must be at least 1 (parse-time validated)");
+    let mut served: Vec<&Served> = outcome.served.iter().collect();
+    served.sort_by_key(|r| r.id);
+    let mut rng = crate::rng::XorShift::new(seed ^ SPOT_CHECK_SALT);
+    let mut memo: HashMap<PrecisionPolicy, (u64, u64)> = HashMap::new();
+    let mut checks = Vec::new();
+    for r in served {
+        if rng.below(every as u64) != 0 {
+            continue;
+        }
+        let (measured, analytic) = *memo.entry(r.policy).or_insert_with(|| {
+            spot_check_policy(&cfg.model, &r.policy, cfg.cores_per_cluster, cfg.util, seed)
+        });
+        let rel_err = if measured == 0 {
+            0.0 // all-FP32 policy: neither model runs anything on the MX fabric
+        } else {
+            (measured as f64 - analytic as f64).abs() / measured as f64
+        };
+        checks.push(SpotCheck { id: r.id, measured_cycles: measured, analytic_cycles: analytic, rel_err });
+    }
+    let mut max_rel_err = 0.0f64;
+    let mut worst_request = None;
+    for c in &checks {
+        if worst_request.is_none() || c.rel_err > max_rel_err {
+            max_rel_err = c.rel_err;
+            worst_request = Some(c.id);
+        }
+    }
+    SpotCheckReport {
+        sample_every: every,
+        population: outcome.served.len(),
+        checks,
+        max_rel_err,
+        worst_request,
+        tol: SAMPLED_DIVERGENCE_TOL,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -788,6 +995,47 @@ mod tests {
         );
         let costs = CostModel::build(&cfg);
         assert!(costs.svc_policy_ticks(&heavy) > costs.svc_policy_ticks(&fp8));
+    }
+
+    #[test]
+    fn sampled_spot_check_is_deterministic_and_bounded() {
+        let model = DeitConfig { seq: 16, ..DeitConfig::default() };
+        let cfg = ServeConfig { model, clusters: 2, ..ServeConfig::default() };
+        let mix = [(ElemFormat::E4M3, 1.0)];
+        let rate = 0.5 * estimated_capacity_per_ktick(&cfg, &mix);
+        let spec = ArrivalSpec {
+            kind: ArrivalKind::Poisson,
+            rate_per_ktick: rate,
+            mix: mix.to_vec(),
+            high_priority_frac: 0.0,
+            requests: 12,
+            seed: 7,
+        };
+        let outcome = simulate(&cfg, &generate_trace(&spec));
+        assert!(!outcome.served.is_empty());
+        // sampled:1 checks every served request (one memoized cycle
+        // run: the trace is single-policy) and the calibrated-ish
+        // default utilization stays far inside the loose tolerance
+        let all = spot_check_sampled(&cfg, &outcome, 1, 42);
+        assert_eq!(all.checks.len(), outcome.served.len());
+        assert_eq!(all.population, outcome.served.len());
+        assert!(all.worst_request.is_some());
+        assert!(all.within_tolerance(), "{}", all.render());
+        assert!(all.checks.iter().all(|c| c.measured_cycles > 0));
+        // the 1-in-N schedule and verdict are pure functions of the seed
+        let a = spot_check_sampled(&cfg, &outcome, 3, 42);
+        let b = spot_check_sampled(&cfg, &outcome, 3, 42);
+        assert_eq!(
+            a.checks.iter().map(|c| c.id).collect::<Vec<_>>(),
+            b.checks.iter().map(|c| c.id).collect::<Vec<_>>()
+        );
+        assert_eq!(a.max_rel_err.to_bits(), b.max_rel_err.to_bits());
+        assert_eq!(a.render_json(), b.render_json());
+        // checks come back in ascending request-id order
+        assert!(a.checks.windows(2).all(|w| w[0].id < w[1].id));
+        // the JSON artifact round-trips the verdict fields verbatim
+        assert!(all.render_json().contains("\"within_tolerance\": true"));
+        assert!(all.render_json().contains(&format!("\"sample_every\": {}", 1)));
     }
 
     #[test]

@@ -9,12 +9,33 @@
 //!    each scalar core executes at most one instruction;
 //! 4. DMA advances; end-of-cycle FIFO fills land.
 
-use super::core::{Core, CoreCounters};
+use super::core::{Core, CoreCounters, Freeze};
 use super::dma::Dma;
 use super::fpu::FpuCounters;
 use super::isa::Instr;
 use super::spm::Spm;
 use super::{NUM_CORES, NUM_SSRS};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Process-wide default for [`Cluster::fast_path`] on newly allocated
+/// clusters. On (the default) the run loop takes bit-invisible fast
+/// cycles whenever every core is provably hazard-free (see
+/// [`Cluster::try_fast_step`]); benches flip it off to measure the
+/// generic loop. Per-cluster overrides just assign the public field.
+static DEFAULT_FAST_PATH: AtomicBool = AtomicBool::new(true);
+
+/// Set the process-wide default for the simulator fast path (picked up
+/// by clusters allocated afterwards). Bench-only knob, like
+/// `obs::hostprof::reset` — tests that need a specific mode set
+/// `Cluster::fast_path` on their own instances instead.
+pub fn set_default_fast_path(enabled: bool) {
+    DEFAULT_FAST_PATH.store(enabled, Ordering::Relaxed);
+}
+
+/// Current process-wide fast-path default.
+pub fn default_fast_path() -> bool {
+    DEFAULT_FAST_PATH.load(Ordering::Relaxed)
+}
 
 /// Requester-id layout for the bank arbiter: per core one LSU + 3 SSRs.
 fn lsu_id(core: usize) -> usize {
@@ -42,7 +63,7 @@ impl Default for ClusterConfig {
 }
 
 /// Aggregated performance counters after a run.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct PerfCounters {
     /// Total cycles the run took.
     pub cycles: u64,
@@ -141,6 +162,15 @@ pub struct Cluster {
     pub dma: Dma,
     /// Current simulated cycle.
     pub cycle: u64,
+    /// Take bit-invisible fast cycles when provably safe (see
+    /// [`Cluster::try_fast_step`]). Initialized from the process-wide
+    /// default; tests and benches may override per instance.
+    pub fast_path: bool,
+    /// Scratch: per-core freeze class for the current fast cycle.
+    fast_freeze: Vec<Freeze>,
+    /// Scratch: per-core FP-LSU address cached across the two phases of
+    /// the generic step (its inputs don't change in between).
+    fpu_mem: Vec<Option<usize>>,
 }
 
 impl Cluster {
@@ -152,6 +182,9 @@ impl Cluster {
             cores: (0..cfg.num_cores).map(Core::new).collect(),
             dma: Dma::default(),
             cycle: 0,
+            fast_path: default_fast_path(),
+            fast_freeze: Vec::with_capacity(cfg.num_cores),
+            fpu_mem: vec![None; cfg.num_cores],
         }
     }
 
@@ -205,8 +238,13 @@ impl Cluster {
                     self.spm.request(ssr_id(ci, si), addr);
                 }
             }
-            // LSU: FP side has priority over the scalar side.
-            if let Some(addr) = core.fpu.pending_mem_addr(now) {
+            // LSU: FP side has priority over the scalar side. The FP
+            // address is cached for phase 3 — nothing between the two
+            // reads (arbitration, other cores, this core's SSR grants)
+            // changes its inputs.
+            let fpu_addr = core.fpu.pending_mem_addr(now);
+            self.fpu_mem[ci] = fpu_addr;
+            if let Some(addr) = fpu_addr {
                 self.spm.request(lsu_id(ci), addr);
             } else if let Some(addr) = core.int_mem_addr(now) {
                 self.spm.request(lsu_id(ci), addr);
@@ -228,7 +266,7 @@ impl Cluster {
                 }
             }
             let lsu_granted = was_granted(lsu_id(ci));
-            let fpu_wants_mem = core.fpu.pending_mem_addr(now).is_some();
+            let fpu_wants_mem = self.fpu_mem[ci].is_some();
             // FPU issue (takes the LSU grant if it asked for it).
             core.fpu.try_issue(now, lsu_granted && fpu_wants_mem, &mut self.spm);
             // Scalar core (gets the grant only if the FPU didn't claim it).
@@ -240,6 +278,88 @@ impl Cluster {
             core.fpu.tick();
         }
         self.cycle += 1;
+    }
+
+    /// Attempt one **fast cycle**: a bit-invisible slim replica of
+    /// [`Cluster::step`] for the FREP steady state. Eligibility is
+    /// re-proven from scratch every cycle, read-only, and the attempt
+    /// returns `false` without touching any state when it fails:
+    ///
+    /// * the DMA queue is empty (its `step` is a no-op, safely skipped);
+    /// * every core's FP side is either replaying an mxdotp-only,
+    ///   SSR-fed FREP body or fully drained
+    ///   ([`FpSubsystem::fast_issue_class`]);
+    /// * every core's scalar side is provably frozen — halted, in a
+    ///   branch bubble, or blocked on the FP handoff / FREP launch /
+    ///   fence with a known stall counter
+    ///   ([`Core::fast_scalar_freeze`]).
+    ///
+    /// Under those proofs no LSU can request memory (mxdotp heads and
+    /// drained pipes have no `pending_mem_addr`; frozen scalar sides
+    /// sit on non-memory instructions), so the fast cycle runs only the
+    /// SSR prefetch requests through the *real* arbiter (round-robin
+    /// pointers, grant/conflict counters and FIFO dynamics evolve
+    /// exactly as in the generic path), issues via
+    /// [`FpSubsystem::fast_mxdotp_issue`], charges the frozen-scalar
+    /// stall counters, and ticks the FIFOs — skipping instruction
+    /// decode, LSU arbitration, DMA stepping and trace bookkeeping.
+    ///
+    /// [`FpSubsystem::fast_issue_class`]: super::fpu::FpSubsystem
+    /// [`FpSubsystem::fast_mxdotp_issue`]: super::fpu::FpSubsystem
+    /// [`Core::fast_scalar_freeze`]: super::core::Core
+    fn try_fast_step(&mut self) -> bool {
+        if !self.dma.idle() {
+            return false;
+        }
+        let now = self.cycle;
+        // --- read-only eligibility proof ---------------------------------
+        self.fast_freeze.clear();
+        for core in &mut self.cores {
+            let Some(freeze) = core.fast_scalar_freeze(now) else {
+                return false;
+            };
+            // (fast_issue_class memoizes the FREP body shape — not an
+            // observable mutation.)
+            if core.fpu.fast_issue_class().is_none() {
+                return false;
+            }
+            self.fast_freeze.push(freeze);
+        }
+        // --- phase 1: SSR prefetch requests only -------------------------
+        for (ci, core) in self.cores.iter().enumerate() {
+            for (si, ssr) in core.fpu.ssrs.iter().enumerate() {
+                if let Some(addr) = ssr.fetch_request() {
+                    self.spm.request(ssr_id(ci, si), addr);
+                }
+            }
+        }
+        // --- phase 2: the real arbiter -----------------------------------
+        self.spm.arbitrate();
+        let mask = self.spm.granted_mask;
+        let was_granted = |rid: usize| rid < 64 && mask & (1 << rid) != 0;
+        // --- phase 3: grants + issue + frozen-scalar accounting ----------
+        for (ci, core) in self.cores.iter_mut().enumerate() {
+            for (si, ssr) in core.fpu.ssrs.iter_mut().enumerate() {
+                if was_granted(ssr_id(ci, si)) {
+                    if let Some(addr) = ssr.fetch_request() {
+                        let data = self.spm.read_u64(addr & !7);
+                        ssr.grant(data);
+                    }
+                }
+            }
+            core.fpu.fast_mxdotp_issue(now);
+            match self.fast_freeze[ci] {
+                Freeze::Quiet => {}
+                Freeze::FpQueue => core.counters.stall_fp_queue += 1,
+                Freeze::Fence => core.counters.stall_fence += 1,
+            }
+        }
+        // --- phase 4 (DMA idle by precondition) --------------------------
+        for core in &mut self.cores {
+            core.fpu.tick();
+        }
+        self.cycle += 1;
+        true
     }
 
     /// Run until all cores are done (or `max_cycles`). Returns the
@@ -261,13 +381,23 @@ impl Cluster {
         // export, so determinism is untouched.
         let host_start = std::time::Instant::now();
         let start = self.cycle;
+        // Tracing prints a line per issued op on the generic path, so
+        // fast cycles (which skip that bookkeeping) are disabled under
+        // MXDOTP_TRACE.
+        let fast = self.fast_path && !super::fpu::trace_enabled();
+        let mut ff_cycles = 0u64;
         while !self.done() {
-            self.step();
+            if fast && self.try_fast_step() {
+                ff_cycles += 1;
+            } else {
+                self.step();
+            }
             if self.cycle - start >= max_cycles {
                 crate::obs::hostprof::record_sim(
                     host_start.elapsed().as_nanos() as u64,
                     self.cycle - start,
                 );
+                crate::obs::hostprof::record_frep_ff(ff_cycles);
                 return Err(max_cycles);
             }
         }
@@ -275,6 +405,7 @@ impl Cluster {
             host_start.elapsed().as_nanos() as u64,
             self.cycle - start,
         );
+        crate::obs::hostprof::record_frep_ff(ff_cycles);
         Ok(self.counters_since(start))
     }
 
@@ -504,6 +635,44 @@ mod tests {
         assert_eq!(p_again.spm_conflicts, p_fresh.spm_conflicts);
         assert_eq!(p_again.spm_grants, p_fresh.spm_grants);
         assert_eq!(p_again.mxdotp_total(), p_fresh.mxdotp_total());
+    }
+
+    #[test]
+    fn fast_path_is_bit_and_counter_invisible() {
+        // The FREP fast path must reproduce the generic loop exactly:
+        // same result bits, same cycle count, every per-core counter
+        // equal — including the stall attribution of the frozen scalar
+        // side and the SSR/arbiter dynamics.
+        let run_with = |fast: bool| {
+            let mut cl = Cluster::new(ClusterConfig::default());
+            cl.fast_path = fast;
+            let one = ElemFormat::E4M3.encode(1.0);
+            let words = 64i64;
+            for c in 0..8usize {
+                let a = (c * 2048) as i64;
+                let b = (c * 2048 + 520) as i64;
+                let s = (c * 2048 + 1040) as i64;
+                for w in 0..words as usize {
+                    cl.spm.write_u64(a as usize + w * 8, u64::from_le_bytes([one; 8]));
+                    cl.spm.write_u64(b as usize + w * 8, u64::from_le_bytes([one; 8]));
+                    cl.spm.write_u64(
+                        s as usize + w * 8,
+                        crate::dotp::unit::pack_scales(&[(127, 127); 4]),
+                    );
+                }
+                cl.load_program(c, ones_program(a, b, s, (c * 2048 + 1560) as i64, words));
+            }
+            let perf = cl.run(1_000_000);
+            let sums: Vec<u32> = (0..8)
+                .map(|c| read_acc_sum(&cl.spm, c * 2048 + 1560).to_bits())
+                .collect();
+            (perf, sums)
+        };
+        let (p_slow, v_slow) = run_with(false);
+        let (p_fast, v_fast) = run_with(true);
+        assert_eq!(v_slow, v_fast, "fast path changed result bits");
+        assert_eq!(p_slow, p_fast, "fast path changed cycles or counters");
+        assert!(p_fast.mxdotp_total() > 0);
     }
 
     #[test]

@@ -15,8 +15,62 @@ use std::sync::Arc;
 /// Taken-branch penalty (flush bubble) in cycles.
 pub const BRANCH_PENALTY: u64 = 1;
 
+/// Per-instruction metadata pre-decoded once at load time, so the
+/// per-cycle hot paths (`int_mem_addr` runs twice per core per cycle;
+/// the cluster fast path classifies the front-end every fast cycle)
+/// index a dense flat table instead of re-matching the instruction
+/// enum.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Decoded {
+    /// `Some((rs1, imm))` when the instruction is a scalar load/store.
+    pub mem: Option<(u8, i64)>,
+    /// Coarse front-end class consulted by the cluster fast path.
+    pub class: DecodedClass,
+}
+
+/// Coarse class of one instruction for fast-path freeze analysis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum DecodedClass {
+    /// FP instruction handed to the subsystem queue.
+    Fp,
+    /// FREP window open.
+    Frep,
+    /// FP fence.
+    Fence,
+    /// Anything else (always makes progress when un-stalled).
+    Other,
+}
+
+fn predecode(i: &Instr) -> Decoded {
+    match i {
+        Instr::Int(IntInstr::Lw { rs1, imm, .. })
+        | Instr::Int(IntInstr::Lbu { rs1, imm, .. })
+        | Instr::Int(IntInstr::Lhu { rs1, imm, .. })
+        | Instr::Int(IntInstr::Sw { rs1, imm, .. })
+        | Instr::Int(IntInstr::Sh { rs1, imm, .. }) => {
+            Decoded { mem: Some((*rs1, *imm)), class: DecodedClass::Other }
+        }
+        Instr::Fp(_) => Decoded { mem: None, class: DecodedClass::Fp },
+        Instr::Int(IntInstr::Frep { .. }) => Decoded { mem: None, class: DecodedClass::Frep },
+        Instr::Int(IntInstr::FpFence) => Decoded { mem: None, class: DecodedClass::Fence },
+        _ => Decoded { mem: None, class: DecodedClass::Other },
+    }
+}
+
+/// Why a core's scalar side is provably frozen for one fast cycle, and
+/// which stall counter the generic path would have charged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Freeze {
+    /// Halted or inside a branch bubble: no counter moves.
+    Quiet,
+    /// FP handoff / FREP launch blocked: `stall_fp_queue` ticks.
+    FpQueue,
+    /// FP fence with the subsystem busy: `stall_fence` ticks.
+    Fence,
+}
+
 /// Integer-side perf counters.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CoreCounters {
     /// Integer instructions issued.
     pub int_issued: u64,
@@ -53,6 +107,8 @@ pub struct Core {
     pub counters: CoreCounters,
     /// Pending SSR config shadow (bounds/strides written field by field).
     ssr_shadow: [SsrConfig; super::NUM_SSRS],
+    /// Dense pre-decoded table, parallel to `program` (built at load).
+    decoded: Vec<Decoded>,
 }
 
 impl Core {
@@ -68,6 +124,7 @@ impl Core {
             fpu: FpSubsystem::new(),
             counters: CoreCounters::default(),
             ssr_shadow: [SsrConfig::default(); super::NUM_SSRS],
+            decoded: Vec::new(),
         }
     }
 
@@ -80,6 +137,8 @@ impl Core {
     /// Load a shared (plan-compiled) program without copying it.
     pub fn load_shared(&mut self, program: Arc<Vec<Instr>>) {
         self.halted = program.is_empty();
+        self.decoded.clear();
+        self.decoded.extend(program.iter().map(predecode));
         self.program = program;
         self.pc = 0;
         self.stall_until = 0;
@@ -99,6 +158,7 @@ impl Core {
         self.fpu.reset();
         self.counters = CoreCounters::default();
         self.ssr_shadow = [SsrConfig::default(); super::NUM_SSRS];
+        self.decoded.clear();
     }
 
     fn x(&self, r: u8) -> i64 {
@@ -128,15 +188,31 @@ impl Core {
         if self.halted || now < self.stall_until {
             return None;
         }
-        match self.program.get(self.pc)? {
-            Instr::Int(IntInstr::Lw { rs1, imm, .. })
-            | Instr::Int(IntInstr::Lbu { rs1, imm, .. })
-            | Instr::Int(IntInstr::Lhu { rs1, imm, .. })
-            | Instr::Int(IntInstr::Sw { rs1, imm, .. })
-            | Instr::Int(IntInstr::Sh { rs1, imm, .. }) => {
-                Some((self.x(*rs1) + imm) as usize)
+        let (rs1, imm) = (*self.decoded.get(self.pc)?).mem?;
+        Some((self.x(rs1) + imm) as usize)
+    }
+
+    /// Fast-path classification of the scalar side for one cluster
+    /// fast cycle: is this front-end provably frozen this cycle (no
+    /// state change besides one stall counter), and which counter does
+    /// the generic `step` charge? `None` means the scalar side would
+    /// make progress — the cycle must take the generic path.
+    pub(crate) fn fast_scalar_freeze(&self, now: u64) -> Option<Freeze> {
+        if self.halted || now < self.stall_until {
+            return Some(Freeze::Quiet);
+        }
+        // pc past the end: `step` would latch `halted` — a mutation,
+        // so not freeze-eligible (the `?` falls through to None).
+        match self.decoded.get(self.pc)?.class {
+            DecodedClass::Fp => (!self.fpu.can_push()).then_some(Freeze::FpQueue),
+            DecodedClass::Frep => {
+                // start_frep fails (charging stall_fp_queue) iff the
+                // sequencer is occupied or the queue is non-empty.
+                (self.fpu.frep_active() || !self.fpu.queue_is_empty())
+                    .then_some(Freeze::FpQueue)
             }
-            _ => None,
+            DecodedClass::Fence => self.fpu.busy(now).then_some(Freeze::Fence),
+            DecodedClass::Other => None,
         }
     }
 

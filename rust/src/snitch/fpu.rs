@@ -30,6 +30,16 @@ pub const QUEUE_DEPTH: usize = 16;
 /// FREP sequencer buffer depth (max_inst limit).
 pub const FREP_BUFFER: usize = 16;
 
+/// `MXDOTP_TRACE` read once per process (a getenv on the issue path
+/// cost ~15 %). The cluster also consults this: per-issue trace lines
+/// only print on the generic path, so tracing disables the FREP
+/// fast-forward cycles entirely.
+pub(crate) fn trace_enabled() -> bool {
+    static TRACE: std::sync::LazyLock<bool> =
+        std::sync::LazyLock::new(|| std::env::var_os("MXDOTP_TRACE").is_some());
+    *TRACE
+}
+
 /// Latency table.
 pub fn latency(i: &FpInstr) -> u64 {
     match i {
@@ -80,10 +90,16 @@ struct FrepState {
     reps_left: u64,
     /// Replay cursor.
     pos: usize,
+    /// Memoized fast-path shape of the captured body: 0 = not yet
+    /// classified, 1 = every op is an SSR-fed `mxdotp` with a
+    /// non-stream accumulator, 2 = anything else. The buffer is
+    /// immutable once `capture_left` hits 0, so the scan runs once per
+    /// FREP window instead of once per replay cycle.
+    fast_shape: u8,
 }
 
 /// Performance counters of one FP subsystem.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct FpuCounters {
     /// FP instructions issued.
     pub issued: u64,
@@ -224,8 +240,100 @@ impl FpSubsystem {
             capture_left: max_inst,
             reps_left: n_frep + 1,
             pos: 0,
+            fast_shape: 0,
         });
         true
+    }
+
+    /// Is the FREP sequencer occupied (capturing or replaying)?
+    pub fn frep_active(&self) -> bool {
+        self.frep.is_some()
+    }
+
+    /// Is the scalar-FP handoff queue empty?
+    pub(crate) fn queue_is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Fast-path classification of the FP side for one cluster fast
+    /// cycle. `Some(true)`: the sequencer is replaying an mxdotp-only,
+    /// SSR-fed body — `fast_mxdotp_issue` reproduces `try_issue`
+    /// exactly for it. `Some(false)`: pipe drained (no queued work, no
+    /// sequencer) — `try_issue` would only count an idle cycle.
+    /// `None`: anything else (capture still open, queued scalar FP
+    /// work, a non-mxdotp body, streaming disabled) — the cycle must
+    /// take the generic path.
+    pub(crate) fn fast_issue_class(&mut self) -> Option<bool> {
+        match &mut self.frep {
+            None => self.queue.is_empty().then_some(false),
+            Some(f) => {
+                if f.capture_left > 0 {
+                    return None;
+                }
+                if f.fast_shape == 0 {
+                    let all_mxdotp = !f.buffer.is_empty()
+                        && f.buffer.iter().all(|op| {
+                            matches!(
+                                op.instr,
+                                FpInstr::Mxdotp { fd, fs1, fs2, fs3, .. }
+                                    if (fs1 as usize) < NUM_SSRS
+                                        && (fs2 as usize) < NUM_SSRS
+                                        && (fs3 as usize) < NUM_SSRS
+                                        && (fd as usize) >= NUM_SSRS
+                            )
+                        });
+                    f.fast_shape = if all_mxdotp { 1 } else { 2 };
+                }
+                // `ssr_enabled` can flip on a generic cycle while the
+                // sequencer replays (pseudo dual-issue), so it is
+                // re-checked per cycle rather than memoized.
+                (f.fast_shape == 1 && self.ssr_enabled).then_some(true)
+            }
+        }
+    }
+
+    /// Fast-cycle twin of [`FpSubsystem::try_issue`] for the two states
+    /// admitted by [`FpSubsystem::fast_issue_class`]: a drained pipe
+    /// (count one idle cycle) or a replaying mxdotp-only FREP body
+    /// (stall charging, operand pops, the exact datapath execution, the
+    /// scoreboard update and the replay advance are replicated
+    /// verbatim, minus the per-op decode dispatch and trace hook).
+    pub(crate) fn fast_mxdotp_issue(&mut self, now: u64) {
+        let Some(f) = &self.frep else {
+            self.counters.idle += 1;
+            return;
+        };
+        let FpInstr::Mxdotp { fd, fs1, fs2, fs3, sl } = f.buffer[f.pos].instr else {
+            unreachable!("fast_mxdotp_issue on a non-mxdotp FREP body");
+        };
+        // SSR availability first (same order and charging as the
+        // generic src loop; fd is non-stream by eligibility).
+        for s in [fs1, fs2, fs3] {
+            if !self.ssrs[s as usize].can_pop() {
+                self.counters.stall_ssr += 1;
+                self.ssrs[s as usize].stall_cycles += 1;
+                return;
+            }
+        }
+        // fd appears as both a non-stream source and the dest in the
+        // generic path — one readiness check covers both.
+        if !self.reg_ready(fd, now) {
+            self.counters.stall_hazard += 1;
+            return;
+        }
+        let pa = self.ssrs[fs1 as usize].pop();
+        let pb = self.ssrs[fs2 as usize].pop();
+        let sreg = self.ssrs[fs3 as usize].pop();
+        let (xa, xb) = select_scales(sreg, sl);
+        let acc = f32::from_bits(self.fregs[fd as usize] as u32);
+        let out = self.unit.execute(pa, pb, xa, xb, acc);
+        let lat = 3; // latency(Mxdotp)
+        self.fregs[fd as usize] = out.to_bits() as u64;
+        self.ready[fd as usize] = now + lat;
+        self.max_ready = self.max_ready.max(now + lat);
+        self.counters.mxdotp += 1;
+        self.counters.issued += 1;
+        self.advance();
     }
 
     /// FREP still capturing instructions?
@@ -536,10 +644,7 @@ impl FpSubsystem {
             }
         }
         self.counters.issued += 1;
-        // trace flag is read once (getenv on the issue path cost ~15 %)
-        static TRACE: std::sync::LazyLock<bool> =
-            std::sync::LazyLock::new(|| std::env::var_os("MXDOTP_TRACE").is_some());
-        if *TRACE {
+        if trace_enabled() {
             eprintln!("[fpu @{now}] {:?} f8..f11={:?}", op.instr,
                 (8..12).map(|r| f32::from_bits(self.fregs[r] as u32)).collect::<Vec<_>>());
         }

@@ -37,7 +37,7 @@ pub mod spm;
 pub mod ssr;
 pub mod trace;
 
-pub use cluster::{Cluster, ClusterConfig, PerfCounters};
+pub use cluster::{default_fast_path, set_default_fast_path, Cluster, ClusterConfig, PerfCounters};
 pub use isa::{FpInstr, Instr, IntInstr};
 
 /// Compute cores in the cluster (the ninth core is the DMA core,

@@ -1,0 +1,195 @@
+//! Integration tests for the simulator fast path (DESIGN.md §15):
+//! pre-decoded cores + FREP fast-forwarding must be bit- and
+//! counter-invisible, and layer-run cache hits must replay runs
+//! bit-identical to cold simulation.
+
+use mxdotp::formats::ElemFormat;
+use mxdotp::kernels::plan::{run_mm_cached, PlanCache};
+use mxdotp::kernels::{KernelKind, MmProblem, MmRun};
+use mxdotp::model::{policy_hw_run, ModelGraph, PrecisionPolicy};
+use mxdotp::rng::property_cases;
+use mxdotp::scaleout::{sharded_mm_with_cache, ScaleoutConfig, ShardedRun};
+use mxdotp::snitch::{Cluster, ClusterConfig};
+use mxdotp::workload::DeitConfig;
+
+/// Run one kernel on a fresh cluster with the fast path forced on or
+/// off for that instance (the per-instance flag, not the process-wide
+/// default — tests in this binary run concurrently).
+fn run_with(fast: bool, kind: KernelKind, p: MmProblem, a: &[f32], b: &[f32]) -> MmRun {
+    let cache = PlanCache::disabled();
+    let mut cl = Cluster::new(ClusterConfig { num_cores: 8, freq_ghz: 1.0 });
+    cl.fast_path = fast;
+    run_mm_cached(&cache, &mut cl, kind, p, a, b)
+}
+
+/// Full bit/counter comparison of a fast-path and a slow-path run.
+fn assert_runs_identical(slow: &MmRun, fast: &MmRun, what: &str) {
+    // PerfCounters equality covers cycles, stalls, per-core integer
+    // counters and per-core FPU counters (issue counts, accumulator
+    // traffic) — the fast path may not perturb any of them.
+    assert_eq!(slow.perf, fast.perf, "{what}: fast path changed the counters");
+    assert_eq!(slow.c.len(), fast.c.len(), "{what}: result shape changed");
+    for (i, (s, f)) in slow.c.iter().zip(&fast.c).enumerate() {
+        assert_eq!(
+            s.to_bits(),
+            f.to_bits(),
+            "{what}: fast path changed C[{i}] ({s} vs {f})"
+        );
+    }
+}
+
+#[test]
+fn fast_path_is_bit_and_counter_invisible_across_formats_and_shapes() {
+    // All six OCP element formats × random (block-aligned) shapes:
+    // the FREP fast-forward and the pre-decoded scalar fast cycle must
+    // retire exactly what per-cycle stepping retires.
+    property_cases(12, 0xFA57_A711, |rng| {
+        let fmt = ElemFormat::ALL[rng.below(ElemFormat::ALL.len() as u64) as usize];
+        let p = MmProblem {
+            m: 8 * (1 + rng.below(3) as usize),
+            k: 32 * (1 + rng.below(3) as usize),
+            n: 8 * (1 + rng.below(3) as usize),
+            fmt,
+            block_size: 32,
+        };
+        let a = rng.normal_vec(p.m * p.k, 0.5);
+        let b = rng.normal_vec(p.k * p.n, 0.02);
+        let slow = run_with(false, KernelKind::Mx(fmt), p, &a, &b);
+        let fast = run_with(true, KernelKind::Mx(fmt), p, &a, &b);
+        assert_runs_identical(&slow, &fast, &format!("mx {fmt} {}x{}x{}", p.m, p.k, p.n));
+    });
+}
+
+#[test]
+fn fast_path_is_invisible_for_baseline_kernels() {
+    // The FP32 and FP8-to-FP32 software kernels exercise the scalar
+    // fast cycle (no MXDOTP FREP bodies) — different freeze/hazard
+    // structure than the MX kernel.
+    let p = MmProblem { m: 16, k: 64, n: 16, fmt: ElemFormat::E4M3, block_size: 32 };
+    let mut rng = mxdotp::rng::XorShift::new(0xBA5E);
+    let a = rng.normal_vec(p.m * p.k, 0.5);
+    let b = rng.normal_vec(p.k * p.n, 0.02);
+    for kind in [KernelKind::Fp32, KernelKind::Fp8ToFp32, KernelKind::Mx(ElemFormat::E4M3)] {
+        let slow = run_with(false, kind, p, &a, &b);
+        let fast = run_with(true, kind, p, &a, &b);
+        assert_runs_identical(&slow, &fast, &format!("{kind:?}"));
+    }
+}
+
+/// Field-by-field bit comparison of two sharded runs (ShardedRun does
+/// not expose PartialEq; energies compare by f64 bits).
+fn assert_sharded_identical(a: &ShardedRun, b: &ShardedRun, what: &str) {
+    assert_eq!(a.wall_cycles, b.wall_cycles, "{what}: wall cycles differ");
+    assert_eq!(a.total_cycles, b.total_cycles, "{what}: total cycles differ");
+    assert_eq!(a.shards, b.shards, "{what}: shard counts differ");
+    assert_eq!(
+        a.total_energy_uj.to_bits(),
+        b.total_energy_uj.to_bits(),
+        "{what}: energy differs"
+    );
+    assert_eq!(a.c.len(), b.c.len(), "{what}: result shape differs");
+    for (i, (x, y)) in a.c.iter().zip(&b.c).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: C[{i}] differs ({x} vs {y})");
+    }
+    assert_eq!(a.clusters.len(), b.clusters.len(), "{what}: cluster stats differ");
+    for (x, y) in a.clusters.iter().zip(&b.clusters) {
+        assert_eq!(
+            (x.id, x.shards, x.passes, x.cycles, x.mxdotp, x.energy_uj.to_bits()),
+            (y.id, y.shards, y.passes, y.cycles, y.mxdotp, y.energy_uj.to_bits()),
+            "{what}: per-cluster stats differ"
+        );
+    }
+}
+
+#[test]
+fn layer_run_cache_hits_are_bit_identical_to_cold_runs() {
+    let scfg = ScaleoutConfig::with_clusters(2);
+    property_cases(4, 0x1A9E_2C, |rng| {
+        let fmt = ElemFormat::ALL[rng.below(ElemFormat::ALL.len() as u64) as usize];
+        let p = MmProblem {
+            m: 16 * (1 + rng.below(2) as usize),
+            k: 32 * (1 + rng.below(3) as usize),
+            n: 16,
+            fmt,
+            block_size: 32,
+        };
+        let a = rng.normal_vec(p.m * p.k, 0.5);
+        let b = rng.normal_vec(p.k * p.n, 0.02);
+        // cold reference: a cache that never stores (the --cold-plans
+        // semantics) simulates every call and never hits layer runs
+        let cold_cache = PlanCache::disabled();
+        let cold = sharded_mm_with_cache(&scfg, p, &a, &b, &cold_cache);
+        let again = sharded_mm_with_cache(&scfg, p, &a, &b, &cold_cache);
+        assert_eq!(cold_cache.stats().layer_run_hits, 0, "disabled cache must never hit");
+        assert_sharded_identical(&cold, &again, "cold repeat");
+        // warm cache: first call misses and stores, second replays the
+        // whole layer run from the cache
+        let cache = PlanCache::new();
+        let warm1 = sharded_mm_with_cache(&scfg, p, &a, &b, &cache);
+        let warm2 = sharded_mm_with_cache(&scfg, p, &a, &b, &cache);
+        let st = cache.stats();
+        assert_eq!(st.layer_run_misses, 1, "{fmt}: first warm call must miss");
+        assert_eq!(st.layer_run_hits, 1, "{fmt}: second warm call must replay");
+        assert_sharded_identical(&cold, &warm1, "cold vs warm miss");
+        assert_sharded_identical(&cold, &warm2, "cold vs layer-run replay");
+    });
+}
+
+#[test]
+fn layer_run_cache_keys_on_operand_fingerprints() {
+    // Same shape, different operands: the fingerprint in the key must
+    // force a fresh simulation (a stale hit here would be silent data
+    // corruption, not a perf bug).
+    let scfg = ScaleoutConfig::with_clusters(2);
+    let p = MmProblem { m: 16, k: 64, n: 16, fmt: ElemFormat::E4M3, block_size: 32 };
+    let mut rng = mxdotp::rng::XorShift::new(0xF1F0);
+    let a1 = rng.normal_vec(p.m * p.k, 0.5);
+    let b1 = rng.normal_vec(p.k * p.n, 0.02);
+    let mut a2 = a1.clone();
+    a2[0] += 1.0;
+    let cache = PlanCache::new();
+    let r1 = sharded_mm_with_cache(&scfg, p, &a1, &b1, &cache);
+    let r2 = sharded_mm_with_cache(&scfg, p, &a2, &b1, &cache);
+    assert_eq!(cache.stats().layer_run_hits, 0, "different operands must not hit");
+    assert_eq!(cache.stats().layer_run_misses, 2);
+    assert_ne!(
+        r1.c.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        r2.c.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "perturbed operands must change the result"
+    );
+}
+
+#[test]
+fn policy_walks_replay_bit_identical_for_mixed_policies() {
+    // The serving-path consumer of the layer-run cache: repeated
+    // policy walks (model::policy_hw_run goes through sharded_mm and
+    // the process-global cache) must be bit-identical to a cold walk,
+    // for mixed per-layer policies too.
+    let cfg = DeitConfig { seq: 16, ..DeitConfig::default() };
+    let graph = ModelGraph::deit_block(&cfg);
+    for name in ["fp4-ffn", "all-fp8"] {
+        let policy = PrecisionPolicy::preset(name).unwrap();
+        let cold = policy_hw_run(&graph, &policy, 2, 4, 7, true);
+        let warm1 = policy_hw_run(&graph, &policy, 2, 4, 7, false);
+        let warm2 = policy_hw_run(&graph, &policy, 2, 4, 7, false);
+        for run in [&warm1, &warm2] {
+            assert_eq!(cold.wall_cycles, run.wall_cycles, "{name}: wall cycles differ");
+            assert_eq!(cold.flops, run.flops, "{name}: flops differ");
+            assert_eq!(cold.csr_switches, run.csr_switches, "{name}: CSR switches differ");
+            assert_eq!(
+                cold.total_energy_uj.to_bits(),
+                run.total_energy_uj.to_bits(),
+                "{name}: energy differs"
+            );
+            assert_eq!(cold.layers.len(), run.layers.len());
+            for (l0, l1) in cold.layers.iter().zip(&run.layers) {
+                assert_eq!(
+                    (l0.class, l0.fmt, l0.count, l0.wall_cycles, l0.total_cycles),
+                    (l1.class, l1.fmt, l1.count, l1.wall_cycles, l1.total_cycles),
+                    "{name}: per-layer runs differ"
+                );
+                assert_eq!(l0.energy_uj.to_bits(), l1.energy_uj.to_bits(), "{name}");
+            }
+        }
+    }
+}

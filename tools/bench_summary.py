@@ -49,6 +49,19 @@ def extract_metrics(bench_dir):
         for key in ("sim_wall_ms", "sim_cycles_per_host_us"):
             if key in j:
                 out.append(("hotpath", key, j[key]))
+        # fast-path A/B metrics (absent from pre-fastpath artifacts):
+        # fastpath_speedup is the baselined slow-run vs layer-run-replay
+        # ratio; ff_hit_rate / delivered_cycles_per_host_us trend the
+        # FREP fast-forward coverage and end-to-end simulator speed
+        fp = j.get("fastpath")
+        if fp:
+            out += [
+                ("hotpath", "fastpath_speedup", fp["fastpath_speedup"]),
+                ("hotpath", "ff_speedup", fp["ff_speedup"]),
+            ]
+        for key in ("ff_hit_rate", "delivered_cycles_per_host_us"):
+            if key in j:
+                out.append(("hotpath", key, j[key]))
 
     j = load(os.path.join(bench_dir, "BENCH_formats.json"))
     if j:

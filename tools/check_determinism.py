@@ -35,6 +35,15 @@ VOLATILE_KEYS = {
     "warm_speedup",
     "sim_wall_ms",
     "sim_cycles_per_host_us",
+    # fast-path A/B metrics (DESIGN.md §15): wall-clock ratios and the
+    # hostprof-derived FF coverage from BENCH_hotpath.json
+    "slow_wall_s",
+    "ff_wall_s",
+    "replay_wall_s",
+    "fastpath_speedup",
+    "ff_speedup",
+    "ff_hit_rate",
+    "delivered_cycles_per_host_us",
 }
 
 
@@ -51,8 +60,17 @@ def strip(value):
 
 
 def byte_compared(name):
-    """Artifacts with no host timing inside: the bytes must match."""
-    return name == "BENCH_serving_attribution.json" or name.startswith("OBS_trace_")
+    """Artifacts with no host timing inside: the bytes must match.
+
+    The ``--exec sampled:N`` spot-check audit qualifies: its request
+    selection, measured/analytic cycles, and rendered JSON are a pure
+    function of the seed (DESIGN.md §15).
+    """
+    return (
+        name == "BENCH_serving_attribution.json"
+        or name == "OBS_spotcheck_serving.json"
+        or name.startswith("OBS_trace_")
+    )
 
 
 def diff_paths(a, b, prefix=""):
