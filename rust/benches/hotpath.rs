@@ -289,6 +289,10 @@ fn main() {
             ("warm_speedup", cold_s / warm_s),
             ("sim_cycles_per_host_us", hp.sim_cycles_per_host_us()),
             ("fastpath_speedup", fastpath_speedup),
+            // Deterministic: the widened fast-forward window (across
+            // SSR refill boundaries, DESIGN.md §15/§16) must keep the
+            // bulk of simulated cycles on the slim path.
+            ("ff_hit_rate", ff_hit_rate),
         ],
     );
 

@@ -1,0 +1,167 @@
+//! Bench `vector`: the VMXDOTP vector datapath vs the scalar unit
+//! (DESIGN.md §16) — simulated single-core throughput on MXFP8 DeiT
+//! shapes across every element format and vector length.
+//!
+//! For each of the six element formats the bench runs the DeiT-Tiny
+//! fc2 GEMM (the deep-reduction shape, k = 4·dim) on ONE core with the
+//! scalar `mxdotp` kernel and with the vector `vmxdotp` kernel at
+//! VL ∈ {2, 4, 8}, asserting bit-identity inline (the vector unit
+//! chains VL blocks through the scalar datapath in a fixed order, so
+//! identity is an invariant, not a tolerance), and records simulated
+//! GFLOPS plus the speedup over scalar per (format, VL) point.
+//!
+//! The headline bar — VL=8 MXFP8 at least 4× the scalar unit — and a
+//! conservative every-format floor go through the shared
+//! bench-regression gate (`bench_baselines.json`), and the whole table
+//! lands in `BENCH_vector.json` so the uplift trajectory is recorded
+//! across PRs.
+//!
+//! Run: `cargo bench --bench vector`
+
+mod common;
+
+use mxdotp::formats::ElemFormat;
+use mxdotp::kernels::{run_mm, KernelKind, MmProblem, MmRun};
+use mxdotp::rng::XorShift;
+use mxdotp::workload::DeitConfig;
+use std::fmt::Write as _;
+
+/// Vector lengths measured against the scalar baseline.
+const VLS: [u8; 3] = [2, 4, 8];
+
+fn single_core(kind: KernelKind, p: MmProblem, a: &[f32], b: &[f32]) -> MmRun {
+    run_mm(kind, p, a, b, 1)
+}
+
+fn assert_bits(what: &str, want: &MmRun, got: &MmRun) {
+    assert_eq!(want.c.len(), got.c.len());
+    for (i, (w, g)) in want.c.iter().zip(&got.c).enumerate() {
+        assert_eq!(
+            w.to_bits(),
+            g.to_bits(),
+            "{what}: C[{i}] diverged from the scalar reference"
+        );
+    }
+}
+
+fn main() {
+    common::header(
+        "vector",
+        "VMXDOTP vector datapath vs scalar mxdotp, single core, DeiT shapes (§16)",
+    );
+    // Reduced sequence keeps the 24 cycle-accurate runs CI-sized; the
+    // reduction dimension (what VL amortizes) stays the full DeiT k.
+    let seq: usize = std::env::var("VECTOR_BENCH_SEQ")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32);
+    let dcfg = DeitConfig { seq, ..DeitConfig::default() };
+    let fc2 = dcfg.mx_matmuls()[3]; // s x 4·dim x dim: k = 768
+    let proj = dcfg.mx_matmuls()[1]; // s x dim x dim:   k = 192
+    let mut rng = XorShift::new(0x7EC);
+    let a = rng.normal_vec(fc2.m * fc2.k, 0.5);
+    let b = rng.normal_vec(fc2.k * fc2.n, 0.02);
+
+    let mut rows = String::new();
+    let mut vl8_speedup_e4m3 = 0.0f64;
+    let mut vl8_gflops_e4m3 = 0.0f64;
+    let mut vl8_min_speedup = f64::INFINITY;
+    println!(
+        "\nfc2 {}x{}x{} on 1 core (simulated cycles; speedup vs scalar mxdotp):",
+        fc2.m, fc2.k, fc2.n
+    );
+    for (fi, &fmt) in ElemFormat::ALL.iter().enumerate() {
+        let p = MmProblem { fmt, ..fc2 };
+        let scalar = single_core(KernelKind::Mx(fmt), p, &a, &b);
+        assert_eq!(scalar.perf.vmxdotp_total(), 0, "scalar run issued vmxdotp");
+        let mut line = format!(
+            "  {fmt:>5}: scalar {:>9} cyc {:6.1} GFLOPS",
+            scalar.perf.cycles,
+            scalar.gflops()
+        );
+        let _ = write!(
+            rows,
+            "{}    {{\"fmt\": \"{fmt}\", \"scalar_cycles\": {}, \"scalar_gflops\": {:.2}, \
+             \"vls\": [",
+            if fi == 0 { "" } else { ",\n" },
+            scalar.perf.cycles,
+            scalar.gflops()
+        );
+        let mut prev_cycles = scalar.perf.cycles;
+        for (vi, &vl) in VLS.iter().enumerate() {
+            let run = single_core(p.vmx_kernel(vl), p, &a, &b);
+            assert_bits(&format!("{fmt} vl={vl}"), &scalar, &run);
+            assert!(run.perf.vmxdotp_total() > 0, "{fmt} vl={vl}: no vmxdotp issued");
+            assert!(
+                run.perf.cycles <= prev_cycles,
+                "{fmt}: wall cycles not monotone in VL ({} at vl={vl} > {prev_cycles})",
+                run.perf.cycles
+            );
+            prev_cycles = run.perf.cycles;
+            let speedup = scalar.perf.cycles as f64 / run.perf.cycles as f64;
+            let _ = write!(
+                rows,
+                "{}{{\"vl\": {vl}, \"cycles\": {}, \"gflops\": {:.2}, \
+                 \"speedup\": {speedup:.3}}}",
+                if vi == 0 { "" } else { ", " },
+                run.perf.cycles,
+                run.gflops()
+            );
+            let _ = write!(line, " | vl{vl} {speedup:>5.2}x");
+            if vl == 8 {
+                vl8_min_speedup = vl8_min_speedup.min(speedup);
+                if fmt == ElemFormat::E4M3 {
+                    vl8_speedup_e4m3 = speedup;
+                    vl8_gflops_e4m3 = run.gflops();
+                }
+            }
+        }
+        rows.push_str("]}");
+        println!("{line}  (bit-identical)");
+    }
+
+    // The attention-projection shape (k = dim): shallower reduction,
+    // the conservative end of the DeiT shapes. Recorded but ungated —
+    // the gate bars the canonical fc2 point.
+    let pp = MmProblem { fmt: ElemFormat::E4M3, ..proj };
+    let pa = &a[..pp.m * pp.k];
+    let pb = &b[..pp.k * pp.n];
+    let pscalar = single_core(KernelKind::Mx(pp.fmt), pp, pa, pb);
+    let pvec = single_core(pp.vmx_kernel(8), pp, pa, pb);
+    assert_bits("proj e4m3 vl=8", &pscalar, &pvec);
+    let proj_speedup = pscalar.perf.cycles as f64 / pvec.perf.cycles as f64;
+    println!(
+        "\nproj {}x{}x{} e4m3: scalar {} cyc -> vl8 {} cyc ({proj_speedup:.2}x, bit-identical)",
+        pp.m, pp.k, pp.n, pscalar.perf.cycles, pvec.perf.cycles
+    );
+
+    let mut j = String::new();
+    j.push_str("{\n");
+    let _ = writeln!(
+        j,
+        "  \"workload\": \"deit fc2 {}x{}x{} on 1 core, scalar mxdotp vs vmxdotp\",",
+        fc2.m, fc2.k, fc2.n
+    );
+    let _ = writeln!(j, "  \"formats\": [\n{rows}\n  ],");
+    let _ = writeln!(
+        j,
+        "  \"proj_vl8_speedup_e4m3\": {proj_speedup:.3},"
+    );
+    let _ = writeln!(j, "  \"vl8_speedup_e4m3\": {vl8_speedup_e4m3:.3},");
+    let _ = writeln!(j, "  \"vl8_gflops_e4m3\": {vl8_gflops_e4m3:.2},");
+    let _ = writeln!(j, "  \"vl8_min_speedup_all_fmts\": {vl8_min_speedup:.3},");
+    let _ = writeln!(j, "  \"bit_identical\": true");
+    j.push_str("}\n");
+    std::fs::write("BENCH_vector.json", &j).expect("write BENCH_vector.json");
+    println!("wrote BENCH_vector.json");
+
+    common::baseline::enforce(
+        "vector",
+        &[
+            ("vl8_speedup_e4m3", vl8_speedup_e4m3),
+            ("vl8_min_speedup_all_fmts", vl8_min_speedup),
+        ],
+    );
+
+    println!("\nvector: OK (record these in EXPERIMENTS.md §Vector)");
+}

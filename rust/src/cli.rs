@@ -32,10 +32,10 @@ pub enum Command {
     /// `simulate`: run one GEMM kernel on the cycle-accurate cluster
     /// (or sharded across a cluster fabric); with `--policy`, walk the
     /// whole per-layer mixed-precision model graph instead.
-    Simulate { kernel: KernelKind, m: usize, k: usize, n: usize, cores: usize, clusters: usize, fmt: ElemFormat, seed: u64, cold_plans: bool, policy: Option<PrecisionPolicy>, exec: ExecMode, trace_out: Option<String>, obs_out: Option<String> },
+    Simulate { kernel: KernelKind, m: usize, k: usize, n: usize, cores: usize, clusters: usize, fmt: ElemFormat, seed: u64, cold_plans: bool, policy: Option<PrecisionPolicy>, exec: ExecMode, trace_out: Option<String>, obs_out: Option<String>, vector_len: u8 },
     /// `reproduce`: regenerate the paper's tables/figures and the
     /// extension tables (formats, scaling, serving, pareto).
-    Reproduce { what: String, cores: usize, clusters: usize, fmt: ElemFormat, cold_plans: bool, policy: Option<PrecisionPolicy>, exec: ExecMode, trace_out: Option<String>, obs_out: Option<String> },
+    Reproduce { what: String, cores: usize, clusters: usize, fmt: ElemFormat, cold_plans: bool, policy: Option<PrecisionPolicy>, exec: ExecMode, trace_out: Option<String>, obs_out: Option<String>, vector_len: u8 },
     /// `serve`: drive the serving engine over a synthetic arrival
     /// trace, executing served requests through a real executor.
     Serve {
@@ -56,6 +56,7 @@ pub enum Command {
         exec: ExecMode,
         trace_out: Option<String>,
         obs_out: Option<String>,
+        vector_len: u8,
     },
     /// `info`: print the simulated machine and runtime availability.
     Info,
@@ -162,16 +163,18 @@ const QUANTIZE_FLAGS: &[&str] = &["fmt", "block", "n", "seed"];
 /// Flags the `simulate` subcommand accepts.
 const SIMULATE_FLAGS: &[&str] = &[
     "kernel", "m", "k", "n", "cores", "clusters", "fmt", "seed", "cold-plans", "policy",
-    "exec", "trace-out", "obs-out",
+    "exec", "trace-out", "obs-out", "vector-len",
 ];
 /// Flags the `reproduce` subcommand accepts.
-const REPRODUCE_FLAGS: &[&str] =
-    &["cores", "clusters", "fmt", "cold-plans", "policy", "exec", "trace-out", "obs-out"];
+const REPRODUCE_FLAGS: &[&str] = &[
+    "cores", "clusters", "fmt", "cold-plans", "policy", "exec", "trace-out", "obs-out",
+    "vector-len",
+];
 /// Flags the `serve` subcommand accepts.
 const SERVE_FLAGS: &[&str] = &[
     "requests", "batch", "clusters", "fabrics", "fmt", "mix", "arrival", "slo-ticks",
     "queue-cap", "sched", "artifacts", "cold-plans", "policy", "exec", "trace-out",
-    "obs-out",
+    "obs-out", "vector-len",
 ];
 
 /// Split `--key value` pairs (plus valueless boolean flags) after the
@@ -275,6 +278,22 @@ fn get_batch(f: &HashMap<String, String>) -> Result<usize, CliError> {
         return Err(CliError("--batch must be at least 1 (a zero batch never dispatches)".into()));
     }
     Ok(batch)
+}
+
+/// `--vector-len N`: MX blocks per dot-product instruction on every
+/// core — 1 (the default) runs the scalar `mxdotp` kernel, 2/4/8 the
+/// vector `vmxdotp` kernel at that VL. Values outside the hardware's
+/// `VECTOR_LEN` CSR set are rejected at parse time (instead of dying
+/// later on a deep layout assert).
+fn get_vector_len(f: &HashMap<String, String>) -> Result<u8, CliError> {
+    let vl: u8 = get_parse(f, "vector-len", 1)?;
+    if !crate::dotp::vunit::SUPPORTED_VL.contains(&(vl as usize)) {
+        return Err(CliError(format!(
+            "--vector-len {vl} is not a supported vector length; \
+             supported lengths: 1, 2, 4, 8"
+        )));
+    }
+    Ok(vl)
 }
 
 /// `--exec cycle|analytic|sampled:N`: which executor costs the run
@@ -394,9 +413,20 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
         "simulate" => {
             let f = flags(rest, SIMULATE_FLAGS)?;
             let fmt = get_fmt(&f)?;
-            let kernel = kernel_for(f.get("kernel").map(String::as_str).unwrap_or("mx"), fmt)?;
+            let kernel_name = f.get("kernel").map(String::as_str).unwrap_or("mx");
+            let kernel = kernel_for(kernel_name, fmt)?;
             let policy = get_policy(&f, fmt)?;
             let exec = get_exec(&f)?;
+            let vector_len = get_vector_len(&f)?;
+            // Only the MX hardware kernel has a vector datapath behind
+            // it; rejecting the combination here beats silently running
+            // the scalar fp32/fp8sw kernels at an ignored VL.
+            if vector_len > 1 && !matches!(kernel, KernelKind::Mx(_)) {
+                return Err(CliError(format!(
+                    "--vector-len {vector_len} only applies to the 'mx' hardware kernel \
+                     (vmxdotp); the '{kernel_name}' kernel has no vector datapath"
+                )));
+            }
             // A single-GEMM simulate *is* a cycle run — there is no
             // analytic single-kernel model to swap in — so the analytic
             // and sampled executors only apply to --policy model walks.
@@ -420,6 +450,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 exec,
                 trace_out: get_out_path(&f, "trace-out")?,
                 obs_out: get_out_path(&f, "obs-out")?,
+                vector_len,
             })
         }
         "reproduce" => {
@@ -471,6 +502,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 exec,
                 trace_out: get_out_path(&f, "trace-out")?,
                 obs_out: get_out_path(&f, "obs-out")?,
+                vector_len: get_vector_len(&f)?,
             })
         }
         "serve" => {
@@ -547,6 +579,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 exec: get_exec(&f)?,
                 trace_out: get_out_path(&f, "trace-out")?,
                 obs_out: get_out_path(&f, "obs-out")?,
+                vector_len: get_vector_len(&f)?,
             })
         }
         other => Err(CliError(format!("unknown subcommand '{other}' (try 'help')"))),
@@ -561,20 +594,21 @@ USAGE:
   mxdotp-cli quantize  [--fmt e4m3|e5m2|e3m2|e2m3|e2m1|int8] [--block 32] [--n 8] [--seed S]
   mxdotp-cli simulate  [--kernel mx|fp32|fp8sw] [--m 64] [--k 256] [--n 64]
                        [--cores 8] [--clusters 1] [--fmt e4m3] [--seed S] [--cold-plans]
+                       [--vector-len 1|2|4|8]
                        [--policy PRESET|class=fmt,...] [--exec cycle|analytic|sampled:N]
                        [--trace-out FILE] [--obs-out FILE]
                        (--clusters N > 1 shards the MX GEMM across N simulated clusters;
                         --policy walks the whole mixed-precision model graph instead)
   mxdotp-cli reproduce [fig3|fig4|table3|formats|scaling|serving|pareto|all] [--cores 8]
                        [--clusters 8] [--fmt e4m3] [--cold-plans] [--policy ...]
-                       [--exec cycle|analytic|sampled:N]
+                       [--vector-len 1|2|4|8] [--exec cycle|analytic|sampled:N]
                        [--trace-out FILE] [--obs-out FILE]
   mxdotp-cli serve     [--requests 16] [--batch 8] [--clusters 1] [--fabrics N]
                        [--fmt e4m3] [--mix e4m3:0.6,e2m1:0.4 | --policy PRESET|class=fmt,...]
                        [--arrival poisson[:RATE] | bursty:RATE:FACTOR:PERIOD]
                        [--slo-ticks 0] [--queue-cap 128]
                        [--sched continuous|barrier] [--artifacts DIR] [--cold-plans]
-                       [--exec cycle|analytic|sampled:N]
+                       [--vector-len 1|2|4|8] [--exec cycle|analytic|sampled:N]
                        [--trace-out FILE] [--obs-out FILE]
   mxdotp-cli info
 
@@ -611,6 +645,15 @@ rejected); the barrier scheduler always uses one whole-machine fabric.
 single-request cost); --queue-cap bounds the admission queue.
 'reproduce serving' prints the goodput-vs-load comparison of the two
 schedulers on the same traces.
+
+--vector-len N sets the VMXDOTP vector length: how many MX blocks one
+dot-product instruction consumes (DESIGN.md §16). 1 (default) runs the
+scalar mxdotp kernel; 2/4/8 run the vector vmxdotp kernel at that VL —
+bit-identical results at fewer cycles. It applies to 'simulate' (mx
+kernel only), the scale-out fabric, the serving cost models and the
+pareto/scaling/serving reproduce targets; the paper tables (fig3,
+fig4, table3, formats) are scalar by definition and ignore it. Values
+outside {1, 2, 4, 8} are rejected at parse time.
 
 --cold-plans bypasses the compile-once/execute-many plan cache (plans,
 quantized weight tiles, memoized passes, layer runs) and measures the
@@ -670,9 +713,49 @@ mod tests {
                 policy: None,
                 exec: ExecMode::Cycle,
                 trace_out: None,
-                obs_out: None
+                obs_out: None,
+                vector_len: 1
             }
         );
+    }
+
+    #[test]
+    fn parse_vector_len() {
+        // every supported VL parses on all three subcommands
+        for vl in [1u8, 2, 4, 8] {
+            assert!(matches!(
+                parse(&argv(&format!("simulate --vector-len {vl}"))),
+                Ok(Command::Simulate { vector_len, .. }) if vector_len == vl
+            ));
+            assert!(matches!(
+                parse(&argv(&format!("serve --vector-len {vl}"))),
+                Ok(Command::Serve { vector_len, .. }) if vector_len == vl
+            ));
+            assert!(matches!(
+                parse(&argv(&format!("reproduce scaling --vector-len {vl}"))),
+                Ok(Command::Reproduce { vector_len, .. }) if vector_len == vl
+            ));
+        }
+        // omitting the flag selects the scalar kernel
+        assert!(matches!(
+            parse(&argv("simulate")),
+            Ok(Command::Simulate { vector_len: 1, .. })
+        ));
+        // unsupported lengths are parse errors listing the valid set
+        for bad in ["0", "3", "16", "x"] {
+            let err = parse(&argv(&format!("simulate --vector-len {bad}"))).unwrap_err();
+            assert!(
+                err.0.contains("1, 2, 4, 8") || err.0.contains("bad value"),
+                "unhelpful error for --vector-len {bad}: {err}"
+            );
+        }
+        // the software kernels have no vector datapath
+        let err = parse(&argv("simulate --kernel fp32 --vector-len 4")).unwrap_err();
+        assert!(err.0.contains("only applies to the 'mx' hardware kernel"), "{err}");
+        let err = parse(&argv("simulate --kernel fp8sw --vector-len 8")).unwrap_err();
+        assert!(err.0.contains("fp8sw"), "{err}");
+        // VL=1 on a software kernel is fine (it *is* the scalar path)
+        assert!(parse(&argv("simulate --kernel fp32 --vector-len 1")).is_ok());
     }
 
     #[test]

@@ -30,7 +30,9 @@
 pub mod baselines;
 pub mod exact;
 pub mod unit;
+pub mod vunit;
 pub mod window;
 
 pub use exact::mxdotp_exact;
 pub use unit::{MxDotpUnit, PIPELINE_STAGES};
+pub use vunit::execute_group as vmxdotp_group;

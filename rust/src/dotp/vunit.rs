@@ -1,0 +1,201 @@
+//! The VMXDOTP vector functional unit: VL whole MX blocks per issue.
+//!
+//! `vmxdotp` (DESIGN.md §16) generalizes the scalar `mxdotp` from one
+//! 8/16-lane issue to a configurable vector of VL ∈ {1, 2, 4, 8} whole
+//! MX blocks. Each operand stream delivers one *scale-header* word
+//! (byte `l` = the E8M0 shared exponent of block `l`) followed by the
+//! `VL · block_words` packed element words of the group, block 0 first.
+//! Lane `l` of the unit multiplies block `l` of A with block `l` of B
+//! under the scale pair `(Xa_l, Xb_l)` and the per-lane partials are
+//! folded into the FP32 accumulator **in ascending lane order, each
+//! lane's element words in stream order** — the degenerate-left
+//! reduction tree.
+//!
+//! That fixed order makes the vector unit bit-identical, by
+//! construction, to chaining the scalar [`MxDotpUnit`] over the same
+//! blocks: every micro-step is one scalar `execute` (exact integer sum
+//! + a single RNE per issue-equivalent), so the scalar unit *is* the
+//! bit-reference, across all six OCP element formats and all special
+//! values (NaN scales, E5M2 infinities, accumulator specials). A real
+//! implementation with per-lane accumulators must schedule its
+//! reduction to this order to be conformant — the determinism rule the
+//! kernels and the plan cache rely on.
+
+use crate::dotp::unit::MxDotpUnit;
+
+/// Vector lengths the `VECTOR_LEN` CSR accepts (blocks per issue; the
+/// scale header's 8 bytes bound VL at 8).
+pub const SUPPORTED_VL: [usize; 4] = [1, 2, 4, 8];
+
+/// Execute one `vmxdotp` operand group on the (scalar, bit-reference)
+/// unit. `a`/`b` are the full group in stream order: the scale-header
+/// word followed by `vl · block_words` element words. Returns the FP32
+/// accumulator out.
+pub fn execute_group(
+    unit: &mut MxDotpUnit,
+    vl: usize,
+    block_words: usize,
+    a: &[u64],
+    b: &[u64],
+    acc: f32,
+) -> f32 {
+    debug_assert!(vl >= 1 && vl <= 8, "VL {vl} outside the header's 8 lanes");
+    debug_assert_eq!(a.len(), 1 + vl * block_words, "short A group");
+    debug_assert_eq!(b.len(), 1 + vl * block_words, "short B group");
+    let xa = a[0].to_le_bytes();
+    let xb = b[0].to_le_bytes();
+    let mut acc = acc;
+    for lane in 0..vl {
+        for w in 0..block_words {
+            let i = 1 + lane * block_words + w;
+            acc = unit.execute(a[i], b[i], xa[lane], xb[lane], acc);
+        }
+    }
+    acc
+}
+
+/// Pack a scale-header word from per-block E8M0 scales (byte `l` =
+/// scale of block `l`; unused lanes take the neutral bias 127 so a
+/// zero-padded tail block contributes exactly +0.0).
+pub fn pack_scale_header(scales: &[u8]) -> u64 {
+    debug_assert!(scales.len() <= 8);
+    let mut b = [127u8; 8];
+    b[..scales.len()].copy_from_slice(scales);
+    u64::from_le_bytes(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::ElemFormat;
+    use crate::rng::property_cases;
+
+    /// Reference: chain the scalar unit over the same blocks.
+    fn scalar_chain(
+        unit: &mut MxDotpUnit,
+        vl: usize,
+        bw: usize,
+        a: &[u64],
+        b: &[u64],
+        acc: f32,
+    ) -> f32 {
+        let xa = a[0].to_le_bytes();
+        let xb = b[0].to_le_bytes();
+        let mut acc = acc;
+        for lane in 0..vl {
+            for w in 0..bw {
+                let i = 1 + lane * bw + w;
+                acc = unit.execute(a[i], b[i], xa[lane], xb[lane], acc);
+            }
+        }
+        acc
+    }
+
+    fn random_group(
+        rng: &mut crate::rng::XorShift,
+        fmt: ElemFormat,
+        vl: usize,
+        bw: usize,
+    ) -> (Vec<u64>, Vec<u64>) {
+        let lanes = fmt.hw_lanes();
+        let mut mk = |rng: &mut crate::rng::XorShift| {
+            let scales: Vec<u8> = (0..vl).map(|_| (120 + rng.below(16)) as u8).collect();
+            let mut words = vec![pack_scale_header(&scales)];
+            for _ in 0..vl * bw {
+                let elems: Vec<u8> = (0..lanes)
+                    .map(|_| fmt.encode(rng.normal_f32() * 1.5))
+                    .collect();
+                words.push(crate::dotp::unit::pack_lanes(fmt, &elems));
+            }
+            words
+        };
+        (mk(rng), mk(rng))
+    }
+
+    #[test]
+    fn bit_identical_to_scalar_chain_all_formats() {
+        property_cases(300, 0x56, |rng| {
+            let fmt = ElemFormat::ALL[rng.below(6) as usize];
+            let vl = SUPPORTED_VL[rng.below(4) as usize];
+            let bw = [2usize, 4][rng.below(2) as usize];
+            let (a, b) = random_group(rng, fmt, vl, bw);
+            let acc = rng.normal_f32();
+            let mut vu = MxDotpUnit::new(fmt);
+            let mut su = MxDotpUnit::new(fmt);
+            let got = execute_group(&mut vu, vl, bw, &a, &b, acc);
+            let want = scalar_chain(&mut su, vl, bw, &a, &b, acc);
+            assert_eq!(got.to_bits(), want.to_bits(), "{fmt} vl={vl} bw={bw}");
+        });
+    }
+
+    #[test]
+    fn vl1_is_the_scalar_block() {
+        // VL = 1 consumes exactly one block and matches the scalar
+        // chain bit for bit (the `--vector-len 1` identity).
+        let fmt = ElemFormat::E4M3;
+        let one = fmt.encode(1.0);
+        let hdr = pack_scale_header(&[129]);
+        let word = u64::from_le_bytes([one; 8]);
+        let a = vec![hdr, word, word, word, word];
+        let mut vu = MxDotpUnit::new(fmt);
+        let got = execute_group(&mut vu, 1, 4, &a, &a.clone(), 0.5);
+        // 4 words · 8 lanes · 1·1 · 2^(129+129-254) = 32 · 16
+        assert_eq!(got, 32.0 * 16.0 + 0.5);
+        assert_eq!(vu.issued, 4);
+    }
+
+    #[test]
+    fn zero_padded_tail_blocks_are_bit_invisible() {
+        // A group whose tail lanes carry scale 127 + all-zero elements
+        // must produce exactly the accumulator of the shorter group —
+        // the host-side padding rule the vector kernels use for
+        // kb % VL != 0.
+        property_cases(200, 0x57, |rng| {
+            let fmt = ElemFormat::ALL[rng.below(6) as usize];
+            let bw = 4usize;
+            let real = 1 + rng.below(3) as usize; // 1..=3 real blocks
+            let vl = 4usize;
+            let (mut a, mut b) = random_group(rng, fmt, vl, bw);
+            // zero the tail blocks, neutral scales
+            let mut ha = a[0].to_le_bytes();
+            let mut hb = b[0].to_le_bytes();
+            for lane in real..vl {
+                ha[lane] = 127;
+                hb[lane] = 127;
+                for w in 0..bw {
+                    a[1 + lane * bw + w] = 0;
+                    b[1 + lane * bw + w] = 0;
+                }
+            }
+            a[0] = u64::from_le_bytes(ha);
+            b[0] = u64::from_le_bytes(hb);
+            let acc = rng.normal_f32();
+            let mut vu = MxDotpUnit::new(fmt);
+            let padded = execute_group(&mut vu, vl, bw, &a, &b, acc);
+            let mut su = MxDotpUnit::new(fmt);
+            let short_a: Vec<u64> = a[..1 + real * bw].to_vec();
+            let short_b: Vec<u64> = b[..1 + real * bw].to_vec();
+            let short = execute_group(&mut su, real, bw, &short_a, &short_b, acc);
+            assert_eq!(padded.to_bits(), short.to_bits(), "{fmt} real={real}");
+        });
+    }
+
+    #[test]
+    fn specials_propagate_like_the_scalar_unit() {
+        let fmt = ElemFormat::E5M2;
+        let inf = 0b0_11111_00u8;
+        let one = fmt.encode(1.0);
+        let hdr = pack_scale_header(&[127, 127]);
+        let inf_word = u64::from_le_bytes([inf, one, one, one, one, one, one, one]);
+        let one_word = u64::from_le_bytes([one; 8]);
+        let a = vec![hdr, one_word, inf_word];
+        let b = vec![hdr, one_word, one_word];
+        let mut vu = MxDotpUnit::new(fmt);
+        assert_eq!(execute_group(&mut vu, 2, 1, &a, &b, 0.0), f32::INFINITY);
+        // NaN scale header poisons the whole group
+        let nan_hdr = pack_scale_header(&[127, 0xFF]);
+        let a2 = vec![nan_hdr, one_word, one_word];
+        let mut vu2 = MxDotpUnit::new(fmt);
+        assert!(execute_group(&mut vu2, 2, 1, &a2, &b, 0.0).is_nan());
+    }
+}

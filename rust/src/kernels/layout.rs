@@ -112,6 +112,23 @@ pub fn mx_staged_footprint(p: &MmProblem, num_cores: usize) -> usize {
     elems + scales + c + bufs + regions * 256
 }
 
+/// Exact upper bound of the bytes `mx::layout_vmx` places for the
+/// vector (VMXDOTP) kernel: A and B are staged as *operand group
+/// streams* — per row/column, `ceil(kb / VL)` groups of one scale-header
+/// word plus `VL · block_words` element words (tail blocks zero-padded),
+/// plus one pad word per row/column for bank rotation — FP32 C, and the
+/// Planner's worst-case stagger slack per region. No scale-reshape
+/// buffers: the headers ride in the streams, so the integer core does
+/// no per-tile scale work at all.
+pub fn vmx_staged_footprint(p: &MmProblem, vl: usize) -> usize {
+    let lanes = p.fmt.hw_lanes();
+    let bw = p.block_size / lanes;
+    let kb = p.k / p.block_size;
+    let groups = kb.div_ceil(vl);
+    let vstride = groups * 8 * (1 + vl * bw) + 8;
+    vstride * (p.m + p.n) + 4 * p.m * p.n + 3 * 256
+}
+
 /// MX kernels footprint model: packed elements for A and B at the
 /// format's hardware width, E8M0 scales, FP32 C, plus the per-core
 /// reshaped scale stream buffers (double-buffered) for the MX hw

@@ -15,7 +15,11 @@
 //!               unroll under FREP. Lane count and SPM packing derive
 //!               from the element format (8 × FP8/FP6/INT8 byte lanes,
 //!               16 × FP4 nibble lanes): 16 FLOPs/cycle/core ideal for
-//!               the byte-wide formats, 32 for MXFP4;
+//!               the byte-wide formats, 32 for MXFP4. The same module
+//!               hosts the *vector* `vmxdotp` kernel (DESIGN.md §16):
+//!               VL whole MX blocks per issue with scale headers riding
+//!               in the widened operand streams, multiplying the ideal
+//!               by VL while staying bit-identical to the scalar path;
 //! * [`layout`] — SPM placement (bank-staggered operand regions, L1
 //!               capacity checks — reproducing the paper's "FP32 does
 //!               not fit into L1 at K=256" footnote) and row-block
@@ -61,6 +65,13 @@ pub enum KernelKind {
     Fp8ToFp32,
     /// The format-generic `mxdotp` hardware kernel.
     Mx(ElemFormat),
+    /// The vector `vmxdotp` hardware kernel: VL whole MX blocks per
+    /// issue (VL ∈ {1, 2, 4, 8}), scale headers riding in the widened
+    /// operand streams, bit-identical to [`KernelKind::Mx`]. VL = 1 is
+    /// normalized to the scalar kernel by [`MmProblem::vmx_kernel`] and
+    /// the CLI, so a `VMx(_, 1)` plan only exists when requested
+    /// explicitly.
+    VMx(ElemFormat, u8),
 }
 
 impl KernelKind {
@@ -70,6 +81,7 @@ impl KernelKind {
             KernelKind::Fp32 => "FP32".into(),
             KernelKind::Fp8ToFp32 => "FP8-to-FP32".into(),
             KernelKind::Mx(fmt) => format!("MX({fmt})"),
+            KernelKind::VMx(fmt, vl) => format!("VMX({fmt}, vl={vl})"),
         }
     }
 
@@ -81,7 +93,7 @@ impl KernelKind {
         match self {
             KernelKind::Fp32 => &ElemFormat::ALL,
             KernelKind::Fp8ToFp32 => &fp8sw::SUPPORTED_FMTS,
-            KernelKind::Mx(_) => &ElemFormat::ALL,
+            KernelKind::Mx(_) | KernelKind::VMx(..) => &ElemFormat::ALL,
         }
     }
 
@@ -94,6 +106,9 @@ impl KernelKind {
             KernelKind::Fp32 => 4.0,      // 2-way SIMD MAC
             KernelKind::Fp8ToFp32 => 4.0, // bounded by the same FPU MACs
             KernelKind::Mx(fmt) => 2.0 * fmt.hw_lanes() as f64,
+            // VL whole blocks retire per `block_words`-cycle occupancy:
+            // lane MACs scale linearly with the vector length.
+            KernelKind::VMx(fmt, vl) => 2.0 * fmt.hw_lanes() as f64 * vl as f64,
         }
     }
 }
@@ -128,6 +143,18 @@ impl MmProblem {
     /// The hardware kernel for this problem's element format.
     pub fn mx_kernel(&self) -> KernelKind {
         KernelKind::Mx(self.fmt)
+    }
+
+    /// The hardware kernel at vector length `vl` — the single place
+    /// where VL = 1 normalizes to the scalar kernel, so a
+    /// `--vector-len 1` run is bit- *and cycle*-identical to the scalar
+    /// path by construction.
+    pub fn vmx_kernel(&self, vl: u8) -> KernelKind {
+        if vl <= 1 {
+            KernelKind::Mx(self.fmt)
+        } else {
+            KernelKind::VMx(self.fmt, vl)
+        }
     }
 
     /// Useful FLOPs (2·M·N·K; scale ops not counted, Table III note).
@@ -192,7 +219,7 @@ pub fn run_mm(
     let mut cluster = Cluster::new(ClusterConfig { num_cores, freq_ghz: 1.0 });
     match kind {
         KernelKind::Fp32 => mm_plan.execute(&mut cluster, &plan::MmOperands::Fp32 { a, b }),
-        KernelKind::Fp8ToFp32 | KernelKind::Mx(_) => {
+        KernelKind::Fp8ToFp32 | KernelKind::Mx(_) | KernelKind::VMx(..) => {
             let (qa, qb) = mm_plan.quantize(a, b);
             mm_plan.execute(&mut cluster, &plan::MmOperands::Mx { qa: &qa, qb: &qb })
         }
@@ -218,6 +245,17 @@ mod tests {
         }
         assert_eq!(KernelKind::Fp32.ideal_flops_per_cycle_per_core(), 4.0);
         assert_eq!(KernelKind::Fp8ToFp32.ideal_flops_per_cycle_per_core(), 4.0);
+        // The vector kernel's ideal scales linearly with VL.
+        assert_eq!(KernelKind::VMx(ElemFormat::E4M3, 8).ideal_flops_per_cycle_per_core(), 128.0);
+        assert_eq!(KernelKind::VMx(ElemFormat::E2M1, 2).ideal_flops_per_cycle_per_core(), 64.0);
+    }
+
+    #[test]
+    fn vl1_normalizes_to_the_scalar_kernel() {
+        let p = MmProblem::fig4(128, ElemFormat::E4M3);
+        assert_eq!(p.vmx_kernel(1), KernelKind::Mx(p.fmt));
+        assert_eq!(p.vmx_kernel(0), KernelKind::Mx(p.fmt));
+        assert_eq!(p.vmx_kernel(8), KernelKind::VMx(p.fmt, 8));
     }
 
     /// Run `kinds` on the simulated cluster and assert bit-agreement
@@ -235,7 +273,9 @@ mod tests {
             let want = match kind {
                 KernelKind::Fp32 => reference::fp32_hw_ref(&p, a, b),
                 KernelKind::Fp8ToFp32 => reference::fp8sw_hw_ref(&p, a, b),
-                KernelKind::Mx(_) => reference::mx_hw_ref(&p, a, b),
+                // The vector kernel shares the scalar reference: the
+                // degenerate-left reduction order makes it bit-identical.
+                KernelKind::Mx(_) | KernelKind::VMx(..) => reference::mx_hw_ref(&p, a, b),
             };
             let run = run_mm(kind, p, a, b, cores);
             assert_eq!(run.c.len(), want.len());
@@ -258,6 +298,7 @@ mod tests {
             kinds.push(KernelKind::Fp8ToFp32);
         }
         kinds.push(KernelKind::Mx(fmt));
+        kinds.push(KernelKind::VMx(fmt, 4));
         kinds
     }
 
@@ -291,7 +332,7 @@ mod tests {
                     &a,
                     &b,
                     2,
-                    &[KernelKind::Fp32, KernelKind::Mx(fmt)],
+                    &[KernelKind::Fp32, KernelKind::Mx(fmt), KernelKind::VMx(fmt, 4)],
                 );
             }
         }

@@ -33,7 +33,7 @@
 //!
 //! Ideal rate: `lanes` MACs = `2·lanes` FLOPs per cycle per core.
 
-use super::layout::{mx_staged_footprint, rows_for_core, Planner, Region};
+use super::layout::{mx_staged_footprint, rows_for_core, vmx_staged_footprint, Planner, Region};
 use super::{fp32::emit_ssr, MmProblem};
 use crate::formats::MxMatrix;
 use crate::snitch::isa::{csr, FpInstr, Instr, IntInstr, SsrField};
@@ -399,6 +399,268 @@ fn build(p: MmProblem, core: usize, ncores: usize, r: &MxRegions) -> Vec<Instr> 
     prog
 }
 
+/// Staged operand addresses of the vector (VMXDOTP) kernel. Unlike the
+/// scalar [`MxRegions`] there are no scale regions and no per-core
+/// reshape buffers: the E8M0 scales ride in the streams as per-group
+/// headers, so the only regions are the two group streams and C.
+#[derive(Clone, Debug)]
+pub(super) struct VmxRegions {
+    /// A operand groups, row-major: per row, `ceil(kb/VL)` groups of
+    /// one scale-header word + `VL · block_words` element words.
+    pub a: Region,
+    /// B operand groups, column-major, same per-column layout.
+    pub b: Region,
+    /// Byte stride of one A row's group stream (+8 pad word so the
+    /// lockstep streams rotate banks).
+    pub a_vstride: usize,
+    /// Byte stride of one B column's group stream.
+    pub b_vstride: usize,
+    /// FP32 C output, row-major.
+    pub c: Region,
+}
+
+/// Place the vector kernel's operand regions. Shape-only; the
+/// data-dependent half is [`write_vmx_operands`].
+pub(super) fn layout_vmx(p: &MmProblem, ncores: usize, vl: usize) -> VmxRegions {
+    let lanes = p.fmt.hw_lanes();
+    assert!(
+        crate::dotp::vunit::SUPPORTED_VL.contains(&vl),
+        "vector length {vl} not in the supported set {:?}",
+        crate::dotp::vunit::SUPPORTED_VL
+    );
+    assert_eq!(p.m % ncores, 0);
+    assert_eq!(p.n % 8, 0);
+    assert_eq!(p.k % p.block_size, 0);
+    assert_eq!(
+        p.block_size % lanes,
+        0,
+        "{}: block size {} must be a multiple of the {}-lane issue width",
+        p.fmt,
+        p.block_size,
+        lanes
+    );
+    let bw = p.block_size / lanes;
+    assert!(
+        1 + vl * bw <= crate::snitch::fpu::MAX_GROUP_WORDS,
+        "VL {vl} x {bw}-word blocks exceed the vector unit's group buffer"
+    );
+    assert!(
+        vmx_staged_footprint(p, vl) <= SPM_BYTES,
+        "vector MX workload does not fit into L1"
+    );
+    let kb = p.k / p.block_size;
+    let groups = kb.div_ceil(vl);
+    let gbytes = 8 * (1 + vl * bw);
+    let a_vstride = groups * gbytes + 8;
+    let b_vstride = groups * gbytes + 8;
+    let mut planner = Planner::new();
+    let a = planner.place(a_vstride * p.m).unwrap();
+    let b = planner.place(b_vstride * p.n).unwrap();
+    let c = planner.place(4 * p.m * p.n).unwrap();
+    VmxRegions { a, b, a_vstride, b_vstride, c }
+}
+
+/// Write pre-quantized MX operands as vector operand-group streams:
+/// per row (A) / column (B), per group of VL blocks, one scale-header
+/// word (byte `l` = block `l`'s E8M0 scale, unused lanes neutral 127)
+/// followed by the `VL · block_words` packed element words in block
+/// order. Tail groups where `kb % VL != 0` are zero-padded — proven
+/// bit-invisible by `dotp::vunit::zero_padded_tail_blocks_are_bit_invisible`.
+pub(super) fn write_vmx_operands(
+    spm: &mut Spm,
+    r: &VmxRegions,
+    p: &MmProblem,
+    vl: usize,
+    qa: &MxMatrix,
+    qb: &MxMatrix,
+) {
+    assert_eq!(qa.rows, p.m);
+    assert_eq!(qa.cols, p.k);
+    assert_eq!(qb.rows, p.k);
+    assert_eq!(qb.cols, p.n);
+    assert_eq!(qa.fmt, p.fmt);
+    assert_eq!(qb.fmt, p.fmt);
+    assert_eq!(qa.block_size, p.block_size);
+    assert_eq!(qb.block_size, p.block_size);
+    let lanes = p.fmt.hw_lanes();
+    let bw = p.block_size / lanes;
+    let kb = p.k / p.block_size;
+    let groups = kb.div_ceil(vl);
+    let gbytes = 8 * (1 + vl * bw);
+    let mut elems = vec![0u8; lanes];
+    let mut write_stream = |spm: &mut Spm,
+                            base: usize,
+                            scale: &dyn Fn(usize) -> u8,
+                            elem: &dyn Fn(usize) -> u8| {
+        for g in 0..groups {
+            let lo = g * vl;
+            let hi = (lo + vl).min(kb);
+            let scales: Vec<u8> = (lo..hi).map(scale).collect();
+            let gbase = base + g * gbytes;
+            spm.write_u64(gbase, crate::dotp::vunit::pack_scale_header(&scales));
+            for lane in 0..vl {
+                for w in 0..bw {
+                    let addr = gbase + 8 * (1 + lane * bw + w);
+                    let b_i = lo + lane;
+                    if b_i < kb {
+                        let k0 = b_i * p.block_size + w * lanes;
+                        for (i, e) in elems.iter_mut().enumerate() {
+                            *e = elem(k0 + i);
+                        }
+                        spm.write_u64(addr, crate::dotp::unit::pack_lanes(p.fmt, &elems));
+                    } else {
+                        spm.write_u64(addr, 0);
+                    }
+                }
+            }
+        }
+    };
+    for m in 0..p.m {
+        write_stream(
+            spm,
+            r.a.addr + m * r.a_vstride,
+            &|b_i| qa.scale(m, b_i).0,
+            &|k| qa.elem_bits(m, k),
+        );
+    }
+    for n in 0..p.n {
+        write_stream(
+            spm,
+            r.b.addr + n * r.b_vstride,
+            &|b_i| qb.scale(n, b_i).0,
+            &|k| qb.elem_bits(k, n),
+        );
+    }
+}
+
+/// Plan the vector MX kernel: SPM layout + per-core programs for one
+/// tile shape at the problem's format and vector length.
+pub(super) fn vplan(p: MmProblem, ncores: usize, vl: usize) -> (VmxRegions, Vec<Vec<Instr>>) {
+    let r = layout_vmx(&p, ncores, vl);
+    let progs = (0..ncores).map(|c| vbuild(p, c, ncores, vl, &r)).collect();
+    (r, progs)
+}
+
+/// Build one core's vector program. Structure per column tile:
+///
+/// ```text
+/// fence; ft0.base = A rows; ft1.base = B tile      // re-arm streams
+/// for each row {                                    // no fence needed
+///   c0..c{unroll-1} = 0
+///   frep ceil(kb/VL) { vmxdotp c_j, ft0, ft1   (j = 0..unroll-1) }
+///   store c0..c{unroll-1}
+/// }
+/// ```
+///
+/// Both streams walk (word-in-group, j: unroll, group, row): ft0
+/// replays each A group `unroll` times (stride-0 middle dim), ft1 walks
+/// the tile's `unroll` columns. Rows ride *inside* the stream (4th
+/// dim), so the drain fence is per column tile, not per row — the
+/// in-order FP queue alone orders each row's stores before the next
+/// row's accumulator clears. There is no ft2 and no integer-core scale
+/// reshape: the headers ride in the operand streams, and the FREP
+/// bounds shrink from `K/lanes` issues to `ceil(kb/VL)` group issues.
+fn vbuild(p: MmProblem, core: usize, ncores: usize, vl: usize, r: &VmxRegions) -> Vec<Instr> {
+    let rows = rows_for_core(p.m, core, ncores);
+    let nrows = rows.len() as u32;
+    let n = p.n;
+    let lanes = p.fmt.hw_lanes();
+    let bw = p.block_size / lanes;
+    let kb = p.k / p.block_size;
+    let groups = kb.div_ceil(vl);
+    let gw = 1 + vl * bw; // words per operand group
+    let gbytes = 8 * gw;
+    let unroll = mx_unroll(&p);
+    let mut prog: Vec<Instr> = Vec::new();
+
+    // Element format + vector geometry CSRs.
+    prog.push(IntInstr::Li { rd: 6, imm: p.fmt.csr_code() as i64 }.into());
+    prog.push(IntInstr::CsrW { csr: csr::MX_FMT, rs1: 6 }.into());
+    prog.push(IntInstr::Li { rd: 6, imm: (vl | (bw << 8)) as i64 }.into());
+    prog.push(IntInstr::CsrW { csr: csr::VECTOR_LEN, rs1: 6 }.into());
+
+    // Widen the operand ports: one burst grant delivers up to 8 words
+    // and the FIFO holds a whole group plus a refill in flight.
+    prog.push(IntInstr::Li { rd: 5, imm: 8 }.into());
+    prog.push(IntInstr::Scfg { ssr: 0, field: SsrField::Width, rs1: 5 }.into());
+    prog.push(IntInstr::Scfg { ssr: 1, field: SsrField::Width, rs1: 5 }.into());
+    prog.push(IntInstr::Li { rd: 5, imm: (gw + 16) as i64 }.into());
+    prog.push(IntInstr::Scfg { ssr: 0, field: SsrField::Depth, rs1: 5 }.into());
+    prog.push(IntInstr::Scfg { ssr: 1, field: SsrField::Depth, rs1: 5 }.into());
+
+    // ft0: A groups — (w: gw, 8), (j: unroll, 0), (g: groups, gbytes),
+    //      (row: nrows, a_vstride); base re-armed per column tile.
+    emit_ssr(
+        &mut prog,
+        0,
+        (r.a.addr + rows.start * r.a_vstride) as i64,
+        &[
+            (gw as u32, 8),
+            (unroll as u32, 0),
+            (groups as u32, gbytes as i64),
+            (nrows, r.a_vstride as i64),
+        ],
+        0,
+    );
+    // ft1: B groups — (w: gw, 8), (j: unroll, b_vstride),
+    //      (g: groups, gbytes), (row: nrows, 0).
+    emit_ssr(
+        &mut prog,
+        1,
+        r.b.addr as i64,
+        &[
+            (gw as u32, 8),
+            (unroll as u32, r.b_vstride as i64),
+            (groups as u32, gbytes as i64),
+            (nrows, 0),
+        ],
+        0,
+    );
+    prog.push(IntInstr::Li { rd: 6, imm: 1 }.into());
+    prog.push(IntInstr::CsrW { csr: csr::SSR_ENABLE, rs1: 6 }.into());
+
+    // Pointers: x7 = A stream base (fixed per core), x17 = B stream
+    // base per tile, x13 = C base per tile, x2/x3 = tile counter/count,
+    // x11 = FREP bound (groups - 1).
+    prog.push(IntInstr::Li { rd: 7, imm: (r.a.addr + rows.start * r.a_vstride) as i64 }.into());
+    prog.push(IntInstr::Li { rd: 17, imm: r.b.addr as i64 }.into());
+    prog.push(IntInstr::Li { rd: 13, imm: (r.c.addr + rows.start * n * 4) as i64 }.into());
+    prog.push(IntInstr::Li { rd: 2, imm: 0 }.into());
+    prog.push(IntInstr::Li { rd: 3, imm: (n / unroll) as i64 }.into());
+    prog.push(IntInstr::Li { rd: 11, imm: groups as i64 - 1 }.into());
+
+    let tile_top = prog.len();
+    // Drain the previous tile, re-arm both streams at this tile.
+    prog.push(IntInstr::FpFence.into());
+    prog.push(IntInstr::Scfg { ssr: 0, field: SsrField::Base, rs1: 7 }.into());
+    prog.push(IntInstr::Scfg { ssr: 1, field: SsrField::Base, rs1: 17 }.into());
+    prog.push(IntInstr::Add { rd: 10, rs1: 13, rs2: 0 }.into()); // C cursor
+    prog.push(IntInstr::Li { rd: 14, imm: nrows as i64 }.into());
+    let row_top = prog.len();
+    // Zero the `unroll` FP32 accumulators.
+    for i in 0..unroll as u8 {
+        prog.push(FpInstr::VfcpkaS { fd: 8 + i, fs1: 3, fs2: 3 }.into());
+    }
+    prog.push(IntInstr::Frep { n_frep_reg: 11, max_inst: unroll as u8 }.into());
+    for i in 0..unroll as u8 {
+        prog.push(FpInstr::Vmxdotp { fd: 8 + i, fs1: 0, fs2: 1 }.into());
+    }
+    for i in 0..unroll as u8 {
+        prog.push(FpInstr::Fsw { fs2: 8 + i, rs1: 10, imm: 4 * i as i64 }.into());
+    }
+    prog.push(IntInstr::Addi { rd: 10, rs1: 10, imm: 4 * n as i64 }.into());
+    prog.push(IntInstr::Addi { rd: 14, rs1: 14, imm: -1 }.into());
+    prog.push(IntInstr::Bne { rs1: 14, rs2: 0, target: row_top }.into());
+    // Next column tile.
+    prog.push(IntInstr::Addi { rd: 17, rs1: 17, imm: (unroll * r.b_vstride) as i64 }.into());
+    prog.push(IntInstr::Addi { rd: 13, rs1: 13, imm: 4 * unroll as i64 }.into());
+    prog.push(IntInstr::Addi { rd: 2, rs1: 2, imm: 1 }.into());
+    prog.push(IntInstr::Bne { rs1: 2, rs2: 3, target: tile_top }.into());
+    prog.push(IntInstr::FpFence.into());
+    prog.push(IntInstr::Halt.into());
+    prog
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::reference::mx_hw_ref;
@@ -480,6 +742,66 @@ mod tests {
         for (i, (got, w)) in run.c.iter().zip(&want).enumerate() {
             assert_eq!(got.to_bits(), w.to_bits(), "C[{i}]");
         }
+    }
+
+    #[test]
+    fn vmx_kernel_bit_exact_vs_scalar_all_formats_and_vls() {
+        // The vector kernel's C bits must equal the scalar hardware
+        // reference for every format × VL, including VLs that force
+        // zero-padded tail groups (kb = 4, so VL = 8 pads 4 blocks).
+        for fmt in ElemFormat::ALL {
+            let p = MmProblem { m: 8, k: 128, n: 16, fmt, block_size: 32 };
+            let mut rng = XorShift::new(0x3E ^ fmt.csr_code() as u64);
+            let a = rng.normal_vec(p.m * p.k, 1.0);
+            let b = rng.normal_vec(p.k * p.n, 1.0);
+            let want = mx_hw_ref(&p, &a, &b);
+            let kb = p.k / p.block_size;
+            for vl in [1usize, 2, 4, 8] {
+                let run = run_mm(KernelKind::VMx(fmt, vl as u8), p, &a, &b, 4);
+                for (i, (got, w)) in run.c.iter().zip(&want).enumerate() {
+                    assert_eq!(got.to_bits(), w.to_bits(), "{fmt} vl={vl} C[{i}]: {got} vs {w}");
+                }
+                // One vmxdotp per (output, group); issue-equivalents
+                // count the zero-padded tail lanes too (the unit is
+                // busy block_words cycles per group regardless).
+                let groups = kb.div_ceil(vl) as u64;
+                let bw = (p.block_size / fmt.hw_lanes()) as u64;
+                assert_eq!(run.perf.vmxdotp_total(), (p.m * p.n) as u64 * groups, "{fmt} vl={vl}");
+                assert_eq!(
+                    run.perf.mxdotp_total(),
+                    (p.m * p.n) as u64 * groups * vl as u64 * bw,
+                    "{fmt} vl={vl}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vmx_wall_cycles_shrink_monotonically_with_vl() {
+        // Doubling VL halves the FREP group count and the vector unit's
+        // busy time per tile; wall cycles must be monotone non-increasing
+        // across the VL sweep, and VL=8 must be a real speedup.
+        let p = MmProblem::fig4(256, ElemFormat::E4M3);
+        let mut rng = XorShift::new(0x51);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 1.0);
+        let scalar = run_mm(KernelKind::Mx(p.fmt), p, &a, &b, 8);
+        let mut prev = u64::MAX;
+        for vl in [2u8, 4, 8] {
+            let run = run_mm(KernelKind::VMx(p.fmt, vl), p, &a, &b, 8);
+            assert!(
+                run.perf.cycles <= prev,
+                "vl={vl}: {} cycles after {} at the previous VL",
+                run.perf.cycles,
+                prev
+            );
+            prev = run.perf.cycles;
+        }
+        assert!(
+            (prev as f64) < scalar.perf.cycles as f64 / 3.0,
+            "VL=8 took {prev} cycles vs scalar {} — vector uplift missing",
+            scalar.perf.cycles
+        );
     }
 
     #[test]

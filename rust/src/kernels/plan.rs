@@ -31,7 +31,7 @@
 
 use super::fp32::{self, Fp32Layout};
 use super::fp8sw;
-use super::mx::{self, MxRegions};
+use super::mx::{self, MxRegions, VmxRegions};
 use super::reference::{quantize_a, quantize_b};
 use super::{KernelKind, MmProblem, MmRun};
 use crate::formats::{ElemFormat, MxMatrix};
@@ -78,6 +78,7 @@ impl PlanKey {
 enum PlanLayout {
     Fp32(Fp32Layout),
     Mx(MxRegions),
+    Vmx(VmxRegions),
 }
 
 /// Operands for one plan execution, borrowed from the caller (raw FP32
@@ -133,6 +134,16 @@ impl MmPlan {
                 let c = r.c.addr;
                 (PlanLayout::Mx(r), progs, c)
             }
+            KernelKind::VMx(fmt, vl) => {
+                assert_eq!(
+                    fmt, p.fmt,
+                    "VMX kernel format {fmt} does not match the problem's {}",
+                    p.fmt
+                );
+                let (r, progs) = mx::vplan(p, key.cores, vl as usize);
+                let c = r.c.addr;
+                (PlanLayout::Vmx(r), progs, c)
+            }
         };
         let programs = programs.into_iter().map(Arc::new).collect();
         let cycle_bound = cycle_bound(key.kind, &p, key.cores);
@@ -171,6 +182,12 @@ impl MmPlan {
             }
             (PlanLayout::Mx(r), MmOperands::Mx { qa, qb }) => {
                 mx::write_mx_operands(&mut cluster.spm, r, &p, qa, qb);
+            }
+            (PlanLayout::Vmx(r), MmOperands::Mx { qa, qb }) => {
+                let KernelKind::VMx(_, vl) = self.key.kind else {
+                    unreachable!("Vmx layout on a non-VMx plan");
+                };
+                mx::write_vmx_operands(&mut cluster.spm, r, &p, vl as usize, qa, qb);
             }
             _ => panic!("{} plan executed with mismatched operand kind", self.key.kind.name()),
         }
@@ -229,6 +246,18 @@ pub fn cycle_bound(kind: KernelKind, p: &MmProblem, cores: usize) -> u64 {
             let unroll = super::mx::mx_unroll(p) as u64;
             let tiles = ((p.m / cores).max(1) as u64) * (p.n as u64 / unroll).max(1);
             (tiles, 8 * unroll * (k / lanes).max(1) + 8 * unroll * kb + 200)
+        }
+        // unroll × ceil(kb/VL) atomic group issues per tile, each
+        // streaming 2·(1 + VL·block_words) words — ×8 worst-case bank
+        // serialization on the burst grants — plus the per-row
+        // clear/store epilogue and the per-tile fence.
+        KernelKind::VMx(fmt, vl) => {
+            let lanes = fmt.hw_lanes() as u64;
+            let bw = (p.block_size as u64 / lanes).max(1);
+            let groups = kb.div_ceil(vl as u64);
+            let unroll = super::mx::mx_unroll(p) as u64;
+            let tiles = ((p.m / cores).max(1) as u64) * (p.n as u64 / unroll).max(1);
+            (tiles, 16 * unroll * groups * (1 + vl as u64 * bw) + 200)
         }
         // Per output: per block ≈ 114 FPU issues (2 moves + 16 converts
         // + 8 FMAs per word, ×4 words, + reduction and scale ops); 8
@@ -324,6 +353,8 @@ pub struct LayerRunKey {
     pub fmt: ElemFormat,
     /// MX block size.
     pub block_size: usize,
+    /// Vector length the shards ran at (1 = scalar kernel).
+    pub vl: u8,
     /// Clusters in the scale-out config.
     pub clusters: usize,
     /// Cores per cluster.
@@ -622,7 +653,7 @@ pub fn run_mm_cached(
     }
     let run = match kind {
         KernelKind::Fp32 => plan.execute(cluster, &MmOperands::Fp32 { a, b }),
-        KernelKind::Fp8ToFp32 | KernelKind::Mx(_) => {
+        KernelKind::Fp8ToFp32 | KernelKind::Mx(_) | KernelKind::VMx(..) => {
             let qa = quantize_a_timed(&problem, a);
             let qb = cache.quantized_b(&problem, b, bfp);
             plan.execute(cluster, &MmOperands::Mx { qa: &qa, qb: &qb })
@@ -650,7 +681,12 @@ mod tests {
     #[test]
     fn cached_run_bit_and_cycle_identical_to_cold_run() {
         let (p, a, b) = small();
-        for kind in [KernelKind::Fp32, KernelKind::Fp8ToFp32, KernelKind::Mx(p.fmt)] {
+        for kind in [
+            KernelKind::Fp32,
+            KernelKind::Fp8ToFp32,
+            KernelKind::Mx(p.fmt),
+            KernelKind::VMx(p.fmt, 4),
+        ] {
             let cold = run_mm(kind, p, &a, &b, 4);
             let cache = PlanCache::new();
             let mut cluster = Cluster::new(ClusterConfig { num_cores: 4, freq_ghz: 1.0 });
@@ -725,6 +761,8 @@ mod tests {
         let (p, a, b) = small();
         let mut kinds = vec![KernelKind::Fp32, KernelKind::Fp8ToFp32];
         kinds.extend(ElemFormat::ALL.map(KernelKind::Mx));
+        kinds.extend(ElemFormat::ALL.map(|f| KernelKind::VMx(f, 4)));
+        kinds.extend(ElemFormat::ALL.map(|f| KernelKind::VMx(f, 8)));
         for kind in kinds {
             let p = match kind {
                 KernelKind::Mx(fmt) => MmProblem { fmt, ..p },

@@ -82,13 +82,14 @@ fn main() -> Result<()> {
             exec,
             trace_out,
             obs_out,
+            vector_len,
         } => {
             let want_obs = trace_out.is_some() || obs_out.is_some();
             if let Some(policy) = policy {
                 // Policy mode: walk the whole mixed-precision model
                 // graph instead of one GEMM (the --m/k/n flags do not
                 // apply; shapes come from the DeiT-Tiny graph).
-                let cfg = DeitConfig { fmt, ..DeitConfig::default() };
+                let cfg = DeitConfig { fmt, vector_len, ..DeitConfig::default() };
                 let graph = ModelGraph::deit_block(&cfg);
                 if exec != ExecMode::Cycle {
                     // Analytic / sampled executors (DESIGN.md §15):
@@ -160,7 +161,8 @@ fn main() -> Result<()> {
                      {clusters} cluster(s) x {cores} cores (cycle-accurate; \
                      --m/--k/--n are ignored in --policy mode)..."
                 );
-                let run = policy_hw_run(&graph, &policy, clusters, cores, seed, cold_plans);
+                let run =
+                    policy_hw_run(&graph, &policy, clusters, cores, seed, cold_plans, vector_len);
                 println!(
                     "policy {policy} on {clusters} cluster(s): {} wall cycles, \
                      {:.1} GFLOPS over the MX layers, {:.1} µJ, {} MX_FMT CSR switch(es)",
@@ -192,17 +194,24 @@ fn main() -> Result<()> {
                 return Ok(());
             }
             let p = MmProblem { m, k, n, fmt, block_size: 32 };
+            // --vector-len > 1 swaps in the vector kernel (parse-time
+            // validated to only combine with the mx kernel).
+            let kernel = if vector_len > 1 { p.vmx_kernel(vector_len) } else { kernel };
             let mut rng = XorShift::new(seed);
             let a = rng.normal_vec(m * k, 1.0);
             let b = rng.normal_vec(k * n, 1.0);
             if clusters > 1 {
-                if !matches!(kernel, mxdotp::kernels::KernelKind::Mx(_)) {
+                if !matches!(
+                    kernel,
+                    mxdotp::kernels::KernelKind::Mx(_) | mxdotp::kernels::KernelKind::VMx(..)
+                ) {
                     eprintln!("note: --clusters shards the MX hardware kernel; ignoring --kernel");
                 }
                 let scfg = ScaleoutConfig {
                     clusters,
                     cores_per_cluster: cores,
                     cold_plans,
+                    vector_len: vector_len.max(1) as usize,
                     ..ScaleoutConfig::default()
                 };
                 let mut sink = obs::TraceSink::new();
@@ -213,9 +222,11 @@ fn main() -> Result<()> {
                 } else {
                     sharded_mm(&scfg, p, &a, &b)
                 };
+                let vl_note =
+                    if vector_len > 1 { format!(" [vmxdotp VL={vector_len}]") } else { String::new() };
                 println!(
                     "MX({fmt}) {m}x{k}x{n} sharded across {clusters} clusters x {cores} cores \
-                     ({} shards):",
+                     ({} shards){vl_note}:",
                     run.shards
                 );
                 println!(
@@ -247,6 +258,7 @@ fn main() -> Result<()> {
                 if want_obs {
                     let primary = |c: &mxdotp::snitch::fpu::FpuCounters| match run.kind {
                         mxdotp::kernels::KernelKind::Mx(_) => c.mxdotp,
+                        mxdotp::kernels::KernelKind::VMx(..) => c.vmxdotp,
                         mxdotp::kernels::KernelKind::Fp32 => c.vfmac,
                         mxdotp::kernels::KernelKind::Fp8ToFp32 => c.fma_s,
                     };
@@ -259,7 +271,18 @@ fn main() -> Result<()> {
                 }
             }
         }
-        Command::Reproduce { what, cores, clusters, fmt, cold_plans, policy, exec, trace_out, obs_out } => {
+        Command::Reproduce {
+            what,
+            cores,
+            clusters,
+            fmt,
+            cold_plans,
+            policy,
+            exec,
+            trace_out,
+            obs_out,
+            vector_len,
+        } => {
             if what == "fig3" || what == "all" {
                 println!("{}", report::render_fig3());
             }
@@ -276,7 +299,7 @@ fn main() -> Result<()> {
                 println!("{}", report::render_format_sweep(&points, cores));
             }
             if what == "serving" || what == "all" {
-                let model = DeitConfig { fmt, ..DeitConfig::default() };
+                let model = DeitConfig { fmt, vector_len, ..DeitConfig::default() };
                 // Canonical two-format mix: the requested format plus
                 // the fastest OCP format (MXFP4) — or MXFP8 when FP4
                 // itself was requested — so per-format throughput
@@ -298,6 +321,7 @@ fn main() -> Result<()> {
                     let eff = if clusters > 1 {
                         let scfg = ScaleoutConfig {
                             cold_plans,
+                            vector_len: vector_len.max(1) as usize,
                             ..ScaleoutConfig::with_clusters(clusters)
                         };
                         measure_parallel_efficiency(&scfg, 2)
@@ -374,7 +398,7 @@ fn main() -> Result<()> {
                 }
             }
             if what == "pareto" || what == "all" {
-                let cfg = DeitConfig { fmt, ..DeitConfig::default() };
+                let cfg = DeitConfig { fmt, vector_len, ..DeitConfig::default() };
                 let mut pols = report::pareto_presets();
                 if let Some(p) = policy {
                     if !pols.iter().any(|(_, q)| *q == p) {
@@ -390,7 +414,7 @@ fn main() -> Result<()> {
                 println!("{}", report::render_pareto(&pts, &cfg, clusters));
             }
             if what == "scaling" || what == "all" {
-                let cfg = DeitConfig { fmt, ..DeitConfig::default() };
+                let cfg = DeitConfig { fmt, vector_len, ..DeitConfig::default() };
                 // The standard sweep points below the requested fabric
                 // size, plus the requested size itself (so e.g.
                 // --clusters 6 or 16 gets its own row).
@@ -412,7 +436,7 @@ fn main() -> Result<()> {
                 // artifacts capture one canonical serving run at the
                 // same --fmt/--clusters operating point (serving
                 // exercises the whole stack, queue to kernel).
-                let model = DeitConfig { fmt, ..DeitConfig::default() };
+                let model = DeitConfig { fmt, vector_len, ..DeitConfig::default() };
                 let scfg = ServeConfig {
                     model,
                     clusters,
@@ -457,8 +481,9 @@ fn main() -> Result<()> {
             exec,
             trace_out,
             obs_out,
+            vector_len,
         } => {
-            let model = DeitConfig { fmt, ..DeitConfig::default() };
+            let model = DeitConfig { fmt, vector_len, ..DeitConfig::default() };
             // Calibrate at the mix's dominant format; the analytic
             // model scales the other formats by lane width. The pure
             // analytic executor skips even this one cycle run; sampled
@@ -501,7 +526,11 @@ fn main() -> Result<()> {
             };
             let cpf = scfg.clusters_per_fabric();
             if cpf > 1 && exec != ExecMode::Analytic {
-                let probe = ScaleoutConfig { cold_plans, ..ScaleoutConfig::with_clusters(cpf) };
+                let probe = ScaleoutConfig {
+                    cold_plans,
+                    vector_len: vector_len.max(1) as usize,
+                    ..ScaleoutConfig::with_clusters(cpf)
+                };
                 let e = measure_parallel_efficiency(&probe, 2);
                 println!(
                     "  measured {cpf}-cluster fabric parallel efficiency: {:.1} %",

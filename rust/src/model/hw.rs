@@ -112,7 +112,9 @@ impl PolicyHwRun {
 /// the cycle-accurate scale-out engine with deterministic per-layer
 /// operands derived from `seed`. Results (cycles, energy, outputs) are
 /// a pure function of the arguments; `cold_plans` bypasses the warm
-/// plan cache without changing any simulated number.
+/// plan cache without changing any simulated number, and `vector_len`
+/// (1/2/4/8) selects the scalar `mxdotp` or vector `vmxdotp` kernel
+/// fabric-wide — bit-identical outputs, different cycles.
 pub fn policy_hw_run(
     graph: &ModelGraph,
     policy: &PrecisionPolicy,
@@ -120,10 +122,12 @@ pub fn policy_hw_run(
     cores_per_cluster: usize,
     seed: u64,
     cold_plans: bool,
+    vector_len: u8,
 ) -> PolicyHwRun {
     let scfg = ScaleoutConfig {
         cores_per_cluster,
         cold_plans,
+        vector_len: vector_len.max(1) as usize,
         ..ScaleoutConfig::with_clusters(clusters)
     };
     let mut layers = Vec::new();
@@ -190,11 +194,11 @@ mod tests {
         let graph = ModelGraph::deit_block(&cfg);
         let fp8 = PrecisionPolicy::preset("all-fp8").unwrap();
         let ffn4 = PrecisionPolicy::preset("fp4-ffn").unwrap();
-        let r8 = policy_hw_run(&graph, &fp8, 1, 2, 7, false);
+        let r8 = policy_hw_run(&graph, &fp8, 1, 2, 7, false, 1);
         // qkv/proj/fc1/fc2 all e4m3: one initial CSR program
         assert_eq!(r8.csr_switches, 1);
         assert_eq!(r8.layers.len(), 4);
-        let r4 = policy_hw_run(&graph, &ffn4, 1, 2, 7, false);
+        let r4 = policy_hw_run(&graph, &ffn4, 1, 2, 7, false, 1);
         // e4m3 (qkv, proj) -> e2m1 (fc1, fc2): one transition
         assert_eq!(r4.csr_switches, 2);
         assert_eq!(r4.flops, r8.flops, "presets quantize the same layer set");

@@ -464,7 +464,11 @@ pub fn scaleout_scaling(
     let layers = cfg.mx_matmuls();
     let mut points: Vec<ScalingPoint> = Vec::with_capacity(clusters_list.len());
     for &clusters in clusters_list {
-        let scfg = ScaleoutConfig { cold_plans, ..ScaleoutConfig::with_clusters(clusters) };
+        let scfg = ScaleoutConfig {
+            cold_plans,
+            vector_len: cfg.vector_len.max(1) as usize,
+            ..ScaleoutConfig::with_clusters(clusters)
+        };
         let mut wall = 0u64;
         let mut total = 0u64;
         let mut energy = 0.0f64;
@@ -782,7 +786,15 @@ pub fn pareto_sweep(
                 let den: f64 = r.iter().map(|&v| (v as f64).powi(2)).sum();
                 err_sum += (num / den).sqrt();
             }
-            let hw = policy_hw_run(&graph, policy, clusters, num_cores, seed, cold_plans);
+            let hw = policy_hw_run(
+                &graph,
+                policy,
+                clusters,
+                num_cores,
+                seed,
+                cold_plans,
+                cfg.vector_len,
+            );
             ParetoPoint {
                 name: name.clone(),
                 policy: *policy,
@@ -857,7 +869,7 @@ pub fn render_pareto(points: &[ParetoPoint], cfg: &DeitConfig, clusters: usize) 
 /// Summarize an MmRun for CLI output.
 pub fn render_run(run: &MmRun) -> String {
     let em = EnergyModel;
-    let with_mx = matches!(run.kind, KernelKind::Mx(_));
+    let with_mx = matches!(run.kind, KernelKind::Mx(_) | KernelKind::VMx(..));
     let power = em.power(&run.perf, run.freq_ghz, with_mx);
     format!(
         "{} {}x{}x{} ({} cores): {} cycles, {:.1} GFLOPS ({:.1} % of ideal), {:.1} mW, {:.1} GFLOPS/W",
@@ -888,6 +900,7 @@ pub fn render_obs_note(path: &str) -> String {
 pub fn render_run_detailed(run: &MmRun) -> String {
     let bd = crate::snitch::trace::CycleBreakdown::from_perf(&run.perf, |c| match run.kind {
         KernelKind::Mx(_) => c.mxdotp,
+        KernelKind::VMx(..) => c.vmxdotp,
         KernelKind::Fp32 => c.vfmac,
         KernelKind::Fp8ToFp32 => c.fma_s,
     });

@@ -34,10 +34,10 @@
 
 use super::partition::Shard;
 use crate::energy::EnergyModel;
-use crate::kernels::layout::mx_staged_footprint;
+use crate::kernels::layout::{mx_staged_footprint, vmx_staged_footprint};
 use crate::kernels::plan::{fingerprint, MmOperands, PlanCache, PlanKey};
 use crate::kernels::reference::quantize_a;
-use crate::kernels::{KernelKind, MmProblem, MmRun};
+use crate::kernels::{MmProblem, MmRun};
 use crate::snitch::cluster::{Cluster, ClusterConfig, PerfCounters};
 use crate::snitch::SPM_BYTES;
 
@@ -54,6 +54,11 @@ pub struct ClusterEngine {
     pub max_tile_m: usize,
     /// Per-pass column bound (see `max_tile_m`).
     pub max_tile_n: usize,
+    /// MX blocks per dot-product instruction: 1 runs every pass on the
+    /// scalar `mxdotp` kernel, 2/4/8 on the vector `vmxdotp` kernel at
+    /// that VL (bit-identical results — the vector unit chains the
+    /// scalar datapath — only cycles change).
+    pub vector_len: usize,
 }
 
 /// A shard plus borrowed views of the padded operands.
@@ -99,7 +104,12 @@ impl ClusterEngine {
     /// [`mx_staged_footprint`], so the planner can never accept a tile
     /// the stager would reject.
     fn tile_footprint(&self, m: usize, k: usize, n: usize, template: MmProblem) -> usize {
-        mx_staged_footprint(&MmProblem { m, k, n, ..template }, self.cores)
+        let sub = MmProblem { m, k, n, ..template };
+        if self.vector_len > 1 {
+            vmx_staged_footprint(&sub, self.vector_len)
+        } else {
+            mx_staged_footprint(&sub, self.cores)
+        }
     }
 
     /// Pick the per-pass tile: the widest column tile ≤ `max_tile_n`
@@ -198,7 +208,7 @@ impl ClusterEngine {
             for col in &cols {
                 let sub =
                     MmProblem { m: mpad, k: kc, n: col.w8, fmt: p.fmt, block_size: p.block_size };
-                let key = PlanKey::new(KernelKind::Mx(p.fmt), &sub, self.cores);
+                let key = PlanKey::new(sub.vmx_kernel(self.vector_len as u8), &sub, self.cores);
                 let run: MmRun = match cache.pass(&key, afp, col.bfp) {
                     Some(hit) => hit.to_run(&key, self.freq_ghz),
                     None => {
@@ -241,7 +251,14 @@ mod tests {
     use crate::snitch::NUM_CORES;
 
     fn engine() -> ClusterEngine {
-        ClusterEngine { id: 0, cores: NUM_CORES, freq_ghz: 1.0, max_tile_m: 64, max_tile_n: 64 }
+        ClusterEngine {
+            id: 0,
+            cores: NUM_CORES,
+            freq_ghz: 1.0,
+            max_tile_m: 64,
+            max_tile_n: 64,
+            vector_len: 1,
+        }
     }
 
     #[test]
@@ -296,6 +313,39 @@ mod tests {
         }
         let st = cache.stats();
         assert_eq!(st.pass_hits as u32, out.passes, "warm rerun must be fully memoized");
+    }
+
+    #[test]
+    fn vector_shard_is_bit_identical_to_scalar_shard_and_faster() {
+        // VL=8 on a K that fills whole vector groups (kb = 8): the
+        // vector engine must reproduce the scalar engine's C
+        // bit-for-bit (same ascending-block accumulation chain) while
+        // spending fewer simulated cycles per shard.
+        let p = MmProblem { m: 13, k: 256, n: 24, fmt: ElemFormat::E4M3, block_size: 32 };
+        let mut rng = XorShift::new(0x7EC7);
+        let a = rng.normal_vec(p.m * p.k, 1.0);
+        let b = rng.normal_vec(p.k * p.n, 0.5);
+        let shard = crate::scaleout::Shard { id: 0, rows: 0..p.m, k_chunk: 0, k_range: 0..p.k };
+        let job = ShardJob { shard: &shard, problem: p, a: &a, b: &b };
+        let mut se = engine();
+        se.max_tile_m = 8;
+        se.max_tile_n = 8;
+        let mut ve = se;
+        ve.vector_len = 8;
+        let scalar = se.run_shard(&job, &mut se.new_cluster(), &PlanCache::new());
+        let vector = ve.run_shard(&job, &mut ve.new_cluster(), &PlanCache::new());
+        let want = mx_hw_ref(&p, &a, &b);
+        for (i, (got, w)) in vector.c.iter().zip(&want).enumerate() {
+            assert_eq!(got.to_bits(), w.to_bits(), "C[{i}]: {got} vs {w}");
+        }
+        assert_eq!(scalar.perf.vmxdotp_total(), 0, "scalar engine issued vmxdotp");
+        assert!(vector.perf.vmxdotp_total() > 0, "vector engine never issued vmxdotp");
+        assert!(
+            vector.perf.cycles < scalar.perf.cycles,
+            "VL=8 shard not faster: {} vs {} cycles",
+            vector.perf.cycles,
+            scalar.perf.cycles
+        );
     }
 
     #[test]

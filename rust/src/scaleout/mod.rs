@@ -64,6 +64,12 @@ pub struct ScaleoutConfig {
     /// hoisting still applies). Results are bit-identical either way;
     /// only host wall-clock changes.
     pub cold_plans: bool,
+    /// MX blocks consumed per dot-product instruction on every core:
+    /// 1 selects the scalar `mxdotp` kernel, 2/4/8 the vector
+    /// `vmxdotp` kernel at that VL. Results are bit-identical across
+    /// all values (the vector unit chains the scalar datapath in
+    /// ascending block order); only cycles change.
+    pub vector_len: usize,
 }
 
 impl Default for ScaleoutConfig {
@@ -76,6 +82,7 @@ impl Default for ScaleoutConfig {
             max_tile_m: 64,
             max_tile_n: 64,
             cold_plans: false,
+            vector_len: 1,
         }
     }
 }
@@ -258,6 +265,7 @@ fn sharded_mm_on_lease(
             max_tile_m: cfg.max_tile_m,
             max_tile_n: cfg.max_tile_n,
             freq_bits: cfg.freq_ghz.to_bits(),
+            vl: cfg.vector_len as u8,
             first_cluster: lease.first_cluster,
             a_fp: crate::kernels::plan::fingerprint(a),
             b_fp: crate::kernels::plan::fingerprint(b),
@@ -285,6 +293,7 @@ fn sharded_mm_on_lease(
         freq_ghz: cfg.freq_ghz,
         max_tile_m: cfg.max_tile_m,
         max_tile_n: cfg.max_tile_n,
+        vector_len: cfg.vector_len,
     };
     let n_shards = jobs.len();
     let (mut outputs, stats) = pool.execute_leased_traced(jobs, cache, lease, sink);

@@ -77,6 +77,9 @@ pub struct ClusterPool {
     pub max_tile_m: usize,
     /// Per-pass tile bound: columns of C staged at once.
     pub max_tile_n: usize,
+    /// MX blocks per dot-product instruction (1 = scalar `mxdotp`,
+    /// 2/4/8 = vector `vmxdotp` at that VL).
+    pub vector_len: usize,
 }
 
 /// Per-cluster roll-up after a pool run. Assignment is the
@@ -180,6 +183,7 @@ impl ClusterPool {
                     freq_ghz: self.freq_ghz,
                     max_tile_m: self.max_tile_m,
                     max_tile_n: self.max_tile_n,
+                    vector_len: self.vector_len,
                 };
                 handles.push(s.spawn(move || {
                     // One persistent cluster per worker for its whole
@@ -263,6 +267,7 @@ mod tests {
             freq_ghz: 1.0,
             max_tile_m: 64,
             max_tile_n: 64,
+            vector_len: 1,
         }
     }
 

@@ -266,6 +266,10 @@ pub struct CostModel {
     /// Strong-scaling efficiency applied to multi-cluster fabrics
     /// (1.0 for single-cluster fabrics).
     eff: f64,
+    /// Fabric-wide VL ([`DeitConfig::vector_len`]): the per-format
+    /// `svc` table already prices it (built from the vector-aware
+    /// analytic model), and mixed-policy costing bills it per group.
+    vector_len: u8,
     /// Per-layer-class MX FLOPs (`workload::layer_flops_table`),
     /// precomputed so per-arrival policy costing allocates nothing.
     layer_flops: [u64; 6],
@@ -304,6 +308,7 @@ impl CostModel {
             cores_per_cluster: cfg.cores_per_cluster,
             util: cfg.util,
             eff,
+            vector_len: cfg.model.vector_len,
             layer_flops: layer_flops_table(&cfg.model),
             layer_welems: LayerClass::ALL.map(|c| cfg.model.layer_weight_elems(c)),
         }
@@ -329,6 +334,7 @@ impl CostModel {
             policy,
             self.cores_per_cluster,
             self.util,
+            self.vector_len,
         );
         let wall = if self.clusters_per_fabric > 1 {
             ((serial as f64) / (self.clusters_per_fabric as f64 * self.eff)).ceil() as u64
@@ -630,6 +636,7 @@ pub fn probe_fabrics(cfg: &ServeConfig, fmt: ElemFormat) -> Vec<(FabricLease, f6
     let scfg = crate::scaleout::ScaleoutConfig {
         clusters: cpf,
         cores_per_cluster: cfg.cores_per_cluster,
+        vector_len: cfg.model.vector_len.max(1) as usize,
         ..crate::scaleout::ScaleoutConfig::default()
     };
     cfg.fabric_leases()
@@ -784,9 +791,16 @@ pub fn spot_check_policy(
 ) -> (u64, u64) {
     let rcfg = DeitConfig { seq: model.seq.min(SPOT_CHECK_SEQ), ..*model };
     let graph = crate::model::ModelGraph::deit_block(&rcfg);
-    let measured =
-        crate::model::policy_hw_run(&graph, policy, 1, cores_per_cluster, seed, false)
-            .wall_cycles;
+    let measured = crate::model::policy_hw_run(
+        &graph,
+        policy,
+        1,
+        cores_per_cluster,
+        seed,
+        false,
+        rcfg.vector_len,
+    )
+    .wall_cycles;
     let analytic =
         crate::workload::analytic_policy_cycles(&rcfg, policy, cores_per_cluster, util);
     (measured, analytic)

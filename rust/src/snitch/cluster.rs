@@ -85,6 +85,11 @@ impl PerfCounters {
         self.fpu.iter().map(|f| f.mxdotp).sum()
     }
 
+    /// Total `vmxdotp` (vector group) instructions across the cluster.
+    pub fn vmxdotp_total(&self) -> u64 {
+        self.fpu.iter().map(|f| f.vmxdotp).sum()
+    }
+
     /// Total FP instructions issued.
     pub fn fp_issued_total(&self) -> u64 {
         self.fpu.iter().map(|f| f.issued).sum()
@@ -135,6 +140,7 @@ impl PerfCounters {
         for (d, s) in self.fpu.iter_mut().zip(&other.fpu) {
             d.issued += s.issued;
             d.mxdotp += s.mxdotp;
+            d.vmxdotp += s.vmxdotp;
             d.vfmac += s.vfmac;
             d.cvt += s.cvt;
             d.mem_ops += s.mem_ops;
@@ -145,6 +151,7 @@ impl PerfCounters {
             d.stall_hazard += s.stall_hazard;
             d.stall_ssr += s.stall_ssr;
             d.stall_mem += s.stall_mem;
+            d.stall_vbusy += s.stall_vbusy;
             d.idle += s.idle;
         }
     }
@@ -256,13 +263,11 @@ impl Cluster {
         let was_granted = |rid: usize| rid < 64 && mask & (1 << rid) != 0;
         // --- phase 3: commit ---------------------------------------------
         for (ci, core) in self.cores.iter_mut().enumerate() {
-            // SSR grants: latch data.
+            // SSR grants: latch data (`width` consecutive words per
+            // grant through the wide port — 1 for the scalar paper).
             for (si, ssr) in core.fpu.ssrs.iter_mut().enumerate() {
-                if was_granted(ssr_id(ci, si)) {
-                    if let Some(addr) = ssr.fetch_request() {
-                        let data = self.spm.read_u64(addr & !7);
-                        ssr.grant(data);
-                    }
+                if was_granted(ssr_id(ci, si)) && ssr.fetch_request().is_some() {
+                    ssr.grant_burst(|a| self.spm.read_u64(a));
                 }
             }
             let lsu_granted = was_granted(lsu_id(ci));
@@ -286,23 +291,31 @@ impl Cluster {
     /// returns `false` without touching any state when it fails:
     ///
     /// * the DMA queue is empty (its `step` is a no-op, safely skipped);
-    /// * every core's FP side is either replaying an mxdotp-only,
-    ///   SSR-fed FREP body or fully drained
-    ///   ([`FpSubsystem::fast_issue_class`]);
+    /// * every core's FP side is either replaying an mxdotp-only /
+    ///   vmxdotp-only, SSR-fed FREP body, capturing (architecturally
+    ///   idle), or fully drained ([`FpSubsystem::fast_issue_class`]);
     /// * every core's scalar side is provably frozen — halted, in a
     ///   branch bubble, or blocked on the FP handoff / FREP launch /
-    ///   fence with a known stall counter
-    ///   ([`Core::fast_scalar_freeze`]).
+    ///   fence with a known stall counter — or provably **port-free**:
+    ///   its next instruction touches no SPM port (affine pointer
+    ///   arithmetic, `Scfg` stream re-arms, CSR writes, branches, FP
+    ///   handoffs, FREP launches), in which case the slim cycle runs
+    ///   the real [`Core::step`] for it ([`Freeze::Advance`]). This is
+    ///   the widened window: the fast path stays engaged across the
+    ///   SSR refill boundaries between FREP bodies instead of falling
+    ///   back to the generic loop for every stream re-arm burst.
     ///
-    /// Under those proofs no LSU can request memory (mxdotp heads and
-    /// drained pipes have no `pending_mem_addr`; frozen scalar sides
-    /// sit on non-memory instructions), so the fast cycle runs only the
-    /// SSR prefetch requests through the *real* arbiter (round-robin
-    /// pointers, grant/conflict counters and FIFO dynamics evolve
-    /// exactly as in the generic path), issues via
-    /// [`FpSubsystem::fast_mxdotp_issue`], charges the frozen-scalar
-    /// stall counters, and ticks the FIFOs — skipping instruction
-    /// decode, LSU arbitration, DMA stepping and trace bookkeeping.
+    /// Under those proofs no LSU can request memory (dot-product heads,
+    /// capturing windows and drained pipes have no `pending_mem_addr`;
+    /// frozen or port-free scalar sides issue no LSU address), so the
+    /// fast cycle runs only the SSR prefetch requests through the
+    /// *real* arbiter (round-robin pointers, grant/conflict counters
+    /// and FIFO dynamics evolve exactly as in the generic path), issues
+    /// via [`FpSubsystem::fast_mxdotp_issue`], charges the
+    /// frozen-scalar stall counters or steps the port-free scalar
+    /// sides, and ticks the FIFOs — skipping LSU request collection,
+    /// DMA stepping and trace bookkeeping. Scalar loads/stores and
+    /// DMA-active windows still take the generic path.
     ///
     /// [`FpSubsystem::fast_issue_class`]: super::fpu::FpSubsystem
     /// [`FpSubsystem::fast_mxdotp_issue`]: super::fpu::FpSubsystem
@@ -340,11 +353,8 @@ impl Cluster {
         // --- phase 3: grants + issue + frozen-scalar accounting ----------
         for (ci, core) in self.cores.iter_mut().enumerate() {
             for (si, ssr) in core.fpu.ssrs.iter_mut().enumerate() {
-                if was_granted(ssr_id(ci, si)) {
-                    if let Some(addr) = ssr.fetch_request() {
-                        let data = self.spm.read_u64(addr & !7);
-                        ssr.grant(data);
-                    }
+                if was_granted(ssr_id(ci, si)) && ssr.fetch_request().is_some() {
+                    ssr.grant_burst(|a| self.spm.read_u64(a));
                 }
             }
             core.fpu.fast_mxdotp_issue(now);
@@ -352,6 +362,12 @@ impl Cluster {
                 Freeze::Quiet => {}
                 Freeze::FpQueue => core.counters.stall_fp_queue += 1,
                 Freeze::Fence => core.counters.stall_fence += 1,
+                // Port-free progress: the real scalar step, at exactly
+                // the generic path's phase-3 position (after this
+                // core's SSR grants and FP issue). `int_mem_granted`
+                // is vacuously false — the admitted classes never
+                // check it.
+                Freeze::Advance => core.step(now, &mut self.spm, false),
             }
         }
         // --- phase 4 (DMA idle by precondition) --------------------------

@@ -57,8 +57,10 @@ fn predecode(i: &Instr) -> Decoded {
     }
 }
 
-/// Why a core's scalar side is provably frozen for one fast cycle, and
-/// which stall counter the generic path would have charged.
+/// What a core's scalar side provably does during one fast cycle:
+/// frozen (only a known stall counter moves) or advancing through an
+/// instruction with no SPM-port interaction (safe to run through the
+/// generic [`Core::step`] inside the slim cycle).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub(crate) enum Freeze {
     /// Halted or inside a branch bubble: no counter moves.
@@ -67,6 +69,15 @@ pub(crate) enum Freeze {
     FpQueue,
     /// FP fence with the subsystem busy: `stall_fence` ticks.
     Fence,
+    /// The scalar side executes a non-memory instruction this cycle
+    /// (affine pointer arithmetic, an SSR re-arm `Scfg`, a CSR write, a
+    /// branch, an FP handoff with queue room, a launchable FREP, a
+    /// passing fence, halt). None of these request an SPM port, so the
+    /// fast cycle runs the *real* [`Core::step`] for them — bit- and
+    /// counter-exact by construction. This is what keeps the
+    /// fast-forward window open across SSR refill boundaries between
+    /// FREP bodies (the stream re-arm bursts are exactly this class).
+    Advance,
 }
 
 /// Integer-side perf counters.
@@ -193,26 +204,54 @@ impl Core {
     }
 
     /// Fast-path classification of the scalar side for one cluster
-    /// fast cycle: is this front-end provably frozen this cycle (no
-    /// state change besides one stall counter), and which counter does
-    /// the generic `step` charge? `None` means the scalar side would
-    /// make progress — the cycle must take the generic path.
+    /// fast cycle: provably frozen (which stall counter does the
+    /// generic `step` charge?), or provably port-free progress
+    /// ([`Freeze::Advance`]: the instruction touches no SPM port, so
+    /// the slim cycle executes it through the real [`Core::step`]).
+    /// `None` means the scalar side would touch memory — the cycle
+    /// must take the generic path (LSU request collection and
+    /// arbitration).
     pub(crate) fn fast_scalar_freeze(&self, now: u64) -> Option<Freeze> {
         if self.halted || now < self.stall_until {
             return Some(Freeze::Quiet);
         }
-        // pc past the end: `step` would latch `halted` — a mutation,
-        // so not freeze-eligible (the `?` falls through to None).
-        match self.decoded.get(self.pc)?.class {
-            DecodedClass::Fp => (!self.fpu.can_push()).then_some(Freeze::FpQueue),
+        let Some(d) = self.decoded.get(self.pc) else {
+            // pc past the end: `step` latches `halted` — a pure
+            // register-side mutation, safe on the slim path.
+            return Some(Freeze::Advance);
+        };
+        match d.class {
+            DecodedClass::Fp => {
+                if self.fpu.can_push() {
+                    // Handoff proceeds (queue push or FREP capture):
+                    // no memory access at handoff time (LSU addresses
+                    // are latched, the access happens at FP issue).
+                    Some(Freeze::Advance)
+                } else {
+                    Some(Freeze::FpQueue)
+                }
+            }
             DecodedClass::Frep => {
                 // start_frep fails (charging stall_fp_queue) iff the
-                // sequencer is occupied or the queue is non-empty.
-                (self.fpu.frep_active() || !self.fpu.queue_is_empty())
-                    .then_some(Freeze::FpQueue)
+                // sequencer is occupied or the queue is non-empty;
+                // otherwise the launch itself is port-free.
+                if self.fpu.frep_active() || !self.fpu.queue_is_empty() {
+                    Some(Freeze::FpQueue)
+                } else {
+                    Some(Freeze::Advance)
+                }
             }
-            DecodedClass::Fence => self.fpu.busy(now).then_some(Freeze::Fence),
-            DecodedClass::Other => None,
+            DecodedClass::Fence => {
+                if self.fpu.busy(now) {
+                    Some(Freeze::Fence)
+                } else {
+                    Some(Freeze::Advance)
+                }
+            }
+            // Affine pointer math, Scfg stream re-arms, CSR writes,
+            // branches, halt: port-free, run for real. Scalar
+            // loads/stores need the LSU arbiter — generic path.
+            DecodedClass::Other => d.mem.is_none().then_some(Freeze::Advance),
         }
     }
 
@@ -349,6 +388,7 @@ impl Core {
                     match c {
                         csr::SSR_ENABLE => self.fpu.ssr_enabled = v != 0,
                         csr::MX_FMT => self.fpu.set_format(ElemFormat::from_csr(v)),
+                        csr::VECTOR_LEN => self.fpu.set_vector_len(v as u64),
                         _ => {}
                     }
                     self.retire(now, false);
@@ -368,6 +408,15 @@ impl Core {
                         SsrField::Bound(d) => sh.bounds[d as usize] = v as u32,
                         SsrField::Stride(d) => sh.strides[d as usize] = v,
                         SsrField::Rep => sh.rep = v as u32,
+                        // Port geometry is runtime (not stream) state:
+                        // it survives re-arms, so it writes through to
+                        // the SSR directly rather than via the shadow.
+                        SsrField::Width => {
+                            self.fpu.ssrs[ssr as usize].width = (v.max(1)) as usize
+                        }
+                        SsrField::Depth => {
+                            self.fpu.ssrs[ssr as usize].depth = (v.max(1)) as usize
+                        }
                     }
                     self.retire(now, false);
                 }

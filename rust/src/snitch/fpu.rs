@@ -40,10 +40,15 @@ pub(crate) fn trace_enabled() -> bool {
     *TRACE
 }
 
-/// Latency table.
+/// Latency table. `vmxdotp`'s entry is the nominal pipeline depth; its
+/// actual writeback (`block_words + 2`) depends on the vector CSR and
+/// is computed at issue time.
 pub fn latency(i: &FpInstr) -> u64 {
     match i {
-        FpInstr::Mxdotp { .. } | FpInstr::VfmacS { .. } | FpInstr::FmaddS { .. } => 3,
+        FpInstr::Mxdotp { .. }
+        | FpInstr::Vmxdotp { .. }
+        | FpInstr::VfmacS { .. }
+        | FpInstr::FmaddS { .. } => 3,
         FpInstr::FaddS { .. }
         | FpInstr::FmulS { .. }
         | FpInstr::FcvtSB { .. }
@@ -76,6 +81,9 @@ pub enum Stall {
     SsrEmpty,
     /// Memory port not granted.
     Mem,
+    /// The vector unit is mid-group (a `vmxdotp` occupies the shared
+    /// datapath for `block_words` cycles per issue).
+    VecBusy,
     /// Issued an instruction.
     Issued,
 }
@@ -92,7 +100,8 @@ struct FrepState {
     pos: usize,
     /// Memoized fast-path shape of the captured body: 0 = not yet
     /// classified, 1 = every op is an SSR-fed `mxdotp` with a
-    /// non-stream accumulator, 2 = anything else. The buffer is
+    /// non-stream accumulator, 3 = every op is an SSR-fed `vmxdotp`
+    /// with a non-stream accumulator, 2 = anything else. The buffer is
     /// immutable once `capture_left` hits 0, so the scan runs once per
     /// FREP window instead of once per replay cycle.
     fast_shape: u8,
@@ -103,8 +112,13 @@ struct FrepState {
 pub struct FpuCounters {
     /// FP instructions issued.
     pub issued: u64,
-    /// `mxdotp` issues.
+    /// `mxdotp` issue-equivalents: scalar issues count 1, each
+    /// `vmxdotp` counts its `vl · block_words` lane-group slots, so
+    /// FLOP accounting (`2 · lanes · mxdotp`) stays format-exact across
+    /// both datapaths.
     pub mxdotp: u64,
+    /// `vmxdotp` (vector) instructions issued.
+    pub vmxdotp: u64,
     /// SIMD FMA issues.
     pub vfmac: u64,
     /// Convert issues.
@@ -125,6 +139,8 @@ pub struct FpuCounters {
     pub stall_ssr: u64,
     /// Cycles stalled on memory.
     pub stall_mem: u64,
+    /// Cycles stalled on the busy vector unit (mid-group `vmxdotp`).
+    pub stall_vbusy: u64,
     /// Cycles with nothing to issue.
     pub idle: u64,
 }
@@ -145,9 +161,23 @@ pub struct FpSubsystem {
     pub ssr_enabled: bool,
     /// The MXDOTP functional unit.
     pub unit: MxDotpUnit,
+    /// Vector length in MX blocks per `vmxdotp` (low byte of the
+    /// `VECTOR_LEN` CSR; reset value 1).
+    pub vl: u8,
+    /// 64-bit element words per MX block for `vmxdotp` (high byte of
+    /// the `VECTOR_LEN` CSR; reset value 4 = the spec's 32-element
+    /// block at 8 byte lanes).
+    pub vblock_words: u8,
+    /// First cycle at which the vector unit can accept another issue (a
+    /// `vmxdotp` occupies the shared datapath `block_words` cycles).
+    vbusy_until: u64,
     /// Perf counters.
     pub counters: FpuCounters,
 }
+
+/// Largest `vmxdotp` operand group in 64-bit words: one scale-header
+/// word + VL(≤8) · block_words(≤8, the 64-element block at 8 lanes).
+pub const MAX_GROUP_WORDS: usize = 1 + 8 * 8;
 
 impl Default for FpSubsystem {
     fn default() -> Self {
@@ -167,6 +197,9 @@ impl FpSubsystem {
             ssrs: std::array::from_fn(|_| Ssr::default()),
             ssr_enabled: false,
             unit: MxDotpUnit::default(),
+            vl: 1,
+            vblock_words: 4,
+            vbusy_until: 0,
             counters: FpuCounters::default(),
         }
     }
@@ -183,12 +216,31 @@ impl FpSubsystem {
         self.ssrs = std::array::from_fn(|_| Ssr::default());
         self.ssr_enabled = false;
         self.unit = MxDotpUnit::default();
+        self.vl = 1;
+        self.vblock_words = 4;
+        self.vbusy_until = 0;
         self.counters = FpuCounters::default();
     }
 
     /// Write the `MX_FMT` CSR (selects the element format).
     pub fn set_format(&mut self, fmt: ElemFormat) {
         self.unit.set_format(fmt);
+    }
+
+    /// Write the `VECTOR_LEN` CSR: bits 7:0 = VL (MX blocks per
+    /// `vmxdotp`), bits 15:8 = element words per block (0 keeps the
+    /// reset value 4).
+    pub fn set_vector_len(&mut self, v: u64) {
+        let vl = (v & 0xFF) as u8;
+        let bw = ((v >> 8) & 0xFF) as u8;
+        self.vl = vl.max(1);
+        if bw > 0 {
+            self.vblock_words = bw;
+        }
+        debug_assert!(
+            1 + self.vl as usize * self.vblock_words as usize <= MAX_GROUP_WORDS,
+            "vector operand group exceeds the architectural maximum"
+        );
     }
 
     /// Program stream `id` with `cfg`.
@@ -268,7 +320,13 @@ impl FpSubsystem {
             None => self.queue.is_empty().then_some(false),
             Some(f) => {
                 if f.capture_left > 0 {
-                    return None;
+                    // Capture window open: the generic `try_issue`
+                    // peeks nothing issuable and counts an idle cycle,
+                    // so the slim path can cover it (the scalar side
+                    // keeps feeding the buffer via `Freeze::Advance`).
+                    // The queue is empty by `start_frep`'s contract;
+                    // checked anyway so the proof is local.
+                    return self.queue.is_empty().then_some(false);
                 }
                 if f.fast_shape == 0 {
                     let all_mxdotp = !f.buffer.is_empty()
@@ -282,28 +340,62 @@ impl FpSubsystem {
                                         && (fd as usize) >= NUM_SSRS
                             )
                         });
-                    f.fast_shape = if all_mxdotp { 1 } else { 2 };
+                    let all_vmxdotp = !f.buffer.is_empty()
+                        && f.buffer.iter().all(|op| {
+                            matches!(
+                                op.instr,
+                                FpInstr::Vmxdotp { fd, fs1, fs2 }
+                                    if (fs1 as usize) < NUM_SSRS
+                                        && (fs2 as usize) < NUM_SSRS
+                                        && (fd as usize) >= NUM_SSRS
+                            )
+                        });
+                    f.fast_shape = if all_mxdotp {
+                        1
+                    } else if all_vmxdotp {
+                        3
+                    } else {
+                        2
+                    };
                 }
                 // `ssr_enabled` can flip on a generic cycle while the
                 // sequencer replays (pseudo dual-issue), so it is
                 // re-checked per cycle rather than memoized.
-                (f.fast_shape == 1 && self.ssr_enabled).then_some(true)
+                ((f.fast_shape == 1 || f.fast_shape == 3) && self.ssr_enabled).then_some(true)
             }
         }
     }
 
-    /// Fast-cycle twin of [`FpSubsystem::try_issue`] for the two states
+    /// Fast-cycle twin of [`FpSubsystem::try_issue`] for the states
     /// admitted by [`FpSubsystem::fast_issue_class`]: a drained pipe
-    /// (count one idle cycle) or a replaying mxdotp-only FREP body
-    /// (stall charging, operand pops, the exact datapath execution, the
-    /// scoreboard update and the replay advance are replicated
-    /// verbatim, minus the per-op decode dispatch and trace hook).
+    /// (count one idle cycle) or a replaying mxdotp-only / vmxdotp-only
+    /// FREP body (stall charging, operand pops, the exact datapath
+    /// execution, the scoreboard update and the replay advance are
+    /// replicated verbatim, minus the per-op decode dispatch and trace
+    /// hook — the vector arm *is* the generic path's issue method).
     pub(crate) fn fast_mxdotp_issue(&mut self, now: u64) {
         let Some(f) = &self.frep else {
             self.counters.idle += 1;
             return;
         };
-        let FpInstr::Mxdotp { fd, fs1, fs2, fs3, sl } = f.buffer[f.pos].instr else {
+        if f.capture_left > 0 {
+            // Still capturing: nothing issuable (generic peek() is
+            // None), architecturally idle — and the vbusy gate below
+            // must NOT fire, exactly as in `try_issue`.
+            self.counters.idle += 1;
+            return;
+        }
+        // Vector-unit occupancy first, exactly as in the generic path.
+        if now < self.vbusy_until {
+            self.counters.stall_vbusy += 1;
+            return;
+        }
+        let instr = f.buffer[f.pos].instr;
+        let FpInstr::Mxdotp { fd, fs1, fs2, fs3, sl } = instr else {
+            if let FpInstr::Vmxdotp { fd, fs1, fs2 } = instr {
+                self.issue_vmxdotp(now, fd, fs1, fs2);
+                return;
+            }
             unreachable!("fast_mxdotp_issue on a non-mxdotp FREP body");
         };
         // SSR availability first (same order and charging as the
@@ -336,6 +428,66 @@ impl FpSubsystem {
         self.advance();
     }
 
+    /// Issue one `vmxdotp` (shared verbatim by [`FpSubsystem::try_issue`]
+    /// and the cluster fast path, so the two are bit- and
+    /// counter-identical by construction). The issue is atomic over the
+    /// whole operand group: both streams must hold the scale-header word
+    /// plus all `vl · block_words` element words, the group is popped in
+    /// one cycle through the widened FIFOs, the vector unit chains the
+    /// VL blocks through the scalar datapath (ascending block order —
+    /// the fixed reduction tree of DESIGN.md §16), occupies the issue
+    /// port for `block_words` cycles and writes back after
+    /// `block_words + 2`.
+    fn issue_vmxdotp(&mut self, now: u64, fd: FReg, fs1: FReg, fs2: FReg) -> Stall {
+        assert!(
+            self.is_stream(fs1) && self.is_stream(fs2) && !self.is_stream(fd),
+            "vmxdotp operands must be SSR streams and the accumulator must not be"
+        );
+        let vl = self.vl as usize;
+        let bw = self.vblock_words as usize;
+        let group = 1 + vl * bw;
+        // SSR group availability first (same stall class and charging
+        // order as the scalar src loop).
+        for s in [fs1, fs2] {
+            if !self.ssrs[s as usize].can_pop_n(group) {
+                self.counters.stall_ssr += 1;
+                self.ssrs[s as usize].stall_cycles += 1;
+                return Stall::SsrEmpty;
+            }
+        }
+        if !self.reg_ready(fd, now) {
+            self.counters.stall_hazard += 1;
+            return Stall::Hazard;
+        }
+        let mut a = [0u64; MAX_GROUP_WORDS];
+        let mut b = [0u64; MAX_GROUP_WORDS];
+        for w in a.iter_mut().take(group) {
+            *w = self.ssrs[fs1 as usize].pop();
+        }
+        for w in b.iter_mut().take(group) {
+            *w = self.ssrs[fs2 as usize].pop();
+        }
+        let acc = f32::from_bits(self.fregs[fd as usize] as u32);
+        let out =
+            crate::dotp::vunit::execute_group(&mut self.unit, vl, bw, &a[..group], &b[..group], acc);
+        let lat = bw as u64 + 2;
+        self.fregs[fd as usize] = out.to_bits() as u64;
+        self.ready[fd as usize] = now + lat;
+        self.max_ready = self.max_ready.max(now + lat);
+        self.vbusy_until = now + bw as u64;
+        self.counters.mxdotp += (vl * bw) as u64;
+        self.counters.vmxdotp += 1;
+        self.counters.issued += 1;
+        if trace_enabled() {
+            eprintln!(
+                "[fpu @{now}] vmxdotp f{fd} vl={vl} bw={bw} acc={}",
+                f32::from_bits(self.fregs[fd as usize] as u32)
+            );
+        }
+        self.advance();
+        Stall::Issued
+    }
+
     /// FREP still capturing instructions?
     pub fn frep_capturing(&self) -> bool {
         self.frep.as_ref().is_some_and(|f| f.capture_left > 0)
@@ -343,7 +495,10 @@ impl FpSubsystem {
 
     /// Anything still pending (queue, sequencer, or writes in flight)?
     pub fn busy(&self, now: u64) -> bool {
-        !self.queue.is_empty() || self.frep.is_some() || self.max_ready > now
+        !self.queue.is_empty()
+            || self.frep.is_some()
+            || self.max_ready > now
+            || self.vbusy_until > now
     }
 
     /// The memory address the head instruction needs this cycle, if the
@@ -423,6 +578,24 @@ impl FpSubsystem {
             self.counters.idle += 1;
             return Stall::Idle;
         };
+        // Vector-unit occupancy is a structural hazard on the shared
+        // dot-product datapath only: a mid-group `vmxdotp` holds it for
+        // `block_words` cycles, stalling the next `mxdotp`/`vmxdotp`
+        // but leaving the issue port free for stores and moves (which
+        // is what lets the vector kernel hide its epilogue). The
+        // cluster fast path is gated identically: its admitted bodies
+        // consist solely of dot instructions.
+        if matches!(op.instr, FpInstr::Mxdotp { .. } | FpInstr::Vmxdotp { .. })
+            && now < self.vbusy_until
+        {
+            self.counters.stall_vbusy += 1;
+            return Stall::VecBusy;
+        }
+        // The vector instruction has its own atomic group-issue path
+        // (shared with the cluster fast path).
+        if let FpInstr::Vmxdotp { fd, fs1, fs2 } = op.instr {
+            return self.issue_vmxdotp(now, fd, fs1, fs2);
+        }
         // Gather source/dest readiness (fixed-size, allocation-free:
         // this is the hottest line of the whole simulator).
         let mut srcs = [0 as FReg; 4];
@@ -472,6 +645,7 @@ impl FpSubsystem {
                 srcs[3] = fd;
                 (4, Some(fd))
             }
+            FpInstr::Vmxdotp { .. } => unreachable!("vmxdotp dispatched above"),
         };
         let srcs = &srcs[..ns];
         // SSR availability first (distinct stall class).
@@ -642,6 +816,7 @@ impl FpSubsystem {
                 self.max_ready = self.max_ready.max(now + lat);
                 self.counters.mxdotp += 1;
             }
+            FpInstr::Vmxdotp { .. } => unreachable!("vmxdotp dispatched above"),
         }
         self.counters.issued += 1;
         if trace_enabled() {
@@ -780,6 +955,63 @@ mod tests {
         // 4 mxdotp x (8 ones · 8 ones) = 32.
         assert_eq!(fpu.get_f32(12), 32.0);
         assert_eq!(fpu.counters.mxdotp, 4);
+    }
+
+    #[test]
+    fn vmxdotp_through_widened_ssr_streams() {
+        use crate::formats::ElemFormat;
+        let mut fpu = FpSubsystem::new();
+        let mut spm = Spm::new();
+        let one = ElemFormat::E4M3.encode(1.0);
+        // VL=2 blocks of 32 elements (4 words/block): 9-word groups
+        // (header + 8 element words); two groups back to back.
+        let hdr = crate::dotp::vunit::pack_scale_header(&[127, 127]);
+        for g in 0..2usize {
+            let (a0, b0) = (g * 72, 1024 + g * 72);
+            spm.write_u64(a0, hdr);
+            spm.write_u64(b0, hdr);
+            for w in 0..8 {
+                spm.write_u64(a0 + 8 + w * 8, u64::from_le_bytes([one; 8]));
+                spm.write_u64(b0 + 8 + w * 8, u64::from_le_bytes([one; 8]));
+            }
+        }
+        let lin = |base: usize, n: u32| SsrConfig {
+            base,
+            dims: 0,
+            bounds: [n - 1, 0, 0, 0],
+            strides: [8, 0, 0, 0],
+            rep: 0,
+        };
+        for s in 0..2 {
+            fpu.ssrs[s].width = 8;
+            fpu.ssrs[s].depth = 24;
+        }
+        fpu.configure_ssr(0, lin(0, 18));
+        fpu.configure_ssr(1, lin(1024, 18));
+        fpu.ssr_enabled = true;
+        fpu.set_vector_len(2 | (4 << 8));
+        fpu.set_f32(12, 0.0);
+        assert!(fpu.start_frep(1, 1));
+        fpu.push(FpInstr::Vmxdotp { fd: 12, fs1: 0, fs2: 1 }, None);
+        let mut now = 0;
+        while fpu.busy(now) && now < 500 {
+            for s in fpu.ssrs.iter_mut() {
+                if s.fetch_request().is_some() {
+                    s.grant_burst(|a| spm.read_u64(a));
+                }
+            }
+            fpu.try_issue(now, true, &mut spm);
+            fpu.tick();
+            now += 1;
+        }
+        assert!(now < 500, "vector FPU did not drain");
+        // 2 groups × 2 blocks × 32 (1·1) = 128
+        assert_eq!(fpu.get_f32(12), 128.0);
+        assert_eq!(fpu.counters.vmxdotp, 2);
+        // issue-equivalents: 2 groups × vl 2 × 4 words
+        assert_eq!(fpu.counters.mxdotp, 16);
+        // the unit is busy block_words cycles per group
+        assert!(fpu.counters.stall_vbusy > 0);
     }
 
     #[test]

@@ -29,6 +29,10 @@ pub mod csr {
     /// 1 = E5M2, 2 = E3M2, 3 = E2M3, 4 = E2M1, 5 = INT8
     /// (`ElemFormat::csr_code`). The paper's FP8 codes are 0/1.
     pub const MX_FMT: u16 = 0x7C2;
+    /// Vector length for `vmxdotp` in MX blocks per issue (the
+    /// `vl`/`vtype`-style CSR of the VMXDOTP extension, DESIGN.md §16):
+    /// legal values 1/2/4/8. Reset value is 1 (scalar-equivalent).
+    pub const VECTOR_LEN: u16 = 0x7C3;
 }
 
 /// SSR configuration fields (written through `Scfg` writes; the real
@@ -47,6 +51,17 @@ pub enum SsrField {
     /// `rep+1` times (Snitch's repeat register — lets one A-row word
     /// feed all eight unrolled `mxdotp`s).
     Rep,
+    /// Port width in 64-bit words latched per grant (the widened SSR
+    /// of the VMXDOTP extension: one arbiter grant reads `width`
+    /// consecutive words through a wide SPM port). Reset value 1;
+    /// survives stream re-configuration (Base writes).
+    Width,
+    /// Prefetch FIFO capacity in words (deepened to cover a whole
+    /// vector operand group). Reset value [`FIFO_DEPTH`]; survives
+    /// stream re-configuration.
+    ///
+    /// [`FIFO_DEPTH`]: super::ssr::FIFO_DEPTH
+    Depth,
 }
 
 /// Integer-side instructions (executed by the Snitch scalar core).
@@ -141,6 +156,15 @@ pub enum FpInstr {
     /// fs1.byte[i]·fs2.byte[i]; scales selected from fs3 by `sl`
     /// (Table I/II).
     Mxdotp { fd: FReg, fs1: FReg, fs2: FReg, fs3: FReg, sl: u8 },
+    /// Vector MXDOTP (DESIGN.md §16): consume `VL` whole MX blocks per
+    /// issue from the fs1/fs2 operand streams. Each stream delivers one
+    /// scale-header word (byte `l` = E8M0 scale of block `l`) followed
+    /// by the `VL · per_block` packed element words of the group; lane
+    /// `l` accumulates block `l` into a per-lane FP32 partial, and the
+    /// partials are reduced into fd in ascending-lane order (the fixed
+    /// degenerate-left reduction tree — bit-identical to chaining the
+    /// scalar unit). VL comes from the [`csr::VECTOR_LEN`] CSR.
+    Vmxdotp { fd: FReg, fs1: FReg, fs2: FReg },
 }
 
 /// A program instruction: integer-side or FP-side.
@@ -196,6 +220,33 @@ pub fn decode_mxdotp(word: u32) -> Option<FpInstr> {
     })
 }
 
+/// Encode `vmxdotp rd, rs1, rs2` under the shared custom-3 opcode: the
+/// vector variant takes funct3 = 001 (free — `mxdotp` pins funct3 to
+/// 000 and the decoder rejects anything else), needs no fs3/sl because
+/// the per-lane scales ride in the operand streams and VL sits in the
+/// [`csr::VECTOR_LEN`] CSR. Bits 31-25 are reserved-zero.
+pub fn encode_vmxdotp(rd: FReg, rs1: FReg, rs2: FReg) -> u32 {
+    assert!(rd < 32 && rs1 < 32 && rs2 < 32);
+    ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (0b001 << 12)
+        | ((rd as u32) << 7)
+        | MXDOTP_OPCODE
+}
+
+/// Decode a 32-bit word as `vmxdotp`; returns None if the opcode or
+/// funct3 does not match or the reserved bits are set.
+pub fn decode_vmxdotp(word: u32) -> Option<FpInstr> {
+    if word & 0x7F != MXDOTP_OPCODE || (word >> 12) & 0b111 != 0b001 || (word >> 25) != 0 {
+        return None;
+    }
+    Some(FpInstr::Vmxdotp {
+        fd: ((word >> 7) & 0x1F) as FReg,
+        fs1: ((word >> 15) & 0x1F) as FReg,
+        fs2: ((word >> 20) & 0x1F) as FReg,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,6 +281,21 @@ mod tests {
     fn non_mxdotp_words_rejected() {
         assert_eq!(decode_mxdotp(0x0000_0033), None); // add
         assert_eq!(decode_mxdotp(encode_mxdotp(1, 2, 3, 4, 0) | (1 << 12)), None);
+    }
+
+    #[test]
+    fn vmxdotp_encoding_roundtrip_and_disjoint_from_scalar() {
+        for (rd, rs1, rs2) in [(8u8, 0u8, 1u8), (31, 30, 29), (10, 0, 1)] {
+            let w = encode_vmxdotp(rd, rs1, rs2);
+            assert_eq!(decode_vmxdotp(w), Some(FpInstr::Vmxdotp { fd: rd, fs1: rs1, fs2: rs2 }));
+            // the scalar decoder must not claim the vector word and
+            // vice versa — funct3 separates the two encodings
+            assert_eq!(decode_mxdotp(w), None);
+        }
+        let s = encode_mxdotp(8, 0, 1, 2, 0);
+        assert_eq!(decode_vmxdotp(s), None);
+        // reserved-nonzero upper bits are rejected
+        assert_eq!(decode_vmxdotp(encode_vmxdotp(8, 0, 1) | (1 << 27)), None);
     }
 
     #[test]

@@ -46,7 +46,7 @@ impl SsrConfig {
 }
 
 /// Runtime state of one SSR.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Ssr {
     /// The programmed configuration.
     pub cfg: SsrConfig,
@@ -62,15 +62,43 @@ pub struct Ssr {
     fifo: std::collections::VecDeque<u64>,
     /// Repeats pending on the FIFO head.
     head_reps_left: u32,
-    /// A fetch was granted this cycle; data arrives next cycle.
-    inflight: Option<u64>,
+    /// Words granted this cycle; data arrives next cycle (up to
+    /// [`Ssr::width`] words per grant through the wide port).
+    inflight: Vec<u64>,
     /// Cached address of the next word to fetch (avoids recomputing the
     /// affine sum twice per cycle on the hot path).
     next_addr: usize,
+    /// Port width: consecutive 64-bit words latched per arbiter grant
+    /// (the VMXDOTP wide SPM port, DESIGN.md §16). 1 = the scalar
+    /// paper's port. Written via `Scfg Width`; survives `configure`.
+    pub width: usize,
+    /// Prefetch FIFO capacity in words ([`FIFO_DEPTH`] unless deepened
+    /// via `Scfg Depth`; survives `configure`).
+    pub depth: usize,
     /// Perf: cycles the FPU stalled on an empty FIFO.
     pub stall_cycles: u64,
     /// Perf: total words fetched from SPM.
     pub words_fetched: u64,
+}
+
+impl Default for Ssr {
+    fn default() -> Self {
+        Ssr {
+            cfg: SsrConfig::default(),
+            idx: [0; 4],
+            rep_left: 0,
+            fetch_left: 0,
+            pops_left: 0,
+            fifo: std::collections::VecDeque::new(),
+            head_reps_left: 0,
+            inflight: Vec::new(),
+            next_addr: 0,
+            width: 1,
+            depth: FIFO_DEPTH,
+            stall_cycles: 0,
+            words_fetched: 0,
+        }
+    }
 }
 
 impl Ssr {
@@ -87,7 +115,7 @@ impl Ssr {
         self.pops_left = cfg.total_pops();
         self.fifo.clear();
         self.head_reps_left = cfg.rep;
-        self.inflight = None;
+        self.inflight.clear();
         self.next_addr = cfg.base;
     }
 
@@ -124,7 +152,7 @@ impl Ssr {
     /// Does this SSR want an SPM slot this cycle? Returns the address.
     /// (FIFO has room, no fetch already in flight, stream not done.)
     pub fn fetch_request(&self) -> Option<usize> {
-        if self.inflight.is_some() || self.fetch_left == 0 || self.fifo.len() >= FIFO_DEPTH
+        if !self.inflight.is_empty() || self.fetch_left == 0 || self.fifo.len() >= self.depth
         {
             return None;
         }
@@ -132,17 +160,33 @@ impl Ssr {
     }
 
     /// The interconnect granted our request: latch the data (visible to
-    /// pops from the next cycle).
+    /// pops from the next cycle). The scalar (`width == 1`) grant path;
+    /// wide ports use [`Ssr::grant_burst`].
     pub fn grant(&mut self, data: u64) {
         let a = self.next_fetch_addr();
         debug_assert!(a.is_some());
-        self.inflight = Some(data);
+        self.inflight.push(data);
         self.words_fetched += 1;
+    }
+
+    /// Wide-port grant: one arbiter grant latches up to [`Ssr::width`]
+    /// consecutive stream words, each read through `read` (word-aligned
+    /// byte address → data). Capped by the remaining FIFO room and the
+    /// stream tail so occupancy never exceeds [`Ssr::depth`]. With
+    /// `width == 1` this is exactly [`Ssr::grant`].
+    pub fn grant_burst<F: FnMut(usize) -> u64>(&mut self, mut read: F) {
+        let room = self.depth.saturating_sub(self.fifo.len());
+        let n = self.width.min(room).min(self.fetch_left as usize).max(1);
+        for _ in 0..n {
+            let Some(addr) = self.next_fetch_addr() else { break };
+            self.inflight.push(read(addr & !7));
+            self.words_fetched += 1;
+        }
     }
 
     /// End-of-cycle: move in-flight data into the FIFO.
     pub fn tick(&mut self) {
-        if let Some(d) = self.inflight.take() {
+        for d in self.inflight.drain(..) {
             self.fifo.push_back(d);
         }
     }
@@ -150,6 +194,15 @@ impl Ssr {
     /// Can the FPU pop a word right now?
     pub fn can_pop(&self) -> bool {
         !self.fifo.is_empty() && self.pops_left > 0
+    }
+
+    /// Can the FPU pop `n` words back-to-back right now? Only meaningful
+    /// for repeat-free streams (the vector operand streams are always
+    /// configured with `rep == 0`; `vmxdotp` issue is atomic over a
+    /// whole operand group).
+    pub fn can_pop_n(&self, n: usize) -> bool {
+        debug_assert_eq!(self.cfg.rep, 0, "vector pops require a repeat-free stream");
+        self.fifo.len() >= n && self.pops_left >= n as u64
     }
 
     /// Pop one delivery (operand read). Panics if empty — the FPU must
@@ -292,6 +345,59 @@ mod tests {
             ssr.tick();
         }
         assert_eq!(ssr.words_fetched, FIFO_DEPTH as u64);
+    }
+
+    #[test]
+    fn wide_port_bursts_and_preserves_order() {
+        let mem: Vec<u64> = (100..200).collect();
+        let mut ssr = Ssr::default();
+        ssr.width = 8;
+        ssr.depth = 48;
+        ssr.configure(SsrConfig {
+            base: 0,
+            dims: 0,
+            bounds: [32, 0, 0, 0], // 33 words: one vector operand group
+            strides: [8, 0, 0, 0],
+            rep: 0,
+        });
+        // one grant latches 8 words; 33 words need ceil(33/8) = 5 grants
+        let mut grants = 0;
+        let mut out = Vec::new();
+        let mut guard = 0;
+        while !ssr.done() {
+            if ssr.fetch_request().is_some() {
+                ssr.grant_burst(|a| mem[a / 8]);
+                grants += 1;
+            }
+            ssr.tick();
+            while ssr.can_pop() {
+                out.push(ssr.pop());
+            }
+            guard += 1;
+            assert!(guard < 1000);
+        }
+        assert_eq!(grants, 5);
+        assert_eq!(ssr.words_fetched, 33);
+        assert_eq!(out, (100..133).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn width_and_depth_survive_reconfiguration() {
+        let mut ssr = Ssr::default();
+        assert_eq!((ssr.width, ssr.depth), (1, FIFO_DEPTH));
+        ssr.width = 8;
+        ssr.depth = 48;
+        ssr.configure(SsrConfig {
+            base: 0,
+            dims: 0,
+            bounds: [7, 0, 0, 0],
+            strides: [8, 0, 0, 0],
+            rep: 0,
+        });
+        assert_eq!((ssr.width, ssr.depth), (8, 48));
+        // deep FIFO admits more prefetch before backpressure
+        assert!(ssr.can_pop_n(0));
+        assert!(!ssr.can_pop_n(1));
     }
 
     #[test]

@@ -12,7 +12,7 @@ pub mod arrivals;
 
 use crate::energy::EnergyModel;
 use crate::formats::ElemFormat;
-use crate::kernels::{run_mm, KernelKind, MmProblem};
+use crate::kernels::{run_mm, MmProblem};
 use crate::model::{LayerClass, LayerPrecision, ModelGraph, PrecisionPolicy};
 use crate::rng::XorShift;
 
@@ -31,11 +31,23 @@ pub struct DeitConfig {
     pub fmt: ElemFormat,
     /// MX block size.
     pub block_size: usize,
+    /// MX blocks per dot-product instruction on every core (1 = scalar
+    /// `mxdotp`, 2/4/8 = vector `vmxdotp` at that VL). Results are
+    /// bit-identical across values; only the cost models change.
+    pub vector_len: u8,
 }
 
 impl Default for DeitConfig {
     fn default() -> Self {
-        DeitConfig { seq: 256, dim: 192, heads: 3, mlp_ratio: 4, fmt: ElemFormat::E4M3, block_size: 32 }
+        DeitConfig {
+            seq: 256,
+            dim: 192,
+            heads: 3,
+            mlp_ratio: 4,
+            fmt: ElemFormat::E4M3,
+            block_size: 32,
+            vector_len: 1,
+        }
     }
 }
 
@@ -178,15 +190,20 @@ fn synthetic_mx_perf(
     perf
 }
 
-/// Analytic cost model: cycles ≈ FLOPs / (2·lanes FLOP/cycle/core ×
+/// Analytic cost model: cycles ≈ FLOPs / (2·lanes·VL FLOP/cycle/core ×
 /// cores × utilization(K)) at the workload's element format (16
-/// FLOPs/cycle/core for the byte-wide formats, 32 for MXFP4).
-/// `calibrated_util` comes from a measured kernel run (see
-/// [`calibrate_util`]); energy from the EnergyModel's MX operating
-/// point.
+/// FLOPs/cycle/core for the byte-wide formats, 32 for MXFP4, ×VL when
+/// the vector `vmxdotp` kernel is selected via
+/// [`DeitConfig::vector_len`]). `calibrated_util` comes from a measured
+/// kernel run of the *same* VL (see [`calibrate_util`]), so the
+/// product `ideal·util` is the calibration run's measured throughput
+/// either way; energy from the EnergyModel's MX operating point.
 pub fn analytic_cost(cfg: &DeitConfig, num_cores: usize, calibrated_util: f64) -> HwCost {
     let flops = cfg.mx_flops();
-    let ideal = 2.0 * cfg.fmt.hw_lanes() as f64 * num_cores as f64;
+    let ideal = 2.0
+        * cfg.fmt.hw_lanes() as f64
+        * cfg.vector_len.max(1) as f64
+        * num_cores as f64;
     let cycles = (flops as f64 / (ideal * calibrated_util)) as u64;
     // power at the calibrated MX operating point (see EnergyModel):
     // derive from a synthetic counter set with the same activity mix.
@@ -291,17 +308,26 @@ pub fn analytic_policy_cycles(
     num_cores: usize,
     calibrated_util: f64,
 ) -> u64 {
-    analytic_policy_cycles_from(&layer_flops_table(cfg), policy, num_cores, calibrated_util)
+    analytic_policy_cycles_from(
+        &layer_flops_table(cfg),
+        policy,
+        num_cores,
+        calibrated_util,
+        cfg.vector_len,
+    )
 }
 
 /// [`analytic_policy_cycles`] from a precomputed [`layer_flops_table`]
 /// — allocation-free, so the serving engine can price every arriving
-/// request's policy without rebuilding the model graph.
+/// request's policy without rebuilding the model graph. `vector_len`
+/// is the fabric-wide VL (every format group runs the same kernel
+/// family; 1 bills the scalar `mxdotp` lane width).
 pub fn analytic_policy_cycles_from(
     layer_flops: &[u64; 6],
     policy: &PrecisionPolicy,
     num_cores: usize,
     calibrated_util: f64,
+    vector_len: u8,
 ) -> u64 {
     let mut per_fmt = [0u64; 6];
     for class in LayerClass::ALL {
@@ -309,13 +335,14 @@ pub fn analytic_policy_cycles_from(
             per_fmt[f.csr_code() as usize] += layer_flops[class.index()];
         }
     }
+    let vl = vector_len.max(1) as f64;
     let mut cycles = 0u64;
     for fmt in ElemFormat::ALL {
         let flops = per_fmt[fmt.csr_code() as usize];
         if flops == 0 {
             continue;
         }
-        let ideal = 2.0 * fmt.hw_lanes() as f64 * num_cores as f64;
+        let ideal = 2.0 * fmt.hw_lanes() as f64 * vl * num_cores as f64;
         cycles += (flops as f64 / (ideal * calibrated_util)) as u64;
     }
     cycles
@@ -351,10 +378,11 @@ pub fn analytic_policy_sharded_cost(
     // Per-layer breakdown (each layer's own sharded wall share).
     let em = EnergyModel;
     let mut per_layer = Vec::new();
+    let vl = cfg.vector_len.max(1) as f64;
     for node in &graph.nodes {
         let LayerPrecision::Mx(fmt) = policy.get(node.class) else { continue };
         let flops = node.flops();
-        let ideal = 2.0 * fmt.hw_lanes() as f64 * num_cores as f64;
+        let ideal = 2.0 * fmt.hw_lanes() as f64 * vl * num_cores as f64;
         let serial = (flops as f64 / (ideal * calibrated_util)) as u64;
         let wall = shard(serial);
         let perf = synthetic_mx_perf(fmt, flops / clusters as u64, num_cores, wall);
@@ -413,8 +441,13 @@ pub fn calibrate_util(cfg: &DeitConfig, num_cores: usize, seed: u64, cold_plans:
     let mut rng = XorShift::new(seed);
     let a = rng.normal_vec(p.m * p.k, 0.5);
     let b = rng.normal_vec(p.k * p.n, 0.02);
+    // The kernel under calibration follows the configured VL: a vector
+    // fabric must calibrate against the vector kernel (utilization is
+    // measured relative to the VL-scaled ideal, so `ideal·util` stays
+    // the measured throughput in both worlds).
+    let kind = p.vmx_kernel(cfg.vector_len);
     if cold_plans {
-        return run_mm(KernelKind::Mx(p.fmt), p, &a, &b, num_cores).utilization();
+        return run_mm(kind, p, &a, &b, num_cores).utilization();
     }
     let mut cluster = crate::snitch::cluster::Cluster::new(
         crate::snitch::cluster::ClusterConfig { num_cores, freq_ghz: 1.0 },
@@ -422,7 +455,7 @@ pub fn calibrate_util(cfg: &DeitConfig, num_cores: usize, seed: u64, cold_plans:
     let run = crate::kernels::plan::run_mm_cached(
         crate::kernels::plan::PlanCache::global(),
         &mut cluster,
-        KernelKind::Mx(p.fmt),
+        kind,
         p,
         &a,
         &b,
@@ -563,6 +596,38 @@ mod tests {
         let ratio = f8.cycles as f64 / f4.cycles as f64;
         assert!((ratio - 2.0).abs() < 0.01, "ratio {ratio}");
         assert_eq!(f8.flops, f4.flops);
+    }
+
+    #[test]
+    fn analytic_cost_scales_with_vector_length() {
+        // At equal calibrated utilization a VL=8 fabric's ideal rate is
+        // 8× the scalar one, so the analytic wall shrinks 8×; the
+        // policy path must agree with the single-format path at any VL.
+        let scalar = analytic_cost(&DeitConfig::default(), 8, 0.75);
+        let vcfg = DeitConfig { vector_len: 8, ..DeitConfig::default() };
+        let vec8 = analytic_cost(&vcfg, 8, 0.75);
+        let ratio = scalar.cycles as f64 / vec8.cycles as f64;
+        assert!((ratio - 8.0).abs() < 0.01, "ratio {ratio}");
+        assert_eq!(scalar.flops, vec8.flops);
+        let fp8 = PrecisionPolicy::uniform(vcfg.fmt);
+        assert_eq!(analytic_policy_cycles(&vcfg, &fp8, 8, 0.75), vec8.cycles);
+    }
+
+    #[test]
+    fn vector_calibration_measures_the_vector_kernel() {
+        // VL=8 calibration runs the vmxdotp kernel: utilization is
+        // measured against the 8×-wider ideal, so it lands lower than
+        // the scalar kernel's but the implied throughput (ideal·util)
+        // must be higher — that is what the ≥4× headline measures.
+        let cfg = DeitConfig::default();
+        let vcfg = DeitConfig { vector_len: 8, ..cfg };
+        let us = calibrate_util(&cfg, 4, 1, true);
+        let uv = calibrate_util(&vcfg, 4, 1, true);
+        assert!(uv > 0.0 && uv < 1.0, "vector util {uv}");
+        assert!(uv < us, "vector util {uv} not below scalar {us}");
+        assert!(8.0 * uv > us, "vector throughput did not beat scalar: {uv} vs {us}");
+        // warm path is the same deterministic simulation
+        assert_eq!(calibrate_util(&vcfg, 4, 1, false), uv);
     }
 
     #[test]

@@ -169,9 +169,9 @@ fn policy_walks_replay_bit_identical_for_mixed_policies() {
     let graph = ModelGraph::deit_block(&cfg);
     for name in ["fp4-ffn", "all-fp8"] {
         let policy = PrecisionPolicy::preset(name).unwrap();
-        let cold = policy_hw_run(&graph, &policy, 2, 4, 7, true);
-        let warm1 = policy_hw_run(&graph, &policy, 2, 4, 7, false);
-        let warm2 = policy_hw_run(&graph, &policy, 2, 4, 7, false);
+        let cold = policy_hw_run(&graph, &policy, 2, 4, 7, true, 1);
+        let warm1 = policy_hw_run(&graph, &policy, 2, 4, 7, false, 1);
+        let warm2 = policy_hw_run(&graph, &policy, 2, 4, 7, false, 1);
         for run in [&warm1, &warm2] {
             assert_eq!(cold.wall_cycles, run.wall_cycles, "{name}: wall cycles differ");
             assert_eq!(cold.flops, run.flops, "{name}: flops differ");

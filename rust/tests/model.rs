@@ -265,8 +265,8 @@ fn fp4_ffn_hw_walk_is_faster_than_all_fp8_at_equal_flops() {
     let graph = ModelGraph::deit_block(&cfg);
     let fp8 = PrecisionPolicy::preset("all-fp8").unwrap();
     let ffn4 = PrecisionPolicy::preset("fp4-ffn").unwrap();
-    let r8 = mxdotp::model::policy_hw_run(&graph, &fp8, 2, 8, 3, false);
-    let r4 = mxdotp::model::policy_hw_run(&graph, &ffn4, 2, 8, 3, false);
+    let r8 = mxdotp::model::policy_hw_run(&graph, &fp8, 2, 8, 3, false, 1);
+    let r4 = mxdotp::model::policy_hw_run(&graph, &ffn4, 2, 8, 3, false, 1);
     assert_eq!(r8.flops, r4.flops);
     let ratio = r8.wall_cycles as f64 / r4.wall_cycles as f64;
     assert!(ratio >= 1.2, "fp4-ffn wall speedup only {ratio:.2}x on reduced shapes");

@@ -118,7 +118,7 @@ fn policy_layer_spans_tile_the_wall_clock_exactly() {
     let cfg = DeitConfig { seq: 16, ..DeitConfig::default() };
     let graph = ModelGraph::deit_block(&cfg);
     let policy = PrecisionPolicy::preset("fp4-ffn").unwrap();
-    let run = policy_hw_run(&graph, &policy, 2, 8, 5, false);
+    let run = policy_hw_run(&graph, &policy, 2, 8, 5, false, 1);
     let sink = obs::policy_spans(&run);
     let layer_spans: Vec<_> =
         sink.spans().iter().filter(|s| s.tid == 0 && s.pid == obs::PID_MODEL).collect();

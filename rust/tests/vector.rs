@@ -1,0 +1,186 @@
+//! Integration tests for the VMXDOTP vector datapath (DESIGN.md §16):
+//! the vector kernel must be bit-identical to the scalar `mxdotp`
+//! kernel (which is itself pinned to `reference::mx_hw_ref`) for every
+//! element format, block size and vector length, wall cycles must be
+//! monotone in VL on deep-reduction shapes, the simulator fast path
+//! must be invisible to vector kernels, and `--vector-len 1` must be
+//! bit- AND cycle-identical to the scalar path.
+
+use mxdotp::formats::ElemFormat;
+use mxdotp::kernels::plan::{run_mm_cached, PlanCache};
+use mxdotp::kernels::reference::mx_hw_ref;
+use mxdotp::kernels::{run_mm, KernelKind, MmProblem, MmRun};
+use mxdotp::rng::{property_cases, XorShift};
+use mxdotp::snitch::{Cluster, ClusterConfig};
+
+/// Vector lengths the vector unit supports beyond the scalar VL = 1.
+const VLS: [u8; 3] = [2, 4, 8];
+
+/// Bit-compare two C matrices; NaN is compared as "both NaN" so
+/// NaN-propagating cases stay assertable (quantized NaNs all carry the
+/// format's canonical encoding, so cross-run bits still match).
+fn assert_c_bits(what: &str, want: &[f32], got: &[f32]) {
+    assert_eq!(want.len(), got.len(), "{what}: result shape differs");
+    for (i, (w, g)) in want.iter().zip(got).enumerate() {
+        assert!(
+            w.to_bits() == g.to_bits() || (w.is_nan() && g.is_nan()),
+            "{what}: C[{i}] differs ({w} vs {g})"
+        );
+    }
+}
+
+/// Operand vector with the hostile cases the datapath must normalize
+/// deterministically: a sprinkle of NaN / ±Inf inputs and runs of
+/// subnormal-heavy values (tiny magnitudes force subnormal element
+/// encodings once the block scale normalizes the in-block amax).
+fn hostile_vec(rng: &mut XorShift, n: usize, std: f32) -> Vec<f32> {
+    let mut v = rng.normal_vec(n, std);
+    for x in v.iter_mut() {
+        match rng.below(16) {
+            0 => *x = f32::NAN,
+            1 => *x = f32::INFINITY,
+            2 => *x = f32::NEG_INFINITY,
+            3..=6 => *x *= 1e-40, // deep into f32 subnormal territory
+            _ => {}
+        }
+    }
+    v
+}
+
+#[test]
+fn vector_is_bit_identical_to_scalar_across_formats() {
+    // Random block-aligned shapes × all six formats × VL ∈ {2,4,8},
+    // with NaN/Inf and subnormal-heavy operands: the vector unit chains
+    // VL blocks through the scalar datapath in ascending block order,
+    // so identity with the scalar kernel (and with the shared hardware
+    // reference) is exact, not approximate.
+    property_cases(8, 0x7EC7_0001, |rng| {
+        let fmt = ElemFormat::ALL[rng.below(ElemFormat::ALL.len() as u64) as usize];
+        let p = MmProblem {
+            m: 8 * (1 + rng.below(2) as usize),
+            k: 64 * (1 + rng.below(3) as usize),
+            n: 8 * (1 + rng.below(2) as usize),
+            fmt,
+            block_size: 32,
+        };
+        let a = hostile_vec(rng, p.m * p.k, 0.5);
+        let b = hostile_vec(rng, p.k * p.n, 0.02);
+        let scalar = run_mm(KernelKind::Mx(fmt), p, &a, &b, 2);
+        let want = mx_hw_ref(&p, &a, &b);
+        assert_c_bits(&format!("{fmt} scalar vs hw ref"), &want, &scalar.c);
+        for &vl in &VLS {
+            let vec = run_mm(p.vmx_kernel(vl), p, &a, &b, 2);
+            assert!(
+                vec.perf.vmxdotp_total() > 0,
+                "{fmt} vl={vl}: no vmxdotp issued"
+            );
+            assert_c_bits(&format!("{fmt} vl={vl} vs scalar"), &scalar.c, &vec.c);
+        }
+    });
+}
+
+#[test]
+fn vector_handles_block_sizes_16_and_64() {
+    // "the block size remains configurable in software": the vector
+    // unit's per-group word count (1 + VL·bw) tracks the block size, so
+    // one FP4 issue per block (bs = 16, 16 lanes) through the widest
+    // group (bs = 64, VL = 8, 8 lanes: the 65-word ceiling) must all
+    // stay bit-identical to the scalar kernel.
+    for fmt in ElemFormat::ALL {
+        for bs in [16usize, 64] {
+            let p = MmProblem { m: 8, k: 128, n: 8, fmt, block_size: bs };
+            let mut rng = XorShift::new(0xB5 ^ bs as u64);
+            let a = rng.normal_vec(p.m * p.k, 1.0);
+            let b = rng.normal_vec(p.k * p.n, 1.0);
+            let scalar = run_mm(KernelKind::Mx(fmt), p, &a, &b, 2);
+            for vl in [2u8, 8] {
+                let vec = run_mm(p.vmx_kernel(vl), p, &a, &b, 2);
+                assert_c_bits(&format!("{fmt} bs={bs} vl={vl}"), &scalar.c, &vec.c);
+            }
+        }
+    }
+}
+
+#[test]
+fn wall_cycles_are_monotone_in_vl() {
+    // On a deep-reduction shape (kb = k/bs = 8 blocks, so even VL = 8
+    // needs no tail padding) doubling VL may never cost wall cycles:
+    // each doubling halves the scale-header overhead and the per-group
+    // issue count. The endpoint must also show real uplift, not a tie.
+    for fmt in [ElemFormat::E4M3, ElemFormat::E2M1, ElemFormat::Int8] {
+        let p = MmProblem { m: 16, k: 256, n: 16, fmt, block_size: 32 };
+        let mut rng = XorShift::new(0x0AB1E5);
+        let a = rng.normal_vec(p.m * p.k, 0.5);
+        let b = rng.normal_vec(p.k * p.n, 0.02);
+        let scalar = run_mm(KernelKind::Mx(fmt), p, &a, &b, 1);
+        let mut prev = scalar.perf.cycles;
+        for &vl in &VLS {
+            let run = run_mm(p.vmx_kernel(vl), p, &a, &b, 1);
+            assert!(
+                run.perf.cycles <= prev,
+                "{fmt}: vl={vl} took {} cycles, more than the previous VL's {prev}",
+                run.perf.cycles
+            );
+            prev = run.perf.cycles;
+        }
+        assert!(
+            (prev as f64) < 0.75 * scalar.perf.cycles as f64,
+            "{fmt}: VL=8 ({prev} cycles) shows no uplift over scalar ({})",
+            scalar.perf.cycles
+        );
+    }
+}
+
+/// Run one kernel on a fresh single instance with the fast path forced
+/// on or off for that instance (the per-instance flag, not the
+/// process-wide default — tests in this binary run concurrently).
+fn run_with(fast: bool, kind: KernelKind, p: MmProblem, a: &[f32], b: &[f32]) -> MmRun {
+    let cache = PlanCache::disabled();
+    let mut cl = Cluster::new(ClusterConfig { num_cores: 8, freq_ghz: 1.0 });
+    cl.fast_path = fast;
+    run_mm_cached(&cache, &mut cl, kind, p, a, b)
+}
+
+#[test]
+fn fast_path_is_invisible_for_vector_kernels() {
+    // The widened FREP fast-forward (DESIGN.md §15) must retire vector
+    // FREP bodies — wider SSR groups, multi-cycle vmxdotp occupancy —
+    // exactly as per-cycle stepping does: identical counters (cycles,
+    // stalls, vmxdotp/mxdotp issue counts) and identical result bits.
+    let p = MmProblem { m: 16, k: 128, n: 16, fmt: ElemFormat::E4M3, block_size: 32 };
+    let mut rng = XorShift::new(0xFA57_0EC);
+    let a = rng.normal_vec(p.m * p.k, 0.5);
+    let b = rng.normal_vec(p.k * p.n, 0.02);
+    for fmt in [ElemFormat::E4M3, ElemFormat::E2M1] {
+        let p = MmProblem { fmt, ..p };
+        for &vl in &VLS {
+            let kind = p.vmx_kernel(vl);
+            let slow = run_with(false, kind, p, &a, &b);
+            let fast = run_with(true, kind, p, &a, &b);
+            assert_eq!(
+                slow.perf, fast.perf,
+                "{fmt} vl={vl}: fast path changed the counters"
+            );
+            assert_c_bits(&format!("{fmt} vl={vl} fast vs slow"), &slow.c, &fast.c);
+        }
+    }
+}
+
+#[test]
+fn vl1_is_bit_and_cycle_identical_to_scalar() {
+    // Satellite guarantee for `--vector-len 1`: it must normalize to
+    // the scalar kernel (one decision point, `MmProblem::vmx_kernel`)
+    // and therefore match the scalar path in BOTH bits and counters.
+    for fmt in [ElemFormat::E4M3, ElemFormat::E2M1] {
+        let p = MmProblem { m: 8, k: 128, n: 8, fmt, block_size: 32 };
+        let mut rng = XorShift::new(0x11);
+        let a = rng.normal_vec(p.m * p.k, 0.5);
+        let b = rng.normal_vec(p.k * p.n, 0.02);
+        assert_eq!(p.vmx_kernel(1), KernelKind::Mx(fmt));
+        let scalar = run_mm(KernelKind::Mx(fmt), p, &a, &b, 2);
+        let vl1 = run_mm(p.vmx_kernel(1), p, &a, &b, 2);
+        assert_eq!(scalar.perf, vl1.perf, "{fmt}: VL=1 perturbed the counters");
+        assert_c_bits(&format!("{fmt} vl=1 vs scalar"), &scalar.c, &vl1.c);
+        assert_eq!(vl1.perf.vmxdotp_total(), 0, "{fmt}: VL=1 issued vmxdotp");
+    }
+}

@@ -63,6 +63,19 @@ def extract_metrics(bench_dir):
             if key in j:
                 out.append(("hotpath", key, j[key]))
 
+    j = load(os.path.join(bench_dir, "BENCH_vector.json"))
+    if j:
+        # vmxdotp vs scalar mxdotp, single core (DESIGN.md §16): the
+        # gated VL=8 MXFP8 bar, the all-formats VL=8 floor, plus the
+        # ungated shallow-reduction (proj, k = dim) context point.
+        out += [
+            ("vector", "vl8_speedup_e4m3", j["vl8_speedup_e4m3"]),
+            ("vector", "vl8_gflops_e4m3", j["vl8_gflops_e4m3"]),
+            ("vector", "vl8_min_speedup_all_fmts", j["vl8_min_speedup_all_fmts"]),
+        ]
+        if "proj_vl8_speedup_e4m3" in j:
+            out.append(("vector", "proj_vl8_speedup_e4m3", j["proj_vl8_speedup_e4m3"]))
+
     j = load(os.path.join(bench_dir, "BENCH_formats.json"))
     if j:
         out.append(("formats", "fp4_vs_fp8_speedup_at_k256", j["fp4_vs_fp8_speedup_at_k256"]))

@@ -64,10 +64,13 @@ def byte_compared(name):
 
     The ``--exec sampled:N`` spot-check audit qualifies: its request
     selection, measured/analytic cycles, and rendered JSON are a pure
-    function of the seed (DESIGN.md §15).
+    function of the seed (DESIGN.md §15). So does the vector-datapath
+    bench (DESIGN.md §16): every field is a simulated cycle count or a
+    ratio of simulated cycle counts, no host wall-clock anywhere.
     """
     return (
         name == "BENCH_serving_attribution.json"
+        or name == "BENCH_vector.json"
         or name == "OBS_spotcheck_serving.json"
         or name.startswith("OBS_trace_")
     )
