@@ -1,0 +1,212 @@
+//! Bench `fleet`: fleet-scale serving (DESIGN.md §17) — the
+//! deterministic trace player replays ≥ 1M generated requests
+//! (`FLEET_BENCH_REQS` overrides) through replicated serving machines
+//! behind the global router and enforces the two §17 acceptance bars:
+//!
+//! * **scaling**: a 4-machine fleet at matched per-machine load keeps
+//!   ≥ 0.9× of four times the single-machine goodput (the router must
+//!   not serialize or starve machines);
+//! * **routing**: on the canonical mixed-policy trace the affinity
+//!   router's goodput is ≥ 1.15× round-robin's (policy-blind placement
+//!   must pay for its weight reloads).
+//!
+//! Writes `BENCH_fleet.json` — fleet goodput/p99/utilization per
+//! router plus per-tenant attribution, stamped in simulated ticks ONLY
+//! (no host timing), so CI's determinism job byte-compares it across
+//! double runs.
+//!
+//! Run: `cargo bench --bench fleet`
+
+mod common;
+
+use mxdotp::fleet::{simulate_fleet, FleetConfig, FleetOutcome, RouterKind};
+use mxdotp::formats::ElemFormat;
+use mxdotp::report::{fleet_machine, fleet_sweep, fleet_trace, render_fleet, FLEET_MACHINES};
+use mxdotp::serve::{self, ServeConfig};
+use mxdotp::workload::arrivals::{generate_trace, ArrivalKind, ArrivalSpec, TenantSpec};
+use mxdotp::workload::DeitConfig;
+use std::fmt::Write as _;
+
+/// Machines in the scaling experiment.
+const SCALING_MACHINES: usize = 4;
+/// Per-machine offered load of the scaling experiment (fraction of
+/// estimated capacity): comfortable, so efficiency measures routing
+/// balance rather than overload policy.
+const SCALING_LOAD: f64 = 0.5;
+
+/// Every arrival lands exactly once in served, machine-rejected or
+/// fleet-rejected — the conservation invariant `tests/fleet.rs` pins,
+/// re-asserted here on the full-size traces.
+fn assert_conserved(out: &FleetOutcome, offered: usize, what: &str) {
+    assert_eq!(
+        out.served() + out.machine_rejected() + out.fleet_rejected.len(),
+        offered,
+        "requests lost in the {what} run"
+    );
+}
+
+fn json(
+    requests: usize,
+    efficiency: f64,
+    single: &serve::scheduler::ServeOutcome,
+    scaled: &FleetOutcome,
+    aff: &FleetOutcome,
+    rr: &FleetOutcome,
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"requests\": {requests},");
+    let _ = writeln!(
+        s,
+        "  \"scaling\": {{\"machines\": {SCALING_MACHINES}, \"load\": {SCALING_LOAD}, \
+         \"single_goodput_per_ktick\": {:.6}, \"fleet_goodput_per_ktick\": {:.6}, \
+         \"efficiency\": {:.6}}},",
+        single.goodput_per_ktick(),
+        scaled.goodput_per_ktick(),
+        efficiency
+    );
+    s.push_str("  \"routers\": [\n");
+    for (i, out) in [aff, rr].iter().enumerate() {
+        let p = out.percentiles();
+        let _ = writeln!(
+            s,
+            "    {{\"router\": \"{}\", \"machines\": {}, \"offered\": {}, \"served\": {}, \
+             \"in_slo\": {}, \"goodput_per_ktick\": {:.6}, \"p50_ticks\": {}, \
+             \"p99_ticks\": {}, \"utilization\": {:.6}, \"reloads\": {}, \
+             \"horizon_ticks\": {}}}{}",
+            out.router.name(),
+            out.machines.len(),
+            out.offered(),
+            out.served(),
+            out.served_in_slo(),
+            out.goodput_per_ktick(),
+            p.p50,
+            p.p99,
+            out.utilization(),
+            out.reloads(),
+            out.horizon_ticks,
+            if i == 0 { "," } else { "" }
+        );
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"tenants\": [\n");
+    for (i, t) in aff.per_tenant.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "    {{\"tenant\": {}, \"offered\": {}, \"served\": {}, \"in_slo\": {}, \
+             \"machine_rejected\": {}, \"fleet_rejected\": {}}}{}",
+            t.tenant,
+            t.offered,
+            t.served,
+            t.served_in_slo,
+            t.machine_rejected,
+            t.fleet_rejected,
+            if i + 1 == aff.per_tenant.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+fn main() {
+    common::header("fleet", "fleet scaling efficiency + affinity vs round-robin routing");
+    let requests: usize = std::env::var("FLEET_BENCH_REQS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+
+    // --- Experiment 1: scaling efficiency, single-class traffic on
+    // the PR 4 acceptance machine (8 per-cluster fabrics). The fleet
+    // sees N machines at N× the single machine's offered rate, so the
+    // per-machine load is matched by construction.
+    let scal_cfg = ServeConfig {
+        model: DeitConfig::default(),
+        clusters: 8,
+        ..ServeConfig::default()
+    };
+    let mix = vec![(ElemFormat::E4M3, 1.0)];
+    let cap = serve::estimated_capacity_per_ktick(&scal_cfg, &mix);
+    let spec = |rate: f64, n: usize, seed: u64| ArrivalSpec {
+        kind: ArrivalKind::Poisson,
+        rate_per_ktick: rate,
+        mix: mix.clone(),
+        high_priority_frac: 0.0,
+        requests: n,
+        seed,
+    };
+    let t0 = std::time::Instant::now();
+    let single = serve::simulate(
+        &scal_cfg,
+        &generate_trace(&spec(SCALING_LOAD * cap, requests / SCALING_MACHINES, 42)),
+    );
+    let scaled_trace = generate_trace(&spec(
+        SCALING_LOAD * cap * SCALING_MACHINES as f64,
+        requests,
+        43,
+    ));
+    let scal_fleet = FleetConfig::new(scal_cfg, SCALING_MACHINES, RouterKind::Affinity);
+    let scaled = simulate_fleet(&scal_fleet, &scaled_trace, &[]);
+    assert_conserved(&scaled, scaled_trace.len(), "scaling");
+    let efficiency =
+        scaled.goodput_per_ktick() / (SCALING_MACHINES as f64 * single.goodput_per_ktick());
+    println!(
+        "scaling: single {:.3}/kt, {SCALING_MACHINES}-machine fleet {:.3}/kt -> \
+         efficiency {:.4} ({} + {} requests in {:.2} s)",
+        single.goodput_per_ktick(),
+        scaled.goodput_per_ktick(),
+        efficiency,
+        requests / SCALING_MACHINES,
+        requests,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // --- Experiment 2: affinity vs round-robin over the identical
+    // mixed-policy trace on the canonical fleet machine (one
+    // whole-machine fabric; four equal policy classes that partition
+    // perfectly onto four machines). Tenant tags ride along so the
+    // artifact carries per-tenant attribution.
+    let rt_cfg = fleet_machine(DeitConfig::default());
+    let rt_trace = fleet_trace(&rt_cfg, SCALING_MACHINES, requests, 44);
+    let tenants = mxdotp::workload::arrivals::assign_tenants(
+        &rt_trace,
+        &TenantSpec { weights: vec![3.0, 1.0], seed: 45 },
+    );
+    let t1 = std::time::Instant::now();
+    let run = |router: RouterKind| {
+        let fcfg = FleetConfig::new(rt_cfg, SCALING_MACHINES, router);
+        simulate_fleet(&fcfg, &rt_trace, &tenants)
+    };
+    let aff = run(RouterKind::Affinity);
+    let rr = run(RouterKind::RoundRobin);
+    assert_conserved(&aff, rt_trace.len(), "affinity");
+    assert_conserved(&rr, rt_trace.len(), "round-robin");
+    let rr_goodput = rr.goodput_per_ktick();
+    assert!(rr_goodput > 0.0, "round-robin served nothing in SLO — trace degenerate");
+    let ratio = aff.goodput_per_ktick() / rr_goodput;
+    println!(
+        "routing: affinity {:.3}/kt ({} reloads) vs rr {:.3}/kt ({} reloads) -> \
+         ratio {:.3} ({} requests x 2 routers in {:.2} s)",
+        aff.goodput_per_ktick(),
+        aff.reloads(),
+        rr_goodput,
+        rr.reloads(),
+        ratio,
+        requests,
+        t1.elapsed().as_secs_f64()
+    );
+
+    // Human-readable sweep table on a bounded trace (the full-size
+    // runs above feed the bars; the table is for eyeballs).
+    let sweep = fleet_sweep(&rt_cfg, requests.min(20_000), 42, &FLEET_MACHINES);
+    println!("\n{}", render_fleet(&sweep, &rt_cfg));
+
+    let out = json(requests, efficiency, &single, &scaled, &aff, &rr);
+    std::fs::write("BENCH_fleet.json", &out).expect("write BENCH_fleet.json");
+    println!("wrote BENCH_fleet.json (sim-tick state only, byte-stable)");
+
+    common::baseline::enforce(
+        "fleet",
+        &[("scaling_efficiency", efficiency), ("affinity_vs_rr_goodput", ratio)],
+    );
+    println!("\nfleet: OK (scaling {efficiency:.3}, affinity/rr {ratio:.3})");
+}

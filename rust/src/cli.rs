@@ -5,10 +5,12 @@
 //! mxdotp-cli quantize  --fmt e4m3 --block 32 --n 8 [--seed S]
 //! mxdotp-cli simulate  --kernel mx|fp32|fp8sw --m 64 --k 256 --n 64
 //!                      [--cores 8] [--fmt e5m2|e4m3|e3m2|e2m3|e2m1|int8] [--seed S]
-//! mxdotp-cli reproduce fig3|fig4|table3|formats|scaling|serving|all [--cores 8] [--fmt e4m3]
+//! mxdotp-cli reproduce fig3|fig4|table3|formats|scaling|serving|pareto|fleet|all
+//!                      [--cores 8] [--fmt e4m3]
 //! mxdotp-cli serve     [--requests 16] [--batch 8] [--clusters 8] [--fabrics 0]
 //!                      [--mix e4m3:0.6,e2m1:0.4] [--arrival poisson:4]
 //!                      [--slo-ticks 0] [--queue-cap 128] [--sched continuous|barrier]
+//!                      [--machines 1] [--router affinity|rr]
 //! mxdotp-cli info
 //! ```
 //!
@@ -16,6 +18,7 @@
 //! ([`kernel_for`]): the `mx` hardware kernel takes every OCP element
 //! format, `fp8sw` is FP8-only, `fp32` ignores the format.
 
+use crate::fleet::RouterKind;
 use crate::formats::ElemFormat;
 use crate::kernels::KernelKind;
 use crate::model::PrecisionPolicy;
@@ -57,6 +60,8 @@ pub enum Command {
         trace_out: Option<String>,
         obs_out: Option<String>,
         vector_len: u8,
+        machines: usize,
+        router: RouterKind,
     },
     /// `info`: print the simulated machine and runtime availability.
     Info,
@@ -174,7 +179,7 @@ const REPRODUCE_FLAGS: &[&str] = &[
 const SERVE_FLAGS: &[&str] = &[
     "requests", "batch", "clusters", "fabrics", "fmt", "mix", "arrival", "slo-ticks",
     "queue-cap", "sched", "artifacts", "cold-plans", "policy", "exec", "trace-out",
-    "obs-out", "vector-len",
+    "obs-out", "vector-len", "machines", "router",
 ];
 
 /// Split `--key value` pairs (plus valueless boolean flags) after the
@@ -459,12 +464,13 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 .filter(|w| !w.starts_with("--"))
                 .cloned()
                 .unwrap_or_else(|| "all".to_string());
-            if !["fig3", "fig4", "table3", "formats", "scaling", "serving", "pareto", "all"]
+            if !["fig3", "fig4", "table3", "formats", "scaling", "serving", "pareto", "fleet",
+                 "all"]
                 .contains(&what.as_str())
             {
                 return Err(CliError(format!(
                     "unknown target '{what}' \
-                     (expected fig3|fig4|table3|formats|scaling|serving|pareto|all)"
+                     (expected fig3|fig4|table3|formats|scaling|serving|pareto|fleet|all)"
                 )));
             }
             let skip = usize::from(!rest.is_empty() && !rest[0].starts_with("--"));
@@ -483,13 +489,14 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             let exec = get_exec(&f)?;
             // The paper tables (fig3/fig4/table3/formats/scaling) exist
             // to showcase the cycle engine; only the serving comparison
-            // has an analytic cost model to swap in. Mirror the
-            // --policy/pareto restriction instead of silently ignoring
-            // the flag.
-            if exec != ExecMode::Cycle && what != "serving" && what != "all" {
+            // and the fleet sweep have an analytic cost model to swap
+            // in. Mirror the --policy/pareto restriction instead of
+            // silently ignoring the flag.
+            if exec != ExecMode::Cycle && what != "serving" && what != "fleet" && what != "all" {
                 return Err(CliError(format!(
-                    "--exec {exec} only applies to 'reproduce serving' (or 'all'), \
-                     not '{what}' — the paper tables are cycle-accurate by definition"
+                    "--exec {exec} only applies to 'reproduce serving', 'reproduce fleet' \
+                     (or 'all'), not '{what}' — the paper tables are cycle-accurate by \
+                     definition"
                 )));
             }
             Ok(Command::Reproduce {
@@ -561,6 +568,29 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
             if queue_cap == 0 {
                 return Err(CliError("--queue-cap must be at least 1".into()));
             }
+            let machines: usize = get_parse(&f, "machines", 1)?;
+            if machines == 0 {
+                return Err(CliError(
+                    "--machines must be at least 1 (the fleet needs a machine to route to)"
+                        .into(),
+                ));
+            }
+            let router = match f.get("router") {
+                None => RouterKind::Affinity,
+                Some(s) => RouterKind::parse(s).map_err(CliError)?,
+            };
+            let exec = get_exec(&f)?;
+            // The fleet path replays the trace through N replicated
+            // analytic serving engines; there is no fleet-wide cycle
+            // loop to fall back to. Reject rather than silently
+            // downgrade the executor.
+            if machines > 1 && exec == ExecMode::Cycle {
+                return Err(CliError(format!(
+                    "--machines {machines} runs the fleet simulator, which costs requests \
+                     with the calibrated analytic model — pass --exec analytic or \
+                     --exec sampled:N (the spot-checked variant)"
+                )));
+            }
             Ok(Command::Serve {
                 requests: get_parse(&f, "requests", 16)?,
                 batch: get_batch(&f)?,
@@ -576,10 +606,12 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 artifacts: f.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
                 cold_plans: get_cold_plans(&f),
                 policy,
-                exec: get_exec(&f)?,
+                exec,
                 trace_out: get_out_path(&f, "trace-out")?,
                 obs_out: get_out_path(&f, "obs-out")?,
                 vector_len: get_vector_len(&f)?,
+                machines,
+                router,
             })
         }
         other => Err(CliError(format!("unknown subcommand '{other}' (try 'help')"))),
@@ -599,7 +631,7 @@ USAGE:
                        [--trace-out FILE] [--obs-out FILE]
                        (--clusters N > 1 shards the MX GEMM across N simulated clusters;
                         --policy walks the whole mixed-precision model graph instead)
-  mxdotp-cli reproduce [fig3|fig4|table3|formats|scaling|serving|pareto|all] [--cores 8]
+  mxdotp-cli reproduce [fig3|fig4|table3|formats|scaling|serving|pareto|fleet|all] [--cores 8]
                        [--clusters 8] [--fmt e4m3] [--cold-plans] [--policy ...]
                        [--vector-len 1|2|4|8] [--exec cycle|analytic|sampled:N]
                        [--trace-out FILE] [--obs-out FILE]
@@ -610,6 +642,7 @@ USAGE:
                        [--sched continuous|barrier] [--artifacts DIR] [--cold-plans]
                        [--vector-len 1|2|4|8] [--exec cycle|analytic|sampled:N]
                        [--trace-out FILE] [--obs-out FILE]
+                       [--machines 1] [--router affinity|rr]
   mxdotp-cli info
 
 --fmt selects the MX element format end to end (all six OCP formats:
@@ -645,6 +678,19 @@ rejected); the barrier scheduler always uses one whole-machine fabric.
 single-request cost); --queue-cap bounds the admission queue.
 'reproduce serving' prints the goodput-vs-load comparison of the two
 schedulers on the same traces.
+
+--machines N replicates the serving machine into an N-machine fleet
+(DESIGN.md §17) behind a deterministic global router; every other
+serve flag still shapes the per-machine engine. --router picks the
+placement policy: 'affinity' (default) routes each request to the
+machine with the least estimated finish cost counting the weight
+reload its precision policy would pay there, so same-policy traffic
+sticks to already-resident machines; 'rr' is plain round-robin.
+Fleet runs cost requests with the calibrated analytic model, so
+--machines N > 1 requires --exec analytic or --exec sampled:N (the
+spot-checked variant audits the merged fleet population). 'reproduce
+fleet' prints the fleet sweep: goodput/p99/utilization per machine
+count for both routers on one mixed-policy trace.
 
 --vector-len N sets the VMXDOTP vector length: how many MX blocks one
 dot-product instruction consumes (DESIGN.md §16). 1 (default) runs the
@@ -1127,6 +1173,67 @@ mod tests {
             parse(&argv("reproduce serving --clusters 8")),
             Ok(Command::Reproduce { ref what, clusters: 8, .. }) if what == "serving"
         ));
+    }
+
+    #[test]
+    fn parse_serve_fleet_flags() {
+        // defaults: a one-machine "fleet" behind the affinity router
+        assert!(matches!(
+            parse(&argv("serve")),
+            Ok(Command::Serve { machines: 1, router: RouterKind::Affinity, .. })
+        ));
+        assert!(matches!(
+            parse(&argv("serve --machines 4 --router rr --exec analytic")),
+            Ok(Command::Serve { machines: 4, router: RouterKind::RoundRobin, .. })
+        ));
+        // 'round-robin' is accepted as an alias for 'rr'
+        assert!(matches!(
+            parse(&argv("serve --machines 2 --router round-robin --exec sampled:8")),
+            Ok(Command::Serve { machines: 2, router: RouterKind::RoundRobin, .. })
+        ));
+        assert!(matches!(
+            parse(&argv("serve --machines 3 --router affinity --exec analytic")),
+            Ok(Command::Serve { machines: 3, router: RouterKind::Affinity, .. })
+        ));
+        // --router alone is fine on one machine (it routes everything
+        // to machine 0 either way)
+        assert!(parse(&argv("serve --router rr")).is_ok());
+    }
+
+    #[test]
+    fn serve_fleet_flag_validation_errors() {
+        // an empty fleet has nowhere to route
+        let err = parse(&argv("serve --machines 0")).unwrap_err();
+        assert!(err.0.contains("--machines"), "{err}");
+        assert!(err.0.contains("at least 1"), "{err}");
+        // fleets cost requests analytically; the default cycle executor
+        // is rejected with guidance toward analytic/sampled
+        let err = parse(&argv("serve --machines 2")).unwrap_err();
+        assert!(err.0.contains("analytic"), "{err}");
+        assert!(err.0.contains("sampled"), "{err}");
+        assert!(parse(&argv("serve --machines 2 --exec cycle")).is_err());
+        // unknown routers list the supported set
+        let err = parse(&argv("serve --router warp --exec analytic")).unwrap_err();
+        assert!(err.0.contains("unknown router 'warp'"), "{err}");
+        assert!(err.0.contains("affinity") && err.0.contains("rr"), "{err}");
+    }
+
+    #[test]
+    fn parse_reproduce_fleet_target() {
+        assert!(matches!(
+            parse(&argv("reproduce fleet")),
+            Ok(Command::Reproduce { ref what, exec: ExecMode::Cycle, .. }) if what == "fleet"
+        ));
+        // the fleet sweep accepts the analytic/sampled executors
+        assert!(matches!(
+            parse(&argv("reproduce fleet --exec sampled:64")),
+            Ok(Command::Reproduce { ref what, exec: ExecMode::Sampled(64), .. })
+                if what == "fleet"
+        ));
+        assert!(parse(&argv("reproduce fleet --exec analytic")).is_ok());
+        // and shows up in the unknown-target error listing
+        let err = parse(&argv("reproduce fig9")).unwrap_err();
+        assert!(err.0.contains("fleet"), "{err}");
     }
 
     #[test]

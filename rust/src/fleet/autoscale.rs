@@ -1,0 +1,241 @@
+//! Hysteresis-based machine autoscaling (DESIGN.md §17): lease and
+//! release machines against offered load, measured in simulated ticks.
+//!
+//! The scaler divides sim time into fixed epochs and bills each
+//! arrival's analytic service ticks (from the same
+//! [`CostModel`](crate::serve::CostModel) the router estimates with)
+//! to the epoch it arrives in. At every epoch boundary it computes offered
+//! utilization — billed ticks over `active × fabrics × epoch` capacity
+//! — and moves the lease by at most one machine: up when utilization
+//! clears `hi_util`, down when it drops below `lo_util`, never outside
+//! `[min_machines, max_machines]`, and never within `cooldown_ticks`
+//! of the previous action. The hi/lo gap plus the cooldown is the
+//! hysteresis: because consecutive scale events are structurally at
+//! least a cooldown apart, a lease→release→lease flip inside one
+//! cooldown window cannot be produced at all — the no-thrash property
+//! `tests/fleet.rs` pins.
+//!
+//! Released machines stop receiving *new* requests but keep draining
+//! what was already routed to them; nothing in-flight is dropped.
+
+/// Autoscaling policy for a fleet run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Smallest lease the scaler may shrink to (≥ 1).
+    pub min_machines: usize,
+    /// Largest lease the scaler may grow to (≤ fleet size).
+    pub max_machines: usize,
+    /// Epoch length in ticks over which offered load is measured.
+    pub epoch_ticks: u64,
+    /// Scale up when epoch utilization exceeds this (e.g. 0.85).
+    pub hi_util: f64,
+    /// Scale down when epoch utilization falls below this (e.g. 0.30).
+    /// Must be strictly below `hi_util` — the gap is the hysteresis.
+    pub lo_util: f64,
+    /// Minimum ticks between two scale actions.
+    pub cooldown_ticks: u64,
+}
+
+impl AutoscaleConfig {
+    /// Validate thresholds and bounds; returns a human-readable error.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.min_machines == 0 || self.max_machines < self.min_machines {
+            return Err("autoscale requires 1 <= min_machines <= max_machines".into());
+        }
+        if self.epoch_ticks == 0 {
+            return Err("autoscale epoch must be at least one tick".into());
+        }
+        if !(self.lo_util >= 0.0 && self.lo_util < self.hi_util && self.hi_util.is_finite()) {
+            return Err("autoscale requires 0 <= lo_util < hi_util (the hysteresis gap)".into());
+        }
+        Ok(())
+    }
+}
+
+/// One autoscaler action: the lease moved from `from` to `to` active
+/// machines at the given epoch-boundary tick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScaleEvent {
+    /// Sim tick of the epoch boundary the action fired at.
+    pub tick: u64,
+    /// Active machines before the action.
+    pub from: usize,
+    /// Active machines after the action.
+    pub to: usize,
+    /// Epoch utilization (per mille, integer so the event log stays
+    /// byte-stable in artifacts) that triggered the action.
+    pub util_permille: u32,
+}
+
+/// Mutable scaler state. Internal to `simulate_fleet`.
+pub(crate) struct Autoscaler {
+    cfg: AutoscaleConfig,
+    fabrics: u64,
+    active: usize,
+    peak: usize,
+    epoch_start: u64,
+    epoch_cost_ticks: u64,
+    last_action_tick: Option<u64>,
+    events: Vec<ScaleEvent>,
+}
+
+impl Autoscaler {
+    pub(crate) fn new(cfg: &AutoscaleConfig, fabrics: usize) -> Self {
+        Autoscaler {
+            cfg: *cfg,
+            fabrics: fabrics.max(1) as u64,
+            active: cfg.min_machines,
+            peak: cfg.min_machines,
+            epoch_start: 0,
+            epoch_cost_ticks: 0,
+            last_action_tick: None,
+            events: Vec::new(),
+        }
+    }
+
+    pub(crate) fn active(&self) -> usize {
+        self.active
+    }
+
+    pub(crate) fn peak(&self) -> usize {
+        self.peak
+    }
+
+    pub(crate) fn into_events(self) -> Vec<ScaleEvent> {
+        self.events
+    }
+
+    /// Bill one arrival at `tick` costing `cost_ticks`, closing any
+    /// epochs the trace has advanced past. Returns the lease active
+    /// for this arrival.
+    pub(crate) fn observe(&mut self, tick: u64, cost_ticks: u64) -> usize {
+        while tick >= self.epoch_start + self.cfg.epoch_ticks {
+            let boundary = self.epoch_start + self.cfg.epoch_ticks;
+            let capacity = (self.active as u64) * self.fabrics * self.cfg.epoch_ticks;
+            let util = self.epoch_cost_ticks as f64 / capacity as f64;
+            let cooled = match self.last_action_tick {
+                None => true,
+                Some(last) => boundary.saturating_sub(last) >= self.cfg.cooldown_ticks,
+            };
+            let target = if util > self.cfg.hi_util {
+                (self.active + 1).min(self.cfg.max_machines)
+            } else if util < self.cfg.lo_util {
+                self.active.saturating_sub(1).max(self.cfg.min_machines)
+            } else {
+                self.active
+            };
+            if cooled && target != self.active {
+                self.events.push(ScaleEvent {
+                    tick: boundary,
+                    from: self.active,
+                    to: target,
+                    util_permille: (util * 1000.0).round() as u32,
+                });
+                self.active = target;
+                self.peak = self.peak.max(target);
+                self.last_action_tick = Some(boundary);
+            }
+            self.epoch_cost_ticks = 0;
+            self.epoch_start = boundary;
+        }
+        self.epoch_cost_ticks += cost_ticks;
+        self.active
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_machines: 1,
+            max_machines: 4,
+            epoch_ticks: 1000,
+            hi_util: 0.85,
+            lo_util: 0.30,
+            cooldown_ticks: 3000,
+        }
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        assert!(cfg().validate().is_ok());
+        let mut c = cfg();
+        c.min_machines = 0;
+        assert!(c.validate().is_err());
+        let mut c = cfg();
+        c.max_machines = 0;
+        assert!(c.validate().is_err());
+        let mut c = cfg();
+        c.epoch_ticks = 0;
+        assert!(c.validate().is_err());
+        let mut c = cfg();
+        c.lo_util = 0.9; // >= hi_util: no hysteresis gap
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn scales_up_under_load_and_down_when_idle() {
+        let mut sc = Autoscaler::new(&cfg(), 1);
+        // epoch 0 overloaded: 2000 cost ticks into a 1000-tick epoch
+        // on one machine of one fabric.
+        for t in 0..100u64 {
+            sc.observe(t * 10, 20);
+        }
+        // first arrival past the boundary closes epoch 0 -> lease 2
+        assert_eq!(sc.observe(1000, 20), 2);
+        assert_eq!(sc.peak(), 2);
+        // long idle stretch: epochs with ~0 utilization close as the
+        // trace advances, but releases respect the 3000-tick cooldown.
+        assert_eq!(sc.observe(3_000, 0), 2); // boundary 2000: cooled? 2000-1000=1000 < 3000 -> hold
+        assert_eq!(sc.observe(4_500, 0), 1); // boundary 4000: 4000-1000 >= 3000 -> release
+        let events = sc.into_events();
+        assert_eq!(events.len(), 2);
+        assert_eq!((events[0].from, events[0].to, events[0].tick), (1, 2, 1000));
+        assert_eq!((events[1].from, events[1].to, events[1].tick), (2, 1, 4000));
+        // consecutive events are at least a cooldown apart, always.
+        assert!(events[1].tick - events[0].tick >= 3000);
+    }
+
+    #[test]
+    fn lease_stays_inside_bounds() {
+        let mut c = cfg();
+        c.cooldown_ticks = 0;
+        let mut sc = Autoscaler::new(&c, 1);
+        // overload forever: lease climbs to max_machines and stops
+        for e in 1..20u64 {
+            sc.observe(e * 1000, 5000);
+        }
+        assert_eq!(sc.active(), 4);
+        // idle forever: lease falls back to min_machines and stops
+        for e in 20..40u64 {
+            sc.observe(e * 1000, 0);
+        }
+        assert_eq!(sc.active(), 1);
+    }
+
+    #[test]
+    fn events_are_deterministic_and_cooldown_spaced() {
+        let run = || {
+            let mut sc = Autoscaler::new(&cfg(), 2);
+            for t in 0..50_000u64 {
+                // load oscillates to tempt the scaler into thrashing
+                let cost = if (t / 5000) % 2 == 0 { 40 } else { 0 };
+                sc.observe(t, cost);
+            }
+            sc.into_events()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "scale events must be bit-deterministic");
+        assert!(!a.is_empty());
+        for w in a.windows(2) {
+            assert!(
+                w[1].tick - w[0].tick >= cfg().cooldown_ticks,
+                "thrash: events at {} and {}",
+                w[0].tick,
+                w[1].tick
+            );
+        }
+    }
+}

@@ -1,0 +1,635 @@
+//! Fleet-scale serving (DESIGN.md §17): N replicated machines — each a
+//! full [`serve`](crate::serve) engine over its own fabrics — behind a
+//! deterministic global router, with per-tenant fair-share admission
+//! and hysteresis autoscaling, replaying millions of generated
+//! requests in simulated ticks.
+//!
+//! The layer is deliberately phased so every stage is a pure function
+//! of `(config, trace, tenant tags)`:
+//!
+//! 1. **Route** ([`router`]): one arrival-ordered pass assigns each
+//!    admitted request to a machine. The affinity router keeps
+//!    policy-resident machines warm (fp4-ffn traffic lands where
+//!    fp4-ffn weights are staged) and only spills when the backlog gap
+//!    out-costs the reload; round-robin is the policy-blind baseline.
+//!    Fair-share ([`fairshare`]) and autoscaling ([`autoscale`])
+//!    decisions happen inline in the same pass, from the router's own
+//!    backlog estimates.
+//! 2. **Serve**: each machine independently runs the unmodified PR 4
+//!    engine ([`serve::simulate`]) over its sub-trace. With one
+//!    machine and no fleet policies, the sub-trace *is* the trace, so
+//!    `--machines 1` is tick-identical to the single-machine engine by
+//!    construction (pinned in `tests/fleet.rs`).
+//! 3. **Merge**: fleet metrics roll up from per-machine outcomes —
+//!    latency percentiles over the *merged* sample population (never
+//!    averaged per-machine percentiles; see
+//!    [`serve::merged_latency_percentiles`]), goodput and utilization
+//!    over the shared horizon, per-tenant attribution by request ID.
+//!
+//! No host state, no randomness outside the seeded trace: BENCH_fleet
+//! artifacts byte-compare across double runs in CI.
+
+pub mod autoscale;
+pub mod fairshare;
+pub mod router;
+
+pub use autoscale::{AutoscaleConfig, ScaleEvent};
+pub use fairshare::FairShareConfig;
+pub use router::RouterKind;
+
+use crate::serve::scheduler::ServeOutcome;
+use crate::serve::{
+    self, merged_latency_percentiles, resolve_slo_ticks, CostModel, Percentiles, ServeConfig,
+};
+use crate::workload::arrivals::Arrival;
+use std::collections::HashMap;
+
+/// Configuration of one fleet run: the per-machine engine config
+/// replicated `machines` times behind a router, plus optional fleet
+/// policies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetConfig {
+    /// The single-machine serving config every replica runs.
+    pub machine: ServeConfig,
+    /// Number of replicated machines in the fleet (≥ 1).
+    pub machines: usize,
+    /// Placement discipline of the global router.
+    pub router: RouterKind,
+    /// Per-tenant fair-share admission; `None` admits everything the
+    /// per-machine controllers accept.
+    pub fairshare: Option<FairShareConfig>,
+    /// Hysteresis autoscaling over the machine lease; `None` keeps
+    /// every machine active for the whole run.
+    pub autoscale: Option<AutoscaleConfig>,
+}
+
+impl FleetConfig {
+    /// A fleet with no fair-share gate and no autoscaler.
+    pub fn new(machine: ServeConfig, machines: usize, router: RouterKind) -> Self {
+        FleetConfig { machine, machines, router, fairshare: None, autoscale: None }
+    }
+
+    /// Validate the fleet shape and both optional policies.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.machines == 0 {
+            return Err("fleet must have at least one machine".into());
+        }
+        self.machine.validate()?;
+        if let Some(fs) = &self.fairshare {
+            fs.validate()?;
+        }
+        if let Some(a) = &self.autoscale {
+            a.validate()?;
+            if a.max_machines > self.machines {
+                return Err(format!(
+                    "autoscale max_machines {} exceeds fleet size {}",
+                    a.max_machines, self.machines
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Why the fleet turned a request away before any machine saw it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetRejectReason {
+    /// The fair-share gate was saturated and the tenant's token bucket
+    /// was empty (it exceeded its weighted admission share).
+    FairShare,
+}
+
+/// One request rejected at the fleet boundary (typed, never silent —
+/// the conservation invariant counts these alongside per-machine
+/// rejects).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FleetRejected {
+    /// Trace id of the request.
+    pub id: u64,
+    /// Tenant it belonged to.
+    pub tenant: u32,
+    /// When it arrived.
+    pub arrival_tick: u64,
+    /// Why the fleet refused it.
+    pub reason: FleetRejectReason,
+}
+
+/// One machine's share of a fleet run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MachineOutcome {
+    /// Machine index in the fleet.
+    pub machine: usize,
+    /// Requests the router sent here.
+    pub routed: usize,
+    /// The machine's full PR 4 serving outcome over its sub-trace.
+    pub outcome: ServeOutcome,
+}
+
+/// Per-tenant request accounting across the whole fleet.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    /// Tenant ID the row describes.
+    pub tenant: u32,
+    /// Requests the tenant offered.
+    pub offered: usize,
+    /// Rejected at the fleet boundary (fair share).
+    pub fleet_rejected: usize,
+    /// Rejected by a machine's admission controller.
+    pub machine_rejected: usize,
+    /// Served to completion.
+    pub served: usize,
+    /// Served within the SLO.
+    pub served_in_slo: usize,
+}
+
+/// Everything one fleet run produced. Every offered request appears
+/// exactly once across `fleet_rejected` and the per-machine
+/// `served`/`rejected` sets (the conservation invariant of
+/// `tests/fleet.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetOutcome {
+    /// Router discipline that produced this outcome.
+    pub router: RouterKind,
+    /// SLO the run is measured against, in ticks (shared by every
+    /// machine).
+    pub slo_ticks: u64,
+    /// Fabrics per machine (for utilization denominators).
+    pub fabrics_per_machine: usize,
+    /// Per-machine outcomes, indexed by machine.
+    pub machines: Vec<MachineOutcome>,
+    /// Requests rejected at the fleet boundary, arrival order.
+    pub fleet_rejected: Vec<FleetRejected>,
+    /// Autoscaler actions, in tick order (empty without a scaler).
+    pub scale_events: Vec<ScaleEvent>,
+    /// Largest machine lease the run ever held (= `machines.len()`
+    /// without a scaler).
+    pub peak_machines: usize,
+    /// Per-tenant accounting, indexed by tenant ID.
+    pub per_tenant: Vec<TenantStats>,
+    /// Simulated span of the whole run: the latest machine horizon or
+    /// arrival tick, whichever is later (≥ 1).
+    pub horizon_ticks: u64,
+}
+
+impl FleetOutcome {
+    /// Requests offered to the fleet (served + all rejects).
+    pub fn offered(&self) -> usize {
+        self.machines.iter().map(|m| m.outcome.offered()).sum::<usize>()
+            + self.fleet_rejected.len()
+    }
+
+    /// Requests served to completion across all machines.
+    pub fn served(&self) -> usize {
+        self.machines.iter().map(|m| m.outcome.served.len()).sum()
+    }
+
+    /// Served requests that met the SLO, across all machines.
+    pub fn served_in_slo(&self) -> usize {
+        self.machines.iter().map(|m| m.outcome.served_in_slo()).sum()
+    }
+
+    /// Requests rejected by per-machine admission controllers.
+    pub fn machine_rejected(&self) -> usize {
+        self.machines.iter().map(|m| m.outcome.rejected.len()).sum()
+    }
+
+    /// SLO-compliant completions per kilotick over the fleet horizon.
+    pub fn goodput_per_ktick(&self) -> f64 {
+        self.served_in_slo() as f64 * 1000.0 / self.horizon_ticks as f64
+    }
+
+    /// All completions per kilotick over the fleet horizon.
+    pub fn throughput_per_ktick(&self) -> f64 {
+        self.served() as f64 * 1000.0 / self.horizon_ticks as f64
+    }
+
+    /// Fleet latency percentiles over the **merged** per-machine
+    /// sample population (order statistics, never averaged
+    /// percentiles — see [`serve::merged_latency_percentiles`]).
+    pub fn percentiles(&self) -> Percentiles {
+        let per_machine: Vec<Vec<u64>> =
+            self.machines.iter().map(|m| m.outcome.latencies_ticks()).collect();
+        merged_latency_percentiles(&per_machine)
+    }
+
+    /// Busy fraction of every fabric the fleet *owns* over the shared
+    /// horizon (leased-but-idle and released machines both count in
+    /// the denominator — this is the capacity bill, not the lease
+    /// bill).
+    pub fn utilization(&self) -> f64 {
+        let busy: u64 = self
+            .machines
+            .iter()
+            .map(|m| m.outcome.fabric_busy_ticks.iter().sum::<u64>())
+            .sum();
+        let capacity =
+            (self.machines.len() * self.fabrics_per_machine) as u64 * self.horizon_ticks;
+        busy as f64 / capacity as f64
+    }
+
+    /// Weight reloads paid across all machines.
+    pub fn reloads(&self) -> u64 {
+        self.machines.iter().map(|m| m.outcome.reloads).sum()
+    }
+
+    /// Weight-reload ticks paid across all machines (the quantity the
+    /// affinity router exists to minimize; see
+    /// [`machine_reload_ticks`]).
+    pub fn reload_ticks(&self, costs: &CostModel) -> u64 {
+        self.machines.iter().map(|m| machine_reload_ticks(&m.outcome, costs)).sum()
+    }
+
+    /// A single machine-shaped view of the whole fleet, for reuse of
+    /// per-outcome tooling (the fleet spot-check audits exactly this
+    /// view). Served rows are re-sorted by dispatch tick; fabric and
+    /// batch IDs are offset per machine so they stay unique
+    /// fleet-wide.
+    pub fn merged(&self) -> ServeOutcome {
+        let mut served = Vec::with_capacity(self.served());
+        let mut rejected = Vec::with_capacity(self.machine_rejected());
+        let mut fabric_busy = Vec::new();
+        let (mut batches, mut reloads, mut batch_base) = (0u64, 0u64, 0u64);
+        for m in &self.machines {
+            for row in &m.outcome.served {
+                let mut row = *row;
+                row.fabric += m.machine * self.fabrics_per_machine;
+                row.batch_id += batch_base;
+                served.push(row);
+            }
+            rejected.extend_from_slice(&m.outcome.rejected);
+            fabric_busy.extend_from_slice(&m.outcome.fabric_busy_ticks);
+            batches += m.outcome.batches;
+            reloads += m.outcome.reloads;
+            let max_id =
+                m.outcome.served.iter().map(|r| r.batch_id + 1).max().unwrap_or(0);
+            batch_base += m.outcome.batches.max(max_id);
+        }
+        served.sort_by_key(|r| (r.dispatch_tick, r.complete_tick, r.id));
+        rejected.sort_by_key(|r| (r.arrival_tick, r.id));
+        ServeOutcome {
+            scheduler: self.machines[0].outcome.scheduler,
+            slo_ticks: self.slo_ticks,
+            served,
+            rejected,
+            horizon_ticks: self.horizon_ticks,
+            batches,
+            reloads,
+            fabric_busy_ticks: fabric_busy,
+        }
+    }
+}
+
+/// Weight-reload ticks one machine outcome actually paid, recovered
+/// from its attribution: within a batch, the gap between the first
+/// dispatch and the first service start is per-batch setup plus any
+/// weight reload, so `reload = gap − setup_ticks` summed over batches.
+pub fn machine_reload_ticks(outcome: &ServeOutcome, costs: &CostModel) -> u64 {
+    let mut total = 0u64;
+    for batch in serve::batches_in_dispatch_order(outcome) {
+        let dispatch = batch.iter().map(|r| r.dispatch_tick).min().unwrap_or(0);
+        let svc_start = batch
+            .iter()
+            .map(|r| r.complete_tick.saturating_sub(r.service_ticks))
+            .min()
+            .unwrap_or(0);
+        total += svc_start.saturating_sub(dispatch).saturating_sub(costs.setup_ticks);
+    }
+    total
+}
+
+/// Replay a tenant-tagged arrival trace through the fleet.
+///
+/// `tenants[i]` tags `trace[i]` (see
+/// [`crate::workload::arrivals::assign_tenants`]); an empty slice puts
+/// every request in tenant 0. Panics on an invalid config, an unsorted
+/// trace, or a tenant slice that is neither empty nor 1:1 with the
+/// trace — the same loud-failure contract as [`serve::simulate`].
+///
+/// The outcome is a pure function of `(cfg, trace, tenants)`: routing,
+/// admission, and scaling all run in one arrival-ordered pass with no
+/// host state, then each machine simulates its sub-trace
+/// independently.
+pub fn simulate_fleet(cfg: &FleetConfig, trace: &[Arrival], tenants: &[u32]) -> FleetOutcome {
+    if let Err(e) = cfg.validate() {
+        panic!("invalid fleet config: {e}");
+    }
+    assert!(
+        trace.windows(2).all(|w| w[0].tick <= w[1].tick),
+        "arrival trace must be sorted by tick"
+    );
+    assert!(
+        tenants.is_empty() || tenants.len() == trace.len(),
+        "tenant tags must be empty or exactly one per arrival"
+    );
+
+    let costs = CostModel::build(&cfg.machine);
+    let fabrics = cfg.machine.fabric_count();
+    let mut rt = router::Router::new(cfg.router, cfg.machines, fabrics);
+    let mut fair = cfg.fairshare.as_ref().map(fairshare::FairShare::new);
+    let mut scaler = cfg.autoscale.as_ref().map(|a| autoscale::Autoscaler::new(a, fabrics));
+
+    let mut subs: Vec<Vec<Arrival>> = vec![Vec::new(); cfg.machines];
+    let mut fleet_rejected: Vec<FleetRejected> = Vec::new();
+    let mut tenant_of: HashMap<u64, u32> = HashMap::with_capacity(trace.len());
+
+    for (i, a) in trace.iter().enumerate() {
+        let tenant = tenants.get(i).copied().unwrap_or(0);
+        tenant_of.insert(a.id, tenant);
+        let active = match scaler.as_mut() {
+            Some(s) => s.observe(a.tick, costs.svc_policy_ticks(&a.policy)),
+            None => cfg.machines,
+        };
+        if let Some(fs) = fair.as_mut() {
+            let saturated = rt.min_backlog(a.tick, active) > fs.saturation_ticks();
+            if !fs.admit(a.tick, tenant, saturated) {
+                fleet_rejected.push(FleetRejected {
+                    id: a.id,
+                    tenant,
+                    arrival_tick: a.tick,
+                    reason: FleetRejectReason::FairShare,
+                });
+                continue;
+            }
+        }
+        let m = rt.route(a.tick, &a.policy, active, &costs);
+        subs[m].push(*a);
+    }
+
+    let slo = resolve_slo_ticks(&cfg.machine);
+    let mut machines = Vec::with_capacity(cfg.machines);
+    for (m, sub) in subs.iter().enumerate() {
+        let outcome = if sub.is_empty() {
+            // A machine that never saw traffic: an empty outcome (the
+            // engine itself requires a non-empty trace's worth of
+            // work to have a horizon).
+            ServeOutcome {
+                scheduler: cfg.machine.scheduler,
+                slo_ticks: slo,
+                served: Vec::new(),
+                rejected: Vec::new(),
+                horizon_ticks: 0,
+                batches: 0,
+                reloads: 0,
+                fabric_busy_ticks: vec![0; fabrics],
+            }
+        } else {
+            serve::simulate(&cfg.machine, sub)
+        };
+        machines.push(MachineOutcome { machine: m, routed: sub.len(), outcome });
+    }
+
+    let n_tenants = tenant_of
+        .values()
+        .map(|&t| t as usize + 1)
+        .max()
+        .unwrap_or(0)
+        .max(cfg.fairshare.as_ref().map(|f| f.weights.len()).unwrap_or(0))
+        .max(1);
+    let mut per_tenant: Vec<TenantStats> = (0..n_tenants)
+        .map(|t| TenantStats { tenant: t as u32, ..TenantStats::default() })
+        .collect();
+    for (i, a) in trace.iter().enumerate() {
+        let t = tenants.get(i).copied().unwrap_or(0) as usize;
+        per_tenant[t].offered += 1;
+    }
+    for r in &fleet_rejected {
+        per_tenant[r.tenant as usize].fleet_rejected += 1;
+    }
+    for m in &machines {
+        for r in &m.outcome.served {
+            let t = tenant_of[&r.id] as usize;
+            per_tenant[t].served += 1;
+            if r.latency_ticks() <= slo {
+                per_tenant[t].served_in_slo += 1;
+            }
+        }
+        for r in &m.outcome.rejected {
+            per_tenant[tenant_of[&r.id] as usize].machine_rejected += 1;
+        }
+    }
+
+    let horizon = machines
+        .iter()
+        .map(|m| m.outcome.horizon_ticks)
+        .max()
+        .unwrap_or(0)
+        .max(trace.last().map(|a| a.tick).unwrap_or(0))
+        .max(1);
+    let (peak, scale_events) = match scaler {
+        Some(s) => (s.peak(), s.into_events()),
+        None => (cfg.machines, Vec::new()),
+    };
+
+    FleetOutcome {
+        router: cfg.router,
+        slo_ticks: slo,
+        fabrics_per_machine: fabrics,
+        machines,
+        fleet_rejected,
+        scale_events,
+        peak_machines: peak,
+        per_tenant,
+        horizon_ticks: horizon,
+    }
+}
+
+/// Fleet-path calibration spot-check (DESIGN.md §15 extended to §17):
+/// audit a deterministic 1-in-`every` sample of served requests across
+/// *all* machines on the cycle engine, via the exact same selection
+/// and tolerance contract as the single-machine
+/// [`serve::spot_check_sampled`] — applied to the fleet's merged
+/// outcome view.
+pub fn spot_check_fleet(
+    cfg: &FleetConfig,
+    out: &FleetOutcome,
+    every: u32,
+    seed: u64,
+) -> serve::SpotCheckReport {
+    serve::spot_check_sampled(&cfg.machine, &out.merged(), every, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::ElemFormat;
+    use crate::model::PrecisionPolicy;
+    use crate::workload::arrivals::{
+        assign_policy_classes, assign_tenants, generate_trace, ArrivalSpec, TenantSpec,
+    };
+
+    fn small_cfg() -> ServeConfig {
+        use crate::workload::DeitConfig;
+        ServeConfig {
+            model: DeitConfig { seq: 64, ..DeitConfig::default() },
+            clusters: 4,
+            fabrics: 2,
+            ..ServeConfig::default()
+        }
+    }
+
+    fn mixed_policy_trace(requests: usize, rate: f64, seed: u64) -> Vec<Arrival> {
+        let mut trace =
+            generate_trace(&ArrivalSpec::poisson(rate, ElemFormat::E4M3, requests, seed));
+        assign_policy_classes(
+            &mut trace,
+            &[
+                (ElemFormat::E4M3, PrecisionPolicy::preset("all-fp8").unwrap(), 0.4),
+                (ElemFormat::E2M1, PrecisionPolicy::preset("all-fp4").unwrap(), 0.4),
+                (ElemFormat::E5M2, PrecisionPolicy::preset("fp4-ffn").unwrap(), 0.2),
+            ],
+            seed ^ 0x5a5a,
+        );
+        trace
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_fleets() {
+        let ok = FleetConfig::new(small_cfg(), 2, RouterKind::Affinity);
+        assert!(ok.validate().is_ok());
+        assert!(FleetConfig { machines: 0, ..ok.clone() }.validate().is_err());
+        let scaled = FleetConfig {
+            autoscale: Some(AutoscaleConfig {
+                min_machines: 1,
+                max_machines: 3, // exceeds the 2-machine fleet
+                epoch_ticks: 1000,
+                hi_util: 0.8,
+                lo_util: 0.2,
+                cooldown_ticks: 0,
+            }),
+            ..ok
+        };
+        assert!(scaled.validate().is_err());
+    }
+
+    #[test]
+    fn single_machine_fleet_is_the_single_machine_engine() {
+        let cfg = small_cfg();
+        let trace = mixed_policy_trace(120, 4.0, 11);
+        let single = serve::simulate(&cfg, &trace);
+        for router in [RouterKind::Affinity, RouterKind::RoundRobin] {
+            let fleet =
+                simulate_fleet(&FleetConfig::new(cfg, 1, router), &trace, &[]);
+            assert_eq!(fleet.machines.len(), 1);
+            assert_eq!(
+                fleet.machines[0].outcome, single,
+                "machines=1 must be tick-identical to the PR 4 engine"
+            );
+        }
+    }
+
+    #[test]
+    fn conservation_and_tenant_attribution() {
+        let cfg = FleetConfig {
+            fairshare: Some(FairShareConfig {
+                weights: vec![3.0, 1.0],
+                admit_rate_per_ktick: 6.0,
+                burst: 4.0,
+                saturation_ticks: 500,
+            }),
+            ..FleetConfig::new(small_cfg(), 3, RouterKind::Affinity)
+        };
+        let trace = mixed_policy_trace(300, 12.0, 7);
+        let tenants = assign_tenants(&trace, &TenantSpec { weights: vec![1.0, 1.0], seed: 5 });
+        let out = simulate_fleet(&cfg, &trace, &tenants);
+        // every arrival lands exactly once somewhere typed
+        assert_eq!(out.offered(), 300);
+        assert_eq!(
+            out.served() + out.machine_rejected() + out.fleet_rejected.len(),
+            300
+        );
+        let mut ids: Vec<u64> = out
+            .machines
+            .iter()
+            .flat_map(|m| m.outcome.served.iter().map(|r| r.id))
+            .chain(out.machines.iter().flat_map(|m| m.outcome.rejected.iter().map(|r| r.id)))
+            .chain(out.fleet_rejected.iter().map(|r| r.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..300).collect::<Vec<u64>>(), "ids must partition exactly");
+        // tenant rows tally to the same totals
+        assert_eq!(out.per_tenant.iter().map(|t| t.offered).sum::<usize>(), 300);
+        for t in &out.per_tenant {
+            assert_eq!(
+                t.offered,
+                t.served + t.machine_rejected + t.fleet_rejected,
+                "tenant {} rows must balance",
+                t.tenant
+            );
+            assert!(t.served_in_slo <= t.served);
+        }
+    }
+
+    #[test]
+    fn merged_view_is_coherent() {
+        let cfg = FleetConfig::new(small_cfg(), 2, RouterKind::RoundRobin);
+        let trace = mixed_policy_trace(150, 8.0, 3);
+        let out = simulate_fleet(&cfg, &trace, &[]);
+        let merged = out.merged();
+        assert_eq!(merged.served.len(), out.served());
+        assert_eq!(merged.offered() + out.fleet_rejected.len(), out.offered());
+        assert_eq!(merged.fabric_busy_ticks.len(), 2 * out.fabrics_per_machine);
+        // offset fabric ids stay inside the fleet-wide range
+        assert!(merged
+            .served
+            .iter()
+            .all(|r| r.fabric < 2 * out.fabrics_per_machine));
+        // offset batch ids never collide across machines
+        let mut pairs: Vec<(u64, usize)> =
+            merged.served.iter().map(|r| (r.batch_id, r.fabric)).collect();
+        pairs.sort_unstable();
+        pairs.dedup();
+        let mut batch_ids: Vec<u64> = pairs.iter().map(|&(b, _)| b).collect();
+        batch_ids.dedup();
+        assert_eq!(batch_ids.len(), pairs.len(), "one batch id must map to one fabric");
+        // merged percentiles equal the fleet rollup
+        assert_eq!(merged.percentiles(), out.percentiles());
+    }
+
+    #[test]
+    fn affinity_pays_fewer_reload_ticks_than_round_robin() {
+        let machine = small_cfg();
+        let trace = mixed_policy_trace(400, 10.0, 21);
+        let costs = CostModel::build(&machine);
+        let affinity = simulate_fleet(
+            &FleetConfig::new(machine, 3, RouterKind::Affinity),
+            &trace,
+            &[],
+        );
+        let rr = simulate_fleet(
+            &FleetConfig::new(machine, 3, RouterKind::RoundRobin),
+            &trace,
+            &[],
+        );
+        assert!(
+            affinity.reload_ticks(&costs) < rr.reload_ticks(&costs),
+            "affinity {} vs rr {} reload ticks",
+            affinity.reload_ticks(&costs),
+            rr.reload_ticks(&costs)
+        );
+    }
+
+    #[test]
+    fn spot_check_audits_the_merged_fleet_outcome() {
+        // tiny model so the cycle-engine audit stays cheap in tests
+        use crate::workload::DeitConfig;
+        let machine = ServeConfig {
+            model: DeitConfig { seq: 16, ..DeitConfig::default() },
+            clusters: 2,
+            fabrics: 2,
+            ..ServeConfig::default()
+        };
+        let cfg = FleetConfig::new(machine, 2, RouterKind::RoundRobin);
+        let trace = mixed_policy_trace(40, 8.0, 13);
+        let out = simulate_fleet(&cfg, &trace, &[]);
+        let rep = spot_check_fleet(&cfg, &out, 8, 42);
+        assert_eq!(rep.population, out.served());
+        assert!(!rep.checks.is_empty(), "a 1-in-8 sample of 40 must check something");
+        // every sampled id resolves to exactly one machine's served set
+        let ids: Vec<u64> = rep.checks.iter().map(|c| c.id).collect();
+        let on_machine = |m: &MachineOutcome| {
+            ids.iter().filter(|i| m.outcome.served.iter().any(|r| r.id == **i)).count()
+        };
+        assert_eq!(on_machine(&out.machines[0]) + on_machine(&out.machines[1]), ids.len());
+        assert!(rep.within_tolerance(), "calibrated model drifted: {}", rep.max_rel_err);
+    }
+}

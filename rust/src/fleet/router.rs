@@ -1,0 +1,146 @@
+//! The deterministic global router (DESIGN.md §17): which machine of
+//! the fleet each admitted request lands on.
+//!
+//! Routing is a single arrival-ordered pass over the trace, before any
+//! machine simulates anything: the router keeps one estimated
+//! free-tick and one resident policy per machine, both updated from
+//! the same analytic [`CostModel`] the per-machine schedulers bill
+//! requests with. Because the pass consumes arrivals in trace order
+//! and holds no host state, the assignment — and therefore every
+//! downstream per-machine outcome — is a pure function of
+//! `(fleet config, trace)`.
+
+use crate::model::PrecisionPolicy;
+use crate::serve::CostModel;
+
+/// Placement discipline of the fleet router.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterKind {
+    /// Reload-aware affinity placement: each request is routed to the
+    /// active machine minimizing `estimated start + reload ticks`,
+    /// where the reload term is zero on machines already resident in
+    /// the request's precision policy. Traffic therefore sticks to
+    /// policy-resident machines (fp4-ffn requests keep landing where
+    /// fp4-ffn weights are staged) until the backlog gap exceeds the
+    /// reload cost — at which point spilling to a cold machine is
+    /// genuinely cheaper and the router does exactly that.
+    Affinity,
+    /// Rotating round-robin over the active machines — the
+    /// policy-blind baseline the affinity bars are measured against.
+    RoundRobin,
+}
+
+impl RouterKind {
+    /// CLI name (`--router affinity|rr`).
+    pub fn name(self) -> &'static str {
+        match self {
+            RouterKind::Affinity => "affinity",
+            RouterKind::RoundRobin => "rr",
+        }
+    }
+
+    /// Parse a CLI router name.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "affinity" => Ok(RouterKind::Affinity),
+            "rr" | "round-robin" => Ok(RouterKind::RoundRobin),
+            other => Err(format!("unknown router '{other}' (expected affinity|rr)")),
+        }
+    }
+}
+
+impl std::fmt::Display for RouterKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Mutable routing state: per-machine backlog estimate + resident
+/// policy, plus the round-robin cursor. Internal to `simulate_fleet`.
+pub(crate) struct Router {
+    kind: RouterKind,
+    /// Policy the machine is (estimated to be) resident in after the
+    /// requests routed so far — what the affinity term keys on.
+    resident: Vec<Option<PrecisionPolicy>>,
+    /// Estimated tick at which the machine's routed backlog drains.
+    est_free: Vec<u64>,
+    /// Round-robin cursor (RoundRobin only).
+    rr_next: usize,
+    /// Fabrics per machine: the backlog estimate divides request cost
+    /// by the machine's parallel servers.
+    fabrics: u64,
+}
+
+impl Router {
+    pub(crate) fn new(kind: RouterKind, machines: usize, fabrics: usize) -> Self {
+        Router {
+            kind,
+            resident: vec![None; machines],
+            est_free: vec![0; machines],
+            rr_next: 0,
+            fabrics: fabrics.max(1) as u64,
+        }
+    }
+
+    /// Estimated backlog of machine `m` at `tick`, in ticks.
+    pub(crate) fn est_backlog(&self, m: usize, tick: u64) -> u64 {
+        self.est_free[m].saturating_sub(tick)
+    }
+
+    /// Smallest estimated backlog over the first `active` machines —
+    /// the fair-share saturation signal (the fleet is saturated when
+    /// even its least-loaded machine is deep in backlog).
+    pub(crate) fn min_backlog(&self, tick: u64, active: usize) -> u64 {
+        (0..active.min(self.est_free.len()))
+            .map(|m| self.est_backlog(m, tick))
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Pick the machine for one request arriving at `tick` under
+    /// `policy`, and charge the estimate. `active` bounds the
+    /// selectable machines (the autoscaler's current lease).
+    pub(crate) fn route(
+        &mut self,
+        tick: u64,
+        policy: &PrecisionPolicy,
+        active: usize,
+        costs: &CostModel,
+    ) -> usize {
+        let active = active.clamp(1, self.est_free.len());
+        let m = match self.kind {
+            RouterKind::RoundRobin => {
+                let m = self.rr_next % active;
+                self.rr_next = (self.rr_next + 1) % active;
+                m
+            }
+            RouterKind::Affinity => {
+                // min over machines of (estimated start + reload paid
+                // there); ties go to the lowest index, so the choice is
+                // total-ordered and deterministic.
+                let mut best = 0usize;
+                let mut best_score = u64::MAX;
+                for (cand, &free) in self.est_free.iter().enumerate().take(active) {
+                    let start = free.max(tick);
+                    let reload =
+                        costs.reload_ticks_between(self.resident[cand].as_ref(), policy);
+                    let score = start + reload;
+                    if score < best_score {
+                        best_score = score;
+                        best = cand;
+                    }
+                }
+                best
+            }
+        };
+        let reload = costs.reload_ticks_between(self.resident[m].as_ref(), policy);
+        // The per-request charge: service plus any reload, spread over
+        // the machine's parallel fabrics. A heuristic estimate (the
+        // real schedulers batch and splice), but a deterministic one —
+        // and the only thing routing depends on.
+        let charge = (costs.svc_policy_ticks(policy) + reload).div_ceil(self.fabrics).max(1);
+        self.est_free[m] = self.est_free[m].max(tick) + charge;
+        self.resident[m] = Some(*policy);
+        m
+    }
+}

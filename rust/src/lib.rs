@@ -59,6 +59,10 @@
 //!   hierarchy, the typed metrics registry behind `OBS_metrics.json`,
 //!   the Chrome/Perfetto trace exporter behind `--trace-out`, and the
 //!   host-side simulator-speed profile surfaced by the hotpath bench.
+//! * [`fleet`] — fleet-scale serving (DESIGN.md §17): N replicated
+//!   machines behind a deterministic policy-affinity router, per-tenant
+//!   fair-share admission, hysteresis autoscaling in simulated ticks,
+//!   and the merged-population metrics rollup behind `BENCH_fleet.json`.
 
 #![warn(missing_docs)]
 
@@ -68,6 +72,7 @@ pub mod energy;
 pub mod kernels;
 pub mod cli;
 pub mod coordinator;
+pub mod fleet;
 pub mod model;
 pub mod obs;
 pub mod report;

@@ -6,6 +6,7 @@
 use anyhow::Result;
 use mxdotp::cli::{parse, Command, ExecMode, USAGE};
 use mxdotp::coordinator::{ModelExecutor, PjrtExecutor};
+use mxdotp::fleet::{simulate_fleet, spot_check_fleet, FleetConfig, FleetOutcome, RouterKind};
 use mxdotp::formats::{ElemFormat, MxVector};
 use mxdotp::kernels::{run_mm, MmProblem};
 use mxdotp::model::{policy_hw_run, GraphExecutor, ModelGraph, PrecisionPolicy};
@@ -397,6 +398,52 @@ fn main() -> Result<()> {
                     }
                 }
             }
+            if what == "fleet" || what == "all" {
+                let model = DeitConfig { fmt, vector_len, ..DeitConfig::default() };
+                // The fleet engine is analytic end to end (DESIGN.md
+                // §17); only the sampled executor's calibration
+                // contract buys a cycle run here.
+                let util = if let ExecMode::Sampled(_) = exec {
+                    eprintln!("calibrating MX({fmt}) utilization (one cycle run)...");
+                    calibrate_util(&model, cores, 1, cold_plans)
+                } else {
+                    ServeConfig::default().util
+                };
+                let scfg = ServeConfig {
+                    clusters,
+                    cores_per_cluster: cores,
+                    util,
+                    ..report::fleet_machine(model)
+                };
+                let points = report::fleet_sweep(&scfg, 400, 42, &report::FLEET_MACHINES);
+                println!("{}", report::render_fleet(&points, &scfg));
+                if let ExecMode::Sampled(n) = exec {
+                    // Replay one canonical fleet run, then re-cost a
+                    // seeded 1-in-N sample of its merged population on
+                    // the cycle engine (DESIGN.md §15 extended to §17).
+                    eprintln!(
+                        "spot-checking the fleet path (1 in {n}) against the cycle engine..."
+                    );
+                    let trace = report::fleet_trace(&scfg, 2, 200, 42);
+                    let fcfg = FleetConfig::new(scfg, 2, RouterKind::Affinity);
+                    let out = simulate_fleet(&fcfg, &trace, &[]);
+                    let rep = spot_check_fleet(&fcfg, &out, n, 42);
+                    print!("{}", rep.render());
+                    std::fs::write("OBS_spotcheck_fleet.json", rep.render_json())?;
+                    println!(
+                        "wrote OBS_spotcheck_fleet.json \
+                         (deterministic fleet spot-check artifact)"
+                    );
+                    if !rep.within_tolerance() {
+                        eprintln!(
+                            "error: --exec sampled:{n} fleet divergence: max rel err {:.4} \
+                             exceeds tolerance {:.2}",
+                            rep.max_rel_err, rep.tol
+                        );
+                        std::process::exit(1);
+                    }
+                }
+            }
             if what == "pareto" || what == "all" {
                 let cfg = DeitConfig { fmt, vector_len, ..DeitConfig::default() };
                 let mut pols = report::pareto_presets();
@@ -482,6 +529,8 @@ fn main() -> Result<()> {
             trace_out,
             obs_out,
             vector_len,
+            machines,
+            router,
         } => {
             let model = DeitConfig { fmt, vector_len, ..DeitConfig::default() };
             // Calibrate at the mix's dominant format; the analytic
@@ -592,12 +641,19 @@ fn main() -> Result<()> {
             let rate = if rate_per_ktick > 0.0 {
                 rate_per_ktick
             } else {
+                // The auto rate targets half of estimated capacity —
+                // of the whole fleet, when there is more than one
+                // machine to spread the trace across.
                 let auto = 0.5
+                    * machines as f64
                     * match policy {
                         Some(p) => serve::estimated_capacity_for_policies(&scfg, &[(p, 1.0)]),
                         None => serve::estimated_capacity_per_ktick(&scfg, &mix),
                     };
-                println!("  offered load: auto ({auto:.2} req/ktick = 0.5× estimated capacity)");
+                println!(
+                    "  offered load: auto ({auto:.2} req/ktick = 0.5× estimated capacity \
+                     of {machines} machine(s))"
+                );
                 auto
             };
             let spec = ArrivalSpec {
@@ -615,6 +671,46 @@ fn main() -> Result<()> {
                 for r in trace.iter_mut() {
                     r.policy = p;
                 }
+            }
+            if machines > 1 {
+                // Fleet mode (DESIGN.md §17): replicate the machine
+                // behind the global router. Parse time already pinned
+                // the executor to analytic/sampled.
+                let fcfg = FleetConfig::new(scfg, machines, router);
+                if let Err(e) = fcfg.validate() {
+                    eprintln!("error: {e}");
+                    std::process::exit(2);
+                }
+                println!(
+                    "fleet: {machines} replicated machine(s) behind the '{router}' router"
+                );
+                let out = simulate_fleet(&fcfg, &trace, &[]);
+                if trace_out.is_some() || obs_out.is_some() {
+                    write_obs_artifacts(
+                        &obs::fleet_spans(&out),
+                        &obs::fleet_metrics(&out),
+                        trace_out.as_deref(),
+                        obs_out.as_deref(),
+                    )?;
+                }
+                print!("{}", render_fleet_summary(&out));
+                if let ExecMode::Sampled(n) = exec {
+                    eprintln!(
+                        "spot-checking 1 in {n} of the merged fleet population on the \
+                         cycle engine..."
+                    );
+                    let rep = spot_check_fleet(&fcfg, &out, n, 42);
+                    print!("{}", rep.render());
+                    if !rep.within_tolerance() {
+                        eprintln!(
+                            "error: --exec sampled:{n} fleet divergence: max rel err {:.4} \
+                             exceeds tolerance {:.2}",
+                            rep.max_rel_err, rep.tol
+                        );
+                        std::process::exit(1);
+                    }
+                }
+                return Ok(());
             }
             let outcome = serve::simulate(&scfg, &trace);
             if trace_out.is_some() || obs_out.is_some() {
@@ -753,6 +849,64 @@ fn write_obs_artifacts(
         println!("{}", report::render_obs_note(path));
     }
     Ok(())
+}
+
+/// Human-readable summary of one fleet run: fleet-wide rollup from the
+/// merged population, then a routed/served line per machine.
+fn render_fleet_summary(out: &FleetOutcome) -> String {
+    let p = out.percentiles();
+    let mut s = String::new();
+    s.push_str(&format!(
+        "offered {} request(s) to {} machine(s) [{} router]: served {}, rejected {} \
+         (machine admission {}, fleet fair-share {})\n",
+        out.offered(),
+        out.machines.len(),
+        out.router,
+        out.served(),
+        out.machine_rejected() + out.fleet_rejected.len(),
+        out.machine_rejected(),
+        out.fleet_rejected.len(),
+    ));
+    s.push_str(&format!(
+        "  merged latency [ticks ≈ µs fabric time]: p50 {}, p95 {}, p99 {}, max {}  \
+         (SLO {}: {}/{} in SLO)\n",
+        p.p50,
+        p.p95,
+        p.p99,
+        p.max,
+        out.slo_ticks,
+        out.served_in_slo(),
+        out.served(),
+    ));
+    s.push_str(&format!(
+        "  goodput {:.2}/ktick, throughput {:.2}/ktick over a {}-tick horizon; \
+         {} reload(s), fleet util {:.1} %, peak lease {} machine(s), {} scale event(s)\n",
+        out.goodput_per_ktick(),
+        out.throughput_per_ktick(),
+        out.horizon_ticks,
+        out.reloads(),
+        out.utilization() * 100.0,
+        out.peak_machines,
+        out.scale_events.len(),
+    ));
+    for m in &out.machines {
+        let util = if m.outcome.horizon_ticks == 0 {
+            0.0
+        } else {
+            m.outcome.fabric_utilization()
+        };
+        s.push_str(&format!(
+            "    machine {}: {} routed, {} served, {} batch(es), {} reload(s), \
+             util {:.1} %\n",
+            m.machine,
+            m.routed,
+            m.outcome.served.len(),
+            m.outcome.batches,
+            m.outcome.reloads,
+            util * 100.0,
+        ));
+    }
+    s
 }
 
 /// Human-readable summary of one serving run (shared by the PJRT and

@@ -38,6 +38,7 @@ pub mod span;
 pub use metrics::Registry;
 pub use span::{CounterSample, Span, TraceSink};
 
+use crate::fleet::FleetOutcome;
 use crate::kernels::MmRun;
 use crate::model::PolicyHwRun;
 use crate::scaleout::ShardedRun;
@@ -57,6 +58,10 @@ pub const PID_CLUSTERS: u32 = 2;
 pub const PID_MODEL: u32 = 3;
 /// Process lane for per-core cycle-attribution tracks.
 pub const PID_CORES: u32 = 4;
+/// Base process lane for fleet machine tracks: machine `m` traces
+/// under pid `PID_FLEET_BASE + m` (DESIGN.md §17), clear of the
+/// single-machine lanes above.
+pub const PID_FLEET_BASE: u32 = 10;
 
 /// Simulated nanoseconds per scheduler tick (1 cycle = 1 ns at the
 /// paper's 1 GHz clock, so this equals
@@ -407,6 +412,118 @@ pub fn policy_metrics(run: &PolicyHwRun) -> Registry {
     reg
 }
 
+/// Derive per-machine fleet tracks from a fleet outcome: machine `m`
+/// traces under pid [`PID_FLEET_BASE`]` + m` with one thread per
+/// fabric carrying coarse batch spans (first dispatch → last
+/// completion), plus an `active machines` counter on the base lane
+/// stepping at every autoscaler action.
+///
+/// These are deliberately batch-granular — the full setup/reload/
+/// request decomposition of any one machine is still available by
+/// running [`serve_spans`] on `out.machines[m].outcome`; the fleet
+/// view exists to show cross-machine placement and lease changes on
+/// one timeline. Like every sink in this module it is derived post-hoc
+/// from deterministic outcomes, so it is byte-stable across runs.
+pub fn fleet_spans(out: &FleetOutcome) -> TraceSink {
+    let mut sink = TraceSink::new();
+    for m in &out.machines {
+        let pid = PID_FLEET_BASE + m.machine as u32;
+        sink.name_process(pid, format!("fleet machine {} ({} routed)", m.machine, m.routed));
+        for f in 0..m.outcome.fabric_busy_ticks.len() {
+            sink.name_thread(pid, f as u32, format!("fabric {f}"));
+        }
+        for (bi, batch) in batches_in_dispatch_order(&m.outcome).iter().enumerate() {
+            let start = batch.iter().map(|r| r.dispatch_tick).min().unwrap();
+            let end = batch.iter().map(|r| r.complete_tick).max().unwrap();
+            sink.record(Span {
+                pid,
+                tid: batch[0].fabric as u32,
+                name: format!("batch {bi} ({} req)", batch.len()),
+                cat: "fleet.batch",
+                ts_ns: ticks_to_ns(start),
+                dur_ns: ticks_to_ns(end - start),
+                args: vec![
+                    ("machine", m.machine.to_string()),
+                    ("batch_id", batch[0].batch_id.to_string()),
+                    ("policy", batch[0].policy.to_string()),
+                    ("requests", batch.len().to_string()),
+                ],
+            });
+        }
+    }
+    // The machine lease over sim time: starts at the pre-first-event
+    // lease (the full fleet when no scaler ran) and steps at every
+    // scale action.
+    let initial = out.scale_events.first().map(|e| e.from).unwrap_or(out.machines.len());
+    sink.record_counter(CounterSample {
+        pid: PID_FLEET_BASE,
+        name: "active machines".to_string(),
+        ts_ns: 0,
+        value: initial as f64,
+    });
+    for e in &out.scale_events {
+        sink.record_counter(CounterSample {
+            pid: PID_FLEET_BASE,
+            name: "active machines".to_string(),
+            ts_ns: ticks_to_ns(e.tick),
+            value: e.to as f64,
+        });
+    }
+    sink
+}
+
+/// Roll a fleet outcome up into the metrics registry: fleet totals
+/// (conservation-partitioned reject counters, goodput, merged-
+/// population latency percentiles), per-machine routing/serving
+/// attribution, and per-tenant accounting. The fleet latency
+/// histogram records every machine's samples into one population —
+/// the merged rollup of DESIGN.md §17, never averaged per-machine
+/// percentiles. Pure function of the outcome.
+pub fn fleet_metrics(out: &FleetOutcome) -> Registry {
+    let mut reg = Registry::new();
+    reg.counter_add("fleet.machines", out.machines.len() as u64);
+    reg.counter_add("fleet.peak_machines", out.peak_machines as u64);
+    reg.counter_add("fleet.offered", out.offered() as u64);
+    reg.counter_add("fleet.served", out.served() as u64);
+    reg.counter_add("fleet.served_in_slo", out.served_in_slo() as u64);
+    reg.counter_add("fleet.rejected.machine", out.machine_rejected() as u64);
+    reg.counter_add("fleet.rejected.fair_share", out.fleet_rejected.len() as u64);
+    reg.counter_add("fleet.scale_events", out.scale_events.len() as u64);
+    reg.counter_add("fleet.reloads", out.reloads());
+    reg.counter_add("fleet.horizon_ticks", out.horizon_ticks);
+    reg.counter_add("fleet.slo_ticks", out.slo_ticks);
+    reg.gauge_set("fleet.goodput_per_ktick", out.goodput_per_ktick());
+    reg.gauge_set("fleet.throughput_per_ktick", out.throughput_per_ktick());
+    reg.gauge_set("fleet.utilization", out.utilization());
+    let p = out.percentiles();
+    reg.gauge_set("fleet.latency_p50_ticks", p.p50 as f64);
+    reg.gauge_set("fleet.latency_p95_ticks", p.p95 as f64);
+    reg.gauge_set("fleet.latency_p99_ticks", p.p99 as f64);
+    for m in &out.machines {
+        let pfx = format!("fleet.machine{}", m.machine);
+        reg.counter_add(&format!("{pfx}.routed"), m.routed as u64);
+        reg.counter_add(&format!("{pfx}.served"), m.outcome.served.len() as u64);
+        reg.counter_add(&format!("{pfx}.rejected"), m.outcome.rejected.len() as u64);
+        reg.counter_add(&format!("{pfx}.batches"), m.outcome.batches);
+        reg.counter_add(&format!("{pfx}.reloads"), m.outcome.reloads);
+        let util =
+            if m.outcome.horizon_ticks == 0 { 0.0 } else { m.outcome.fabric_utilization() };
+        reg.gauge_set(&format!("{pfx}.utilization"), util);
+        for r in &m.outcome.served {
+            reg.hist_record("fleet.latency_ticks", r.latency_ticks());
+        }
+    }
+    for t in &out.per_tenant {
+        let pfx = format!("fleet.tenant{}", t.tenant);
+        reg.counter_add(&format!("{pfx}.offered"), t.offered as u64);
+        reg.counter_add(&format!("{pfx}.served"), t.served as u64);
+        reg.counter_add(&format!("{pfx}.served_in_slo"), t.served_in_slo as u64);
+        reg.counter_add(&format!("{pfx}.rejected.machine"), t.machine_rejected as u64);
+        reg.counter_add(&format!("{pfx}.rejected.fair_share"), t.fleet_rejected as u64);
+    }
+    reg
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -466,5 +583,62 @@ mod tests {
     fn ticks_to_ns_matches_the_time_base() {
         assert_eq!(ticks_to_ns(0), 0);
         assert_eq!(ticks_to_ns(3), 3 * crate::serve::CYCLES_PER_TICK);
+    }
+
+    #[test]
+    fn fleet_rollup_partitions_and_merges() {
+        use crate::fleet::{simulate_fleet, FleetConfig, RouterKind};
+        let machine = ServeConfig { clusters: 4, fabrics: 2, ..ServeConfig::default() };
+        let spec = ArrivalSpec {
+            kind: ArrivalKind::Poisson,
+            rate_per_ktick: 8.0,
+            mix: vec![(ElemFormat::E4M3, 0.5), (ElemFormat::E2M1, 0.5)],
+            high_priority_frac: 0.0,
+            requests: 120,
+            seed: 17,
+        };
+        let out = simulate_fleet(
+            &FleetConfig::new(machine, 2, RouterKind::Affinity),
+            &generate_trace(&spec),
+            &[],
+        );
+        let reg = fleet_metrics(&out);
+        // typed-reject conservation at the fleet level
+        assert_eq!(reg.counter("fleet.offered"), 120);
+        assert_eq!(
+            reg.counter("fleet.served")
+                + reg.counter("fleet.rejected.machine")
+                + reg.counter("fleet.rejected.fair_share"),
+            120
+        );
+        // the fleet latency histogram is the merged population, and the
+        // percentile gauges come from the same order statistics
+        let (count, _, p50, _, p99, _, _) = reg.hist_summary("fleet.latency_ticks");
+        assert_eq!(count, out.served());
+        let p = out.percentiles();
+        assert_eq!(p50, p.p50);
+        assert_eq!(p99, p.p99);
+        assert_eq!(reg.gauge("fleet.latency_p99_ticks"), Some(p.p99 as f64));
+        // per-machine attribution covers the whole fleet
+        let routed: u64 =
+            (0..2).map(|m| reg.counter(&format!("fleet.machine{m}.routed"))).sum();
+        assert_eq!(routed, 120);
+        // tenant rollup exists even for the untagged single tenant
+        assert_eq!(reg.counter("fleet.tenant0.offered"), 120);
+
+        // fleet spans: one process lane per machine, batch spans on
+        // fabric threads, and the lease counter present from tick 0
+        let sink = fleet_spans(&out);
+        assert!(sink
+            .counters()
+            .first()
+            .map(|c| c.ts_ns == 0 && c.value == 2.0)
+            .unwrap_or(false));
+        // derived twice from the same outcome → byte-identical
+        let again = fleet_spans(&out);
+        assert_eq!(
+            crate::obs::perfetto::render(&sink),
+            crate::obs::perfetto::render(&again)
+        );
     }
 }

@@ -6,13 +6,16 @@
 use crate::dotp::baselines::table3_rows;
 use crate::energy::constants as k;
 use crate::energy::{AreaModel, EnergyModel};
+use crate::fleet::{simulate_fleet, FleetConfig, RouterKind};
 use crate::formats::ElemFormat;
 use crate::kernels::{layout, run_mm, KernelKind, MmProblem, MmRun};
 use crate::model::{policy_hw_run, GraphExecutor, ModelGraph, PolicyHwRun, PrecisionPolicy};
 use crate::rng::XorShift;
 use crate::scaleout::{sharded_mm, ScaleoutConfig};
 use crate::serve::{self, SchedulerKind, ServeConfig};
-use crate::workload::arrivals::{generate_trace, ArrivalKind, ArrivalSpec};
+use crate::workload::arrivals::{
+    assign_policy_classes, generate_trace, Arrival, ArrivalKind, ArrivalSpec,
+};
 use crate::workload::{generate_input, generate_params, DeitConfig};
 
 /// The Fig. 4 inner-dimension sweep (block size 32 bounds K below).
@@ -704,6 +707,205 @@ pub fn render_serving(points: &[ServingPoint], cfg: &ServeConfig, mix: &[(ElemFo
     s
 }
 
+/// Machine counts of the fleet sweep (`reproduce fleet`).
+pub const FLEET_MACHINES: [usize; 3] = [1, 2, 4];
+
+/// Offered load of the fleet sweep as a fraction of the fleet's
+/// no-reload capacity estimate: high enough that a router wasting
+/// fabric ticks on avoidable weight reloads visibly loses goodput,
+/// low enough that the affinity fleet still clears the trace.
+pub const FLEET_LOAD_MULT: f64 = 0.9;
+
+/// The canonical mixed-policy traffic classes of the fleet sweep:
+/// four equal-weight precision policies keyed 1:1 to arrival formats,
+/// so each request's policy is a deterministic function of its mix
+/// class. Equal weights mean a 4-machine fleet admits a perfect
+/// one-class-per-machine placement — exactly what the affinity router
+/// should find and round-robin structurally cannot.
+pub fn fleet_mix_classes() -> Vec<(ElemFormat, PrecisionPolicy, f64)> {
+    vec![
+        (ElemFormat::E4M3, PrecisionPolicy::preset("all-fp8").unwrap(), 0.25),
+        (ElemFormat::E2M1, PrecisionPolicy::preset("all-fp4").unwrap(), 0.25),
+        (ElemFormat::E5M2, PrecisionPolicy::preset("fp4-ffn").unwrap(), 0.25),
+        (ElemFormat::Int8, PrecisionPolicy::preset("all-int8").unwrap(), 0.25),
+    ]
+}
+
+/// The canonical fleet machine of the sweep and the fleet bench: all
+/// clusters fused into ONE whole-machine fabric, so precision-policy
+/// residency is machine-global — exactly the placement decision the
+/// routers differ on (a per-cluster-fabric machine can quietly
+/// specialize fabrics per policy and mask the router's mistake) — and
+/// batch 4, so a routing mistake's weight reload is amortized over
+/// few requests.
+pub fn fleet_machine(model: DeitConfig) -> ServeConfig {
+    ServeConfig { model, clusters: 8, fabrics: 1, max_batch: 4, ..ServeConfig::default() }
+}
+
+/// Generate the fleet sweep's mixed-policy trace for one machine
+/// count: Poisson arrivals at [`FLEET_LOAD_MULT`] × the N-machine
+/// no-reload capacity, each request carrying its class's policy.
+pub fn fleet_trace(
+    cfg: &ServeConfig,
+    machines: usize,
+    requests: usize,
+    seed: u64,
+) -> Vec<Arrival> {
+    let classes = fleet_mix_classes();
+    let pol_mix: Vec<(PrecisionPolicy, f64)> =
+        classes.iter().map(|&(_, p, w)| (p, w)).collect();
+    let per_machine = serve::estimated_capacity_for_policies(cfg, &pol_mix);
+    let spec = ArrivalSpec {
+        kind: ArrivalKind::Poisson,
+        rate_per_ktick: FLEET_LOAD_MULT * machines as f64 * per_machine,
+        mix: classes.iter().map(|&(f, _, w)| (f, w)).collect(),
+        high_priority_frac: 0.0,
+        requests,
+        seed,
+    };
+    let mut trace = generate_trace(&spec);
+    assign_policy_classes(&mut trace, &classes, seed ^ 0x5a5a);
+    trace
+}
+
+/// One row of the fleet table: one router at one machine count.
+#[derive(Clone, Debug)]
+pub struct FleetPoint {
+    /// Machines in the fleet.
+    pub machines: usize,
+    /// Router that produced this row.
+    pub router: RouterKind,
+    /// Requests offered to the fleet.
+    pub offered: usize,
+    /// Requests completed across all machines.
+    pub served: usize,
+    /// Served requests that met the SLO.
+    pub in_slo: usize,
+    /// SLO-compliant completions per kilotick (the headline metric).
+    pub goodput_per_ktick: f64,
+    /// Merged-population latency percentiles in ticks.
+    pub p50: u64,
+    /// 95th percentile latency (ticks).
+    pub p95: u64,
+    /// 99th percentile latency (ticks).
+    pub p99: u64,
+    /// Weight reloads paid across all machines.
+    pub reloads: u64,
+    /// Fabric ticks burned on those reloads.
+    pub reload_ticks: u64,
+    /// Fleet-wide fabric utilization.
+    pub utilization: f64,
+}
+
+/// Run the fleet comparison: for each machine count, generate one
+/// mixed-policy trace at the matching offered load and run **both**
+/// routers over the *identical* trace (DESIGN.md §17). The 1-machine
+/// rows are the degenerate-fleet sanity anchor — with one machine the
+/// routers cannot differ.
+pub fn fleet_sweep(
+    cfg: &ServeConfig,
+    requests: usize,
+    seed: u64,
+    machine_counts: &[usize],
+) -> Vec<FleetPoint> {
+    let costs = serve::CostModel::build(cfg);
+    let mut points = Vec::with_capacity(machine_counts.len() * 2);
+    for (mi, &n) in machine_counts.iter().enumerate() {
+        let trace = fleet_trace(cfg, n, requests, seed.wrapping_add(mi as u64 * 7919));
+        for router in [RouterKind::RoundRobin, RouterKind::Affinity] {
+            let fcfg = FleetConfig::new(*cfg, n, router);
+            let out = simulate_fleet(&fcfg, &trace, &[]);
+            let p = out.percentiles();
+            points.push(FleetPoint {
+                machines: n,
+                router,
+                offered: out.offered(),
+                served: out.served(),
+                in_slo: out.served_in_slo(),
+                goodput_per_ktick: out.goodput_per_ktick(),
+                p50: p.p50,
+                p95: p.p95,
+                p99: p.p99,
+                reloads: out.reloads(),
+                reload_ticks: out.reload_ticks(&costs),
+                utilization: out.utilization(),
+            });
+        }
+    }
+    points
+}
+
+/// Goodput ratio (affinity / round-robin) at the largest machine count
+/// of a sweep; `f64::INFINITY` when round-robin's goodput is zero.
+pub fn fleet_headline_ratio(points: &[FleetPoint]) -> Option<f64> {
+    let top = points.iter().map(|p| p.machines).max()?;
+    let at = |r: RouterKind| {
+        points
+            .iter()
+            .find(|p| p.machines == top && p.router == r)
+            .map(|p| p.goodput_per_ktick)
+    };
+    let (aff, rr) = (at(RouterKind::Affinity)?, at(RouterKind::RoundRobin)?);
+    Some(if rr > 0.0 { aff / rr } else { f64::INFINITY })
+}
+
+/// Render the fleet table (goodput vs machine count, both routers)
+/// plus the §17 headline ratio.
+pub fn render_fleet(points: &[FleetPoint], cfg: &ServeConfig) -> String {
+    let slo = serve::resolve_slo_ticks(cfg);
+    let classes = fleet_mix_classes();
+    let mix_s: Vec<String> = classes
+        .iter()
+        .map(|(f, p, w)| format!("{}→{p}:{w:.1}", f.name()))
+        .collect();
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Fleet — goodput vs machine count, affinity vs round-robin routing \
+         (DESIGN.md §17)\neach machine: {} cluster(s) as {} fabric(s); offered load \
+         {:.2}× the fleet's no-reload capacity; SLO {} ticks\nmixed-policy traffic \
+         {}; both routers consume identical traces\n\n",
+        cfg.clusters,
+        cfg.fabric_count(),
+        FLEET_LOAD_MULT,
+        slo,
+        mix_s.join(", "),
+    ));
+    s.push_str(
+        "  machines  router     served/offered   in-SLO  goodput[/kt]  p50     p95     \
+         p99     reloads  reload-ticks  util\n",
+    );
+    for p in points {
+        s.push_str(&format!(
+            "  {:>8}  {:<9} {:>7}/{:<8} {:>6}  {:>10.2}  {:>6}  {:>6}  {:>6}  {:>7}  \
+             {:>12}  {:>5.1} %\n",
+            p.machines,
+            p.router.name(),
+            p.served,
+            p.offered,
+            p.in_slo,
+            p.goodput_per_ktick,
+            p.p50,
+            p.p95,
+            p.p99,
+            p.reloads,
+            p.reload_ticks,
+            p.utilization * 100.0,
+        ));
+    }
+    if let Some(ratio) = fleet_headline_ratio(points) {
+        let shown = if ratio.is_finite() {
+            format!("{ratio:.2}x")
+        } else {
+            "∞ (round-robin goodput 0)".to_string()
+        };
+        s.push_str(&format!(
+            "\n  headline: affinity vs round-robin goodput at the largest fleet = {shown}   \
+             (acceptance bar ≥ 1.15x)\n"
+        ));
+    }
+    s
+}
+
 /// The precision-policy presets of the Pareto sweep, most accurate
 /// first: MXINT8 / MXFP8 / mixed FP8+FP4 / MXFP4 over the four linear
 /// projections (attention internals FP32, the paper's recipe).
@@ -1029,6 +1231,44 @@ mod tests {
         let text = render_serving(&pts, &cfg, &mix);
         assert!(text.contains("Serving"), "{text}");
         assert!(text.contains("barrier") && text.contains("continuous"));
+        assert!(text.contains("headline"));
+    }
+
+    #[test]
+    fn fleet_sweep_table_and_headline() {
+        // Reduced model keeps the tick horizons short; the fleet engine
+        // is analytic end to end, so no cycle simulation runs here.
+        let cfg = ServeConfig {
+            clusters: 4,
+            ..fleet_machine(DeitConfig { seq: 64, ..DeitConfig::default() })
+        };
+        let pts = fleet_sweep(&cfg, 200, 42, &[1, 3]);
+        assert_eq!(pts.len(), 4);
+        for p in &pts {
+            assert_eq!(p.offered, 200);
+            assert!(p.served <= 200, "{p:?}");
+        }
+        // one machine: the routers are indistinguishable by construction
+        let one: Vec<_> = pts.iter().filter(|p| p.machines == 1).collect();
+        assert_eq!(one[0].goodput_per_ktick, one[1].goodput_per_ktick);
+        assert_eq!(one[0].reload_ticks, one[1].reload_ticks);
+        // three machines, three policy classes: affinity keeps each
+        // class resident somewhere and pays strictly fewer reload ticks
+        let at = |r: RouterKind| {
+            pts.iter().find(|p| p.machines == 3 && p.router == r).unwrap()
+        };
+        let (aff, rr) = (at(RouterKind::Affinity), at(RouterKind::RoundRobin));
+        assert!(
+            aff.reload_ticks < rr.reload_ticks,
+            "affinity {} vs rr {} reload ticks",
+            aff.reload_ticks,
+            rr.reload_ticks
+        );
+        let ratio = fleet_headline_ratio(&pts).unwrap();
+        assert!(ratio >= 1.0, "affinity/rr goodput ratio {ratio}");
+        let text = render_fleet(&pts, &cfg);
+        assert!(text.contains("Fleet"), "{text}");
+        assert!(text.contains("affinity") && text.contains("rr"));
         assert!(text.contains("headline"));
     }
 

@@ -78,6 +78,25 @@ pub fn latency_percentiles(latencies: &[u64]) -> Percentiles {
     }
 }
 
+/// Fleet-level latency summary over per-machine latency sets: merge
+/// every machine's samples into ONE population, then take percentiles
+/// (DESIGN.md §17).
+///
+/// This is the only correct fleet rollup. Averaging per-machine
+/// percentiles is wrong whenever machines are skewed — a percentile is
+/// an order statistic, not a mean: with one fast machine serving 99
+/// requests at 10 ticks and one slow machine serving 1 request at
+/// 1000 ticks, the fleet p99 is 10 (99 % of requests finished in 10
+/// ticks), while the per-machine-p99 average reports 505 — off by
+/// 50×. The regression test below pins exactly that skew.
+pub fn merged_latency_percentiles(per_machine: &[Vec<u64>]) -> Percentiles {
+    let mut all: Vec<u64> = Vec::with_capacity(per_machine.iter().map(Vec::len).sum());
+    for lats in per_machine {
+        all.extend_from_slice(lats);
+    }
+    latency_percentiles(&all)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,6 +125,34 @@ mod tests {
         let p = latency_percentiles(&[30, 10, 20]);
         assert_eq!(p.p50, 20);
         assert_eq!(p.max, 30);
+    }
+
+    #[test]
+    fn merged_percentiles_not_averaged_on_skewed_two_machine_traces() {
+        // The fleet-rollup regression (DESIGN.md §17): a fast machine
+        // with 99 quick requests and a slow machine with one straggler.
+        let fast: Vec<u64> = vec![10; 99];
+        let slow: Vec<u64> = vec![1000];
+        let merged = merged_latency_percentiles(&[fast.clone(), slow.clone()]);
+        // 99 of 100 requests finished in 10 ticks: the fleet
+        // p50/p95/p99 are all 10 (the 99th-percentile request IS a
+        // 10-tick request), and only max sees the straggler — every
+        // reported number is a latency some request actually saw.
+        assert_eq!(merged.p50, 10);
+        assert_eq!(merged.p95, 10);
+        assert_eq!(merged.p99, 10);
+        assert_eq!(merged.count, 100);
+        assert_eq!(merged.max, 1000);
+        // The WRONG rollup — averaging per-machine percentiles — puts
+        // the fleet p95 at 505, a latency NO request experienced and
+        // 50x the true order statistic. Pin the gap so a refactor can
+        // never quietly reintroduce the averaged version.
+        let avg_p95 = (latency_percentiles(&fast).p95 + latency_percentiles(&slow).p95) / 2;
+        assert_eq!(avg_p95, 505);
+        assert!(avg_p95 >= 50 * merged.p95);
+        // merging is symmetric and ignores empty machines
+        let flipped = merged_latency_percentiles(&[slow, Vec::new(), fast]);
+        assert_eq!(flipped, merged);
     }
 
     #[test]

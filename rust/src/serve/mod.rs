@@ -51,7 +51,7 @@ pub mod queue;
 pub mod scheduler;
 
 pub use admission::{AdmissionController, RejectReason};
-pub use metrics::{latency_percentiles, Percentiles};
+pub use metrics::{latency_percentiles, merged_latency_percentiles, Percentiles};
 pub use scheduler::{Rejected, Served};
 
 use crate::formats::ElemFormat;

@@ -202,6 +202,92 @@ pub fn generate_trace(spec: &ArrivalSpec) -> Vec<Arrival> {
     out
 }
 
+/// Per-tenant traffic description for the fleet layer (DESIGN.md
+/// §17): how the fleet's tenants split an arrival trace. Weights are
+/// relative offered-traffic shares (they need not sum to 1); the
+/// fair-share admission weights live in the fleet config, not here, so
+/// "who sends how much" and "who is entitled to how much" can differ —
+/// that gap is exactly the adversarial-overload scenario the fleet
+/// property suite pins.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    /// Relative offered-traffic share per tenant id (index = tenant).
+    pub weights: Vec<f64>,
+    /// Seed of the tagging stream. Deliberately separate from
+    /// [`ArrivalSpec::seed`]: tagging draws from its own
+    /// [`XorShift`] so it cannot perturb [`generate_trace`]'s draw
+    /// order (whose determinism the arrival tests pin).
+    pub seed: u64,
+}
+
+/// Tag every arrival of `trace` with a tenant id, drawn per request
+/// from `spec`'s weighted shares. Returns one tenant id per trace
+/// index (parallel to `trace`); a pure function of
+/// `(trace.len(), spec)`.
+///
+/// Panics on an empty or non-positive weight vector.
+pub fn assign_tenants(trace: &[Arrival], spec: &TenantSpec) -> Vec<u32> {
+    assert!(!spec.weights.is_empty(), "tenant spec must name at least one tenant");
+    assert!(
+        spec.weights.iter().all(|&w| w > 0.0 && w.is_finite()),
+        "tenant weights must be positive"
+    );
+    let total: f64 = spec.weights.iter().sum();
+    let mut rng = XorShift::new(spec.seed);
+    trace
+        .iter()
+        .map(|_| {
+            let mut pick = rng.unit_f64() * total;
+            let mut tenant = 0u32;
+            for (i, &w) in spec.weights.iter().enumerate() {
+                tenant = i as u32;
+                pick -= w;
+                if pick <= 0.0 {
+                    break;
+                }
+            }
+            tenant
+        })
+        .collect()
+}
+
+/// Rewrite `trace` in place with a weighted mix of `(format, policy)`
+/// traffic classes — the mixed-policy fleet workload (e.g. all-fp8 /
+/// fp4-ffn / all-fp4 tenants sharing one fleet). Each request draws one
+/// class from its own seeded [`XorShift`] stream (again separate from
+/// the trace stream), then carries that class's format label *and*
+/// per-layer policy, so per-(format, priority) queues stay
+/// policy-uniform and every format transition is a real weight reload.
+///
+/// Panics on an empty class list or non-positive weight.
+pub fn assign_policy_classes(
+    trace: &mut [Arrival],
+    classes: &[(ElemFormat, PrecisionPolicy, f64)],
+    seed: u64,
+) {
+    assert!(!classes.is_empty(), "class list must name at least one class");
+    assert!(
+        classes.iter().all(|&(_, _, w)| w > 0.0 && w.is_finite()),
+        "class weights must be positive"
+    );
+    let total: f64 = classes.iter().map(|&(_, _, w)| w).sum();
+    let mut rng = XorShift::new(seed);
+    for r in trace.iter_mut() {
+        let mut pick = rng.unit_f64() * total;
+        let (mut fmt, mut policy) = (classes[0].0, classes[0].1);
+        for &(f, p, w) in classes {
+            fmt = f;
+            policy = p;
+            pick -= w;
+            if pick <= 0.0 {
+                break;
+            }
+        }
+        r.fmt = fmt;
+        r.policy = policy;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -273,5 +359,51 @@ mod tests {
         let mut spec = mixed_spec(ArrivalKind::Poisson);
         spec.mix[1].1 = 0.0;
         generate_trace(&spec);
+    }
+
+    #[test]
+    fn tenant_tagging_is_deterministic_weighted_and_trace_invisible() {
+        let spec = mixed_spec(ArrivalKind::Poisson);
+        let trace = generate_trace(&spec);
+        let tspec = TenantSpec { weights: vec![0.5, 0.3, 0.2], seed: 11 };
+        let a = assign_tenants(&trace, &tspec);
+        let b = assign_tenants(&trace, &tspec);
+        assert_eq!(a, b, "tagging must be a pure function of (trace len, spec)");
+        assert_eq!(a.len(), trace.len());
+        // weighted shares land within 5 % of the spec
+        for (tenant, &w) in tspec.weights.iter().enumerate() {
+            let frac =
+                a.iter().filter(|&&t| t == tenant as u32).count() as f64 / a.len() as f64;
+            assert!((frac - w).abs() < 0.05, "tenant {tenant} share {frac} vs {w}");
+        }
+        // tagging draws from its own stream: the trace is untouched
+        // and regenerating it yields the identical arrivals
+        assert_eq!(trace, generate_trace(&spec));
+    }
+
+    #[test]
+    fn policy_class_rewrite_is_deterministic_and_weighted() {
+        let spec = mixed_spec(ArrivalKind::Poisson);
+        let mut a = generate_trace(&spec);
+        let mut b = generate_trace(&spec);
+        let classes = [
+            (ElemFormat::E4M3, PrecisionPolicy::preset("all-fp8").unwrap(), 0.5),
+            (ElemFormat::E2M1, PrecisionPolicy::preset("all-fp4").unwrap(), 0.5),
+        ];
+        assign_policy_classes(&mut a, &classes, 3);
+        assign_policy_classes(&mut b, &classes, 3);
+        assert_eq!(a, b);
+        // format and policy always travel together (queue classes stay
+        // policy-uniform, so fleet batches never mix policies)
+        for r in &a {
+            let class = classes.iter().find(|&&(f, _, _)| f == r.fmt).unwrap();
+            assert_eq!(r.policy, class.1);
+        }
+        let fp8 = a.iter().filter(|r| r.fmt == ElemFormat::E4M3).count() as f64;
+        let frac = fp8 / a.len() as f64;
+        assert!((frac - 0.5).abs() < 0.05, "class share {frac}");
+        // arrival times and ids are untouched — only the class changed
+        let orig = generate_trace(&spec);
+        assert!(a.iter().zip(&orig).all(|(x, y)| x.id == y.id && x.tick == y.tick));
     }
 }

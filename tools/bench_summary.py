@@ -112,6 +112,29 @@ def extract_metrics(bench_dir):
                 ("serving", "continuous_p99_top_load_ticks", cont["p99_ticks"]),
             ]
 
+    j = load(os.path.join(bench_dir, "BENCH_fleet.json"))
+    if j:
+        # fleet-scale serving (DESIGN.md §17): the two gated bars plus
+        # per-router context worth trending
+        out += [
+            ("fleet", "scaling_efficiency", j["scaling"]["efficiency"]),
+        ]
+        by = {r["router"]: r for r in j.get("routers", [])}
+        if "affinity" in by and "rr" in by and by["rr"]["goodput_per_ktick"] > 0:
+            out.append(
+                (
+                    "fleet",
+                    "affinity_vs_rr_goodput",
+                    by["affinity"]["goodput_per_ktick"] / by["rr"]["goodput_per_ktick"],
+                )
+            )
+        for name, r in sorted(by.items()):
+            out += [
+                ("fleet", f"{name}_goodput_per_ktick", r["goodput_per_ktick"]),
+                ("fleet", f"{name}_p99_ticks", r["p99_ticks"]),
+                ("fleet", f"{name}_utilization", r["utilization"]),
+            ]
+
     j = load(os.path.join(bench_dir, "BENCH_pareto.json"))
     if j:
         by = {p["policy"]: p for p in j["points"]}

@@ -66,12 +66,18 @@ def byte_compared(name):
     selection, measured/analytic cycles, and rendered JSON are a pure
     function of the seed (DESIGN.md §15). So does the vector-datapath
     bench (DESIGN.md §16): every field is a simulated cycle count or a
-    ratio of simulated cycle counts, no host wall-clock anywhere.
+    ratio of simulated cycle counts, no host wall-clock anywhere. The
+    fleet artifacts (DESIGN.md §17) are held to the same standard:
+    BENCH_fleet.json and the fleet spot-check audit carry only
+    sim-tick state, so router placement, fair-share admission, and
+    autoscaler actions must replay byte-for-byte.
     """
     return (
         name == "BENCH_serving_attribution.json"
         or name == "BENCH_vector.json"
+        or name == "BENCH_fleet.json"
         or name == "OBS_spotcheck_serving.json"
+        or name == "OBS_spotcheck_fleet.json"
         or name.startswith("OBS_trace_")
     )
 
