@@ -1,0 +1,144 @@
+//! Bench `training`: the low-precision MX training workload
+//! (DESIGN.md §18) — fine-tune the DeiT block against its FP32
+//! teacher under the `all-fp8` recipe with RNE and with seeded
+//! stochastic rounding, and price one training step (forward +
+//! backward dX/dW GEMMs) on the cycle-accurate fabric.
+//!
+//! Writes `BENCH_training.json` and reports the headline metrics
+//! through the bench-regression gate (`benches/common/baseline.rs` +
+//! `bench_baselines.json`): the stochastic point's final-loss gap vs
+//! FP32 must stay within 2× the RNE gap (ε-regularized ratio, see
+//! `report::training_gap_ratio`), and the measured cycles/step must
+//! stay within 10% of the probe-calibrated analytic prediction
+//! (`model::hw::analytic_training_cycles`).
+//!
+//! The JSON artifact carries **no host wall-clock keys**: the
+//! determinism CI job byte-compares two independent runs of this
+//! bench, so every value in the file must be a pure function of the
+//! committed configuration. Host timing goes to stdout only.
+//!
+//! Run: `cargo bench --bench training`  (`TRAINING_BENCH_SEQ`
+//! overrides the sequence length; the committed gates hold at the
+//! default 64 — widths stay DeiT-Tiny's).
+
+mod common;
+
+use mxdotp::formats::Rounding;
+use mxdotp::model::{PrecisionPolicy, TrainConfig};
+use mxdotp::report::{
+    render_training, training_fidelity, training_gap_ratio, training_sweep, TrainingPoint,
+};
+use mxdotp::workload::DeitConfig;
+use std::fmt::Write as _;
+
+fn json(
+    cfg: &DeitConfig,
+    tcfg: &TrainConfig,
+    seed: u64,
+    points: &[TrainingPoint],
+    gap_ratio: f64,
+    gaps: (f64, f64),
+    rel_err: f64,
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(
+        s,
+        "  \"workload\": {{\"name\": \"deit-training\", \"seq\": {}, \"dim\": {}, \
+         \"steps\": {}, \"lr\": {}, \"batch\": {}, \"clusters\": 1, \"block_size\": {}}},",
+        cfg.seq, cfg.dim, tcfg.steps, tcfg.lr, tcfg.batch, cfg.block_size
+    );
+    let _ = writeln!(s, "  \"policy\": \"all-fp8\",");
+    let _ = writeln!(s, "  \"stochastic_seed\": {seed},");
+    s.push_str("  \"points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        let losses: Vec<String> = p.losses.iter().map(|l| format!("{l:.9e}")).collect();
+        let _ = writeln!(
+            s,
+            "    {{\"name\": \"{}\", \"rounding\": \"{}\", \"initial_loss\": {:.9e}, \
+             \"final_loss\": {:.9e}, \"cycles_per_step\": {}, \"analytic_cycles\": {}, \
+             \"analytic_rel_err\": {:.6}, \"energy_uj\": {:.3}, \"losses\": [{}]}}{}",
+            p.name,
+            p.rounding,
+            p.losses.first().copied().unwrap_or(f64::NAN),
+            p.final_loss(),
+            p.hw.wall_cycles,
+            p.analytic_cycles,
+            p.analytic_rel_err(),
+            p.hw.total_energy_uj,
+            losses.join(", "),
+            if i + 1 == points.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ],\n");
+    let _ = writeln!(
+        s,
+        "  \"headline\": {{\"stoch_vs_rne_final_loss_gap_ratio\": {gap_ratio:.6}, \
+         \"rne_final_loss_gap\": {:.9e}, \"stoch_final_loss_gap\": {:.9e}, \
+         \"cycles_per_step_vs_analytic_rel_err\": {rel_err:.6}}}",
+        gaps.0, gaps.1
+    );
+    s.push_str("}\n");
+    s
+}
+
+fn main() {
+    common::header(
+        "training",
+        "low-precision MX training: backward GEMMs, loss fidelity, stochastic rounding \
+         (DESIGN.md §18)",
+    );
+    let seq: usize = std::env::var("TRAINING_BENCH_SEQ")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+    let cfg = DeitConfig { seq, ..DeitConfig::default() };
+    let tcfg = TrainConfig { steps: 6, batch: 1, ..TrainConfig::default() };
+    let policy = PrecisionPolicy::preset("all-fp8").expect("preset");
+    let seed = Rounding::DEFAULT_SEED;
+
+    let t0 = std::time::Instant::now();
+    let points = training_sweep(&cfg, "all-fp8", &policy, &tcfg, seed, 1, 8);
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n{}", render_training(&points, &cfg, &tcfg));
+    println!("[ran the 3-point sweep in {wall:.1} s host wall-clock]");
+
+    // Structural sanity kept inline; the fidelity/cost BARS go through
+    // the shared bench-regression gate below.
+    let get = |n: &str| points.iter().find(|p| p.name == n).expect("point missing");
+    let (fp32, rne, stoch) = (get("fp32"), get("all-fp8-rne"), get("all-fp8-stochastic"));
+    assert!(
+        fp32.final_loss() < fp32.losses[0],
+        "the FP32 reference run must reduce the loss"
+    );
+    assert!(
+        rne.final_loss() < rne.losses[0],
+        "the all-fp8 RNE run must reduce the loss"
+    );
+    assert_eq!(
+        rne.hw.wall_cycles, stoch.hw.wall_cycles,
+        "cycles/step is rounding-independent (the engine is RNE-only)"
+    );
+    assert_eq!(fp32.hw.wall_cycles, 0, "the FP32 reference issues no MX GEMMs");
+
+    let gap_ratio = training_gap_ratio(&points).expect("three-point sweep");
+    let gaps = training_fidelity(&points).expect("three-point sweep");
+    let rel_err = rne.analytic_rel_err();
+
+    let out = json(&cfg, &tcfg, seed, &points, gap_ratio, gaps, rel_err);
+    std::fs::write("BENCH_training.json", &out).expect("write BENCH_training.json");
+    println!("wrote BENCH_training.json ({} points)", points.len());
+
+    common::baseline::enforce(
+        "training",
+        &[
+            ("stoch_vs_rne_final_loss_gap_ratio", gap_ratio),
+            ("cycles_per_step_vs_analytic_rel_err", rel_err),
+        ],
+    );
+    println!(
+        "\ntraining: OK (stochastic/RNE gap ratio {gap_ratio:.2}, analytic rel err \
+         {:.1}%)",
+        rel_err * 100.0
+    );
+}

@@ -5,8 +5,8 @@
 //! mxdotp-cli quantize  --fmt e4m3 --block 32 --n 8 [--seed S]
 //! mxdotp-cli simulate  --kernel mx|fp32|fp8sw --m 64 --k 256 --n 64
 //!                      [--cores 8] [--fmt e5m2|e4m3|e3m2|e2m3|e2m1|int8] [--seed S]
-//! mxdotp-cli reproduce fig3|fig4|table3|formats|scaling|serving|pareto|fleet|all
-//!                      [--cores 8] [--fmt e4m3]
+//! mxdotp-cli reproduce fig3|fig4|table3|formats|scaling|serving|pareto|fleet|training|all
+//!                      [--cores 8] [--fmt e4m3] [--rounding rne|stochastic[:SEED]]
 //! mxdotp-cli serve     [--requests 16] [--batch 8] [--clusters 8] [--fabrics 0]
 //!                      [--mix e4m3:0.6,e2m1:0.4] [--arrival poisson:4]
 //!                      [--slo-ticks 0] [--queue-cap 128] [--sched continuous|barrier]
@@ -19,7 +19,7 @@
 //! format, `fp8sw` is FP8-only, `fp32` ignores the format.
 
 use crate::fleet::RouterKind;
-use crate::formats::ElemFormat;
+use crate::formats::{ElemFormat, Rounding};
 use crate::kernels::KernelKind;
 use crate::model::PrecisionPolicy;
 use crate::serve::SchedulerKind;
@@ -37,8 +37,8 @@ pub enum Command {
     /// whole per-layer mixed-precision model graph instead.
     Simulate { kernel: KernelKind, m: usize, k: usize, n: usize, cores: usize, clusters: usize, fmt: ElemFormat, seed: u64, cold_plans: bool, policy: Option<PrecisionPolicy>, exec: ExecMode, trace_out: Option<String>, obs_out: Option<String>, vector_len: u8 },
     /// `reproduce`: regenerate the paper's tables/figures and the
-    /// extension tables (formats, scaling, serving, pareto).
-    Reproduce { what: String, cores: usize, clusters: usize, fmt: ElemFormat, cold_plans: bool, policy: Option<PrecisionPolicy>, exec: ExecMode, trace_out: Option<String>, obs_out: Option<String>, vector_len: u8 },
+    /// extension tables (formats, scaling, serving, pareto, training).
+    Reproduce { what: String, cores: usize, clusters: usize, fmt: ElemFormat, cold_plans: bool, policy: Option<PrecisionPolicy>, exec: ExecMode, trace_out: Option<String>, obs_out: Option<String>, vector_len: u8, rounding: Rounding },
     /// `serve`: drive the serving engine over a synthetic arrival
     /// trace, executing served requests through a real executor.
     Serve {
@@ -173,13 +173,13 @@ const SIMULATE_FLAGS: &[&str] = &[
 /// Flags the `reproduce` subcommand accepts.
 const REPRODUCE_FLAGS: &[&str] = &[
     "cores", "clusters", "fmt", "cold-plans", "policy", "exec", "trace-out", "obs-out",
-    "vector-len",
+    "vector-len", "rounding",
 ];
 /// Flags the `serve` subcommand accepts.
 const SERVE_FLAGS: &[&str] = &[
     "requests", "batch", "clusters", "fabrics", "fmt", "mix", "arrival", "slo-ticks",
     "queue-cap", "sched", "artifacts", "cold-plans", "policy", "exec", "trace-out",
-    "obs-out", "vector-len", "machines", "router",
+    "obs-out", "vector-len", "machines", "router", "rounding",
 ];
 
 /// Split `--key value` pairs (plus valueless boolean flags) after the
@@ -307,6 +307,19 @@ fn get_exec(f: &HashMap<String, String>) -> Result<ExecMode, CliError> {
     match f.get("exec") {
         None => Ok(ExecMode::Cycle),
         Some(s) => ExecMode::parse(s),
+    }
+}
+
+/// `--rounding rne|stochastic[:SEED]`: the quantizer rounding mode
+/// (DESIGN.md §18). `rne` (the default) rounds to nearest, ties to
+/// even; `stochastic` draws deterministic-seeded stochastic rounding
+/// at the default seed, `stochastic:SEED` at an explicit decimal u64
+/// seed. Unknown modes and malformed seeds are parse errors carrying
+/// the supported-value list.
+fn get_rounding(f: &HashMap<String, String>) -> Result<Rounding, CliError> {
+    match f.get("rounding") {
+        None => Ok(Rounding::Rne),
+        Some(s) => Rounding::parse(s).map_err(CliError),
     }
 }
 
@@ -465,25 +478,40 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 .cloned()
                 .unwrap_or_else(|| "all".to_string());
             if !["fig3", "fig4", "table3", "formats", "scaling", "serving", "pareto", "fleet",
-                 "all"]
+                 "training", "all"]
                 .contains(&what.as_str())
             {
                 return Err(CliError(format!(
                     "unknown target '{what}' \
-                     (expected fig3|fig4|table3|formats|scaling|serving|pareto|fleet|all)"
+                     (expected fig3|fig4|table3|formats|scaling|serving|pareto|fleet|\
+                     training|all)"
                 )));
             }
             let skip = usize::from(!rest.is_empty() && !rest[0].starts_with("--"));
             let f = flags(&rest[skip..], REPRODUCE_FLAGS)?;
             let fmt = get_fmt(&f)?;
             let policy = get_policy(&f, fmt)?;
-            // Only the pareto sweep consumes a policy; silently
-            // ignoring it on the other tables would misrepresent what
-            // they measured, so reject it up front (like --batch 0).
-            if policy.is_some() && what != "pareto" && what != "all" {
+            // Only the pareto sweep and the training workload consume a
+            // policy; silently ignoring it on the other tables would
+            // misrepresent what they measured, so reject it up front
+            // (like --batch 0).
+            if policy.is_some() && what != "pareto" && what != "training" && what != "all" {
                 return Err(CliError(format!(
-                    "--policy only applies to 'reproduce pareto' (or 'all'), \
-                     not '{what}' — the other tables sweep --fmt, not per-layer policies"
+                    "--policy only applies to 'reproduce pareto', 'reproduce training' \
+                     (or 'all'), not '{what}' — the other tables sweep --fmt, not \
+                     per-layer policies"
+                )));
+            }
+            let rounding = get_rounding(&f)?;
+            // Stochastic rounding is a training-time numerics mode
+            // (DESIGN.md §18): inference quantizes with RNE so repeated
+            // requests stay bit-identical. Reject it on every reproduce
+            // target but the training workload.
+            if rounding != Rounding::Rne && what != "training" {
+                return Err(CliError(format!(
+                    "--rounding {rounding} only applies to 'reproduce training' — the \
+                     inference targets quantize with RNE so reruns are bit-identical \
+                     (DESIGN.md §18)"
                 )));
             }
             let exec = get_exec(&f)?;
@@ -510,6 +538,7 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 trace_out: get_out_path(&f, "trace-out")?,
                 obs_out: get_out_path(&f, "obs-out")?,
                 vector_len: get_vector_len(&f)?,
+                rounding,
             })
         }
         "serve" => {
@@ -542,6 +571,22 @@ pub fn parse(args: &[String]) -> Result<Command, CliError> {
                 )));
             }
             let policy = get_policy(&f, fmt)?;
+            // The serving path quantizes with RNE only: stochastic
+            // rounding keys every quantization on a per-tensor seed, so
+            // identical requests would stop producing bit-identical
+            // responses (and the warm weight-tile cache would fragment
+            // per seed). Training is where stochastic rounding lives —
+            // see DESIGN.md §18. `--rounding rne` is accepted as the
+            // explicit spelling of the default.
+            let rounding = get_rounding(&f)?;
+            if rounding != Rounding::Rne {
+                return Err(CliError(format!(
+                    "--rounding {rounding} is not supported on the inference serving \
+                     path (serving quantizes with RNE so identical requests produce \
+                     bit-identical responses); stochastic rounding applies to \
+                     'reproduce training' — see DESIGN.md §18"
+                )));
+            }
             if policy.is_some() && f.contains_key("mix") {
                 return Err(CliError(
                     "--policy and --mix are mutually exclusive: --mix weights \
@@ -631,9 +676,10 @@ USAGE:
                        [--trace-out FILE] [--obs-out FILE]
                        (--clusters N > 1 shards the MX GEMM across N simulated clusters;
                         --policy walks the whole mixed-precision model graph instead)
-  mxdotp-cli reproduce [fig3|fig4|table3|formats|scaling|serving|pareto|fleet|all] [--cores 8]
-                       [--clusters 8] [--fmt e4m3] [--cold-plans] [--policy ...]
+  mxdotp-cli reproduce [fig3|fig4|table3|formats|scaling|serving|pareto|fleet|training|all]
+                       [--cores 8] [--clusters 8] [--fmt e4m3] [--cold-plans] [--policy ...]
                        [--vector-len 1|2|4|8] [--exec cycle|analytic|sampled:N]
+                       [--rounding rne|stochastic[:SEED]]
                        [--trace-out FILE] [--obs-out FILE]
   mxdotp-cli serve     [--requests 16] [--batch 8] [--clusters 1] [--fabrics N]
                        [--fmt e4m3] [--mix e4m3:0.6,e2m1:0.4 | --policy PRESET|class=fmt,...]
@@ -660,7 +706,22 @@ attn, linears, all; formats: the six OCP names, fp32, and the aliases
 fp8/fp6/fp4). 'reproduce pareto' sweeps the presets (plus --policy,
 if given) on the DeiT-Tiny shapes and prints accuracy vs the FP32
 reference against cycle-accurate fabric throughput; on other reproduce
-targets --policy is rejected (they sweep --fmt, not policies).
+targets (except 'training') --policy is rejected (they sweep --fmt,
+not policies).
+
+'reproduce training' runs the low-precision MX training workload
+(DESIGN.md §18): it fine-tunes the DeiT block against an FP32 teacher
+under the --policy precision recipe (default all-fp8) and prints one
+row per point — FP32 reference, MX with RNE rounding, MX with
+stochastic rounding — with the loss curve's final gap vs FP32,
+cycle-accurate cycles/step for the forward+backward GEMMs, and the
+analytic cost model's relative error. --rounding picks the stochastic
+point's rounding spec: 'rne' (default; the stochastic point then uses
+the default seed), 'stochastic' (same), or 'stochastic:SEED' to pin
+the tensor-seed base. Stochastic rounding is deterministic given the
+seed (same seed, same run, bit for bit) and is a training-time mode
+only: every inference path (serve, the other reproduce targets)
+quantizes with RNE and rejects --rounding stochastic at parse time.
 
 serve drives the production serving engine (DESIGN.md §12) over a
 synthetic open-loop arrival trace, then executes the served requests
@@ -1234,6 +1295,66 @@ mod tests {
         // and shows up in the unknown-target error listing
         let err = parse(&argv("reproduce fig9")).unwrap_err();
         assert!(err.0.contains("fleet"), "{err}");
+    }
+
+    #[test]
+    fn parse_reproduce_training_target_and_rounding_modes() {
+        // default: RNE quantization, all-fp8 chosen downstream
+        assert!(matches!(
+            parse(&argv("reproduce training")),
+            Ok(Command::Reproduce { ref what, rounding: Rounding::Rne, policy: None, .. })
+                if what == "training"
+        ));
+        // explicit modes parse, with and without a pinned seed
+        assert!(matches!(
+            parse(&argv("reproduce training --rounding rne")),
+            Ok(Command::Reproduce { rounding: Rounding::Rne, .. })
+        ));
+        assert!(matches!(
+            parse(&argv("reproduce training --rounding stochastic")),
+            Ok(Command::Reproduce {
+                rounding: Rounding::Stochastic(Rounding::DEFAULT_SEED),
+                ..
+            })
+        ));
+        assert!(matches!(
+            parse(&argv("reproduce training --rounding stochastic:7")),
+            Ok(Command::Reproduce { rounding: Rounding::Stochastic(7), .. })
+        ));
+        // training consumes a policy (the MX recipe under test)
+        assert!(parse(&argv("reproduce training --policy all-fp4")).is_ok());
+        // unknown modes and malformed seeds list the supported values
+        let err = parse(&argv("reproduce training --rounding nearest")).unwrap_err();
+        assert!(err.0.contains("unknown rounding mode 'nearest'"), "{err}");
+        for mode in ["rne", "stochastic", "stochastic:SEED"] {
+            assert!(err.0.contains(mode), "error must list '{mode}': {err}");
+        }
+        assert!(parse(&argv("reproduce training --rounding stochastic:abc")).is_err());
+        assert!(parse(&argv("reproduce training --rounding stochastic:-1")).is_err());
+        // and the target shows up in the unknown-target error listing
+        let err = parse(&argv("reproduce fig9")).unwrap_err();
+        assert!(err.0.contains("training"), "{err}");
+    }
+
+    #[test]
+    fn stochastic_rounding_is_rejected_on_inference_paths() {
+        // serving is RNE-only; the error points at the training
+        // workload and its design section
+        let err = parse(&argv("serve --rounding stochastic")).unwrap_err();
+        assert!(err.0.contains("serving"), "{err}");
+        assert!(err.0.contains("training"), "{err}");
+        assert!(err.0.contains("DESIGN.md §18"), "{err}");
+        // the explicit spelling of the default is accepted
+        assert!(parse(&argv("serve --rounding rne")).is_ok());
+        // inference reproduce targets are RNE-only too
+        let err = parse(&argv("reproduce pareto --rounding stochastic:9")).unwrap_err();
+        assert!(err.0.contains("training"), "{err}");
+        assert!(err.0.contains("§18"), "{err}");
+        assert!(parse(&argv("reproduce all --rounding stochastic")).is_err());
+        assert!(parse(&argv("reproduce scaling --rounding rne")).is_ok());
+        // simulate has no --rounding flag at all
+        let err = parse(&argv("simulate --rounding stochastic")).unwrap_err();
+        assert!(err.0.contains("unknown flag"), "{err}");
     }
 
     #[test]

@@ -23,7 +23,9 @@
 //! * [`window`] — the 95-bit / anchor-34 fixed-point sizing analysis
 //!   that *proves* the paper's §III-A claim for this implementation;
 //! * [`unit`] — the stateful unit model (format CSR, special-value
-//!   semantics, pipeline occupancy) used by the Snitch FPU model;
+//!   semantics, pipeline occupancy, and the §18 expanded-sum
+//!   accumulation mode behind the `MX_EXP_ACC` CSR) used by the
+//!   Snitch FPU model;
 //! * [`baselines`] — the comparison units of Table III (ExSdotp-style
 //!   FP16-accumulating dot product, software FP8→FP32 FMA sequences).
 
@@ -33,6 +35,6 @@ pub mod unit;
 pub mod vunit;
 pub mod window;
 
-pub use exact::mxdotp_exact;
+pub use exact::{add_dyadic_exact, mxdotp_exact, Dyadic};
 pub use unit::{MxDotpUnit, PIPELINE_STAGES};
 pub use vunit::execute_group as vmxdotp_group;

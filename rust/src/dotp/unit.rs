@@ -22,6 +22,7 @@
 //!   issue per cycle — the latency/throughput contract the Snitch FPU
 //!   timing model enforces.
 
+use crate::dotp::exact::{add_dyadic_exact, dyadic_to_f32_rne, mxdotp_product_sum, Dyadic};
 use crate::formats::{ElemFormat, MAX_HW_LANES};
 
 /// Pipeline register levels of the implemented unit (§IV-A).
@@ -29,15 +30,29 @@ pub const PIPELINE_STAGES: u32 = 3;
 
 /// The MXDOTP dot-product-accumulate unit.
 ///
-/// Stateless apart from the format CSR; `execute` computes one
-/// instruction's result. Cycle-level behaviour (issue/stall/writeback)
-/// is modeled by the Snitch FPU around this functional core.
+/// Stateless apart from the format CSR and the expanded-accumulation
+/// state (DESIGN.md §18); `execute` computes one instruction's result.
+/// Cycle-level behaviour (issue/stall/writeback) is modeled by the
+/// Snitch FPU around this functional core.
 #[derive(Clone, Debug)]
 pub struct MxDotpUnit {
     /// Element format selected by the `MX_FMT` CSR (DESIGN.md §11).
     pub fmt: ElemFormat,
     /// Instructions executed (perf counter mirrored in the core's CSRs).
     pub issued: u64,
+    /// Expanded-sum accumulation mode (the `MX_EXP_ACC` CSR, DESIGN.md
+    /// §18): when set, every issue folds its exact product sum into the
+    /// wide dyadic accumulator instead of rounding into the FP32
+    /// accumulator operand, and the returned value is the round-once
+    /// view of the running wide sum.
+    expanded: bool,
+    /// The wide (exact dyadic) running sum of the expanded mode.
+    exp_acc: Dyadic,
+    /// Sticky special outcome of the expanded chain: once an issue
+    /// produces NaN or an infinity, the whole reduction is pinned to it
+    /// (NaN absorbs; opposite infinities collapse to NaN) until the
+    /// mode CSR is rewritten.
+    exp_special: Option<f32>,
 }
 
 impl Default for MxDotpUnit {
@@ -47,14 +62,29 @@ impl Default for MxDotpUnit {
 }
 
 impl MxDotpUnit {
-    /// A unit with its format CSR initialized to `fmt`.
+    /// A unit with its format CSR initialized to `fmt` (expanded
+    /// accumulation off — the paper's per-issue-rounding unit).
     pub fn new(fmt: ElemFormat) -> Self {
-        Self { fmt, issued: 0 }
+        Self { fmt, issued: 0, expanded: false, exp_acc: Dyadic::ZERO, exp_special: None }
     }
 
     /// Write the format CSR.
     pub fn set_format(&mut self, fmt: ElemFormat) {
         self.fmt = fmt;
+    }
+
+    /// Write the expanded-accumulation CSR (DESIGN.md §18). Any write —
+    /// enable or disable — clears the wide accumulator and its sticky
+    /// special state, so a reduction chain always starts from zero.
+    pub fn set_expanded(&mut self, on: bool) {
+        self.expanded = on;
+        self.exp_acc = Dyadic::ZERO;
+        self.exp_special = None;
+    }
+
+    /// True when the unit is in expanded-sum accumulation mode.
+    pub fn expanded(&self) -> bool {
+        self.expanded
     }
 
     /// Lanes consumed per issue at the current format.
@@ -78,12 +108,21 @@ impl MxDotpUnit {
 
     /// Execute on already-unpacked element lane bytes (`pa.len()` must
     /// equal the format's lane count).
+    ///
+    /// In expanded mode (DESIGN.md §18) the `acc` operand is
+    /// architecturally ignored: the running wide sum takes its role,
+    /// and the return value is the RNE-rounded view of that sum after
+    /// this issue — so the last issue of a chain returns the
+    /// round-once result of the whole reduction.
     pub fn execute_unpacked(&mut self, pa: &[u8], pb: &[u8], xa: u8, xb: u8, acc: f32) -> f32 {
         self.issued += 1;
         let lanes = self.lanes();
         debug_assert_eq!(pa.len(), lanes, "{}: wrong lane count", self.fmt);
         debug_assert_eq!(pb.len(), lanes);
         let lut = crate::dotp::exact::DecodeLut::for_fmt(self.fmt);
+        if self.expanded {
+            return self.execute_expanded(lut, pa, pb, xa, xb);
+        }
         // Scale NaN (E8M0 0xFF) or accumulator NaN poisons the result.
         if xa == 0xFF || xb == 0xFF || acc.is_nan() {
             return f32::NAN;
@@ -135,6 +174,82 @@ impl MxDotpUnit {
             return acc;
         }
         crate::dotp::exact::mxdotp_exact_lut(lut, pa, pb, xa, xb, acc)
+    }
+
+    /// The expanded-sum issue path: fold this issue's exact product sum
+    /// into the wide accumulator ([`add_dyadic_exact`]) and return the
+    /// round-once view. Special values are sticky across the chain.
+    fn execute_expanded(
+        &mut self,
+        lut: &'static crate::dotp::exact::DecodeLut,
+        pa: &[u8],
+        pb: &[u8],
+        xa: u8,
+        xb: u8,
+    ) -> f32 {
+        // Scale NaN poisons the whole reduction, sticky.
+        if xa == 0xFF || xb == 0xFF {
+            self.exp_special = Some(f32::NAN);
+        }
+        if let Some(s) = self.exp_special {
+            if s.is_nan() {
+                return f32::NAN;
+            }
+        }
+        let mut any_special = 0u8;
+        for i in 0..pa.len() {
+            any_special |= lut.special[pa[i] as usize] | lut.special[pb[i] as usize];
+        }
+        if any_special != 0 {
+            // Same IEEE slow path as the per-issue mode, but the
+            // outcome folds into the sticky chain state instead of
+            // interacting with an accumulator operand.
+            let spec = self.fmt.float_spec().expect("specials imply a float format");
+            let mut pos_inf = false;
+            let mut neg_inf = false;
+            for i in 0..pa.len() {
+                for (x, y) in [(pa[i], pb[i]), (pb[i], pa[i])] {
+                    if spec.is_nan(x as u16) {
+                        self.exp_special = Some(f32::NAN);
+                        return f32::NAN;
+                    }
+                    if spec.is_inf(x as u16) {
+                        let vy = spec.decode(y as u16);
+                        if vy == 0.0 || vy.is_nan() {
+                            self.exp_special = Some(f32::NAN); // inf · 0
+                            return f32::NAN;
+                        }
+                        let sign_x = (x >> 7) & 1 == 1;
+                        if sign_x ^ vy.is_sign_negative() {
+                            neg_inf = true;
+                        } else {
+                            pos_inf = true;
+                        }
+                    }
+                }
+            }
+            let issue_inf = match (pos_inf, neg_inf) {
+                (true, true) => Some(f32::NAN),
+                (true, false) => Some(f32::INFINITY),
+                (false, true) => Some(f32::NEG_INFINITY),
+                (false, false) => None,
+            };
+            if let Some(v) = issue_inf {
+                self.exp_special = Some(match self.exp_special {
+                    // opposite sticky infinity (or a NaN issue) -> NaN
+                    Some(s) if s != v || v.is_nan() => f32::NAN,
+                    _ => v,
+                });
+                return self.exp_special.unwrap();
+            }
+        }
+        if let Some(s) = self.exp_special {
+            // An infinite chain absorbs finite issues.
+            return s;
+        }
+        let d = mxdotp_product_sum(lut, pa, pb, xa, xb);
+        self.exp_acc = add_dyadic_exact(self.exp_acc, d);
+        dyadic_to_f32_rne(self.exp_acc)
     }
 }
 
@@ -407,5 +522,116 @@ mod tests {
             u.execute(0, 0, 127, 127, 0.0);
         }
         assert_eq!(u.issued, 5);
+    }
+
+    #[test]
+    fn expanded_mode_preserves_sub_ulp_contributions() {
+        // The dW-accumulation scenario (DESIGN.md §18): one large
+        // partial followed by many tiny ones. Per-issue rounding
+        // absorbs every tiny addend (each is below half an ulp of the
+        // running sum); the expanded mode keeps the sum exact and
+        // rounds once, so the tiny mass survives.
+        let one = ElemFormat::E4M3.encode(1.0);
+        let tiny = ElemFormat::E4M3.encode(0.0625); // 2^-4, exact
+        let big = pack8(&[one, 0, 0, 0, 0, 0, 0, 0]);
+        let t = pack8(&[tiny, 0, 0, 0, 0, 0, 0, 0]);
+        let run = |expanded: bool| {
+            let mut u = MxDotpUnit::new(ElemFormat::E4M3);
+            u.set_expanded(expanded);
+            // 1.0 · 1.0 · 2^12 · 2^12 = 2^24 (ulp 2)
+            let mut acc = u.execute(big, big, 139, 139, 0.0);
+            // 32 × 2^-4 = 2.0 in total, each issue < half-ulp alone
+            for _ in 0..32 {
+                acc = u.execute(t, big, 127, 127, acc);
+            }
+            acc
+        };
+        assert_eq!(run(false), 16_777_216.0); // 2^24: every addend lost
+        assert_eq!(run(true), 16_777_218.0); // 2^24 + 2: round-once
+    }
+
+    #[test]
+    fn expanded_matches_exact_f64_sum_property() {
+        // For moderate scales the chain's exact sum fits f64's 53-bit
+        // significand (small integer products, bounded shifts), so the
+        // round-once result must equal the f64 long sum cast to f32.
+        for fmt in ElemFormat::ALL {
+            property_cases(200, 0xE0 ^ fmt.csr_code() as u64, |rng| {
+                let lanes = fmt.hw_lanes();
+                let mut u = MxDotpUnit::new(fmt);
+                u.set_expanded(true);
+                let mut exact = 0.0f64;
+                let mut got = 0.0f32;
+                for _ in 0..12 {
+                    let mut pa = vec![0u8; lanes];
+                    let mut pb = vec![0u8; lanes];
+                    for i in 0..lanes {
+                        pa[i] = fmt.encode(rng.normal_f32());
+                        pb[i] = fmt.encode(rng.normal_f32());
+                    }
+                    let xa = (127 + rng.range_i64(-2, 2)) as u8;
+                    let xb = (127 + rng.range_i64(-2, 2)) as u8;
+                    got = u.execute_unpacked(&pa, &pb, xa, xb, got);
+                    let s: f64 = pa
+                        .iter()
+                        .zip(&pb)
+                        .map(|(&x, &y)| fmt.decode(x) as f64 * fmt.decode(y) as f64)
+                        .sum();
+                    exact += s * 2f64.powi(xa as i32 + xb as i32 - 254);
+                }
+                assert_eq!(got, exact as f32, "{fmt}");
+            });
+        }
+    }
+
+    #[test]
+    fn expanded_ignores_accumulator_operand() {
+        let one = ElemFormat::E4M3.encode(1.0);
+        let reg = pack8(&[one; 8]);
+        let mut u = MxDotpUnit::new(ElemFormat::E4M3);
+        u.set_expanded(true);
+        // whatever rides in the acc operand, the wide sum is the state
+        assert_eq!(u.execute(reg, reg, 127, 127, 1e30), 8.0);
+        assert_eq!(u.execute(reg, reg, 127, 127, f32::NAN), 16.0);
+    }
+
+    #[test]
+    fn expanded_csr_write_resets_the_wide_sum() {
+        let one = ElemFormat::E4M3.encode(1.0);
+        let reg = pack8(&[one; 8]);
+        let mut u = MxDotpUnit::new(ElemFormat::E4M3);
+        u.set_expanded(true);
+        assert_eq!(u.execute(reg, reg, 127, 127, 0.0), 8.0);
+        u.set_expanded(true); // re-arm: running sum restarts at zero
+        assert_eq!(u.execute(reg, reg, 127, 127, 0.0), 8.0);
+        u.set_expanded(false); // back to the per-issue path
+        assert_eq!(u.execute(reg, reg, 127, 127, 1.0), 9.0);
+    }
+
+    #[test]
+    fn expanded_specials_are_sticky() {
+        let mut u = MxDotpUnit::new(ElemFormat::E5M2);
+        u.set_expanded(true);
+        let inf = 0b0_11111_00u8;
+        let ninf = 0b1_11111_00u8;
+        let one = ElemFormat::E5M2.encode(1.0);
+        let pa = pack8(&[inf, 0, 0, 0, 0, 0, 0, 0]);
+        let pb = pack8(&[one, 0, 0, 0, 0, 0, 0, 0]);
+        let fin = pack8(&[one; 8]);
+        // +inf enters the chain and absorbs finite issues
+        assert_eq!(u.execute(pa, pb, 127, 127, 0.0), f32::INFINITY);
+        assert_eq!(u.execute(fin, fin, 127, 127, 0.0), f32::INFINITY);
+        // an opposite infinity collapses the chain to NaN, sticky
+        let na = pack8(&[ninf, 0, 0, 0, 0, 0, 0, 0]);
+        assert!(u.execute(na, pb, 127, 127, 0.0).is_nan());
+        assert!(u.execute(fin, fin, 127, 127, 0.0).is_nan());
+        // a CSR rewrite clears the poison
+        u.set_expanded(true);
+        assert_eq!(u.execute(fin, fin, 127, 127, 0.0), 8.0);
+        // scale NaN poisons expanded chains too
+        let mut u2 = MxDotpUnit::new(ElemFormat::Int8);
+        u2.set_expanded(true);
+        assert!(u2.execute(0, 0, 0xFF, 127, 0.0).is_nan());
+        assert!(u2.execute(pack8(&[64; 8]), pack8(&[64; 8]), 127, 127, 0.0).is_nan());
     }
 }

@@ -181,6 +181,51 @@ mod tests {
     }
 
     #[test]
+    fn expanded_sum_bit_identical_scalar_vs_vector_all_formats() {
+        // The DESIGN.md §18 property: with the expanded-accumulation
+        // CSR set, the vector group must still be bit-identical to the
+        // scalar chain — across all six formats, with NaN/Inf scale
+        // headers and subnormal-heavy operands in the mix. Both units
+        // start from a fresh CSR write, so both wide sums start at
+        // zero.
+        property_cases(300, 0x58, |rng| {
+            let fmt = ElemFormat::ALL[rng.below(6) as usize];
+            let vl = SUPPORTED_VL[rng.below(4) as usize];
+            let bw = [2usize, 4][rng.below(2) as usize];
+            let (mut a, mut b) = random_group(rng, fmt, vl, bw);
+            // sprinkle subnormals (low patterns) and, for the formats
+            // that have them, specials; occasionally a NaN scale
+            if rng.below(4) == 0 {
+                let lane = rng.below(vl as u64) as usize;
+                let w = 1 + lane * bw + rng.below(bw as u64) as usize;
+                a[w] = 0x0101_0101_0101_0101; // min-subnormal lanes
+            }
+            if rng.below(6) == 0 && fmt == ElemFormat::E5M2 {
+                let w = 1 + rng.below((vl * bw) as u64) as usize;
+                b[w] = 0x7C; // +inf in lane 0
+            }
+            if rng.below(8) == 0 {
+                let mut h = a[0].to_le_bytes();
+                h[rng.below(vl as u64) as usize] = 0xFF; // NaN scale
+                a[0] = u64::from_le_bytes(h);
+            }
+            let acc = rng.normal_f32();
+            let mut vu = MxDotpUnit::new(fmt);
+            let mut su = MxDotpUnit::new(fmt);
+            vu.set_expanded(true);
+            su.set_expanded(true);
+            let got = execute_group(&mut vu, vl, bw, &a, &b, acc);
+            let want = scalar_chain(&mut su, vl, bw, &a, &b, acc);
+            assert_eq!(got.to_bits(), want.to_bits(), "{fmt} vl={vl} bw={bw}");
+            // and a second group continues both chains identically
+            let (a2, b2) = random_group(rng, fmt, vl, bw);
+            let got2 = execute_group(&mut vu, vl, bw, &a2, &b2, got);
+            let want2 = scalar_chain(&mut su, vl, bw, &a2, &b2, want);
+            assert_eq!(got2.to_bits(), want2.to_bits(), "{fmt} chained group");
+        });
+    }
+
+    #[test]
     fn specials_propagate_like_the_scalar_unit() {
         let fmt = ElemFormat::E5M2;
         let inf = 0b0_11111_00u8;

@@ -26,7 +26,7 @@ pub mod quantize;
 pub use dot::{dot_block, dot_general, matmul_ref};
 pub use e8m0::E8m0;
 pub use minifloat::{FloatSpec, E2M1, E2M3, E3M2, E4M3, E5M2, FP9};
-pub use quantize::{MxMatrix, MxVector, ScaleAxis};
+pub use quantize::{MxMatrix, MxVector, Rounding, ScaleAxis};
 
 /// The block size fixed by the MX v1.0 spec for all concrete formats.
 pub const SPEC_BLOCK_SIZE: usize = 32;

@@ -16,9 +16,158 @@
 //! one scale per (row, block); B (K×N) one per (block, column) — the
 //! exact layout the `mxdotp` kernel streams via SSRs (Fig. 2: the
 //! scales are reshaped for SSR streaming).
+//!
+//! Element rounding is selectable via [`Rounding`]: RNE (default) or
+//! deterministic-seeded stochastic rounding for the training workload
+//! (DESIGN.md §18). The shared exponent rule above is always
+//! deterministic regardless of rounding mode.
 
 use super::e8m0::{self, E8m0};
 use super::ElemFormat;
+use crate::rng::splitmix64;
+use std::sync::OnceLock;
+
+/// How element values are rounded onto the format's value grid during
+/// quantization (DESIGN.md §18).
+///
+/// The shared block exponent is *always* computed with the
+/// deterministic OCP amax rule — rounding mode only affects how each
+/// scaled element picks between its two neighbouring grid values:
+///
+/// * [`Rounding::Rne`] — round-to-nearest-even, the default and the
+///   only mode the inference/serving path accepts;
+/// * [`Rounding::Stochastic`] — round up with probability equal to the
+///   fractional distance to the upper neighbour, using a counter-based
+///   draw `splitmix64(seed ^ element_index)` so the result is
+///   bit-reproducible for a fixed seed and independent of traversal
+///   order (sharded, sequential and concurrent quantization of the
+///   same tensor produce identical bits).
+///
+/// The seed is part of the value: two `Stochastic` modes with
+/// different seeds hash and compare as different quantizers, so plan-
+/// and tile-cache keys ([`crate::kernels::plan::PlanCache`]) never
+/// alias across rounding configurations.
+///
+/// Same seed, same bits:
+///
+/// ```
+/// use mxdotp::formats::quantize::{MxBlock, Rounding};
+/// use mxdotp::ElemFormat;
+///
+/// let vals = [0.3f32; 32];
+/// let a = MxBlock::quantize_with(&vals, ElemFormat::E4M3, Rounding::Stochastic(7), 0);
+/// let b = MxBlock::quantize_with(&vals, ElemFormat::E4M3, Rounding::Stochastic(7), 0);
+/// assert_eq!(a.elems, b.elems); // bit-reproducible for a fixed seed
+///
+/// let c = MxBlock::quantize_with(&vals, ElemFormat::E4M3, Rounding::Stochastic(8), 0);
+/// assert_ne!(a.elems, c.elems); // a different seed draws differently
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum Rounding {
+    /// Round to nearest, ties to even (the format's native `encode`).
+    #[default]
+    Rne,
+    /// Deterministic-seeded stochastic rounding; the payload is the
+    /// tensor-level seed.
+    Stochastic(u64),
+}
+
+impl Rounding {
+    /// Seed used when the CLI selects `stochastic` without `:SEED`.
+    pub const DEFAULT_SEED: u64 = 0x5EED;
+
+    /// Parse a CLI-style rounding spec: `rne`, `stochastic`, or
+    /// `stochastic:SEED` (decimal u64 seed).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "rne" => Ok(Rounding::Rne),
+            "stochastic" => Ok(Rounding::Stochastic(Self::DEFAULT_SEED)),
+            other => {
+                if let Some(seed) = other.strip_prefix("stochastic:") {
+                    seed.parse::<u64>().map(Rounding::Stochastic).map_err(|_| {
+                        format!("bad stochastic seed '{seed}'; expected a decimal u64")
+                    })
+                } else {
+                    Err(format!(
+                        "unknown rounding mode '{other}'; supported: rne, stochastic, stochastic:SEED"
+                    ))
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Rounding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rounding::Rne => f.write_str("rne"),
+            Rounding::Stochastic(seed) => write!(f, "stochastic:{seed}"),
+        }
+    }
+}
+
+/// Sorted, deduplicated finite value grid of an element format,
+/// computed once per process. The grid is what stochastic rounding
+/// brackets a value between; RNE never needs it (the formats' `encode`
+/// is already exact RNE).
+fn value_grid(fmt: ElemFormat) -> &'static [f32] {
+    static GRIDS: OnceLock<Vec<Vec<f32>>> = OnceLock::new();
+    let grids = GRIDS.get_or_init(|| {
+        let mut all = vec![Vec::new(); ElemFormat::ALL.len()];
+        for f in ElemFormat::ALL {
+            let mut g: Vec<f32> = match f.float_spec() {
+                Some(spec) => spec.finite_patterns().iter().map(|&b| spec.decode(b)).collect(),
+                // MXINT8: two's-complement mantissa with implied 2^-6.
+                None => (-128..=127).map(|m| m as f32 / 64.0).collect(),
+            };
+            g.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            g.dedup(); // -0.0 == 0.0 collapses to one grid point
+            all[f.csr_code() as usize] = g;
+        }
+        all
+    });
+    &grids[fmt.csr_code() as usize]
+}
+
+/// Stochastically round an (already block-scaled) value onto the
+/// format grid. `u` is the element's uniform draw in `[0, 1)`; the
+/// upper neighbour wins when `u < (v - lo) / (hi - lo)`. Values that
+/// sit exactly on the grid, saturate, or are non-finite delegate to
+/// the deterministic RNE `encode` (saturation and specials carry no
+/// rounding freedom).
+fn encode_stochastic(fmt: ElemFormat, v: f32, u: f32) -> u8 {
+    if !v.is_finite() {
+        return fmt.encode(v);
+    }
+    let grid = value_grid(fmt);
+    let max = *grid.last().unwrap();
+    if v <= -max || v >= max {
+        return fmt.encode(v);
+    }
+    let idx = grid.partition_point(|&g| g < v);
+    if grid[idx] == v {
+        return fmt.encode(v);
+    }
+    let (lo, hi) = (grid[idx - 1], grid[idx]);
+    let p_up = (v - lo) / (hi - lo);
+    fmt.encode(if u < p_up { hi } else { lo })
+}
+
+/// Encode one element under a rounding mode. `index` is the element's
+/// global row-major index in its tensor — the stochastic draw is
+/// `splitmix64(seed ^ index)`, so the bits depend only on (seed,
+/// index, value), never on traversal order.
+fn encode_elem(fmt: ElemFormat, v: f32, se: i32, rounding: Rounding, index: usize) -> u8 {
+    let scaled = e8m0::mul_pow2(v, -se);
+    match rounding {
+        Rounding::Rne => fmt.encode(scaled),
+        Rounding::Stochastic(seed) => {
+            // 24 uniform bits are plenty against <= 4-bit mantissas.
+            let u = (splitmix64(seed ^ index as u64) >> 40) as f32 / (1u64 << 24) as f32;
+            encode_stochastic(fmt, scaled, u)
+        }
+    }
+}
 
 /// Which axis of a matrix the MX blocks run along.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,13 +200,28 @@ pub struct MxBlock {
 }
 
 impl MxBlock {
-    /// Quantize a slice of f32s into one MX block.
+    /// Quantize a slice of f32s into one MX block (RNE rounding).
     pub fn quantize(values: &[f32], fmt: ElemFormat) -> Self {
+        Self::quantize_with(values, fmt, Rounding::Rne, 0)
+    }
+
+    /// Quantize under an explicit [`Rounding`] mode. `base_index` is
+    /// the global row-major index of `values[0]` within the enclosing
+    /// tensor — it anchors the per-element stochastic draws so a block
+    /// rounds identically whether quantized standalone or as part of a
+    /// vector/matrix. The shared exponent is rounding-independent.
+    pub fn quantize_with(
+        values: &[f32],
+        fmt: ElemFormat,
+        rounding: Rounding,
+        base_index: usize,
+    ) -> Self {
         let amax = values.iter().fold(0.0f32, |m, v| m.max(v.abs()));
         let se = shared_exponent(amax, fmt);
         let elems = values
             .iter()
-            .map(|&v| fmt.encode(e8m0::mul_pow2(v, -se)))
+            .enumerate()
+            .map(|(i, &v)| encode_elem(fmt, v, se, rounding, base_index + i))
             .collect();
         MxBlock { fmt, scale: E8m0::from_exponent(se), elems }
     }
@@ -88,14 +252,27 @@ pub struct MxVector {
 }
 
 impl MxVector {
-    /// Quantize an f32 slice (length divisible by `block_size`).
+    /// Quantize an f32 slice (length divisible by `block_size`, RNE).
     pub fn quantize(values: &[f32], fmt: ElemFormat, block_size: usize) -> Self {
+        Self::quantize_with(values, fmt, block_size, Rounding::Rne, 0)
+    }
+
+    /// Quantize under an explicit [`Rounding`] mode; `base_index` is
+    /// the tensor-global index of `values[0]` (see
+    /// [`MxBlock::quantize_with`]).
+    pub fn quantize_with(
+        values: &[f32],
+        fmt: ElemFormat,
+        block_size: usize,
+        rounding: Rounding,
+        base_index: usize,
+    ) -> Self {
         assert!(block_size > 0 && values.len() % block_size == 0,
             "length {} not divisible by block size {block_size}", values.len());
         let mut elems = Vec::with_capacity(values.len());
         let mut scales = Vec::with_capacity(values.len() / block_size);
-        for chunk in values.chunks(block_size) {
-            let b = MxBlock::quantize(chunk, fmt);
+        for (bi, chunk) in values.chunks(block_size).enumerate() {
+            let b = MxBlock::quantize_with(chunk, fmt, rounding, base_index + bi * block_size);
             elems.extend_from_slice(&b.elems);
             scales.push(b.scale);
         }
@@ -157,7 +334,7 @@ pub struct MxMatrix {
 }
 
 impl MxMatrix {
-    /// Quantize a row-major f32 matrix along the given axis.
+    /// Quantize a row-major f32 matrix along the given axis (RNE).
     pub fn quantize(
         data: &[f32],
         rows: usize,
@@ -165,6 +342,22 @@ impl MxMatrix {
         fmt: ElemFormat,
         block_size: usize,
         axis: ScaleAxis,
+    ) -> Self {
+        Self::quantize_with(data, rows, cols, fmt, block_size, axis, Rounding::Rne)
+    }
+
+    /// Quantize under an explicit [`Rounding`] mode. Stochastic draws
+    /// are keyed by each element's *row-major* index `r * cols + c`
+    /// regardless of axis, so the bits for a given (seed, matrix) are
+    /// identical however the blocks are traversed or sharded.
+    pub fn quantize_with(
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        fmt: ElemFormat,
+        block_size: usize,
+        axis: ScaleAxis,
+        rounding: Rounding,
     ) -> Self {
         assert_eq!(data.len(), rows * cols, "data length mismatch");
         match axis {
@@ -184,7 +377,12 @@ impl MxMatrix {
                 for r in 0..rows {
                     for bc in 0..cols / block_size {
                         let base = r * cols + bc * block_size;
-                        let blk = MxBlock::quantize(&data[base..base + block_size], fmt);
+                        let blk = MxBlock::quantize_with(
+                            &data[base..base + block_size],
+                            fmt,
+                            rounding,
+                            base,
+                        );
                         elems[base..base + block_size].copy_from_slice(&blk.elems);
                         scales.push(blk.scale);
                     }
@@ -197,11 +395,14 @@ impl MxMatrix {
                         let vals: Vec<f32> = (0..block_size)
                             .map(|i| data[(br * block_size + i) * cols + c])
                             .collect();
-                        let blk = MxBlock::quantize(&vals, fmt);
-                        for (i, &e) in blk.elems.iter().enumerate() {
-                            elems[(br * block_size + i) * cols + c] = e;
+                        let amax = vals.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                        let se = shared_exponent(amax, fmt);
+                        for (i, &v) in vals.iter().enumerate() {
+                            // row-major element index, NOT block-local
+                            let idx = (br * block_size + i) * cols + c;
+                            elems[idx] = encode_elem(fmt, v, se, rounding, idx);
                         }
-                        scales[br * cols + c] = blk.scale;
+                        scales[br * cols + c] = E8m0::from_exponent(se);
                     }
                 }
             }
@@ -392,6 +593,168 @@ mod tests {
     #[should_panic(expected = "not divisible")]
     fn bad_block_size_panics() {
         MxVector::quantize(&[0.0; 33], ElemFormat::E4M3, 32);
+    }
+
+    #[test]
+    fn rounding_parse_and_display() {
+        assert_eq!(Rounding::parse("rne"), Ok(Rounding::Rne));
+        assert_eq!(
+            Rounding::parse("stochastic"),
+            Ok(Rounding::Stochastic(Rounding::DEFAULT_SEED))
+        );
+        assert_eq!(Rounding::parse("stochastic:42"), Ok(Rounding::Stochastic(42)));
+        assert!(Rounding::parse("stochastic:x").unwrap_err().contains("seed"));
+        assert!(Rounding::parse("up").unwrap_err().contains("supported: rne"));
+        assert_eq!(Rounding::Stochastic(42).to_string(), "stochastic:42");
+        assert_eq!(Rounding::default(), Rounding::Rne);
+    }
+
+    #[test]
+    fn quantize_with_rne_matches_plain_quantize() {
+        let mut rng = XorShift::new(21);
+        for fmt in ElemFormat::ALL {
+            let data = rng.normal_vec(64 * 64, 1.0);
+            for axis in [ScaleAxis::Row, ScaleAxis::Col] {
+                let a = MxMatrix::quantize(&data, 64, 64, fmt, 32, axis);
+                let b = MxMatrix::quantize_with(&data, 64, 64, fmt, 32, axis, Rounding::Rne);
+                assert_eq!(a.elems, b.elems, "{fmt}");
+                assert_eq!(a.scales, b.scales, "{fmt}");
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_fixed_seed_is_bit_reproducible() {
+        let mut rng = XorShift::new(22);
+        for fmt in ElemFormat::ALL {
+            let data = rng.normal_vec(64 * 64, 0.5);
+            let r = Rounding::Stochastic(1234);
+            let a = MxMatrix::quantize_with(&data, 64, 64, fmt, 32, ScaleAxis::Row, r);
+            let b = MxMatrix::quantize_with(&data, 64, 64, fmt, 32, ScaleAxis::Row, r);
+            assert_eq!(a.elems, b.elems, "{fmt}: same seed must give same bits");
+            assert_eq!(a.scales, b.scales, "{fmt}");
+            let c = MxMatrix::quantize_with(
+                &data, 64, 64, fmt, 32, ScaleAxis::Row, Rounding::Stochastic(1235),
+            );
+            assert_ne!(a.elems, c.elems, "{fmt}: different seed must draw differently");
+            // scales are rounding-independent (deterministic amax rule)
+            assert_eq!(a.scales, c.scales, "{fmt}");
+        }
+    }
+
+    #[test]
+    fn stochastic_draws_are_traversal_order_independent() {
+        // The same elements quantized as a matrix, as a vector, and as
+        // standalone blocks with matching base indices agree bitwise —
+        // the draw depends only on (seed, row-major index, value).
+        let mut rng = XorShift::new(23);
+        let data = rng.normal_vec(4 * 64, 0.5);
+        let r = Rounding::Stochastic(99);
+        let m = MxMatrix::quantize_with(&data, 4, 64, ElemFormat::E4M3, 32, ScaleAxis::Row, r);
+        let v = MxVector::quantize_with(&data, ElemFormat::E4M3, 32, r, 0);
+        assert_eq!(m.elems, v.elems);
+        for b in 0..data.len() / 32 {
+            let blk = MxBlock::quantize_with(
+                &data[b * 32..(b + 1) * 32], ElemFormat::E4M3, r, b * 32,
+            );
+            assert_eq!(blk.elems, v.elems[b * 32..(b + 1) * 32]);
+        }
+    }
+
+    #[test]
+    fn stochastic_col_axis_uses_row_major_indices() {
+        // A matrix and its transpose quantized along opposite axes see
+        // the same blocks but different element indices — the contract
+        // is only that Col-axis draws key on r*cols + c. Verify against
+        // a direct reconstruction.
+        let mut rng = XorShift::new(24);
+        let (rows, cols) = (64, 4);
+        let data = rng.normal_vec(rows * cols, 0.5);
+        let r = Rounding::Stochastic(7);
+        let m = MxMatrix::quantize_with(&data, rows, cols, ElemFormat::E5M2, 32, ScaleAxis::Col, r);
+        for c in 0..cols {
+            for br in 0..rows / 32 {
+                let se = m.scale(c, br).exponent();
+                for i in 0..32 {
+                    let row = br * 32 + i;
+                    let idx = row * cols + c;
+                    let expect = super::encode_elem(ElemFormat::E5M2, data[idx], se, r, idx);
+                    assert_eq!(m.elems[idx], expect, "({row},{c})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased_in_expectation() {
+        // A constant block of 1.0375 gets se = -8 in E4M3, so each
+        // element scales to 265.6 with grid neighbours 256 and 288
+        // (spacing 32 in [256, 512)) and p_up = 0.3. The mean over many
+        // seeds must approach the true value, which RNE never does.
+        let v = 1.0375f32;
+        let vals = [v; 32];
+        let n = 4000usize;
+        let mut sum = 0.0f64;
+        for seed in 0..n {
+            let blk = MxBlock::quantize_with(
+                &vals, ElemFormat::E4M3, Rounding::Stochastic(seed as u64), 0,
+            );
+            for q in blk.dequantize() {
+                sum += q as f64;
+            }
+        }
+        let mean = sum / (n * 32) as f64;
+        assert!(
+            (mean - v as f64).abs() < 0.005,
+            "stochastic mean {mean} should approximate {v}"
+        );
+        // RNE is deterministic and one-sided for this value.
+        let rne = MxBlock::quantize(&vals, ElemFormat::E4M3).dequantize()[0];
+        assert!((rne as f64 - v as f64).abs() > 0.03);
+    }
+
+    #[test]
+    fn stochastic_exact_and_saturating_values_are_deterministic() {
+        // Grid points, saturating magnitudes, and zeros carry no
+        // rounding freedom: stochastic must equal RNE bit for bit.
+        for fmt in ElemFormat::ALL {
+            let vals: Vec<f32> = (0..32)
+                .map(|i| match i % 4 {
+                    0 => 0.0,
+                    1 => fmt.max_value(),
+                    2 => -fmt.max_value(),
+                    _ => fmt.decode(1), // smallest positive grid point
+                })
+                .collect();
+            let rne = MxBlock::quantize(&vals, fmt);
+            for seed in [0u64, 1, 99] {
+                let st = MxBlock::quantize_with(&vals, fmt, Rounding::Stochastic(seed), 0);
+                assert_eq!(st.elems, rne.elems, "{fmt} seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_error_still_bounded_by_one_grid_step() {
+        // Stochastic rounding picks one of the two bracketing grid
+        // values, so its absolute error obeys the same one-step bound
+        // as RNE's two-sided half-step bound, doubled.
+        property_cases(100, 0x57AB, |rng| {
+            let fmt = ElemFormat::ALL[rng.below(6) as usize];
+            let vals = rng.normal_vec(32, 1.0);
+            let seed = rng.next_u64();
+            let blk = MxBlock::quantize_with(&vals, fmt, Rounding::Stochastic(seed), 0);
+            let dq = blk.dequantize();
+            let amax = vals.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let spec_m = match fmt.float_spec() {
+                Some(s) => s.mbits as i32,
+                None => 6,
+            };
+            let tol = amax * (2.0f32).powi(1 - spec_m);
+            for (q, v) in dq.iter().zip(&vals) {
+                assert!((q - v).abs() <= tol, "{fmt}: |{q} - {v}| > {tol}");
+            }
+        });
     }
 
     #[test]

@@ -32,9 +32,9 @@
 use super::fp32::{self, Fp32Layout};
 use super::fp8sw;
 use super::mx::{self, MxRegions, VmxRegions};
-use super::reference::{quantize_a, quantize_b};
+use super::reference::{quantize_a, quantize_b, quantize_b_with};
 use super::{KernelKind, MmProblem, MmRun};
-use crate::formats::{ElemFormat, MxMatrix};
+use crate::formats::{ElemFormat, MxMatrix, Rounding};
 use crate::snitch::cluster::{Cluster, PerfCounters};
 use crate::snitch::isa::Instr;
 use std::collections::HashMap;
@@ -313,7 +313,10 @@ pub fn fingerprint(data: &[f32]) -> [u64; 2] {
 }
 
 /// Key for a shared quantized-B tile: content fingerprint + the
-/// quantization parameters that determine the MX bytes.
+/// quantization parameters that determine the MX bytes. `rounding` is
+/// part of the key — the same f32 tile quantized under RNE and under
+/// stochastic rounding (or two different seeds) produces different
+/// bytes, so the modes must never alias in the cache (DESIGN.md §18).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 struct BTileKey {
     fp: [u64; 2],
@@ -321,6 +324,7 @@ struct BTileKey {
     n: usize,
     fmt: ElemFormat,
     block_size: usize,
+    rounding: Rounding,
 }
 
 /// Key for a memoized pass: the plan plus both operand fingerprints.
@@ -524,21 +528,37 @@ impl PlanCache {
         plan
     }
 
-    /// Get or quantize the B tile for `(b, shape)` — `bfp` must be
-    /// `fingerprint(b)`. M-split sharding and repeated requests stream
-    /// the same B (the weights), so this is quantize-once per layer.
-    pub fn quantized_b(&self, p: &MmProblem, b: &[f32], bfp: [u64; 2]) -> Arc<MxMatrix> {
+    /// Get or quantize the B tile for `(b, shape, rounding)` — `bfp`
+    /// must be `fingerprint(b)`. M-split sharding and repeated requests
+    /// stream the same B (the weights), so this is quantize-once per
+    /// layer. The rounding mode (including the stochastic seed) is part
+    /// of the tile key, so RNE and stochastic quantizations of the same
+    /// bytes never alias.
+    pub fn quantized_b(
+        &self,
+        p: &MmProblem,
+        b: &[f32],
+        bfp: [u64; 2],
+        rounding: Rounding,
+    ) -> Arc<MxMatrix> {
         if !self.enabled {
             self.b_misses.fetch_add(1, Ordering::Relaxed);
-            return Arc::new(quantize_b_timed(p, b));
+            return Arc::new(quantize_b_timed(p, b, rounding));
         }
-        let key = BTileKey { fp: bfp, k: p.k, n: p.n, fmt: p.fmt, block_size: p.block_size };
+        let key = BTileKey {
+            fp: bfp,
+            k: p.k,
+            n: p.n,
+            fmt: p.fmt,
+            block_size: p.block_size,
+            rounding,
+        };
         if let Some(q) = self.b_tiles.lock().unwrap().get(&key) {
             self.b_hits.fetch_add(1, Ordering::Relaxed);
             return Arc::clone(q);
         }
         self.b_misses.fetch_add(1, Ordering::Relaxed);
-        let built = Arc::new(quantize_b_timed(p, b));
+        let built = Arc::new(quantize_b_timed(p, b, rounding));
         let mut tiles = self.b_tiles.lock().unwrap();
         evict_half(&mut tiles, B_TILES_CAP);
         Arc::clone(tiles.entry(key).or_insert(built))
@@ -624,11 +644,11 @@ fn quantize_a_timed(p: &MmProblem, a: &[f32]) -> MxMatrix {
     q
 }
 
-/// [`quantize_b`] with host wall-clock recorded (see
+/// [`quantize_b_with`] with host wall-clock recorded (see
 /// [`quantize_a_timed`]).
-fn quantize_b_timed(p: &MmProblem, b: &[f32]) -> MxMatrix {
+fn quantize_b_timed(p: &MmProblem, b: &[f32], rounding: Rounding) -> MxMatrix {
     let host_start = std::time::Instant::now();
-    let q = quantize_b(p, b);
+    let q = quantize_b_with(p, b, rounding);
     crate::obs::hostprof::record_quantize(host_start.elapsed().as_nanos() as u64);
     q
 }
@@ -655,7 +675,7 @@ pub fn run_mm_cached(
         KernelKind::Fp32 => plan.execute(cluster, &MmOperands::Fp32 { a, b }),
         KernelKind::Fp8ToFp32 | KernelKind::Mx(_) | KernelKind::VMx(..) => {
             let qa = quantize_a_timed(&problem, a);
-            let qb = cache.quantized_b(&problem, b, bfp);
+            let qb = cache.quantized_b(&problem, b, bfp, Rounding::Rne);
             plan.execute(cluster, &MmOperands::Mx { qa: &qa, qb: &qb })
         }
     };
@@ -676,6 +696,32 @@ mod tests {
         let a = rng.normal_vec(p.m * p.k, 1.0);
         let b = rng.normal_vec(p.k * p.n, 1.0);
         (p, a, b)
+    }
+
+    #[test]
+    fn b_tile_cache_never_aliases_rounding_modes() {
+        // Same bytes, same shape, three rounding configs: three
+        // distinct cache entries, each returning its own quantization.
+        let (p, _a, b) = small();
+        let cache = PlanCache::new();
+        let bfp = fingerprint(&b);
+        let rne = cache.quantized_b(&p, &b, bfp, Rounding::Rne);
+        let s1 = cache.quantized_b(&p, &b, bfp, Rounding::Stochastic(1));
+        let s2 = cache.quantized_b(&p, &b, bfp, Rounding::Stochastic(2));
+        assert_ne!(rne.elems, s1.elems, "stochastic must differ from RNE");
+        assert_ne!(s1.elems, s2.elems, "seeds must not alias");
+        // Re-requesting each mode hits its own entry bit-exactly.
+        for (mode, want) in [
+            (Rounding::Rne, &rne),
+            (Rounding::Stochastic(1), &s1),
+            (Rounding::Stochastic(2), &s2),
+        ] {
+            let again = cache.quantized_b(&p, &b, bfp, mode);
+            assert_eq!(again.elems, want.elems);
+        }
+        let st = cache.stats();
+        assert_eq!(st.b_tile_misses, 3);
+        assert_eq!(st.b_tile_hits, 3);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use super::MmProblem;
 use crate::dotp::MxDotpUnit;
-use crate::formats::{MxMatrix, ScaleAxis};
+use crate::formats::{MxMatrix, Rounding, ScaleAxis};
 
 /// Stage-identical quantization of the A operand (row-axis blocks
 /// along K). The single definition shared by the kernel plans, the
@@ -18,18 +18,42 @@ use crate::formats::{MxMatrix, ScaleAxis};
 /// quantized once and executed many times is bit-identical to one
 /// quantized inline.
 pub fn quantize_a(p: &MmProblem, a: &[f32]) -> MxMatrix {
-    MxMatrix::quantize(a, p.m, p.k, p.fmt, p.block_size, ScaleAxis::Row)
+    quantize_a_with(p, a, Rounding::Rne)
+}
+
+/// [`quantize_a`] under an explicit [`Rounding`] mode (the training
+/// path's stochastic rounding, DESIGN.md §18). Bit-identical to
+/// `quantize_a` for [`Rounding::Rne`].
+pub fn quantize_a_with(p: &MmProblem, a: &[f32], rounding: Rounding) -> MxMatrix {
+    MxMatrix::quantize_with(a, p.m, p.k, p.fmt, p.block_size, ScaleAxis::Row, rounding)
 }
 
 /// Stage-identical quantization of the B operand (col-axis blocks
 /// along K); see [`quantize_a`].
 pub fn quantize_b(p: &MmProblem, b: &[f32]) -> MxMatrix {
-    MxMatrix::quantize(b, p.k, p.n, p.fmt, p.block_size, ScaleAxis::Col)
+    quantize_b_with(p, b, Rounding::Rne)
+}
+
+/// [`quantize_b`] under an explicit [`Rounding`] mode; see
+/// [`quantize_a_with`].
+pub fn quantize_b_with(p: &MmProblem, b: &[f32], rounding: Rounding) -> MxMatrix {
+    MxMatrix::quantize_with(b, p.k, p.n, p.fmt, p.block_size, ScaleAxis::Col, rounding)
 }
 
 /// Stage-identical quantization of both operands.
 pub fn quantize_operands(p: &MmProblem, a: &[f32], b: &[f32]) -> (MxMatrix, MxMatrix) {
     (quantize_a(p, a), quantize_b(p, b))
+}
+
+/// Stage-identical quantization of both operands under an explicit
+/// [`Rounding`] mode.
+pub fn quantize_operands_with(
+    p: &MmProblem,
+    a: &[f32],
+    b: &[f32],
+    rounding: Rounding,
+) -> (MxMatrix, MxMatrix) {
+    (quantize_a_with(p, a, rounding), quantize_b_with(p, b, rounding))
 }
 
 /// FP32 kernel reference: 2-way SIMD `vfmac.s` lane split (even k in

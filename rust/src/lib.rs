@@ -7,7 +7,9 @@
 //!
 //! * [`formats`] — the OCP Microscaling v1.0 format library: FP8
 //!   (E5M2/E4M3), FP6 (E3M2/E2M3), FP4 (E2M1), INT8 elements, E8M0
-//!   block scales, RNE quantization, and the spec's Dot / DotGeneral.
+//!   block scales, quantization under RNE or deterministic-seeded
+//!   stochastic rounding (DESIGN.md §18), and the spec's Dot /
+//!   DotGeneral.
 //! * [`dotp`] — a bit-accurate model of the MXDOTP dot-product-
 //!   accumulate datapath (95-bit fixed-point early accumulation,
 //!   anchor 34, single RNE round to FP32), format-generic over the
@@ -44,7 +46,10 @@
 //!   `all-fp8`, `fp4-ffn`, `all-fp4`, ...), the graph-walking host
 //!   executor (bit-identical to the single-format path for uniform
 //!   policies) and the cycle-accurate per-layer policy runner behind
-//!   the accuracy/throughput Pareto sweep.
+//!   the accuracy/throughput Pareto sweep — plus the training side
+//!   (DESIGN.md §18): backward GEMM nodes (dX = dY·Wᵀ, dW = Xᵀ·dY),
+//!   the deterministic teacher–student fine-tuning loop, and the
+//!   probe-calibrated analytic cycles/step cross-check.
 //! * [`serve`] — the production serving engine (DESIGN.md §12):
 //!   per-(format, priority) request queues, admission control with
 //!   bounded backpressure and reject reasons, continuous batching with

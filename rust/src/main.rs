@@ -7,9 +7,9 @@ use anyhow::Result;
 use mxdotp::cli::{parse, Command, ExecMode, USAGE};
 use mxdotp::coordinator::{ModelExecutor, PjrtExecutor};
 use mxdotp::fleet::{simulate_fleet, spot_check_fleet, FleetConfig, FleetOutcome, RouterKind};
-use mxdotp::formats::{ElemFormat, MxVector};
+use mxdotp::formats::{ElemFormat, MxVector, Rounding};
 use mxdotp::kernels::{run_mm, MmProblem};
-use mxdotp::model::{policy_hw_run, GraphExecutor, ModelGraph, PrecisionPolicy};
+use mxdotp::model::{policy_hw_run, GraphExecutor, ModelGraph, PrecisionPolicy, TrainConfig};
 use mxdotp::obs;
 use mxdotp::rng::XorShift;
 use mxdotp::runtime::Runtime;
@@ -283,6 +283,7 @@ fn main() -> Result<()> {
             trace_out,
             obs_out,
             vector_len,
+            rounding,
         } => {
             if what == "fig3" || what == "all" {
                 println!("{}", report::render_fig3());
@@ -477,6 +478,34 @@ fn main() -> Result<()> {
                 );
                 let points = report::scaleout_scaling(&cfg, &sweep, 42, cold_plans);
                 println!("{}", report::render_scaling(&points, &cfg));
+            }
+            if what == "training" {
+                // The training workload (DESIGN.md §18). Not part of
+                // 'all': it is a host fine-tuning run, not a paper
+                // table. The step is priced on one cluster — the
+                // probe-calibrated analytic cross-check is defined
+                // there — so --clusters does not apply here.
+                let cfg = DeitConfig { fmt, vector_len, ..DeitConfig::default() };
+                let p = policy.unwrap_or_else(|| {
+                    PrecisionPolicy::preset("all-fp8").expect("all-fp8 is a preset")
+                });
+                let name = p.describe();
+                // --rounding pins the stochastic point's seed; 'rne'
+                // (the default) leaves it at the default seed.
+                let seed = match rounding {
+                    Rounding::Stochastic(s) => s,
+                    Rounding::Rne => Rounding::DEFAULT_SEED,
+                };
+                let tcfg = TrainConfig::default();
+                eprintln!(
+                    "fine-tuning the DeiT block for {} steps under '{name}' \
+                     (FP32 reference / RNE / stochastic:{seed}) and pricing one \
+                     training step on 1 cluster x {cores} cores \
+                     (cycle-accurate; this takes a while)...",
+                    tcfg.steps
+                );
+                let points = report::training_sweep(&cfg, &name, &p, &tcfg, seed, 1, cores);
+                println!("{}", report::render_training(&points, &cfg, &tcfg));
             }
             if trace_out.is_some() || obs_out.is_some() {
                 // The reproduce targets print tables; the observability

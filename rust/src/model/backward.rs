@@ -1,0 +1,211 @@
+//! Backward-pass GEMM nodes of the layer graph (DESIGN.md §18).
+//!
+//! Training makes every forward GEMM `Y = A · B` (A `m×k`, B `k×n`)
+//! sprout two gradient GEMMs:
+//!
+//! * **dX** — the gradient flowing to the left operand:
+//!   `dA = dY · Bᵀ`, an `m × n × k` GEMM (the forward N axis becomes
+//!   the contraction axis);
+//! * **dW** — the gradient of the right operand:
+//!   `dB = Aᵀ · dY`, a `k × m × n` GEMM (the forward M axis — the
+//!   sequence/batch dimension — becomes the contraction axis).
+//!
+//! Both are first-class [`BackwardNode`]s derived mechanically from
+//! the forward [`super::LayerNode`]s, so precision policies, the
+//! scale-out engine and the cost models treat them exactly like
+//! forward layers. For the four weighted classes (`qkv`, `proj`,
+//! `fc1`, `fc2`) the dW node is a true weight gradient consumed by the
+//! optimizer; for the two attention classes it is the gradient of the
+//! *other activation operand* (dK-and-dV-shaped) — same algebra, no
+//! optimizer state.
+//!
+//! **Why dW wants the expanded accumulator.** A dW GEMM contracts over
+//! the sequence axis: every output element is a sum of `m` per-token
+//! products whose magnitudes are individually tiny (gradients scale
+//! like `1/(seq·dim)`). Under the default per-issue RNE accumulation
+//! each 8-lane partial rounds into FP32 before the next issue folds
+//! in, so sub-ulp gradient contributions are systematically swallowed
+//! once the running sum dwarfs them. The `MX_EXP_ACC` expanded-sum
+//! mode (DESIGN.md §18, [`crate::dotp::MxDotpUnit::set_expanded`])
+//! keeps the whole chain in the wide dyadic accumulator and rounds
+//! once at readout, which is exactly the ExSdotp recipe the training
+//! literature uses for gradient accumulation.
+
+use super::{GemmShape, LayerClass, LayerPrecision, ModelGraph, PrecisionPolicy};
+use crate::kernels::MmProblem;
+
+/// Which gradient GEMM of a forward node a backward node computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BackwardKind {
+    /// `dA = dY · Bᵀ` — gradient to the forward left operand.
+    Dx,
+    /// `dB = Aᵀ · dY` — gradient to the forward right operand (the
+    /// weight gradient for weighted classes).
+    Dw,
+}
+
+impl BackwardKind {
+    /// Both kinds, in execution order (dX first: it feeds the next
+    /// layer's backward while dW only feeds the optimizer).
+    pub const ALL: [BackwardKind; 2] = [BackwardKind::Dx, BackwardKind::Dw];
+
+    /// Short lowercase name (`dx` / `dw`).
+    pub fn name(self) -> &'static str {
+        match self {
+            BackwardKind::Dx => "dx",
+            BackwardKind::Dw => "dw",
+        }
+    }
+}
+
+impl std::fmt::Display for BackwardKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One backward GEMM node: the forward class it descends from, which
+/// gradient it computes, and its concrete shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BackwardNode {
+    /// Forward layer class this gradient belongs to.
+    pub class: LayerClass,
+    /// dX or dW.
+    pub kind: BackwardKind,
+    /// Shape (and per-backward multiplicity) of the gradient GEMM.
+    pub gemm: GemmShape,
+}
+
+impl BackwardNode {
+    /// Useful FLOPs of this node per backward pass.
+    pub fn flops(&self) -> u64 {
+        self.gemm.flops()
+    }
+}
+
+/// The backward GEMM shape of `kind` for a forward `m×k×n` GEMM.
+pub fn backward_shape(fwd: GemmShape, kind: BackwardKind) -> GemmShape {
+    match kind {
+        // dA (m×k) = dY (m×n) · Bᵀ (n×k)
+        BackwardKind::Dx => GemmShape { m: fwd.m, k: fwd.n, n: fwd.k, count: fwd.count },
+        // dB (k×n) = Aᵀ (k×m) · dY (m×n)
+        BackwardKind::Dw => GemmShape { m: fwd.k, k: fwd.m, n: fwd.n, count: fwd.count },
+    }
+}
+
+impl ModelGraph {
+    /// All backward nodes of the graph, in reverse execution order
+    /// (the order a backward pass visits them): for each forward node,
+    /// dX then dW.
+    pub fn backward_nodes(&self) -> Vec<BackwardNode> {
+        self.nodes
+            .iter()
+            .rev()
+            .flat_map(|n| {
+                BackwardKind::ALL.map(|kind| BackwardNode {
+                    class: n.class,
+                    kind,
+                    gemm: backward_shape(n.gemm, kind),
+                })
+            })
+            .collect()
+    }
+
+    /// The MX backward GEMM problems `backward_policy` quantizes, in
+    /// backward execution order: `(class, kind, problem, count)` for
+    /// every backward node whose forward class the policy maps to
+    /// [`LayerPrecision::Mx`]. The backward policy is independent of
+    /// the forward one — mixed recipes (FP8 forward, wider backward,
+    /// or vice versa) are first-class.
+    pub fn mx_backward_problems(
+        &self,
+        backward_policy: &PrecisionPolicy,
+    ) -> Vec<(LayerClass, BackwardKind, MmProblem, usize)> {
+        self.backward_nodes()
+            .into_iter()
+            .filter_map(|n| match backward_policy.get(n.class) {
+                LayerPrecision::Fp32 => None,
+                LayerPrecision::Mx(fmt) => Some((
+                    n.class,
+                    n.kind,
+                    MmProblem {
+                        m: n.gemm.m,
+                        k: n.gemm.k,
+                        n: n.gemm.n,
+                        fmt,
+                        block_size: self.cfg.block_size,
+                    },
+                    n.gemm.count,
+                )),
+            })
+            .collect()
+    }
+
+    /// Total MX-quantized backward FLOPs under `backward_policy`.
+    pub fn mx_backward_flops(&self, backward_policy: &PrecisionPolicy) -> u64 {
+        self.mx_backward_problems(backward_policy)
+            .iter()
+            .map(|(_, _, p, count)| p.flops() * *count as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::DeitConfig;
+
+    #[test]
+    fn backward_shapes_transpose_the_forward_axes() {
+        let fwd = GemmShape { m: 64, k: 192, n: 768, count: 1 };
+        let dx = backward_shape(fwd, BackwardKind::Dx);
+        assert_eq!((dx.m, dx.k, dx.n), (64, 768, 192));
+        let dw = backward_shape(fwd, BackwardKind::Dw);
+        assert_eq!((dw.m, dw.k, dw.n), (192, 64, 768));
+        // each backward GEMM costs exactly the forward FLOPs
+        assert_eq!(dx.flops(), fwd.flops());
+        assert_eq!(dw.flops(), fwd.flops());
+    }
+
+    #[test]
+    fn backward_nodes_cover_the_graph_in_reverse() {
+        let cfg = DeitConfig::default();
+        let g = ModelGraph::deit_block(&cfg);
+        let nodes = g.backward_nodes();
+        assert_eq!(nodes.len(), 12, "dX + dW per forward node");
+        // reverse execution order, dX before dW within a class
+        assert_eq!(nodes[0].class, LayerClass::MlpDown);
+        assert_eq!(nodes[0].kind, BackwardKind::Dx);
+        assert_eq!(nodes[1].class, LayerClass::MlpDown);
+        assert_eq!(nodes[1].kind, BackwardKind::Dw);
+        assert_eq!(nodes[10].class, LayerClass::Qkv);
+        // per-head multiplicity carries over to attention gradients
+        let scores_dx = nodes
+            .iter()
+            .find(|n| n.class == LayerClass::AttnScores && n.kind == BackwardKind::Dx)
+            .unwrap();
+        assert_eq!(scores_dx.gemm.count, cfg.heads);
+    }
+
+    #[test]
+    fn mx_backward_problems_follow_the_backward_policy() {
+        let cfg = DeitConfig::default();
+        let g = ModelGraph::deit_block(&cfg);
+        let fp8 = PrecisionPolicy::preset("all-fp8").unwrap();
+        let probs = g.mx_backward_problems(&fp8);
+        // 4 quantized forward layers × (dX + dW)
+        assert_eq!(probs.len(), 8);
+        // backward FLOPs = 2× the forward MX FLOPs under the same policy
+        assert_eq!(g.mx_backward_flops(&fp8), 2 * g.mx_flops(&fp8));
+        // every dW contraction axis is the sequence length (and is
+        // MX-block-divisible for the DeiT shapes)
+        for (class, kind, p, _) in &probs {
+            if *kind == BackwardKind::Dw {
+                assert_eq!(p.k, cfg.seq, "{class}");
+                assert_eq!(p.k % cfg.block_size, 0);
+            }
+        }
+        // a pure-FP32 backward policy quantizes nothing
+        assert!(g.mx_backward_problems(&PrecisionPolicy::fp32_reference()).is_empty());
+    }
+}

@@ -373,8 +373,8 @@ impl ModelExecutor for GraphExecutor {
 }
 
 /// Plain FP32 row-major matmul (k-inner accumulation) for the graph's
-/// FP32-precision layers.
-fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// FP32-precision layers (and the trainer's FP32 host GEMMs).
+pub(crate) fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     let mut c = vec![0.0f32; m * n];

@@ -22,7 +22,18 @@
 //!   layer of the graph executed through the scale-out engine with
 //!   warm plans from the shared
 //!   [`PlanCache`](crate::kernels::plan::PlanCache), the `MX_FMT` CSR
-//!   switched between layers by each layer's compiled program.
+//!   switched between layers by each layer's compiled program;
+//! * [`BackwardNode`] ([`backward`]) — the training-time half of the
+//!   graph: each forward GEMM's dX (`dY · Wᵀ`) and dW (`Xᵀ · dY`)
+//!   gradient GEMMs as first-class nodes with their own
+//!   [`PrecisionPolicy`], so forward and backward precision are chosen
+//!   independently (DESIGN.md §18);
+//! * [`Trainer`] ([`train`]) — the host fine-tuning loop: MSE
+//!   objective against an FP32 teacher, MX forward/backward GEMMs
+//!   under the two policies with RNE or deterministic-seeded
+//!   stochastic rounding, SGD on the four weight matrices; and
+//!   [`training_hw_run`] ([`hw`]) — cycles/step of one training step
+//!   through the scale-out engine.
 //!
 //! The paper's motivation (§I): the OCP MX spec exists so *different
 //! tensors can use different element formats*. The graph + policy pair
@@ -30,13 +41,17 @@
 //! that exploit them — the accuracy/throughput Pareto sweep of
 //! `mxdotp-cli reproduce pareto` (DESIGN.md §13).
 
+pub mod backward;
 pub mod executor;
 pub mod hw;
 pub mod policy;
+pub mod train;
 
+pub use backward::{backward_shape, BackwardKind, BackwardNode};
 pub use executor::GraphExecutor;
-pub use hw::{policy_hw_run, LayerHwRun, PolicyHwRun};
+pub use hw::{policy_hw_run, training_hw_run, LayerHwRun, PolicyHwRun, TrainingHwRun};
 pub use policy::{LayerPrecision, PrecisionPolicy};
+pub use train::{TrainConfig, Trainer, TrainingRun};
 
 use crate::formats::ElemFormat;
 use crate::kernels::MmProblem;

@@ -8,8 +8,13 @@ use crate::energy::constants as k;
 use crate::energy::{AreaModel, EnergyModel};
 use crate::fleet::{simulate_fleet, FleetConfig, RouterKind};
 use crate::formats::ElemFormat;
+use crate::formats::Rounding;
 use crate::kernels::{layout, run_mm, KernelKind, MmProblem, MmRun};
-use crate::model::{policy_hw_run, GraphExecutor, ModelGraph, PolicyHwRun, PrecisionPolicy};
+use crate::model::hw::analytic_training_cycles;
+use crate::model::{
+    policy_hw_run, training_hw_run, GraphExecutor, ModelGraph, PolicyHwRun, PrecisionPolicy,
+    TrainConfig, Trainer, TrainingHwRun,
+};
 use crate::rng::XorShift;
 use crate::scaleout::{sharded_mm, ScaleoutConfig};
 use crate::serve::{self, SchedulerKind, ServeConfig};
@@ -1063,6 +1068,189 @@ pub fn render_pareto(points: &[ParetoPoint], cfg: &DeitConfig, clusters: usize) 
              costs ~4x the MXFP8 error on these moment-matched shapes —\n  the \
              measured frontier, consistent with the MX literature's direct-cast \
              results)\n"
+        ));
+    }
+    s
+}
+
+/// One point of the training sweep (DESIGN.md §18): a (policy,
+/// rounding) pair with its loss curve and its cycle-accurate
+/// cycles/step.
+#[derive(Clone, Debug)]
+pub struct TrainingPoint {
+    /// Point name (`fp32`, `<policy>-rne`, `<policy>-stochastic`).
+    pub name: String,
+    /// Quantizer rounding mode of the training numerics.
+    pub rounding: Rounding,
+    /// RNE-evaluated loss per step (`steps + 1` entries, last =
+    /// final).
+    pub losses: Vec<f64>,
+    /// Cycle-accurate fabric cost of one training step (forward +
+    /// backward MX GEMMs; zero-cycle for the FP32 reference).
+    pub hw: TrainingHwRun,
+    /// Probe-calibrated analytic prediction of `hw.wall_cycles`
+    /// ([`analytic_training_cycles`]).
+    pub analytic_cycles: u64,
+}
+
+impl TrainingPoint {
+    /// Loss after the last SGD step.
+    pub fn final_loss(&self) -> f64 {
+        *self.losses.last().expect("a run records at least the initial loss")
+    }
+
+    /// Relative error of the analytic cycles/step prediction against
+    /// the measured fabric walk (0 for the FP32 point, which issues no
+    /// MX GEMMs).
+    pub fn analytic_rel_err(&self) -> f64 {
+        if self.hw.wall_cycles == 0 {
+            return 0.0;
+        }
+        (self.hw.wall_cycles as f64 - self.analytic_cycles as f64).abs()
+            / self.hw.wall_cycles as f64
+    }
+}
+
+/// Run the training sweep: fine-tune the block under (a) the FP32
+/// reference, (b) `policy` with RNE rounding, (c) `policy` with
+/// seeded stochastic rounding — same `TrainConfig` otherwise — and
+/// price one training step of the MX policy on the fabric (one
+/// cycle-accurate walk serves both rounding modes: the engine is
+/// RNE-only, DESIGN.md §18, and cycles are rounding-independent).
+///
+/// `policy` applies to forward *and* backward here (the sweep's
+/// purpose is the rounding comparison, not mixed recipes — those are
+/// exposed through [`Trainer`] directly). Results are a pure function
+/// of the arguments.
+pub fn training_sweep(
+    cfg: &DeitConfig,
+    policy_name: &str,
+    policy: &PrecisionPolicy,
+    tcfg: &TrainConfig,
+    stochastic_seed: u64,
+    clusters: usize,
+    num_cores: usize,
+) -> Vec<TrainingPoint> {
+    let graph = ModelGraph::deit_block(cfg);
+    let fp32 = PrecisionPolicy::fp32_reference();
+    let zero_hw = TrainingHwRun {
+        forward_wall_cycles: 0,
+        backward_wall_cycles: 0,
+        wall_cycles: 0,
+        total_energy_uj: 0.0,
+        flops: 0,
+    };
+    let hw = training_hw_run(
+        &graph,
+        policy,
+        policy,
+        clusters,
+        num_cores,
+        tcfg.seed,
+        cfg.vector_len,
+    );
+    let analytic = analytic_training_cycles(&graph, policy, policy, num_cores, cfg.vector_len);
+    let run_at = |pol: &PrecisionPolicy, rounding: Rounding| -> Vec<f64> {
+        Trainer::new(*cfg, *pol, *pol, TrainConfig { rounding, ..*tcfg })
+            .unwrap_or_else(|e| panic!("training policy invalid for these shapes: {e}"))
+            .run()
+            .losses
+    };
+    vec![
+        TrainingPoint {
+            name: "fp32".into(),
+            rounding: Rounding::Rne,
+            losses: run_at(&fp32, Rounding::Rne),
+            hw: zero_hw,
+            analytic_cycles: 0,
+        },
+        TrainingPoint {
+            name: format!("{policy_name}-rne"),
+            rounding: Rounding::Rne,
+            losses: run_at(policy, Rounding::Rne),
+            hw: hw.clone(),
+            analytic_cycles: analytic,
+        },
+        TrainingPoint {
+            name: format!("{policy_name}-stochastic"),
+            rounding: Rounding::Stochastic(stochastic_seed),
+            losses: run_at(policy, Rounding::Stochastic(stochastic_seed)),
+            hw,
+            analytic_cycles: analytic,
+        },
+    ]
+}
+
+/// Loss-curve fidelity of the sweep: `(rne_gap, stochastic_gap)`,
+/// each the absolute final-loss gap of a quantized point against the
+/// FP32 reference point. `None` unless the sweep has the standard
+/// three points.
+pub fn training_fidelity(points: &[TrainingPoint]) -> Option<(f64, f64)> {
+    let fp32 = points.iter().find(|p| p.name == "fp32")?;
+    let rne = points.iter().find(|p| p.name.ends_with("-rne"))?;
+    let stoch = points.iter().find(|p| p.name.ends_with("-stochastic"))?;
+    Some((
+        (rne.final_loss() - fp32.final_loss()).abs(),
+        (stoch.final_loss() - fp32.final_loss()).abs(),
+    ))
+}
+
+/// The sweep's headline gate metric: the stochastic final-loss gap
+/// over the RNE gap, ε-regularized so two near-zero gaps read as
+/// ratio ≈ 1 instead of noise (`ε = 5% of the FP32 final loss`).
+/// `BENCH_training.json` gates this ≤ 2.0.
+pub fn training_gap_ratio(points: &[TrainingPoint]) -> Option<f64> {
+    let (rne_gap, stoch_gap) = training_fidelity(points)?;
+    let fp32 = points.iter().find(|p| p.name == "fp32")?;
+    let eps = 0.05 * fp32.final_loss() + 1e-9;
+    Some((stoch_gap + eps) / (rne_gap + eps))
+}
+
+/// Render the training sweep as text: one row per point (loss curve
+/// endpoints, gap vs FP32, cycles/step vs the analytic model) plus
+/// the stochastic-vs-RNE fidelity headline against its ≤ 2.0 bar.
+pub fn render_training(points: &[TrainingPoint], cfg: &DeitConfig, tcfg: &TrainConfig) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Training — low-precision fine-tuning of the DeiT block (seq {}, dim {}, \
+         {} steps, lr {}, batch {})\nloss: teacher-student MSE, evaluated with an RNE \
+         forward pass every step; backward-pass dX/dW GEMMs\nrun at the policy's MX \
+         precision with the point's rounding mode (DESIGN.md \u{a7}18)\n\n",
+        cfg.seq, cfg.dim, tcfg.steps, tcfg.lr, tcfg.batch,
+    ));
+    s.push_str(
+        "  point                 initial loss   final loss   gap vs fp32   \
+         cycles/step   analytic (rel err)\n",
+    );
+    let fp32_final = points.iter().find(|p| p.name == "fp32").map(|p| p.final_loss());
+    for p in points {
+        let gap = match fp32_final {
+            Some(f) if p.name != "fp32" => format!("{:.3e}", (p.final_loss() - f).abs()),
+            _ => "—".into(),
+        };
+        let analytic = if p.hw.wall_cycles == 0 {
+            "—".into()
+        } else {
+            format!("{} ({:.1}%)", p.analytic_cycles, p.analytic_rel_err() * 100.0)
+        };
+        s.push_str(&format!(
+            "  {:<21} {:>12.4e}  {:>11.4e}  {:>12}  {:>12}   {analytic}\n",
+            p.name,
+            p.losses.first().copied().unwrap_or(f64::NAN),
+            p.final_loss(),
+            gap,
+            p.hw.wall_cycles,
+        ));
+    }
+    if let (Some(ratio), Some((rne_gap, stoch_gap))) =
+        (training_gap_ratio(points), training_fidelity(points))
+    {
+        s.push_str(&format!(
+            "\n  headline: stochastic/RNE final-loss-gap ratio = {ratio:.2} \
+             (bar \u{2264} 2.00; gaps {stoch_gap:.3e} vs {rne_gap:.3e})\n  \
+             unbiased stochastic rounding tracks RNE's converged loss while \
+             de-biasing gradient\n  accumulation — the ExSdotp + stochastic \
+             recipe of the MX training literature\n"
         ));
     }
     s

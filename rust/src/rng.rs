@@ -70,6 +70,20 @@ impl XorShift {
     }
 }
 
+/// SplitMix64 finalizer: a stateless, high-quality 64-bit mixing
+/// function (Steele et al.). Used where a value must be hashed to an
+/// independent-looking random word *without* sequential state — the
+/// stochastic-rounding quantizer derives each element's random draw as
+/// `splitmix64(seed ^ element_index)` (DESIGN.md §18), so rounding a
+/// tensor is embarrassingly parallel and independent of traversal
+/// order.
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// Run `n` property-test cases with independent deterministic seeds.
 ///
 /// A drop-in stand-in for `proptest` in this offline environment:
@@ -125,6 +139,19 @@ mod tests {
             let v = r.unit_f64();
             assert!((0.0..1.0).contains(&v));
         }
+    }
+
+    #[test]
+    fn splitmix64_is_stateless_and_mixes() {
+        assert_eq!(splitmix64(0), splitmix64(0));
+        assert_ne!(splitmix64(0), splitmix64(1));
+        // adjacent inputs produce ~32 differing bits on average
+        let mut total = 0u32;
+        for i in 0..256u64 {
+            total += (splitmix64(i) ^ splitmix64(i + 1)).count_ones();
+        }
+        let avg = total as f64 / 256.0;
+        assert!((24.0..40.0).contains(&avg), "poor avalanche: {avg}");
     }
 
     #[test]

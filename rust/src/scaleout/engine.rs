@@ -184,7 +184,11 @@ impl ClusterEngine {
             }
             let bfp = fingerprint(&b_tile);
             let sub = MmProblem { m: 0, k: kc, n: w8, fmt: p.fmt, block_size: p.block_size };
-            let qb = cache.quantized_b(&sub, &b_tile, bfp);
+            // The cycle-accurate engine always quantizes RNE: stochastic
+            // rounding is a training-numerics concern handled on the
+            // host path (DESIGN.md §18), and cycle counts are
+            // rounding-independent.
+            let qb = cache.quantized_b(&sub, &b_tile, bfp, crate::formats::Rounding::Rne);
             cols.push(ColTile { n0, w, w8, bfp, qb });
             n0 += w;
         }

@@ -247,6 +247,7 @@ pub fn assemble(src: &str) -> Result<Vec<Instr>, AsmError> {
                 let c = match t[1].trim_end_matches(',') {
                     "ssr" | "ssr_enable" => csr::SSR_ENABLE,
                     "mxfmt" | "mx_fmt" | "fp8fmt" | "fp8_fmt" => csr::MX_FMT,
+                    "mxexpacc" | "mx_exp_acc" => csr::MX_EXP_ACC,
                     other => imm(other, line)? as u16,
                 };
                 IntInstr::CsrW { csr: c, rs1: ir(2)? }.into()

@@ -389,6 +389,7 @@ impl Core {
                         csr::SSR_ENABLE => self.fpu.ssr_enabled = v != 0,
                         csr::MX_FMT => self.fpu.set_format(ElemFormat::from_csr(v)),
                         csr::VECTOR_LEN => self.fpu.set_vector_len(v as u64),
+                        csr::MX_EXP_ACC => self.fpu.set_expanded_acc(v as u64),
                         _ => {}
                     }
                     self.retire(now, false);
@@ -540,6 +541,26 @@ mod tests {
             run_solo(&mut core, &mut spm, 100);
             assert_eq!(core.fpu.unit.fmt, want);
         }
+    }
+
+    #[test]
+    fn csr_arms_and_clears_expanded_accumulation() {
+        let mut core = Core::new(0);
+        let mut spm = Spm::new();
+        core.load(vec![
+            IntInstr::Li { rd: 5, imm: 1 }.into(),
+            IntInstr::CsrW { csr: csr::MX_EXP_ACC, rs1: 5 }.into(),
+            IntInstr::Halt.into(),
+        ]);
+        run_solo(&mut core, &mut spm, 100);
+        assert!(core.fpu.unit.expanded());
+        core.load(vec![
+            IntInstr::Li { rd: 5, imm: 0 }.into(),
+            IntInstr::CsrW { csr: csr::MX_EXP_ACC, rs1: 5 }.into(),
+            IntInstr::Halt.into(),
+        ]);
+        run_solo(&mut core, &mut spm, 100);
+        assert!(!core.fpu.unit.expanded());
     }
 
     #[test]

@@ -227,6 +227,13 @@ impl FpSubsystem {
         self.unit.set_format(fmt);
     }
 
+    /// Write the `MX_EXP_ACC` CSR (DESIGN.md §18): bit 0 arms the
+    /// expanded-sum accumulation mode. Every write clears the wide
+    /// accumulator, so a reduction chain always starts from zero.
+    pub fn set_expanded_acc(&mut self, v: u64) {
+        self.unit.set_expanded(v & 1 == 1);
+    }
+
     /// Write the `VECTOR_LEN` CSR: bits 7:0 = VL (MX blocks per
     /// `vmxdotp`), bits 15:8 = element words per block (0 keeps the
     /// reset value 4).

@@ -33,6 +33,12 @@ pub mod csr {
     /// `vl`/`vtype`-style CSR of the VMXDOTP extension, DESIGN.md §16):
     /// legal values 1/2/4/8. Reset value is 1 (scalar-equivalent).
     pub const VECTOR_LEN: u16 = 0x7C3;
+    /// Expanded-sum accumulation mode for `mxdotp`/`vmxdotp`
+    /// (DESIGN.md §18, the ExSdotp-style training mode): bit 0 enables
+    /// the wide dyadic accumulator; every write — either value —
+    /// clears it, so a reduction chain always starts from zero. Reset
+    /// value is 0 (the paper's per-issue-rounding unit).
+    pub const MX_EXP_ACC: u16 = 0x7C4;
 }
 
 /// SSR configuration fields (written through `Scfg` writes; the real

@@ -1,0 +1,137 @@
+//! Training workload integration tests (DESIGN.md §18): the
+//! backward-pass dX/dW GEMMs must be **bit-identical** however the
+//! fabric executes them — sequentially on one cluster, sharded across
+//! a cluster fabric, or concurrently on disjoint fabric leases.
+//! RNE quantization and the `mxdotp` accumulation chain are
+//! deterministic and row-sharding never reorders an accumulation, so
+//! the execution strategy must be invisible in the bits.
+
+use mxdotp::model::{BackwardKind, LayerClass, ModelGraph, PrecisionPolicy};
+use mxdotp::rng::XorShift;
+use mxdotp::scaleout::{sharded_mm, sharded_mm_leased, FabricLease, ScaleoutConfig};
+use mxdotp::workload::DeitConfig;
+
+/// Small graph whose every forward/backward GEMM keeps K a multiple
+/// of the MX block (seq 32, dim 96 → K ∈ {32, 96, 192, 288}).
+fn graph() -> ModelGraph {
+    let cfg = DeitConfig { seq: 32, dim: 96, mlp_ratio: 2, ..DeitConfig::default() };
+    ModelGraph::deit_block(&cfg)
+}
+
+/// Deterministic operands for one backward GEMM.
+fn operands(
+    class: LayerClass,
+    kind: BackwardKind,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let tag = match kind {
+        BackwardKind::Dx => 1u64,
+        BackwardKind::Dw => 2u64,
+    };
+    let mut rng = XorShift::new(0xBAC4 ^ ((class.index() as u64 + 1) << 32) ^ (tag << 48));
+    (rng.normal_vec(m * k, 0.5), rng.normal_vec(k * n, 0.02))
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{what}: C[{i}] = {g:?} ({:#010x}) vs {w:?} ({:#010x})",
+            g.to_bits(),
+            w.to_bits()
+        );
+    }
+}
+
+/// The satellite invariant: every backward GEMM of the all-fp8 policy
+/// produces the same bits on 1 cluster, sharded across 2 and 4
+/// clusters, and on a 2-cluster fabric lease carved out of a larger
+/// machine.
+#[test]
+fn backward_gemms_bit_identical_across_execution_strategies() {
+    let graph = graph();
+    let policy = PrecisionPolicy::preset("all-fp8").expect("preset");
+    let problems = graph.mx_backward_problems(&policy);
+    assert!(!problems.is_empty(), "all-fp8 must quantize backward GEMMs");
+    for &(class, kind, p, _count) in &problems {
+        let (a, b) = operands(class, kind, p.m, p.k, p.n);
+        let want = sharded_mm(&ScaleoutConfig::with_clusters(1), p, &a, &b);
+        for clusters in [2usize, 4] {
+            let got = sharded_mm(&ScaleoutConfig::with_clusters(clusters), p, &a, &b);
+            assert_bits_eq(
+                &got.c,
+                &want.c,
+                &format!("{class:?}/{kind} on {clusters} clusters"),
+            );
+        }
+        // a lease in the middle of a 4-cluster machine: shard math must
+        // not depend on machine-global cluster ids
+        let leased = sharded_mm_leased(
+            &ScaleoutConfig::with_clusters(4),
+            FabricLease { first_cluster: 2, clusters: 2 },
+            p,
+            &a,
+            &b,
+        );
+        assert_bits_eq(&leased.c, &want.c, &format!("{class:?}/{kind} on a lease"));
+    }
+}
+
+/// Disjoint leases running *concurrently* (host threads, like the
+/// serving engine's continuous scheduler) must not perturb results:
+/// each thread's outputs match the sequential single-cluster bits.
+#[test]
+fn backward_gemms_bit_identical_under_concurrent_disjoint_leases() {
+    let graph = graph();
+    let policy = PrecisionPolicy::preset("all-fp8").expect("preset");
+    let problems = graph.mx_backward_problems(&policy);
+    let sequential: Vec<Vec<f32>> = problems
+        .iter()
+        .map(|&(class, kind, p, _)| {
+            let (a, b) = operands(class, kind, p.m, p.k, p.n);
+            sharded_mm(&ScaleoutConfig::with_clusters(1), p, &a, &b).c
+        })
+        .collect();
+    // two disjoint 2-cluster leases on one 4-cluster machine, each
+    // draining half of the backward problem list concurrently
+    let leases = [
+        FabricLease { first_cluster: 0, clusters: 2 },
+        FabricLease { first_cluster: 2, clusters: 2 },
+    ];
+    assert!(leases[0].is_disjoint(&leases[1]));
+    let concurrent: Vec<(usize, Vec<f32>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = leases
+            .iter()
+            .enumerate()
+            .map(|(li, &lease)| {
+                let problems = &problems;
+                s.spawn(move || {
+                    problems
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| i % 2 == li)
+                        .map(|(i, &(class, kind, p, _))| {
+                            let (a, b) = operands(class, kind, p.m, p.k, p.n);
+                            let run = sharded_mm_leased(
+                                &ScaleoutConfig::with_clusters(4),
+                                lease,
+                                p,
+                                &a,
+                                &b,
+                            );
+                            (i, run.c)
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("lease thread")).collect()
+    });
+    assert_eq!(concurrent.len(), problems.len());
+    for (i, c) in concurrent {
+        assert_bits_eq(&c, &sequential[i], &format!("concurrent lease, problem {i}"));
+    }
+}

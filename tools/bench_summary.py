@@ -153,6 +153,30 @@ def extract_metrics(bench_dir):
         for p in j["points"]:
             out.append(("pareto", f"{p['policy']}_gflops", p["gflops"]))
 
+    j = load(os.path.join(bench_dir, "BENCH_training.json"))
+    if j:
+        # low-precision MX training (DESIGN.md §18): the two gated bars
+        # plus per-point loss context worth trending
+        h = j["headline"]
+        out += [
+            (
+                "training",
+                "stoch_vs_rne_final_loss_gap_ratio",
+                h["stoch_vs_rne_final_loss_gap_ratio"],
+            ),
+            (
+                "training",
+                "cycles_per_step_vs_analytic_rel_err",
+                h["cycles_per_step_vs_analytic_rel_err"],
+            ),
+            ("training", "rne_final_loss_gap", h["rne_final_loss_gap"]),
+            ("training", "stoch_final_loss_gap", h["stoch_final_loss_gap"]),
+        ]
+        for p in j["points"]:
+            out.append(("training", f"{p['name']}_final_loss", p["final_loss"]))
+            if p["cycles_per_step"]:
+                out.append(("training", f"{p['name']}_cycles_per_step", p["cycles_per_step"]))
+
     return out
 
 

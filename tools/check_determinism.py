@@ -70,12 +70,17 @@ def byte_compared(name):
     fleet artifacts (DESIGN.md §17) are held to the same standard:
     BENCH_fleet.json and the fleet spot-check audit carry only
     sim-tick state, so router placement, fair-share admission, and
-    autoscaler actions must replay byte-for-byte.
+    autoscaler actions must replay byte-for-byte. BENCH_training.json
+    (DESIGN.md §18) too: loss curves, fabric cycles/step, and the
+    analytic prediction are pure functions of the committed seeds —
+    stochastic rounding draws included — so the whole training loop
+    must replay byte-for-byte (host timing goes to stdout only).
     """
     return (
         name == "BENCH_serving_attribution.json"
         or name == "BENCH_vector.json"
         or name == "BENCH_fleet.json"
+        or name == "BENCH_training.json"
         or name == "OBS_spotcheck_serving.json"
         or name == "OBS_spotcheck_fleet.json"
         or name.startswith("OBS_trace_")
